@@ -1,0 +1,43 @@
+// NonIID half of the Figure 6 / Table 2 PJRT record (restartable).
+use fedspace::app::run_pjrt_experiment;
+use fedspace::cfg::{AlgorithmKind, DataDist, ExperimentConfig};
+use fedspace::metrics::write_file;
+fn main() -> anyhow::Result<()> {
+    for alg in [
+        AlgorithmKind::Sync,
+        AlgorithmKind::Async,
+        AlgorithmKind::FedBuff,
+        AlgorithmKind::FedSpace,
+    ] {
+        let cfg = ExperimentConfig {
+            algorithm: alg,
+            dist: DataDist::NonIid,
+            n_sats: 48,
+            n_steps: 192,
+            n_train: 4_800,
+            n_val: 512,
+            fedbuff_m: 24,
+            i0: 24,
+            n_min: 1,
+            n_max: 6,
+            n_search: 1000,
+            utility_samples: 150,
+            eval_every: 8,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let out = run_pjrt_experiment(&cfg, 512, None)?;
+        let r = &out.result;
+        println!(
+            "{:>9}: best_acc={:.3} rounds={} idle={:.0}% days_to_40={} ({:.1}s wall)",
+            alg.name(),
+            r.trace.curve.best_accuracy(),
+            r.final_round,
+            100.0 * r.trace.idle_fraction(),
+            r.trace.curve.days_to_accuracy(0.40).map_or("-".into(), |d| format!("{d:.2}")),
+            t0.elapsed().as_secs_f64(),
+        );
+        write_file(&format!("results/fig6_{}_NonIid.csv", alg.name()), &r.trace.curve.to_csv())?;
+    }
+    Ok(())
+}

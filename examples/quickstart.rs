@@ -1,0 +1,78 @@
+//! Quickstart: the paper in 30 seconds, no artifacts needed.
+//!
+//! 1. Reproduces Table 1 (the 3-satellite illustrative example).
+//! 2. Computes a day of real constellation connectivity (Figure 2 stats).
+//! 3. Runs a fast mock FL experiment with each aggregation policy.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fedspace::app::run_mock_experiment;
+use fedspace::cfg::{AlgorithmKind, ExperimentConfig};
+use fedspace::connectivity::ConnectivityStats;
+use fedspace::fl::illustrative;
+use fedspace::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    // --- Table 1 -----------------------------------------------------
+    println!("== Table 1: illustrative example (3 satellites, 9 slots) ==");
+    let mut t = Table::new(&["scheme", "updates", "s=0", "s=1", "s=2", "s=5", "total", "idle"]);
+    for r in illustrative::table1() {
+        t.row(&[
+            r.scheme.to_string(),
+            r.global_updates.to_string(),
+            r.staleness.count(0).to_string(),
+            r.staleness.count(1).to_string(),
+            r.staleness.count(2).to_string(),
+            r.staleness.count(5).to_string(),
+            r.total_aggregated.to_string(),
+            r.idle.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- Figure 2 stats ----------------------------------------------
+    println!("== Figure 2: connectivity of 191 satellites / 12 stations ==");
+    let cfg = ExperimentConfig { n_steps: 96, ..Default::default() };
+    let (_, sched) = fedspace::app::build_schedule(&cfg);
+    let stats = ConnectivityStats::from_schedule(&sched);
+    println!(
+        "|C_i| over one day: min={} max={}  (paper: 4 / 68)",
+        stats.min_set, stats.max_set
+    );
+    println!("mean contacts per satellite per day: {:.1}\n", stats.mean_contacts);
+
+    // --- mock FL run per algorithm ------------------------------------
+    println!("== mock FL (20 satellites, 1 simulated day) ==");
+    let mut t = Table::new(&["scheme", "rounds", "idle%", "max staleness", "best acc"]);
+    for alg in [
+        AlgorithmKind::Sync,
+        AlgorithmKind::Async,
+        AlgorithmKind::FedBuff,
+        AlgorithmKind::FedSpace,
+    ] {
+        let cfg = ExperimentConfig {
+            algorithm: alg,
+            n_sats: 20,
+            n_steps: 96,
+            fedbuff_m: 8,
+            n_search: 200,
+            utility_samples: 100,
+            i0: 24,
+            n_min: 2,
+            n_max: 8,
+            ..Default::default()
+        };
+        let out = run_mock_experiment(&cfg, None)?;
+        let r = &out.result;
+        t.row(&[
+            alg.name().to_string(),
+            r.final_round.to_string(),
+            format!("{:.0}%", 100.0 * r.trace.idle_fraction()),
+            r.trace.staleness.max_key().unwrap_or(0).to_string(),
+            format!("{:.3}", r.trace.curve.best_accuracy()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("next: `cargo run --release --example e2e_train` for the full\nthree-layer PJRT training run (requires `make artifacts`).");
+    Ok(())
+}

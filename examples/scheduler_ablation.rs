@@ -1,0 +1,114 @@
+//! Scheduler ablation: the design choices DESIGN.md §5 calls out, measured
+//! on the fast analytic mock so the whole study runs in seconds.
+//!
+//!   1. utility regressor: random forest (paper) vs linear baseline
+//!   2. window objective: chained-T (ours) vs frozen-T (paper Eq. 13)
+//!   3. search budget |R|
+//!
+//! Run: `cargo run --release --example scheduler_ablation`
+
+use fedspace::connectivity::ConnectivitySchedule;
+use fedspace::metrics::Table;
+use fedspace::orbit::{planet_ground_stations, planet_labs_like};
+use fedspace::rng::Rng;
+use fedspace::sched::{
+    generate_samples, pretrain_bank, schedule_utility_opts, MockBackend,
+    SatForecastState, SearchParams, UtilityModel,
+};
+use fedspace::ml::{mse, LinearRegression, Regressor};
+
+fn schedule(n_sats: usize) -> ConnectivitySchedule {
+    let c = planet_labs_like(n_sats, 0);
+    ConnectivitySchedule::compute(&c, &planet_ground_stations(), 96, Default::default())
+}
+
+fn main() -> anyhow::Result<()> {
+    let backend = MockBackend::new(32, 0);
+    let mut rng = Rng::new(1);
+    let bank = pretrain_bank(&backend, 20, 8, 0.5, &mut rng)?;
+    let (inputs, targets) = generate_samples(&backend, &bank, 600, 8, 16, 0.5, &mut rng)?;
+    let split = 480;
+
+    // --- 1. regressor comparison --------------------------------------
+    println!("== utility regressor (held-out MSE over 120 samples) ==");
+    let mut t = Table::new(&["regressor", "test MSE"]);
+    for kind in ["forest", "linear"] {
+        let mut u = UtilityModel::new(kind)?;
+        u.fit(&inputs[..split].to_vec(), &targets[..split]);
+        let err: f64 = inputs[split..]
+            .iter()
+            .zip(&targets[split..])
+            .map(|((s, ts), y)| {
+                let p = u.predict(s, *ts);
+                (p - y) * (p - y)
+            })
+            .sum::<f64>()
+            / (inputs.len() - split) as f64;
+        t.row(&[kind.to_string(), format!("{err:.6}")]);
+    }
+    // context: variance of targets
+    let mean = targets.iter().sum::<f64>() / targets.len() as f64;
+    let var = targets.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / targets.len() as f64;
+    t.row(&["(target variance)".to_string(), format!("{var:.6}")]);
+    println!("{}", t.render());
+
+    // --- 2. chained vs frozen T ---------------------------------------
+    println!("== window objective: chained-T vs frozen-T (Eq. 13) ==");
+    let sched = schedule(48);
+    let mut u = UtilityModel::new("forest")?;
+    u.fit(&inputs, &targets);
+    let states = vec![SatForecastState::fresh(); 48];
+    let t_status = bank.losses[2];
+    let mut t = Table::new(&["objective", "best n_agg", "predicted utility"]);
+    for (name, chain) in [("chained-T", true), ("frozen-T", false)] {
+        // scan candidate counts, measure where the objective peaks
+        let mut best = (0usize, f64::NEG_INFINITY);
+        let mut srng = Rng::new(7);
+        for n in 1..=24 {
+            let mut acc = 0.0;
+            for _ in 0..8 {
+                let mut cand = vec![false; 24];
+                for p in srng.choose_k(24, n) {
+                    cand[p] = true;
+                }
+                acc += schedule_utility_opts(&sched, 0, &cand, &states, &u, t_status, chain);
+            }
+            let avg = acc / 8.0;
+            if avg > best.1 {
+                best = (n, avg);
+            }
+        }
+        t.row(&[name.to_string(), best.0.to_string(), format!("{:.4}", best.1)]);
+    }
+    println!("{}", t.render());
+    println!("(frozen-T inflates with aggregation count; chained-T saturates — see DESIGN.md §5)\n");
+
+    // --- 3. |R| sweep ---------------------------------------------------
+    println!("== random-search budget |R| ==");
+    let mut t = Table::new(&["|R|", "best predicted utility", "ms"]);
+    for n_search in [50usize, 500, 5000] {
+        let params = SearchParams { i0: 24, n_min: 4, n_max: 8, n_search };
+        let mut srng = Rng::new(9);
+        let t0 = std::time::Instant::now();
+        let (_, util) = fedspace::sched::random_search(
+            &sched, 0, &states, &u, t_status, &params, &mut srng,
+        );
+        t.row(&[
+            n_search.to_string(),
+            format!("{util:.4}"),
+            format!("{:.1}", t0.elapsed().as_secs_f64() * 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // --- 4. forest helps over always-aggregate heuristic ----------------
+    println!("== fitted û vs cold-start heuristic on sample prediction ==");
+    let mut lin = LinearRegression::new(1e-6);
+    let x: Vec<Vec<f64>> = inputs.iter().map(|(s, ts)| fedspace::sched::featurize(s, *ts)).collect();
+    lin.fit(&x[..split].to_vec(), &targets[..split]);
+    println!(
+        "linear test MSE (direct featurized fit): {:.6}\n",
+        mse(&lin, &x[split..].to_vec(), &targets[split..])
+    );
+    Ok(())
+}

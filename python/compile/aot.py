@@ -1,0 +1,180 @@
+"""AOT compile path: lower the L2 model to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and NOT
+a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction
+ids which the xla crate's runtime (xla_extension 0.5.1) rejects
+(``proto.id() <= INT_MAX``).  The HLO text parser on the Rust side reassigns
+ids, so text round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+Python runs ONCE at build time; the Rust binary is self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.aggregate import DEFAULT_CHUNK
+
+# Baked per-size lowering parameters (must match rust cfg defaults).
+LOWER_PARAMS = {
+    "small": {"e_steps": 2, "batch": 8, "eval_batch": 16},
+    "fmow": {"e_steps": 4, "batch": 32, "eval_batch": 64},
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer elides
+    # big literals as `constant({...})`, which the 0.5.1 HLO parser silently
+    # zero-fills — the frozen feature extractor would train-time vanish.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "elided constant survived printing"
+    return text
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+
+
+def lower_size(size: str, out_dir: str, params: dict) -> None:
+    d = model.d_model(size)
+    e, b, eb = params["e_steps"], params["batch"], params["eval_batch"]
+    ch = DEFAULT_CHUNK
+    f32 = jnp.float32
+    w_s = jax.ShapeDtypeStruct((d,), f32)
+
+    print(f"[aot] size={size} d={d} E={e} B={b} eval_B={eb} CH={ch}")
+
+    # local_train: (w, xs[E,B,IMG_DIM], ys[E,B], lr) -> (delta, mean_loss)
+    fn = functools.partial(model.local_train, size=size)
+    lowered = jax.jit(fn).lower(
+        w_s,
+        jax.ShapeDtypeStruct((e, b, model.IMG_DIM), f32),
+        jax.ShapeDtypeStruct((e, b), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )
+    _write(os.path.join(out_dir, f"local_train_{size}.hlo.txt"), to_hlo_text(lowered))
+
+    # grad_eval: (w, x[B,IMG_DIM], y[B]) -> (grad, loss)
+    fn = functools.partial(model.grad_eval, size=size)
+    lowered = jax.jit(fn).lower(
+        w_s,
+        jax.ShapeDtypeStruct((b, model.IMG_DIM), f32),
+        jax.ShapeDtypeStruct((b,), f32),
+    )
+    _write(os.path.join(out_dir, f"grad_eval_{size}.hlo.txt"), to_hlo_text(lowered))
+
+    # eval_step: (w, x[EB,IMG_DIM], y[EB]) -> (loss_sum, n_correct)
+    fn = functools.partial(model.eval_step, size=size)
+    lowered = jax.jit(fn).lower(
+        w_s,
+        jax.ShapeDtypeStruct((eb, model.IMG_DIM), f32),
+        jax.ShapeDtypeStruct((eb,), f32),
+    )
+    _write(os.path.join(out_dir, f"eval_step_{size}.hlo.txt"), to_hlo_text(lowered))
+
+    # aggregate_chunk: (w, G[CH,d], wt[CH]) -> w'
+    lowered = jax.jit(model.aggregate_chunk).lower(
+        w_s,
+        jax.ShapeDtypeStruct((ch, d), f32),
+        jax.ShapeDtypeStruct((ch,), f32),
+    )
+    _write(
+        os.path.join(out_dir, f"aggregate_chunk_{size}.hlo.txt"), to_hlo_text(lowered)
+    )
+
+    # Metadata consumed by rust/src/runtime/artifact.rs (key=value lines).
+    shapes = ";".join(
+        f"{name}:{','.join(str(x) for x in shape)}"
+        for name, shape in model.param_shapes(size)
+    )
+    meta = "\n".join(
+        [
+            f"size={size}",
+            f"d={d}",
+            f"img_dim={model.IMG_DIM}",
+            f"num_classes={model.NUM_CLASSES}",
+            f"e_steps={e}",
+            f"batch={b}",
+            f"eval_batch={eb}",
+            f"chunk={ch}",
+            f"feat={model.SIZES[size]['feat']}",
+            f"hidden={model.SIZES[size]['hidden']}",
+            f"param_shapes={shapes}",
+        ]
+    )
+    _write(os.path.join(out_dir, f"meta_{size}.txt"), meta + "\n")
+
+
+def emit_golden(size: str, out_dir: str, params: dict) -> None:
+    """Golden cross-layer fixtures: inputs + python-computed outputs that
+    the Rust integration tests replay through the compiled artifacts.
+
+    This guards the whole interchange (printer, parser, old-XLA execution):
+    the elided-constant bug this repo hit would have been caught here.
+    """
+    import numpy as np
+
+    gdir = os.path.join(out_dir, f"golden_{size}")
+    os.makedirs(gdir, exist_ok=True)
+    d = model.d_model(size)
+    e, b, eb = params["e_steps"], params["batch"], params["eval_batch"]
+    rng = np.random.RandomState(42)
+    w = (0.05 * rng.randn(d)).astype(np.float32)
+    xs = rng.randn(e, b, model.IMG_DIM).astype(np.float32)
+    ys = rng.randint(0, model.NUM_CLASSES, (e, b)).astype(np.float32)
+    xe = rng.randn(eb, model.IMG_DIM).astype(np.float32)
+    ye = rng.randint(0, model.NUM_CLASSES, (eb,)).astype(np.float32)
+    lr = np.float32(0.5)
+
+    delta, tloss = model.local_train(jnp.array(w), jnp.array(xs), jnp.array(ys), lr, size=size)
+    grad, gloss = model.grad_eval(jnp.array(w), jnp.array(xs[0]), jnp.array(ys[0]), size=size)
+    lsum, ncorr = model.eval_step(jnp.array(w), jnp.array(xe), jnp.array(ye), size=size)
+
+    def dump(name, arr):
+        np.asarray(arr, dtype=np.float32).tofile(os.path.join(gdir, name + ".bin"))
+
+    dump("w", w)
+    dump("xs", xs)
+    dump("ys", ys)
+    dump("xe", xe)
+    dump("ye", ye)
+    dump("delta", delta)
+    dump("grad", grad)
+    scalars = (
+        f"lr={float(lr)}\ntrain_loss={float(tloss)}\ngrad_loss={float(gloss)}\n"
+        f"eval_loss_sum={float(lsum)}\neval_correct={float(ncorr)}\n"
+    )
+    with open(os.path.join(gdir, "scalars.txt"), "w") as f:
+        f.write(scalars)
+    print(f"  wrote {gdir}/ (golden fixtures)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default="small,fmow")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for size in args.sizes.split(","):
+        lower_size(size, args.out_dir, LOWER_PARAMS[size])
+    emit_golden("small", args.out_dir, LOWER_PARAMS["small"])
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+from .aggregate import DEFAULT_CHUNK, stale_aggregate  # noqa: F401
+from .matmul import matmul  # noqa: F401

@@ -1,0 +1,77 @@
+"""Layer-1 Pallas kernel: staleness-weighted gradient aggregation (Eq. 4).
+
+Computes ``w' = w + sum_c wt[c] * G[c, :]`` over a chunk of ``CH`` buffered
+gradients.  The staleness-compensation weights ``wt[c] = c_alpha(s_c)/C``
+(and zeros for empty slots) are computed by the Rust coordinator; the kernel
+is a pure weighted accumulation so a single lowered artifact serves every
+buffer size by streaming the buffer in chunks.
+
+TPU mapping: bandwidth-bound — the grid tiles the model dimension ``d`` into
+``bd``-sized blocks, so each (w-block, CH gradient rows, weights) tile makes
+exactly one HBM->VMEM trip.  Arithmetic intensity ~2 FLOP/byte puts the
+roofline at HBM bandwidth; the BlockSpec reads each byte once.
+``interpret=True`` as everywhere (CPU-PJRT image).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Gradients per chunk: the Rust GS streams its buffer CH rows at a time.
+DEFAULT_CHUNK = 16
+# Model-dimension tile. The kernel is tiled for generality; the tile size
+# is a *target* knob:
+#   - TPU deployment: bd = 4096..32768 keeps (CH+2)*bd*4B inside VMEM with
+#     double-buffering headroom (DESIGN.md §Hardware-Adaptation).
+#   - CPU-PJRT AOT (this image): the old XLA lowers the Pallas grid to a
+#     while-loop whose per-step dynamic-update-slice copies dominate; one
+#     grid step (bd >= d) is 5.1x faster (577ms -> 113ms per 16-gradient
+#     chunk at d=589k — EXPERIMENTS.md §Perf), so the build default covers
+#     any d <= 2^21 in a single step.
+DEFAULT_BD = 1 << 21
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _aggregate_kernel(w_ref, g_ref, wt_ref, o_ref):
+    # w_ref: (bd,), g_ref: (CH, bd), wt_ref: (CH,), o_ref: (bd,)
+    o_ref[...] = w_ref[...] + jnp.sum(
+        g_ref[...] * wt_ref[...][:, None], axis=0
+    )
+
+
+def stale_aggregate(
+    w: jax.Array, grads: jax.Array, weights: jax.Array, bd: int = DEFAULT_BD
+) -> jax.Array:
+    """``w + weights @ grads`` via the Pallas chunk kernel.
+
+    Args:
+      w: flat model/parameter vector, shape ``(d,)`` f32.
+      grads: chunk of buffered gradients, shape ``(CH, d)`` f32.
+      weights: staleness-compensation weights, shape ``(CH,)`` f32 (zero for
+        empty slots).
+    """
+    (d,) = w.shape
+    ch, d2 = grads.shape
+    assert d == d2, (w.shape, grads.shape)
+    bd = min(bd, _round_up(d, 8))
+    dp = _round_up(d, bd)
+    wp = jnp.pad(w, (0, dp - d))
+    gp = jnp.pad(grads, ((0, 0), (0, dp - d)))
+    out = pl.pallas_call(
+        _aggregate_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            pl.BlockSpec((bd,), lambda i: (i,)),
+            pl.BlockSpec((ch, bd), lambda i: (0, i)),
+            pl.BlockSpec((ch,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bd,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), w.dtype),
+        interpret=True,
+    )(wp, gp, weights)
+    return out[:d]

@@ -1,0 +1,108 @@
+"""Layer-1 Pallas kernel: tiled matmul — the FLOP hot-spot of local training.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid iterates over
+(M/bm, N/bn, K/bk) tiles; each step keeps an (bm, bk) x-tile, a (bk, bn)
+y-tile and an f32 (bm, bn) accumulator in VMEM, feeding the MXU systolic
+array. ``interpret=True`` is mandatory on this CPU-PJRT image — real TPU
+lowering emits a Mosaic custom-call the CPU plugin cannot execute.
+
+The public entry point :func:`matmul` pads arbitrary shapes up to tile
+multiples, invokes the kernel and slices the result back.  It carries a
+``jax.custom_vjp`` whose backward pass reuses the same kernel
+(dx = g @ y^T, dy = x^T @ g) so the whole fwd/bwd graph of the model runs
+through Pallas.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default MXU-shaped tiles. ~(3 * 128*128 * 4B) = 192 KiB of the ~16 MiB
+# VMEM per step, leaving headroom for double buffering.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, nk: int):
+    """Grid point (i, j, k): accumulate x[i,k] @ y[k,j] into the VMEM acc."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _matmul_padded(x: jax.Array, y: jax.Array, bm: int, bn: int, bk: int):
+    """Pallas call on tile-aligned operands."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, (x.shape, y.shape)
+    nm, nn, nk = m // bm, n // bn, k // bk
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(x, y)
+
+
+def _matmul_impl(
+    x: jax.Array,
+    y: jax.Array,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+) -> jax.Array:
+    """Pad to tile multiples, run the kernel, slice back."""
+    m, k = x.shape
+    _, n = y.shape
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 8))
+    bk = min(bk, _round_up(k, 8))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n)))
+    out = _matmul_padded(xp, yp, bm, bn, bk)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """``x @ y`` through the Pallas tiled kernel, differentiable."""
+    return _matmul_impl(x, y)
+
+
+def _matmul_fwd(x, y):
+    return _matmul_impl(x, y), (x, y)
+
+
+def _matmul_bwd(res, g):
+    x, y = res
+    # Both cotangents are themselves Pallas matmuls.
+    return _matmul_impl(g, y.T), _matmul_impl(x.T, g)
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

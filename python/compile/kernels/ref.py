@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for the Layer-1 Pallas kernels.
+
+These are the correctness ground truth: python/tests/ sweeps shapes and
+dtypes with hypothesis and asserts the Pallas kernels match these to
+tolerance.  Nothing here is ever lowered into the shipped artifacts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Reference for kernels.matmul: plain jnp matmul with f32 accumulate."""
+    return jnp.matmul(x, y, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def stale_aggregate_ref(
+    w: jax.Array, grads: jax.Array, weights: jax.Array
+) -> jax.Array:
+    """Reference for kernels.stale_aggregate: ``w + weights @ grads``."""
+    return w + jnp.einsum("c,cd->d", weights, grads)

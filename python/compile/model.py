@@ -1,0 +1,159 @@
+"""Layer-2: the satellite workload as JAX fwd/bwd, calling the L1 kernels.
+
+The paper trains DenseNet-161 (ImageNet-pretrained, lower 3 dense blocks
+frozen, BN->GN) on fMoW (62 classes).  Substitution (DESIGN.md §3): a frozen
+random patch-embedding feature extractor + a trainable 2-layer dense head.
+Only the trainable subspace matters to the staleness/idleness dynamics the
+paper studies, and the frozen-bottom / trainable-top structure mirrors the
+paper's transfer-learning setup exactly.
+
+All dense products run through ``kernels.matmul`` (the Pallas kernel), so the
+whole fwd/bwd lowers through Layer 1.  Parameters travel as one flat f32
+vector so the Rust coordinator is ``Vec<f32>`` end to end.
+
+Exported functions (lowered by aot.py):
+  local_train(w, xs[E,B,...], ys[E,B], lr) -> (delta, mean_loss)   Eq. (3)
+  grad_eval(w, x[B,...], y[B])             -> (grad, loss)          Eq. (12)
+  eval_step(w, x[B,...], y[B])             -> (loss_sum, n_correct)
+  aggregate_chunk(w, G[CH,d], wt[CH])      -> w'                    Eq. (4)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul, stale_aggregate
+
+# ---------------------------------------------------------------------------
+# Task constants (synthetic fMoW substitute — must match rust/src/data/).
+# ---------------------------------------------------------------------------
+
+IMG_H, IMG_W, IMG_C = 32, 32, 3
+IMG_DIM = IMG_H * IMG_W * IMG_C  # 3072
+PATCH = 4
+N_PATCH = (IMG_H // PATCH) * (IMG_W // PATCH)  # 64
+PATCH_DIM = PATCH * PATCH * IMG_C  # 48
+NUM_CLASSES = 62
+FROZEN_SEED = 1234  # bakes the frozen extractor deterministically into HLO
+
+# Model sizes: `small` for CI/unit tests, `fmow` for the paper's experiments.
+SIZES: Dict[str, Dict[str, int]] = {
+    "small": {"feat": 64, "hidden": 64},
+    "fmow": {"feat": 512, "hidden": 1024},
+}
+
+
+def param_shapes(size: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Trainable parameter layout (order defines the flat vector)."""
+    f, h = SIZES[size]["feat"], SIZES[size]["hidden"]
+    return [
+        ("w1", (f, h)),
+        ("b1", (h,)),
+        ("w2", (h, NUM_CLASSES)),
+        ("b2", (NUM_CLASSES,)),
+    ]
+
+
+def d_model(size: str) -> int:
+    """Flat trainable-parameter dimension d."""
+    return sum(int(np.prod(s)) for _, s in param_shapes(size))
+
+
+def frozen_features_matrix(size: str) -> np.ndarray:
+    """The frozen patch-embedding W_p [PATCH_DIM, feat], He-init, fixed seed.
+
+    Baked into the HLO as a constant — the satellite never trains it,
+    mirroring the paper's frozen DenseNet blocks.
+    """
+    f = SIZES[size]["feat"]
+    rng = np.random.RandomState(FROZEN_SEED)
+    scale = np.sqrt(2.0 / PATCH_DIM)
+    return (rng.randn(PATCH_DIM, f) * scale).astype(np.float32)
+
+
+def unflatten(w: jax.Array, size: str) -> Dict[str, jax.Array]:
+    """Split the flat vector into named parameter tensors (static slices)."""
+    out, off = {}, 0
+    for name, shape in param_shapes(size):
+        n = int(np.prod(shape))
+        out[name] = w[off : off + n].reshape(shape)
+        off += n
+    return out
+
+
+def _patchify(x: jax.Array) -> jax.Array:
+    """[B, IMG_DIM] -> [B * N_PATCH, PATCH_DIM] non-overlapping patches."""
+    b = x.shape[0]
+    x = x.reshape(b, IMG_H // PATCH, PATCH, IMG_W // PATCH, PATCH, IMG_C)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b * N_PATCH, PATCH_DIM)
+
+
+def forward(w: jax.Array, x: jax.Array, size: str) -> jax.Array:
+    """Logits [B, NUM_CLASSES] from flat params and flat images [B, IMG_DIM]."""
+    b = x.shape[0]
+    p = unflatten(w, size)
+    wp = jnp.asarray(frozen_features_matrix(size))
+    # Frozen extractor: patch embedding -> ReLU -> mean-pool over patches.
+    feats = jax.nn.relu(matmul(_patchify(x), wp))
+    feats = feats.reshape(b, N_PATCH, -1).mean(axis=1)
+    # Trainable head (the paper's unfrozen top).
+    h = jax.nn.relu(matmul(feats, p["w1"]) + p["b1"])
+    return matmul(h, p["w2"]) + p["b2"]
+
+
+def loss_fn(w: jax.Array, x: jax.Array, y: jax.Array, size: str) -> jax.Array:
+    """Mean softmax cross-entropy. ``y`` is f32 class ids (cast inside)."""
+    logits = forward(w, x, size)
+    labels = y.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+
+
+# ---------------------------------------------------------------------------
+# Exported entry points
+# ---------------------------------------------------------------------------
+
+
+def local_train(w, xs, ys, lr, *, size: str):
+    """E local SGD steps (Eq. 3) via lax.scan; returns (delta, mean_loss).
+
+    xs: [E, B, IMG_DIM] f32, ys: [E, B] f32 class ids, lr: scalar f32.
+    delta = w_E - w_0 is the paper's local update g_k.
+    """
+    vg = jax.value_and_grad(functools.partial(loss_fn, size=size))
+
+    def step(wc, xy):
+        x, y = xy
+        loss, g = vg(wc, x, y)
+        return wc - lr * g, loss
+
+    w_end, losses = jax.lax.scan(step, w, (xs, ys))
+    return w_end - w, losses.mean()
+
+
+def grad_eval(w, x, y, *, size: str):
+    """Single-batch (gradient, loss) — utility-sample generation (Eq. 12)."""
+    vg = jax.value_and_grad(functools.partial(loss_fn, size=size))
+    loss, g = vg(w, x, y)
+    return g, loss
+
+
+def eval_step(w, x, y, *, size: str):
+    """(sum of per-sample CE loss, #correct) over one validation batch."""
+    logits = forward(w, x, size)
+    labels = y.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss_sum = -jnp.take_along_axis(logp, labels[:, None], axis=1).sum()
+    correct = (jnp.argmax(logits, axis=-1) == labels).sum().astype(jnp.float32)
+    return loss_sum, correct
+
+
+def aggregate_chunk(w, grads, weights):
+    """GS-side Eq. (4) over one buffer chunk, via the Pallas kernel."""
+    return stale_aggregate(w, grads, weights)

@@ -1,0 +1,157 @@
+# pytest: kernel vs ref allclose — the CORE correctness signal.
+# Hypothesis sweeps shapes/dtypes of the Pallas kernels against the pure-jnp
+# oracles in compile/kernels/ref.py.
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import matmul, stale_aggregate
+from compile.kernels.matmul import _matmul_impl
+from compile.kernels.ref import matmul_ref, stale_aggregate_ref
+
+DIMS = st.integers(min_value=1, max_value=96)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype=jnp.float32).astype(dtype)
+
+
+def _tols(dtype):
+    return {"rtol": 2e-2, "atol": 2e-2} if dtype == jnp.bfloat16 else {
+        "rtol": 1e-5,
+        "atol": 1e-5,
+    }
+
+
+class TestMatmul:
+    @settings(max_examples=25, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_f32(self, m, k, n, seed):
+        kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+        x, y = _rand(kx, (m, k), jnp.float32), _rand(ky, (k, n), jnp.float32)
+        np.testing.assert_allclose(
+            matmul(x, y), matmul_ref(x, y), **_tols(jnp.float32)
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref_bf16(self, m, k, n, seed):
+        kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+        x, y = _rand(kx, (m, k), jnp.bfloat16), _rand(ky, (k, n), jnp.bfloat16)
+        got = matmul(x, y).astype(jnp.float32)
+        want = matmul_ref(x, y).astype(jnp.float32)
+        np.testing.assert_allclose(got, want, **_tols(jnp.bfloat16))
+
+    @pytest.mark.parametrize(
+        "m,k,n", [(1, 1, 1), (128, 128, 128), (129, 130, 131), (7, 256, 3)]
+    )
+    def test_edge_shapes(self, m, k, n):
+        kx, ky = jax.random.split(jax.random.PRNGKey(0))
+        x, y = _rand(kx, (m, k), jnp.float32), _rand(ky, (k, n), jnp.float32)
+        np.testing.assert_allclose(
+            matmul(x, y), matmul_ref(x, y), rtol=1e-5, atol=1e-5
+        )
+
+    def test_multi_k_tile_accumulation(self):
+        # K spans several grid steps -> exercises the VMEM accumulator path.
+        kx, ky = jax.random.split(jax.random.PRNGKey(1))
+        x, y = _rand(kx, (64, 512), jnp.float32), _rand(ky, (512, 64), jnp.float32)
+        np.testing.assert_allclose(
+            _matmul_impl(x, y, bm=32, bn=32, bk=64),
+            matmul_ref(x, y),
+            rtol=1e-4,
+            atol=1e-4,
+        )
+
+    def test_gradients_match_jnp(self):
+        # custom_vjp backward (itself Pallas) vs plain-jnp autodiff.
+        kx, ky = jax.random.split(jax.random.PRNGKey(2))
+        x, y = _rand(kx, (9, 17), jnp.float32), _rand(ky, (17, 5), jnp.float32)
+
+        def f_pallas(x, y):
+            return (matmul(x, y) ** 2).sum()
+
+        def f_ref(x, y):
+            return (jnp.matmul(x, y) ** 2).sum()
+
+        gx, gy = jax.grad(f_pallas, argnums=(0, 1))(x, y)
+        rx, ry = jax.grad(f_ref, argnums=(0, 1))(x, y)
+        np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gy, ry, rtol=1e-4, atol=1e-4)
+
+    def test_jit_compatible(self):
+        kx, ky = jax.random.split(jax.random.PRNGKey(3))
+        x, y = _rand(kx, (33, 20), jnp.float32), _rand(ky, (20, 11), jnp.float32)
+        np.testing.assert_allclose(
+            jax.jit(matmul)(x, y), matmul_ref(x, y), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestStaleAggregate:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        d=st.integers(1, 3000),
+        ch=st.integers(1, 16),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, d, ch, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        w = _rand(k1, (d,), jnp.float32)
+        g = _rand(k2, (ch, d), jnp.float32)
+        wt = jax.random.uniform(k3, (ch,), dtype=jnp.float32)
+        np.testing.assert_allclose(
+            stale_aggregate(w, g, wt),
+            stale_aggregate_ref(w, g, wt),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_zero_weights_are_identity(self):
+        # Empty buffer slots carry weight 0 and must not perturb w.
+        k1, k2 = jax.random.split(jax.random.PRNGKey(7))
+        w = _rand(k1, (513,), jnp.float32)
+        g = _rand(k2, (8, 513), jnp.float32)
+        wt = jnp.zeros((8,), jnp.float32)
+        np.testing.assert_allclose(stale_aggregate(w, g, wt), w)
+
+    def test_partial_mask(self):
+        # Half-full chunk: masked rows contribute nothing.
+        k1, k2 = jax.random.split(jax.random.PRNGKey(8))
+        w = _rand(k1, (100,), jnp.float32)
+        g = _rand(k2, (4, 100), jnp.float32)
+        wt = jnp.array([0.5, 0.5, 0.0, 0.0], jnp.float32)
+        want = w + 0.5 * g[0] + 0.5 * g[1]
+        np.testing.assert_allclose(
+            stale_aggregate(w, g, wt), want, rtol=1e-5, atol=1e-5
+        )
+
+    def test_weights_normalized_sum(self):
+        # Eq. (4): weights c(s)/C sum to 1 -> aggregating identical gradients
+        # equals adding that gradient once.
+        k1, k2 = jax.random.split(jax.random.PRNGKey(9))
+        w = _rand(k1, (257,), jnp.float32)
+        g_row = _rand(k2, (257,), jnp.float32)
+        g = jnp.tile(g_row[None, :], (8, 1))
+        wt = jnp.full((8,), 1.0 / 8.0, jnp.float32)
+        np.testing.assert_allclose(
+            stale_aggregate(w, g, wt), w + g_row, rtol=1e-5, atol=1e-5
+        )
+
+    def test_large_d_multiple_blocks(self):
+        # d > DEFAULT_BD exercises the grid over model-dimension tiles.
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(10), 3)
+        d = 4096 * 2 + 37
+        w = _rand(k1, (d,), jnp.float32)
+        g = _rand(k2, (8, d), jnp.float32)
+        wt = jax.random.uniform(k3, (8,), dtype=jnp.float32)
+        np.testing.assert_allclose(
+            stale_aggregate(w, g, wt),
+            stale_aggregate_ref(w, g, wt),
+            rtol=1e-5,
+            atol=1e-5,
+        )

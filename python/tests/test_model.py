@@ -1,0 +1,162 @@
+# pytest: L2 model — shapes, gradients, training dynamics, export surface.
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+SIZE = "small"
+D = model.d_model(SIZE)
+
+
+def _params(seed=0, scale=0.05):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), (D,))
+
+
+def _batch(b=8, seed=1):
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (b, model.IMG_DIM))
+    y = jax.random.randint(ky, (b,), 0, model.NUM_CLASSES).astype(jnp.float32)
+    return x, y
+
+
+class TestStructure:
+    def test_d_model_matches_shapes(self):
+        want = sum(int(np.prod(s)) for _, s in model.param_shapes(SIZE))
+        assert D == want
+
+    def test_unflatten_roundtrip(self):
+        w = jnp.arange(D, dtype=jnp.float32)
+        parts = model.unflatten(w, SIZE)
+        flat = jnp.concatenate([parts[n].reshape(-1) for n, _ in model.param_shapes(SIZE)])
+        np.testing.assert_array_equal(flat, w)
+
+    def test_frozen_matrix_deterministic(self):
+        a = model.frozen_features_matrix(SIZE)
+        b = model.frozen_features_matrix(SIZE)
+        np.testing.assert_array_equal(a, b)
+        assert a.shape == (model.PATCH_DIM, model.SIZES[SIZE]["feat"])
+
+    def test_forward_shape(self):
+        x, _ = _batch(5)
+        logits = model.forward(_params(), x, SIZE)
+        assert logits.shape == (5, model.NUM_CLASSES)
+
+    def test_patchify_preserves_content(self):
+        x = jnp.arange(2 * model.IMG_DIM, dtype=jnp.float32).reshape(2, -1)
+        p = model._patchify(x)
+        assert p.shape == (2 * model.N_PATCH, model.PATCH_DIM)
+        # first patch of first image = top-left 4x4 block, all channels
+        img = x[0].reshape(model.IMG_H, model.IMG_W, model.IMG_C)
+        want = img[:4, :4, :].reshape(-1)
+        np.testing.assert_array_equal(p[0], want)
+
+
+class TestLoss:
+    def test_loss_finite_positive(self):
+        x, y = _batch()
+        loss = model.loss_fn(_params(), x, y, SIZE)
+        assert np.isfinite(loss) and loss > 0
+
+    def test_uniform_logits_loss_is_log_c(self):
+        x, y = _batch()
+        loss = model.loss_fn(jnp.zeros((D,)), x, y, SIZE)
+        np.testing.assert_allclose(loss, np.log(model.NUM_CLASSES), rtol=1e-5)
+
+    def test_grad_matches_finite_difference(self):
+        x, y = _batch(4)
+        w = _params()
+        g = jax.grad(functools.partial(model.loss_fn, size=SIZE))(w, x, y)
+        rng = np.random.RandomState(0)
+        idx = rng.choice(D, size=5, replace=False)
+        eps = 1e-3
+        for i in idx:
+            e = jnp.zeros((D,)).at[i].set(eps)
+            fd = (
+                model.loss_fn(w + e, x, y, SIZE) - model.loss_fn(w - e, x, y, SIZE)
+            ) / (2 * eps)
+            np.testing.assert_allclose(g[i], fd, rtol=5e-2, atol=5e-4)
+
+
+class TestLocalTrain:
+    def test_delta_matches_manual_loop(self):
+        w = _params()
+        e, b, lr = 3, 4, 0.1
+        kx, ky = jax.random.split(jax.random.PRNGKey(5))
+        xs = jax.random.normal(kx, (e, b, model.IMG_DIM))
+        ys = jax.random.randint(ky, (e, b), 0, model.NUM_CLASSES).astype(jnp.float32)
+        delta, mean_loss = model.local_train(w, xs, ys, jnp.float32(lr), size=SIZE)
+        wc, losses = w, []
+        gfn = jax.value_and_grad(functools.partial(model.loss_fn, size=SIZE))
+        for i in range(e):
+            l, g = gfn(wc, xs[i], ys[i])
+            losses.append(l)
+            wc = wc - lr * g
+        np.testing.assert_allclose(delta, wc - w, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(mean_loss, np.mean(losses), rtol=1e-5)
+
+    def test_training_reduces_loss(self):
+        # A few local rounds on a fixed batch must reduce the loss.
+        w = _params()
+        x, y = _batch(8, seed=3)
+        xs, ys = jnp.tile(x[None], (4, 1, 1)), jnp.tile(y[None], (4, 1))
+        l0 = model.loss_fn(w, x, y, SIZE)
+        delta, _ = model.local_train(w, xs, ys, jnp.float32(0.5), size=SIZE)
+        l1 = model.loss_fn(w + delta, x, y, SIZE)
+        assert l1 < l0
+
+    def test_zero_lr_zero_delta(self):
+        w = _params()
+        x, y = _batch()
+        xs, ys = x[None], y[None]
+        delta, _ = model.local_train(w, xs, ys, jnp.float32(0.0), size=SIZE)
+        np.testing.assert_allclose(delta, jnp.zeros_like(w), atol=1e-7)
+
+
+class TestGradEval:
+    def test_matches_value_and_grad(self):
+        w = _params()
+        x, y = _batch()
+        g, loss = model.grad_eval(w, x, y, size=SIZE)
+        l2, g2 = jax.value_and_grad(functools.partial(model.loss_fn, size=SIZE))(
+            w, x, y
+        )
+        np.testing.assert_allclose(loss, l2, rtol=1e-6)
+        np.testing.assert_allclose(g, g2, rtol=1e-6, atol=1e-7)
+
+
+class TestEvalStep:
+    def test_counts_and_loss(self):
+        w = _params()
+        x, y = _batch(16, seed=11)
+        loss_sum, correct = model.eval_step(w, x, y, size=SIZE)
+        logits = model.forward(w, x, SIZE)
+        want_correct = (jnp.argmax(logits, -1) == y.astype(jnp.int32)).sum()
+        assert int(correct) == int(want_correct)
+        per = model.loss_fn(w, x, y, SIZE) * 16
+        np.testing.assert_allclose(loss_sum, per, rtol=1e-5)
+
+    def test_perfect_and_zero_accuracy_bounds(self):
+        w = _params()
+        x, y = _batch(16, seed=12)
+        _, correct = model.eval_step(w, x, y, size=SIZE)
+        assert 0 <= int(correct) <= 16
+
+
+class TestAggregateChunk:
+    def test_matches_eq4(self):
+        w = _params()
+        k1, k2 = jax.random.split(jax.random.PRNGKey(13))
+        g = 0.01 * jax.random.normal(k1, (8, D))
+        s = jnp.array([0, 1, 2, 3, 0, 0, 0, 0], jnp.float32)
+        alpha = 0.5
+        c = (s[:4] + 1) ** (-alpha)
+        wt = jnp.concatenate([c / c.sum(), jnp.zeros(4)])
+        got = model.aggregate_chunk(w, g, wt)
+        want = w + (wt[:, None] * g).sum(0)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)

@@ -1,0 +1,123 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!   1. FedBuff buffer-size sweep (the paper tuned M, best M=96)
+//!   2. utility regressor: random forest vs linear
+//!   3. window objective: chained-T vs the paper's frozen-T (Eq. 13)
+//!   4. FedSpace search budget |R|
+//! All on the mock backend so the full study runs in under a minute.
+
+use fedspace::app::run_mock_experiment;
+use fedspace::bench_util::section;
+use fedspace::cfg::{AlgorithmKind, DataDist, ExperimentConfig};
+use fedspace::metrics::Table;
+use fedspace::rng::Rng;
+use fedspace::sched::{
+    generate_samples, pretrain_bank, schedule_utility_opts, MockBackend, SatForecastState,
+    UtilityModel,
+};
+
+fn base() -> ExperimentConfig {
+    ExperimentConfig {
+        n_sats: 96,
+        n_steps: 480,
+        dist: DataDist::NonIid,
+        n_search: 500,
+        utility_samples: 200,
+        n_min: 1,
+        n_max: 4,
+        eval_every: 4,
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    const TARGET: f64 = 0.9;
+
+    section("ablation 1: FedBuff buffer size M (paper tuned to M=96 at K=191)");
+    let mut t = Table::new(&["M", "days to 90%", "best acc", "rounds"]);
+    for m in [4usize, 12, 24, 48, 96] {
+        let cfg = ExperimentConfig {
+            algorithm: AlgorithmKind::FedBuff,
+            fedbuff_m: m,
+            ..base()
+        };
+        let out = run_mock_experiment(&cfg, None)?;
+        let r = &out.result;
+        t.row(&[
+            m.to_string(),
+            r.trace.curve.days_to_accuracy(TARGET).map_or("-".into(), |d| format!("{d:.2}")),
+            format!("{:.3}", r.trace.curve.best_accuracy()),
+            r.final_round.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+
+    section("ablation 2: utility regressor kind");
+    let mut t = Table::new(&["regressor", "days to 90%", "best acc"]);
+    for kind in ["forest", "linear"] {
+        let cfg = ExperimentConfig {
+            algorithm: AlgorithmKind::FedSpace,
+            regressor: kind.to_string(),
+            ..base()
+        };
+        let out = run_mock_experiment(&cfg, None)?;
+        let r = &out.result;
+        t.row(&[
+            kind.to_string(),
+            r.trace.curve.days_to_accuracy(TARGET).map_or("-".into(), |d| format!("{d:.2}")),
+            format!("{:.3}", r.trace.curve.best_accuracy()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    section("ablation 3: window objective — chained-T vs frozen-T (Eq. 13)");
+    // direct objective comparison: where does the predicted-optimal
+    // aggregation count land under each objective?
+    let backend = MockBackend::new(32, 0);
+    let mut rng = Rng::new(1);
+    let bank = pretrain_bank(&backend, 20, 8, 0.5, &mut rng)?;
+    let (inp, tgt) = generate_samples(&backend, &bank, 400, 8, 16, 0.5, &mut rng)?;
+    let mut u = UtilityModel::new("forest")?;
+    u.fit(&inp, &tgt);
+    let cfg = base();
+    let (_, sched) = fedspace::app::build_schedule(&ExperimentConfig { n_steps: 24, ..cfg });
+    let states = vec![SatForecastState::fresh(); 96];
+    let mut t = Table::new(&["objective", "argmax n_agg", "objective value"]);
+    for (name, chain) in [("chained-T", true), ("frozen-T (paper)", false)] {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        let mut srng = Rng::new(7);
+        for n in 1..=24 {
+            let mut acc = 0.0;
+            for _ in 0..8 {
+                let mut cand = vec![false; 24];
+                for p in srng.choose_k(24, n) {
+                    cand[p] = true;
+                }
+                acc += schedule_utility_opts(&sched, 0, &cand, &states, &u, bank.losses[2], chain);
+            }
+            if acc / 8.0 > best.1 {
+                best = (n, acc / 8.0);
+            }
+        }
+        t.row(&[name.to_string(), best.0.to_string(), format!("{:.4}", best.1)]);
+    }
+    println!("{}", t.render());
+
+    section("ablation 4: FedSpace search budget |R|");
+    let mut t = Table::new(&["|R|", "days to 90%", "best acc"]);
+    for n_search in [50usize, 500, 5000] {
+        let cfg = ExperimentConfig {
+            algorithm: AlgorithmKind::FedSpace,
+            n_search,
+            ..base()
+        };
+        let out = run_mock_experiment(&cfg, None)?;
+        let r = &out.result;
+        t.row(&[
+            n_search.to_string(),
+            r.trace.curve.days_to_accuracy(TARGET).map_or("-".into(), |d| format!("{d:.2}")),
+            format!("{:.3}", r.trace.curve.best_accuracy()),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! Performance micro-benches (deliverable e): the hot paths of all three
+//! layers as exercised from the coordinator, with before/after history in
+//! EXPERIMENTS.md §Perf.
+//!
+//! L1/L2 (through PJRT artifacts — requires `make artifacts`):
+//!   local_train, grad_eval, eval_batch, aggregate_chunk
+//! L3 (pure Rust):
+//!   CPU aggregation oracle, scheduler forecast + random search, orbital
+//!   propagation, RF fit/predict, synthetic-image materialization.
+
+use fedspace::bench_util::{bench, section};
+use fedspace::connectivity::{ConnectivityParams, ConnectivitySchedule};
+use fedspace::data::{Dataset, SynthConfig};
+use fedspace::fl::server::{CpuAggregator, ServerAggregator};
+use fedspace::fl::GradientEntry;
+use fedspace::ml::{RandomForest, RandomForestParams, Regressor};
+use fedspace::orbit::{planet_ground_stations, planet_labs_like};
+use fedspace::rng::Rng;
+use fedspace::runtime::ModelRuntime;
+use fedspace::sched::{random_search, SatForecastState, SearchParams, UtilityModel};
+
+fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal_f32(0.0, scale)).collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0);
+
+    section("L1/L2: PJRT artifacts (size = fmow, d = 588k)");
+    let rt = ModelRuntime::load("artifacts", "fmow")?;
+    let m = rt.meta.clone();
+    let w = rt.init_params(&mut rng);
+    let n = m.e_steps * m.batch;
+    let xs = rand_vec(&mut rng, n * m.img_dim, 1.0);
+    let ys: Vec<f32> = (0..n).map(|_| rng.gen_range(0, 62) as f32).collect();
+    let s = bench("local_train (E=4, B=32)", 1, 10, || {
+        let _ = rt.local_train(&w, &xs, &ys, 0.5).unwrap();
+    });
+    println!(
+        "    -> {:.1} local updates/s",
+        s.throughput(1.0)
+    );
+    let xe = rand_vec(&mut rng, m.eval_batch * m.img_dim, 1.0);
+    let ye: Vec<f32> = (0..m.eval_batch).map(|_| rng.gen_range(0, 62) as f32).collect();
+    bench("eval_batch (B=64)", 1, 10, || {
+        let _ = rt.eval_batch(&w, &xe, &ye).unwrap();
+    });
+    let x1 = rand_vec(&mut rng, m.batch * m.img_dim, 1.0);
+    let y1: Vec<f32> = (0..m.batch).map(|_| rng.gen_range(0, 62) as f32).collect();
+    bench("grad_eval (B=32)", 1, 10, || {
+        let _ = rt.grad_eval(&w, &x1, &y1).unwrap();
+    });
+    let g = rand_vec(&mut rng, m.chunk * m.d, 0.01);
+    let wt = vec![1.0 / m.chunk as f32; m.chunk];
+    let s = bench("aggregate_chunk (CH=16, Pallas)", 1, 10, || {
+        let _ = rt.aggregate_chunk_raw(&w, &g, &wt).unwrap();
+    });
+    let bytes = (m.chunk * m.d + 2 * m.d) as f64 * 4.0;
+    println!("    -> {:.2} GB/s effective", bytes / s.median_s / 1e9);
+
+    section("L3: GS aggregation oracle (pure Rust, d = 588k)");
+    let entries: Vec<GradientEntry> = (0..16)
+        .map(|sat| GradientEntry {
+            sat,
+            staleness: sat % 5,
+            grad: rand_vec(&mut rng, m.d, 0.01),
+            n_samples: 1,
+        })
+        .collect();
+    bench("CpuAggregator 16 gradients", 1, 10, || {
+        let mut wc = w.clone();
+        CpuAggregator.aggregate(&mut wc, &entries, 0.5).unwrap();
+    });
+
+    section("L3: FedSpace scheduler");
+    let constellation = planet_labs_like(191, 0);
+    let stations = planet_ground_stations();
+    let sched =
+        ConnectivitySchedule::compute(&constellation, &stations, 96, ConnectivityParams::default());
+    let states = vec![SatForecastState::fresh(); 191];
+    let u = UtilityModel::new("forest")?;
+    for n_search in [500usize, 5000] {
+        let params = SearchParams { i0: 24, n_min: 4, n_max: 8, n_search };
+        let mut srng = Rng::new(1);
+        let s = bench(&format!("random_search |R|={n_search} (K=191, I0=24)"), 1, 5, || {
+            let _ = random_search(&sched, 0, &states, &u, 1.0, &params, &mut srng);
+        });
+        println!("    -> {:.0} candidates/s", s.throughput(n_search as f64));
+    }
+
+    section("L3: orbital mechanics");
+    bench("connectivity C: 191 sats x 96 slots x 12 GS", 1, 5, || {
+        let _ = ConnectivitySchedule::compute(
+            &constellation,
+            &stations,
+            96,
+            ConnectivityParams::default(),
+        );
+    });
+
+    section("L3: utility regressor (random forest)");
+    let x: Vec<Vec<f64>> = (0..400)
+        .map(|_| (0..10).map(|_| rng.gen_f64(-1.0, 1.0)).collect())
+        .collect();
+    let y: Vec<f64> = x.iter().map(|r| r[0] * r[0] - r[1]).collect();
+    bench("RF fit (400 x 10, 50 trees)", 1, 5, || {
+        let mut rf = RandomForest::new(RandomForestParams::default());
+        rf.fit(&x, &y);
+    });
+    let mut rf = RandomForest::new(RandomForestParams::default());
+    rf.fit(&x, &y);
+    bench("RF predict x1000", 2, 10, || {
+        for row in x.iter().take(1000.min(x.len())) {
+            let _ = rf.predict(row);
+        }
+    });
+
+    section("L3: dataset synthesis");
+    let ds = Dataset::generate(SynthConfig { n_train: 1000, n_val: 16, ..Default::default() });
+    let idx: Vec<usize> = (0..128).collect();
+    let s = bench("materialize batch of 128 images", 1, 10, || {
+        let _ = ds.make_batch(&ds.train, &idx);
+    });
+    println!("    -> {:.0} images/s", s.throughput(128.0));
+    Ok(())
+}

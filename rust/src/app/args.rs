@@ -1,0 +1,122 @@
+//! Minimal CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Grammar: `fedspace <command> [--key value | --key=value | --flag] ...`
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut it = argv.into_iter();
+        let command = it.next().unwrap_or_default();
+        let mut args = Args { command, ..Default::default() };
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let tok = &rest[i];
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    args.options.insert(name.to_string(), rest[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be an integer")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{name} must be a number")),
+        }
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        match self.get(name) {
+            Some(v) => Ok(v),
+            None => bail!("missing required option --{name}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let a = parse("train pos1 --algorithm fedspace --steps=480 --mock");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("algorithm"), Some("fedspace"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 480);
+        assert!(a.has_flag("mock"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn bare_word_after_option_name_is_its_value() {
+        // documented ambiguity: `--mock pos1` binds pos1 to --mock
+        let a = parse("x --mock pos1");
+        assert_eq!(a.get("mock"), Some("pos1"));
+        assert!(!a.has_flag("mock"));
+    }
+
+    #[test]
+    fn defaults_and_requires() {
+        let a = parse("x --k v");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert!(a.require("missing").is_err());
+        assert_eq!(a.require("k").unwrap(), "v");
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = parse("x --n abc");
+        assert!(a.get_usize("n", 1).is_err());
+    }
+
+    #[test]
+    fn empty_command() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "");
+    }
+}

@@ -1,0 +1,269 @@
+//! CLI subcommand implementations.
+
+use super::args::Args;
+use super::runner::{run_mock_experiment, run_pjrt_experiment};
+use crate::cfg::{AlgorithmKind, DataDist, ExperimentConfig};
+use crate::connectivity::ConnectivityStats;
+use crate::fl::illustrative;
+use crate::metrics::{write_file, Table};
+use crate::rng::Rng;
+use crate::sched::{generate_samples, pretrain_bank, MockBackend, UtilityModel};
+use anyhow::Result;
+
+pub const HELP: &str = "\
+fedspace — FL coordinator for satellites and ground stations (So et al. 2022)
+
+USAGE: fedspace <command> [options]
+
+COMMANDS:
+  connectivity  compute constellation connectivity (Figure 2 data)
+                  --sats N (191)  --steps N (96)  --out-dir DIR (results)
+  illustrative  the 3-satellite example (Figures 3-4, Table 1)
+  train         run one FL experiment
+                  --config FILE           TOML config (optional)
+                  --algorithm sync|async|fedbuff|fedspace (fedspace)
+                  --dist iid|noniid (iid) --steps N (480) --sats N (191)
+                  --mock                  analytic backend (default: PJRT)
+                  --size small|fmow       model size for PJRT (fmow)
+                  --eval-samples N (512)  --target ACC (none)
+                  --out FILE              write the accuracy curve CSV
+  utility       phase-1 utility pipeline on the mock backend; reports MSE
+                  --samples N (400)
+  schedule      plan one FedSpace aggregation window over the real
+                constellation and print the forecast timeline
+                  --sats N (191)  --i0 N (24)  --n-min N (1) --n-max N (8)
+  help          this text
+";
+
+/// Apply common CLI overrides onto a config.
+fn config_from(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = match args.get("config") {
+        Some(path) => ExperimentConfig::from_file(path)?,
+        None => ExperimentConfig::default(),
+    };
+    if let Some(a) = args.get("algorithm") {
+        cfg.algorithm = AlgorithmKind::parse(a)?;
+    }
+    if let Some(d) = args.get("dist") {
+        cfg.dist = DataDist::parse(d)?;
+    }
+    cfg.n_steps = args.get_usize("steps", cfg.n_steps)?;
+    cfg.n_sats = args.get_usize("sats", cfg.n_sats)?;
+    cfg.fedbuff_m = args.get_usize("fedbuff-m", cfg.fedbuff_m)?;
+    if let Some(s) = args.get("size") {
+        cfg.model_size = s.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+pub fn connectivity(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig {
+        n_sats: args.get_usize("sats", 191)?,
+        n_steps: args.get_usize("steps", 96)?,
+        ..Default::default()
+    };
+    let out_dir = args.get_or("out-dir", "results");
+    let (_, sched) = super::runner::build_schedule(&cfg);
+    let stats = ConnectivityStats::from_schedule(&sched);
+    println!(
+        "constellation: {} satellites, 12 ground stations, T0 = {} min, {} steps",
+        cfg.n_sats,
+        cfg.t0_s / 60.0,
+        cfg.n_steps
+    );
+    println!("|C_i|: min={} max={}", stats.min_set, stats.max_set);
+    println!("mean contacts/satellite: {:.1}", stats.mean_contacts);
+    let mut csv = String::from("i,n_connected\n");
+    for (i, n) in stats.set_sizes.iter().enumerate() {
+        csv.push_str(&format!("{i},{n}\n"));
+    }
+    write_file(&format!("{out_dir}/fig2a_set_sizes.csv"), &csv)?;
+    let mut csv = String::from("n_contacts,n_satellites\n");
+    for (bucket, count) in stats.contacts_histogram(1) {
+        csv.push_str(&format!("{bucket},{count}\n"));
+    }
+    write_file(&format!("{out_dir}/fig2b_contacts_hist.csv"), &csv)?;
+    println!("wrote {out_dir}/fig2a_set_sizes.csv, {out_dir}/fig2b_contacts_hist.csv");
+    Ok(())
+}
+
+pub fn illustrative(_args: &Args) -> Result<()> {
+    let mut table = Table::new(&["scheme", "updates", "s=0", "s=1", "s=2", "s=5", "total", "idle"]);
+    for r in illustrative::table1() {
+        table.row(&[
+            r.scheme.to_string(),
+            r.global_updates.to_string(),
+            r.staleness.count(0).to_string(),
+            r.staleness.count(1).to_string(),
+            r.staleness.count(2).to_string(),
+            r.staleness.count(5).to_string(),
+            r.total_aggregated.to_string(),
+            r.idle.to_string(),
+        ]);
+    }
+    println!("Table 1 (3-satellite illustrative example):\n{}", table.render());
+    Ok(())
+}
+
+pub fn train(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let stop_at = args.get("target").map(|t| t.parse::<f64>()).transpose()?;
+    let eval_samples = args.get_usize("eval-samples", 512)?;
+    println!(
+        "running {} / {:?} on {} satellites, {} steps ({} backend)",
+        cfg.algorithm.name(),
+        cfg.dist,
+        cfg.n_sats,
+        cfg.n_steps,
+        if args.has_flag("mock") { "mock" } else { "pjrt" }
+    );
+    let out = if args.has_flag("mock") {
+        run_mock_experiment(&cfg, stop_at)?
+    } else {
+        run_pjrt_experiment(&cfg, eval_samples, stop_at)?
+    };
+    let r = &out.result;
+    println!(
+        "finished: rounds={} uploads={} idle={} ({:.1}%) best_acc={:.4}",
+        r.final_round,
+        r.trace.uploads,
+        r.trace.idle,
+        100.0 * r.trace.idle_fraction(),
+        r.trace.curve.best_accuracy()
+    );
+    if let Some(t) = stop_at {
+        match r.days_to_target {
+            Some(d) => println!("reached {:.0}% accuracy after {:.2} simulated days", t * 100.0, d),
+            None => println!("never reached {:.0}% accuracy", t * 100.0),
+        }
+    }
+    println!(
+        "time: train={:.1}s agg={:.1}s eval={:.1}s",
+        r.trace.t_train_s, r.trace.t_agg_s, r.trace.t_eval_s
+    );
+    if let Some(path) = args.get("out") {
+        write_file(path, &r.trace.curve.to_csv())?;
+        println!("curve written to {path}");
+    }
+    Ok(())
+}
+
+pub fn utility(args: &Args) -> Result<()> {
+    let n = args.get_usize("samples", 400)?;
+    let backend = MockBackend::new(32, 0);
+    let mut rng = Rng::new(1);
+    let bank = pretrain_bank(&backend, 20, 8, 0.5, &mut rng)?;
+    let (inputs, targets) = generate_samples(&backend, &bank, n, 8, 16, 0.5, &mut rng)?;
+    let split = n * 4 / 5;
+    for kind in ["forest", "linear"] {
+        let mut u = UtilityModel::new(kind)?;
+        u.fit(&inputs[..split].to_vec(), &targets[..split]);
+        let mse: f64 = inputs[split..]
+            .iter()
+            .zip(&targets[split..])
+            .map(|((s, t), y)| {
+                let p = u.predict(s, *t);
+                (p - y) * (p - y)
+            })
+            .sum::<f64>()
+            / (n - split) as f64;
+        println!("{kind:>8}: test MSE = {mse:.6} over {} held-out samples", n - split);
+    }
+    Ok(())
+}
+
+/// Standalone §3 demo: fit û on the mock, plan a^{0,I0} over the real
+/// constellation, print the slot-by-slot forecast.
+pub fn schedule(args: &Args) -> Result<()> {
+    use crate::sched::{
+        forecast_window, generate_samples, pretrain_bank, FedSpacePlanner, MockBackend,
+        SatForecastState, SearchParams, UtilityModel,
+    };
+    let n_sats = args.get_usize("sats", 191)?;
+    let i0 = args.get_usize("i0", 24)?;
+    let n_min = args.get_usize("n-min", 1)?;
+    let n_max = args.get_usize("n-max", 8)?.min(i0);
+    let cfg = ExperimentConfig { n_sats, n_steps: i0, ..Default::default() };
+    let (_, sched) = super::runner::build_schedule(&cfg);
+
+    // phase 1 on the mock source task
+    let backend = MockBackend::new(32, 0);
+    let mut rng = Rng::new(1);
+    let bank = pretrain_bank(&backend, 16, 8, 0.5, &mut rng)?;
+    let (inp, tgt) = generate_samples(&backend, &bank, 300, 8, 16, 0.5, &mut rng)?;
+    let mut utility = UtilityModel::new("forest")?;
+    utility.fit(&inp, &tgt);
+
+    // phase 2: random search
+    let params = SearchParams { i0, n_min, n_max, n_search: 2000 };
+    let mut planner = FedSpacePlanner::new(utility, params, 0);
+    let states = vec![SatForecastState::fresh(); n_sats];
+    let t0 = std::time::Instant::now();
+    let window = planner.plan(&sched, 0, &states, bank.losses[1]);
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    let f = forecast_window(&sched, 0, &window, &states);
+
+    println!("planned a^(0..{i0}) over {n_sats} satellites in {ms:.0} ms (|R|=2000):\n");
+    let mut agg_idx = 0usize;
+    for (l, &a) in window.iter().enumerate() {
+        let conn = sched.sets[l].len();
+        if a && agg_idx < f.aggregations.len() {
+            let st = &f.aggregations[agg_idx];
+            if !st.is_empty() {
+                let max_s = st.iter().max().unwrap();
+                println!(
+                    "  slot {l:>2}: AGGREGATE  |C|={conn:<3} gradients={} staleness<= {max_s}",
+                    st.len()
+                );
+                agg_idx += 1;
+                continue;
+            }
+        }
+        println!("  slot {l:>2}:            |C|={conn}");
+    }
+    println!(
+        "\nforecast: {} aggregations, {} gradients total, {} idle of {} contacts",
+        f.aggregations.len(),
+        f.aggregations.iter().map(|a| a.len()).sum::<usize>(),
+        f.idle,
+        f.contacts
+    );
+    println!("predicted window utility: {:.4}", planner.planned_utilities[0]);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn illustrative_runs() {
+        illustrative(&args("illustrative")).unwrap();
+    }
+
+    #[test]
+    fn train_mock_tiny() {
+        train(&args(
+            "train --mock --algorithm fedbuff --fedbuff-m 3 --sats 6 --steps 24",
+        ))
+        .unwrap();
+    }
+
+    #[test]
+    fn schedule_command_plans_a_window() {
+        schedule(&args("schedule --sats 12 --i0 12 --n-max 4")).unwrap();
+    }
+
+    #[test]
+    fn config_overrides() {
+        let cfg = config_from(&args("train --algorithm sync --dist noniid --sats 20")).unwrap();
+        assert_eq!(cfg.algorithm, AlgorithmKind::Sync);
+        assert_eq!(cfg.dist, DataDist::NonIid);
+        assert_eq!(cfg.n_sats, 20);
+    }
+}

@@ -1,0 +1,13 @@
+//! High-level experiment orchestration shared by the CLI launcher, the
+//! examples and the bench harness: config → constellation → connectivity →
+//! dataset/partition → engine run.
+
+pub mod args;
+pub mod cmd;
+pub mod runner;
+
+pub use args::Args;
+pub use runner::{
+    build_partition, build_schedule, build_utility_model, run_mock_experiment,
+    run_pjrt_experiment, ExperimentOutput,
+};

@@ -1,0 +1,263 @@
+//! Experiment runner: wires config → substrates → engine, for both the
+//! mock (scheduler-level) and PJRT (full three-layer) backends.
+
+use crate::cfg::{AlgorithmKind, DataDist, ExperimentConfig};
+use crate::connectivity::{ConnectivityParams, ConnectivitySchedule};
+use crate::data::{partition_iid, partition_noniid, partition::cell_visits, Dataset, Partition, SynthConfig};
+use crate::fl::CpuAggregator;
+use crate::orbit::{planet_ground_stations, planet_labs_like, Constellation};
+use crate::rng::Rng;
+use crate::runtime::{ModelRuntime, PjrtAggregator};
+use crate::sched::{
+    generate_samples, pretrain_bank, samples_from_csv, samples_to_csv, FedSpacePlanner,
+    MockBackend, SampleBackend, SearchParams, UtilityModel,
+};
+use crate::sim::{Engine, EngineConfig, MockTrainer, PjrtTrainer, RunResult};
+use anyhow::{Context, Result};
+
+/// Everything a bench/figure needs from one run.
+pub struct ExperimentOutput {
+    pub result: RunResult,
+    pub algorithm: AlgorithmKind,
+    pub dist: DataDist,
+}
+
+/// Constellation + connectivity for a config.
+pub fn build_schedule(cfg: &ExperimentConfig) -> (Constellation, ConnectivitySchedule) {
+    let constellation = planet_labs_like(cfg.n_sats, cfg.constellation_seed);
+    let stations = planet_ground_stations();
+    let params = ConnectivityParams {
+        t0_s: cfg.t0_s,
+        min_elev_deg: cfg.min_elev_deg,
+        ..Default::default()
+    };
+    let sched = ConnectivitySchedule::compute(&constellation, &stations, cfg.n_steps, params);
+    (constellation, sched)
+}
+
+/// IID or Non-IID partition per §4.1.
+pub fn build_partition(
+    cfg: &ExperimentConfig,
+    dataset: &Dataset,
+    constellation: &Constellation,
+    rng: &mut Rng,
+) -> Partition {
+    match cfg.dist {
+        DataDist::Iid => partition_iid(dataset.train.len(), cfg.n_sats, rng),
+        DataDist::NonIid => {
+            let horizon_s = cfg.n_steps as f64 * cfg.t0_s;
+            let visits = cell_visits(constellation, horizon_s, 60.0);
+            partition_noniid(dataset, &visits, rng)
+        }
+    }
+}
+
+/// Phase 1 of FedSpace (Figure 5): pretrain → sample → fit û.
+/// Samples are cached as CSV under `cache_path` (if given) so repeated
+/// experiment sweeps refit instantly.
+pub fn build_utility_model(
+    cfg: &ExperimentConfig,
+    backend: &dyn SampleBackend,
+    cache_path: Option<&str>,
+    rng: &mut Rng,
+) -> Result<UtilityModel> {
+    let samples = if let Some(path) = cache_path.filter(|p| std::path::Path::new(p).exists()) {
+        samples_from_csv(&std::fs::read_to_string(path)?)
+            .with_context(|| format!("parsing cached utility samples {path}"))?
+    } else {
+        let rounds = (cfg.s_max * 3).max(12);
+        let bank = pretrain_bank(backend, rounds, 8, cfg.alpha, rng)?;
+        let samples =
+            generate_samples(backend, &bank, cfg.utility_samples, cfg.s_max, 16, cfg.alpha, rng)?;
+        if let Some(path) = cache_path {
+            crate::metrics::write_file(path, &samples_to_csv(&samples))?;
+        }
+        samples
+    };
+    let mut u = UtilityModel::new(&cfg.regressor)?;
+    u.fit(&samples.0, &samples.1);
+    Ok(u)
+}
+
+fn engine_cfg(cfg: &ExperimentConfig, stop_at: Option<f64>) -> EngineConfig {
+    EngineConfig {
+        algorithm: cfg.algorithm,
+        alpha: cfg.alpha,
+        fedbuff_m: cfg.fedbuff_m,
+        eval_every: cfg.eval_every,
+        days_per_step: cfg.days_per_step(),
+        stop_at_accuracy: stop_at,
+        train_duration_slots: 1,
+        seed: cfg.sim_seed,
+        i0: cfg.i0,
+    }
+}
+
+fn make_planner(
+    cfg: &ExperimentConfig,
+    utility: UtilityModel,
+) -> FedSpacePlanner {
+    FedSpacePlanner::new(
+        utility,
+        SearchParams {
+            i0: cfg.i0,
+            n_min: cfg.n_min,
+            n_max: cfg.n_max,
+            n_search: cfg.n_search,
+        },
+        cfg.sim_seed ^ 0x5EED,
+    )
+}
+
+/// Scheduler-level experiment on the analytic mock objective. Fast: used by
+/// tests, the ablation bench and quick CLI iterations.
+pub fn run_mock_experiment(cfg: &ExperimentConfig, stop_at: Option<f64>) -> Result<ExperimentOutput> {
+    let (_, sched) = build_schedule(cfg);
+    let heterogeneity = match cfg.dist {
+        DataDist::Iid => 0.1,
+        DataDist::NonIid => 0.8,
+    };
+    let trainer = MockTrainer::new(32, cfg.n_sats, heterogeneity, cfg.data_seed);
+    let mut agg = CpuAggregator;
+    let planner = if cfg.algorithm == AlgorithmKind::FedSpace {
+        let mut rng = Rng::new(cfg.sim_seed ^ 0xA11CE);
+        let backend = MockBackend::new(32, cfg.data_seed);
+        let utility = build_utility_model(cfg, &backend, None, &mut rng)?;
+        Some(make_planner(cfg, utility))
+    } else {
+        None
+    };
+    let mut engine = Engine::new(&sched, &trainer, &mut agg, engine_cfg(cfg, stop_at), planner);
+    Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
+}
+
+/// PJRT sample backend: local updates and losses through the artifacts.
+struct PjrtSampleBackend<'a> {
+    rt: &'a ModelRuntime,
+    dataset: &'a Dataset,
+    eval_samples: usize,
+    lr: f32,
+}
+
+impl SampleBackend for PjrtSampleBackend<'_> {
+    fn d(&self) -> usize {
+        self.rt.meta.d
+    }
+
+    fn init(&self, rng: &mut Rng) -> Vec<f32> {
+        self.rt.init_params(rng)
+    }
+
+    fn local_delta(&self, w: &[f32], rng: &mut Rng) -> Result<Vec<f32>> {
+        let m = &self.rt.meta;
+        let n = m.e_steps * m.batch;
+        let idx: Vec<usize> =
+            (0..n).map(|_| rng.gen_range(0, self.dataset.train.len())).collect();
+        let (xs, ys) = self.dataset.make_batch(&self.dataset.train, &idx);
+        Ok(self.rt.local_train(w, &xs, &ys, self.lr)?.0)
+    }
+
+    fn loss(&self, w: &[f32]) -> Result<f64> {
+        let m = &self.rt.meta;
+        let eb = m.eval_batch;
+        let n = self.eval_samples.min(self.dataset.val.len()) / eb * eb;
+        let mut loss_sum = 0.0f64;
+        for start in (0..n).step_by(eb) {
+            let idx: Vec<usize> = (start..start + eb).collect();
+            let (x, y) = self.dataset.make_batch(&self.dataset.val, &idx);
+            loss_sum += self.rt.eval_batch(w, &x, &y)?.0 as f64;
+        }
+        Ok(loss_sum / n as f64)
+    }
+}
+
+/// The full three-layer experiment: real dataset, PJRT local training, the
+/// Pallas aggregation artifact on the GS hot path.
+pub fn run_pjrt_experiment(
+    cfg: &ExperimentConfig,
+    eval_samples: usize,
+    stop_at: Option<f64>,
+) -> Result<ExperimentOutput> {
+    let rt = ModelRuntime::load(&cfg.artifacts_dir, &cfg.model_size)?;
+    let dataset = Dataset::generate(SynthConfig {
+        n_train: cfg.n_train,
+        n_val: cfg.n_val,
+        noise_sigma: cfg.noise_sigma,
+        seed: cfg.data_seed,
+        ..Default::default()
+    });
+    let (constellation, sched) = build_schedule(cfg);
+    let mut rng = Rng::new(cfg.sim_seed ^ 0xDA7A);
+    let partition = build_partition(cfg, &dataset, &constellation, &mut rng);
+    let trainer = PjrtTrainer::new(&rt, &dataset, &partition, cfg.lr, eval_samples);
+    let planner = if cfg.algorithm == AlgorithmKind::FedSpace {
+        let backend = PjrtSampleBackend { rt: &rt, dataset: &dataset, eval_samples, lr: cfg.lr };
+        let cache = format!(
+            "{}/utility_samples_{}.csv",
+            cfg.artifacts_dir, cfg.model_size
+        );
+        let utility = build_utility_model(cfg, &backend, Some(&cache), &mut rng)?;
+        Some(make_planner(cfg, utility))
+    } else {
+        None
+    };
+    let mut agg = PjrtAggregator { rt: &rt };
+    let mut engine = Engine::new(&sched, &trainer, &mut agg, engine_cfg(cfg, stop_at), planner);
+    Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(alg: AlgorithmKind) -> ExperimentConfig {
+        ExperimentConfig {
+            n_sats: 8,
+            n_steps: 48,
+            algorithm: alg,
+            fedbuff_m: 3,
+            n_search: 50,
+            utility_samples: 60,
+            i0: 12,
+            n_min: 2,
+            n_max: 6,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn mock_experiment_all_algorithms() {
+        for alg in [
+            AlgorithmKind::Sync,
+            AlgorithmKind::Async,
+            AlgorithmKind::FedBuff,
+            AlgorithmKind::FedSpace,
+        ] {
+            let out = run_mock_experiment(&tiny_cfg(alg), None).unwrap();
+            assert!(!out.result.trace.curve.points.is_empty(), "{alg:?}");
+        }
+    }
+
+    #[test]
+    fn noniid_partition_built_from_overflights() {
+        let cfg = ExperimentConfig {
+            n_sats: 10,
+            n_steps: 24,
+            dist: DataDist::NonIid,
+            n_train: 500,
+            ..Default::default()
+        };
+        let dataset = Dataset::generate(SynthConfig {
+            n_train: cfg.n_train,
+            n_val: 16,
+            seed: cfg.data_seed,
+            ..Default::default()
+        });
+        let (constellation, _) = build_schedule(&cfg);
+        let mut rng = Rng::new(0);
+        let p = build_partition(&cfg, &dataset, &constellation, &mut rng);
+        assert_eq!(p.n_sats(), 10);
+        assert!(p.total() <= 500);
+        assert!(p.total() > 0);
+    }
+}

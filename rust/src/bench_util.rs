@@ -1,0 +1,120 @@
+//! Micro-benchmark harness — criterion substitute (offline vendor set has
+//! no criterion). Warmup + timed iterations, reporting min/median/p95/mean.
+//!
+//! Used by every target in `benches/` (all declared `harness = false`).
+
+use std::time::Instant;
+
+/// Statistics of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min_s: f64,
+    pub median_s: f64,
+    pub p95_s: f64,
+    pub mean_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} iters={:<4} min={} median={} p95={} mean={}",
+            self.name,
+            self.iters,
+            fmt_s(self.min_s),
+            fmt_s(self.median_s),
+            fmt_s(self.p95_s),
+            fmt_s(self.mean_s),
+        )
+    }
+
+    /// ops/sec at the median.
+    pub fn throughput(&self, ops_per_iter: f64) -> f64 {
+        ops_per_iter / self.median_s
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_s(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.2}s", s)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured + `iters` measured executions.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[iters / 2];
+    let p95 = times[((iters as f64 * 0.95) as usize).min(iters - 1)];
+    let mean = times.iter().sum::<f64>() / iters as f64;
+    let stats = BenchStats {
+        name: name.to_string(),
+        iters,
+        min_s: times[0],
+        median_s: median,
+        p95_s: p95,
+        mean_s: mean,
+    };
+    println!("{}", stats.report());
+    stats
+}
+
+/// Time a single long-running closure (end-to-end bench cases).
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t = Instant::now();
+    let out = f();
+    let dt = t.elapsed().as_secs_f64();
+    println!("{:<44} {}", name, fmt_s(dt));
+    (out, dt)
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let mut n = 0u64;
+        let s = bench("noop", 2, 16, || n += 1);
+        assert_eq!(n, 18);
+        assert_eq!(s.iters, 16);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.p95_s);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert!(fmt_s(5e-9).ends_with("ns"));
+        assert!(fmt_s(5e-5).ends_with("µs"));
+        assert!(fmt_s(5e-2).ends_with("ms"));
+        assert!(fmt_s(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once("x", || 42);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+}

@@ -1,0 +1,304 @@
+//! Typed experiment configuration — defaults reproduce the paper's §4.1
+//! setup (191 satellites, 12 ground stations, T0 = 15 min, 5 days,
+//! FedBuff M = 96, FedSpace I0 = 24, N_min = 4, N_max = 8, |R| = 5000).
+
+use super::toml::{parse_toml, TomlDoc, TomlValue};
+use anyhow::{bail, Context, Result};
+
+/// Which aggregation-indicator algorithm the GS runs (§2.4, Eq. 5–7, §3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AlgorithmKind {
+    Sync,
+    Async,
+    FedBuff,
+    FedSpace,
+}
+
+impl AlgorithmKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "sync" | "synchronous" => AlgorithmKind::Sync,
+            "async" | "asynchronous" => AlgorithmKind::Async,
+            "fedbuff" => AlgorithmKind::FedBuff,
+            "fedspace" => AlgorithmKind::FedSpace,
+            other => bail!("unknown algorithm {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgorithmKind::Sync => "sync",
+            AlgorithmKind::Async => "async",
+            AlgorithmKind::FedBuff => "fedbuff",
+            AlgorithmKind::FedSpace => "fedspace",
+        }
+    }
+}
+
+/// Dataset distribution across satellites (§4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataDist {
+    Iid,
+    NonIid,
+}
+
+impl DataDist {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "iid" => DataDist::Iid,
+            "noniid" | "non-iid" | "non_iid" => DataDist::NonIid,
+            other => bail!("unknown data distribution {other:?}"),
+        })
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    // constellation / connectivity
+    pub n_sats: usize,
+    pub constellation_seed: u64,
+    pub t0_s: f64,
+    pub n_steps: usize,
+    pub min_elev_deg: f64,
+    // data
+    pub dist: DataDist,
+    pub n_train: usize,
+    pub n_val: usize,
+    pub noise_sigma: f32,
+    pub data_seed: u64,
+    // FL
+    pub algorithm: AlgorithmKind,
+    pub fedbuff_m: usize,
+    pub alpha: f64,
+    pub lr: f32,
+    pub target_accuracy: f64,
+    // FedSpace scheduler
+    pub i0: usize,
+    pub n_min: usize,
+    pub n_max: usize,
+    pub n_search: usize,
+    pub utility_samples: usize,
+    pub s_max: usize,
+    pub regressor: String,
+    // model / runtime
+    pub model_size: String,
+    pub artifacts_dir: String,
+    // simulation
+    pub sim_seed: u64,
+    pub eval_every: usize,
+    pub threads: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            n_sats: 191,
+            constellation_seed: 0,
+            t0_s: 15.0 * 60.0,
+            n_steps: 480, // 5 days at T0 = 15 min
+            min_elev_deg: 25.0,
+            dist: DataDist::Iid,
+            n_train: 19_100,
+            n_val: 2_048,
+            noise_sigma: 0.8,
+            data_seed: 2022,
+            algorithm: AlgorithmKind::FedSpace,
+            fedbuff_m: 96,
+            alpha: 0.5,
+            lr: 0.5,
+            target_accuracy: 0.40,
+            i0: 24,          // scheduler period: 6 h at T0 = 15 min
+            n_min: 4,
+            n_max: 8,
+            n_search: 5000,  // |R|
+            utility_samples: 400,
+            s_max: 8,
+            regressor: "forest".to_string(),
+            model_size: "fmow".to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            sim_seed: 7,
+            eval_every: 4,
+            threads: 0, // 0 = auto
+        }
+    }
+}
+
+macro_rules! get {
+    ($doc:ident, $section:expr, $key:expr, $conv:ident, $target:expr) => {
+        if let Some(v) = $doc.get($section).and_then(|s| s.get($key)) {
+            $target = v
+                .$conv()
+                .with_context(|| format!("[{}] {} has wrong type", $section, $key))?;
+        }
+    };
+}
+
+trait TomlConv {
+    fn to_usize(&self) -> Result<usize>;
+    fn to_u64(&self) -> Result<u64>;
+    fn to_f64v(&self) -> Result<f64>;
+    fn to_f32v(&self) -> Result<f32>;
+    fn to_string_v(&self) -> Result<String>;
+}
+
+impl TomlConv for TomlValue {
+    fn to_usize(&self) -> Result<usize> {
+        let v = self.as_int().context("expected integer")?;
+        Ok(usize::try_from(v)?)
+    }
+    fn to_u64(&self) -> Result<u64> {
+        let v = self.as_int().context("expected integer")?;
+        Ok(u64::try_from(v)?)
+    }
+    fn to_f64v(&self) -> Result<f64> {
+        self.as_float().context("expected number")
+    }
+    fn to_f32v(&self) -> Result<f32> {
+        Ok(self.as_float().context("expected number")? as f32)
+    }
+    fn to_string_v(&self) -> Result<String> {
+        Ok(self.as_str().context("expected string")?.to_string())
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML text, starting from the paper defaults.
+    pub fn from_toml_text(text: &str) -> Result<Self> {
+        let doc = parse_toml(text)?;
+        Self::from_doc(&doc)
+    }
+
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Self::from_toml_text(&text)
+    }
+
+    fn from_doc(doc: &TomlDoc) -> Result<Self> {
+        let mut c = ExperimentConfig::default();
+        get!(doc, "constellation", "n_sats", to_usize, c.n_sats);
+        get!(doc, "constellation", "seed", to_u64, c.constellation_seed);
+        get!(doc, "connectivity", "t0_s", to_f64v, c.t0_s);
+        get!(doc, "connectivity", "n_steps", to_usize, c.n_steps);
+        get!(doc, "connectivity", "min_elev_deg", to_f64v, c.min_elev_deg);
+        get!(doc, "data", "n_train", to_usize, c.n_train);
+        get!(doc, "data", "n_val", to_usize, c.n_val);
+        get!(doc, "data", "noise_sigma", to_f32v, c.noise_sigma);
+        get!(doc, "data", "seed", to_u64, c.data_seed);
+        if let Some(v) = doc.get("data").and_then(|s| s.get("dist")) {
+            c.dist = DataDist::parse(v.as_str().context("dist must be string")?)?;
+        }
+        if let Some(v) = doc.get("fl").and_then(|s| s.get("algorithm")) {
+            c.algorithm = AlgorithmKind::parse(v.as_str().context("algorithm must be string")?)?;
+        }
+        get!(doc, "fl", "fedbuff_m", to_usize, c.fedbuff_m);
+        get!(doc, "fl", "alpha", to_f64v, c.alpha);
+        get!(doc, "fl", "lr", to_f32v, c.lr);
+        get!(doc, "fl", "target_accuracy", to_f64v, c.target_accuracy);
+        get!(doc, "fedspace", "i0", to_usize, c.i0);
+        get!(doc, "fedspace", "n_min", to_usize, c.n_min);
+        get!(doc, "fedspace", "n_max", to_usize, c.n_max);
+        get!(doc, "fedspace", "n_search", to_usize, c.n_search);
+        get!(doc, "fedspace", "utility_samples", to_usize, c.utility_samples);
+        get!(doc, "fedspace", "s_max", to_usize, c.s_max);
+        get!(doc, "fedspace", "regressor", to_string_v, c.regressor);
+        get!(doc, "model", "size", to_string_v, c.model_size);
+        get!(doc, "model", "artifacts_dir", to_string_v, c.artifacts_dir);
+        get!(doc, "sim", "seed", to_u64, c.sim_seed);
+        get!(doc, "sim", "eval_every", to_usize, c.eval_every);
+        get!(doc, "sim", "threads", to_usize, c.threads);
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_sats == 0 {
+            bail!("n_sats must be > 0");
+        }
+        if self.t0_s <= 0.0 {
+            bail!("t0_s must be positive");
+        }
+        if self.n_min > self.n_max {
+            bail!("n_min > n_max");
+        }
+        if self.n_max > self.i0 {
+            bail!("n_max must be <= i0 (cannot aggregate more often than every slot)");
+        }
+        if self.fedbuff_m == 0 {
+            bail!("fedbuff_m must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.target_accuracy) {
+            bail!("target_accuracy must be in [0,1]");
+        }
+        Ok(())
+    }
+
+    /// Simulated days per time index.
+    pub fn days_per_step(&self) -> f64 {
+        self.t0_s / 86_400.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.n_sats, 191);
+        assert_eq!(c.n_steps, 480);
+        assert_eq!(c.fedbuff_m, 96);
+        assert_eq!(c.i0, 24);
+        assert_eq!((c.n_min, c.n_max), (4, 8));
+        assert_eq!(c.n_search, 5000);
+        assert!((c.t0_s - 900.0).abs() < 1e-9);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let c = ExperimentConfig::from_toml_text(
+            r#"
+            [constellation]
+            n_sats = 20
+            [fl]
+            algorithm = "fedbuff"
+            fedbuff_m = 10
+            [data]
+            dist = "noniid"
+            [model]
+            size = "small"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(c.n_sats, 20);
+        assert_eq!(c.algorithm, AlgorithmKind::FedBuff);
+        assert_eq!(c.fedbuff_m, 10);
+        assert_eq!(c.dist, DataDist::NonIid);
+        assert_eq!(c.model_size, "small");
+        // untouched default preserved
+        assert_eq!(c.i0, 24);
+    }
+
+    #[test]
+    fn rejects_invalid() {
+        assert!(ExperimentConfig::from_toml_text("[fedspace]\nn_min = 10\nn_max = 2").is_err());
+        assert!(ExperimentConfig::from_toml_text("[fl]\nalgorithm = \"sgd\"").is_err());
+        assert!(ExperimentConfig::from_toml_text("[constellation]\nn_sats = 0").is_err());
+    }
+
+    #[test]
+    fn days_per_step() {
+        let c = ExperimentConfig::default();
+        assert!((c.days_per_step() - 1.0 / 96.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn algorithm_roundtrip() {
+        for k in ["sync", "async", "fedbuff", "fedspace"] {
+            assert_eq!(AlgorithmKind::parse(k).unwrap().name(), k);
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Config system: a minimal TOML-subset parser (no `serde`/`toml` in the
+//! offline vendor set) plus the typed experiment configuration the launcher
+//! consumes.
+
+pub mod experiment;
+pub mod toml;
+
+pub use experiment::{AlgorithmKind, DataDist, ExperimentConfig};
+pub use toml::{parse_toml, TomlValue};

@@ -1,0 +1,214 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supported: `[section]` headers, `key = value` with integers, floats,
+//! booleans, double-quoted strings, and flat arrays of those; `#` comments.
+//! This covers every config file the framework ships; nested tables and
+//! datetimes are intentionally out of scope.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Str(String),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(v) => Some(*v),
+            TomlValue::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value; keys before any `[section]` land in `""`.
+pub type TomlDoc = BTreeMap<String, BTreeMap<String, TomlValue>>;
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<TomlDoc> {
+    let mut doc: TomlDoc = BTreeMap::new();
+    let mut section = String::new();
+    doc.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        if line.starts_with('[') {
+            if !line.ends_with(']') {
+                bail!("line {}: malformed section header {line:?}", lineno + 1);
+            }
+            section = line[1..line.len() - 1].trim().to_string();
+            doc.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let v = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value {value:?}", lineno + 1))?;
+        doc.get_mut(&section).unwrap().insert(key.trim().to_string(), v);
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must survive
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if s.starts_with('"') {
+        if !s.ends_with('"') || s.len() < 2 {
+            bail!("unterminated string");
+        }
+        return Ok(TomlValue::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated array");
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(TomlValue::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(TomlValue::Float(v));
+    }
+    bail!("unrecognized value: {s:?}")
+}
+
+/// Split on commas not inside quotes (arrays are flat, no nesting needed).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_all_scalar_types() {
+        let doc = parse_toml(
+            r#"
+            # top comment
+            name = "exp1"
+            [run]
+            steps = 480      # inline comment
+            lr = 0.05
+            verbose = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc[""]["name"], TomlValue::Str("exp1".into()));
+        assert_eq!(doc["run"]["steps"], TomlValue::Int(480));
+        assert_eq!(doc["run"]["lr"], TomlValue::Float(0.05));
+        assert_eq!(doc["run"]["verbose"], TomlValue::Bool(true));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let doc = parse_toml("xs = [1, 2, 3]\nnames = [\"a\", \"b,c\"]\nempty = []").unwrap();
+        assert_eq!(
+            doc[""]["xs"],
+            TomlValue::Array(vec![TomlValue::Int(1), TomlValue::Int(2), TomlValue::Int(3)])
+        );
+        assert_eq!(
+            doc[""]["names"],
+            TomlValue::Array(vec![
+                TomlValue::Str("a".into()),
+                TomlValue::Str("b,c".into())
+            ])
+        );
+        assert_eq!(doc[""]["empty"], TomlValue::Array(vec![]));
+    }
+
+    #[test]
+    fn hash_inside_string_survives() {
+        let doc = parse_toml("s = \"a#b\" # trailing").unwrap();
+        assert_eq!(doc[""]["s"], TomlValue::Str("a#b".into()));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_toml("[unclosed").is_err());
+        assert!(parse_toml("novalue").is_err());
+        assert!(parse_toml("x = @@").is_err());
+        assert!(parse_toml("s = \"open").is_err());
+    }
+
+    #[test]
+    fn accessors() {
+        assert_eq!(TomlValue::Int(3).as_float(), Some(3.0));
+        assert_eq!(TomlValue::Float(2.5).as_int(), None);
+        assert_eq!(TomlValue::Str("x".into()).as_str(), Some("x"));
+        assert_eq!(TomlValue::Bool(true).as_bool(), Some(true));
+    }
+}

@@ -1,0 +1,13 @@
+//! Connectivity sets C_i (paper Eq. 2) and their statistics (Figure 2).
+//!
+//! The GS treats all ground stations as one logical FL server: satellite k
+//! is *connected* at time index i if a link to **any** station is feasible
+//! during the window [i·T0, (i+1)·T0). Because orbits and Earth rotation are
+//! deterministic, the whole schedule C = {C_0, C_1, ...} is computable ahead
+//! of time — the key property FedSpace exploits (§3.1).
+
+pub mod schedule;
+pub mod stats;
+
+pub use schedule::{ConnectivityParams, ConnectivitySchedule};
+pub use stats::{contacts_per_day, set_sizes, ConnectivityStats};

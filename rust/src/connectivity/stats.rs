@@ -1,0 +1,96 @@
+//! Connectivity statistics — the data behind Figure 2.
+
+use super::schedule::ConnectivitySchedule;
+
+/// Summary statistics of a connectivity schedule.
+#[derive(Clone, Debug)]
+pub struct ConnectivityStats {
+    /// |C_i| per time index (Figure 2a series).
+    pub set_sizes: Vec<usize>,
+    /// n_k = contacts per satellite over the window (Figure 2b histogram).
+    pub contacts_per_sat: Vec<usize>,
+    pub max_set: usize,
+    pub min_set: usize,
+    pub mean_contacts: f64,
+}
+
+impl ConnectivityStats {
+    pub fn from_schedule(s: &ConnectivitySchedule) -> Self {
+        let set_sizes = set_sizes(s);
+        let contacts_per_sat: Vec<usize> = s.contacts.iter().map(|c| c.len()).collect();
+        let max_set = set_sizes.iter().copied().max().unwrap_or(0);
+        let min_set = set_sizes.iter().copied().min().unwrap_or(0);
+        let mean_contacts = if contacts_per_sat.is_empty() {
+            0.0
+        } else {
+            contacts_per_sat.iter().sum::<usize>() as f64 / contacts_per_sat.len() as f64
+        };
+        ConnectivityStats { set_sizes, contacts_per_sat, max_set, min_set, mean_contacts }
+    }
+
+    /// Histogram of n_k with the given bucket width.
+    pub fn contacts_histogram(&self, bucket: usize) -> Vec<(usize, usize)> {
+        assert!(bucket > 0);
+        let max = self.contacts_per_sat.iter().copied().max().unwrap_or(0);
+        let mut hist = vec![0usize; max / bucket + 1];
+        for &n in &self.contacts_per_sat {
+            hist[n / bucket] += 1;
+        }
+        hist.into_iter().enumerate().map(|(b, c)| (b * bucket, c)).collect()
+    }
+}
+
+/// |C_i| series.
+pub fn set_sizes(s: &ConnectivitySchedule) -> Vec<usize> {
+    s.sets.iter().map(|c| c.len()).collect()
+}
+
+/// n_k over the first `steps_per_day` indexes (paper: 96 with T0=15 min).
+pub fn contacts_per_day(s: &ConnectivitySchedule, steps_per_day: usize) -> Vec<usize> {
+    let lim = steps_per_day.min(s.n_steps());
+    s.contacts
+        .iter()
+        .map(|c| c.iter().take_while(|&&i| i < lim).count())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connectivity::ConnectivitySchedule;
+
+    fn sched() -> ConnectivitySchedule {
+        ConnectivitySchedule::from_sets(
+            vec![vec![0, 1], vec![2], vec![], vec![0, 1, 2], vec![1]],
+            3,
+        )
+    }
+
+    #[test]
+    fn set_sizes_correct() {
+        assert_eq!(set_sizes(&sched()), vec![2, 1, 0, 3, 1]);
+    }
+
+    #[test]
+    fn stats_extrema() {
+        let st = ConnectivityStats::from_schedule(&sched());
+        assert_eq!(st.max_set, 3);
+        assert_eq!(st.min_set, 0);
+        assert_eq!(st.contacts_per_sat, vec![2, 3, 2]);
+        assert!((st.mean_contacts - 7.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contacts_per_day_respects_limit() {
+        let n = contacts_per_day(&sched(), 3);
+        assert_eq!(n, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn histogram_sums_to_n_sats() {
+        let st = ConnectivityStats::from_schedule(&sched());
+        let h = st.contacts_histogram(1);
+        let total: usize = h.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 3);
+    }
+}

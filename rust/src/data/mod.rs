@@ -1,0 +1,18 @@
+//! Dataset substrate: synthetic fMoW-like imagery + the paper's IID /
+//! Non-IID partitioners (§4.1).
+//!
+//! Substitution (DESIGN.md §3): the real fMoW dataset (360k 224×224 images,
+//! 62 classes, geolocated) is not available offline; `synth` generates a
+//! procedurally-defined 62-class 32×32×3 dataset where every sample carries
+//! a lat/lon. Class-conditional spatial patterns make the task learnable by
+//! the frozen-extractor + dense-head model but not trivial, and classes are
+//! geographically concentrated so the UTM-zone partitioner induces the
+//! paper's Non-IID label skew.
+
+pub mod partition;
+pub mod synth;
+pub mod utm;
+
+pub use partition::{cell_visits, partition_iid, partition_noniid, Partition};
+pub use synth::{Dataset, Sample, SynthConfig};
+pub use utm::{utm_band, utm_cell, utm_zone};

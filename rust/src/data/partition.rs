@@ -1,0 +1,255 @@
+//! IID and Non-IID dataset partitioning across satellites (paper §4.1).
+
+use crate::data::synth::Dataset;
+use crate::data::utm::{utm_cell, N_CELLS};
+use crate::orbit::{subsatellite_point, Constellation};
+use crate::rng::Rng;
+
+/// Assignment of training-sample indices to satellites.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// per-satellite indices into `dataset.train`
+    pub assignments: Vec<Vec<usize>>,
+}
+
+impl Partition {
+    pub fn n_sats(&self) -> usize {
+        self.assignments.len()
+    }
+
+    /// m_k per satellite.
+    pub fn sizes(&self) -> Vec<usize> {
+        self.assignments.iter().map(|a| a.len()).collect()
+    }
+
+    /// Total assigned samples m.
+    pub fn total(&self) -> usize {
+        self.assignments.iter().map(|a| a.len()).sum()
+    }
+
+    /// Label distribution skew: mean over satellites of the fraction of the
+    /// satellite's samples in its single most frequent class. IID ≈ 1/62;
+    /// the paper's Non-IID UTM assignment pushes this far higher.
+    pub fn label_skew(&self, dataset: &Dataset) -> f64 {
+        let mut total = 0.0;
+        let mut counted = 0usize;
+        for a in &self.assignments {
+            if a.is_empty() {
+                continue;
+            }
+            let mut counts = vec![0usize; dataset.cfg.num_classes];
+            for &i in a {
+                counts[dataset.train[i].class as usize] += 1;
+            }
+            total += *counts.iter().max().unwrap() as f64 / a.len() as f64;
+            counted += 1;
+        }
+        if counted == 0 {
+            0.0
+        } else {
+            total / counted as f64
+        }
+    }
+}
+
+/// IID: shuffle and split the train set uniformly across K satellites.
+pub fn partition_iid(n_samples: usize, n_sats: usize, rng: &mut Rng) -> Partition {
+    let mut idx: Vec<usize> = (0..n_samples).collect();
+    rng.shuffle(&mut idx);
+    let mut assignments = vec![Vec::new(); n_sats];
+    for (j, i) in idx.into_iter().enumerate() {
+        assignments[j % n_sats].push(i);
+    }
+    Partition { assignments }
+}
+
+/// UTM cells a satellite's subsatellite track crosses during the simulation
+/// window, with multiplicity (one count per `sample_dt_s` of overflight).
+pub fn cell_visits(
+    constellation: &Constellation,
+    horizon_s: f64,
+    sample_dt_s: f64,
+) -> Vec<Vec<usize>> {
+    constellation
+        .orbits
+        .iter()
+        .map(|orbit| {
+            let n = (horizon_s / sample_dt_s) as usize;
+            let mut counts = vec![0usize; N_CELLS];
+            for s in 0..n {
+                let (lat, lon) = subsatellite_point(orbit, s as f64 * sample_dt_s);
+                counts[utm_cell(lat, lon)] += 1;
+            }
+            counts
+        })
+        .collect()
+}
+
+/// Non-IID (paper §4.1): partition samples by UTM cell; within each cell,
+/// assign randomly across the satellites whose trajectory passes the cell
+/// during the window, proportionally to their number of visits.
+///
+/// Satellites that overfly no sampled cell receive nothing (they idle in
+/// the FL process — handled by the simulation engine). The latitude-band
+/// dimension is what differentiates trajectories: ISS-inclination
+/// satellites never visit polar bands while SSO satellites cross them every
+/// orbit, which skews both labels and m_k exactly as the paper describes.
+pub fn partition_noniid(
+    dataset: &Dataset,
+    visits: &[Vec<usize>],
+    rng: &mut Rng,
+) -> Partition {
+    let n_sats = visits.len();
+    let mut assignments = vec![Vec::new(); n_sats];
+    // group train indices by cell
+    let mut by_cell: Vec<Vec<usize>> = vec![Vec::new(); N_CELLS];
+    for (i, s) in dataset.train.iter().enumerate() {
+        by_cell[s.utm_cell()].push(i);
+    }
+    for (cell, samples) in by_cell.iter().enumerate() {
+        if samples.is_empty() {
+            continue;
+        }
+        let weights: Vec<f64> = visits.iter().map(|v| v[cell] as f64).collect();
+        let total: f64 = weights.iter().sum();
+        if total == 0.0 {
+            // nobody overflies this cell in the window: its imagery is
+            // never captured — drop it, as a real constellation would.
+            continue;
+        }
+        for &i in samples {
+            assignments[rng.choose_weighted(&weights)].push(i);
+        }
+    }
+    Partition { assignments }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthConfig;
+    use crate::orbit::planet_labs_like;
+
+    fn dataset() -> Dataset {
+        Dataset::generate(SynthConfig { n_train: 1000, n_val: 10, ..Default::default() })
+    }
+
+    #[test]
+    fn iid_covers_all_samples_evenly() {
+        let mut rng = Rng::new(0);
+        let p = partition_iid(1000, 16, &mut rng);
+        assert_eq!(p.total(), 1000);
+        let sizes = p.sizes();
+        assert!(sizes.iter().all(|&s| s == 62 || s == 63), "{sizes:?}");
+        // no duplicates
+        let mut all: Vec<usize> = p.assignments.concat();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), 1000);
+    }
+
+    #[test]
+    fn iid_label_skew_near_uniform() {
+        let d = dataset();
+        let mut rng = Rng::new(1);
+        let p = partition_iid(d.train.len(), 10, &mut rng);
+        let skew = p.label_skew(&d);
+        assert!(skew < 0.10, "IID skew={skew}");
+    }
+
+    #[test]
+    fn cell_visits_counts_positive() {
+        let c = planet_labs_like(5, 0);
+        let v = cell_visits(&c, 6.0 * 3600.0, 60.0);
+        assert_eq!(v.len(), 5);
+        for counts in &v {
+            let total: usize = counts.iter().sum();
+            assert_eq!(total, (6.0 * 3600.0 / 60.0) as usize);
+        }
+    }
+
+    #[test]
+    fn low_inclination_satellites_never_visit_polar_cells() {
+        let c = planet_labs_like(30, 0);
+        let v = cell_visits(&c, 12.0 * 3600.0, 60.0);
+        for (orbit, counts) in c.orbits.iter().zip(v.iter()) {
+            if orbit.inc.to_degrees() < 60.0 {
+                // bands 17+ start at 56°N — out of reach at 51.6° inclination
+                for zone in 0..60 {
+                    for band in 18..crate::data::utm::N_BANDS {
+                        assert_eq!(counts[zone * crate::data::utm::N_BANDS + band], 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn noniid_assigns_only_to_visitors() {
+        let d = dataset();
+        // 3 satellites with hand-crafted visits: sat 0 visits cells 0..600,
+        // sat 1 cells 600..1200, sat 2 nothing.
+        let mut visits = vec![vec![0usize; N_CELLS]; 3];
+        for c in 0..600 {
+            visits[0][c] = 5;
+        }
+        for c in 600..N_CELLS {
+            visits[1][c] = 5;
+        }
+        let mut rng = Rng::new(2);
+        let p = partition_noniid(&d, &visits, &mut rng);
+        assert!(p.assignments[2].is_empty());
+        for &i in &p.assignments[0] {
+            assert!(d.train[i].utm_cell() < 600);
+        }
+        for &i in &p.assignments[1] {
+            assert!(d.train[i].utm_cell() >= 600);
+        }
+    }
+
+    #[test]
+    fn noniid_more_skewed_than_iid() {
+        let d = dataset();
+        let c = planet_labs_like(30, 0);
+        let v = cell_visits(&c, 24.0 * 3600.0, 120.0);
+        let mut rng = Rng::new(3);
+        let pn = partition_noniid(&d, &v, &mut rng);
+        let pi = partition_iid(d.train.len(), 30, &mut rng);
+        assert!(
+            pn.label_skew(&d) > pi.label_skew(&d),
+            "noniid={} iid={}",
+            pn.label_skew(&d),
+            pi.label_skew(&d)
+        );
+    }
+
+    #[test]
+    fn noniid_heterogeneous_sample_counts() {
+        // the paper: Non-IID "incurs ... heterogeneity of number of samples"
+        let d = dataset();
+        let c = planet_labs_like(30, 0);
+        let v = cell_visits(&c, 24.0 * 3600.0, 120.0);
+        let mut rng = Rng::new(4);
+        let p = partition_noniid(&d, &v, &mut rng);
+        let sizes = p.sizes();
+        let max = *sizes.iter().max().unwrap();
+        let min = *sizes.iter().min().unwrap();
+        assert!(max > min, "sizes unexpectedly uniform: {sizes:?}");
+    }
+
+    #[test]
+    fn noniid_proportional_to_visits() {
+        let d = dataset();
+        // two sats both visit every cell, one 3x more often
+        let mut visits = vec![vec![0usize; N_CELLS]; 2];
+        for c in 0..N_CELLS {
+            visits[0][c] = 1;
+            visits[1][c] = 3;
+        }
+        let mut rng = Rng::new(4);
+        let p = partition_noniid(&d, &visits, &mut rng);
+        let (a, b) = (p.assignments[0].len() as f64, p.assignments[1].len() as f64);
+        let ratio = b / a;
+        assert!((2.0..4.5).contains(&ratio), "ratio={ratio}");
+    }
+}

@@ -1,0 +1,291 @@
+//! Synthetic fMoW-like dataset (DESIGN.md §3 Substitutions).
+//!
+//! Every sample is defined by compact metadata (class, lat/lon, noise seed);
+//! pixels are materialized on demand so a 360k-sample dataset costs MBs, not
+//! GBs — mirroring how real satellite imagery stays on the satellite until
+//! batched into training.
+//!
+//! Class-conditional structure: each class owns a 2-D sinusoidal texture
+//! (frequency pair + per-channel phase + color mean) drawn from a
+//! class-seeded PRNG. The frozen patch-embedding + dense head of the L2
+//! model separates these textures well above chance but per-sample Gaussian
+//! noise keeps accuracy climbing gradually, like the paper's fMoW curves.
+//! Geography: each class is concentrated in a few "home" UTM zones, so the
+//! Non-IID partitioner induces label skew exactly as the paper describes.
+
+use crate::data::utm::{utm_cell, N_BANDS};
+use crate::rng::Rng;
+
+pub const IMG_H: usize = 32;
+pub const IMG_W: usize = 32;
+pub const IMG_C: usize = 3;
+pub const IMG_DIM: usize = IMG_H * IMG_W * IMG_C;
+pub const NUM_CLASSES: usize = 62;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct SynthConfig {
+    pub n_train: usize,
+    pub n_val: usize,
+    pub num_classes: usize,
+    /// Per-pixel Gaussian noise std (task difficulty knob).
+    pub noise_sigma: f32,
+    /// Home UTM zones per class (geographic concentration).
+    pub home_zones_per_class: usize,
+    pub seed: u64,
+}
+
+impl Default for SynthConfig {
+    fn default() -> Self {
+        SynthConfig {
+            n_train: 19_100, // 100 per satellite at K=191 (scaled fMoW)
+            n_val: 2_048,
+            num_classes: NUM_CLASSES,
+            noise_sigma: 0.8,
+            home_zones_per_class: 3,
+            seed: 2022,
+        }
+    }
+}
+
+/// Sample metadata; pixels are derived, not stored.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    pub class: u16,
+    pub lat_deg: f32,
+    pub lon_deg: f32,
+    pub noise_seed: u64,
+}
+
+impl Sample {
+    /// 2-D UTM cell (longitude zone × latitude band) — the Non-IID key.
+    pub fn utm_cell(&self) -> usize {
+        utm_cell(self.lat_deg as f64, self.lon_deg as f64)
+    }
+}
+
+/// Per-class texture parameters (deterministic from the dataset seed).
+#[derive(Clone, Debug)]
+struct ClassPattern {
+    fx: f32,
+    fy: f32,
+    phase: [f32; IMG_C],
+    mean: [f32; IMG_C],
+    amp: f32,
+    /// (zone 1..=60, band 0..N_BANDS) cells where this class occurs
+    home_cells: Vec<(usize, usize)>,
+}
+
+/// The synthetic dataset: train + validation splits.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub cfg: SynthConfig,
+    pub train: Vec<Sample>,
+    pub val: Vec<Sample>,
+    patterns: Vec<ClassPattern>,
+}
+
+impl Dataset {
+    pub fn generate(cfg: SynthConfig) -> Self {
+        assert!(cfg.num_classes <= NUM_CLASSES);
+        let mut rng = Rng::new(cfg.seed);
+        let patterns: Vec<ClassPattern> = (0..cfg.num_classes)
+            .map(|c| Self::class_pattern(c, &mut rng, &cfg))
+            .collect();
+        let gen_split = |n: usize, rng: &mut Rng| -> Vec<Sample> {
+            (0..n)
+                .map(|_| {
+                    let class = rng.gen_range(0, cfg.num_classes) as u16;
+                    let p = &patterns[class as usize];
+                    // place inside one of the class's home cells
+                    let (zone, band) = p.home_cells[rng.gen_range(0, p.home_cells.len())];
+                    let zone_lon0 = -180.0 + 6.0 * (zone as f64 - 1.0);
+                    let lon = zone_lon0 + rng.gen_f64(0.0, 6.0);
+                    let band_lat0 = -80.0 + 8.0 * band as f64;
+                    let lat = (band_lat0 + rng.gen_f64(0.0, 8.0)).clamp(-55.0, 70.0);
+                    Sample {
+                        class,
+                        lat_deg: lat as f32,
+                        lon_deg: lon as f32,
+                        noise_seed: rng.next_u64(),
+                    }
+                })
+                .collect()
+        };
+        let train = gen_split(cfg.n_train, &mut rng);
+        let val = gen_split(cfg.n_val, &mut rng);
+        Dataset { cfg, train, val, patterns }
+    }
+
+    fn class_pattern(c: usize, master: &mut Rng, cfg: &SynthConfig) -> ClassPattern {
+        let mut r = master.split(c as u64 + 1);
+        ClassPattern {
+            fx: 1.0 + 7.0 * r.next_f32(),
+            fy: 1.0 + 7.0 * r.next_f32(),
+            phase: [
+                r.gen_f64(0.0, std::f64::consts::TAU) as f32,
+                r.gen_f64(0.0, std::f64::consts::TAU) as f32,
+                r.gen_f64(0.0, std::f64::consts::TAU) as f32,
+            ],
+            mean: [
+                r.gen_f64(-0.5, 0.5) as f32,
+                r.gen_f64(-0.5, 0.5) as f32,
+                r.gen_f64(-0.5, 0.5) as f32,
+            ],
+            amp: 0.6 + 0.4 * r.next_f32(),
+            home_cells: (0..cfg.home_zones_per_class)
+                .map(|_| {
+                    // bands 3..=18 keep samples within the populated
+                    // latitudes (−55°..70°) like fMoW's footprint
+                    let zone = r.gen_range(1, 61);
+                    let band = r.gen_range(3, (N_BANDS - 1).min(18) + 1);
+                    (zone, band)
+                })
+                .collect(),
+        }
+    }
+
+    /// Materialize pixels for one sample: flat [IMG_DIM] f32 row-major
+    /// (h, w, c) — matches the L2 model's `_patchify` layout.
+    pub fn materialize(&self, s: &Sample) -> Vec<f32> {
+        let p = &self.patterns[s.class as usize];
+        let mut noise = Rng::new(s.noise_seed);
+        let mut img = vec![0f32; IMG_DIM];
+        let tau = std::f64::consts::TAU as f32;
+        for i in 0..IMG_H {
+            for j in 0..IMG_W {
+                let arg = tau * (p.fx * i as f32 / IMG_H as f32 + p.fy * j as f32 / IMG_W as f32);
+                for ch in 0..IMG_C {
+                    let v = p.mean[ch]
+                        + p.amp * (arg + p.phase[ch]).sin()
+                        + noise.normal_f32(0.0, self.cfg.noise_sigma);
+                    img[(i * IMG_W + j) * IMG_C + ch] = v;
+                }
+            }
+        }
+        img
+    }
+
+    /// Build a flat batch (xs [n*IMG_DIM], ys [n] as f32 class ids).
+    pub fn make_batch(&self, split: &[Sample], indices: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let mut xs = Vec::with_capacity(indices.len() * IMG_DIM);
+        let mut ys = Vec::with_capacity(indices.len());
+        for &i in indices {
+            let s = &split[i];
+            xs.extend_from_slice(&self.materialize(s));
+            ys.push(s.class as f32);
+        }
+        (xs, ys)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset::generate(SynthConfig {
+            n_train: 200,
+            n_val: 50,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn split_sizes() {
+        let d = tiny();
+        assert_eq!(d.train.len(), 200);
+        assert_eq!(d.val.len(), 50);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = tiny();
+        let b = tiny();
+        for (x, y) in a.train.iter().zip(b.train.iter()) {
+            assert_eq!(x.class, y.class);
+            assert_eq!(x.noise_seed, y.noise_seed);
+        }
+        assert_eq!(a.materialize(&a.train[0]), b.materialize(&b.train[0]));
+    }
+
+    #[test]
+    fn classes_in_range() {
+        let d = tiny();
+        assert!(d.train.iter().all(|s| (s.class as usize) < d.cfg.num_classes));
+    }
+
+    #[test]
+    fn images_have_expected_shape_and_scale() {
+        let d = tiny();
+        let img = d.materialize(&d.train[0]);
+        assert_eq!(img.len(), IMG_DIM);
+        let mean: f32 = img.iter().sum::<f32>() / IMG_DIM as f32;
+        assert!(mean.abs() < 2.0, "mean={mean}");
+        assert!(img.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn same_class_images_correlated_more_than_cross_class() {
+        let d = Dataset::generate(SynthConfig {
+            n_train: 500,
+            n_val: 10,
+            noise_sigma: 0.3,
+            ..Default::default()
+        });
+        // pick two samples of one class and one of another
+        let a = d.train.iter().position(|s| s.class == 0).unwrap();
+        let b = d.train.iter().rposition(|s| s.class == 0).unwrap();
+        let c = d.train.iter().position(|s| s.class == 1).unwrap();
+        assert_ne!(a, b);
+        let corr = |x: &[f32], y: &[f32]| -> f32 {
+            let n = x.len() as f32;
+            let mx = x.iter().sum::<f32>() / n;
+            let my = y.iter().sum::<f32>() / n;
+            let cov: f32 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+            let vx: f32 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+            let vy: f32 = y.iter().map(|b| (b - my) * (b - my)).sum();
+            cov / (vx.sqrt() * vy.sqrt())
+        };
+        let ia = d.materialize(&d.train[a]);
+        let ib = d.materialize(&d.train[b]);
+        let ic = d.materialize(&d.train[c]);
+        assert!(corr(&ia, &ib) > corr(&ia, &ic) + 0.1);
+    }
+
+    #[test]
+    fn geography_concentrated_in_home_cells() {
+        let d = Dataset::generate(SynthConfig {
+            n_train: 2000,
+            n_val: 10,
+            ..Default::default()
+        });
+        // each class's samples occupy at most home_zones_per_class distinct
+        // cells (clamping at ±55/70 can merge edge cells, never add)
+        for c in 0..5u16 {
+            let mut cells: Vec<usize> = d
+                .train
+                .iter()
+                .filter(|s| s.class == c)
+                .map(|s| s.utm_cell())
+                .collect();
+            cells.sort_unstable();
+            cells.dedup();
+            assert!(
+                !cells.is_empty() && cells.len() <= d.cfg.home_zones_per_class,
+                "class {c} spread over {} cells",
+                cells.len()
+            );
+        }
+    }
+
+    #[test]
+    fn batch_layout() {
+        let d = tiny();
+        let (xs, ys) = d.make_batch(&d.train, &[0, 3, 5]);
+        assert_eq!(xs.len(), 3 * IMG_DIM);
+        assert_eq!(ys.len(), 3);
+        assert_eq!(ys[1], d.train[3].class as f32);
+        assert_eq!(xs[..IMG_DIM], d.materialize(&d.train[0])[..]);
+    }
+}

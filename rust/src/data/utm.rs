@@ -1,0 +1,93 @@
+//! UTM zones/cells — the paper's Non-IID partition key (§4.1).
+//!
+//! fMoW metadata carries full UTM designators (longitude zone 1–60 plus the
+//! 8° latitude band letter, e.g. "18N"); the paper partitions by that key.
+//! We use the same 2-D cell: longitude zone × latitude band. The band
+//! dimension is what makes the partition *trajectory-driven*: a 51.6°-
+//! inclination (ISS-deployed) satellite never overflies polar bands, while
+//! sun-synchronous satellites cover them every orbit.
+
+/// Number of longitude zones.
+pub const N_ZONES: usize = 60;
+/// Number of 8° latitude bands (UTM bands C..X span −80°..+84°).
+pub const N_BANDS: usize = 20;
+/// Total partition cells.
+pub const N_CELLS: usize = N_ZONES * N_BANDS;
+
+/// UTM longitude zone (1..=60) for a longitude in degrees.
+pub fn utm_zone(lon_deg: f64) -> usize {
+    let lon = ((lon_deg + 180.0).rem_euclid(360.0)) - 180.0;
+    let zone = ((lon + 180.0) / 6.0).floor() as usize + 1;
+    zone.min(60)
+}
+
+/// Latitude band index (0..N_BANDS) for a latitude in degrees; latitudes
+/// outside [−80, 84] are clamped into the edge bands like UTM's C/X.
+pub fn utm_band(lat_deg: f64) -> usize {
+    let lat = lat_deg.clamp(-80.0, 83.999);
+    (((lat + 80.0) / 8.0).floor() as usize).min(N_BANDS - 1)
+}
+
+/// Flat cell id (0..N_CELLS) combining zone and band.
+pub fn utm_cell(lat_deg: f64, lon_deg: f64) -> usize {
+    (utm_zone(lon_deg) - 1) * N_BANDS + utm_band(lat_deg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zone_bounds() {
+        assert_eq!(utm_zone(-180.0), 1);
+        assert_eq!(utm_zone(-174.001), 1);
+        assert_eq!(utm_zone(-174.0), 2);
+        assert_eq!(utm_zone(0.0), 31);
+        assert_eq!(utm_zone(179.999), 60);
+    }
+
+    #[test]
+    fn wraps_out_of_range_longitudes() {
+        assert_eq!(utm_zone(185.0), utm_zone(-175.0));
+        assert_eq!(utm_zone(-190.0), utm_zone(170.0));
+        assert_eq!(utm_zone(360.0), utm_zone(0.0));
+    }
+
+    #[test]
+    fn all_zones_reachable() {
+        let mut seen = vec![false; 61];
+        for i in 0..360 {
+            let lon = -180.0 + i as f64 + 0.5;
+            seen[utm_zone(lon)] = true;
+        }
+        assert!(seen[1..=60].iter().all(|&s| s));
+    }
+
+    #[test]
+    fn band_bounds() {
+        assert_eq!(utm_band(-90.0), 0);
+        assert_eq!(utm_band(-80.0), 0);
+        assert_eq!(utm_band(-72.1), 0);
+        assert_eq!(utm_band(-72.0), 1);
+        assert_eq!(utm_band(0.0), 10);
+        assert_eq!(utm_band(83.9), N_BANDS - 1);
+        assert_eq!(utm_band(90.0), N_BANDS - 1);
+    }
+
+    #[test]
+    fn cells_unique_per_zone_band() {
+        let a = utm_cell(10.0, 0.0);
+        let b = utm_cell(10.0, 7.0);
+        let c = utm_cell(30.0, 0.0);
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+        assert!(a < N_CELLS && b < N_CELLS && c < N_CELLS);
+    }
+
+    #[test]
+    fn polar_cells_unreachable_by_low_inclination() {
+        // a satellite capped at |lat| <= 52 can never produce a band >= 17
+        assert!(utm_band(52.0) < 17);
+        assert!(utm_band(70.0) >= 17);
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal work-stealing-free thread pool — substrate built from scratch
+//! (no `tokio`/`rayon` in the offline vendor set).
+//!
+//! The coordinator uses it to run satellite local-training jobs in parallel
+//! across PJRT executions and to parallelize the scheduler's random search.
+//! Jobs are `FnOnce` closures; [`ThreadPool::scope_map`] provides the only
+//! pattern the framework needs: map a function over items in parallel and
+//! collect results in input order.
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+enum Msg {
+    Run(Job),
+    Shutdown,
+}
+
+/// Fixed-size thread pool.
+pub struct ThreadPool {
+    tx: mpsc::Sender<Msg>,
+    workers: Vec<thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool with `size` worker threads (clamped to >= 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (0..size)
+            .map(|_| {
+                let rx = Arc::clone(&rx);
+                thread::spawn(move || loop {
+                    let msg = rx.lock().unwrap().recv();
+                    match msg {
+                        Ok(Msg::Run(job)) => job(),
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                })
+            })
+            .collect();
+        ThreadPool { tx, workers, size }
+    }
+
+    /// Pool sized to the machine's available parallelism.
+    pub fn with_default_size() -> Self {
+        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Number of worker threads.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a fire-and-forget job.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.tx.send(Msg::Run(Box::new(f))).expect("pool shut down");
+    }
+
+    /// Apply `f` to every item in parallel, returning results in input order.
+    ///
+    /// Blocks until every item has been processed. `f` must be cloneable
+    /// across threads (wrap shared state in `Arc`).
+    pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let rtx = rtx.clone();
+            self.execute(move || {
+                let r = f(item);
+                // Receiver outlives all jobs inside this call; ignore failure
+                // only if the caller panicked.
+                let _ = rtx.send((i, r));
+            });
+        }
+        drop(rtx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for _ in 0..n {
+            let (i, r) = rrx.recv().expect("worker panicked");
+            out[i] = Some(r);
+        }
+        out.into_iter().map(|r| r.unwrap()).collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(Msg::Shutdown);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn scope_map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.scope_map((0..100).collect(), |x: usize| x * x);
+        assert_eq!(out, (0..100).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn all_jobs_run() {
+        let pool = ThreadPool::new(3);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c2 = Arc::clone(&counter);
+        let _ = pool.scope_map((0..50).collect::<Vec<usize>>(), move |_| {
+            c2.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.scope_map(Vec::<usize>::new(), |x| x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let out = pool.scope_map(vec![3usize, 1, 2], |x| x + 1);
+        assert_eq!(out, vec![4, 2, 3]);
+    }
+}

@@ -1,0 +1,149 @@
+//! Aggregation-indicator policies a^i (paper §2.4 Eqs. 5–7, §3 FedSpace).
+
+use super::buffer::Buffer;
+
+/// Decides a^i ∈ {0, 1} at each time index (Algorithm 1's SCHEDULER).
+pub trait AggregationPolicy: Send {
+    /// `i` — time index; `connected` — C_i; `buffer` — B_i (already holding
+    /// this slot's uploads). Returns true to aggregate now.
+    fn decide(&mut self, i: usize, connected: &[usize], buffer: &Buffer) -> bool;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Synchronous FL (Eq. 5): wait for every satellite's gradient.
+pub struct SyncPolicy {
+    pub n_sats: usize,
+}
+
+impl AggregationPolicy for SyncPolicy {
+    fn decide(&mut self, _i: usize, _connected: &[usize], buffer: &Buffer) -> bool {
+        buffer.n_sats() >= self.n_sats
+    }
+
+    fn name(&self) -> &'static str {
+        "sync"
+    }
+}
+
+/// Asynchronous FL (Eq. 6): aggregate whenever any gradient arrived.
+pub struct AsyncPolicy;
+
+impl AggregationPolicy for AsyncPolicy {
+    fn decide(&mut self, _i: usize, _connected: &[usize], buffer: &Buffer) -> bool {
+        !buffer.is_empty()
+    }
+
+    fn name(&self) -> &'static str {
+        "async"
+    }
+}
+
+/// FedBuff (Eq. 7, Nguyen et al. 2021): aggregate when |R_i| ≥ M.
+pub struct FedBuffPolicy {
+    pub m: usize,
+}
+
+impl AggregationPolicy for FedBuffPolicy {
+    fn decide(&mut self, _i: usize, _connected: &[usize], buffer: &Buffer) -> bool {
+        buffer.n_sats() >= self.m
+    }
+
+    fn name(&self) -> &'static str {
+        "fedbuff"
+    }
+}
+
+/// FedSpace: consume a precomputed aggregation vector a^{i,i+I0} (Eq. 8).
+///
+/// The schedule itself is produced by `sched::planner` every I0 slots; this
+/// policy only plays it back, skipping aggregation when the buffer is empty
+/// (aggregating nothing is a no-op that would still burn a round index).
+pub struct ScheduledPolicy {
+    /// absolute time index → a^i; extended window-by-window by the planner
+    schedule: Vec<bool>,
+}
+
+impl ScheduledPolicy {
+    pub fn new() -> Self {
+        ScheduledPolicy { schedule: Vec::new() }
+    }
+
+    /// Append the next window's schedule (called by the planner at window
+    /// boundaries). `window` holds a^l for l ∈ [schedule.len(), ..).
+    pub fn extend(&mut self, window: &[bool]) {
+        self.schedule.extend_from_slice(window);
+    }
+
+    /// How many slots are scheduled so far.
+    pub fn horizon(&self) -> usize {
+        self.schedule.len()
+    }
+}
+
+impl Default for ScheduledPolicy {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AggregationPolicy for ScheduledPolicy {
+    fn decide(&mut self, i: usize, _connected: &[usize], buffer: &Buffer) -> bool {
+        let planned = self.schedule.get(i).copied().unwrap_or(false);
+        planned && !buffer.is_empty()
+    }
+
+    fn name(&self) -> &'static str {
+        "fedspace"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::buffer::GradientEntry;
+
+    fn buffer_with(sats: &[usize]) -> Buffer {
+        let mut b = Buffer::new();
+        for &s in sats {
+            b.push(GradientEntry { sat: s, staleness: 0, grad: vec![], n_samples: 1 });
+        }
+        b
+    }
+
+    #[test]
+    fn sync_waits_for_all() {
+        let mut p = SyncPolicy { n_sats: 3 };
+        assert!(!p.decide(0, &[], &buffer_with(&[0, 1])));
+        assert!(p.decide(0, &[], &buffer_with(&[0, 1, 2])));
+    }
+
+    #[test]
+    fn async_fires_on_any() {
+        let mut p = AsyncPolicy;
+        assert!(!p.decide(0, &[], &Buffer::new()));
+        assert!(p.decide(0, &[], &buffer_with(&[5])));
+    }
+
+    #[test]
+    fn fedbuff_threshold_distinct_sats() {
+        let mut p = FedBuffPolicy { m: 2 };
+        assert!(!p.decide(0, &[], &buffer_with(&[1])));
+        // same satellite twice still counts once
+        assert!(!p.decide(0, &[], &buffer_with(&[1, 1])));
+        assert!(p.decide(0, &[], &buffer_with(&[1, 2])));
+    }
+
+    #[test]
+    fn scheduled_plays_back_and_skips_empty() {
+        let mut p = ScheduledPolicy::new();
+        p.extend(&[false, true, true]);
+        assert_eq!(p.horizon(), 3);
+        assert!(!p.decide(0, &[], &buffer_with(&[0])));
+        assert!(p.decide(1, &[], &buffer_with(&[0])));
+        // planned but empty buffer -> no-op
+        assert!(!p.decide(2, &[], &Buffer::new()));
+        // beyond horizon -> false
+        assert!(!p.decide(7, &[], &buffer_with(&[0])));
+    }
+}

@@ -1,0 +1,99 @@
+//! The GS gradient buffer B_i of Algorithm 1.
+
+use std::collections::BTreeSet;
+
+/// One buffered local update (g_k, s_k). Staleness is fixed at receive time
+/// (Algorithm 1: s_k = i_g − i_{g,k} with the *current* i_g).
+#[derive(Clone, Debug)]
+pub struct GradientEntry {
+    pub sat: usize,
+    pub staleness: usize,
+    /// flat local update g_k = w_k^E − w_k^0
+    pub grad: Vec<f32>,
+    /// number of local samples m_k (available for size-weighted variants)
+    pub n_samples: usize,
+}
+
+/// B_i plus the contributing-satellite index set R_i.
+#[derive(Clone, Debug, Default)]
+pub struct Buffer {
+    entries: Vec<GradientEntry>,
+    sats: BTreeSet<usize>,
+}
+
+impl Buffer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Receive (g_k, i_{g,k}) from satellite k (Algorithm 1 receive step).
+    pub fn push(&mut self, entry: GradientEntry) {
+        self.sats.insert(entry.sat);
+        self.entries.push(entry);
+    }
+
+    /// |R_i|: number of distinct satellites with buffered gradients.
+    pub fn n_sats(&self) -> usize {
+        self.sats.len()
+    }
+
+    /// Number of buffered gradients (≥ n_sats if a satellite re-uploads).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[GradientEntry] {
+        &self.entries
+    }
+
+    pub fn stalenesses(&self) -> Vec<usize> {
+        self.entries.iter().map(|e| e.staleness).collect()
+    }
+
+    /// Drain for aggregation (Algorithm 1: B_{i+1} ← ∅, R_{i+1} ← ∅).
+    pub fn drain(&mut self) -> Vec<GradientEntry> {
+        self.sats.clear();
+        std::mem::take(&mut self.entries)
+    }
+
+    /// R_i as a sorted vec (for policies / logging).
+    pub fn sat_set(&self) -> Vec<usize> {
+        self.sats.iter().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(sat: usize, s: usize) -> GradientEntry {
+        GradientEntry { sat, staleness: s, grad: vec![0.0; 4], n_samples: 10 }
+    }
+
+    #[test]
+    fn push_and_counts() {
+        let mut b = Buffer::new();
+        assert!(b.is_empty());
+        b.push(entry(3, 0));
+        b.push(entry(5, 1));
+        b.push(entry(3, 2)); // same satellite twice
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.n_sats(), 2);
+        assert_eq!(b.sat_set(), vec![3, 5]);
+        assert_eq!(b.stalenesses(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn drain_resets() {
+        let mut b = Buffer::new();
+        b.push(entry(1, 0));
+        let drained = b.drain();
+        assert_eq!(drained.len(), 1);
+        assert!(b.is_empty());
+        assert_eq!(b.n_sats(), 0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Satellite-side FL client state machine (paper §2.3, Eq. 3).
+//!
+//! Protocol per contact (Appendix A's four steps):
+//!   1. if a trained local update is pending, upload (g_k, i_{g,k});
+//!   2. GS buffers it (staleness fixed there) and may aggregate;
+//!   3. GS sends (w^{i+1}, i_g) if this satellite doesn't hold that version;
+//!   4. on receive, the satellite starts E local SGD steps.
+//!
+//! Local training itself is delegated to the simulation engine's trainer
+//! backend (PJRT artifact or mock), so this module is pure state.
+
+/// Training lifecycle of one satellite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SatPhase {
+    /// never received a global model yet
+    Cold,
+    /// training on `base_round`; update ready at `ready_at`
+    Training,
+    /// local update computed, waiting for the next contact to upload
+    HasUpdate,
+    /// uploaded; waiting to receive a fresh global model
+    AwaitingModel,
+}
+
+/// One satellite's FL state.
+#[derive(Clone, Debug)]
+pub struct SatClient {
+    pub id: usize,
+    pub phase: SatPhase,
+    /// i_{g,k}: round index of the model the pending update is based on
+    pub base_round: usize,
+    /// version of the global model this satellite currently holds
+    pub held_version: Option<usize>,
+    /// time index at which local training completes
+    pub ready_at: usize,
+    /// pending local update g_k (set by the trainer backend)
+    pub pending: Option<Vec<f32>>,
+    /// m_k
+    pub n_samples: usize,
+}
+
+impl SatClient {
+    pub fn new(id: usize, n_samples: usize) -> Self {
+        SatClient {
+            id,
+            phase: SatPhase::Cold,
+            base_round: 0,
+            held_version: None,
+            ready_at: 0,
+            pending: None,
+            n_samples,
+        }
+    }
+
+    /// Does this satellite have an update to send at time index `i`?
+    pub fn can_upload(&self, i: usize) -> bool {
+        matches!(self.phase, SatPhase::HasUpdate | SatPhase::Training)
+            && self.pending.is_some()
+            && self.ready_at <= i
+    }
+
+    /// Take the pending update for upload. Returns (g_k, i_{g,k}).
+    pub fn upload(&mut self, i: usize) -> (Vec<f32>, usize) {
+        assert!(self.can_upload(i), "upload without pending update");
+        let g = self.pending.take().expect("pending update");
+        self.phase = SatPhase::AwaitingModel;
+        (g, self.base_round)
+    }
+
+    /// Would receiving (w, version) at this contact start new training?
+    /// Per the protocol the GS re-sends only unseen versions; a satellite
+    /// mid-training ignores broadcasts (single-core OBC).
+    pub fn wants_model(&self, version: usize, i: usize) -> bool {
+        let busy = self.phase == SatPhase::Training && self.ready_at > i;
+        !busy && self.held_version != Some(version)
+    }
+
+    /// Accept (w, version); training completes after `duration` slots.
+    /// The engine computes the actual update via its trainer backend and
+    /// stores it through [`SatClient::set_update`].
+    pub fn receive(&mut self, version: usize, i: usize, duration: usize) {
+        debug_assert!(self.wants_model(version, i));
+        self.held_version = Some(version);
+        self.base_round = version;
+        self.ready_at = i + duration;
+        self.phase = SatPhase::Training;
+        self.pending = None;
+    }
+
+    /// Install the computed local update (g_k).
+    pub fn set_update(&mut self, grad: Vec<f32>) {
+        assert_eq!(self.phase, SatPhase::Training);
+        self.pending = Some(grad);
+        self.phase = if self.ready_at == usize::MAX {
+            SatPhase::Training
+        } else {
+            SatPhase::HasUpdate
+        };
+    }
+
+    /// A satellite with no local data never trains or uploads (possible
+    /// under the Non-IID partition when it overflies no sampled zone).
+    pub fn has_data(&self) -> bool {
+        self.n_samples > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_cold_to_upload() {
+        let mut c = SatClient::new(0, 100);
+        assert_eq!(c.phase, SatPhase::Cold);
+        assert!(!c.can_upload(0));
+        assert!(c.wants_model(0, 0));
+        c.receive(0, 0, 1);
+        assert_eq!(c.phase, SatPhase::Training);
+        c.set_update(vec![1.0]);
+        assert_eq!(c.phase, SatPhase::HasUpdate);
+        assert!(!c.can_upload(0), "not ready before ready_at");
+        assert!(c.can_upload(1));
+        let (g, base) = c.upload(1);
+        assert_eq!(g, vec![1.0]);
+        assert_eq!(base, 0);
+        assert_eq!(c.phase, SatPhase::AwaitingModel);
+        assert!(!c.can_upload(2));
+    }
+
+    #[test]
+    fn ignores_same_version() {
+        let mut c = SatClient::new(0, 100);
+        c.receive(3, 0, 1);
+        c.set_update(vec![0.5]);
+        let _ = c.upload(1);
+        // GS hasn't aggregated: version still 3 -> no re-send, idle contact
+        assert!(!c.wants_model(3, 2));
+        assert!(c.wants_model(4, 2));
+    }
+
+    #[test]
+    fn busy_satellite_ignores_broadcast() {
+        let mut c = SatClient::new(0, 100);
+        c.receive(0, 0, 3); // training until i=3
+        assert!(!c.wants_model(1, 1), "mid-training must not restart");
+        assert!(c.wants_model(1, 3), "done training, new version welcome");
+    }
+
+    #[test]
+    fn no_data_flag() {
+        let c = SatClient::new(0, 0);
+        assert!(!c.has_data());
+    }
+
+    #[test]
+    #[should_panic]
+    fn upload_without_update_panics() {
+        let mut c = SatClient::new(0, 10);
+        let _ = c.upload(0);
+    }
+}

@@ -1,0 +1,16 @@
+//! The federated-learning core (paper §2.3–2.4): GS state, gradient buffer,
+//! staleness compensation, the four aggregation-indicator policies, and the
+//! 3-satellite illustrative example behind Figures 3–4 / Table 1.
+
+pub mod algorithms;
+pub mod buffer;
+pub mod client;
+pub mod illustrative;
+pub mod server;
+pub mod staleness;
+
+pub use algorithms::{AggregationPolicy, AsyncPolicy, FedBuffPolicy, ScheduledPolicy, SyncPolicy};
+pub use buffer::{Buffer, GradientEntry};
+pub use client::{SatClient, SatPhase};
+pub use server::{CpuAggregator, GsState, ServerAggregator};
+pub use staleness::{compensation, normalized_weights};

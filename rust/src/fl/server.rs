@@ -1,0 +1,149 @@
+//! Ground-station (GS) state and the Eq. (4) model update.
+
+use super::buffer::{Buffer, GradientEntry};
+use super::staleness::normalized_weights;
+use anyhow::Result;
+
+/// Applies Eq. (4): w' = w + Σ_k (c(s_k)/C)·g_k over the drained buffer.
+///
+/// Two implementations: [`CpuAggregator`] (pure Rust hot loop, used by mock
+/// experiments and as the correctness oracle) and `runtime::PjrtAggregator`
+/// (streams chunks through the Pallas `stale_aggregate` artifact — the
+/// shipped hot path). Not `Send`: PJRT handles live on the coordinator
+/// thread.
+pub trait ServerAggregator {
+    fn aggregate(&mut self, w: &mut Vec<f32>, entries: &[GradientEntry], alpha: f64)
+        -> Result<()>;
+}
+
+/// Reference aggregation in Rust: exact Eq. (4) with f32 accumulate.
+pub struct CpuAggregator;
+
+impl ServerAggregator for CpuAggregator {
+    fn aggregate(
+        &mut self,
+        w: &mut Vec<f32>,
+        entries: &[GradientEntry],
+        alpha: f64,
+    ) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        let stalenesses: Vec<usize> = entries.iter().map(|e| e.staleness).collect();
+        let weights = normalized_weights(&stalenesses, alpha);
+        for (entry, &wt) in entries.iter().zip(weights.iter()) {
+            assert_eq!(entry.grad.len(), w.len(), "gradient/model dim mismatch");
+            for (wi, gi) in w.iter_mut().zip(entry.grad.iter()) {
+                *wi += wt * gi;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// GS state of Algorithm 1: current global model w^i, round index i_g, the
+/// buffer B_i, and the running trace the figures need.
+pub struct GsState {
+    pub w: Vec<f32>,
+    pub i_g: usize,
+    pub buffer: Buffer,
+    pub alpha: f64,
+    /// total gradients ever aggregated (Table 1 "total")
+    pub n_aggregated: usize,
+}
+
+impl GsState {
+    pub fn new(w: Vec<f32>, alpha: f64) -> Self {
+        GsState { w, i_g: 0, buffer: Buffer::new(), alpha, n_aggregated: 0 }
+    }
+
+    /// Receive (g_k, i_{g,k}) from satellite k: staleness fixed now.
+    pub fn receive(&mut self, sat: usize, grad: Vec<f32>, base_round: usize, n_samples: usize) {
+        assert!(base_round <= self.i_g, "satellite from the future");
+        self.buffer.push(GradientEntry {
+            sat,
+            staleness: self.i_g - base_round,
+            grad,
+            n_samples,
+        });
+    }
+
+    /// SERVERUPDATE (Eq. 4): drain buffer, update w, bump i_g.
+    /// Returns the aggregated entries' stalenesses (for the Figure 7 trace).
+    pub fn update(&mut self, aggregator: &mut dyn ServerAggregator) -> Result<Vec<usize>> {
+        let entries = self.buffer.drain();
+        let stalenesses: Vec<usize> = entries.iter().map(|e| e.staleness).collect();
+        aggregator.aggregate(&mut self.w, &entries, self.alpha)?;
+        self.i_g += 1;
+        self.n_aggregated += entries.len();
+        Ok(stalenesses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_aggregator_matches_manual_eq4() {
+        let mut w = vec![1.0f32, 2.0, 3.0];
+        let entries = vec![
+            GradientEntry { sat: 0, staleness: 0, grad: vec![1.0, 0.0, 0.0], n_samples: 1 },
+            GradientEntry { sat: 1, staleness: 1, grad: vec![0.0, 2.0, 0.0], n_samples: 1 },
+        ];
+        let alpha = 0.5;
+        let c0 = 1.0f64;
+        let c1 = 2.0f64.powf(-0.5);
+        let total = c0 + c1;
+        CpuAggregator.aggregate(&mut w, &entries, alpha).unwrap();
+        let want = [
+            1.0 + (c0 / total) as f32,
+            2.0 + 2.0 * (c1 / total) as f32,
+            3.0,
+        ];
+        for (g, e) in w.iter().zip(want.iter()) {
+            assert!((g - e).abs() < 1e-6, "{w:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn empty_buffer_update_is_identity_but_bumps_round() {
+        let mut gs = GsState::new(vec![5.0; 4], 0.5);
+        let w0 = gs.w.clone();
+        gs.update(&mut CpuAggregator).unwrap();
+        assert_eq!(gs.w, w0);
+        assert_eq!(gs.i_g, 1);
+        assert_eq!(gs.n_aggregated, 0);
+    }
+
+    #[test]
+    fn staleness_fixed_at_receive() {
+        let mut gs = GsState::new(vec![0.0; 2], 0.5);
+        gs.receive(0, vec![1.0, 1.0], 0, 5);
+        gs.i_g = 3; // rounds pass before aggregation
+        gs.receive(1, vec![1.0, 1.0], 1, 5);
+        let st = gs.buffer.stalenesses();
+        assert_eq!(st, vec![0, 2]);
+    }
+
+    #[test]
+    fn update_reports_stalenesses_and_counts() {
+        let mut gs = GsState::new(vec![0.0; 1], 0.5);
+        gs.receive(0, vec![1.0], 0, 1);
+        gs.receive(1, vec![3.0], 0, 1);
+        let st = gs.update(&mut CpuAggregator).unwrap();
+        assert_eq!(st, vec![0, 0]);
+        assert_eq!(gs.n_aggregated, 2);
+        assert_eq!(gs.i_g, 1);
+        // equal weights: w = 0 + (1+3)/2
+        assert!((gs.w[0] - 2.0).abs() < 1e-6);
+        assert!(gs.buffer.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn future_round_rejected() {
+        let mut gs = GsState::new(vec![0.0], 0.5);
+        gs.receive(0, vec![1.0], 7, 1);
+    }
+}

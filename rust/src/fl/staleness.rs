@@ -1,0 +1,68 @@
+//! Staleness compensation c_α(s) = (s+1)^{-α} (paper Eq. 4, after
+//! Xie et al. 2019). The paper uses the polynomial form as it "shows similar
+//! or better performance than the other options".
+
+/// c_α(s): monotonically decreasing in s, c_α(0) = 1.
+pub fn compensation(s: usize, alpha: f64) -> f64 {
+    assert!(alpha >= 0.0, "alpha must be non-negative");
+    ((s + 1) as f64).powf(-alpha)
+}
+
+/// Eq. (4) weights: c(s_k)/C with C = Σ c(s_k). Empty input → empty output.
+pub fn normalized_weights(stalenesses: &[usize], alpha: f64) -> Vec<f32> {
+    if stalenesses.is_empty() {
+        return Vec::new();
+    }
+    let raw: Vec<f64> = stalenesses.iter().map(|&s| compensation(s, alpha)).collect();
+    let total: f64 = raw.iter().sum();
+    raw.iter().map(|&c| (c / total) as f32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_staleness_is_one() {
+        assert_eq!(compensation(0, 0.5), 1.0);
+        assert_eq!(compensation(0, 2.0), 1.0);
+    }
+
+    #[test]
+    fn monotonically_decreasing() {
+        for alpha in [0.25, 0.5, 1.0] {
+            for s in 0..10 {
+                assert!(compensation(s + 1, alpha) < compensation(s, alpha));
+            }
+        }
+    }
+
+    #[test]
+    fn alpha_zero_ignores_staleness() {
+        for s in 0..10 {
+            assert_eq!(compensation(s, 0.0), 1.0);
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        let w = normalized_weights(&[0, 1, 5, 2], 0.5);
+        let sum: f32 = w.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6);
+        // fresher gradients weigh more
+        assert!(w[0] > w[1] && w[1] > w[2]);
+    }
+
+    #[test]
+    fn uniform_when_same_staleness() {
+        let w = normalized_weights(&[3, 3, 3], 0.5);
+        for v in &w {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_is_empty() {
+        assert!(normalized_weights(&[], 0.5).is_empty());
+    }
+}

@@ -1,0 +1,36 @@
+//! # FedSpace
+//!
+//! A production-quality reproduction of *FedSpace: An Efficient Federated
+//! Learning Framework at Satellites and Ground Stations* (So et al., 2022)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **Layer 3 (this crate)** — the ground-station coordinator: connectivity
+//!   prediction from orbital mechanics, the Sync/Async/FedBuff baselines,
+//!   the FedSpace aggregation scheduler (utility regression + random
+//!   search), and the discrete-time simulation engine of Algorithm 1.
+//! - **Layer 2** — the satellite workload (frozen-extractor classifier)
+//!   written in JAX, AOT-lowered to HLO text in `artifacts/`.
+//! - **Layer 1** — Pallas kernels (tiled matmul, staleness-weighted
+//!   aggregation) inside the L2 graph.
+//!
+//! Python never runs at coordination time: `runtime` loads the HLO text via
+//! the PJRT C API and executes it natively.
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record of every table and figure.
+
+pub mod app;
+pub mod bench_util;
+pub mod cfg;
+pub mod connectivity;
+pub mod data;
+pub mod exec;
+pub mod fl;
+pub mod metrics;
+pub mod ml;
+pub mod orbit;
+pub mod rng;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod testing;

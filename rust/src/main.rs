@@ -1,0 +1,27 @@
+//! `fedspace` — the Layer-3 coordinator CLI / launcher.
+//!
+//! Subcommands:
+//!   connectivity  compute the constellation connectivity (Figure 2 data)
+//!   illustrative  run the 3-satellite example (Figures 3-4, Table 1)
+//!   train         run one FL experiment (mock or full PJRT backend)
+//!   utility       generate utility samples and fit/report the regressor
+//!   help          this text
+
+use anyhow::{bail, Result};
+use fedspace::app::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.command.as_str() {
+        "connectivity" => fedspace::app::cmd::connectivity(&args),
+        "illustrative" => fedspace::app::cmd::illustrative(&args),
+        "train" => fedspace::app::cmd::train(&args),
+        "utility" => fedspace::app::cmd::utility(&args),
+        "schedule" => fedspace::app::cmd::schedule(&args),
+        "" | "help" | "--help" | "-h" => {
+            print!("{}", fedspace::app::cmd::HELP);
+            Ok(())
+        }
+        other => bail!("unknown command {other:?} — try `fedspace help`"),
+    }
+}

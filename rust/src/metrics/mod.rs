@@ -1,0 +1,222 @@
+//! Metrics: histograms, training curves, CSV emission — the plumbing behind
+//! every figure and table the benches regenerate.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Integer-bucket histogram (staleness values, idle counts, n_k, ...).
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    counts: BTreeMap<i64, u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: i64) {
+        *self.counts.entry(v).or_insert(0) += 1;
+        self.total += 1;
+    }
+
+    pub fn add_n(&mut self, v: i64, n: u64) {
+        if n > 0 {
+            *self.counts.entry(v).or_insert(0) += n;
+            self.total += n;
+        }
+    }
+
+    pub fn count(&self, v: i64) -> u64 {
+        self.counts.get(&v).copied().unwrap_or(0)
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (i64, u64)> + '_ {
+        self.counts.iter().map(|(&k, &v)| (k, v))
+    }
+
+    pub fn max_key(&self) -> Option<i64> {
+        self.counts.keys().next_back().copied()
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (k, v) in other.entries() {
+            self.add_n(k, v);
+        }
+    }
+
+    /// Render `value,count` CSV.
+    pub fn to_csv(&self, header: &str) -> String {
+        let mut s = format!("{header}\n");
+        for (k, v) in self.entries() {
+            let _ = writeln!(s, "{k},{v}");
+        }
+        s
+    }
+}
+
+/// One evaluation point of a training run.
+#[derive(Clone, Copy, Debug)]
+pub struct CurvePoint {
+    /// simulated days since start
+    pub day: f64,
+    /// time index i
+    pub step: usize,
+    /// global round index i_g
+    pub round: usize,
+    pub accuracy: f64,
+    pub loss: f64,
+}
+
+/// A training curve (Figure 6 series) with target-time extraction (Table 2).
+#[derive(Clone, Debug, Default)]
+pub struct TrainingCurve {
+    pub points: Vec<CurvePoint>,
+}
+
+impl TrainingCurve {
+    pub fn push(&mut self, p: CurvePoint) {
+        self.points.push(p);
+    }
+
+    pub fn best_accuracy(&self) -> f64 {
+        self.points.iter().map(|p| p.accuracy).fold(0.0, f64::max)
+    }
+
+    /// First simulated day at which accuracy ≥ target (Table 2's metric);
+    /// `None` if never reached — the paper's "-" entry for async FL.
+    pub fn days_to_accuracy(&self, target: f64) -> Option<f64> {
+        self.points.iter().find(|p| p.accuracy >= target).map(|p| p.day)
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from("day,step,round,accuracy,loss\n");
+        for p in &self.points {
+            let _ = writeln!(
+                s,
+                "{:.4},{},{},{:.4},{:.4}",
+                p.day, p.step, p.round, p.accuracy, p.loss
+            );
+        }
+        s
+    }
+}
+
+/// Simple aligned-table writer for bench output (criterion substitute).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = line(&self.headers);
+        out.push('\n');
+        out.push_str(&"-".repeat(out.len().saturating_sub(1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Write a string to a file, creating parent dirs.
+pub fn write_file(path: &str, contents: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, contents)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts() {
+        let mut h = Histogram::new();
+        h.add(0);
+        h.add(0);
+        h.add(3);
+        h.add(-1);
+        assert_eq!(h.count(0), 2);
+        assert_eq!(h.count(3), 1);
+        assert_eq!(h.count(-1), 1);
+        assert_eq!(h.count(7), 0);
+        assert_eq!(h.total(), 4);
+        assert_eq!(h.max_key(), Some(3));
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = Histogram::new();
+        a.add(1);
+        let mut b = Histogram::new();
+        b.add(1);
+        b.add(2);
+        a.merge(&b);
+        assert_eq!(a.count(1), 2);
+        assert_eq!(a.count(2), 1);
+        assert_eq!(a.total(), 3);
+    }
+
+    #[test]
+    fn curve_days_to_accuracy() {
+        let mut c = TrainingCurve::default();
+        for (day, acc) in [(0.5, 0.1), (1.0, 0.35), (1.5, 0.42), (2.0, 0.45)] {
+            c.push(CurvePoint { day, step: 0, round: 0, accuracy: acc, loss: 1.0 });
+        }
+        assert_eq!(c.days_to_accuracy(0.40), Some(1.5));
+        assert_eq!(c.days_to_accuracy(0.50), None);
+        assert!((c.best_accuracy() - 0.45).abs() < 1e-12);
+    }
+
+    #[test]
+    fn curve_csv_header_and_rows() {
+        let mut c = TrainingCurve::default();
+        c.push(CurvePoint { day: 0.25, step: 24, round: 3, accuracy: 0.2, loss: 3.9 });
+        let csv = c.to_csv();
+        assert!(csv.starts_with("day,step,round,accuracy,loss\n"));
+        assert!(csv.contains("0.2500,24,3,0.2000,3.9000"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["scheme", "days"]);
+        t.row(&["sync".into(), "30.3".into()]);
+        t.row(&["fedspace".into(), "2.3".into()]);
+        let s = t.render();
+        assert!(s.contains("scheme"));
+        assert!(s.contains("fedspace"));
+    }
+}

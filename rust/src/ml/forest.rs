@@ -1,0 +1,151 @@
+//! Random forest regression = bagged CART trees + feature subsampling.
+
+use super::tree::{RegressionTree, TreeParams};
+use super::Regressor;
+use crate::rng::Rng;
+
+/// Forest hyper-parameters ("standard random forest regression", §4.1).
+#[derive(Clone, Debug)]
+pub struct RandomForestParams {
+    pub n_trees: usize,
+    pub tree: TreeParams,
+    /// Features per split as a fraction of d (sqrt-rule applied if None).
+    pub max_features_frac: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for RandomForestParams {
+    fn default() -> Self {
+        RandomForestParams {
+            n_trees: 50,
+            tree: TreeParams { max_depth: 12, min_samples_leaf: 2, min_samples_split: 4, max_features: None },
+            max_features_frac: None,
+            seed: 0x0F0E,
+        }
+    }
+}
+
+/// A fitted random forest.
+pub struct RandomForest {
+    pub params: RandomForestParams,
+    trees: Vec<RegressionTree>,
+}
+
+impl RandomForest {
+    pub fn new(params: RandomForestParams) -> Self {
+        RandomForest { params, trees: Vec::new() }
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+impl Regressor for RandomForest {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty(), "empty training set");
+        let d = x[0].len();
+        let max_features = match self.params.max_features_frac {
+            Some(frac) => ((d as f64 * frac).ceil() as usize).clamp(1, d),
+            None => ((d as f64).sqrt().ceil() as usize).clamp(1, d),
+        };
+        let mut rng = Rng::new(self.params.seed);
+        self.trees = (0..self.params.n_trees)
+            .map(|t| {
+                let mut tree_rng = rng.split(t as u64);
+                // bootstrap sample (with replacement)
+                let idx: Vec<usize> =
+                    (0..x.len()).map(|_| tree_rng.gen_range(0, x.len())).collect();
+                let mut tree = RegressionTree::new(TreeParams {
+                    max_features: Some(max_features),
+                    ..self.params.tree.clone()
+                });
+                tree.fit_indices(x, y, &idx, &mut tree_rng);
+                tree
+            })
+            .collect();
+    }
+
+    fn predict(&self, row: &[f64]) -> f64 {
+        assert!(!self.trees.is_empty(), "predict before fit");
+        self.trees.iter().map(|t| t.predict(row)).sum::<f64>() / self.trees.len() as f64
+    }
+
+    fn is_fitted(&self) -> bool {
+        !self.trees.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::mse;
+    use crate::rng::Rng;
+
+    fn quadratic(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.gen_f64(-2.0, 2.0);
+            let b = rng.gen_f64(-2.0, 2.0);
+            x.push(vec![a, b]);
+            y.push(a * a - b + 0.05 * rng.next_normal());
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn learns_nonlinear_function() {
+        let (x, y) = quadratic(600, 1);
+        let (xt, yt) = quadratic(100, 2);
+        let mut rf = RandomForest::new(RandomForestParams::default());
+        rf.fit(&x, &y);
+        let mean = y.iter().sum::<f64>() / y.len() as f64;
+        let var = yt.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / yt.len() as f64;
+        let err = mse(&rf, &xt, &yt);
+        assert!(err < var * 0.25, "test mse={err} baseline var={var}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = quadratic(200, 3);
+        let mut a = RandomForest::new(RandomForestParams::default());
+        let mut b = RandomForest::new(RandomForestParams::default());
+        a.fit(&x, &y);
+        b.fit(&x, &y);
+        for row in x.iter().take(20) {
+            assert_eq!(a.predict(row), b.predict(row));
+        }
+    }
+
+    #[test]
+    fn more_trees_reduce_variance() {
+        let (x, y) = quadratic(300, 4);
+        let (xt, yt) = quadratic(100, 5);
+        let mut small = RandomForest::new(RandomForestParams {
+            n_trees: 2,
+            seed: 9,
+            ..Default::default()
+        });
+        let mut large = RandomForest::new(RandomForestParams {
+            n_trees: 80,
+            seed: 9,
+            ..Default::default()
+        });
+        small.fit(&x, &y);
+        large.fit(&x, &y);
+        assert!(mse(&large, &xt, &yt) <= mse(&small, &xt, &yt) * 1.2);
+    }
+
+    #[test]
+    fn is_fitted_transitions() {
+        let mut rf = RandomForest::new(RandomForestParams::default());
+        assert!(!rf.is_fitted());
+        let (x, y) = quadratic(50, 6);
+        rf.fit(&x, &y);
+        assert!(rf.is_fitted());
+        assert_eq!(rf.n_trees(), rf.params.n_trees);
+    }
+}

@@ -1,0 +1,149 @@
+//! Ordinary least squares with ridge damping — the ablation baseline
+//! regressor for û (DESIGN.md experiment index, bench_ablation).
+
+use super::Regressor;
+
+/// Linear regression fit by solving the (ridge-damped) normal equations
+/// with Gaussian elimination — d is tiny (≈10 features) so O(d^3) is free.
+pub struct LinearRegression {
+    /// ridge coefficient λ
+    pub lambda: f64,
+    /// learned weights, last entry is the intercept
+    weights: Vec<f64>,
+}
+
+impl LinearRegression {
+    pub fn new(lambda: f64) -> Self {
+        LinearRegression { lambda, weights: Vec::new() }
+    }
+
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+}
+
+/// Solve A x = b in place (A is n×n row-major) via partial-pivot elimination.
+fn solve(mut a: Vec<Vec<f64>>, mut b: Vec<f64>) -> Vec<f64> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let piv = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let p = a[col][col];
+        assert!(p.abs() > 1e-12, "singular system");
+        for row in (col + 1)..n {
+            let f = a[row][col] / p;
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for col in (0..n).rev() {
+        let mut s = b[col];
+        for k in (col + 1)..n {
+            s -= a[col][k] * x[k];
+        }
+        x[col] = s / a[col][col];
+    }
+    x
+}
+
+impl Regressor for LinearRegression {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let d = x[0].len() + 1; // + intercept
+        let mut xtx = vec![vec![0.0; d]; d];
+        let mut xty = vec![0.0; d];
+        for (row, &t) in x.iter().zip(y.iter()) {
+            let aug: Vec<f64> = row.iter().copied().chain(std::iter::once(1.0)).collect();
+            for i in 0..d {
+                xty[i] += aug[i] * t;
+                for j in 0..d {
+                    xtx[i][j] += aug[i] * aug[j];
+                }
+            }
+        }
+        for (i, row) in xtx.iter_mut().enumerate().take(d - 1) {
+            row[i] += self.lambda; // no ridge on intercept
+        }
+        self.weights = solve(xtx, xty);
+    }
+
+    fn predict(&self, row: &[f64]) -> f64 {
+        assert!(!self.weights.is_empty(), "predict before fit");
+        let d = self.weights.len();
+        assert_eq!(row.len() + 1, d);
+        row.iter().zip(&self.weights[..d - 1]).map(|(a, b)| a * b).sum::<f64>()
+            + self.weights[d - 1]
+    }
+
+    fn is_fitted(&self) -> bool {
+        !self.weights.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn recovers_exact_linear_weights() {
+        let mut rng = Rng::new(0);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..200 {
+            let a = rng.gen_f64(-1.0, 1.0);
+            let b = rng.gen_f64(-1.0, 1.0);
+            x.push(vec![a, b]);
+            y.push(3.0 * a - 2.0 * b + 0.5);
+        }
+        let mut lr = LinearRegression::new(1e-9);
+        lr.fit(&x, &y);
+        let w = lr.weights();
+        assert!((w[0] - 3.0).abs() < 1e-6, "{w:?}");
+        assert!((w[1] + 2.0).abs() < 1e-6);
+        assert!((w[2] - 0.5).abs() < 1e-6);
+        assert!((lr.predict(&[0.2, -0.3]) - (3.0 * 0.2 + 2.0 * 0.3 + 0.5)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ridge_shrinks_weights() {
+        let mut rng = Rng::new(1);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..50 {
+            let a = rng.gen_f64(-1.0, 1.0);
+            x.push(vec![a]);
+            y.push(5.0 * a);
+        }
+        let mut loose = LinearRegression::new(1e-9);
+        let mut tight = LinearRegression::new(100.0);
+        loose.fit(&x, &y);
+        tight.fit(&x, &y);
+        assert!(tight.weights()[0].abs() < loose.weights()[0].abs());
+    }
+
+    #[test]
+    fn solve_identity() {
+        let a = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let b = vec![2.0, -3.0];
+        assert_eq!(solve(a, b), vec![2.0, -3.0]);
+    }
+
+    #[test]
+    fn solve_requires_pivoting() {
+        // leading zero forces a row swap
+        let a = vec![vec![0.0, 1.0], vec![1.0, 0.0]];
+        let b = vec![5.0, 7.0];
+        let x = solve(a, b);
+        assert!((x[0] - 7.0).abs() < 1e-12 && (x[1] - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,89 @@
+//! Regression substrate for the utility function û (paper §3.2).
+//!
+//! The paper uses "a standard random forest regression" to learn
+//! Δf = û(s, T). No ML crates exist in the offline vendor set, so this
+//! module implements CART regression trees with bootstrap aggregation and
+//! per-split feature subsampling from scratch, plus an ordinary
+//! least-squares baseline used in the scheduler-ablation bench.
+
+pub mod forest;
+pub mod linreg;
+pub mod tree;
+
+pub use forest::{RandomForest, RandomForestParams};
+pub use linreg::LinearRegression;
+pub use tree::{RegressionTree, TreeParams};
+
+/// Common trait so the FedSpace scheduler can swap regressors (ablation).
+pub trait Regressor: Send + Sync {
+    /// Fit on rows `x` (n × d, row-major) with targets `y` (n).
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]);
+    /// Predict one row.
+    fn predict(&self, row: &[f64]) -> f64;
+    /// Has `fit` been called with non-empty data?
+    fn is_fitted(&self) -> bool;
+}
+
+/// Mean squared error of a fitted regressor over a dataset.
+pub fn mse(model: &dyn Regressor, x: &[Vec<f64>], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter()
+        .zip(y.iter())
+        .map(|(row, &t)| {
+            let p = model.predict(row);
+            (p - t) * (p - t)
+        })
+        .sum::<f64>()
+        / x.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Shared smoke dataset: y = 2*x0 - x1 + noise.
+    pub fn linearish(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for _ in 0..n {
+            let a = rng.gen_f64(-1.0, 1.0);
+            let b = rng.gen_f64(-1.0, 1.0);
+            x.push(vec![a, b]);
+            y.push(2.0 * a - b + 0.01 * rng.next_normal());
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn forest_beats_constant_predictor() {
+        let (x, y) = linearish(400, 0);
+        let mean = y.iter().sum::<f64>() / y.len() as f64;
+        let var = y.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / y.len() as f64;
+        let mut rf = RandomForest::new(RandomForestParams::default());
+        rf.fit(&x, &y);
+        let err = mse(&rf, &x, &y);
+        assert!(err < var * 0.3, "mse={err} var={var}");
+    }
+
+    #[test]
+    fn mse_zero_for_perfect_model() {
+        struct Exact;
+        impl Regressor for Exact {
+            fn fit(&mut self, _: &[Vec<f64>], _: &[f64]) {}
+            fn predict(&self, row: &[f64]) -> f64 {
+                row[0]
+            }
+            fn is_fitted(&self) -> bool {
+                true
+            }
+        }
+        let x = vec![vec![1.0], vec![2.0]];
+        let y = vec![1.0, 2.0];
+        assert_eq!(mse(&Exact, &x, &y), 0.0);
+    }
+}

@@ -1,0 +1,276 @@
+//! CART regression tree: variance-reduction splits, depth/leaf limits,
+//! optional per-split feature subsampling (used by the forest).
+
+use crate::rng::Rng;
+
+/// Tree hyper-parameters.
+#[derive(Clone, Debug)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    pub min_samples_split: usize,
+    /// Features considered per split; `None` = all (single-tree mode).
+    pub max_features: Option<usize>,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 12,
+            min_samples_leaf: 2,
+            min_samples_split: 4,
+            max_features: None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+/// A fitted regression tree (arena-allocated nodes).
+#[derive(Clone, Debug)]
+pub struct RegressionTree {
+    pub params: TreeParams,
+    nodes: Vec<Node>,
+    fitted: bool,
+}
+
+impl RegressionTree {
+    pub fn new(params: TreeParams) -> Self {
+        RegressionTree { params, nodes: Vec::new(), fitted: false }
+    }
+
+    /// Fit on the rows selected by `idx` (enables bootstrap without copying).
+    pub fn fit_indices(
+        &mut self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        idx: &[usize],
+        rng: &mut Rng,
+    ) {
+        assert_eq!(x.len(), y.len());
+        assert!(!idx.is_empty(), "empty training set");
+        self.nodes.clear();
+        let mut idx = idx.to_vec();
+        self.build(x, y, &mut idx, 0, rng);
+        self.fitted = true;
+    }
+
+    pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64], rng: &mut Rng) {
+        let idx: Vec<usize> = (0..x.len()).collect();
+        self.fit_indices(x, y, &idx, rng);
+    }
+
+    fn mean(y: &[f64], idx: &[usize]) -> f64 {
+        idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64
+    }
+
+    /// Build subtree over `idx`, returning its node id.
+    fn build(
+        &mut self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        idx: &mut [usize],
+        depth: usize,
+        rng: &mut Rng,
+    ) -> usize {
+        let value = Self::mean(y, idx);
+        if depth >= self.params.max_depth || idx.len() < self.params.min_samples_split {
+            return self.push(Node::Leaf { value });
+        }
+        match self.best_split(x, y, idx, rng) {
+            None => self.push(Node::Leaf { value }),
+            Some((feature, threshold)) => {
+                // partition idx in place
+                let mut lo = 0usize;
+                for i in 0..idx.len() {
+                    if x[idx[i]][feature] <= threshold {
+                        idx.swap(lo, i);
+                        lo += 1;
+                    }
+                }
+                if lo == 0 || lo == idx.len() {
+                    return self.push(Node::Leaf { value });
+                }
+                let id = self.push(Node::Leaf { value }); // placeholder
+                let (l_idx, r_idx) = idx.split_at_mut(lo);
+                let left = self.build(x, y, l_idx, depth + 1, rng);
+                let right = self.build(x, y, r_idx, depth + 1, rng);
+                self.nodes[id] = Node::Split { feature, threshold, left, right };
+                id
+            }
+        }
+    }
+
+    fn push(&mut self, n: Node) -> usize {
+        self.nodes.push(n);
+        self.nodes.len() - 1
+    }
+
+    /// Best (feature, threshold) by weighted-variance reduction.
+    fn best_split(
+        &self,
+        x: &[Vec<f64>],
+        y: &[f64],
+        idx: &[usize],
+        rng: &mut Rng,
+    ) -> Option<(usize, f64)> {
+        let d = x[0].len();
+        let features: Vec<usize> = match self.params.max_features {
+            Some(m) if m < d => rng.choose_k(d, m),
+            _ => (0..d).collect(),
+        };
+        let n = idx.len() as f64;
+        let sum: f64 = idx.iter().map(|&i| y[i]).sum();
+        let sum2: f64 = idx.iter().map(|&i| y[i] * y[i]).sum();
+        let parent_sse = sum2 - sum * sum / n;
+        let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, sse)
+        let min_leaf = self.params.min_samples_leaf;
+        let mut order: Vec<usize> = idx.to_vec();
+        for &f in &features {
+            order.sort_by(|&a, &b| x[a][f].partial_cmp(&x[b][f]).unwrap());
+            // prefix sums over sorted order
+            let mut ls = 0.0;
+            let mut ls2 = 0.0;
+            for (pos, &i) in order.iter().enumerate() {
+                ls += y[i];
+                ls2 += y[i] * y[i];
+                let nl = (pos + 1) as f64;
+                let nr = n - nl;
+                if (pos + 1) < min_leaf || (idx.len() - pos - 1) < min_leaf || nr == 0.0 {
+                    continue;
+                }
+                // skip ties: cannot split between equal feature values
+                if x[order[pos]][f] == x[order[pos + 1]][f] {
+                    continue;
+                }
+                let rs = sum - ls;
+                let rs2 = sum2 - ls2;
+                let sse = (ls2 - ls * ls / nl) + (rs2 - rs * rs / nr);
+                // Accept ties (sse == parent) when the node is impure —
+                // greedy CART needs this to enter XOR-like interactions —
+                // but never split pure nodes (parent_sse ≈ 0).
+                let acceptable = parent_sse > 1e-12 && sse <= parent_sse;
+                if best.map_or(acceptable, |(_, _, b)| sse < b) {
+                    let thr = 0.5 * (x[order[pos]][f] + x[order[pos + 1]][f]);
+                    best = Some((f, thr, sse));
+                }
+            }
+        }
+        best.map(|(f, t, _)| (f, t))
+    }
+
+    /// Predict one row.
+    pub fn predict(&self, row: &[f64]) -> f64 {
+        assert!(self.fitted, "predict before fit");
+        let mut id = 0usize;
+        loop {
+            match &self.nodes[id] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    id = if row[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn is_fitted(&self) -> bool {
+        self.fitted
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Rng {
+        Rng::new(0)
+    }
+
+    #[test]
+    fn fits_step_function_exactly() {
+        // y = 1 if x > 0.5 else 0 — one split suffices
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64 / 100.0]).collect();
+        let y: Vec<f64> = x.iter().map(|r| if r[0] > 0.5 { 1.0 } else { 0.0 }).collect();
+        let mut t = RegressionTree::new(TreeParams::default());
+        t.fit(&x, &y, &mut rng());
+        for (r, &want) in x.iter().zip(y.iter()) {
+            assert_eq!(t.predict(r), want);
+        }
+    }
+
+    #[test]
+    fn constant_target_single_leaf() {
+        let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let y = vec![3.5; 20];
+        let mut t = RegressionTree::new(TreeParams::default());
+        t.fit(&x, &y, &mut rng());
+        assert_eq!(t.n_nodes(), 1);
+        assert_eq!(t.predict(&[100.0]), 3.5);
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let x: Vec<Vec<f64>> = (0..256).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..256).map(|i| i as f64).collect();
+        let mut t = RegressionTree::new(TreeParams { max_depth: 2, ..Default::default() });
+        t.fit(&x, &y, &mut rng());
+        // depth-2 binary tree has at most 7 nodes
+        assert!(t.n_nodes() <= 7, "n_nodes={}", t.n_nodes());
+    }
+
+    #[test]
+    fn min_samples_leaf_respected() {
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..10).map(|i| (i % 2) as f64).collect();
+        let mut t = RegressionTree::new(TreeParams {
+            min_samples_leaf: 5,
+            ..Default::default()
+        });
+        t.fit(&x, &y, &mut rng());
+        // only one split possible (5|5)
+        assert!(t.n_nodes() <= 3);
+    }
+
+    #[test]
+    fn two_feature_interaction() {
+        // y = x0 XOR x1 on {0,1}^2 grid — needs depth 2
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for a in 0..2 {
+            for b in 0..2 {
+                for _ in 0..5 {
+                    x.push(vec![a as f64, b as f64]);
+                    y.push(((a + b) % 2) as f64);
+                }
+            }
+        }
+        let mut t = RegressionTree::new(TreeParams::default());
+        t.fit(&x, &y, &mut rng());
+        assert_eq!(t.predict(&[0.0, 1.0]), 1.0);
+        assert_eq!(t.predict(&[1.0, 1.0]), 0.0);
+    }
+
+    #[test]
+    fn duplicate_feature_values_no_invalid_split() {
+        let x = vec![vec![1.0], vec![1.0], vec![1.0], vec![1.0]];
+        let y = vec![0.0, 1.0, 0.0, 1.0];
+        let mut t = RegressionTree::new(TreeParams::default());
+        t.fit(&x, &y, &mut rng());
+        assert_eq!(t.predict(&[1.0]), 0.5);
+    }
+}

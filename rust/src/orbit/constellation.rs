@@ -1,0 +1,152 @@
+//! Constellation builder: the Planet-Labs-like 191-satellite fleet (§4.1).
+
+use super::kepler::CircularOrbit;
+use crate::rng::Rng;
+use std::f64::consts::PI;
+
+/// One orbital "flock": n satellites sharing altitude/inclination, spread
+/// over `planes` RAAN values with in-plane phasing.
+#[derive(Clone, Debug)]
+pub struct OrbitalPlaneSpec {
+    pub n_sats: usize,
+    pub alt_m: f64,
+    pub inc_deg: f64,
+    pub planes: usize,
+    /// RAAN of the first plane [deg]; planes are spread evenly over 360°/planes_span.
+    pub raan0_deg: f64,
+    pub raan_span_deg: f64,
+}
+
+/// A full constellation: named satellites with their orbits.
+#[derive(Clone, Debug)]
+pub struct Constellation {
+    pub orbits: Vec<CircularOrbit>,
+}
+
+impl Constellation {
+    pub fn len(&self) -> usize {
+        self.orbits.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.orbits.is_empty()
+    }
+
+    /// Build from flock specs; `jitter` perturbs phases/RAAN slightly so the
+    /// fleet is not artificially symmetric (Planet's Doves drift apart via
+    /// differential drag — Foster et al. 2018).
+    pub fn from_specs(specs: &[OrbitalPlaneSpec], rng: &mut Rng) -> Self {
+        let mut orbits = Vec::new();
+        for spec in specs {
+            for i in 0..spec.n_sats {
+                let plane = i % spec.planes;
+                let slot = i / spec.planes;
+                let slots_per_plane = spec.n_sats.div_ceil(spec.planes);
+                let raan = (spec.raan0_deg
+                    + spec.raan_span_deg * plane as f64 / spec.planes as f64)
+                    .to_radians()
+                    + rng.gen_f64(-0.01, 0.01);
+                let phase = 2.0 * PI * slot as f64 / slots_per_plane as f64
+                    + rng.gen_f64(0.0, 2.0 * PI / slots_per_plane as f64);
+                orbits.push(CircularOrbit::from_altitude(
+                    spec.alt_m + rng.gen_f64(-10e3, 10e3),
+                    spec.inc_deg.to_radians(),
+                    raan,
+                    phase,
+                ));
+            }
+        }
+        Constellation { orbits }
+    }
+}
+
+/// The default constellation for every experiment: 191 Dove-like satellites.
+///
+/// Planet's fleet at the paper's time was dominated by sun-synchronous
+/// flocks (~97.4°, ~475–525 km, launched into a handful of local-time
+/// planes) plus ISS-deployed flocks (51.6°, ~420 km). The SSO/ISS split and
+/// plane counts here reproduce the Figure 2 heterogeneity: SSO satellites
+/// see the polar stations nearly every orbit (n_k high), ISS satellites
+/// never see them (n_k low), and plane geometry drives the time-of-day
+/// swings in |C_i|.
+pub fn planet_labs_like(n_sats: usize, seed: u64) -> Constellation {
+    let mut rng = Rng::new(seed);
+    let n_sso = n_sats * 7 / 10;
+    let n_iss = n_sats - n_sso;
+    let specs = [
+        OrbitalPlaneSpec {
+            n_sats: n_sso,
+            alt_m: 500e3,
+            inc_deg: 97.4,
+            planes: 4,
+            raan0_deg: 10.0,
+            raan_span_deg: 180.0,
+        },
+        OrbitalPlaneSpec {
+            n_sats: n_iss,
+            alt_m: 420e3,
+            inc_deg: 51.6,
+            planes: 3,
+            raan0_deg: 45.0,
+            raan_span_deg: 360.0,
+        },
+    ];
+    Constellation::from_specs(&specs, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_requested_count() {
+        let c = planet_labs_like(191, 0);
+        assert_eq!(c.len(), 191);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = planet_labs_like(191, 7);
+        let b = planet_labs_like(191, 7);
+        for (x, y) in a.orbits.iter().zip(b.orbits.iter()) {
+            assert_eq!(x.a, y.a);
+            assert_eq!(x.phase0, y.phase0);
+        }
+    }
+
+    #[test]
+    fn two_inclination_families() {
+        let c = planet_labs_like(191, 0);
+        let sso = c
+            .orbits
+            .iter()
+            .filter(|o| (o.inc.to_degrees() - 97.4).abs() < 0.1)
+            .count();
+        let iss = c
+            .orbits
+            .iter()
+            .filter(|o| (o.inc.to_degrees() - 51.6).abs() < 0.1)
+            .count();
+        assert_eq!(sso + iss, 191);
+        assert!(sso > iss, "sso={sso} iss={iss}");
+    }
+
+    #[test]
+    fn altitudes_leo_band() {
+        let c = planet_labs_like(191, 0);
+        for o in &c.orbits {
+            let alt = o.a - crate::orbit::earth::R_EARTH_EQ;
+            assert!((380e3..560e3).contains(&alt), "alt={alt}");
+        }
+    }
+
+    #[test]
+    fn phases_spread_not_clustered() {
+        let c = planet_labs_like(100, 3);
+        // mean pairwise phase difference should be far from zero
+        let mut phases: Vec<f64> = c.orbits.iter().map(|o| o.phase0).collect();
+        phases.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let span = phases.last().unwrap() - phases.first().unwrap();
+        assert!(span > PI, "span={span}");
+    }
+}

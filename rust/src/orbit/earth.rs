@@ -1,0 +1,100 @@
+//! Earth model: constants, rotation (GMST), geodetic → ECEF conversion.
+
+use super::kepler::Vec3;
+
+/// Standard gravitational parameter of Earth [m^3/s^2].
+pub const MU_EARTH: f64 = 3.986_004_418e14;
+/// WGS84 equatorial radius [m].
+pub const R_EARTH_EQ: f64 = 6_378_137.0;
+/// WGS84 flattening.
+pub const WGS84_F: f64 = 1.0 / 298.257_223_563;
+/// Earth rotation rate [rad/s] (sidereal).
+pub const EARTH_OMEGA: f64 = 7.292_115_9e-5;
+
+/// Greenwich mean sidereal time angle at `t` seconds after epoch [rad].
+///
+/// The simulation epoch is arbitrary (the paper's 5-day window is relative),
+/// so GMST(0) = 0 without loss of generality.
+pub fn gmst_rad(t: f64) -> f64 {
+    (EARTH_OMEGA * t).rem_euclid(2.0 * std::f64::consts::PI)
+}
+
+/// Rotate an ECI position into the Earth-fixed (ECEF) frame at time `t`.
+pub fn eci_to_ecef(p_eci: &Vec3, t: f64) -> Vec3 {
+    let theta = gmst_rad(t);
+    let (s, c) = theta.sin_cos();
+    // ECEF = Rz(-theta) * ECI
+    Vec3::new(c * p_eci.x + s * p_eci.y, -s * p_eci.x + c * p_eci.y, p_eci.z)
+}
+
+/// Geodetic (lat, lon in degrees, height in m) → ECEF position (WGS84).
+pub fn ecef_from_geodetic(lat_deg: f64, lon_deg: f64, h_m: f64) -> Vec3 {
+    let lat = lat_deg.to_radians();
+    let lon = lon_deg.to_radians();
+    let e2 = WGS84_F * (2.0 - WGS84_F);
+    let sl = lat.sin();
+    let n = R_EARTH_EQ / (1.0 - e2 * sl * sl).sqrt();
+    Vec3::new(
+        (n + h_m) * lat.cos() * lon.cos(),
+        (n + h_m) * lat.cos() * lon.sin(),
+        (n * (1.0 - e2) + h_m) * sl,
+    )
+}
+
+/// Geodetic surface normal ("up" direction) at a ground site.
+pub fn geodetic_up(lat_deg: f64, lon_deg: f64) -> Vec3 {
+    let lat = lat_deg.to_radians();
+    let lon = lon_deg.to_radians();
+    Vec3::new(lat.cos() * lon.cos(), lat.cos() * lon.sin(), lat.sin())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn gmst_wraps() {
+        let day_sidereal = 2.0 * PI / EARTH_OMEGA; // ~86164 s
+        assert!(gmst_rad(day_sidereal) < 1e-6);
+        assert!((gmst_rad(day_sidereal / 2.0) - PI).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eci_to_ecef_identity_at_t0() {
+        let p = Vec3::new(7e6, 1e5, -2e6);
+        let q = eci_to_ecef(&p, 0.0);
+        assert!(p.sub(&q).norm() < 1e-9);
+    }
+
+    #[test]
+    fn eci_to_ecef_preserves_norm_and_z() {
+        let p = Vec3::new(7e6, 1e5, -2e6);
+        let q = eci_to_ecef(&p, 12_345.0);
+        assert!((p.norm() - q.norm()).abs() < 1e-6);
+        assert_eq!(p.z, q.z);
+    }
+
+    #[test]
+    fn ecef_equator_prime_meridian() {
+        let p = ecef_from_geodetic(0.0, 0.0, 0.0);
+        assert!((p.x - R_EARTH_EQ).abs() < 1.0);
+        assert!(p.y.abs() < 1e-6 && p.z.abs() < 1e-6);
+    }
+
+    #[test]
+    fn ecef_north_pole() {
+        let p = ecef_from_geodetic(90.0, 0.0, 0.0);
+        let b = R_EARTH_EQ * (1.0 - WGS84_F); // polar radius ~6356752 m
+        assert!(p.x.abs() < 1.0 && p.y.abs() < 1e-6);
+        assert!((p.z - b).abs() < 1.0, "z={}", p.z);
+    }
+
+    #[test]
+    fn up_vector_is_unit() {
+        for (lat, lon) in [(0.0, 0.0), (45.0, 120.0), (-78.0, -30.0)] {
+            let u = geodetic_up(lat, lon);
+            assert!((u.norm() - 1.0).abs() < 1e-12);
+        }
+    }
+}

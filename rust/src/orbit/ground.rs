@@ -1,0 +1,93 @@
+//! Ground stations: geodetic sites + the Planet-Labs-like default network.
+
+use super::earth::{ecef_from_geodetic, geodetic_up};
+use super::kepler::Vec3;
+
+/// A ground station at a fixed geodetic site.
+#[derive(Clone, Debug)]
+pub struct GroundStation {
+    pub name: String,
+    pub lat_deg: f64,
+    pub lon_deg: f64,
+    pub alt_m: f64,
+}
+
+impl GroundStation {
+    pub fn new(name: &str, lat_deg: f64, lon_deg: f64, alt_m: f64) -> Self {
+        GroundStation { name: name.to_string(), lat_deg, lon_deg, alt_m }
+    }
+
+    /// Earth-fixed position (constant — the station rotates with the frame).
+    pub fn position_ecef(&self) -> Vec3 {
+        ecef_from_geodetic(self.lat_deg, self.lon_deg, self.alt_m)
+    }
+
+    /// Local zenith direction in ECEF.
+    pub fn up_ecef(&self) -> Vec3 {
+        geodetic_up(self.lat_deg, self.lon_deg)
+    }
+}
+
+/// The 12-station network used throughout the paper's evaluation (§4.1).
+///
+/// Planet Labs' exact station list is not public; these are the publicly
+/// known polar + mid-latitude commercial downlink sites (KSAT/AWS/Planet
+/// class), chosen so the network has the paper's character: polar stations
+/// that SSO satellites see every orbit, plus sparse mid/low-latitude sites
+/// (DESIGN.md §3 Substitutions).
+pub fn planet_ground_stations() -> Vec<GroundStation> {
+    vec![
+        GroundStation::new("svalbard", 78.23, 15.39, 450.0),
+        GroundStation::new("inuvik", 68.36, -133.72, 15.0),
+        GroundStation::new("fairbanks", 64.84, -147.71, 135.0),
+        GroundStation::new("reykjavik", 64.13, -21.90, 45.0),
+        GroundStation::new("troll_antarctica", -72.01, 2.53, 1275.0),
+        GroundStation::new("awarua_nz", -46.53, 168.38, 10.0),
+        GroundStation::new("punta_arenas", -53.16, -70.91, 35.0),
+        GroundStation::new("cork_ireland", 51.90, -8.47, 50.0),
+        GroundStation::new("dubbo_australia", -32.24, 148.60, 275.0),
+        GroundStation::new("hartebeesthoek", -25.89, 27.69, 1555.0),
+        GroundStation::new("hawaii", 19.82, -155.47, 3000.0),
+        GroundStation::new("singapore", 1.35, 103.82, 15.0),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn twelve_stations() {
+        assert_eq!(planet_ground_stations().len(), 12);
+    }
+
+    #[test]
+    fn positions_near_earth_surface() {
+        for gs in planet_ground_stations() {
+            let r = gs.position_ecef().norm();
+            assert!(
+                (6.35e6..6.40e6).contains(&r),
+                "{} radius {r}",
+                gs.name
+            );
+        }
+    }
+
+    #[test]
+    fn names_unique() {
+        let gs = planet_ground_stations();
+        let mut names: Vec<_> = gs.iter().map(|g| g.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), gs.len());
+    }
+
+    #[test]
+    fn up_roughly_aligned_with_position() {
+        for gs in planet_ground_stations() {
+            let cos = gs.up_ecef().dot(&gs.position_ecef().normalized());
+            // geodetic vs geocentric normal differ by < ~0.2 deg of arc cos
+            assert!(cos > 0.9998, "{}: cos={cos}", gs.name);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Circular Keplerian two-body orbit propagation (ECI frame).
+
+use super::earth::MU_EARTH;
+
+/// Minimal 3-vector (no external linear-algebra crate offline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Vec3 {
+    pub x: f64,
+    pub y: f64,
+    pub z: f64,
+}
+
+impl Vec3 {
+    pub const ZERO: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 0.0 };
+
+    pub fn new(x: f64, y: f64, z: f64) -> Self {
+        Vec3 { x, y, z }
+    }
+
+    pub fn dot(&self, o: &Vec3) -> f64 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    pub fn norm(&self) -> f64 {
+        self.dot(self).sqrt()
+    }
+
+    pub fn sub(&self, o: &Vec3) -> Vec3 {
+        Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+
+    pub fn scale(&self, s: f64) -> Vec3 {
+        Vec3::new(self.x * s, self.y * s, self.z * s)
+    }
+
+    pub fn normalized(&self) -> Vec3 {
+        let n = self.norm();
+        assert!(n > 0.0, "normalizing zero vector");
+        self.scale(1.0 / n)
+    }
+}
+
+/// A circular orbit described by semi-major axis, inclination, RAAN and an
+/// initial argument of latitude (phase along the orbit at t = 0).
+#[derive(Clone, Copy, Debug)]
+pub struct CircularOrbit {
+    /// Semi-major axis [m] (= orbital radius for circular orbits).
+    pub a: f64,
+    /// Inclination [rad].
+    pub inc: f64,
+    /// Right ascension of the ascending node [rad].
+    pub raan: f64,
+    /// Argument of latitude at epoch [rad].
+    pub phase0: f64,
+}
+
+impl CircularOrbit {
+    /// Construct from altitude above the (spherical) Earth surface [m].
+    pub fn from_altitude(alt_m: f64, inc_rad: f64, raan_rad: f64, phase0_rad: f64) -> Self {
+        CircularOrbit {
+            a: super::earth::R_EARTH_EQ + alt_m,
+            inc: inc_rad,
+            raan: raan_rad,
+            phase0: phase0_rad,
+        }
+    }
+
+    /// Mean motion n = sqrt(mu / a^3) [rad/s].
+    pub fn mean_motion(&self) -> f64 {
+        (MU_EARTH / (self.a * self.a * self.a)).sqrt()
+    }
+
+    /// Orbital period [s].
+    pub fn period_s(&self) -> f64 {
+        2.0 * std::f64::consts::PI / self.mean_motion()
+    }
+
+    /// ECI position at time `t` seconds after epoch.
+    ///
+    /// For a circular orbit the argument of latitude advances linearly:
+    /// u(t) = phase0 + n·t. Position is the perifocal circle rotated by
+    /// inclination about x, then RAAN about z.
+    pub fn position_eci(&self, t: f64) -> Vec3 {
+        let u = self.phase0 + self.mean_motion() * t;
+        let (su, cu) = u.sin_cos();
+        let (si, ci) = self.inc.sin_cos();
+        let (so, co) = self.raan.sin_cos();
+        // In-plane coordinates.
+        let xp = self.a * cu;
+        let yp = self.a * su;
+        // Rotate by inclination (about x), then RAAN (about z).
+        Vec3::new(
+            xp * co - yp * ci * so,
+            xp * so + yp * ci * co,
+            yp * si,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::earth::R_EARTH_EQ;
+    use std::f64::consts::PI;
+
+    #[test]
+    fn radius_is_constant() {
+        let o = CircularOrbit::from_altitude(500e3, 97.4_f64.to_radians(), 1.0, 0.3);
+        for i in 0..100 {
+            let r = o.position_eci(i as f64 * 60.0).norm();
+            assert!((r - (R_EARTH_EQ + 500e3)).abs() < 1e-3, "r={r}");
+        }
+    }
+
+    #[test]
+    fn period_of_500km_orbit_about_94_minutes() {
+        let o = CircularOrbit::from_altitude(500e3, 0.0, 0.0, 0.0);
+        let p_min = o.period_s() / 60.0;
+        assert!((p_min - 94.6).abs() < 1.0, "period={p_min} min");
+    }
+
+    #[test]
+    fn position_periodic() {
+        let o = CircularOrbit::from_altitude(420e3, 51.6_f64.to_radians(), 0.7, 0.1);
+        let p0 = o.position_eci(0.0);
+        let p1 = o.position_eci(o.period_s());
+        assert!(p0.sub(&p1).norm() < 1.0, "drift={}", p0.sub(&p1).norm());
+    }
+
+    #[test]
+    fn equatorial_orbit_stays_in_plane() {
+        let o = CircularOrbit::from_altitude(500e3, 0.0, 0.0, 0.0);
+        for i in 0..50 {
+            assert!(o.position_eci(i as f64 * 100.0).z.abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn polar_orbit_reaches_poles() {
+        let o = CircularOrbit::from_altitude(500e3, PI / 2.0, 0.0, 0.0);
+        let quarter = o.period_s() / 4.0;
+        let p = o.position_eci(quarter);
+        // At a quarter period the satellite is over a pole: |z| ~ radius.
+        assert!((p.z.abs() - o.a).abs() / o.a < 1e-6);
+    }
+
+    #[test]
+    fn max_latitude_bounded_by_inclination() {
+        let inc = 51.6_f64.to_radians();
+        let o = CircularOrbit::from_altitude(420e3, inc, 0.4, 0.0);
+        for i in 0..500 {
+            let p = o.position_eci(i as f64 * 13.7);
+            let lat = (p.z / p.norm()).asin();
+            assert!(lat.abs() <= inc + 1e-9);
+        }
+    }
+
+    #[test]
+    fn vec3_ops() {
+        let a = Vec3::new(1.0, 2.0, 2.0);
+        assert_eq!(a.norm(), 3.0);
+        assert_eq!(a.dot(&Vec3::new(1.0, 0.0, 0.0)), 1.0);
+        let n = a.normalized();
+        assert!((n.norm() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,24 @@
+//! Orbital mechanics substrate — replaces the `cote` simulator (Denby &
+//! Lucia, ASPLOS 2020) the paper used to derive satellite⇄ground-station
+//! connectivity (DESIGN.md §3 Substitutions).
+//!
+//! Scope: circular Keplerian two-body propagation in an Earth-centered
+//! inertial (ECI) frame, Greenwich-rotation to ECEF, geodetic ground-station
+//! coordinates, and minimum-elevation-angle visibility (§2.2 of the paper:
+//! a link is feasible when the satellite is visible within elevation
+//! ≥ α_min). This is sufficient to reproduce both connectivity
+//! heterogeneities of Figure 2 — time-varying |C_i| and the per-satellite
+//! contact-count spread n_k — because those are driven by constellation
+//! geometry and Earth rotation, not by perturbation terms.
+
+pub mod constellation;
+pub mod earth;
+pub mod ground;
+pub mod kepler;
+pub mod visibility;
+
+pub use constellation::{planet_labs_like, Constellation, OrbitalPlaneSpec};
+pub use earth::{ecef_from_geodetic, eci_to_ecef, gmst_rad, EARTH_OMEGA, MU_EARTH, R_EARTH_EQ};
+pub use ground::{planet_ground_stations, GroundStation};
+pub use kepler::{CircularOrbit, Vec3};
+pub use visibility::{elevation_deg, is_visible, subsatellite_point};

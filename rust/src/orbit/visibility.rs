@@ -1,0 +1,95 @@
+//! Link feasibility: minimum-elevation-angle visibility (paper §2.2).
+//!
+//! A link between satellite k and ground station g is feasible at time t iff
+//! the elevation of the satellite above g's local horizon is ≥ α_min, i.e.
+//! the paper's ∠(r_g, r_k − r_g) ≤ π/2 − α_min condition.
+
+use super::earth::eci_to_ecef;
+use super::ground::GroundStation;
+use super::kepler::{CircularOrbit, Vec3};
+
+/// Elevation [deg] of a satellite (ECEF) as seen from a station.
+pub fn elevation_deg(sat_ecef: &Vec3, gs: &GroundStation) -> f64 {
+    let d = sat_ecef.sub(&gs.position_ecef());
+    let up = gs.up_ecef();
+    let sin_el = up.dot(&d.normalized());
+    sin_el.asin().to_degrees()
+}
+
+/// Is the satellite visible from the station within `min_elev_deg`?
+pub fn is_visible(sat_eci: &Vec3, t: f64, gs: &GroundStation, min_elev_deg: f64) -> bool {
+    let sat_ecef = eci_to_ecef(sat_eci, t);
+    elevation_deg(&sat_ecef, gs) >= min_elev_deg
+}
+
+/// Subsatellite point (geocentric lat, lon in degrees) at time `t` — used
+/// by the Non-IID partitioner to find which UTM zones a satellite overflies.
+pub fn subsatellite_point(orbit: &CircularOrbit, t: f64) -> (f64, f64) {
+    let p = eci_to_ecef(&orbit.position_eci(t), t);
+    let lat = (p.z / p.norm()).asin().to_degrees();
+    let lon = p.y.atan2(p.x).to_degrees();
+    (lat, lon)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::earth::R_EARTH_EQ;
+
+    fn station(lat: f64, lon: f64) -> GroundStation {
+        GroundStation::new("test", lat, lon, 0.0)
+    }
+
+    #[test]
+    fn zenith_satellite_has_90deg_elevation() {
+        let gs = station(0.0, 0.0);
+        // directly above the station at 500 km
+        let sat = Vec3::new(R_EARTH_EQ + 500e3, 0.0, 0.0);
+        let el = elevation_deg(&sat, &gs);
+        assert!((el - 90.0).abs() < 0.2, "el={el}");
+    }
+
+    #[test]
+    fn antipodal_satellite_below_horizon() {
+        let gs = station(0.0, 0.0);
+        let sat = Vec3::new(-(R_EARTH_EQ + 500e3), 0.0, 0.0);
+        assert!(elevation_deg(&sat, &gs) < -80.0);
+    }
+
+    #[test]
+    fn horizon_distance_consistent() {
+        // A 500 km LEO is above the 10° horizon only within ~1600 km ground
+        // range; 30° of longitude away (~3300 km) it must be invisible.
+        let gs = station(0.0, 0.0);
+        let sat = Vec3::new(
+            (R_EARTH_EQ + 500e3) * 30f64.to_radians().cos(),
+            (R_EARTH_EQ + 500e3) * 30f64.to_radians().sin(),
+            0.0,
+        );
+        assert!(!is_visible(&sat, 0.0, &gs, 10.0));
+    }
+
+    #[test]
+    fn visibility_monotone_in_threshold() {
+        let gs = station(10.0, 20.0);
+        let orbit = CircularOrbit::from_altitude(500e3, 0.9, 0.3, 0.0);
+        for i in 0..200 {
+            let t = i as f64 * 47.0;
+            let p = orbit.position_eci(t);
+            if is_visible(&p, t, &gs, 25.0) {
+                assert!(is_visible(&p, t, &gs, 10.0));
+            }
+        }
+    }
+
+    #[test]
+    fn subsatellite_latitude_bounded_by_inclination() {
+        let inc = 51.6_f64.to_radians();
+        let orbit = CircularOrbit::from_altitude(420e3, inc, 0.0, 0.0);
+        for i in 0..500 {
+            let (lat, lon) = subsatellite_point(&orbit, i as f64 * 60.0);
+            assert!(lat.abs() <= 51.7, "lat={lat}");
+            assert!((-180.0..=180.0).contains(&lon));
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! One compiled AOT artifact: HLO text → PJRT executable → typed execution.
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// A compiled computation loaded from an HLO-text file.
+///
+/// All artifacts are lowered with `return_tuple=True`, so execution returns
+/// the flattened tuple elements.
+pub struct Artifact {
+    pub name: String,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Load + compile `path` on `client`.
+    pub fn load(client: &PjRtClient, path: &str) -> Result<Self> {
+        let proto = HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path} — run `make artifacts`?"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).with_context(|| format!("compiling {path}"))?;
+        Ok(Artifact { name: path.to_string(), exe })
+    }
+
+    /// Execute with literal inputs; unwrap the output tuple.
+    pub fn execute(&self, args: &[Literal]) -> Result<Vec<Literal>> {
+        let out = self
+            .exe
+            .execute::<Literal>(args)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build an f32 literal of the given logical shape from a flat slice.
+pub fn literal_f32(data: &[f32], dims: &[i64]) -> Result<Literal> {
+    let expect: i64 = dims.iter().product();
+    anyhow::ensure!(
+        expect as usize == data.len(),
+        "literal shape {dims:?} wants {expect} elements, got {}",
+        data.len()
+    );
+    if dims.len() == 1 {
+        return Ok(Literal::vec1(data));
+    }
+    Ok(Literal::vec1(data).reshape(dims)?)
+}
+
+/// Extract a flat f32 vector from a literal.
+pub fn to_vec_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

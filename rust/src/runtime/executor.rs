@@ -1,0 +1,174 @@
+//! Typed model runtime: the four AOT artifacts behind one API.
+
+use super::artifact::{literal_f32, scalar_f32, to_vec_f32, Artifact};
+use super::meta::ModelMeta;
+use crate::fl::buffer::GradientEntry;
+use crate::fl::server::ServerAggregator;
+use crate::fl::staleness::normalized_weights;
+use crate::rng::Rng;
+use anyhow::{ensure, Result};
+use xla::PjRtClient;
+
+/// Loads and executes every artifact of one model size.
+pub struct ModelRuntime {
+    pub meta: ModelMeta,
+    client: PjRtClient,
+    local_train: Artifact,
+    grad_eval: Artifact,
+    eval_step: Artifact,
+    aggregate_chunk: Artifact,
+    /// execution counters (perf accounting)
+    pub n_train_calls: std::cell::Cell<u64>,
+    pub n_eval_calls: std::cell::Cell<u64>,
+    pub n_agg_calls: std::cell::Cell<u64>,
+}
+
+impl ModelRuntime {
+    /// Load all artifacts for `size` from `artifacts_dir` on a CPU client.
+    pub fn load(artifacts_dir: &str, size: &str) -> Result<Self> {
+        let meta = ModelMeta::load(artifacts_dir, size)?;
+        let client = PjRtClient::cpu()?;
+        let path = |name: &str| format!("{artifacts_dir}/{name}_{size}.hlo.txt");
+        Ok(ModelRuntime {
+            local_train: Artifact::load(&client, &path("local_train"))?,
+            grad_eval: Artifact::load(&client, &path("grad_eval"))?,
+            eval_step: Artifact::load(&client, &path("eval_step"))?,
+            aggregate_chunk: Artifact::load(&client, &path("aggregate_chunk"))?,
+            meta,
+            client,
+            n_train_calls: std::cell::Cell::new(0),
+            n_eval_calls: std::cell::Cell::new(0),
+            n_agg_calls: std::cell::Cell::new(0),
+        })
+    }
+
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    /// He-initialized flat parameter vector (matches the L2 layout; biases
+    /// zero). Initialization lives in Rust so experiment replay needs no
+    /// Python.
+    pub fn init_params(&self, rng: &mut Rng) -> Vec<f32> {
+        let mut w = Vec::with_capacity(self.meta.d);
+        for (name, shape) in &self.meta.param_shapes {
+            let n: usize = shape.iter().product();
+            if name.starts_with('b') {
+                w.extend(std::iter::repeat(0.0f32).take(n));
+            } else {
+                let fan_in = shape[0] as f32;
+                let std = (2.0 / fan_in).sqrt();
+                w.extend((0..n).map(|_| rng.normal_f32(0.0, std)));
+            }
+        }
+        debug_assert_eq!(w.len(), self.meta.d);
+        w
+    }
+
+    /// E local SGD steps (Eq. 3): returns (delta = w_E − w_0, mean loss).
+    ///
+    /// `xs`: [E·B·img_dim] flat, `ys`: [E·B] f32 class ids.
+    pub fn local_train(&self, w: &[f32], xs: &[f32], ys: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
+        let m = &self.meta;
+        ensure!(w.len() == m.d, "w dim {} != {}", w.len(), m.d);
+        let (e, b) = (m.e_steps as i64, m.batch as i64);
+        let args = [
+            literal_f32(w, &[m.d as i64])?,
+            literal_f32(xs, &[e, b, m.img_dim as i64])?,
+            literal_f32(ys, &[e, b])?,
+            xla::Literal::from(lr),
+        ];
+        let out = self.local_train.execute(&args)?;
+        ensure!(out.len() == 2, "local_train returned {} outputs", out.len());
+        self.n_train_calls.set(self.n_train_calls.get() + 1);
+        Ok((to_vec_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+
+    /// Single-batch (∇f, loss) — utility-sample generation (Eq. 12).
+    pub fn grad_eval(&self, w: &[f32], x: &[f32], y: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let m = &self.meta;
+        let args = [
+            literal_f32(w, &[m.d as i64])?,
+            literal_f32(x, &[m.batch as i64, m.img_dim as i64])?,
+            literal_f32(y, &[m.batch as i64])?,
+        ];
+        let out = self.grad_eval.execute(&args)?;
+        ensure!(out.len() == 2);
+        Ok((to_vec_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+
+    /// One validation batch: (sum CE loss, #correct).
+    pub fn eval_batch(&self, w: &[f32], x: &[f32], y: &[f32]) -> Result<(f32, f32)> {
+        let m = &self.meta;
+        let args = [
+            literal_f32(w, &[m.d as i64])?,
+            literal_f32(x, &[m.eval_batch as i64, m.img_dim as i64])?,
+            literal_f32(y, &[m.eval_batch as i64])?,
+        ];
+        let out = self.eval_step.execute(&args)?;
+        ensure!(out.len() == 2);
+        self.n_eval_calls.set(self.n_eval_calls.get() + 1);
+        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+
+    /// One Eq. (4) chunk: w ← w + Σ_c wt[c]·G[c]. `grads` is CH·d flat with
+    /// zero-weighted padding rows.
+    pub fn aggregate_chunk_raw(&self, w: &[f32], grads: &[f32], weights: &[f32]) -> Result<Vec<f32>> {
+        let m = &self.meta;
+        ensure!(weights.len() == m.chunk);
+        ensure!(grads.len() == m.chunk * m.d);
+        let args = [
+            literal_f32(w, &[m.d as i64])?,
+            literal_f32(grads, &[m.chunk as i64, m.d as i64])?,
+            literal_f32(weights, &[m.chunk as i64])?,
+        ];
+        let out = self.aggregate_chunk.execute(&args)?;
+        ensure!(out.len() == 1);
+        self.n_agg_calls.set(self.n_agg_calls.get() + 1);
+        to_vec_f32(&out[0])
+    }
+
+    /// Full Eq. (4) over a drained buffer, streaming CH gradients at a time
+    /// through the Pallas `stale_aggregate` kernel.
+    pub fn aggregate(&self, w: &mut Vec<f32>, entries: &[GradientEntry], alpha: f64) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        let m = &self.meta;
+        let stal: Vec<usize> = entries.iter().map(|e| e.staleness).collect();
+        let weights = normalized_weights(&stal, alpha);
+        let ch = m.chunk;
+        let mut gbuf = vec![0.0f32; ch * m.d];
+        let mut wbuf = vec![0.0f32; ch];
+        for (chunk_entries, chunk_weights) in
+            entries.chunks(ch).zip(weights.chunks(ch))
+        {
+            for slot in 0..ch {
+                if let Some(e) = chunk_entries.get(slot) {
+                    ensure!(e.grad.len() == m.d, "gradient dim mismatch");
+                    gbuf[slot * m.d..(slot + 1) * m.d].copy_from_slice(&e.grad);
+                    wbuf[slot] = chunk_weights[slot];
+                } else {
+                    // zero weight masks the stale row left in gbuf
+                    wbuf[slot] = 0.0;
+                }
+            }
+            *w = self.aggregate_chunk_raw(w, &gbuf, &wbuf)?;
+        }
+        Ok(())
+    }
+}
+
+/// `ServerAggregator` adapter: the shipped GS hot path.
+pub struct PjrtAggregator<'a> {
+    pub rt: &'a ModelRuntime,
+}
+
+impl ServerAggregator for PjrtAggregator<'_> {
+    fn aggregate(&mut self, w: &mut Vec<f32>, entries: &[GradientEntry], alpha: f64) -> Result<()> {
+        self.rt.aggregate(w, entries, alpha)
+    }
+}
+
+// Safety note: ModelRuntime is intentionally !Send (raw PJRT pointers);
+// everything runs on the coordinator thread.

@@ -1,0 +1,113 @@
+//! Artifact metadata (`artifacts/meta_<size>.txt`, key=value lines) — the
+//! contract between the L2 lowering parameters and the L3 coordinator.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Parsed lowering metadata for one model size.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelMeta {
+    pub size: String,
+    /// flat trainable-parameter dimension
+    pub d: usize,
+    pub img_dim: usize,
+    pub num_classes: usize,
+    /// E local SGD steps baked into local_train
+    pub e_steps: usize,
+    /// local-training batch size B
+    pub batch: usize,
+    pub eval_batch: usize,
+    /// gradients per aggregate_chunk call
+    pub chunk: usize,
+    pub feat: usize,
+    pub hidden: usize,
+    /// (name, shape) of each trainable tensor, in flat-vector order
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+}
+
+impl ModelMeta {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut kv = BTreeMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line.split_once('=').with_context(|| format!("bad meta line {line:?}"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<&String> {
+            kv.get(k).with_context(|| format!("meta missing key {k:?}"))
+        };
+        let get_usize = |k: &str| -> Result<usize> {
+            get(k)?.parse::<usize>().with_context(|| format!("meta key {k:?} not an integer"))
+        };
+        let mut param_shapes = Vec::new();
+        for part in get("param_shapes")?.split(';') {
+            let (name, dims) = part
+                .split_once(':')
+                .with_context(|| format!("bad param shape {part:?}"))?;
+            let shape: Vec<usize> = dims
+                .split(',')
+                .map(|d| d.parse::<usize>().context("bad dim"))
+                .collect::<Result<_>>()?;
+            param_shapes.push((name.to_string(), shape));
+        }
+        let meta = ModelMeta {
+            size: get("size")?.clone(),
+            d: get_usize("d")?,
+            img_dim: get_usize("img_dim")?,
+            num_classes: get_usize("num_classes")?,
+            e_steps: get_usize("e_steps")?,
+            batch: get_usize("batch")?,
+            eval_batch: get_usize("eval_batch")?,
+            chunk: get_usize("chunk")?,
+            feat: get_usize("feat")?,
+            hidden: get_usize("hidden")?,
+            param_shapes,
+        };
+        let d_sum: usize = meta.param_shapes.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        if d_sum != meta.d {
+            bail!("param_shapes sum {d_sum} != d {}", meta.d);
+        }
+        Ok(meta)
+    }
+
+    pub fn load(artifacts_dir: &str, size: &str) -> Result<Self> {
+        let path = format!("{artifacts_dir}/meta_{size}.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "size=small\nd=8190\nimg_dim=3072\nnum_classes=62\n\
+        e_steps=2\nbatch=8\neval_batch=16\nchunk=8\nfeat=64\nhidden=64\n\
+        param_shapes=w1:64,64;b1:64;w2:64,62;b2:62\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = ModelMeta::parse(SAMPLE).unwrap();
+        assert_eq!(m.size, "small");
+        assert_eq!(m.d, 8190);
+        assert_eq!(m.e_steps, 2);
+        assert_eq!(m.param_shapes.len(), 4);
+        assert_eq!(m.param_shapes[0], ("w1".to_string(), vec![64, 64]));
+    }
+
+    #[test]
+    fn rejects_inconsistent_d() {
+        let bad = SAMPLE.replace("d=8190", "d=9999");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_key() {
+        let bad = SAMPLE.replace("e_steps=2\n", "");
+        assert!(ModelMeta::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,19 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them natively — Python never runs
+//! on this path.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md).
+//!
+//! Threading note: the `xla` crate's wrappers are not `Send` (raw PJRT
+//! pointers), so all executions happen on the coordinator thread; the CPU
+//! PJRT client (TFRT) parallelizes internally.
+
+pub mod artifact;
+pub mod executor;
+pub mod meta;
+
+pub use artifact::Artifact;
+pub use executor::{ModelRuntime, PjrtAggregator};
+pub use meta::ModelMeta;

@@ -1,0 +1,66 @@
+//! Featurization of the utility function's input (s, T) — paper §3.2.
+//!
+//! The paper feeds the raw K-dimensional staleness vector to the random
+//! forest. With K = 191 and a few hundred samples that is needlessly
+//! sparse; the staleness vector enters the loss only through how many
+//! gradients of each staleness are averaged (Eq. 4 is permutation
+//! invariant in k), so we featurize as a staleness *histogram* — a
+//! sufficient statistic for Eq. 4 — plus contributor count, mean staleness
+//! and the training status T.
+
+/// Staleness values ≥ this are binned together.
+pub const S_CAP: usize = 6;
+
+/// Feature vector length.
+pub const N_FEATURES: usize = S_CAP + 4;
+
+/// Featurize one aggregation's staleness multiset + training status T.
+///
+/// Layout: [hist(s=0), …, hist(s=S_CAP−1), hist(s≥S_CAP), n_contributors,
+/// mean_staleness, T].
+pub fn featurize(stalenesses: &[usize], training_status: f64) -> Vec<f64> {
+    let mut f = vec![0.0; N_FEATURES];
+    for &s in stalenesses {
+        let bin = s.min(S_CAP);
+        f[bin] += 1.0;
+    }
+    let n = stalenesses.len() as f64;
+    f[S_CAP + 1] = n;
+    f[S_CAP + 2] = if stalenesses.is_empty() {
+        0.0
+    } else {
+        stalenesses.iter().sum::<usize>() as f64 / n
+    };
+    f[S_CAP + 3] = training_status;
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn layout_and_counts() {
+        let f = featurize(&[0, 0, 1, 7, 9], 2.5);
+        assert_eq!(f.len(), N_FEATURES);
+        assert_eq!(f[0], 2.0); // two s=0
+        assert_eq!(f[1], 1.0); // one s=1
+        assert_eq!(f[S_CAP], 2.0); // 7 and 9 capped
+        assert_eq!(f[S_CAP + 1], 5.0); // contributors
+        assert!((f[S_CAP + 2] - 17.0 / 5.0).abs() < 1e-12);
+        assert_eq!(f[S_CAP + 3], 2.5);
+    }
+
+    #[test]
+    fn empty_aggregation() {
+        let f = featurize(&[], 1.0);
+        assert_eq!(f[S_CAP + 1], 0.0);
+        assert_eq!(f[S_CAP + 2], 0.0);
+        assert_eq!(f[S_CAP + 3], 1.0);
+    }
+
+    #[test]
+    fn permutation_invariant() {
+        assert_eq!(featurize(&[0, 2, 5], 1.0), featurize(&[5, 0, 2], 1.0));
+    }
+}

@@ -1,0 +1,180 @@
+//! Deterministic replay of a candidate aggregation vector over the known
+//! future connectivity — computes the staleness vectors s^l (Eq. 9) and
+//! idle indicators (Eq. 10) FedSpace's objective needs.
+//!
+//! This is the paper's key insight made executable: because C is
+//! deterministic, the GS can evaluate *exactly* what any schedule would do
+//! to every satellite's staleness before committing to it.
+
+use crate::connectivity::ConnectivitySchedule;
+
+/// Scheduling-relevant state of one satellite at the window start.
+#[derive(Clone, Copy, Debug)]
+pub struct SatForecastState {
+    /// satellite holds a trained (or in-flight) update not yet uploaded
+    pub pending: bool,
+    /// staleness its pending update has already accumulated (i_g − i_{g,k})
+    pub staleness_now: usize,
+    /// satellite holds the current global model version (a contact without
+    /// aggregation in between re-sends nothing → idle)
+    pub holds_current: bool,
+    /// satellite has local data at all (Non-IID may starve some)
+    pub has_data: bool,
+}
+
+impl SatForecastState {
+    pub fn fresh() -> Self {
+        SatForecastState { pending: false, staleness_now: 0, holds_current: false, has_data: true }
+    }
+}
+
+/// Result of replaying one candidate schedule.
+#[derive(Clone, Debug)]
+pub struct WindowForecast {
+    /// for each l with a^l = 1 (in window order): stalenesses of the
+    /// gradients that aggregation would consume (the s^l vector's
+    /// non-negative entries; absent satellites are the paper's −1 entries)
+    pub aggregations: Vec<Vec<usize>>,
+    /// idle contacts in the window (connected, nothing new to send)
+    pub idle: usize,
+    /// total contacts in the window
+    pub contacts: usize,
+}
+
+/// Replay `schedule` (a^{start..start+I0}) over the connectivity `sched`.
+///
+/// `states` is indexed by satellite. The replay uses the same client
+/// semantics as the live engine (upload at first contact with a pending
+/// update; re-train only on version change; training completes within one
+/// slot, matching T0 = 15 min ≫ E local steps).
+pub fn forecast_window(
+    sched: &ConnectivitySchedule,
+    start: usize,
+    schedule: &[bool],
+    states: &[SatForecastState],
+) -> WindowForecast {
+    let k = sched.n_sats;
+    assert_eq!(states.len(), k);
+    // relative aggregation counter; pending base expressed in it
+    let mut agg_count: usize = 0;
+    let mut pending: Vec<bool> = states.iter().map(|s| s.pending).collect();
+    // staleness of pending update if uploaded after `agg_count` rounds:
+    // staleness_now + agg_count − base_offset
+    let mut base: Vec<i64> = states
+        .iter()
+        .map(|s| -(s.staleness_now as i64))
+        .collect();
+    let mut holds_current: Vec<bool> = states.iter().map(|s| s.holds_current).collect();
+    let mut buffered: Vec<usize> = Vec::new();
+    let mut aggregations = Vec::new();
+    let mut idle = 0usize;
+    let mut contacts = 0usize;
+
+    let end = (start + schedule.len()).min(sched.n_steps());
+    for (w, l) in (start..end).enumerate() {
+        let conn = &sched.sets[l];
+        for &s in conn {
+            contacts += 1;
+            if !states[s].has_data {
+                idle += 1;
+                continue;
+            }
+            if pending[s] {
+                buffered.push((agg_count as i64 - base[s]) as usize);
+                pending[s] = false;
+            } else if holds_current[s] {
+                idle += 1;
+            }
+        }
+        if schedule[w] && !buffered.is_empty() {
+            aggregations.push(std::mem::take(&mut buffered));
+            agg_count += 1;
+            // everyone's held version is now outdated
+            for h in holds_current.iter_mut() {
+                *h = false;
+            }
+        }
+        // broadcast: connected sats not holding the current version receive
+        // it and start training (update pending by next slot)
+        for &s in conn {
+            if states[s].has_data && !holds_current[s] {
+                holds_current[s] = true;
+                base[s] = agg_count as i64;
+                pending[s] = true;
+            }
+        }
+    }
+    WindowForecast { aggregations, idle, contacts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connectivity::ConnectivitySchedule;
+
+    fn sched3() -> ConnectivitySchedule {
+        // the illustrative example's connectivity
+        crate::fl::illustrative::example_schedule()
+    }
+
+    fn fresh(k: usize) -> Vec<SatForecastState> {
+        vec![SatForecastState::fresh(); k]
+    }
+
+    #[test]
+    fn always_aggregate_equals_async_counts() {
+        let s = sched3();
+        let f = forecast_window(&s, 0, &vec![true; 9], &fresh(3));
+        // must match the illustrative async row: 7 updates, 8 gradients,
+        // staleness multiset {0×4, 1×3, 5×1}
+        assert_eq!(f.aggregations.len(), 7);
+        let all: Vec<usize> = f.aggregations.iter().flatten().copied().collect();
+        assert_eq!(all.len(), 8);
+        assert_eq!(all.iter().filter(|&&x| x == 0).count(), 4);
+        assert_eq!(all.iter().filter(|&&x| x == 1).count(), 3);
+        assert_eq!(all.iter().filter(|&&x| x == 5).count(), 1);
+    }
+
+    #[test]
+    fn never_aggregate_no_aggregations_much_idle() {
+        let s = sched3();
+        let f = forecast_window(&s, 0, &vec![false; 9], &fresh(3));
+        assert!(f.aggregations.is_empty());
+        // every repeat contact is idle (first contact trains)
+        assert!(f.idle > 0);
+    }
+
+    #[test]
+    fn pending_state_carries_initial_staleness() {
+        let sets = vec![vec![0], vec![]];
+        let s = ConnectivitySchedule::from_sets(sets, 1);
+        let st = vec![SatForecastState {
+            pending: true,
+            staleness_now: 3,
+            holds_current: false,
+            has_data: true,
+        }];
+        let f = forecast_window(&s, 0, &[true, true], &st);
+        assert_eq!(f.aggregations, vec![vec![3]]);
+    }
+
+    #[test]
+    fn no_data_satellite_always_idle() {
+        let sets = vec![vec![0], vec![0]];
+        let s = ConnectivitySchedule::from_sets(sets, 1);
+        let st = vec![SatForecastState { has_data: false, ..SatForecastState::fresh() }];
+        let f = forecast_window(&s, 0, &[true, true], &st);
+        assert!(f.aggregations.is_empty());
+        assert_eq!(f.idle, 2);
+    }
+
+    #[test]
+    fn staleness_grows_with_skipped_uploads() {
+        // sat 0 contacts at 0 and 4; sat 1 every slot keeps aggregating
+        let sets = vec![vec![0, 1], vec![1], vec![1], vec![1], vec![0, 1]];
+        let s = ConnectivitySchedule::from_sets(sets, 2);
+        let f = forecast_window(&s, 0, &vec![true; 5], &fresh(2));
+        let max = f.aggregations.iter().flatten().max().copied().unwrap();
+        assert!(max >= 3, "sat0's update should be stale, got max={max}");
+    }
+}

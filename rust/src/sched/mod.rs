@@ -1,0 +1,27 @@
+//! The FedSpace aggregation scheduler (paper §3) — the system contribution.
+//!
+//! Pipeline (Figure 5): [`samples`] generates (staleness-vector, training
+//! status) → Δf pairs from a pre-trained checkpoint sequence (Eq. 12);
+//! [`utility`] fits the regression model û on them; [`forecast`] replays the
+//! deterministic future connectivity under a candidate aggregation vector
+//! a^{i,i+I0} to obtain the exact staleness vectors s^l (Eq. 9) and idle
+//! contacts (Eq. 10); [`search`] random-searches over a ∈ R ⊂ {0,1}^I0
+//! maximizing Σ_l û(s_l, T) (Eq. 13); [`planner`] ties it together at each
+//! window boundary.
+
+pub mod features;
+pub mod forecast;
+pub mod planner;
+pub mod samples;
+pub mod search;
+pub mod utility;
+
+pub use features::featurize;
+pub use forecast::{forecast_window, SatForecastState, WindowForecast};
+pub use planner::FedSpacePlanner;
+pub use samples::{
+    generate_samples, pretrain_bank, samples_from_csv, samples_to_csv, CheckpointBank,
+    MockBackend, SampleBackend, UtilitySamples,
+};
+pub use search::{infer_n_range, random_search, schedule_utility, schedule_utility_opts, SearchParams};
+pub use utility::UtilityModel;

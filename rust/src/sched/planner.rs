@@ -1,0 +1,67 @@
+//! Window-boundary planning: glue between the live engine and the
+//! forecast + utility + random-search pipeline.
+
+use super::forecast::SatForecastState;
+use super::search::{random_search, SearchParams};
+use super::utility::UtilityModel;
+use crate::connectivity::ConnectivitySchedule;
+use crate::rng::Rng;
+
+/// Plans a^{i,i+I0} at every window boundary i ∈ {0, I0, 2I0, …}.
+pub struct FedSpacePlanner {
+    pub utility: UtilityModel,
+    pub params: SearchParams,
+    rng: Rng,
+    /// predicted utility of each committed window (telemetry)
+    pub planned_utilities: Vec<f64>,
+}
+
+impl FedSpacePlanner {
+    pub fn new(utility: UtilityModel, params: SearchParams, seed: u64) -> Self {
+        FedSpacePlanner { utility, params, rng: Rng::new(seed), planned_utilities: Vec::new() }
+    }
+
+    /// Produce the next window's aggregation vector (Eq. 13).
+    pub fn plan(
+        &mut self,
+        sched: &ConnectivitySchedule,
+        start: usize,
+        states: &[SatForecastState],
+        training_status: f64,
+    ) -> Vec<bool> {
+        let (best, u) = random_search(
+            sched,
+            start,
+            states,
+            &self.utility,
+            training_status,
+            &self.params,
+            &mut self.rng,
+        );
+        self.planned_utilities.push(u);
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::connectivity::ConnectivitySchedule;
+
+    #[test]
+    fn plans_valid_windows_repeatedly() {
+        let sets: Vec<Vec<usize>> = (0..48).map(|i| if i % 3 == 0 { vec![0, 1] } else { vec![1] }).collect();
+        let sched = ConnectivitySchedule::from_sets(sets, 2);
+        let u = UtilityModel::new("forest").unwrap();
+        let params = SearchParams { i0: 24, n_min: 2, n_max: 6, n_search: 50 };
+        let mut p = FedSpacePlanner::new(u, params, 0);
+        let states = vec![SatForecastState::fresh(); 2];
+        for start in [0, 24] {
+            let w = p.plan(&sched, start, &states, 1.0);
+            assert_eq!(w.len(), 24);
+            let n = w.iter().filter(|&&b| b).count();
+            assert!((2..=6).contains(&n));
+        }
+        assert_eq!(p.planned_utilities.len(), 2);
+    }
+}

@@ -1,0 +1,236 @@
+//! Random search over aggregation vectors (paper Eq. 13, §3.2 phase 2).
+//!
+//! R ⊂ {0,1}^I0 is sampled by drawing n_agg ∈ [N_min, N_max] and placing
+//! n_agg aggregations uniformly without replacement over the I0 slots —
+//! exactly the paper's search-space reduction (|R| = 5000 by default).
+
+use super::forecast::{forecast_window, SatForecastState};
+use super::utility::UtilityModel;
+use crate::connectivity::ConnectivitySchedule;
+use crate::rng::Rng;
+
+/// Search hyper-parameters (paper §4.1 defaults in `ExperimentConfig`).
+#[derive(Clone, Debug)]
+pub struct SearchParams {
+    pub i0: usize,
+    pub n_min: usize,
+    pub n_max: usize,
+    /// |R| — number of candidate vectors evaluated
+    pub n_search: usize,
+}
+
+/// Window objective for one candidate (Eq. 13).
+///
+/// The paper scores Σ_l û(s_l, f(w^i)) with the training status frozen at
+/// the window start. Applied literally, that objective is additive in the
+/// number of aggregations — splitting one batch into two always raises the
+/// sum (û has diminishing returns in contributors), so the search
+/// degenerates to a^l ≡ 1. The paper escapes this by hand-tuning
+/// [N_min, N_max]; we additionally *chain* the training status through the
+/// window (T ← T − û, exactly the dependence §3.1 motivates introducing T
+/// for): as predicted loss drops, small or stale aggregations turn
+/// negative-utility and the search finds an interior aggregation count.
+/// `chain_t = false` recovers the paper's frozen-T objective (ablation
+/// bench `bench_ablation`).
+pub fn schedule_utility_opts(
+    sched: &ConnectivitySchedule,
+    start: usize,
+    candidate: &[bool],
+    states: &[SatForecastState],
+    utility: &UtilityModel,
+    training_status: f64,
+    chain_t: bool,
+) -> f64 {
+    let f = forecast_window(sched, start, candidate, states);
+    let mut t_cur = training_status;
+    let mut total = 0.0;
+    for st in &f.aggregations {
+        let u = if utility.is_fitted() {
+            utility.predict(st, t_cur)
+        } else {
+            UtilityModel::heuristic(st, t_cur)
+        };
+        total += u;
+        if chain_t {
+            t_cur = (t_cur - u).max(1e-6);
+        }
+    }
+    total
+}
+
+/// Chained-T window objective (the default; see `schedule_utility_opts`).
+pub fn schedule_utility(
+    sched: &ConnectivitySchedule,
+    start: usize,
+    candidate: &[bool],
+    states: &[SatForecastState],
+    utility: &UtilityModel,
+    training_status: f64,
+) -> f64 {
+    schedule_utility_opts(sched, start, candidate, states, utility, training_status, true)
+}
+
+/// Random search (Eq. 13): returns (best schedule, its predicted utility).
+pub fn random_search(
+    sched: &ConnectivitySchedule,
+    start: usize,
+    states: &[SatForecastState],
+    utility: &UtilityModel,
+    training_status: f64,
+    params: &SearchParams,
+    rng: &mut Rng,
+) -> (Vec<bool>, f64) {
+    assert!(params.n_min >= 1 && params.n_min <= params.n_max);
+    assert!(params.n_max <= params.i0);
+    let mut best: Option<(Vec<bool>, f64)> = None;
+    for _ in 0..params.n_search {
+        let n_agg = rng.gen_range(params.n_min, params.n_max + 1);
+        let mut cand = vec![false; params.i0];
+        for pos in rng.choose_k(params.i0, n_agg) {
+            cand[pos] = true;
+        }
+        let u = schedule_utility(sched, start, &cand, states, utility, training_status);
+        if best.as_ref().map_or(true, |(_, bu)| u > *bu) {
+            best = Some((cand, u));
+        }
+    }
+    best.expect("n_search > 0")
+}
+
+/// Infer a reasonable [N_min, N_max] from û (paper: "we infer N_min and
+/// N_max from û"): scan aggregation counts on the real window, keep the
+/// count-range whose marginal utility stays positive.
+pub fn infer_n_range(
+    sched: &ConnectivitySchedule,
+    start: usize,
+    states: &[SatForecastState],
+    utility: &UtilityModel,
+    training_status: f64,
+    i0: usize,
+    rng: &mut Rng,
+) -> (usize, usize) {
+    let mut best_n = 1;
+    let mut best_u = f64::NEG_INFINITY;
+    let mut utilities = Vec::new();
+    for n in 1..=i0 {
+        // average utility over a few uniform placements of n aggregations
+        let mut acc = 0.0;
+        const TRIALS: usize = 8;
+        for _ in 0..TRIALS {
+            let mut cand = vec![false; i0];
+            for pos in rng.choose_k(i0, n) {
+                cand[pos] = true;
+            }
+            acc += schedule_utility(sched, start, &cand, states, utility, training_status);
+        }
+        let u = acc / TRIALS as f64;
+        utilities.push(u);
+        if u > best_u {
+            best_u = u;
+            best_n = n;
+        }
+    }
+    // widen around the argmax to counts within 80% of the best utility
+    let lo = (1..=best_n)
+        .find(|&n| utilities[n - 1] >= 0.8 * best_u)
+        .unwrap_or(best_n);
+    let hi = (best_n..=i0)
+        .rev()
+        .find(|&n| utilities[n - 1] >= 0.8 * best_u)
+        .unwrap_or(best_n);
+    (lo.max(1), hi.max(lo))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::property;
+
+    fn line_schedule(k: usize, steps: usize, rng: &mut Rng) -> ConnectivitySchedule {
+        let sets: Vec<Vec<usize>> = (0..steps)
+            .map(|_| {
+                let n = rng.gen_range(0, k + 1);
+                let mut v = rng.choose_k(k, n);
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        ConnectivitySchedule::from_sets(sets, k)
+    }
+
+    fn fresh(k: usize) -> Vec<SatForecastState> {
+        vec![SatForecastState::fresh(); k]
+    }
+
+    #[test]
+    fn search_respects_n_range() {
+        let mut rng = Rng::new(1);
+        let s = line_schedule(5, 24, &mut rng);
+        let u = UtilityModel::new("forest").unwrap(); // unfitted -> heuristic
+        let params = SearchParams { i0: 24, n_min: 4, n_max: 8, n_search: 200 };
+        let (best, _) =
+            random_search(&s, 0, &fresh(5), &u, 1.0, &params, &mut rng);
+        let n: usize = best.iter().filter(|&&b| b).count();
+        assert!((4..=8).contains(&n), "n={n}");
+        assert_eq!(best.len(), 24);
+    }
+
+    #[test]
+    fn search_beats_random_candidate_on_average() {
+        let mut rng = Rng::new(2);
+        let s = line_schedule(6, 24, &mut rng);
+        let u = UtilityModel::new("forest").unwrap();
+        let params = SearchParams { i0: 24, n_min: 2, n_max: 10, n_search: 300 };
+        let (_, best_u) = random_search(&s, 0, &fresh(6), &u, 1.0, &params, &mut rng);
+        // any single random candidate can't beat the max over 300
+        for _ in 0..20 {
+            let n = rng.gen_range(2, 11);
+            let mut cand = vec![false; 24];
+            for p in rng.choose_k(24, n) {
+                cand[p] = true;
+            }
+            let cu = schedule_utility(&s, 0, &cand, &fresh(6), &u, 1.0);
+            assert!(cu <= best_u + 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let s1 = line_schedule(4, 24, &mut r1);
+        let s2 = line_schedule(4, 24, &mut r2);
+        let u = UtilityModel::new("forest").unwrap();
+        let params = SearchParams { i0: 24, n_min: 1, n_max: 6, n_search: 100 };
+        let a = random_search(&s1, 0, &fresh(4), &u, 1.0, &params, &mut r1);
+        let b = random_search(&s2, 0, &fresh(4), &u, 1.0, &params, &mut r2);
+        assert_eq!(a.0, b.0);
+    }
+
+    #[test]
+    fn property_candidates_always_valid() {
+        property(30, |rng| {
+            let k = rng.gen_range(1, 8);
+            let i0 = rng.gen_range(4, 30);
+            let s = line_schedule(k, i0, rng);
+            let n_min = rng.gen_range(1, i0.min(4) + 1);
+            let n_max = rng.gen_range(n_min, i0 + 1);
+            let u = UtilityModel::new("forest").unwrap();
+            let params = SearchParams { i0, n_min, n_max, n_search: 20 };
+            let (best, util) =
+                random_search(&s, 0, &fresh(k), &u, 1.0, &params, rng);
+            let n: usize = best.iter().filter(|&&b| b).count();
+            assert!(n >= n_min && n <= n_max);
+            assert!(util.is_finite());
+        });
+    }
+
+    #[test]
+    fn infer_n_range_sane() {
+        let mut rng = Rng::new(5);
+        let s = line_schedule(6, 24, &mut rng);
+        let u = UtilityModel::new("forest").unwrap();
+        let (lo, hi) = infer_n_range(&s, 0, &fresh(6), &u, 1.0, 24, &mut rng);
+        assert!(lo >= 1 && lo <= hi && hi <= 24, "({lo}, {hi})");
+    }
+}

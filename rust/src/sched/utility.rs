@@ -1,0 +1,123 @@
+//! The utility model û(s, T) ≈ Δf — the regression at the heart of the
+//! FedSpace scheduler (paper §3.2, Figure 5 phase 1).
+
+use super::features::featurize;
+use crate::ml::{LinearRegression, RandomForest, RandomForestParams, Regressor};
+use anyhow::{bail, Result};
+
+/// û: a fitted regressor over featurized (staleness multiset, T) inputs.
+pub struct UtilityModel {
+    regressor: Box<dyn Regressor>,
+    fitted: bool,
+}
+
+impl UtilityModel {
+    /// `kind`: "forest" (paper default) or "linear" (ablation baseline).
+    pub fn new(kind: &str) -> Result<Self> {
+        let regressor: Box<dyn Regressor> = match kind {
+            "forest" => Box::new(RandomForest::new(RandomForestParams::default())),
+            "linear" => Box::new(LinearRegression::new(1e-6)),
+            other => bail!("unknown regressor kind {other:?}"),
+        };
+        Ok(UtilityModel { regressor, fitted: false })
+    }
+
+    /// Fit on raw samples: (stalenesses of one aggregation, T) → Δf.
+    pub fn fit(&mut self, samples: &[(Vec<usize>, f64)], targets: &[f64]) {
+        assert_eq!(samples.len(), targets.len());
+        assert!(!samples.is_empty(), "no utility samples");
+        let x: Vec<Vec<f64>> = samples.iter().map(|(s, t)| featurize(s, *t)).collect();
+        self.regressor.fit(&x, targets);
+        self.fitted = true;
+    }
+
+    /// Predicted Δf of aggregating `stalenesses` at training status `t`.
+    pub fn predict(&self, stalenesses: &[usize], t: f64) -> f64 {
+        assert!(self.fitted, "utility model not fitted");
+        self.regressor.predict(&featurize(stalenesses, t))
+    }
+
+    pub fn is_fitted(&self) -> bool {
+        self.fitted
+    }
+
+    /// Fallback heuristic û when no samples are available (cold start):
+    /// fresh gradients help, stale ones help less (the Eq.-4 compensation
+    /// shape), aggregating nothing is worthless. Keeps FedSpace functional
+    /// before phase 1 completes; tested to prefer the same orderings.
+    pub fn heuristic(stalenesses: &[usize], _t: f64) -> f64 {
+        stalenesses.iter().map(|&s| ((s + 1) as f64).powf(-0.5)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_samples(n: usize) -> (Vec<(Vec<usize>, f64)>, Vec<f64>) {
+        // ground truth: Δf = Σ (s+1)^-1 scaled by training status decay
+        let mut samples = Vec::new();
+        let mut targets = Vec::new();
+        let mut rng = crate::rng::Rng::new(0);
+        for _ in 0..n {
+            let k = rng.gen_range(1, 12);
+            let st: Vec<usize> = (0..k).map(|_| rng.gen_range(0, 7)).collect();
+            let t = rng.gen_f64(0.5, 4.0);
+            let y: f64 =
+                st.iter().map(|&s| 1.0 / (s + 1) as f64).sum::<f64>() * (t / 4.0);
+            samples.push((st, t));
+            targets.push(y);
+        }
+        (samples, targets)
+    }
+
+    #[test]
+    fn learns_staleness_hurts() {
+        let (s, y) = synthetic_samples(600);
+        let mut u = UtilityModel::new("forest").unwrap();
+        u.fit(&s, &y);
+        let fresh = u.predict(&[0, 0, 0, 0], 2.0);
+        let stale = u.predict(&[6, 6, 6, 6], 2.0);
+        assert!(fresh > stale, "fresh={fresh} stale={stale}");
+    }
+
+    #[test]
+    fn learns_more_contributors_help() {
+        let (s, y) = synthetic_samples(600);
+        let mut u = UtilityModel::new("forest").unwrap();
+        u.fit(&s, &y);
+        let many = u.predict(&[0, 0, 0, 0, 0, 0, 0, 0], 2.0);
+        let few = u.predict(&[0], 2.0);
+        assert!(many > few, "many={many} few={few}");
+    }
+
+    #[test]
+    fn linear_kind_works() {
+        let (s, y) = synthetic_samples(300);
+        let mut u = UtilityModel::new("linear").unwrap();
+        u.fit(&s, &y);
+        assert!(u.is_fitted());
+        assert!(u.predict(&[0, 0], 2.0).is_finite());
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        assert!(UtilityModel::new("svm").is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn predict_before_fit_panics() {
+        let u = UtilityModel::new("forest").unwrap();
+        let _ = u.predict(&[0], 1.0);
+    }
+
+    #[test]
+    fn heuristic_prefers_fresh_and_more() {
+        assert!(UtilityModel::heuristic(&[0], 1.0) > UtilityModel::heuristic(&[5], 1.0));
+        assert!(
+            UtilityModel::heuristic(&[0, 0], 1.0) > UtilityModel::heuristic(&[0], 1.0)
+        );
+        assert_eq!(UtilityModel::heuristic(&[], 1.0), 0.0);
+    }
+}

@@ -1,0 +1,538 @@
+//! The discrete-time engine: Algorithm 1, executed over a connectivity
+//! schedule with any aggregation policy and any trainer backend.
+
+use crate::cfg::AlgorithmKind;
+use crate::connectivity::ConnectivitySchedule;
+use crate::fl::{
+    AggregationPolicy, AsyncPolicy, FedBuffPolicy, GsState, ScheduledPolicy, ServerAggregator,
+    SyncPolicy,
+};
+use crate::fl::client::SatClient;
+use crate::metrics::CurvePoint;
+use crate::rng::Rng;
+use crate::sched::{FedSpacePlanner, SatForecastState};
+use crate::sim::trace::RunTrace;
+use crate::sim::trainer::Trainer;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Engine knobs (subset of `ExperimentConfig` the loop itself needs).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub algorithm: AlgorithmKind,
+    pub alpha: f64,
+    pub fedbuff_m: usize,
+    /// evaluate every this many time indexes
+    pub eval_every: usize,
+    pub days_per_step: f64,
+    /// stop as soon as validation accuracy reaches this (Table 2 runs)
+    pub stop_at_accuracy: Option<f64>,
+    /// local-training duration in slots (1 = done by next contact)
+    pub train_duration_slots: usize,
+    pub seed: u64,
+    /// FedSpace scheduling period I0 (ignored by other algorithms)
+    pub i0: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            algorithm: AlgorithmKind::FedBuff,
+            alpha: 0.5,
+            fedbuff_m: 96,
+            eval_every: 4,
+            days_per_step: 1.0 / 96.0,
+            stop_at_accuracy: None,
+            train_duration_slots: 1,
+            seed: 7,
+            i0: 24,
+        }
+    }
+}
+
+/// Outcome of one run.
+pub struct RunResult {
+    pub trace: RunTrace,
+    /// simulated days at which the target accuracy was first reached
+    pub days_to_target: Option<f64>,
+    pub final_w: Vec<f32>,
+    pub final_round: usize,
+}
+
+enum PolicyImpl {
+    Sync(SyncPolicy),
+    Async(AsyncPolicy),
+    FedBuff(FedBuffPolicy),
+    FedSpace(ScheduledPolicy),
+}
+
+impl PolicyImpl {
+    fn decide(&mut self, i: usize, conn: &[usize], buffer: &crate::fl::Buffer) -> bool {
+        match self {
+            PolicyImpl::Sync(p) => p.decide(i, conn, buffer),
+            PolicyImpl::Async(p) => p.decide(i, conn, buffer),
+            PolicyImpl::FedBuff(p) => p.decide(i, conn, buffer),
+            PolicyImpl::FedSpace(p) => p.decide(i, conn, buffer),
+        }
+    }
+}
+
+/// The simulation engine.
+pub struct Engine<'a> {
+    pub sched: &'a ConnectivitySchedule,
+    pub trainer: &'a dyn Trainer,
+    pub aggregator: &'a mut dyn ServerAggregator,
+    pub cfg: EngineConfig,
+    /// Some(..) iff algorithm == FedSpace
+    pub planner: Option<FedSpacePlanner>,
+}
+
+impl<'a> Engine<'a> {
+    pub fn new(
+        sched: &'a ConnectivitySchedule,
+        trainer: &'a dyn Trainer,
+        aggregator: &'a mut dyn ServerAggregator,
+        cfg: EngineConfig,
+        planner: Option<FedSpacePlanner>,
+    ) -> Self {
+        if cfg.algorithm == AlgorithmKind::FedSpace {
+            assert!(planner.is_some(), "FedSpace requires a planner");
+        }
+        Engine { sched, trainer, aggregator, cfg, planner }
+    }
+
+    fn make_policy(&self) -> PolicyImpl {
+        // effective client count: satellites with data (sync must not wait
+        // forever for satellites that can never contribute)
+        let with_data = (0..self.sched.n_sats)
+            .filter(|&k| self.trainer.sat_samples(k) > 0)
+            .count();
+        match self.cfg.algorithm {
+            AlgorithmKind::Sync => PolicyImpl::Sync(SyncPolicy { n_sats: with_data }),
+            AlgorithmKind::Async => PolicyImpl::Async(AsyncPolicy),
+            AlgorithmKind::FedBuff => {
+                PolicyImpl::FedBuff(FedBuffPolicy { m: self.cfg.fedbuff_m.min(with_data) })
+            }
+            AlgorithmKind::FedSpace => PolicyImpl::FedSpace(ScheduledPolicy::new()),
+        }
+    }
+
+    /// Execute Algorithm 1 end to end.
+    pub fn run(&mut self) -> Result<RunResult> {
+        let cfg = self.cfg.clone();
+        let k = self.sched.n_sats;
+        let mut rng = Rng::new(cfg.seed);
+        let mut sat_rngs: Vec<Rng> = (0..k).map(|i| rng.split(i as u64 + 1)).collect();
+        let mut clients: Vec<SatClient> =
+            (0..k).map(|i| SatClient::new(i, self.trainer.sat_samples(i))).collect();
+        let mut gs = GsState::new(self.trainer.init(&mut rng), cfg.alpha);
+        let mut policy = self.make_policy();
+        let mut trace = RunTrace::default();
+
+        // initial evaluation seeds the curve and the training status T
+        let t0 = Instant::now();
+        let (mut last_loss, mut last_acc) = self.trainer.evaluate(&gs.w)?;
+        trace.t_eval_s += t0.elapsed().as_secs_f64();
+        trace.curve.push(CurvePoint {
+            day: 0.0,
+            step: 0,
+            round: 0,
+            accuracy: last_acc,
+            loss: last_loss,
+        });
+        let mut days_to_target = None;
+
+        for i in 0..self.sched.n_steps() {
+            // FedSpace: (re)plan at window boundaries using the live state
+            if let (PolicyImpl::FedSpace(sp), Some(planner)) =
+                (&mut policy, self.planner.as_mut())
+            {
+                if sp.horizon() <= i {
+                    let states: Vec<SatForecastState> = clients
+                        .iter()
+                        .map(|c| SatForecastState {
+                            pending: c.pending.is_some(),
+                            staleness_now: gs.i_g.saturating_sub(c.base_round),
+                            holds_current: c.held_version == Some(gs.i_g),
+                            has_data: c.has_data(),
+                        })
+                        .collect();
+                    let window = planner.plan(self.sched, i, &states, last_loss);
+                    sp.extend(&window);
+                }
+            }
+
+            let conn = self.sched.sets[i].clone();
+
+            // 1. receive uploads (Algorithm 1's for k ∈ C_i loop)
+            for &s in &conn {
+                trace.connections += 1;
+                if clients[s].can_upload(i) {
+                    let (g, base) = clients[s].upload(i);
+                    gs.receive(s, g, base, clients[s].n_samples);
+                    trace.uploads += 1;
+                } else {
+                    trace.idle += 1;
+                }
+            }
+
+            // 2. SCHEDULER + SERVERUPDATE
+            if policy.decide(i, &conn, &gs.buffer) {
+                let t = Instant::now();
+                let stalenesses = gs.update(self.aggregator)?;
+                trace.t_agg_s += t.elapsed().as_secs_f64();
+                for s in stalenesses {
+                    trace.staleness.add(s as i64);
+                }
+                trace.global_updates += 1;
+            }
+
+            // 3. broadcast (w^{i+1}, i_g) and start local training
+            for &s in &conn {
+                if clients[s].has_data() && clients[s].wants_model(gs.i_g, i) {
+                    clients[s].receive(gs.i_g, i, cfg.train_duration_slots);
+                    let t = Instant::now();
+                    let (delta, _train_loss) =
+                        self.trainer.local_update(s, &gs.w, &mut sat_rngs[s])?;
+                    trace.t_train_s += t.elapsed().as_secs_f64();
+                    clients[s].set_update(delta);
+                }
+            }
+
+            // 4. periodic evaluation
+            let last_step = i + 1 == self.sched.n_steps();
+            if (i + 1) % cfg.eval_every == 0 || last_step {
+                let t = Instant::now();
+                let (loss, acc) = self.trainer.evaluate(&gs.w)?;
+                trace.t_eval_s += t.elapsed().as_secs_f64();
+                last_loss = loss;
+                last_acc = acc;
+                let day = (i + 1) as f64 * cfg.days_per_step;
+                trace.curve.push(CurvePoint {
+                    day,
+                    step: i + 1,
+                    round: gs.i_g,
+                    accuracy: acc,
+                    loss,
+                });
+                if let Some(target) = cfg.stop_at_accuracy {
+                    if acc >= target && days_to_target.is_none() {
+                        days_to_target = Some(day);
+                        break;
+                    }
+                }
+            }
+        }
+        let _ = last_acc;
+        trace.global_updates = gs.i_g;
+        Ok(RunResult {
+            days_to_target: days_to_target
+                .or_else(|| trace.curve.days_to_accuracy(cfg.stop_at_accuracy.unwrap_or(2.0))),
+            trace,
+            final_round: gs.i_g,
+            final_w: gs.w,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::CpuAggregator;
+    use crate::orbit::{planet_ground_stations, planet_labs_like};
+    use crate::sched::{SearchParams, UtilityModel};
+    use crate::sim::trainer::MockTrainer;
+
+    fn small_sched(n_sats: usize, steps: usize) -> ConnectivitySchedule {
+        let c = planet_labs_like(n_sats, 0);
+        let gs = planet_ground_stations();
+        ConnectivitySchedule::compute(&c, &gs, steps, Default::default())
+    }
+
+    fn run_mock(algorithm: AlgorithmKind, m: usize, steps: usize) -> RunResult {
+        let sched = small_sched(12, steps);
+        let trainer = MockTrainer::new(16, 12, 0.3, 0);
+        let mut agg = CpuAggregator;
+        let planner = if algorithm == AlgorithmKind::FedSpace {
+            Some(FedSpacePlanner::new(
+                UtilityModel::new("forest").unwrap(), // unfitted -> heuristic
+                SearchParams { i0: 24, n_min: 2, n_max: 8, n_search: 100 },
+                0,
+            ))
+        } else {
+            None
+        };
+        let cfg = EngineConfig {
+            algorithm,
+            fedbuff_m: m,
+            eval_every: 4,
+            ..Default::default()
+        };
+        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, planner);
+        e.run().unwrap()
+    }
+
+    #[test]
+    fn all_algorithms_complete_and_learn() {
+        for alg in [
+            AlgorithmKind::Sync,
+            AlgorithmKind::Async,
+            AlgorithmKind::FedBuff,
+            AlgorithmKind::FedSpace,
+        ] {
+            let r = run_mock(alg, 4, 96);
+            assert!(!r.trace.curve.points.is_empty(), "{alg:?}");
+            if alg != AlgorithmKind::Sync {
+                // everyone except sync should make multiple global updates
+                // in a simulated day
+                assert!(r.final_round >= 1, "{alg:?} rounds={}", r.final_round);
+                let first = r.trace.curve.points.first().unwrap().accuracy;
+                let best = r.trace.curve.best_accuracy();
+                assert!(best > first, "{alg:?} did not improve");
+            }
+        }
+    }
+
+    #[test]
+    fn sync_has_more_idle_fraction_than_async() {
+        let sync = run_mock(AlgorithmKind::Sync, 4, 96);
+        let asy = run_mock(AlgorithmKind::Async, 4, 96);
+        assert!(sync.trace.idle_fraction() > asy.trace.idle_fraction());
+    }
+
+    #[test]
+    fn async_updates_most_frequently() {
+        let asy = run_mock(AlgorithmKind::Async, 4, 96);
+        let fb = run_mock(AlgorithmKind::FedBuff, 6, 96);
+        let sync = run_mock(AlgorithmKind::Sync, 4, 96);
+        assert!(asy.final_round >= fb.final_round);
+        assert!(fb.final_round >= sync.final_round);
+    }
+
+    #[test]
+    fn async_has_larger_max_staleness_than_fedbuff() {
+        let asy = run_mock(AlgorithmKind::Async, 4, 192);
+        let fb = run_mock(AlgorithmKind::FedBuff, 6, 192);
+        let max = |r: &RunResult| r.trace.staleness.max_key().unwrap_or(0);
+        assert!(max(&asy) >= max(&fb), "async={} fedbuff={}", max(&asy), max(&fb));
+    }
+
+    #[test]
+    #[ignore = "tuning sweep, run with --ignored --nocapture"]
+    fn sweep_mock_regimes() {
+        for (het, lr, noise, target) in [
+            (1.0f32, 0.15f32, 0.3f32, 0.9f64),
+            (1.5, 0.1, 0.5, 0.9),
+            (2.0, 0.1, 0.8, 0.9),
+        ] {
+            println!("--- het={het} lr={lr} noise={noise} target={target}");
+            for m in [1usize, 2, 4, 8, 12] {
+                let sched = small_sched(12, 480);
+                let mut trainer = MockTrainer::new(16, 12, het, 0);
+                trainer.lr = lr;
+                trainer.noise = noise;
+                let mut agg = CpuAggregator;
+                let cfg = EngineConfig {
+                    algorithm: if m == 12 { AlgorithmKind::Sync } else { AlgorithmKind::FedBuff },
+                    fedbuff_m: m,
+                    stop_at_accuracy: Some(target),
+                    ..Default::default()
+                };
+                let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+                let r = e.run().unwrap();
+                println!(
+                    "  M={m:<3} days={:?} best={:.3} rounds={} max_s={:?}",
+                    r.days_to_target,
+                    r.trace.curve.best_accuracy(),
+                    r.final_round,
+                    r.trace.staleness.max_key()
+                );
+            }
+        }
+    }
+
+    /// the staleness-matters regime found by `sweep_mock_regimes`: async
+    /// plateaus below the target, buffered schemes reach it — the paper's
+    /// Figure 6 shape.
+    fn hard_mock(n_sats: usize) -> MockTrainer {
+        let mut t = MockTrainer::new(16, n_sats, 1.0, 0);
+        t.lr = 0.15;
+        t.noise = 0.3;
+        t
+    }
+
+    #[test]
+    #[ignore = "debug instrumentation"]
+    fn debug_fedspace_schedule() {
+        let sched = small_sched(12, 480);
+        let trainer = hard_mock(12);
+        let backend =
+            crate::sim::trainer::TrainerSampleBackend { trainer: &trainer, n_sats: 12 };
+        let mut urng = crate::rng::Rng::new(0);
+        let bank = crate::sched::pretrain_bank(&backend, 20, 6, 0.5, &mut urng).unwrap();
+        let (inp, tgt) =
+            crate::sched::generate_samples(&backend, &bank, 400, 8, 12, 0.5, &mut urng).unwrap();
+        let mut utility = UtilityModel::new("forest").unwrap();
+        utility.fit(&inp, &tgt);
+        // probe û's shape
+        for t in [bank.losses[0], bank.losses[10], bank.losses[19]] {
+            println!(
+                "T={t:.4}: u([0x1])={:.4} u([0x4])={:.4} u([0x8])={:.4} u([4x4])={:.4}",
+                utility.predict(&[0], t),
+                utility.predict(&[0, 0, 0, 0], t),
+                utility.predict(&[0; 8], t),
+                utility.predict(&[4, 4, 4, 4], t)
+            );
+        }
+        let mut planner = FedSpacePlanner::new(
+            utility,
+            SearchParams { i0: 24, n_min: 4, n_max: 16, n_search: 300 },
+            0,
+        );
+        // plan first window from fresh states and show the forecast
+        let states = vec![crate::sched::SatForecastState::fresh(); 12];
+        let w = planner.plan(&sched, 0, &states, bank.losses[0]);
+        let n: usize = w.iter().filter(|&&b| b).count();
+        println!("window0: n_agg={n} predicted_u={:.4}", planner.planned_utilities[0]);
+        let f = crate::sched::forecast_window(&sched, 0, &w, &states);
+        println!("forecast aggs: {:?}", f.aggregations);
+        // live run comparison
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig {
+            algorithm: AlgorithmKind::FedSpace,
+            stop_at_accuracy: Some(0.9),
+            ..Default::default()
+        };
+        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, Some(planner));
+        let r = e.run().unwrap();
+        println!(
+            "fedspace live: days={:?} rounds={} uploads={} idle={} stal={:?}",
+            r.days_to_target,
+            r.final_round,
+            r.trace.uploads,
+            r.trace.idle,
+            r.trace.staleness.entries().collect::<Vec<_>>()
+        );
+        for p in r.trace.curve.points.iter().take(20) {
+            println!("  day={:.2} acc={:.3} round={}", p.day, p.accuracy, p.round);
+        }
+        let trainer2 = hard_mock(12);
+        let mut agg2 = CpuAggregator;
+        let cfg2 = EngineConfig {
+            algorithm: AlgorithmKind::FedBuff,
+            fedbuff_m: 8,
+            stop_at_accuracy: Some(0.9),
+            ..Default::default()
+        };
+        let mut e2 = Engine::new(&sched, &trainer2, &mut agg2, cfg2, None);
+        let r2 = e2.run().unwrap();
+        println!(
+            "fedbuff8 live: days={:?} rounds={} uploads={} idle={} stal={:?}",
+            r2.days_to_target,
+            r2.final_round,
+            r2.trace.uploads,
+            r2.trace.idle,
+            r2.trace.staleness.entries().collect::<Vec<_>>()
+        );
+        for p in r2.trace.curve.points.iter().take(20) {
+            println!("  day={:.2} acc={:.3} round={}", p.day, p.accuracy, p.round);
+        }
+    }
+
+    #[test]
+    fn fedspace_reaches_target_no_slower_than_fedbuff() {
+        // With a fitted û, FedSpace's schedule should be competitive
+        // (within 1.5x) with the best FedBuff configuration.
+        const TARGET: f64 = 0.9;
+        const K: usize = 48;
+        let mut best_fb = f64::INFINITY;
+        for m in [8, 16, 32] {
+            let sched = small_sched(K, 480);
+            let trainer = hard_mock(K);
+            let mut agg = CpuAggregator;
+            let cfg = EngineConfig {
+                algorithm: AlgorithmKind::FedBuff,
+                fedbuff_m: m,
+                stop_at_accuracy: Some(TARGET),
+                ..Default::default()
+            };
+            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+            if let Some(d) = e.run().unwrap().days_to_target {
+                best_fb = best_fb.min(d);
+            }
+        }
+        let sched = small_sched(K, 480);
+        let trainer = hard_mock(K);
+        let mut agg = CpuAggregator;
+        // fit û via phase 1 on the *same* task (paper §4.3: source = target)
+        let backend =
+            crate::sim::trainer::TrainerSampleBackend { trainer: &trainer, n_sats: K };
+        let mut urng = crate::rng::Rng::new(0);
+        let bank = crate::sched::pretrain_bank(&backend, 20, 8, 0.5, &mut urng).unwrap();
+        let (inp, tgt) =
+            crate::sched::generate_samples(&backend, &bank, 400, 8, 24, 0.5, &mut urng).unwrap();
+        let mut utility = UtilityModel::new("forest").unwrap();
+        utility.fit(&inp, &tgt);
+        let planner = FedSpacePlanner::new(
+            utility,
+            SearchParams { i0: 24, n_min: 4, n_max: 8, n_search: 300 },
+            0,
+        );
+        let cfg = EngineConfig {
+            algorithm: AlgorithmKind::FedSpace,
+            stop_at_accuracy: Some(TARGET),
+            ..Default::default()
+        };
+        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, Some(planner));
+        let fs = e.run().unwrap().days_to_target;
+        assert!(best_fb.is_finite(), "fedbuff never reached target");
+        let fs = fs.expect("fedspace never reached target");
+        assert!(fs <= best_fb * 1.5, "fedspace={fs} fedbuff={best_fb}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = run_mock(AlgorithmKind::FedBuff, 4, 48);
+        let b = run_mock(AlgorithmKind::FedBuff, 4, 48);
+        assert_eq!(a.final_round, b.final_round);
+        assert_eq!(a.trace.curve.points.len(), b.trace.curve.points.len());
+        for (p, q) in a.trace.curve.points.iter().zip(b.trace.curve.points.iter()) {
+            assert_eq!(p.accuracy, q.accuracy);
+        }
+    }
+
+    #[test]
+    fn satellites_without_data_never_upload() {
+        // trainer reporting zero samples for sat 0
+        struct NoDataSat(MockTrainer);
+        impl Trainer for NoDataSat {
+            fn d(&self) -> usize {
+                self.0.d()
+            }
+            fn init(&self, rng: &mut Rng) -> Vec<f32> {
+                self.0.init(rng)
+            }
+            fn local_update(&self, s: usize, w: &[f32], r: &mut Rng) -> Result<(Vec<f32>, f32)> {
+                assert_ne!(s, 0, "satellite 0 has no data but trained");
+                self.0.local_update(s, w, r)
+            }
+            fn evaluate(&self, w: &[f32]) -> Result<(f64, f64)> {
+                self.0.evaluate(w)
+            }
+            fn sat_samples(&self, s: usize) -> usize {
+                if s == 0 {
+                    0
+                } else {
+                    100
+                }
+            }
+        }
+        let sched = small_sched(6, 96);
+        let trainer = NoDataSat(MockTrainer::new(8, 6, 0.1, 0));
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig { algorithm: AlgorithmKind::Async, ..Default::default() };
+        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+        let r = e.run().unwrap();
+        assert!(r.final_round > 0);
+    }
+}

@@ -1,0 +1,53 @@
+//! Per-run trace: everything Figures 6–7 and Table 2 need.
+
+use crate::metrics::{Histogram, TrainingCurve};
+
+/// Collected over one simulated run of Algorithm 1.
+#[derive(Clone, Debug, Default)]
+pub struct RunTrace {
+    /// staleness of every aggregated gradient (Figure 7 left)
+    pub staleness: Histogram,
+    /// idle connections (Figure 7 right): connected, nothing new to send
+    pub idle: usize,
+    /// total connections observed
+    pub connections: usize,
+    /// total uploads received
+    pub uploads: usize,
+    /// number of global updates (i_g at the end)
+    pub global_updates: usize,
+    /// accuracy/loss curve (Figure 6)
+    pub curve: TrainingCurve,
+    /// wall-clock seconds spent in local training / aggregation / eval
+    pub t_train_s: f64,
+    pub t_agg_s: f64,
+    pub t_eval_s: f64,
+}
+
+impl RunTrace {
+    pub fn idle_fraction(&self) -> f64 {
+        if self.connections == 0 {
+            0.0
+        } else {
+            self.idle as f64 / self.connections as f64
+        }
+    }
+
+    /// staleness histogram as (staleness, count) rows
+    pub fn staleness_rows(&self) -> Vec<(i64, u64)> {
+        self.staleness.entries().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_fraction_bounds() {
+        let mut t = RunTrace::default();
+        assert_eq!(t.idle_fraction(), 0.0);
+        t.connections = 10;
+        t.idle = 9;
+        assert!((t.idle_fraction() - 0.9).abs() < 1e-12);
+    }
+}

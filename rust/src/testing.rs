@@ -1,0 +1,101 @@
+//! Mini property-testing framework — substrate built from scratch (no
+//! `proptest` in the offline vendor set).
+//!
+//! Usage mirrors the proptest idiom the coordinator tests rely on:
+//!
+//! ```no_run
+//! use fedspace::testing::property;
+//! property(100, |rng| {
+//!     let n = rng.gen_range(1, 50);
+//!     let xs = (0..n).map(|_| rng.next_f32()).collect::<Vec<_>>();
+//!     let s: f32 = xs.iter().sum();
+//!     assert!(s >= 0.0);
+//! });
+//! ```
+//!
+//! Each case runs with an independently seeded [`crate::rng::Rng`]; on panic
+//! the failing case's seed is printed so the case replays deterministically
+//! via [`replay`].
+
+use crate::rng::Rng;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Base seed for property runs. Override with env `FEDSPACE_PROP_SEED` to
+/// reproduce CI failures locally.
+fn base_seed() -> u64 {
+    std::env::var("FEDSPACE_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xFED5_9ACE)
+}
+
+/// Run `f` against `cases` independently-seeded RNGs; panic with the failing
+/// seed on the first failure.
+pub fn property<F: Fn(&mut Rng)>(cases: u64, f: F) {
+    let base = base_seed();
+    for case in 0..cases {
+        let seed = base.wrapping_add(case).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        let mut rng = Rng::new(seed);
+        let result = catch_unwind(AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(err) = result {
+            eprintln!(
+                "property case {case}/{cases} FAILED — replay with \
+                 fedspace::testing::replay({seed:#x}, ..)"
+            );
+            std::panic::resume_unwind(err);
+        }
+    }
+}
+
+/// Replay a single failing property case by seed.
+pub fn replay<F: Fn(&mut Rng)>(seed: u64, f: F) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(got.len(), want.len(), "length mismatch");
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        let tol = atol + rtol * w.abs();
+        assert!(
+            (g - w).abs() <= tol,
+            "mismatch at {i}: got {g}, want {w} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut count = 0u64;
+        // count via a cell captured by the closure
+        let counter = std::cell::Cell::new(0u64);
+        property(25, |_| counter.set(counter.get() + 1));
+        count += counter.get();
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic]
+    fn property_propagates_failure() {
+        property(10, |rng| {
+            let v = rng.next_f64();
+            assert!(v < 0.5, "intentional failure for v={v}");
+        });
+    }
+
+    #[test]
+    fn allclose_accepts_equal() {
+        assert_allclose(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5, 1e-5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_rejects_far() {
+        assert_allclose(&[1.0], &[2.0], 1e-5, 1e-5);
+    }
+}

@@ -1,0 +1,152 @@
+//! End-to-end system tests: the full Algorithm-1 loop over real orbital
+//! connectivity, with both the mock backend (all four algorithms, fast) and
+//! the PJRT backend (real artifacts, real synthetic-fMoW batches — the
+//! complete three-layer path).
+
+use fedspace::app::{run_mock_experiment, run_pjrt_experiment};
+use fedspace::cfg::{AlgorithmKind, DataDist, ExperimentConfig};
+
+fn base_cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        n_sats: 16,
+        n_steps: 96,
+        fedbuff_m: 6,
+        i0: 24,
+        n_min: 2,
+        n_max: 8,
+        n_search: 100,
+        utility_samples: 80,
+        model_size: "small".to_string(),
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string(),
+        n_train: 800,
+        n_val: 64,
+        eval_every: 8,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn mock_end_to_end_all_algorithms_both_dists() {
+    for dist in [DataDist::Iid, DataDist::NonIid] {
+        for alg in [
+            AlgorithmKind::Sync,
+            AlgorithmKind::Async,
+            AlgorithmKind::FedBuff,
+            AlgorithmKind::FedSpace,
+        ] {
+            let cfg = ExperimentConfig { algorithm: alg, dist, ..base_cfg() };
+            let out = run_mock_experiment(&cfg, None).unwrap();
+            let r = &out.result;
+            assert!(r.trace.connections > 0, "{alg:?}/{dist:?}: no connections");
+            assert!(
+                r.trace.uploads + r.trace.idle == r.trace.connections,
+                "{alg:?}/{dist:?}: contact accounting broken"
+            );
+            // aggregated gradients never exceed uploads
+            assert!(
+                r.trace.staleness.total() as usize <= r.trace.uploads,
+                "{alg:?}/{dist:?}: staleness trace overcounts"
+            );
+        }
+    }
+}
+
+#[test]
+fn mock_sync_idles_most_and_async_is_stalest() {
+    let mut idle_frac = std::collections::BTreeMap::new();
+    let mut max_stal = std::collections::BTreeMap::new();
+    for alg in [AlgorithmKind::Sync, AlgorithmKind::Async, AlgorithmKind::FedBuff] {
+        let cfg = ExperimentConfig { algorithm: alg, ..base_cfg() };
+        let out = run_mock_experiment(&cfg, None).unwrap();
+        idle_frac.insert(alg.name(), out.result.trace.idle_fraction());
+        max_stal.insert(alg.name(), out.result.trace.staleness.max_key().unwrap_or(0));
+    }
+    assert!(idle_frac["sync"] >= idle_frac["fedbuff"]);
+    assert!(idle_frac["fedbuff"] >= idle_frac["async"] - 1e-9);
+    assert!(max_stal["async"] >= max_stal["fedbuff"]);
+}
+
+#[test]
+fn pjrt_end_to_end_fedbuff_trains() {
+    // The full three-layer path on a real small workload (CI-sized).
+    let cfg = ExperimentConfig {
+        algorithm: AlgorithmKind::FedBuff,
+        fedbuff_m: 4,
+        n_sats: 12,
+        n_steps: 96,
+        n_train: 800,
+        n_val: 64,
+        eval_every: 24,
+        lr: 1.0,
+        ..base_cfg()
+    };
+    let out = run_pjrt_experiment(&cfg, 64, None).unwrap();
+    let r = &out.result;
+    assert!(r.final_round > 0, "no global updates");
+    let first = r.trace.curve.points.first().unwrap();
+    let last = r.trace.curve.points.last().unwrap();
+    // a short CI-sized run: the loss must clearly move off ln(62) even if
+    // top-1 accuracy barely registers yet (the long Figure-6 runs live in
+    // benches/bench_fig6_table2)
+    assert!(
+        last.loss < first.loss - 0.05,
+        "no learning: loss {} -> {}",
+        first.loss,
+        last.loss
+    );
+    assert!(r.trace.curve.points.iter().all(|p| p.loss.is_finite()));
+}
+
+#[test]
+fn pjrt_noniid_partition_runs() {
+    let cfg = ExperimentConfig {
+        algorithm: AlgorithmKind::Async,
+        dist: DataDist::NonIid,
+        n_sats: 8,
+        n_steps: 16,
+        n_train: 400,
+        n_val: 32,
+        eval_every: 8,
+        ..base_cfg()
+    };
+    let out = run_pjrt_experiment(&cfg, 32, None).unwrap();
+    assert!(out.result.trace.connections > 0);
+}
+
+#[test]
+fn mock_training_survives_contact_dropout() {
+    // Failure injection: 25% of forecast contacts never happen (weather,
+    // pointing). FedBuff and FedSpace must still converge — the engine's
+    // state machine cannot deadlock on missed uploads.
+    use fedspace::connectivity::ConnectivityParams;
+    use fedspace::fl::CpuAggregator;
+    use fedspace::orbit::{planet_ground_stations, planet_labs_like};
+    use fedspace::rng::Rng;
+    use fedspace::sim::{Engine, EngineConfig, MockTrainer};
+
+    let constellation = planet_labs_like(24, 0);
+    let full = fedspace::connectivity::ConnectivitySchedule::compute(
+        &constellation,
+        &planet_ground_stations(),
+        192,
+        ConnectivityParams::default(),
+    );
+    let mut rng = Rng::new(11);
+    let degraded = full.with_dropout(0.25, &mut rng);
+    for alg in [
+        fedspace::cfg::AlgorithmKind::Async,
+        fedspace::cfg::AlgorithmKind::FedBuff,
+    ] {
+        let trainer = MockTrainer::new(16, 24, 0.3, 0);
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig { algorithm: alg, fedbuff_m: 6, ..Default::default() };
+        let mut e = Engine::new(&degraded, &trainer, &mut agg, cfg, None);
+        let r = e.run().unwrap();
+        assert!(r.final_round > 0, "{alg:?} made no progress under dropout");
+        let first = r.trace.curve.points.first().unwrap().accuracy;
+        assert!(
+            r.trace.curve.best_accuracy() > first,
+            "{alg:?} did not improve under dropout"
+        );
+    }
+}

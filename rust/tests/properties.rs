@@ -1,0 +1,186 @@
+//! Property-based tests over coordinator invariants (routing, batching,
+//! scheduling state) using the in-crate mini property framework.
+
+use fedspace::connectivity::ConnectivitySchedule;
+use fedspace::fl::illustrative;
+use fedspace::fl::{normalized_weights, Buffer, GradientEntry};
+use fedspace::rng::Rng;
+use fedspace::sched::{forecast_window, random_search, SatForecastState, SearchParams, UtilityModel};
+use fedspace::testing::property;
+
+fn random_schedule(rng: &mut Rng, k: usize, steps: usize) -> ConnectivitySchedule {
+    let sets: Vec<Vec<usize>> = (0..steps)
+        .map(|_| {
+            let n = rng.gen_range(0, k + 1);
+            let mut v = rng.choose_k(k, n);
+            v.sort_unstable();
+            v
+        })
+        .collect();
+    ConnectivitySchedule::from_sets(sets, k)
+}
+
+#[test]
+fn prop_staleness_weights_normalized_and_monotone() {
+    property(200, |rng| {
+        let n = rng.gen_range(1, 40);
+        let st: Vec<usize> = (0..n).map(|_| rng.gen_range(0, 20)).collect();
+        let alpha = rng.gen_f64(0.0, 2.0);
+        let w = normalized_weights(&st, alpha);
+        let sum: f32 = w.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4, "sum={sum}");
+        assert!(w.iter().all(|&x| x >= 0.0));
+        // weight ordering inverse to staleness ordering
+        for i in 0..n {
+            for j in 0..n {
+                if st[i] < st[j] && alpha > 0.0 {
+                    assert!(w[i] >= w[j], "s{}={} s{}={}", i, st[i], j, st[j]);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_buffer_counts_consistent() {
+    property(100, |rng| {
+        let mut buf = Buffer::new();
+        let n = rng.gen_range(0, 60);
+        let mut sats = std::collections::BTreeSet::new();
+        for _ in 0..n {
+            let sat = rng.gen_range(0, 10);
+            sats.insert(sat);
+            buf.push(GradientEntry {
+                sat,
+                staleness: rng.gen_range(0, 8),
+                grad: vec![0.0; 3],
+                n_samples: 1,
+            });
+        }
+        assert_eq!(buf.len(), n);
+        assert_eq!(buf.n_sats(), sats.len());
+        let drained = buf.drain();
+        assert_eq!(drained.len(), n);
+        assert!(buf.is_empty() && buf.n_sats() == 0);
+    });
+}
+
+#[test]
+fn prop_connectivity_schedule_lookup_consistency() {
+    property(60, |rng| {
+        let k = rng.gen_range(1, 12);
+        let steps = rng.gen_range(1, 60);
+        let s = random_schedule(rng, k, steps);
+        // connected() agrees with sets; prev/next agree with contacts
+        for i in 0..steps {
+            for sat in 0..k {
+                assert_eq!(s.connected(sat, i), s.sets[i].contains(&sat));
+            }
+        }
+        for sat in 0..k {
+            for i in 0..steps {
+                if let Some(p) = s.prev_contact(sat, i) {
+                    assert!(p < i && s.connected(sat, p));
+                    // nothing between p and i
+                    for l in (p + 1)..i {
+                        assert!(!s.connected(sat, l));
+                    }
+                }
+                if let Some(nx) = s.next_contact(sat, i) {
+                    assert!(nx >= i && s.connected(sat, nx));
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_forecast_conservation() {
+    // gradients consumed by forecast aggregations never exceed contacts,
+    // and idle + uploads ≤ contacts
+    property(80, |rng| {
+        let k = rng.gen_range(1, 10);
+        let steps = rng.gen_range(2, 40);
+        let s = random_schedule(rng, k, steps);
+        let schedule: Vec<bool> = (0..steps).map(|_| rng.gen_bool(0.4)).collect();
+        let states: Vec<SatForecastState> = (0..k)
+            .map(|_| SatForecastState {
+                pending: rng.gen_bool(0.5),
+                staleness_now: rng.gen_range(0, 5),
+                holds_current: rng.gen_bool(0.5),
+                has_data: rng.gen_bool(0.9),
+            })
+            .collect();
+        let f = forecast_window(&s, 0, &schedule, &states);
+        let consumed: usize = f.aggregations.iter().map(|a| a.len()).sum();
+        let planned: usize = schedule.iter().filter(|&&b| b).count();
+        assert!(f.aggregations.len() <= planned);
+        // each satellite uploads at most (contacts + initial pending)
+        let max_uploads: usize =
+            s.contacts.iter().map(|c| c.len()).sum::<usize>() + k;
+        assert!(consumed <= max_uploads);
+        assert!(f.idle <= f.contacts);
+    });
+}
+
+#[test]
+fn prop_random_search_schedule_within_bounds() {
+    property(40, |rng| {
+        let k = rng.gen_range(1, 8);
+        let i0 = rng.gen_range(4, 32);
+        let s = random_schedule(rng, k, i0);
+        let n_min = rng.gen_range(1, i0.min(5) + 1);
+        let n_max = rng.gen_range(n_min, i0 + 1);
+        let params = SearchParams { i0, n_min, n_max, n_search: 15 };
+        let u = UtilityModel::new("forest").unwrap();
+        let states = vec![SatForecastState::fresh(); k];
+        let (best, util) = random_search(&s, 0, &states, &u, 1.0, &params, rng);
+        let n = best.iter().filter(|&&b| b).count();
+        assert!(n >= n_min && n <= n_max);
+        assert!(util.is_finite());
+    });
+}
+
+#[test]
+fn prop_illustrative_invariants_hold_for_any_m() {
+    // for every buffer size M, the illustrative example preserves Appendix
+    // A's identities: FedBuff(1) == Async, FedBuff(K) == Sync, and
+    // aggregated ≤ total uploads
+    for m in 1..=3 {
+        let r = illustrative::run(illustrative::Rule::FedBuff { m });
+        assert!(r.total_aggregated <= r.window_connections + 3);
+        assert!(r.global_updates <= r.total_aggregated);
+    }
+    let asy = illustrative::run(illustrative::Rule::Async);
+    let fb1 = illustrative::run(illustrative::Rule::FedBuff { m: 1 });
+    assert_eq!(asy.global_updates, fb1.global_updates);
+    assert_eq!(asy.idle, fb1.idle);
+}
+
+#[test]
+fn prop_cpu_aggregation_linear_in_weights() {
+    // Eq. (4) with equal stalenesses is a plain average: w' - w must equal
+    // the mean gradient, for any buffer size and dimension
+    use fedspace::fl::server::{CpuAggregator, ServerAggregator};
+    property(60, |rng| {
+        let d = rng.gen_range(1, 50);
+        let n = rng.gen_range(1, 12);
+        let w0: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let entries: Vec<GradientEntry> = (0..n)
+            .map(|sat| GradientEntry {
+                sat,
+                staleness: 2, // equal -> uniform weights
+                grad: (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                n_samples: 1,
+            })
+            .collect();
+        let mut w = w0.clone();
+        CpuAggregator.aggregate(&mut w, &entries, 0.7).unwrap();
+        for j in 0..d {
+            let mean: f32 =
+                entries.iter().map(|e| e.grad[j]).sum::<f32>() / n as f32;
+            let got = w[j] - w0[j];
+            assert!((got - mean).abs() < 1e-4, "dim {j}: {got} vs {mean}");
+        }
+    });
+}
