@@ -73,6 +73,8 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     println!("{}", t.render());
-    println!("next: `cargo run --release --example e2e_train` for the full\nthree-layer PJRT training run (requires `make artifacts`).");
+    println!(
+        "next: `cargo run --release --example e2e_train` for the full\nthree-layer PJRT training run (requires `make artifacts`)."
+    );
     Ok(())
 }

@@ -81,7 +81,9 @@ fn main() -> anyhow::Result<()> {
         t.row(&[name.to_string(), best.0.to_string(), format!("{:.4}", best.1)]);
     }
     println!("{}", t.render());
-    println!("(frozen-T inflates with aggregation count; chained-T saturates — see DESIGN.md §5)\n");
+    println!(
+        "(frozen-T inflates with aggregation count; chained-T saturates — see DESIGN.md §5)\n"
+    );
 
     // --- 3. |R| sweep ---------------------------------------------------
     println!("== random-search budget |R| ==");
@@ -104,7 +106,8 @@ fn main() -> anyhow::Result<()> {
     // --- 4. forest helps over always-aggregate heuristic ----------------
     println!("== fitted û vs cold-start heuristic on sample prediction ==");
     let mut lin = LinearRegression::new(1e-6);
-    let x: Vec<Vec<f64>> = inputs.iter().map(|(s, ts)| fedspace::sched::featurize(s, *ts)).collect();
+    let x: Vec<Vec<f64>> =
+        inputs.iter().map(|(s, ts)| fedspace::sched::featurize(s, *ts)).collect();
     lin.fit(&x[..split].to_vec(), &targets[..split]);
     println!(
         "linear test MSE (direct featurized fit): {:.6}\n",

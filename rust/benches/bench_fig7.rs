@@ -68,6 +68,8 @@ fn main() -> anyhow::Result<()> {
     println!("{}", t.render());
     write_file("results/fig7_staleness_idleness.csv", &csv)?;
     println!("wrote results/fig7_staleness_idleness.csv");
-    println!("paper shape: sync ~90% idle; async long staleness tail; fedspace small\nidle + mass at low staleness");
+    println!(
+        "paper shape: sync ~90% idle; async long staleness tail; fedspace small\nidle + mass at low staleness"
+    );
     Ok(())
 }

@@ -2,77 +2,101 @@
 //! layers as exercised from the coordinator, with before/after history in
 //! EXPERIMENTS.md §Perf.
 //!
-//! L1/L2 (through PJRT artifacts — requires `make artifacts`):
+//! L1/L2 (through PJRT artifacts — requires the `pjrt` feature and
+//! `make artifacts`; skipped gracefully otherwise):
 //!   local_train, grad_eval, eval_batch, aggregate_chunk
 //! L3 (pure Rust):
-//!   CPU aggregation oracle, scheduler forecast + random search, orbital
-//!   propagation, RF fit/predict, synthetic-image materialization.
+//!   CPU aggregation oracle (blocked vs streamed through `w` per entry),
+//!   scheduler forecast + random search (parallel vs the serial reference),
+//!   connectivity computation (optimized parallel vs the trig-heavy serial
+//!   reference), RF fit/predict, synthetic-image materialization.
 
 use fedspace::bench_util::{bench, section};
 use fedspace::connectivity::{ConnectivityParams, ConnectivitySchedule};
 use fedspace::data::{Dataset, SynthConfig};
+use fedspace::exec;
 use fedspace::fl::server::{CpuAggregator, ServerAggregator};
 use fedspace::fl::GradientEntry;
 use fedspace::ml::{RandomForest, RandomForestParams, Regressor};
 use fedspace::orbit::{planet_ground_stations, planet_labs_like};
 use fedspace::rng::Rng;
 use fedspace::runtime::ModelRuntime;
-use fedspace::sched::{random_search, SatForecastState, SearchParams, UtilityModel};
+use fedspace::sched::{
+    random_search, random_search_serial, SatForecastState, SearchParams, UtilityModel,
+};
+
+/// fmow-sized flat parameter dimension, used when the PJRT runtime (which
+/// would report the exact meta.d) is unavailable.
+const D_FMOW: usize = 588_000;
 
 fn rand_vec(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
     (0..n).map(|_| rng.normal_f32(0.0, scale)).collect()
 }
 
-fn main() -> anyhow::Result<()> {
-    let mut rng = Rng::new(0);
-
-    section("L1/L2: PJRT artifacts (size = fmow, d = 588k)");
-    let rt = ModelRuntime::load("artifacts", "fmow")?;
+fn bench_pjrt(rt: &ModelRuntime, rng: &mut Rng) -> anyhow::Result<()> {
     let m = rt.meta.clone();
-    let w = rt.init_params(&mut rng);
+    let w = rt.init_params(rng);
     let n = m.e_steps * m.batch;
-    let xs = rand_vec(&mut rng, n * m.img_dim, 1.0);
+    let xs = rand_vec(rng, n * m.img_dim, 1.0);
     let ys: Vec<f32> = (0..n).map(|_| rng.gen_range(0, 62) as f32).collect();
     let s = bench("local_train (E=4, B=32)", 1, 10, || {
         let _ = rt.local_train(&w, &xs, &ys, 0.5).unwrap();
     });
-    println!(
-        "    -> {:.1} local updates/s",
-        s.throughput(1.0)
-    );
-    let xe = rand_vec(&mut rng, m.eval_batch * m.img_dim, 1.0);
+    println!("    -> {:.1} local updates/s", s.throughput(1.0));
+    let xe = rand_vec(rng, m.eval_batch * m.img_dim, 1.0);
     let ye: Vec<f32> = (0..m.eval_batch).map(|_| rng.gen_range(0, 62) as f32).collect();
     bench("eval_batch (B=64)", 1, 10, || {
         let _ = rt.eval_batch(&w, &xe, &ye).unwrap();
     });
-    let x1 = rand_vec(&mut rng, m.batch * m.img_dim, 1.0);
+    let x1 = rand_vec(rng, m.batch * m.img_dim, 1.0);
     let y1: Vec<f32> = (0..m.batch).map(|_| rng.gen_range(0, 62) as f32).collect();
     bench("grad_eval (B=32)", 1, 10, || {
         let _ = rt.grad_eval(&w, &x1, &y1).unwrap();
     });
-    let g = rand_vec(&mut rng, m.chunk * m.d, 0.01);
+    let g = rand_vec(rng, m.chunk * m.d, 0.01);
     let wt = vec![1.0 / m.chunk as f32; m.chunk];
     let s = bench("aggregate_chunk (CH=16, Pallas)", 1, 10, || {
         let _ = rt.aggregate_chunk_raw(&w, &g, &wt).unwrap();
     });
     let bytes = (m.chunk * m.d + 2 * m.d) as f64 * 4.0;
     println!("    -> {:.2} GB/s effective", bytes / s.median_s / 1e9);
+    Ok(())
+}
 
-    section("L3: GS aggregation oracle (pure Rust, d = 588k)");
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(0);
+    println!("threads: {}", exec::global_pool().size());
+
+    section("L1/L2: PJRT artifacts (size = fmow, d = 588k)");
+    let d = match ModelRuntime::load("artifacts", "fmow") {
+        Ok(rt) => {
+            bench_pjrt(&rt, &mut rng)?;
+            rt.meta.d
+        }
+        Err(e) => {
+            println!("  skipped ({e:#})");
+            D_FMOW
+        }
+    };
+
+    section("L3: GS aggregation oracle (pure Rust, blocked accumulate)");
+    let w = rand_vec(&mut rng, d, 0.1);
     let entries: Vec<GradientEntry> = (0..16)
         .map(|sat| GradientEntry {
             sat,
             staleness: sat % 5,
-            grad: rand_vec(&mut rng, m.d, 0.01),
+            grad: rand_vec(&mut rng, d, 0.01),
             n_samples: 1,
         })
         .collect();
-    bench("CpuAggregator 16 gradients", 1, 10, || {
+    let s = bench("CpuAggregator 16 gradients", 1, 10, || {
         let mut wc = w.clone();
         CpuAggregator.aggregate(&mut wc, &entries, 0.5).unwrap();
     });
+    let bytes = (entries.len() * d + 2 * d) as f64 * 4.0;
+    println!("    -> {:.2} GB/s effective", bytes / s.median_s / 1e9);
 
-    section("L3: FedSpace scheduler");
+    section("L3: FedSpace scheduler (Eq. 13 random search)");
     let constellation = planet_labs_like(191, 0);
     let stations = planet_ground_stations();
     let sched =
@@ -82,21 +106,35 @@ fn main() -> anyhow::Result<()> {
     for n_search in [500usize, 5000] {
         let params = SearchParams { i0: 24, n_min: 4, n_max: 8, n_search };
         let mut srng = Rng::new(1);
-        let s = bench(&format!("random_search |R|={n_search} (K=191, I0=24)"), 1, 5, || {
-            let _ = random_search(&sched, 0, &states, &u, 1.0, &params, &mut srng);
+        let before =
+            bench(&format!("random_search |R|={n_search} serial (reference)"), 1, 5, || {
+                let _ = random_search_serial(&sched, 0, &states, &u, 1.0, &params, &mut srng);
+            });
+        let mut prng = Rng::new(1);
+        let after = bench(&format!("random_search |R|={n_search} parallel"), 1, 5, || {
+            let _ = random_search(&sched, 0, &states, &u, 1.0, &params, &mut prng);
         });
-        println!("    -> {:.0} candidates/s", s.throughput(n_search as f64));
+        println!(
+            "    -> {:.0} candidates/s, {:.2}x vs serial",
+            after.throughput(n_search as f64),
+            before.median_s / after.median_s
+        );
     }
 
-    section("L3: orbital mechanics");
-    bench("connectivity C: 191 sats x 96 slots x 12 GS", 1, 5, || {
-        let _ = ConnectivitySchedule::compute(
+    section("L3: orbital mechanics (connectivity schedule C)");
+    let params = ConnectivityParams::default();
+    let before = bench("compute C reference: 191 sats x 96 slots x 12 GS", 1, 5, || {
+        let _ = ConnectivitySchedule::compute_reference(
             &constellation,
             &stations,
             96,
-            ConnectivityParams::default(),
+            params.clone(),
         );
     });
+    let after = bench("compute C optimized: 191 sats x 96 slots x 12 GS", 1, 5, || {
+        let _ = ConnectivitySchedule::compute(&constellation, &stations, 96, params.clone());
+    });
+    println!("    -> {:.2}x vs reference", before.median_s / after.median_s);
 
     section("L3: utility regressor (random forest)");
     let x: Vec<Vec<f64>> = (0..400)

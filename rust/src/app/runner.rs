@@ -3,7 +3,9 @@
 
 use crate::cfg::{AlgorithmKind, DataDist, ExperimentConfig};
 use crate::connectivity::{ConnectivityParams, ConnectivitySchedule};
-use crate::data::{partition_iid, partition_noniid, partition::cell_visits, Dataset, Partition, SynthConfig};
+use crate::data::{
+    partition::cell_visits, partition_iid, partition_noniid, Dataset, Partition, SynthConfig,
+};
 use crate::fl::CpuAggregator;
 use crate::orbit::{planet_ground_stations, planet_labs_like, Constellation};
 use crate::rng::Rng;
@@ -111,7 +113,10 @@ fn make_planner(
 
 /// Scheduler-level experiment on the analytic mock objective. Fast: used by
 /// tests, the ablation bench and quick CLI iterations.
-pub fn run_mock_experiment(cfg: &ExperimentConfig, stop_at: Option<f64>) -> Result<ExperimentOutput> {
+pub fn run_mock_experiment(
+    cfg: &ExperimentConfig,
+    stop_at: Option<f64>,
+) -> Result<ExperimentOutput> {
     let (_, sched) = build_schedule(cfg);
     let heterogeneity = match cfg.dist {
         DataDist::Iid => 0.1,

@@ -1,6 +1,30 @@
 //! Computation and storage of the connectivity schedule C.
+//!
+//! `compute` is an L3 hot path: the paper's default scenario is 191
+//! satellites × 96 slots × 10 sub-samples × 12 stations ≈ 2.2M visibility
+//! tests, and the ROADMAP's production scenarios push to 1000+ satellites ×
+//! multi-week horizons. The optimized pipeline (see EXPERIMENTS.md §Perf):
+//!
+//! 1. ground-station ECEF positions/up-vectors cached once per call
+//!    ([`crate::orbit::StationFrame`]) instead of re-derived per test;
+//! 2. the GMST rotation computed once per sample timestamp and shared
+//!    across all satellites and stations;
+//! 3. per-satellite orbital propagation hoisted to an
+//!    [`crate::orbit::OrbitBasis`] (one `sin_cos` per sample);
+//! 4. elevation compared in sin space against a precomputed sin(α_min) —
+//!    no `asin`/`to_degrees` in the inner loop — with a horizon-plane
+//!    dot-product prefilter rejecting below-horizon stations early;
+//! 5. the outer satellite loop parallelized on [`crate::exec::global_pool`]
+//!    (results are per-satellite and collected in input order, so the
+//!    output is identical at any thread count).
+//!
+//! [`ConnectivitySchedule::compute_reference`] keeps the original
+//! trig-heavy serial implementation as the correctness oracle and the
+//! `bench_perf` baseline.
 
-use crate::orbit::{is_visible, Constellation, GroundStation};
+use crate::exec;
+use crate::orbit::{station_frames, Constellation, GroundStation, OrbitBasis, StationFrame};
+use std::sync::Arc;
 
 /// Parameters of the link model (paper §2.2 / §4.1 defaults).
 #[derive(Clone, Debug)]
@@ -33,6 +57,16 @@ impl Default for ConnectivityParams {
 }
 
 /// The deterministic schedule C = {C_0, ..., C_{n-1}} plus fast lookups.
+///
+/// Three synchronized views of the same relation:
+/// - `sets[i]` — sorted satellite ids in C_i (window iteration);
+/// - `contacts[k]` — sorted time indexes of satellite k (staleness lookups);
+/// - a packed per-step bitset (`n_steps × words_per_step` u64 words) making
+///   [`Self::connected`] a single word probe instead of a binary search.
+///
+/// The bitset is derived from `sets` at construction; mutating the public
+/// vectors directly would desynchronize it — build a new schedule via
+/// [`Self::from_sets`] instead.
 #[derive(Clone, Debug)]
 pub struct ConnectivitySchedule {
     /// sets[i] = sorted satellite ids in C_i.
@@ -41,10 +75,22 @@ pub struct ConnectivitySchedule {
     pub contacts: Vec<Vec<usize>>,
     pub n_sats: usize,
     pub params: ConnectivityParams,
+    /// u64 words per time step in `bits`.
+    words_per_step: usize,
+    /// Packed connectivity: bit k of step i lives at
+    /// bits[i * words_per_step + k/64] >> (k % 64).
+    bits: Vec<u64>,
 }
 
 impl ConnectivitySchedule {
     /// Compute C for `n_steps` windows from a constellation + station list.
+    ///
+    /// Runs the optimized pipeline described in the module docs. The result
+    /// is independent of the thread count, and agrees with
+    /// [`Self::compute_reference`] up to floating-point ties exactly at the
+    /// elevation threshold (the sin-space test rounds differently from the
+    /// reference's `asin` path; tests assert agreement with a tiny
+    /// tie-budget rather than bit-exactness).
     pub fn compute(
         constellation: &Constellation,
         stations: &[GroundStation],
@@ -52,10 +98,51 @@ impl ConnectivitySchedule {
         params: ConnectivityParams,
     ) -> Self {
         let n_sats = constellation.len();
+        let need = feasible_need(&params);
+        let spw = params.samples_per_window;
+        let sin_min = params.min_elev_deg.to_radians().sin();
+        let frames: Arc<Vec<StationFrame>> = Arc::new(station_frames(stations));
+        let rots: Arc<Vec<SampleRot>> = Arc::new(sample_rotations(n_steps, spw, params.t0_s));
+        let bases: Vec<OrbitBasis> = constellation.orbits.iter().map(|o| o.basis()).collect();
+
+        let pool = exec::global_pool();
+        let contacts: Vec<Vec<usize>> = if n_sats > 1 && pool.size() > 1 {
+            let frames = Arc::clone(&frames);
+            let rots = Arc::clone(&rots);
+            pool.scope_map(bases, move |basis| {
+                sat_contacts(&basis, &frames, &rots, n_steps, spw, sin_min, need)
+            })
+        } else {
+            bases
+                .iter()
+                .map(|basis| sat_contacts(basis, &frames, &rots, n_steps, spw, sin_min, need))
+                .collect()
+        };
+
+        let mut sets = vec![Vec::new(); n_steps];
+        for (k, cs) in contacts.iter().enumerate() {
+            for &i in cs {
+                sets[i].push(k); // k ascends, so each set stays sorted
+            }
+        }
+        Self::assemble(sets, contacts, n_sats, params)
+    }
+
+    /// The original (pre-optimization) serial implementation: per-test
+    /// geodetic trig, per-station GMST rotations, asin-space elevation.
+    /// Kept as the correctness oracle for [`Self::compute`] and as the
+    /// single-thread baseline in `bench_perf` / EXPERIMENTS.md §Perf.
+    pub fn compute_reference(
+        constellation: &Constellation,
+        stations: &[GroundStation],
+        n_steps: usize,
+        params: ConnectivityParams,
+    ) -> Self {
+        use crate::orbit::is_visible;
+        let n_sats = constellation.len();
         let mut sets = vec![Vec::new(); n_steps];
         let mut contacts = vec![Vec::new(); n_sats];
-        let need = ((params.samples_per_window as f64) * params.min_feasible_frac).ceil() as usize;
-        let need = need.max(1);
+        let need = feasible_need(&params);
         for (k, orbit) in constellation.orbits.iter().enumerate() {
             for (i, set) in sets.iter_mut().enumerate() {
                 let t_start = i as f64 * params.t0_s;
@@ -80,7 +167,7 @@ impl ConnectivitySchedule {
                 }
             }
         }
-        ConnectivitySchedule { sets, contacts, n_sats, params }
+        Self::assemble(sets, contacts, n_sats, params)
     }
 
     /// Build directly from explicit sets (tests, illustrative example).
@@ -92,21 +179,57 @@ impl ConnectivitySchedule {
                 contacts[k].push(i);
             }
         }
-        ConnectivitySchedule {
-            sets,
-            contacts,
-            n_sats,
-            params: ConnectivityParams::default(),
+        Self::assemble(sets, contacts, n_sats, ConnectivityParams::default())
+    }
+
+    /// Finish construction: derive the packed bitset from the sorted views.
+    fn assemble(
+        sets: Vec<Vec<usize>>,
+        contacts: Vec<Vec<usize>>,
+        n_sats: usize,
+        params: ConnectivityParams,
+    ) -> Self {
+        let words_per_step = n_sats.div_ceil(64);
+        let mut bits = vec![0u64; sets.len() * words_per_step];
+        for (i, set) in sets.iter().enumerate() {
+            let base = i * words_per_step;
+            for &k in set {
+                bits[base + k / 64] |= 1u64 << (k % 64);
+            }
         }
+        ConnectivitySchedule { sets, contacts, n_sats, params, words_per_step, bits }
     }
 
     pub fn n_steps(&self) -> usize {
         self.sets.len()
     }
 
-    /// Is satellite k connected at time index i?
+    /// Is satellite k connected at time index i? O(1) via the bitset.
+    #[inline]
     pub fn connected(&self, k: usize, i: usize) -> bool {
-        self.sets[i].binary_search(&k).is_ok()
+        if k >= self.n_sats {
+            return false;
+        }
+        (self.bits[i * self.words_per_step + k / 64] >> (k % 64)) & 1 == 1
+    }
+
+    /// Satellites connected at step `i`, ascending — a zero-copy view for
+    /// contact iteration (the engine's per-step loop).
+    #[inline]
+    pub fn sats_at(&self, i: usize) -> &[usize] {
+        &self.sets[i]
+    }
+
+    /// Packed connectivity words of step `i` (bit k = satellite k).
+    #[inline]
+    pub fn step_words(&self, i: usize) -> &[u64] {
+        let base = i * self.words_per_step;
+        &self.bits[base..base + self.words_per_step]
+    }
+
+    /// u64 words per step in the packed view.
+    pub fn words_per_step(&self) -> usize {
+        self.words_per_step
     }
 
     /// Latest contact of k strictly before i (the paper's i'_k), if any.
@@ -154,6 +277,76 @@ impl ConnectivitySchedule {
     }
 }
 
+/// Minimum feasible sub-samples for a window to count as connected.
+fn feasible_need(params: &ConnectivityParams) -> usize {
+    let need = ((params.samples_per_window as f64) * params.min_feasible_frac).ceil() as usize;
+    need.max(1)
+}
+
+/// One sub-sample timestamp with its hoisted GMST rotation (t, sin θ, cos θ).
+type SampleRot = (f64, f64, f64);
+
+/// The sample timetable: entry `i * samples_per_window + s` covers step i's
+/// s-th sub-sample. Shared across all satellites and stations.
+fn sample_rotations(n_steps: usize, samples_per_window: usize, t0_s: f64) -> Vec<SampleRot> {
+    let mut rots = Vec::with_capacity(n_steps * samples_per_window);
+    for i in 0..n_steps {
+        let t_start = i as f64 * t0_s;
+        for s in 0..samples_per_window {
+            let t = t_start + t0_s * (s as f64 + 0.5) / samples_per_window as f64;
+            let (sin_t, cos_t) = crate::orbit::gmst_rad(t).sin_cos();
+            rots.push((t, sin_t, cos_t));
+        }
+    }
+    rots
+}
+
+/// Connected step indexes of one satellite — the per-satellite unit of work
+/// of the parallel outer loop. Mirrors the reference sampling semantics
+/// exactly (any station suffices per sample; early exit at `need`).
+fn sat_contacts(
+    basis: &OrbitBasis,
+    frames: &[StationFrame],
+    rots: &[SampleRot],
+    n_steps: usize,
+    samples_per_window: usize,
+    sin_min: f64,
+    need: usize,
+) -> Vec<usize> {
+    // The horizon prefilter rejects stations that can't see the satellite
+    // even at 0° elevation, with one dot product and no sqrt. Gated on a
+    // strictly positive mask so a boundary-ulp disagreement between the
+    // prefilter (up·e vs up_dot_pos) and the exact test below (up·(e−pos))
+    // can only occur near 0° elevation — far from the decision boundary —
+    // and therefore never changes the outcome.
+    let prefilter = sin_min > 0.0;
+    let mut out = Vec::new();
+    for i in 0..n_steps {
+        let mut feasible = 0usize;
+        'window: for s in 0..samples_per_window {
+            let (t, sin_t, cos_t) = rots[i * samples_per_window + s];
+            let p = basis.position_eci(t);
+            let e = crate::orbit::eci_to_ecef_rot(&p, sin_t, cos_t);
+            for f in frames {
+                if prefilter && f.up.dot(&e) < f.up_dot_pos {
+                    continue; // below this station's horizon plane
+                }
+                if crate::orbit::visible_from_frame(&e, f, sin_min) {
+                    feasible += 1;
+                    if feasible >= need {
+                        break 'window;
+                    }
+                    break; // any station suffices for this sample
+                }
+            }
+        }
+        if feasible >= need {
+            out.push(i);
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +390,82 @@ mod tests {
         let s = small_schedule();
         let total: usize = s.contacts.iter().map(|c| c.len()).sum();
         assert!(total > 0, "no contacts in a day of simulation");
+    }
+
+    #[test]
+    fn optimized_compute_matches_reference() {
+        // the sin-space / hoisted-rotation / parallel pipeline must agree
+        // with the original trig-heavy serial implementation. The two paths
+        // round differently, so a sample sitting within FP noise of the
+        // elevation threshold may legitimately flip a window decision —
+        // allow a tiny tie-budget instead of demanding bit-exact sets.
+        let c = planet_labs_like(20, 0);
+        let gs = planet_ground_stations();
+        for params in [
+            ConnectivityParams::default(),
+            ConnectivityParams { min_elev_deg: 5.0, ..Default::default() },
+            ConnectivityParams { min_elev_deg: 40.0, samples_per_window: 4, ..Default::default() },
+        ] {
+            let fast = ConnectivitySchedule::compute(&c, &gs, 48, params.clone());
+            let slow = ConnectivitySchedule::compute_reference(&c, &gs, 48, params);
+            let mut diffs = 0usize;
+            let mut agreements = 0usize;
+            for i in 0..48 {
+                for k in 0..c.len() {
+                    if fast.connected(k, i) == slow.connected(k, i) {
+                        agreements += 1;
+                    } else {
+                        diffs += 1;
+                    }
+                }
+            }
+            assert!(diffs <= 2, "{diffs} window decisions differ (of {})", diffs + agreements);
+            // and the schedules are substantial, not trivially empty
+            let total: usize = slow.contacts.iter().map(|c| c.len()).sum();
+            assert!(total > 0);
+        }
+    }
+
+    #[test]
+    fn bitset_matches_sorted_views() {
+        let s = small_schedule();
+        assert_eq!(s.words_per_step(), 1);
+        for i in 0..s.n_steps() {
+            // connected() (bitset) vs binary search on the sorted view
+            for k in 0..s.n_sats {
+                assert_eq!(s.connected(k, i), s.sets[i].binary_search(&k).is_ok(), "k={k} i={i}");
+            }
+            // word iteration reconstructs the sorted set exactly
+            let mut rebuilt = Vec::new();
+            for (w, &word) in s.step_words(i).iter().enumerate() {
+                let mut word = word;
+                while word != 0 {
+                    let b = word.trailing_zeros() as usize;
+                    rebuilt.push(w * 64 + b);
+                    word &= word - 1;
+                }
+            }
+            assert_eq!(rebuilt, s.sets[i]);
+            assert_eq!(s.sats_at(i), &s.sets[i][..]);
+        }
+        // out-of-range satellite id is simply not connected
+        assert!(!s.connected(s.n_sats, 0));
+    }
+
+    #[test]
+    fn bitset_handles_many_words_per_step() {
+        // n_sats > 64 forces multi-word steps
+        let n_sats = 130;
+        let sets = vec![vec![0, 63, 64, 127, 129], vec![], vec![65]];
+        let s = ConnectivitySchedule::from_sets(sets, n_sats);
+        assert_eq!(s.words_per_step(), 3);
+        for &k in &[0usize, 63, 64, 127, 129] {
+            assert!(s.connected(k, 0), "k={k}");
+        }
+        assert!(!s.connected(1, 0));
+        assert!(!s.connected(128, 0));
+        assert!(s.step_words(1).iter().all(|&w| w == 0));
+        assert!(s.connected(65, 2));
     }
 
     #[test]

@@ -2,13 +2,22 @@
 //! (no `tokio`/`rayon` in the offline vendor set).
 //!
 //! The coordinator uses it to run satellite local-training jobs in parallel
-//! across PJRT executions and to parallelize the scheduler's random search.
-//! Jobs are `FnOnce` closures; [`ThreadPool::scope_map`] provides the only
-//! pattern the framework needs: map a function over items in parallel and
-//! collect results in input order.
+//! across PJRT executions and to parallelize the L3 hot paths (connectivity
+//! computation, scheduler random search). Two complementary patterns:
+//!
+//! - [`ThreadPool::scope_map`]: map a function over owned (`'static`) items
+//!   on the pool's long-lived workers, collecting results in input order.
+//! - [`scope_chunks`]: map over contiguous chunks of a *borrowed* slice on
+//!   scoped threads — no `'static` bound, so large read-only state (the
+//!   connectivity schedule, a fitted utility model) is shared zero-copy,
+//!   and each worker gets one callback invocation to reuse scratch buffers
+//!   across its whole chunk.
+//!
+//! [`global_pool`] is the process-wide pool the hot paths share, so the
+//! parallelism degree has a single knob.
 
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -48,8 +57,7 @@ impl ThreadPool {
 
     /// Pool sized to the machine's available parallelism.
     pub fn with_default_size() -> Self {
-        let n = thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
-        Self::new(n)
+        Self::new(default_parallelism())
     }
 
     /// Number of worker threads.
@@ -93,6 +101,61 @@ impl ThreadPool {
         }
         out.into_iter().map(|r| r.unwrap()).collect()
     }
+}
+
+/// The machine's available parallelism (the degree used by
+/// [`global_pool`] and [`scope_chunks`] callers). Cheap: no threads are
+/// created by asking.
+pub fn default_parallelism() -> usize {
+    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// The process-wide pool shared by the coordinator's parallel hot paths.
+/// Sized to the machine's available parallelism; created on first use.
+pub fn global_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(ThreadPool::with_default_size)
+}
+
+/// Map `f` over contiguous chunks of a borrowed slice in parallel, returning
+/// per-item results in input order.
+///
+/// `f` is called once per chunk with `(start_index, chunk)` and must return
+/// one result per chunk item, in order. Unlike [`ThreadPool::scope_map`],
+/// items and captures may borrow caller state (no `'static` bound, no `Arc`
+/// wrapping), and the once-per-chunk shape lets workers allocate scratch
+/// once and reuse it across their whole chunk. With `n_threads <= 1` (or a
+/// single-item input) `f` runs on the caller's thread; results are
+/// identical either way, so parallelism never affects determinism.
+pub fn scope_chunks<T, R, F>(items: &[T], n_threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &[T]) -> Vec<R> + Sync,
+{
+    let n = items.len();
+    let n_threads = if n == 0 { 1 } else { n_threads.clamp(1, n) };
+    if n_threads == 1 {
+        let out = f(0, items);
+        assert_eq!(out.len(), n, "scope_chunks callback returned a wrong-sized chunk");
+        return out;
+    }
+    let chunk = n.div_ceil(n_threads);
+    let mut out: Vec<R> = Vec::with_capacity(n);
+    thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = items
+            .chunks(chunk)
+            .enumerate()
+            .map(|(c, slice)| s.spawn(move || f(c * chunk, slice)))
+            .collect();
+        for (h, slice) in handles.into_iter().zip(items.chunks(chunk)) {
+            let part = h.join().expect("scope_chunks worker panicked");
+            assert_eq!(part.len(), slice.len(), "callback returned a wrong-sized chunk");
+            out.extend(part);
+        }
+    });
+    out
 }
 
 impl Drop for ThreadPool {
@@ -141,5 +204,43 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.scope_map(vec![3usize, 1, 2], |x| x + 1);
         assert_eq!(out, vec![4, 2, 3]);
+    }
+
+    #[test]
+    fn scope_chunks_preserves_order_and_borrows() {
+        // captures borrow caller state without Arc / 'static
+        let offset = 7usize;
+        let items: Vec<usize> = (0..100).collect();
+        for threads in [1, 2, 3, 8, 200] {
+            let out = scope_chunks(&items, threads, |_start, chunk| {
+                chunk.iter().map(|x| x + offset).collect()
+            });
+            assert_eq!(out, (7..107).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn scope_chunks_start_indexes_are_global() {
+        let items = vec![0usize; 10];
+        let out = scope_chunks(&items, 3, |start, chunk| {
+            (start..start + chunk.len()).collect()
+        });
+        assert_eq!(out, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_chunks_empty_input() {
+        let out: Vec<usize> = scope_chunks(&[], 4, |_, chunk| chunk.to_vec());
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_usable() {
+        let a = global_pool();
+        let b = global_pool();
+        assert!(std::ptr::eq(a, b));
+        assert!(a.size() >= 1);
+        let out = a.scope_map((0..10).collect(), |x: usize| x * 2);
+        assert_eq!(out, (0..10).map(|x| x * 2).collect::<Vec<_>>());
     }
 }

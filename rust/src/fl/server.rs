@@ -17,7 +17,19 @@ pub trait ServerAggregator {
 }
 
 /// Reference aggregation in Rust: exact Eq. (4) with f32 accumulate.
+///
+/// The accumulate is blocked: the model vector is walked in cache-sized
+/// blocks with the entry loop inside, so `w` streams through DRAM once per
+/// aggregation instead of once per buffered gradient (entries stream once
+/// either way). Per element the adds happen in entry order — identical
+/// floating-point results to the naive per-entry loop, just ~`entries`×
+/// less write-back traffic on `w`. The dimension check is hoisted out of
+/// the hot loop entirely.
 pub struct CpuAggregator;
+
+/// Elements per block of the blocked accumulate: 16 KiB of f32 — a few
+/// gradients' worth of block fits L1/L2 alongside the streamed entries.
+const AGG_BLOCK: usize = 4096;
 
 impl ServerAggregator for CpuAggregator {
     fn aggregate(
@@ -31,11 +43,25 @@ impl ServerAggregator for CpuAggregator {
         }
         let stalenesses: Vec<usize> = entries.iter().map(|e| e.staleness).collect();
         let weights = normalized_weights(&stalenesses, alpha);
-        for (entry, &wt) in entries.iter().zip(weights.iter()) {
-            assert_eq!(entry.grad.len(), w.len(), "gradient/model dim mismatch");
-            for (wi, gi) in w.iter_mut().zip(entry.grad.iter()) {
-                *wi += wt * gi;
+        for entry in entries {
+            anyhow::ensure!(
+                entry.grad.len() == w.len(),
+                "gradient/model dim mismatch: {} vs {}",
+                entry.grad.len(),
+                w.len()
+            );
+        }
+        let d = w.len();
+        let mut lo = 0usize;
+        while lo < d {
+            let hi = (lo + AGG_BLOCK).min(d);
+            let wb = &mut w[lo..hi];
+            for (entry, &wt) in entries.iter().zip(weights.iter()) {
+                for (wi, gi) in wb.iter_mut().zip(entry.grad[lo..hi].iter()) {
+                    *wi += wt * gi;
+                }
             }
+            lo = hi;
         }
         Ok(())
     }
@@ -70,12 +96,17 @@ impl GsState {
 
     /// SERVERUPDATE (Eq. 4): drain buffer, update w, bump i_g.
     /// Returns the aggregated entries' stalenesses (for the Figure 7 trace).
+    ///
+    /// The buffer is drained only after aggregation succeeds — on an
+    /// aggregator error (e.g. a dimension mismatch) the buffered gradients
+    /// survive and neither i_g nor n_aggregated advances, so a caller that
+    /// recovers from the error hasn't silently lost the round's uploads.
     pub fn update(&mut self, aggregator: &mut dyn ServerAggregator) -> Result<Vec<usize>> {
-        let entries = self.buffer.drain();
-        let stalenesses: Vec<usize> = entries.iter().map(|e| e.staleness).collect();
-        aggregator.aggregate(&mut self.w, &entries, self.alpha)?;
+        let stalenesses = self.buffer.stalenesses();
+        aggregator.aggregate(&mut self.w, self.buffer.entries(), self.alpha)?;
+        let n = self.buffer.drain().len();
         self.i_g += 1;
-        self.n_aggregated += entries.len();
+        self.n_aggregated += n;
         Ok(stalenesses)
     }
 }
@@ -104,6 +135,48 @@ mod tests {
         for (g, e) in w.iter().zip(want.iter()) {
             assert!((g - e).abs() < 1e-6, "{w:?} vs {want:?}");
         }
+    }
+
+    #[test]
+    fn blocked_aggregate_matches_naive_reference() {
+        // multi-block model dim (not a multiple of the block) + uneven
+        // entry count: the blocked loop must equal the per-entry loop
+        // bit-for-bit, since per element the adds happen in entry order
+        let mut rng = crate::rng::Rng::new(9);
+        let d = 3 * super::AGG_BLOCK + 17;
+        let mut w: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut w_ref = w.clone();
+        let entries: Vec<GradientEntry> = (0..5)
+            .map(|sat| GradientEntry {
+                sat,
+                staleness: sat % 3,
+                grad: (0..d).map(|_| rng.normal_f32(0.0, 0.1)).collect(),
+                n_samples: 1,
+            })
+            .collect();
+        let alpha = 0.5;
+        CpuAggregator.aggregate(&mut w, &entries, alpha).unwrap();
+        // naive reference: entry-major, whole-vector passes
+        let st: Vec<usize> = entries.iter().map(|e| e.staleness).collect();
+        let weights = crate::fl::staleness::normalized_weights(&st, alpha);
+        for (entry, &wt) in entries.iter().zip(weights.iter()) {
+            for (wi, gi) in w_ref.iter_mut().zip(entry.grad.iter()) {
+                *wi += wt * gi;
+            }
+        }
+        assert_eq!(w, w_ref);
+    }
+
+    #[test]
+    fn dim_mismatch_is_an_error_not_a_partial_update() {
+        let mut w = vec![0.0f32; 4];
+        let entries = vec![
+            GradientEntry { sat: 0, staleness: 0, grad: vec![1.0; 4], n_samples: 1 },
+            GradientEntry { sat: 1, staleness: 0, grad: vec![1.0; 3], n_samples: 1 },
+        ];
+        assert!(CpuAggregator.aggregate(&mut w, &entries, 0.5).is_err());
+        // the hoisted check rejects before any element is touched
+        assert_eq!(w, vec![0.0f32; 4]);
     }
 
     #[test]
@@ -138,6 +211,19 @@ mod tests {
         // equal weights: w = 0 + (1+3)/2
         assert!((gs.w[0] - 2.0).abs() < 1e-6);
         assert!(gs.buffer.is_empty());
+    }
+
+    #[test]
+    fn failed_update_preserves_buffer_and_round() {
+        let mut gs = GsState::new(vec![0.0f32; 4], 0.5);
+        gs.receive(0, vec![1.0; 4], 0, 1);
+        gs.receive(1, vec![1.0; 3], 0, 1); // wrong dimension
+        assert!(gs.update(&mut CpuAggregator).is_err());
+        // nothing consumed, nothing advanced, model untouched
+        assert_eq!(gs.buffer.len(), 2);
+        assert_eq!(gs.i_g, 0);
+        assert_eq!(gs.n_aggregated, 0);
+        assert_eq!(gs.w, vec![0.0f32; 4]);
     }
 
     #[test]

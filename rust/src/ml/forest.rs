@@ -18,7 +18,12 @@ impl Default for RandomForestParams {
     fn default() -> Self {
         RandomForestParams {
             n_trees: 50,
-            tree: TreeParams { max_depth: 12, min_samples_leaf: 2, min_samples_split: 4, max_features: None },
+            tree: TreeParams {
+                max_depth: 12,
+                min_samples_leaf: 2,
+                min_samples_split: 4,
+                max_features: None,
+            },
             max_features_frac: None,
             seed: 0x0F0E,
         }

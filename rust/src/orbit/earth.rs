@@ -21,10 +21,21 @@ pub fn gmst_rad(t: f64) -> f64 {
 
 /// Rotate an ECI position into the Earth-fixed (ECEF) frame at time `t`.
 pub fn eci_to_ecef(p_eci: &Vec3, t: f64) -> Vec3 {
-    let theta = gmst_rad(t);
-    let (s, c) = theta.sin_cos();
+    let (s, c) = gmst_rad(t).sin_cos();
+    eci_to_ecef_rot(p_eci, s, c)
+}
+
+/// [`eci_to_ecef`] with the GMST rotation `(sin θ, cos θ)` hoisted out —
+/// the connectivity hot loop computes θ once per sample timestamp and
+/// reuses it across every satellite and station.
+#[inline]
+pub fn eci_to_ecef_rot(p_eci: &Vec3, sin_theta: f64, cos_theta: f64) -> Vec3 {
     // ECEF = Rz(-theta) * ECI
-    Vec3::new(c * p_eci.x + s * p_eci.y, -s * p_eci.x + c * p_eci.y, p_eci.z)
+    Vec3::new(
+        cos_theta * p_eci.x + sin_theta * p_eci.y,
+        -sin_theta * p_eci.x + cos_theta * p_eci.y,
+        p_eci.z,
+    )
 }
 
 /// Geodetic (lat, lon in degrees, height in m) → ECEF position (WGS84).

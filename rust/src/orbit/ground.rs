@@ -26,6 +26,33 @@ impl GroundStation {
     pub fn up_ecef(&self) -> Vec3 {
         geodetic_up(self.lat_deg, self.lon_deg)
     }
+
+    /// Precompute this station's cached ECEF frame for visibility hot loops.
+    pub fn frame(&self) -> StationFrame {
+        let pos = self.position_ecef();
+        let up = self.up_ecef();
+        StationFrame { up_dot_pos: up.dot(&pos), pos, up }
+    }
+}
+
+/// Cached Earth-fixed frame of a ground station — its constant ECEF
+/// position, zenith direction, and their dot product — so visibility tests
+/// don't re-derive geodetic trig per call ([`GroundStation::position_ecef`]
+/// and [`GroundStation::up_ecef`] each cost several trig evaluations).
+#[derive(Clone, Copy, Debug)]
+pub struct StationFrame {
+    /// ECEF position [m].
+    pub pos: Vec3,
+    /// Unit zenith direction in ECEF.
+    pub up: Vec3,
+    /// up · pos — the local-horizon plane offset: a point `e` is above the
+    /// station's 0° horizon plane iff up · e ≥ up_dot_pos.
+    pub up_dot_pos: f64,
+}
+
+/// Cached frames for a station network, in input order.
+pub fn station_frames(stations: &[GroundStation]) -> Vec<StationFrame> {
+    stations.iter().map(GroundStation::frame).collect()
 }
 
 /// The 12-station network used throughout the paper's evaluation (§4.1).
@@ -80,6 +107,16 @@ mod tests {
         names.sort();
         names.dedup();
         assert_eq!(names.len(), gs.len());
+    }
+
+    #[test]
+    fn frame_caches_position_and_up() {
+        for gs in planet_ground_stations() {
+            let f = gs.frame();
+            assert_eq!(f.pos, gs.position_ecef());
+            assert_eq!(f.up, gs.up_ecef());
+            assert!((f.up_dot_pos - f.up.dot(&f.pos)).abs() < 1e-9);
+        }
     }
 
     #[test]

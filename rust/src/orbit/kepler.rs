@@ -95,6 +95,49 @@ impl CircularOrbit {
             yp * si,
         )
     }
+
+    /// Precompute the constant part of [`Self::position_eci`] for hot loops.
+    pub fn basis(&self) -> OrbitBasis {
+        let (si, ci) = self.inc.sin_cos();
+        let (so, co) = self.raan.sin_cos();
+        OrbitBasis {
+            ap: Vec3::new(self.a * co, self.a * so, 0.0),
+            aq: Vec3::new(-self.a * ci * so, self.a * ci * co, self.a * si),
+            n: self.mean_motion(),
+            phase0: self.phase0,
+        }
+    }
+}
+
+/// Hoisted propagation state of one circular orbit: the scaled in-plane ECI
+/// basis vectors (a·P, a·Q), mean motion and phase, so that a position in a
+/// hot loop is one `sin_cos` plus six multiplies —
+/// r(t) = cos(u)·aP + sin(u)·aQ with u = phase0 + n·t — instead of four
+/// trig pairs and a square root per call.
+#[derive(Clone, Copy, Debug)]
+pub struct OrbitBasis {
+    /// a·P: in-plane x basis scaled by the orbital radius.
+    pub ap: Vec3,
+    /// a·Q: in-plane y basis scaled by the orbital radius.
+    pub aq: Vec3,
+    /// Mean motion [rad/s].
+    pub n: f64,
+    /// Argument of latitude at epoch [rad].
+    pub phase0: f64,
+}
+
+impl OrbitBasis {
+    /// ECI position at time `t` (same trajectory as
+    /// [`CircularOrbit::position_eci`] up to floating-point reassociation).
+    #[inline]
+    pub fn position_eci(&self, t: f64) -> Vec3 {
+        let (su, cu) = (self.phase0 + self.n * t).sin_cos();
+        Vec3::new(
+            cu * self.ap.x + su * self.aq.x,
+            cu * self.ap.y + su * self.aq.y,
+            cu * self.ap.z + su * self.aq.z,
+        )
+    }
 }
 
 #[cfg(test)]
@@ -152,6 +195,18 @@ mod tests {
             let p = o.position_eci(i as f64 * 13.7);
             let lat = (p.z / p.norm()).asin();
             assert!(lat.abs() <= inc + 1e-9);
+        }
+    }
+
+    #[test]
+    fn basis_matches_direct_propagation() {
+        let o = CircularOrbit::from_altitude(500e3, 97.4_f64.to_radians(), 1.1, 0.4);
+        let b = o.basis();
+        for i in 0..200 {
+            let t = i as f64 * 37.0;
+            let p = o.position_eci(t);
+            let q = b.position_eci(t);
+            assert!(p.sub(&q).norm() < 1e-6, "t={t} drift={}", p.sub(&q).norm());
         }
     }
 

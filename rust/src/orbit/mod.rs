@@ -18,7 +18,9 @@ pub mod kepler;
 pub mod visibility;
 
 pub use constellation::{planet_labs_like, Constellation, OrbitalPlaneSpec};
-pub use earth::{ecef_from_geodetic, eci_to_ecef, gmst_rad, EARTH_OMEGA, MU_EARTH, R_EARTH_EQ};
-pub use ground::{planet_ground_stations, GroundStation};
-pub use kepler::{CircularOrbit, Vec3};
-pub use visibility::{elevation_deg, is_visible, subsatellite_point};
+pub use earth::{
+    ecef_from_geodetic, eci_to_ecef, eci_to_ecef_rot, gmst_rad, EARTH_OMEGA, MU_EARTH, R_EARTH_EQ,
+};
+pub use ground::{planet_ground_stations, station_frames, GroundStation, StationFrame};
+pub use kepler::{CircularOrbit, OrbitBasis, Vec3};
+pub use visibility::{elevation_deg, is_visible, subsatellite_point, visible_from_frame};

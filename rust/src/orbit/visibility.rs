@@ -5,7 +5,7 @@
 //! the paper's ∠(r_g, r_k − r_g) ≤ π/2 − α_min condition.
 
 use super::earth::eci_to_ecef;
-use super::ground::GroundStation;
+use super::ground::{GroundStation, StationFrame};
 use super::kepler::{CircularOrbit, Vec3};
 
 /// Elevation [deg] of a satellite (ECEF) as seen from a station.
@@ -20,6 +20,19 @@ pub fn elevation_deg(sat_ecef: &Vec3, gs: &GroundStation) -> f64 {
 pub fn is_visible(sat_eci: &Vec3, t: f64, gs: &GroundStation, min_elev_deg: f64) -> bool {
     let sat_ecef = eci_to_ecef(sat_eci, t);
     elevation_deg(&sat_ecef, gs) >= min_elev_deg
+}
+
+/// Sin-space visibility against a cached [`StationFrame`]: true iff the
+/// elevation of `sat_ecef` is ≥ α_min, where `sin_min_elev` = sin(α_min).
+///
+/// Equivalent to `elevation_deg(..) >= min_elev_deg` without `asin`/degree
+/// conversion: sin is monotone on [−π/2, π/2], so
+/// `up·d / |d| ≥ sin(α_min)  ⇔  up·d ≥ sin(α_min)·|d|` (|d| > 0 preserves
+/// the inequality for either sign of the left side).
+#[inline]
+pub fn visible_from_frame(sat_ecef: &Vec3, frame: &StationFrame, sin_min_elev: f64) -> bool {
+    let d = sat_ecef.sub(&frame.pos);
+    frame.up.dot(&d) >= sin_min_elev * d.norm()
 }
 
 /// Subsatellite point (geocentric lat, lon in degrees) at time `t` — used
@@ -78,6 +91,25 @@ mod tests {
             let p = orbit.position_eci(t);
             if is_visible(&p, t, &gs, 25.0) {
                 assert!(is_visible(&p, t, &gs, 10.0));
+            }
+        }
+    }
+
+    #[test]
+    fn frame_visibility_agrees_with_elevation_path() {
+        // the sin-space fast path must agree with asin-based elevation_deg
+        // across a full orbit, for several thresholds (incl. a negative one)
+        let gs = station(47.0, -15.0);
+        let frame = gs.frame();
+        let orbit = CircularOrbit::from_altitude(520e3, 1.2, 0.8, 0.2);
+        for min_elev in [-5.0f64, 0.0, 10.0, 25.0, 60.0] {
+            let sin_min = min_elev.to_radians().sin();
+            for i in 0..400 {
+                let t = i as f64 * 23.0;
+                let e = eci_to_ecef(&orbit.position_eci(t), t);
+                let slow = elevation_deg(&e, &gs) >= min_elev;
+                let fast = visible_from_frame(&e, &frame, sin_min);
+                assert_eq!(slow, fast, "t={t} min_elev={min_elev}");
             }
         }
     }

@@ -68,7 +68,13 @@ impl ModelRuntime {
     /// E local SGD steps (Eq. 3): returns (delta = w_E − w_0, mean loss).
     ///
     /// `xs`: [E·B·img_dim] flat, `ys`: [E·B] f32 class ids.
-    pub fn local_train(&self, w: &[f32], xs: &[f32], ys: &[f32], lr: f32) -> Result<(Vec<f32>, f32)> {
+    pub fn local_train(
+        &self,
+        w: &[f32],
+        xs: &[f32],
+        ys: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
         let m = &self.meta;
         ensure!(w.len() == m.d, "w dim {} != {}", w.len(), m.d);
         let (e, b) = (m.e_steps as i64, m.batch as i64);
@@ -113,7 +119,12 @@ impl ModelRuntime {
 
     /// One Eq. (4) chunk: w ← w + Σ_c wt[c]·G[c]. `grads` is CH·d flat with
     /// zero-weighted padding rows.
-    pub fn aggregate_chunk_raw(&self, w: &[f32], grads: &[f32], weights: &[f32]) -> Result<Vec<f32>> {
+    pub fn aggregate_chunk_raw(
+        &self,
+        w: &[f32],
+        grads: &[f32],
+        weights: &[f32],
+    ) -> Result<Vec<f32>> {
         let m = &self.meta;
         ensure!(weights.len() == m.chunk);
         ensure!(grads.len() == m.chunk * m.d);

@@ -9,11 +9,25 @@
 //! Threading note: the `xla` crate's wrappers are not `Send` (raw PJRT
 //! pointers), so all executions happen on the coordinator thread; the CPU
 //! PJRT client (TFRT) parallelizes internally.
+//!
+//! The executor depends on the vendored `xla` crate, which is only present
+//! in the offline toolchain image — so the real implementation is gated
+//! behind the `pjrt` cargo feature (see rust/Cargo.toml). Without it,
+//! [`stub`] provides the same API surface with a `load` that errors, so the
+//! pure-Rust coordinator paths build and run everywhere.
 
+#[cfg(feature = "pjrt")]
 pub mod artifact;
+#[cfg(feature = "pjrt")]
 pub mod executor;
 pub mod meta;
+#[cfg(not(feature = "pjrt"))]
+pub mod stub;
 
+#[cfg(feature = "pjrt")]
 pub use artifact::Artifact;
+#[cfg(feature = "pjrt")]
 pub use executor::{ModelRuntime, PjrtAggregator};
 pub use meta::ModelMeta;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{ModelRuntime, PjrtAggregator};

@@ -1,0 +1,97 @@
+//! API-compatible stand-in for the PJRT executor when the `pjrt` cargo
+//! feature (and thus the vendored `xla` crate) is unavailable.
+//!
+//! [`ModelRuntime::load`] always returns an error and is the only
+//! constructor, so a stub runtime is never observed in a constructed state —
+//! the other methods exist only so callers (trainer, runner, benches)
+//! typecheck identically against either implementation.
+
+use crate::fl::buffer::GradientEntry;
+use crate::fl::server::ServerAggregator;
+use crate::rng::Rng;
+use anyhow::{bail, Result};
+
+/// Message returned by the stub constructor.
+const UNAVAILABLE: &str =
+    "fedspace was built without the `pjrt` feature: the PJRT/XLA runtime is \
+     unavailable (use the mock backend, or rebuild with `--features pjrt` \
+     and the vendored `xla` crate)";
+
+/// Stub runtime: `load` is the only constructor and it always fails.
+pub struct ModelRuntime {
+    pub meta: super::ModelMeta,
+    _priv: (),
+}
+
+impl ModelRuntime {
+    pub fn load(_artifacts_dir: &str, _size: &str) -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn init_params(&self, _rng: &mut Rng) -> Vec<f32> {
+        unreachable!("stub ModelRuntime cannot be constructed")
+    }
+
+    pub fn local_train(
+        &self,
+        _w: &[f32],
+        _xs: &[f32],
+        _ys: &[f32],
+        _lr: f32,
+    ) -> Result<(Vec<f32>, f32)> {
+        unreachable!("stub ModelRuntime cannot be constructed")
+    }
+
+    pub fn grad_eval(&self, _w: &[f32], _x: &[f32], _y: &[f32]) -> Result<(Vec<f32>, f32)> {
+        unreachable!("stub ModelRuntime cannot be constructed")
+    }
+
+    pub fn eval_batch(&self, _w: &[f32], _x: &[f32], _y: &[f32]) -> Result<(f32, f32)> {
+        unreachable!("stub ModelRuntime cannot be constructed")
+    }
+
+    pub fn aggregate_chunk_raw(
+        &self,
+        _w: &[f32],
+        _grads: &[f32],
+        _weights: &[f32],
+    ) -> Result<Vec<f32>> {
+        unreachable!("stub ModelRuntime cannot be constructed")
+    }
+
+    pub fn aggregate(
+        &self,
+        _w: &mut Vec<f32>,
+        _entries: &[GradientEntry],
+        _alpha: f64,
+    ) -> Result<()> {
+        unreachable!("stub ModelRuntime cannot be constructed")
+    }
+}
+
+/// Stub `ServerAggregator` adapter mirroring `executor::PjrtAggregator`.
+pub struct PjrtAggregator<'a> {
+    pub rt: &'a ModelRuntime,
+}
+
+impl ServerAggregator for PjrtAggregator<'_> {
+    fn aggregate(
+        &mut self,
+        w: &mut Vec<f32>,
+        entries: &[GradientEntry],
+        alpha: f64,
+    ) -> Result<()> {
+        self.rt.aggregate(w, entries, alpha)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = ModelRuntime::load("artifacts", "small").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}

@@ -41,6 +41,19 @@ pub struct WindowForecast {
     pub contacts: usize,
 }
 
+/// Reusable per-satellite state buffers for [`forecast_window_with`].
+///
+/// The scheduler's random search replays thousands of candidate windows per
+/// plan; one scratch per search worker means a candidate evaluation
+/// allocates nothing K-sized (K = number of satellites).
+#[derive(Clone, Debug, Default)]
+pub struct ForecastScratch {
+    pending: Vec<bool>,
+    base: Vec<i64>,
+    holds_current: Vec<bool>,
+    buffered: Vec<usize>,
+}
+
 /// Replay `schedule` (a^{start..start+I0}) over the connectivity `sched`.
 ///
 /// `states` is indexed by satellite. The replay uses the same client
@@ -53,26 +66,41 @@ pub fn forecast_window(
     schedule: &[bool],
     states: &[SatForecastState],
 ) -> WindowForecast {
+    forecast_window_with(&mut ForecastScratch::default(), sched, start, schedule, states)
+}
+
+/// [`forecast_window`] with caller-owned scratch buffers (hot-path form).
+pub fn forecast_window_with(
+    scratch: &mut ForecastScratch,
+    sched: &ConnectivitySchedule,
+    start: usize,
+    schedule: &[bool],
+    states: &[SatForecastState],
+) -> WindowForecast {
     let k = sched.n_sats;
     assert_eq!(states.len(), k);
     // relative aggregation counter; pending base expressed in it
     let mut agg_count: usize = 0;
-    let mut pending: Vec<bool> = states.iter().map(|s| s.pending).collect();
+    scratch.pending.clear();
+    scratch.pending.extend(states.iter().map(|s| s.pending));
     // staleness of pending update if uploaded after `agg_count` rounds:
     // staleness_now + agg_count − base_offset
-    let mut base: Vec<i64> = states
-        .iter()
-        .map(|s| -(s.staleness_now as i64))
-        .collect();
-    let mut holds_current: Vec<bool> = states.iter().map(|s| s.holds_current).collect();
-    let mut buffered: Vec<usize> = Vec::new();
+    scratch.base.clear();
+    scratch.base.extend(states.iter().map(|s| -(s.staleness_now as i64)));
+    scratch.holds_current.clear();
+    scratch.holds_current.extend(states.iter().map(|s| s.holds_current));
+    scratch.buffered.clear();
+    let pending = &mut scratch.pending;
+    let base = &mut scratch.base;
+    let holds_current = &mut scratch.holds_current;
+    let buffered = &mut scratch.buffered;
     let mut aggregations = Vec::new();
     let mut idle = 0usize;
     let mut contacts = 0usize;
 
     let end = (start + schedule.len()).min(sched.n_steps());
     for (w, l) in (start..end).enumerate() {
-        let conn = &sched.sets[l];
+        let conn = sched.sats_at(l);
         for &s in conn {
             contacts += 1;
             if !states[s].has_data {
@@ -87,7 +115,7 @@ pub fn forecast_window(
             }
         }
         if schedule[w] && !buffered.is_empty() {
-            aggregations.push(std::mem::take(&mut buffered));
+            aggregations.push(std::mem::take(buffered));
             agg_count += 1;
             // everyone's held version is now outdated
             for h in holds_current.iter_mut() {
@@ -166,6 +194,22 @@ mod tests {
         let f = forecast_window(&s, 0, &[true, true], &st);
         assert!(f.aggregations.is_empty());
         assert_eq!(f.idle, 2);
+    }
+
+    #[test]
+    fn scratch_reuse_is_pure() {
+        // repeated calls through one scratch match the allocating path
+        let s = sched3();
+        let states = fresh(3);
+        let mut scratch = ForecastScratch::default();
+        for sched_len in [3usize, 9, 5] {
+            let cand = vec![true; sched_len];
+            let a = forecast_window(&s, 0, &cand, &states);
+            let b = forecast_window_with(&mut scratch, &s, 0, &cand, &states);
+            assert_eq!(a.aggregations, b.aggregations);
+            assert_eq!(a.idle, b.idle);
+            assert_eq!(a.contacts, b.contacts);
+        }
     }
 
     #[test]

@@ -17,11 +17,16 @@ pub mod search;
 pub mod utility;
 
 pub use features::featurize;
-pub use forecast::{forecast_window, SatForecastState, WindowForecast};
+pub use forecast::{
+    forecast_window, forecast_window_with, ForecastScratch, SatForecastState, WindowForecast,
+};
 pub use planner::FedSpacePlanner;
 pub use samples::{
     generate_samples, pretrain_bank, samples_from_csv, samples_to_csv, CheckpointBank,
     MockBackend, SampleBackend, UtilitySamples,
 };
-pub use search::{infer_n_range, random_search, schedule_utility, schedule_utility_opts, SearchParams};
+pub use search::{
+    infer_n_range, random_search, random_search_serial, schedule_utility, schedule_utility_opts,
+    schedule_utility_with, SearchParams,
+};
 pub use utility::UtilityModel;

@@ -1,5 +1,13 @@
 //! Window-boundary planning: glue between the live engine and the
 //! forecast + utility + random-search pipeline.
+//!
+//! `plan` delegates to [`random_search`], whose candidate scoring runs in
+//! parallel on scoped worker threads ([`crate::exec::scope_chunks`], sized
+//! by [`crate::exec::default_parallelism`]). Determinism is seed-only: the
+//! planner's private `rng` is consumed in the same order at any thread
+//! count, so replans (and whole engine runs) replay bit-identically — see
+//! `search::tests::parallel_search_bit_identical_to_serial` and
+//! `sim::engine::tests::deterministic_given_seed`.
 
 use super::forecast::SatForecastState;
 use super::search::{random_search, SearchParams};
@@ -50,7 +58,8 @@ mod tests {
 
     #[test]
     fn plans_valid_windows_repeatedly() {
-        let sets: Vec<Vec<usize>> = (0..48).map(|i| if i % 3 == 0 { vec![0, 1] } else { vec![1] }).collect();
+        let sets: Vec<Vec<usize>> =
+            (0..48).map(|i| if i % 3 == 0 { vec![0, 1] } else { vec![1] }).collect();
         let sched = ConnectivitySchedule::from_sets(sets, 2);
         let u = UtilityModel::new("forest").unwrap();
         let params = SearchParams { i0: 24, n_min: 2, n_max: 6, n_search: 50 };

@@ -3,10 +3,21 @@
 //! R ⊂ {0,1}^I0 is sampled by drawing n_agg ∈ [N_min, N_max] and placing
 //! n_agg aggregations uniformly without replacement over the I0 slots —
 //! exactly the paper's search-space reduction (|R| = 5000 by default).
+//!
+//! [`random_search`] is an L3 hot path (|R| candidate replays per planned
+//! window). It draws every candidate serially from the seeded [`Rng`] —
+//! consuming the stream in exactly the legacy order, so fixed seeds stay
+//! bit-identical — then scores candidates in parallel over borrowed state
+//! via [`crate::exec::scope_chunks`], each worker reusing one
+//! [`ForecastScratch`] across its whole chunk. The argmax is reduced
+//! serially in candidate order (first maximum wins), matching the serial
+//! reference [`random_search_serial`] exactly; the determinism tests below
+//! assert equality.
 
-use super::forecast::{forecast_window, SatForecastState};
+use super::forecast::{forecast_window_with, ForecastScratch, SatForecastState};
 use super::utility::UtilityModel;
 use crate::connectivity::ConnectivitySchedule;
+use crate::exec;
 use crate::rng::Rng;
 
 /// Search hyper-parameters (paper §4.1 defaults in `ExperimentConfig`).
@@ -41,7 +52,33 @@ pub fn schedule_utility_opts(
     training_status: f64,
     chain_t: bool,
 ) -> f64 {
-    let f = forecast_window(sched, start, candidate, states);
+    let mut scratch = ForecastScratch::default();
+    schedule_utility_with(
+        &mut scratch,
+        sched,
+        start,
+        candidate,
+        states,
+        utility,
+        training_status,
+        chain_t,
+    )
+}
+
+/// [`schedule_utility_opts`] with caller-owned forecast scratch (hot-path
+/// form used by the parallel search workers).
+#[allow(clippy::too_many_arguments)]
+pub fn schedule_utility_with(
+    scratch: &mut ForecastScratch,
+    sched: &ConnectivitySchedule,
+    start: usize,
+    candidate: &[bool],
+    states: &[SatForecastState],
+    utility: &UtilityModel,
+    training_status: f64,
+    chain_t: bool,
+) -> f64 {
+    let f = forecast_window_with(scratch, sched, start, candidate, states);
     let mut t_cur = training_status;
     let mut total = 0.0;
     for st in &f.aggregations {
@@ -70,8 +107,75 @@ pub fn schedule_utility(
     schedule_utility_opts(sched, start, candidate, states, utility, training_status, true)
 }
 
+/// Draw one Eq.-13 candidate: n_agg ∈ [N_min, N_max] aggregations placed
+/// uniformly without replacement over the I0 slots.
+fn draw_candidate(params: &SearchParams, rng: &mut Rng) -> Vec<bool> {
+    let n_agg = rng.gen_range(params.n_min, params.n_max + 1);
+    let mut cand = vec![false; params.i0];
+    for pos in rng.choose_k(params.i0, n_agg) {
+        cand[pos] = true;
+    }
+    cand
+}
+
 /// Random search (Eq. 13): returns (best schedule, its predicted utility).
+///
+/// Candidates are drawn serially from `rng` (stream order identical to
+/// [`random_search_serial`], so determinism is seed-only), scored in
+/// parallel, and argmax-reduced in candidate order — bit-identical to the
+/// serial reference at any thread count.
 pub fn random_search(
+    sched: &ConnectivitySchedule,
+    start: usize,
+    states: &[SatForecastState],
+    utility: &UtilityModel,
+    training_status: f64,
+    params: &SearchParams,
+    rng: &mut Rng,
+) -> (Vec<bool>, f64) {
+    assert!(params.n_min >= 1 && params.n_min <= params.n_max);
+    assert!(params.n_max <= params.i0);
+    assert!(params.n_search > 0, "n_search must be positive");
+    let cands: Vec<Vec<bool>> =
+        (0..params.n_search).map(|_| draw_candidate(params, rng)).collect();
+    // ≥ 64 candidates per worker so tiny searches stay on the caller thread
+    let threads = exec::default_parallelism().min(params.n_search.div_ceil(64));
+    let utilities: Vec<f64> = exec::scope_chunks(&cands, threads, |_, chunk| {
+        let mut scratch = ForecastScratch::default();
+        chunk
+            .iter()
+            .map(|cand| {
+                schedule_utility_with(
+                    &mut scratch,
+                    sched,
+                    start,
+                    cand,
+                    states,
+                    utility,
+                    training_status,
+                    true,
+                )
+            })
+            .collect()
+    });
+    // first maximum wins: ties (and NaNs) resolve to the earliest candidate,
+    // exactly as the serial loop's strict `u > best` update rule
+    let mut best_idx = 0usize;
+    let mut best_u = utilities[0];
+    for (i, &u) in utilities.iter().enumerate().skip(1) {
+        if u > best_u {
+            best_u = u;
+            best_idx = i;
+        }
+    }
+    let mut cands = cands;
+    (cands.swap_remove(best_idx), best_u)
+}
+
+/// The original serial search: draws and scores one candidate at a time.
+/// Kept as the determinism oracle for [`random_search`] and the
+/// single-thread baseline in `bench_perf` (EXPERIMENTS.md §Perf).
+pub fn random_search_serial(
     sched: &ConnectivitySchedule,
     start: usize,
     states: &[SatForecastState],
@@ -84,13 +188,13 @@ pub fn random_search(
     assert!(params.n_max <= params.i0);
     let mut best: Option<(Vec<bool>, f64)> = None;
     for _ in 0..params.n_search {
-        let n_agg = rng.gen_range(params.n_min, params.n_max + 1);
-        let mut cand = vec![false; params.i0];
-        for pos in rng.choose_k(params.i0, n_agg) {
-            cand[pos] = true;
-        }
+        let cand = draw_candidate(params, rng);
         let u = schedule_utility(sched, start, &cand, states, utility, training_status);
-        if best.as_ref().map_or(true, |(_, bu)| u > *bu) {
+        let better = match &best {
+            None => true,
+            Some((_, bu)) => u > *bu,
+        };
+        if better {
             best = Some((cand, u));
         }
     }
@@ -205,6 +309,26 @@ mod tests {
         let a = random_search(&s1, 0, &fresh(4), &u, 1.0, &params, &mut r1);
         let b = random_search(&s2, 0, &fresh(4), &u, 1.0, &params, &mut r2);
         assert_eq!(a.0, b.0);
+    }
+
+    #[test]
+    fn parallel_search_bit_identical_to_serial() {
+        // same seed → identical best schedule, identical utility, and an
+        // identically-positioned rng stream afterwards (the parallel path
+        // must consume draws in exactly the legacy order)
+        let u = UtilityModel::new("forest").unwrap();
+        for (seed, n_search) in [(3u64, 100usize), (17, 640), (99, 1)] {
+            let mut rp = Rng::new(seed);
+            let mut rs = Rng::new(seed);
+            let sp = line_schedule(5, 24, &mut rp);
+            let ss = line_schedule(5, 24, &mut rs);
+            let params = SearchParams { i0: 24, n_min: 2, n_max: 8, n_search };
+            let a = random_search(&sp, 0, &fresh(5), &u, 1.0, &params, &mut rp);
+            let b = random_search_serial(&ss, 0, &fresh(5), &u, 1.0, &params, &mut rs);
+            assert_eq!(a.0, b.0, "seed={seed} n_search={n_search}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "seed={seed}");
+            assert_eq!(rp.next_u64(), rs.next_u64(), "rng stream diverged (seed={seed})");
+        }
     }
 
     #[test]

@@ -120,7 +120,8 @@ impl<'a> Engine<'a> {
     /// Execute Algorithm 1 end to end.
     pub fn run(&mut self) -> Result<RunResult> {
         let cfg = self.cfg.clone();
-        let k = self.sched.n_sats;
+        let sched = self.sched;
+        let k = sched.n_sats;
         let mut rng = Rng::new(cfg.seed);
         let mut sat_rngs: Vec<Rng> = (0..k).map(|i| rng.split(i as u64 + 1)).collect();
         let mut clients: Vec<SatClient> =
@@ -142,7 +143,7 @@ impl<'a> Engine<'a> {
         });
         let mut days_to_target = None;
 
-        for i in 0..self.sched.n_steps() {
+        for i in 0..sched.n_steps() {
             // FedSpace: (re)plan at window boundaries using the live state
             if let (PolicyImpl::FedSpace(sp), Some(planner)) =
                 (&mut policy, self.planner.as_mut())
@@ -157,15 +158,16 @@ impl<'a> Engine<'a> {
                             has_data: c.has_data(),
                         })
                         .collect();
-                    let window = planner.plan(self.sched, i, &states, last_loss);
+                    let window = planner.plan(sched, i, &states, last_loss);
                     sp.extend(&window);
                 }
             }
 
-            let conn = self.sched.sets[i].clone();
+            // zero-copy view into the schedule's sorted contact list
+            let conn = sched.sats_at(i);
 
             // 1. receive uploads (Algorithm 1's for k ∈ C_i loop)
-            for &s in &conn {
+            for &s in conn {
                 trace.connections += 1;
                 if clients[s].can_upload(i) {
                     let (g, base) = clients[s].upload(i);
@@ -177,7 +179,7 @@ impl<'a> Engine<'a> {
             }
 
             // 2. SCHEDULER + SERVERUPDATE
-            if policy.decide(i, &conn, &gs.buffer) {
+            if policy.decide(i, conn, &gs.buffer) {
                 let t = Instant::now();
                 let stalenesses = gs.update(self.aggregator)?;
                 trace.t_agg_s += t.elapsed().as_secs_f64();
@@ -188,7 +190,7 @@ impl<'a> Engine<'a> {
             }
 
             // 3. broadcast (w^{i+1}, i_g) and start local training
-            for &s in &conn {
+            for &s in conn {
                 if clients[s].has_data() && clients[s].wants_model(gs.i_g, i) {
                     clients[s].receive(gs.i_g, i, cfg.train_duration_slots);
                     let t = Instant::now();
@@ -200,7 +202,7 @@ impl<'a> Engine<'a> {
             }
 
             // 4. periodic evaluation
-            let last_step = i + 1 == self.sched.n_steps();
+            let last_step = i + 1 == sched.n_steps();
             if (i + 1) % cfg.eval_every == 0 || last_step {
                 let t = Instant::now();
                 let (loss, acc) = self.trainer.evaluate(&gs.w)?;
@@ -224,7 +226,11 @@ impl<'a> Engine<'a> {
             }
         }
         let _ = last_acc;
-        trace.global_updates = gs.i_g;
+        // trace.global_updates is incremented exactly where gs.update() runs,
+        // so it already equals gs.i_g — asserted here and tested below rather
+        // than overwritten (it used to be clobbered with gs.i_g at the end,
+        // leaving two competing sources of truth).
+        debug_assert_eq!(trace.global_updates, gs.i_g);
         Ok(RunResult {
             days_to_target: days_to_target
                 .or_else(|| trace.curve.days_to_accuracy(cfg.stop_at_accuracy.unwrap_or(2.0))),
@@ -488,6 +494,26 @@ mod tests {
         assert!(best_fb.is_finite(), "fedbuff never reached target");
         let fs = fs.expect("fedspace never reached target");
         assert!(fs <= best_fb * 1.5, "fedspace={fs} fedbuff={best_fb}");
+    }
+
+    #[test]
+    fn trace_global_updates_single_source_of_truth() {
+        // trace.global_updates counts engine-performed aggregations; it must
+        // equal the GS round counter at the end for every policy (it used to
+        // be overwritten with gs.i_g, hiding any divergence)
+        for alg in [
+            AlgorithmKind::Sync,
+            AlgorithmKind::Async,
+            AlgorithmKind::FedBuff,
+            AlgorithmKind::FedSpace,
+        ] {
+            let r = run_mock(alg, 4, 96);
+            assert_eq!(
+                r.trace.global_updates, r.final_round,
+                "{alg:?}: trace={} final_round={}",
+                r.trace.global_updates, r.final_round
+            );
+        }
     }
 
     #[test]

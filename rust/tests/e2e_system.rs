@@ -3,7 +3,9 @@
 //! the PJRT backend (real artifacts, real synthetic-fMoW batches — the
 //! complete three-layer path).
 
-use fedspace::app::{run_mock_experiment, run_pjrt_experiment};
+use fedspace::app::run_mock_experiment;
+#[cfg(feature = "pjrt")]
+use fedspace::app::run_pjrt_experiment;
 use fedspace::cfg::{AlgorithmKind, DataDist, ExperimentConfig};
 
 fn base_cfg() -> ExperimentConfig {
@@ -67,6 +69,7 @@ fn mock_sync_idles_most_and_async_is_stalest() {
 }
 
 #[test]
+#[cfg(feature = "pjrt")]
 fn pjrt_end_to_end_fedbuff_trains() {
     // The full three-layer path on a real small workload (CI-sized).
     let cfg = ExperimentConfig {
@@ -98,6 +101,7 @@ fn pjrt_end_to_end_fedbuff_trains() {
 }
 
 #[test]
+#[cfg(feature = "pjrt")]
 fn pjrt_noniid_partition_runs() {
     let cfg = ExperimentConfig {
         algorithm: AlgorithmKind::Async,

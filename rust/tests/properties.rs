@@ -5,7 +5,10 @@ use fedspace::connectivity::ConnectivitySchedule;
 use fedspace::fl::illustrative;
 use fedspace::fl::{normalized_weights, Buffer, GradientEntry};
 use fedspace::rng::Rng;
-use fedspace::sched::{forecast_window, random_search, SatForecastState, SearchParams, UtilityModel};
+use fedspace::sched::{
+    forecast_window, random_search, random_search_serial, SatForecastState, SearchParams,
+    UtilityModel,
+};
 use fedspace::testing::property;
 
 fn random_schedule(rng: &mut Rng, k: usize, steps: usize) -> ConnectivitySchedule {
@@ -91,6 +94,65 @@ fn prop_connectivity_schedule_lookup_consistency() {
                 }
             }
         }
+    });
+}
+
+#[test]
+fn prop_bitset_view_matches_sorted_views() {
+    // the packed-u64 connectivity view must agree with the legacy sorted
+    // Vec views on random schedules, including multi-word steps (k > 64)
+    property(60, |rng| {
+        let k = rng.gen_range(1, 140);
+        let steps = rng.gen_range(1, 40);
+        let s = random_schedule(rng, k, steps);
+        assert_eq!(s.words_per_step(), k.div_ceil(64));
+        for i in 0..steps {
+            // word iteration reconstructs the sorted set exactly
+            let mut rebuilt = Vec::new();
+            for (w, &word) in s.step_words(i).iter().enumerate() {
+                let mut word = word;
+                while word != 0 {
+                    rebuilt.push(w * 64 + word.trailing_zeros() as usize);
+                    word &= word - 1;
+                }
+            }
+            assert_eq!(rebuilt, s.sets[i], "step {i}");
+            assert_eq!(s.sats_at(i), &s.sets[i][..]);
+            // O(1) connected() agrees with binary search on the sorted view
+            for sat in 0..k {
+                assert_eq!(
+                    s.connected(sat, i),
+                    s.sets[i].binary_search(&sat).is_ok(),
+                    "sat {sat} step {i}"
+                );
+            }
+        }
+        assert!(!s.connected(k, 0));
+    });
+}
+
+#[test]
+fn prop_parallel_search_matches_serial_reference() {
+    // parallel candidate scoring must return bit-identical schedules and
+    // utilities to the legacy serial loop for any seed / search size
+    property(25, |rng| {
+        let k = rng.gen_range(1, 8);
+        let i0 = rng.gen_range(4, 30);
+        let s = random_schedule(rng, k, i0);
+        let n_min = rng.gen_range(1, i0.min(4) + 1);
+        let n_max = rng.gen_range(n_min, i0 + 1);
+        let n_search = rng.gen_range(1, 200);
+        let u = UtilityModel::new("forest").unwrap();
+        let params = SearchParams { i0, n_min, n_max, n_search };
+        let states = vec![SatForecastState::fresh(); k];
+        let seed = rng.next_u64();
+        let mut r1 = Rng::new(seed);
+        let mut r2 = Rng::new(seed);
+        let a = random_search(&s, 0, &states, &u, 1.0, &params, &mut r1);
+        let b = random_search_serial(&s, 0, &states, &u, 1.0, &params, &mut r2);
+        assert_eq!(a.0, b.0, "seed={seed:#x}");
+        assert_eq!(a.1.to_bits(), b.1.to_bits(), "seed={seed:#x}");
+        assert_eq!(r1.next_u64(), r2.next_u64(), "rng stream diverged");
     });
 }
 

@@ -1,6 +1,8 @@
 //! Integration tests: the PJRT runtime executing real AOT artifacts.
 //!
-//! Requires `make artifacts` (the Makefile's `test` target guarantees it).
+//! Requires the `pjrt` cargo feature (vendored `xla` crate) and
+//! `make artifacts` (the Makefile's `test` target guarantees it).
+#![cfg(feature = "pjrt")]
 //! These tests exercise the full L3→L2→L1 path: HLO text load → PJRT
 //! compile → execute, and cross-check the numerics against pure-Rust
 //! oracles where one exists.
