@@ -1,0 +1,37 @@
+//! Tour of the scenario registry: list the zoo, then run a scaled-down
+//! copy of each built-in and compare the algorithm grids side by side.
+//!
+//! Run: `cargo run --release --example scenario_zoo`
+//!
+//! Full-size runs are one command each, e.g.
+//! `cargo run --release -- scenarios run walker-starlink-1584`.
+
+use fedspace::app::run_scenario;
+use fedspace::cfg::Scenario;
+use fedspace::metrics::Table;
+
+fn main() -> anyhow::Result<()> {
+    println!("== the constellation zoo ==");
+    for sc in Scenario::builtins() {
+        println!("  {:<22} {}", sc.name, sc.summary);
+    }
+
+    println!("\n== scaled-down grid runs (24 satellites, 1 simulated day) ==");
+    let mut t = Table::new(&["scenario", "algorithm", "rounds", "idle%", "best acc"]);
+    for sc in Scenario::builtins() {
+        let sc = sc.scaled(Some(24), Some(96));
+        for out in run_scenario(&sc, None)? {
+            let r = &out.result;
+            t.row(&[
+                sc.name.clone(),
+                out.algorithm.name().to_string(),
+                r.final_round.to_string(),
+                format!("{:.1}", 100.0 * r.trace.idle_fraction()),
+                format!("{:.4}", r.trace.curve.best_accuracy()),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("(scenario TOMLs: `fedspace scenarios describe <name>`)");
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Dense vs contact-list engine mode — the speedup the contact-list walk
+//! buys when most time indexes carry no contact, plus a bit-identity check
+//! so the bench can never report a fast-but-wrong mode.
+//!
+//! The connectivity schedule is computed once per scenario and shared, so
+//! the timings isolate the engine loop itself.
+//!
+//! Run from `rust/`: `cargo bench --bench bench_engine_modes`
+
+use fedspace::app::run_mock_on_schedule;
+use fedspace::bench_util::{section, time_once};
+use fedspace::cfg::{AlgorithmKind, EngineMode, Scenario};
+use fedspace::connectivity::ConnectivitySchedule;
+use fedspace::testing::assert_same_run;
+
+fn run_modes(sc: &Scenario, sched: &ConnectivitySchedule, alg: AlgorithmKind) {
+    let mut cfg = sc.experiment_config(alg);
+    let mut results = Vec::new();
+    let mut timings = Vec::new();
+    for mode in [EngineMode::Dense, EngineMode::ContactList] {
+        cfg.engine_mode = mode;
+        let (out, dt) = time_once(&format!("  {} / {}", alg.name(), mode.name()), || {
+            run_mock_on_schedule(&cfg, sched, None).expect("run")
+        });
+        results.push(out.result);
+        timings.push(dt);
+    }
+    assert_same_run(&results[0], &results[1], alg.name());
+    println!(
+        "  identical traces; engine speedup {:.2}x",
+        timings[0] / timings[1].max(1e-9)
+    );
+}
+
+fn bench_scenario(name: &str, algorithms: &[AlgorithmKind]) {
+    let sc = Scenario::builtin(name).expect("builtin");
+    section(&format!("{name}: {}", sc.summary));
+    let ((_, sched), _) = time_once("  build schedule (shared)", || sc.build_schedule());
+    let active = sched.active_steps().len();
+    println!(
+        "  {} of {} steps have contacts ({:.0}% contact-free)",
+        active,
+        sched.n_steps(),
+        100.0 * (1.0 - active as f64 / sched.n_steps().max(1) as f64)
+    );
+    for &alg in algorithms {
+        run_modes(&sc, &sched, alg);
+    }
+}
+
+fn main() {
+    bench_scenario("sparse-single-gs", &[AlgorithmKind::Async, AlgorithmKind::FedBuff]);
+    bench_scenario("walker-starlink-1584", &[AlgorithmKind::FedBuff]);
+}

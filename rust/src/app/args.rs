@@ -8,13 +8,16 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// The leading subcommand word.
     pub command: String,
+    /// Bare words after the command, in order.
     pub positional: Vec<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,
 }
 
 impl Args {
+    /// Parse an argv iterator (without the program name).
     pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
         let mut it = argv.into_iter();
         let command = it.next().unwrap_or_default();
@@ -40,18 +43,22 @@ impl Args {
         Ok(args)
     }
 
+    /// Was `--name` given without a value?
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Value of option `--name`, if given.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.options.get(name).map(|s| s.as_str())
     }
 
+    /// Value of `--name` or a default.
     pub fn get_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// Integer value of `--name` or a default; errors on non-integers.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -59,6 +66,7 @@ impl Args {
         }
     }
 
+    /// Float value of `--name` or a default; errors on non-numbers.
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -66,6 +74,7 @@ impl Args {
         }
     }
 
+    /// Value of `--name`, or an error naming the missing option.
     pub fn require(&self, name: &str) -> Result<&str> {
         match self.get(name) {
             Some(v) => Ok(v),

@@ -1,15 +1,16 @@
 //! CLI subcommand implementations.
 
 use super::args::Args;
-use super::runner::{run_mock_experiment, run_pjrt_experiment};
-use crate::cfg::{AlgorithmKind, DataDist, ExperimentConfig};
+use super::runner::{run_mock_experiment, run_pjrt_experiment, run_scenario};
+use crate::cfg::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig, Scenario};
 use crate::connectivity::ConnectivityStats;
 use crate::fl::illustrative;
 use crate::metrics::{write_file, Table};
 use crate::rng::Rng;
 use crate::sched::{generate_samples, pretrain_bank, MockBackend, UtilityModel};
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
+/// Top-level CLI usage text (`fedspace help`).
 pub const HELP: &str = "\
 fedspace — FL coordinator for satellites and ground stations (So et al. 2022)
 
@@ -23,10 +24,20 @@ COMMANDS:
                   --config FILE           TOML config (optional)
                   --algorithm sync|async|fedbuff|fedspace (fedspace)
                   --dist iid|noniid (iid) --steps N (480) --sats N (191)
+                  --engine dense|contacts (dense) engine time-axis mode
                   --mock                  analytic backend (default: PJRT)
                   --size small|fmow       model size for PJRT (fmow)
                   --eval-samples N (512)  --target ACC (none)
                   --out FILE              write the accuracy curve CSV
+  scenarios     the named scenario registry (constellation zoo)
+                  scenarios list                 catalog of built-ins
+                  scenarios describe <name>      summary + full TOML spec
+                  scenarios run <name|--config FILE>
+                    --sats N / --steps N         scale the scenario down
+                    --algorithm A                run one grid entry only
+                    --engine dense|contacts      override engine mode
+                    --target ACC                 stop at accuracy
+                    --out-dir DIR                write per-algorithm curves
   utility       phase-1 utility pipeline on the mock backend; reports MSE
                   --samples N (400)
   schedule      plan one FedSpace aggregation window over the real
@@ -53,10 +64,14 @@ fn config_from(args: &Args) -> Result<ExperimentConfig> {
     if let Some(s) = args.get("size") {
         cfg.model_size = s.to_string();
     }
+    if let Some(e) = args.get("engine") {
+        cfg.engine_mode = EngineMode::parse(e)?;
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
+/// `fedspace connectivity` — Figure 2 data for the default fleet.
 pub fn connectivity(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig {
         n_sats: args.get_usize("sats", 191)?,
@@ -88,6 +103,7 @@ pub fn connectivity(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fedspace illustrative` — Table 1 of the 3-satellite example.
 pub fn illustrative(_args: &Args) -> Result<()> {
     let mut table = Table::new(&["scheme", "updates", "s=0", "s=1", "s=2", "s=5", "total", "idle"]);
     for r in illustrative::table1() {
@@ -106,6 +122,7 @@ pub fn illustrative(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fedspace train` — one FL experiment (mock or PJRT backend).
 pub fn train(args: &Args) -> Result<()> {
     let cfg = config_from(args)?;
     let stop_at = args.get("target").map(|t| t.parse::<f64>()).transpose()?;
@@ -149,6 +166,7 @@ pub fn train(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fedspace utility` — phase-1 utility-regression pipeline on the mock.
 pub fn utility(args: &Args) -> Result<()> {
     let n = args.get_usize("samples", 400)?;
     let backend = MockBackend::new(32, 0);
@@ -233,6 +251,107 @@ pub fn schedule(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve the scenario a `scenarios describe|run` invocation names: a
+/// registry name as the second positional argument, or `--config FILE`.
+fn resolve_scenario(args: &Args) -> Result<Scenario> {
+    if let Some(path) = args.get("config") {
+        return Scenario::from_file(path);
+    }
+    match args.positional.get(1) {
+        Some(name) => Scenario::builtin(name).with_context(|| {
+            format!(
+                "unknown scenario {name:?} — `fedspace scenarios list` shows: {}",
+                Scenario::builtin_names().join(", ")
+            )
+        }),
+        None => bail!("usage: fedspace scenarios <list|describe|run> [name] [options]"),
+    }
+}
+
+/// `fedspace scenarios` — list, describe or run the constellation zoo.
+pub fn scenarios(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        None | Some("list") => {
+            let mut t = Table::new(&[
+                "name", "constellation", "sats", "stations", "steps", "engine", "algorithms",
+            ]);
+            for sc in Scenario::builtins() {
+                t.row(&[
+                    sc.name.clone(),
+                    sc.constellation.kind_name().to_string(),
+                    sc.constellation.n_sats().to_string(),
+                    sc.stations.name().to_string(),
+                    sc.n_steps.to_string(),
+                    sc.engine_mode.name().to_string(),
+                    sc.algorithms
+                        .iter()
+                        .map(|a| a.name().to_string())
+                        .collect::<Vec<_>>()
+                        .join("+"),
+                ]);
+            }
+            println!("built-in scenarios:\n{}", t.render());
+            println!("run one: fedspace scenarios run <name> [--sats N --steps N]");
+            Ok(())
+        }
+        Some("describe") => {
+            let sc = resolve_scenario(args)?;
+            println!("# {} — {}\n", sc.name, sc.summary);
+            print!("{}", sc.to_toml());
+            Ok(())
+        }
+        Some("run") => {
+            let sc = resolve_scenario(args)?;
+            let sats = args.get("sats").map(|v| v.parse::<usize>()).transpose()?;
+            let steps = args.get("steps").map(|v| v.parse::<usize>()).transpose()?;
+            let mut sc = sc.scaled(sats, steps);
+            if let Some(a) = args.get("algorithm") {
+                sc.algorithms = vec![AlgorithmKind::parse(a)?];
+            }
+            if let Some(e) = args.get("engine") {
+                sc.engine_mode = EngineMode::parse(e)?;
+            }
+            let stop_at = args.get("target").map(|t| t.parse::<f64>()).transpose()?;
+            println!(
+                "scenario {}: {} ({} sats, {} stations, {} steps, {} engine)",
+                sc.name,
+                sc.summary,
+                sc.constellation.n_sats(),
+                sc.stations.build().len(),
+                sc.n_steps,
+                sc.engine_mode.name()
+            );
+            let outs = run_scenario(&sc, stop_at)?;
+            let mut t = Table::new(&[
+                "algorithm", "rounds", "uploads", "idle%", "max stale", "best acc", "days→target",
+            ]);
+            for out in &outs {
+                let r = &out.result;
+                t.row(&[
+                    out.algorithm.name().to_string(),
+                    r.final_round.to_string(),
+                    r.trace.uploads.to_string(),
+                    format!("{:.1}", 100.0 * r.trace.idle_fraction()),
+                    r.trace.staleness.max_key().unwrap_or(0).to_string(),
+                    format!("{:.4}", r.trace.curve.best_accuracy()),
+                    match r.days_to_target {
+                        Some(d) => format!("{d:.2}"),
+                        None => "-".to_string(),
+                    },
+                ]);
+                if let Some(dir) = args.get("out-dir") {
+                    let path = format!("{dir}/{}_{}.csv", sc.name, out.algorithm.name());
+                    write_file(&path, &r.trace.curve.to_csv())?;
+                    println!("curve written to {path}");
+                }
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+        Some(other) => bail!("unknown scenarios action {other:?} (list|describe|run)"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,9 +380,37 @@ mod tests {
 
     #[test]
     fn config_overrides() {
-        let cfg = config_from(&args("train --algorithm sync --dist noniid --sats 20")).unwrap();
+        let cfg = config_from(&args(
+            "train --algorithm sync --dist noniid --sats 20 --engine contacts",
+        ))
+        .unwrap();
         assert_eq!(cfg.algorithm, AlgorithmKind::Sync);
         assert_eq!(cfg.dist, DataDist::NonIid);
         assert_eq!(cfg.n_sats, 20);
+        assert_eq!(cfg.engine_mode, EngineMode::ContactList);
+    }
+
+    #[test]
+    fn scenarios_list_and_describe() {
+        scenarios(&args("scenarios list")).unwrap();
+        scenarios(&args("scenarios")).unwrap();
+        for name in Scenario::builtin_names() {
+            scenarios(&args(&format!("scenarios describe {name}"))).unwrap();
+        }
+        assert!(scenarios(&args("scenarios describe nope")).is_err());
+        assert!(scenarios(&args("scenarios explode")).is_err());
+        assert!(scenarios(&args("scenarios run")).is_err());
+    }
+
+    #[test]
+    fn scenarios_run_tiny() {
+        scenarios(&args(
+            "scenarios run paper-fig7 --sats 6 --steps 24 --algorithm fedbuff",
+        ))
+        .unwrap();
+        scenarios(&args(
+            "scenarios run sparse-single-gs --sats 10 --steps 48 --engine contacts",
+        ))
+        .unwrap();
     }
 }

@@ -9,5 +9,5 @@ pub mod runner;
 pub use args::Args;
 pub use runner::{
     build_partition, build_schedule, build_utility_model, run_mock_experiment,
-    run_pjrt_experiment, ExperimentOutput,
+    run_mock_on_schedule, run_pjrt_experiment, run_scenario, ExperimentOutput,
 };

@@ -1,7 +1,7 @@
 //! Experiment runner: wires config → substrates → engine, for both the
 //! mock (scheduler-level) and PJRT (full three-layer) backends.
 
-use crate::cfg::{AlgorithmKind, DataDist, ExperimentConfig};
+use crate::cfg::{AlgorithmKind, DataDist, ExperimentConfig, Scenario};
 use crate::connectivity::{ConnectivityParams, ConnectivitySchedule};
 use crate::data::{
     partition::cell_visits, partition_iid, partition_noniid, Dataset, Partition, SynthConfig,
@@ -19,13 +19,17 @@ use anyhow::{Context, Result};
 
 /// Everything a bench/figure needs from one run.
 pub struct ExperimentOutput {
+    /// Trace, curve and final model of the run.
     pub result: RunResult,
+    /// Algorithm that produced it.
     pub algorithm: AlgorithmKind,
+    /// Data distribution it ran under.
     pub dist: DataDist,
 }
 
 /// Constellation + connectivity for a config.
 pub fn build_schedule(cfg: &ExperimentConfig) -> (Constellation, ConnectivitySchedule) {
+    crate::exec::set_default_parallelism(cfg.threads);
     let constellation = planet_labs_like(cfg.n_sats, cfg.constellation_seed);
     let stations = planet_ground_stations();
     let params = ConnectivityParams {
@@ -92,6 +96,7 @@ fn engine_cfg(cfg: &ExperimentConfig, stop_at: Option<f64>) -> EngineConfig {
         train_duration_slots: 1,
         seed: cfg.sim_seed,
         i0: cfg.i0,
+        mode: cfg.engine_mode,
     }
 }
 
@@ -118,6 +123,23 @@ pub fn run_mock_experiment(
     stop_at: Option<f64>,
 ) -> Result<ExperimentOutput> {
     let (_, sched) = build_schedule(cfg);
+    run_mock_on_schedule(cfg, &sched, stop_at)
+}
+
+/// [`run_mock_experiment`] over a caller-built schedule — scenario grid runs
+/// compute the (expensive) connectivity once and sweep algorithms over it.
+pub fn run_mock_on_schedule(
+    cfg: &ExperimentConfig,
+    sched: &ConnectivitySchedule,
+    stop_at: Option<f64>,
+) -> Result<ExperimentOutput> {
+    anyhow::ensure!(
+        sched.n_sats == cfg.n_sats,
+        "schedule covers {} satellites but config says {}",
+        sched.n_sats,
+        cfg.n_sats
+    );
+    crate::exec::set_default_parallelism(cfg.threads);
     let heterogeneity = match cfg.dist {
         DataDist::Iid => 0.1,
         DataDist::NonIid => 0.8,
@@ -132,8 +154,20 @@ pub fn run_mock_experiment(
     } else {
         None
     };
-    let mut engine = Engine::new(&sched, &trainer, &mut agg, engine_cfg(cfg, stop_at), planner);
+    let mut engine = Engine::new(sched, &trainer, &mut agg, engine_cfg(cfg, stop_at), planner);
     Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
+}
+
+/// Run a scenario's whole algorithm grid on the mock backend, sharing one
+/// connectivity schedule. Returns one [`ExperimentOutput`] per grid entry,
+/// in grid order.
+pub fn run_scenario(sc: &Scenario, stop_at: Option<f64>) -> Result<Vec<ExperimentOutput>> {
+    sc.validate()?;
+    let (_, sched) = sc.build_schedule();
+    sc.algorithms
+        .iter()
+        .map(|&alg| run_mock_on_schedule(&sc.experiment_config(alg), &sched, stop_at))
+        .collect()
 }
 
 /// PJRT sample backend: local updates and losses through the artifacts.
@@ -239,6 +273,17 @@ mod tests {
             AlgorithmKind::FedSpace,
         ] {
             let out = run_mock_experiment(&tiny_cfg(alg), None).unwrap();
+            assert!(!out.result.trace.curve.points.is_empty(), "{alg:?}");
+        }
+    }
+
+    #[test]
+    fn run_scenario_sweeps_whole_grid() {
+        let sc = Scenario::builtin("paper-fig7").unwrap().scaled(Some(8), Some(48));
+        let outs = run_scenario(&sc, None).unwrap();
+        assert_eq!(outs.len(), sc.algorithms.len());
+        for (out, &alg) in outs.iter().zip(&sc.algorithms) {
+            assert_eq!(out.algorithm, alg);
             assert!(!out.result.trace.curve.points.is_empty(), "{alg:?}");
         }
     }

@@ -8,15 +8,22 @@ use std::time::Instant;
 /// Statistics of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
+    /// Case label as printed.
     pub name: String,
+    /// Measured iterations.
     pub iters: usize,
+    /// Fastest iteration [s].
     pub min_s: f64,
+    /// Median iteration [s].
     pub median_s: f64,
+    /// 95th-percentile iteration [s].
     pub p95_s: f64,
+    /// Mean iteration [s].
     pub mean_s: f64,
 }
 
 impl BenchStats {
+    /// One-line human-readable report.
     pub fn report(&self) -> String {
         format!(
             "{:<44} iters={:<4} min={} median={} p95={} mean={}",

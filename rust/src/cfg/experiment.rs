@@ -8,13 +8,18 @@ use anyhow::{bail, Context, Result};
 /// Which aggregation-indicator algorithm the GS runs (§2.4, Eq. 5–7, §3).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AlgorithmKind {
+    /// Synchronous FL (Eq. 5): wait for every satellite each round.
     Sync,
+    /// Asynchronous FL (Eq. 6): aggregate on every upload.
     Async,
+    /// FedBuff (Eq. 7): aggregate once M distinct satellites contributed.
     FedBuff,
+    /// FedSpace (§3): connectivity-aware scheduled aggregation.
     FedSpace,
 }
 
 impl AlgorithmKind {
+    /// Parse a CLI/TOML spelling (case-insensitive, accepts long forms).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "sync" | "synchronous" => AlgorithmKind::Sync,
@@ -25,6 +30,7 @@ impl AlgorithmKind {
         })
     }
 
+    /// Canonical lowercase name (inverse of [`Self::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             AlgorithmKind::Sync => "sync",
@@ -38,11 +44,14 @@ impl AlgorithmKind {
 /// Dataset distribution across satellites (§4.1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DataDist {
+    /// Uniform random split of the training set.
     Iid,
+    /// UTM-zone split driven by each satellite's ground track.
     NonIid,
 }
 
 impl DataDist {
+    /// Parse a CLI/TOML spelling (`"iid"` / `"noniid"` / `"non-iid"`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "iid" => DataDist::Iid,
@@ -52,42 +61,111 @@ impl DataDist {
     }
 }
 
+/// How the simulation engine walks the time axis.
+///
+/// Both modes execute the identical Algorithm-1 step body and produce
+/// bit-identical traces (asserted by `sim::engine` tests); contact-list
+/// mode simply skips steps where provably nothing can happen. See
+/// ADR-0003 in `docs/ADRs.md` for the selection rationale.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EngineMode {
+    /// Visit every time index 0..n_steps (the paper's literal loop).
+    #[default]
+    Dense,
+    /// Advance directly between events (contacts, evaluations, scheduled
+    /// aggregations, planner boundaries) derived from the bitset schedule —
+    /// the right mode for sparse mega-constellation scenarios where most
+    /// slots carry no contact.
+    ContactList,
+}
+
+impl EngineMode {
+    /// Parse a CLI/TOML spelling (`"dense"` / `"contacts"` /
+    /// `"contact-list"`).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "dense" => EngineMode::Dense,
+            "contacts" | "contact-list" | "contact_list" | "sparse" => EngineMode::ContactList,
+            other => bail!("unknown engine mode {other:?}"),
+        })
+    }
+
+    /// Canonical lowercase name (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineMode::Dense => "dense",
+            EngineMode::ContactList => "contacts",
+        }
+    }
+}
+
 /// Full experiment configuration.
 #[derive(Clone, Debug)]
 pub struct ExperimentConfig {
     // constellation / connectivity
+    /// Number of satellites K.
     pub n_sats: usize,
+    /// Seed for the constellation builder's jitter.
     pub constellation_seed: u64,
+    /// Wall-clock seconds per time index T0 (paper: 15 min).
     pub t0_s: f64,
+    /// Simulated time indexes (paper: 480 = 5 days).
     pub n_steps: usize,
+    /// Minimum elevation angle α_min [deg].
     pub min_elev_deg: f64,
     // data
+    /// IID or trajectory-driven Non-IID partition.
     pub dist: DataDist,
+    /// Training-set size.
     pub n_train: usize,
+    /// Validation-set size.
     pub n_val: usize,
+    /// Per-pixel noise of the synthetic dataset (difficulty knob).
     pub noise_sigma: f32,
+    /// Dataset-generation seed.
     pub data_seed: u64,
     // FL
+    /// Aggregation-indicator algorithm the GS runs.
     pub algorithm: AlgorithmKind,
+    /// FedBuff's M (distinct contributors per aggregation).
     pub fedbuff_m: usize,
+    /// Staleness-compensation exponent α of Eq. 4.
     pub alpha: f64,
+    /// Local-SGD learning rate.
     pub lr: f32,
+    /// Target validation accuracy for time-to-accuracy runs (Table 2).
     pub target_accuracy: f64,
     // FedSpace scheduler
+    /// Scheduling-window length I0 in slots.
     pub i0: usize,
+    /// Minimum aggregations per window N_min.
     pub n_min: usize,
+    /// Maximum aggregations per window N_max.
     pub n_max: usize,
+    /// |R| — candidate vectors per random search.
     pub n_search: usize,
+    /// Utility samples generated in phase 1.
     pub utility_samples: usize,
+    /// Maximum staleness drawn when generating utility samples.
     pub s_max: usize,
+    /// Utility regressor kind ("forest" or "linear").
     pub regressor: String,
     // model / runtime
+    /// PJRT artifact size ("small" or "fmow").
     pub model_size: String,
+    /// Directory holding the AOT artifacts.
     pub artifacts_dir: String,
     // simulation
+    /// Engine seed (client RNG streams, planner search).
     pub sim_seed: u64,
+    /// Evaluate every this many time indexes.
     pub eval_every: usize,
+    /// Worker threads for the parallel hot paths (0 = auto); applied via
+    /// `exec::set_default_parallelism` by the runner — a resource knob,
+    /// never a semantics knob (results are thread-count independent).
     pub threads: usize,
+    /// Dense per-step loop or sparse contact-list event loop.
+    pub engine_mode: EngineMode,
 }
 
 impl Default for ExperimentConfig {
@@ -120,6 +198,7 @@ impl Default for ExperimentConfig {
             sim_seed: 7,
             eval_every: 4,
             threads: 0, // 0 = auto
+            engine_mode: EngineMode::Dense,
         }
     }
 }
@@ -169,6 +248,7 @@ impl ExperimentConfig {
         Self::from_doc(&doc)
     }
 
+    /// Parse from a TOML file on disk.
     pub fn from_file(path: &str) -> Result<Self> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config {path}"))?;
@@ -208,10 +288,14 @@ impl ExperimentConfig {
         get!(doc, "sim", "seed", to_u64, c.sim_seed);
         get!(doc, "sim", "eval_every", to_usize, c.eval_every);
         get!(doc, "sim", "threads", to_usize, c.threads);
+        if let Some(v) = doc.get("sim").and_then(|s| s.get("engine")) {
+            c.engine_mode = EngineMode::parse(v.as_str().context("engine must be string")?)?;
+        }
         c.validate()?;
         Ok(c)
     }
 
+    /// Reject configurations the engine or scheduler cannot honour.
     pub fn validate(&self) -> Result<()> {
         if self.n_sats == 0 {
             bail!("n_sats must be > 0");
@@ -227,6 +311,9 @@ impl ExperimentConfig {
         }
         if self.fedbuff_m == 0 {
             bail!("fedbuff_m must be > 0");
+        }
+        if self.eval_every == 0 {
+            bail!("eval_every must be > 0 (the engine evaluates on this modulus)");
         }
         if !(0.0..=1.0).contains(&self.target_accuracy) {
             bail!("target_accuracy must be in [0,1]");
@@ -287,6 +374,8 @@ mod tests {
         assert!(ExperimentConfig::from_toml_text("[fedspace]\nn_min = 10\nn_max = 2").is_err());
         assert!(ExperimentConfig::from_toml_text("[fl]\nalgorithm = \"sgd\"").is_err());
         assert!(ExperimentConfig::from_toml_text("[constellation]\nn_sats = 0").is_err());
+        // would divide by zero in the engine's evaluation modulus
+        assert!(ExperimentConfig::from_toml_text("[sim]\neval_every = 0").is_err());
     }
 
     #[test]
@@ -300,5 +389,17 @@ mod tests {
         for k in ["sync", "async", "fedbuff", "fedspace"] {
             assert_eq!(AlgorithmKind::parse(k).unwrap().name(), k);
         }
+    }
+
+    #[test]
+    fn engine_mode_parse_and_toml() {
+        assert_eq!(EngineMode::parse("dense").unwrap(), EngineMode::Dense);
+        for s in ["contacts", "contact-list", "contact_list", "sparse"] {
+            assert_eq!(EngineMode::parse(s).unwrap(), EngineMode::ContactList);
+        }
+        assert!(EngineMode::parse("warp").is_err());
+        let c = ExperimentConfig::from_toml_text("[sim]\nengine = \"contacts\"").unwrap();
+        assert_eq!(c.engine_mode, EngineMode::ContactList);
+        assert_eq!(ExperimentConfig::default().engine_mode, EngineMode::Dense);
     }
 }

@@ -1,9 +1,11 @@
 //! Config system: a minimal TOML-subset parser (no `serde`/`toml` in the
-//! offline vendor set) plus the typed experiment configuration the launcher
-//! consumes.
+//! offline vendor set), the typed experiment configuration the launcher
+//! consumes, and the named scenario registry (`scenarios` CLI subcommand).
 
 pub mod experiment;
+pub mod scenario;
 pub mod toml;
 
-pub use experiment::{AlgorithmKind, DataDist, ExperimentConfig};
+pub use experiment::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig};
+pub use scenario::{ConstellationSpec, Scenario, StationNetwork};
 pub use toml::{parse_toml, TomlValue};

@@ -1,0 +1,807 @@
+//! The scenario registry and constellation zoo (ADR-0003).
+//!
+//! A [`Scenario`] bundles everything one reproducible experiment needs —
+//! constellation spec, ground-station network, link model, duration,
+//! algorithm grid, engine mode and scheduled satellite outages — behind a
+//! name and a TOML round-trip. The built-ins cover the paper's §4.1 fleet
+//! (`paper-fig7`) plus shapes the paper never ran: a Starlink-shell-1
+//! Walker delta (Elmahallawy & Luo 2023, arXiv:2302.13447), the sparse
+//! single-ground-station regime of Razmi et al. 2021 (arXiv:2109.01348),
+//! an Iridium-like polar Walker star, and a Dove fleet with mid-run
+//! satellite failures.
+//!
+//! Every scenario is runnable from the CLI: `fedspace scenarios run <name>`
+//! (see `app::cmd`), and `Scenario::from_toml_text(&sc.to_toml())` is the
+//! identity (tested per built-in).
+
+use super::experiment::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig};
+use super::toml::{parse_toml, TomlDoc, TomlValue};
+use crate::connectivity::{ConnectivityParams, ConnectivitySchedule};
+use crate::orbit::{
+    planet_ground_stations, planet_labs_like, Constellation, DowntimeWindow, GroundStation,
+    WalkerPattern, WalkerSpec,
+};
+use anyhow::{bail, Context, Result};
+
+/// How a scenario's constellation is generated.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ConstellationSpec {
+    /// The paper's §4.1 fleet shape: SSO + ISS Dove flocks with jitter.
+    PlanetLabsLike {
+        /// Fleet size K.
+        n_sats: usize,
+        /// Jitter seed (the fleet drifts deterministically per seed).
+        seed: u64,
+    },
+    /// An exact Walker `i:t/p/f` shell.
+    Walker {
+        /// Delta (360° RAAN spread) or star (180°).
+        pattern: WalkerPattern,
+        /// t — total satellites (divisible by `planes`).
+        n_sats: usize,
+        /// p — orbital planes.
+        planes: usize,
+        /// f — inter-plane phasing.
+        phasing: usize,
+        /// Shell altitude [km] (TOML-friendly unit).
+        alt_km: f64,
+        /// Inclination [deg].
+        inc_deg: f64,
+    },
+}
+
+impl ConstellationSpec {
+    /// Number of satellites the spec produces.
+    pub fn n_sats(&self) -> usize {
+        match self {
+            ConstellationSpec::PlanetLabsLike { n_sats, .. } => *n_sats,
+            ConstellationSpec::Walker { n_sats, .. } => *n_sats,
+        }
+    }
+
+    /// TOML `kind` spelling (`planet-labs`, `walker-delta`, `walker-star`).
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            ConstellationSpec::PlanetLabsLike { .. } => "planet-labs",
+            ConstellationSpec::Walker { pattern: WalkerPattern::Delta, .. } => "walker-delta",
+            ConstellationSpec::Walker { pattern: WalkerPattern::Star, .. } => "walker-star",
+        }
+    }
+
+    /// Materialize the orbits.
+    pub fn build(&self) -> Constellation {
+        match self {
+            ConstellationSpec::PlanetLabsLike { n_sats, seed } => planet_labs_like(*n_sats, *seed),
+            ConstellationSpec::Walker { pattern, n_sats, planes, phasing, alt_km, inc_deg } => {
+                Constellation::walker(&WalkerSpec {
+                    pattern: *pattern,
+                    n_sats: *n_sats,
+                    planes: *planes,
+                    phasing: *phasing,
+                    alt_m: alt_km * 1e3,
+                    inc_deg: *inc_deg,
+                })
+            }
+        }
+    }
+}
+
+/// Named ground-station network a scenario links against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StationNetwork {
+    /// The paper's 12-station commercial network (§4.1).
+    Planet12,
+    /// A single polar station — the sparse regime of Razmi et al. 2021.
+    SingleSvalbard,
+    /// The four polar sites only (every SSO orbit sees them, ISS never).
+    Polar4,
+}
+
+impl StationNetwork {
+    /// Parse the TOML spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "planet12" => StationNetwork::Planet12,
+            "single-svalbard" | "single_svalbard" => StationNetwork::SingleSvalbard,
+            "polar4" => StationNetwork::Polar4,
+            other => bail!("unknown station network {other:?}"),
+        })
+    }
+
+    /// Canonical lowercase name (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            StationNetwork::Planet12 => "planet12",
+            StationNetwork::SingleSvalbard => "single-svalbard",
+            StationNetwork::Polar4 => "polar4",
+        }
+    }
+
+    /// Materialize the station list.
+    pub fn build(&self) -> Vec<GroundStation> {
+        let all = planet_ground_stations();
+        match self {
+            StationNetwork::Planet12 => all,
+            StationNetwork::SingleSvalbard => {
+                all.into_iter().filter(|g| g.name == "svalbard").collect()
+            }
+            StationNetwork::Polar4 => {
+                const POLAR: [&str; 4] = ["svalbard", "inuvik", "fairbanks", "troll_antarctica"];
+                all.into_iter().filter(|g| POLAR.contains(&g.name.as_str())).collect()
+            }
+        }
+    }
+}
+
+/// One named, fully-specified experiment setup.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Registry key (kebab-case).
+    pub name: String,
+    /// One-line description shown by `scenarios list`.
+    pub summary: String,
+    /// Constellation generator.
+    pub constellation: ConstellationSpec,
+    /// Ground-station network.
+    pub stations: StationNetwork,
+    /// Wall-clock seconds per time index T0.
+    pub t0_s: f64,
+    /// Simulated time indexes.
+    pub n_steps: usize,
+    /// Minimum elevation angle α_min [deg].
+    pub min_elev_deg: f64,
+    /// Algorithm grid `scenarios run` sweeps (ablation in one command).
+    pub algorithms: Vec<AlgorithmKind>,
+    /// FedBuff's M for grid entries that use it.
+    pub fedbuff_m: usize,
+    /// Data distribution for the mock/PJRT trainer.
+    pub dist: DataDist,
+    /// Dense per-step loop or sparse contact-list event loop.
+    pub engine_mode: EngineMode,
+    /// Scheduled per-satellite outages (deterministic, planner-visible).
+    pub downtime: Vec<DowntimeWindow>,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            name: String::new(),
+            summary: String::new(),
+            constellation: ConstellationSpec::PlanetLabsLike { n_sats: 191, seed: 0 },
+            stations: StationNetwork::Planet12,
+            t0_s: 15.0 * 60.0,
+            n_steps: 480,
+            min_elev_deg: 25.0,
+            algorithms: vec![AlgorithmKind::FedSpace],
+            fedbuff_m: 96,
+            dist: DataDist::Iid,
+            engine_mode: EngineMode::Dense,
+            downtime: Vec::new(),
+        }
+    }
+}
+
+impl Scenario {
+    /// Reject self-inconsistent scenarios.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            bail!("scenario needs a name");
+        }
+        if self.n_steps == 0 {
+            bail!("n_steps must be > 0");
+        }
+        if self.t0_s <= 0.0 {
+            bail!("t0_s must be positive");
+        }
+        if self.algorithms.is_empty() {
+            bail!("algorithm grid is empty");
+        }
+        if self.fedbuff_m == 0 {
+            bail!("fedbuff_m must be > 0");
+        }
+        if self.constellation.n_sats() == 0 {
+            bail!("constellation has no satellites");
+        }
+        if let ConstellationSpec::Walker { n_sats, planes, .. } = &self.constellation {
+            if *planes == 0 || n_sats % planes != 0 {
+                bail!("walker: {n_sats} satellites not divisible into {planes} planes");
+            }
+        }
+        let k = self.constellation.n_sats();
+        for w in &self.downtime {
+            if w.sat >= k {
+                bail!("downtime names satellite {} but the fleet has {k}", w.sat);
+            }
+            if w.from_step >= w.until_step {
+                bail!("empty downtime window for satellite {}", w.sat);
+            }
+        }
+        Ok(())
+    }
+
+    /// Names of the built-in scenarios, in catalog order.
+    pub fn builtin_names() -> &'static [&'static str] {
+        &[
+            "paper-fig7",
+            "walker-starlink-1584",
+            "sparse-single-gs",
+            "polar-iridium-66",
+            "dove-dropout",
+        ]
+    }
+
+    /// Look up one built-in scenario by name.
+    pub fn builtin(name: &str) -> Option<Scenario> {
+        let sc = match name {
+            "paper-fig7" => Scenario {
+                name: "paper-fig7".into(),
+                summary: "the paper's §4.1 setup: 191 Doves, 12 stations, 5 days, \
+                          full algorithm grid (Figure 7 data)"
+                    .into(),
+                algorithms: vec![
+                    AlgorithmKind::Sync,
+                    AlgorithmKind::Async,
+                    AlgorithmKind::FedBuff,
+                    AlgorithmKind::FedSpace,
+                ],
+                ..Default::default()
+            },
+            "walker-starlink-1584" => Scenario {
+                name: "walker-starlink-1584".into(),
+                summary: "Starlink shell 1 (Walker delta 53deg: 1584/72/17 at 550 km), \
+                          1 day, contact-list engine (arXiv:2302.13447 regime)"
+                    .into(),
+                constellation: ConstellationSpec::Walker {
+                    pattern: WalkerPattern::Delta,
+                    n_sats: 1584,
+                    planes: 72,
+                    phasing: 17,
+                    alt_km: 550.0,
+                    inc_deg: 53.0,
+                },
+                n_steps: 96,
+                algorithms: vec![AlgorithmKind::Async, AlgorithmKind::FedBuff],
+                engine_mode: EngineMode::ContactList,
+                ..Default::default()
+            },
+            "sparse-single-gs" => Scenario {
+                name: "sparse-single-gs".into(),
+                summary: "40-satellite Walker delta 80deg vs a single polar station \
+                          (arXiv:2109.01348 regime), contact-list engine"
+                    .into(),
+                constellation: ConstellationSpec::Walker {
+                    pattern: WalkerPattern::Delta,
+                    n_sats: 40,
+                    planes: 5,
+                    phasing: 1,
+                    alt_km: 600.0,
+                    inc_deg: 80.0,
+                },
+                stations: StationNetwork::SingleSvalbard,
+                algorithms: vec![AlgorithmKind::Async, AlgorithmKind::FedBuff],
+                fedbuff_m: 8,
+                engine_mode: EngineMode::ContactList,
+                ..Default::default()
+            },
+            "polar-iridium-66" => Scenario {
+                name: "polar-iridium-66".into(),
+                summary: "Iridium-like Walker star (66/6/2 at 780 km, 86.4deg) over the \
+                          four polar stations"
+                    .into(),
+                constellation: ConstellationSpec::Walker {
+                    pattern: WalkerPattern::Star,
+                    n_sats: 66,
+                    planes: 6,
+                    phasing: 2,
+                    alt_km: 780.0,
+                    inc_deg: 86.4,
+                },
+                stations: StationNetwork::Polar4,
+                algorithms: vec![
+                    AlgorithmKind::Sync,
+                    AlgorithmKind::FedBuff,
+                    AlgorithmKind::FedSpace,
+                ],
+                fedbuff_m: 16,
+                ..Default::default()
+            },
+            "dove-dropout" => Scenario {
+                name: "dove-dropout".into(),
+                summary: "paper fleet with mid-run failures: 4 satellites go dark on day 2, \
+                          2 recover on day 4 (planner-visible outages)"
+                    .into(),
+                algorithms: vec![AlgorithmKind::FedBuff, AlgorithmKind::FedSpace],
+                downtime: vec![
+                    DowntimeWindow { sat: 5, from_step: 192, until_step: 384 },
+                    DowntimeWindow { sat: 17, from_step: 192, until_step: 384 },
+                    DowntimeWindow { sat: 42, from_step: 192, until_step: 480 },
+                    DowntimeWindow { sat: 108, from_step: 240, until_step: 480 },
+                ],
+                ..Default::default()
+            },
+            _ => return None,
+        };
+        debug_assert!(sc.validate().is_ok());
+        Some(sc)
+    }
+
+    /// All built-in scenarios, in catalog order.
+    pub fn builtins() -> Vec<Scenario> {
+        Self::builtin_names().iter().map(|n| Self::builtin(n).unwrap()).collect()
+    }
+
+    /// Serialize to the TOML subset `from_toml_text` parses; the round trip
+    /// is the identity for every built-in (tested).
+    pub fn to_toml(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        let _ = writeln!(s, "[scenario]");
+        let _ = writeln!(s, "name = \"{}\"", self.name);
+        let _ = writeln!(s, "summary = \"{}\"", self.summary);
+        let _ = writeln!(s, "engine = \"{}\"", self.engine_mode.name());
+        let _ = writeln!(s, "\n[constellation]");
+        let _ = writeln!(s, "kind = \"{}\"", self.constellation.kind_name());
+        match &self.constellation {
+            ConstellationSpec::PlanetLabsLike { n_sats, seed } => {
+                let _ = writeln!(s, "n_sats = {n_sats}");
+                let _ = writeln!(s, "seed = {seed}");
+            }
+            ConstellationSpec::Walker { n_sats, planes, phasing, alt_km, inc_deg, .. } => {
+                let _ = writeln!(s, "n_sats = {n_sats}");
+                let _ = writeln!(s, "planes = {planes}");
+                let _ = writeln!(s, "phasing = {phasing}");
+                let _ = writeln!(s, "alt_km = {alt_km}");
+                let _ = writeln!(s, "inc_deg = {inc_deg}");
+            }
+        }
+        let _ = writeln!(s, "\n[stations]");
+        let _ = writeln!(s, "network = \"{}\"", self.stations.name());
+        let _ = writeln!(s, "\n[connectivity]");
+        let _ = writeln!(s, "t0_s = {}", self.t0_s);
+        let _ = writeln!(s, "n_steps = {}", self.n_steps);
+        let _ = writeln!(s, "min_elev_deg = {}", self.min_elev_deg);
+        let _ = writeln!(s, "\n[fl]");
+        let algs: Vec<String> =
+            self.algorithms.iter().map(|a| format!("\"{}\"", a.name())).collect();
+        let _ = writeln!(s, "algorithms = [{}]", algs.join(", "));
+        let _ = writeln!(s, "fedbuff_m = {}", self.fedbuff_m);
+        let _ = writeln!(
+            s,
+            "dist = \"{}\"",
+            match self.dist {
+                DataDist::Iid => "iid",
+                DataDist::NonIid => "noniid",
+            }
+        );
+        if !self.downtime.is_empty() {
+            let col = |f: fn(&DowntimeWindow) -> usize| -> String {
+                self.downtime.iter().map(|w| f(w).to_string()).collect::<Vec<_>>().join(", ")
+            };
+            let _ = writeln!(s, "\n[downtime]");
+            let _ = writeln!(s, "sats = [{}]", col(|w| w.sat));
+            let _ = writeln!(s, "from = [{}]", col(|w| w.from_step));
+            let _ = writeln!(s, "until = [{}]", col(|w| w.until_step));
+        }
+        s
+    }
+
+    /// Parse a scenario from TOML text (defaults fill missing keys).
+    pub fn from_toml_text(text: &str) -> Result<Scenario> {
+        let doc = parse_toml(text)?;
+        Self::from_doc(&doc)
+    }
+
+    /// Parse a scenario from a TOML file on disk.
+    pub fn from_file(path: &str) -> Result<Scenario> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading scenario {path}"))?;
+        Self::from_toml_text(&text)
+    }
+
+    fn from_doc(doc: &TomlDoc) -> Result<Scenario> {
+        fn get<'a>(doc: &'a TomlDoc, sec: &str, key: &str) -> Option<&'a TomlValue> {
+            doc.get(sec).and_then(|s| s.get(key))
+        }
+        fn get_str<'a>(doc: &'a TomlDoc, sec: &str, key: &str) -> Result<Option<&'a str>> {
+            match get(doc, sec, key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(
+                    v.as_str().with_context(|| format!("[{sec}] {key} must be a string"))?,
+                )),
+            }
+        }
+        fn get_usize(doc: &TomlDoc, sec: &str, key: &str) -> Result<Option<usize>> {
+            match get(doc, sec, key) {
+                None => Ok(None),
+                Some(v) => {
+                    let i =
+                        v.as_int().with_context(|| format!("[{sec}] {key} must be an integer"))?;
+                    Ok(Some(usize::try_from(i)?))
+                }
+            }
+        }
+        fn get_f64(doc: &TomlDoc, sec: &str, key: &str) -> Result<Option<f64>> {
+            match get(doc, sec, key) {
+                None => Ok(None),
+                Some(v) => Ok(Some(
+                    v.as_float().with_context(|| format!("[{sec}] {key} must be a number"))?,
+                )),
+            }
+        }
+
+        let name = get_str(doc, "scenario", "name")?
+            .context("scenario TOML missing [scenario] name")?
+            .to_string();
+        let mut sc = Scenario { name, ..Default::default() };
+        if let Some(v) = get_str(doc, "scenario", "summary")? {
+            sc.summary = v.to_string();
+        }
+        if let Some(v) = get_str(doc, "scenario", "engine")? {
+            sc.engine_mode = EngineMode::parse(v)?;
+        }
+
+        let kind = get_str(doc, "constellation", "kind")?.unwrap_or("planet-labs").to_string();
+        sc.constellation = match kind.as_str() {
+            "planet-labs" => ConstellationSpec::PlanetLabsLike {
+                n_sats: get_usize(doc, "constellation", "n_sats")?.unwrap_or(191),
+                seed: get_usize(doc, "constellation", "seed")?.unwrap_or(0) as u64,
+            },
+            "walker-delta" | "walker-star" => ConstellationSpec::Walker {
+                pattern: kind
+                    .strip_prefix("walker-")
+                    .and_then(WalkerPattern::parse)
+                    .expect("walker- kinds carry a valid pattern suffix"),
+                n_sats: get_usize(doc, "constellation", "n_sats")?
+                    .context("[constellation] walker needs n_sats")?,
+                planes: get_usize(doc, "constellation", "planes")?
+                    .context("[constellation] walker needs planes")?,
+                phasing: get_usize(doc, "constellation", "phasing")?.unwrap_or(1),
+                alt_km: get_f64(doc, "constellation", "alt_km")?
+                    .context("[constellation] walker needs alt_km")?,
+                inc_deg: get_f64(doc, "constellation", "inc_deg")?
+                    .context("[constellation] walker needs inc_deg")?,
+            },
+            other => bail!("unknown constellation kind {other:?}"),
+        };
+
+        if let Some(v) = get_str(doc, "stations", "network")? {
+            sc.stations = StationNetwork::parse(v)?;
+        }
+        if let Some(v) = get_f64(doc, "connectivity", "t0_s")? {
+            sc.t0_s = v;
+        }
+        if let Some(v) = get_usize(doc, "connectivity", "n_steps")? {
+            sc.n_steps = v;
+        }
+        if let Some(v) = get_f64(doc, "connectivity", "min_elev_deg")? {
+            sc.min_elev_deg = v;
+        }
+        if let Some(v) = get(doc, "fl", "algorithms") {
+            let TomlValue::Array(items) = v else {
+                bail!("[fl] algorithms must be an array of strings");
+            };
+            sc.algorithms = items
+                .iter()
+                .map(|it| {
+                    AlgorithmKind::parse(
+                        it.as_str().context("[fl] algorithms entries must be strings")?,
+                    )
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = get_usize(doc, "fl", "fedbuff_m")? {
+            sc.fedbuff_m = v;
+        }
+        if let Some(v) = get_str(doc, "fl", "dist")? {
+            sc.dist = DataDist::parse(v)?;
+        }
+
+        if doc.get("downtime").is_some() {
+            let col = |key: &str| -> Result<Vec<usize>> {
+                match get(doc, "downtime", key) {
+                    None => bail!("[downtime] missing {key} array"),
+                    Some(TomlValue::Array(items)) => items
+                        .iter()
+                        .map(|it| {
+                            let i = it
+                                .as_int()
+                                .with_context(|| format!("[downtime] {key} must be integers"))?;
+                            Ok(usize::try_from(i)?)
+                        })
+                        .collect(),
+                    Some(_) => bail!("[downtime] {key} must be an array"),
+                }
+            };
+            let (sats, from, until) = (col("sats")?, col("from")?, col("until")?);
+            if sats.len() != from.len() || sats.len() != until.len() {
+                bail!(
+                    "[downtime] parallel arrays disagree: {} sats, {} from, {} until",
+                    sats.len(),
+                    from.len(),
+                    until.len()
+                );
+            }
+            sc.downtime = sats
+                .into_iter()
+                .zip(from)
+                .zip(until)
+                .map(|((sat, from_step), until_step)| DowntimeWindow { sat, from_step, until_step })
+                .collect();
+        }
+
+        sc.validate()?;
+        Ok(sc)
+    }
+
+    /// Build the constellation with its downtime windows attached.
+    pub fn build_constellation(&self) -> Constellation {
+        self.constellation.build().with_downtime(self.downtime.clone())
+    }
+
+    /// Build constellation + connectivity schedule, downtime applied — the
+    /// one deterministic C every algorithm in the grid shares.
+    pub fn build_schedule(&self) -> (Constellation, ConnectivitySchedule) {
+        let constellation = self.build_constellation();
+        let stations = self.stations.build();
+        let params = ConnectivityParams {
+            t0_s: self.t0_s,
+            min_elev_deg: self.min_elev_deg,
+            ..Default::default()
+        };
+        let sched = ConnectivitySchedule::compute(&constellation, &stations, self.n_steps, params);
+        let sched = sched.with_downtime(&constellation.downtime);
+        (constellation, sched)
+    }
+
+    /// Experiment configuration for one algorithm of the grid.
+    pub fn experiment_config(&self, algorithm: AlgorithmKind) -> ExperimentConfig {
+        let seed = match &self.constellation {
+            ConstellationSpec::PlanetLabsLike { seed, .. } => *seed,
+            ConstellationSpec::Walker { .. } => 0,
+        };
+        ExperimentConfig {
+            n_sats: self.constellation.n_sats(),
+            constellation_seed: seed,
+            t0_s: self.t0_s,
+            n_steps: self.n_steps,
+            min_elev_deg: self.min_elev_deg,
+            dist: self.dist,
+            algorithm,
+            fedbuff_m: self.fedbuff_m,
+            engine_mode: self.engine_mode,
+            ..Default::default()
+        }
+    }
+
+    /// A proportionally scaled-down copy (small CLI smoke runs, CI tests):
+    /// overrides the satellite count and/or step count while keeping the
+    /// scenario's shape. Walker plane counts are preserved when the new
+    /// count divides into them, otherwise reduced to 1 plane; `fedbuff_m`
+    /// scales with the fleet so FedBuff keeps its buffered character
+    /// instead of silently degenerating into Sync at small `--sats`.
+    pub fn scaled(&self, n_sats: Option<usize>, n_steps: Option<usize>) -> Scenario {
+        let mut sc = self.clone();
+        if let Some(steps) = n_steps {
+            sc.n_steps = steps;
+        }
+        if let Some(k) = n_sats {
+            let k0 = self.constellation.n_sats().max(1);
+            sc.fedbuff_m = (self.fedbuff_m * k / k0).max(1);
+            sc.constellation = match sc.constellation {
+                ConstellationSpec::PlanetLabsLike { seed, .. } => {
+                    ConstellationSpec::PlanetLabsLike { n_sats: k, seed }
+                }
+                ConstellationSpec::Walker {
+                    pattern, planes, phasing, alt_km, inc_deg, ..
+                } => {
+                    // keep the plane structure when it divides the new count
+                    let planes = if planes > 0 && k % planes == 0 { planes } else { 1 };
+                    ConstellationSpec::Walker {
+                        pattern,
+                        n_sats: k,
+                        planes,
+                        phasing,
+                        alt_km,
+                        inc_deg,
+                    }
+                }
+            };
+        }
+        // drop downtime windows that fell outside the scaled run
+        let k = sc.constellation.n_sats();
+        sc.downtime.retain(|w| w.sat < k && w.from_step < sc.n_steps);
+        let n_steps = sc.n_steps;
+        for w in &mut sc.downtime {
+            // retain guarantees from_step < n_steps, so the clamp range is valid
+            w.until_step = w.until_step.clamp(w.from_step + 1, n_steps);
+        }
+        sc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_has_at_least_five_unique_builtins() {
+        let names = Scenario::builtin_names();
+        assert!(names.len() >= 5, "{names:?}");
+        let mut sorted = names.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), names.len(), "duplicate scenario names");
+        for n in names {
+            let sc = Scenario::builtin(n).expect("registered builtin");
+            assert_eq!(&sc.name, n);
+            assert!(!sc.summary.is_empty(), "{n} has no summary");
+            sc.validate().unwrap();
+        }
+        assert!(Scenario::builtin("warp-drive").is_none());
+    }
+
+    #[test]
+    fn toml_roundtrip_every_builtin() {
+        for sc in Scenario::builtins() {
+            let toml = sc.to_toml();
+            let back = Scenario::from_toml_text(&toml)
+                .unwrap_or_else(|e| panic!("{}: {e}\n{toml}", sc.name));
+            assert_eq!(sc, back, "round-trip changed {}:\n{toml}", sc.name);
+        }
+    }
+
+    #[test]
+    fn paper_fig7_matches_section_4_1() {
+        let sc = Scenario::builtin("paper-fig7").unwrap();
+        assert_eq!(sc.constellation.n_sats(), 191);
+        assert_eq!(sc.stations, StationNetwork::Planet12);
+        assert_eq!(sc.n_steps, 480);
+        assert!((sc.t0_s - 900.0).abs() < 1e-9);
+        assert_eq!(sc.algorithms.len(), 4);
+        let cfg = sc.experiment_config(AlgorithmKind::FedSpace);
+        cfg.validate().unwrap();
+        assert_eq!(cfg.n_sats, 191);
+        assert_eq!(cfg.fedbuff_m, 96);
+    }
+
+    #[test]
+    fn builtin_shapes_cover_the_zoo() {
+        let shells: Vec<String> = Scenario::builtins()
+            .iter()
+            .map(|sc| sc.constellation.kind_name().to_string())
+            .collect();
+        assert!(shells.contains(&"planet-labs".to_string()));
+        assert!(shells.contains(&"walker-delta".to_string()));
+        assert!(shells.contains(&"walker-star".to_string()));
+        assert!(Scenario::builtins().iter().any(|sc| !sc.downtime.is_empty()));
+        assert!(Scenario::builtins()
+            .iter()
+            .any(|sc| sc.engine_mode == EngineMode::ContactList));
+        assert!(Scenario::builtins()
+            .iter()
+            .any(|sc| sc.stations == StationNetwork::SingleSvalbard));
+    }
+
+    #[test]
+    fn station_networks_build_expected_sizes() {
+        assert_eq!(StationNetwork::Planet12.build().len(), 12);
+        assert_eq!(StationNetwork::SingleSvalbard.build().len(), 1);
+        assert_eq!(StationNetwork::Polar4.build().len(), 4);
+        for n in [StationNetwork::Planet12, StationNetwork::SingleSvalbard, StationNetwork::Polar4]
+        {
+            assert_eq!(StationNetwork::parse(n.name()).unwrap(), n);
+        }
+    }
+
+    #[test]
+    fn from_toml_rejects_bad_specs() {
+        // walker without required keys
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[constellation]\nkind = \"walker-delta\"\nn_sats = 10"
+        )
+        .is_err());
+        // indivisible walker planes
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[constellation]\nkind = \"walker-delta\"\n\
+             n_sats = 10\nplanes = 3\nalt_km = 500.0\ninc_deg = 53.0"
+        )
+        .is_err());
+        // mismatched downtime arrays
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[downtime]\nsats = [1, 2]\nfrom = [0]\nuntil = [5]"
+        )
+        .is_err());
+        // downtime out of fleet range
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[constellation]\nkind = \"planet-labs\"\nn_sats = 5\n\
+             [downtime]\nsats = [7]\nfrom = [0]\nuntil = [5]"
+        )
+        .is_err());
+        // unknown kind / network / algorithm
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[constellation]\nkind = \"cube\""
+        )
+        .is_err());
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[stations]\nnetwork = \"mars\""
+        )
+        .is_err());
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[fl]\nalgorithms = [\"sgd\"]"
+        )
+        .is_err());
+        // missing name
+        assert!(Scenario::from_toml_text("[constellation]\nkind = \"planet-labs\"").is_err());
+        // empty fleet
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[constellation]\nkind = \"planet-labs\"\nn_sats = 0"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn minimal_toml_gets_defaults() {
+        let sc = Scenario::from_toml_text("[scenario]\nname = \"mine\"").unwrap();
+        assert_eq!(sc.constellation.n_sats(), 191);
+        assert_eq!(sc.stations, StationNetwork::Planet12);
+        assert_eq!(sc.engine_mode, EngineMode::Dense);
+        assert_eq!(sc.algorithms, vec![AlgorithmKind::FedSpace]);
+    }
+
+    #[test]
+    fn builtin_constellations_build() {
+        for sc in Scenario::builtins() {
+            let c = sc.build_constellation();
+            assert_eq!(c.len(), sc.constellation.n_sats(), "{}", sc.name);
+            assert_eq!(c.downtime.len(), sc.downtime.len(), "{}", sc.name);
+        }
+    }
+
+    #[test]
+    fn scaled_keeps_fedbuff_buffered() {
+        // M scales with the fleet: fedbuff must stay below the sync
+        // threshold at small --sats instead of degenerating into sync
+        let sc = Scenario::builtin("paper-fig7").unwrap().scaled(Some(12), None);
+        assert!(sc.fedbuff_m >= 1 && sc.fedbuff_m < 12, "m={}", sc.fedbuff_m);
+        // unscaled count leaves M untouched
+        let same = Scenario::builtin("paper-fig7").unwrap().scaled(None, Some(48));
+        assert_eq!(same.fedbuff_m, 96);
+    }
+
+    #[test]
+    fn scaled_preserves_shape_and_trims_downtime() {
+        let sc = Scenario::builtin("dove-dropout").unwrap().scaled(Some(24), Some(96));
+        assert_eq!(sc.constellation.n_sats(), 24);
+        assert_eq!(sc.n_steps, 96);
+        for w in &sc.downtime {
+            assert!(w.sat < 24);
+            assert!(w.from_step < w.until_step && w.until_step <= 96);
+        }
+        sc.validate().unwrap();
+        // walker scaling keeps divisibility
+        let w = Scenario::builtin("walker-starlink-1584").unwrap().scaled(Some(36), Some(48));
+        w.validate().unwrap();
+        assert_eq!(w.constellation.n_sats(), 36);
+        let schedule_ready = w.scaled(Some(35), None); // 35 % 72 != 0 -> 1 plane
+        schedule_ready.validate().unwrap();
+    }
+
+    #[test]
+    fn sparse_single_gs_schedule_is_actually_sparse() {
+        let sc = Scenario::builtin("sparse-single-gs").unwrap().scaled(Some(10), Some(96));
+        let (_, sched) = sc.build_schedule();
+        let active = sched.active_steps().len();
+        assert!(active < 96, "single-station schedule should have contact-free steps");
+    }
+
+    #[test]
+    fn dove_dropout_silences_failed_satellites() {
+        let sc = Scenario::builtin("dove-dropout").unwrap().scaled(Some(30), Some(240));
+        let (c, sched) = sc.build_schedule();
+        for w in &c.downtime {
+            for i in w.from_step..w.until_step.min(sched.n_steps()) {
+                assert!(!sched.connected(w.sat, i), "sat {} connected at {i}", w.sat);
+            }
+        }
+    }
+}

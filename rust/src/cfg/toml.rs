@@ -11,14 +11,20 @@ use std::collections::BTreeMap;
 /// A parsed TOML value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
+    /// Integer literal.
     Int(i64),
+    /// Floating-point literal.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// Double-quoted string.
     Str(String),
+    /// Flat array of the scalar kinds.
     Array(Vec<TomlValue>),
 }
 
 impl TomlValue {
+    /// As integer, if this is an `Int`.
     pub fn as_int(&self) -> Option<i64> {
         match self {
             TomlValue::Int(v) => Some(*v),
@@ -26,6 +32,7 @@ impl TomlValue {
         }
     }
 
+    /// As float; integers widen losslessly.
     pub fn as_float(&self) -> Option<f64> {
         match self {
             TomlValue::Float(v) => Some(*v),
@@ -34,6 +41,7 @@ impl TomlValue {
         }
     }
 
+    /// As bool, if this is a `Bool`.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             TomlValue::Bool(v) => Some(*v),
@@ -41,6 +49,7 @@ impl TomlValue {
         }
     }
 
+    /// As string slice, if this is a `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             TomlValue::Str(v) => Some(v),

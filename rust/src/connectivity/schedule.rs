@@ -23,7 +23,9 @@
 //! `bench_perf` baseline.
 
 use crate::exec;
-use crate::orbit::{station_frames, Constellation, GroundStation, OrbitBasis, StationFrame};
+use crate::orbit::{
+    station_frames, Constellation, DowntimeWindow, GroundStation, OrbitBasis, StationFrame,
+};
 use std::sync::Arc;
 
 /// Parameters of the link model (paper §2.2 / §4.1 defaults).
@@ -73,7 +75,9 @@ pub struct ConnectivitySchedule {
     pub sets: Vec<Vec<usize>>,
     /// contacts[k] = sorted time indexes at which satellite k is connected.
     pub contacts: Vec<Vec<usize>>,
+    /// Number of satellites the schedule covers (ids 0..n_sats).
     pub n_sats: usize,
+    /// Link-model parameters the schedule was computed with.
     pub params: ConnectivityParams,
     /// u64 words per time step in `bits`.
     words_per_step: usize,
@@ -172,6 +176,17 @@ impl ConnectivitySchedule {
 
     /// Build directly from explicit sets (tests, illustrative example).
     pub fn from_sets(sets: Vec<Vec<usize>>, n_sats: usize) -> Self {
+        Self::from_sets_with_params(sets, n_sats, ConnectivityParams::default())
+    }
+
+    /// [`Self::from_sets`] keeping the given link-model parameters — used by
+    /// the derived-schedule constructors (`with_dropout`, `with_downtime`)
+    /// so the documented `params` field stays authoritative for them.
+    fn from_sets_with_params(
+        sets: Vec<Vec<usize>>,
+        n_sats: usize,
+        params: ConnectivityParams,
+    ) -> Self {
         let mut contacts = vec![Vec::new(); n_sats];
         for (i, set) in sets.iter().enumerate() {
             for &k in set {
@@ -179,7 +194,7 @@ impl ConnectivitySchedule {
                 contacts[k].push(i);
             }
         }
-        Self::assemble(sets, contacts, n_sats, ConnectivityParams::default())
+        Self::assemble(sets, contacts, n_sats, params)
     }
 
     /// Finish construction: derive the packed bitset from the sorted views.
@@ -200,8 +215,18 @@ impl ConnectivitySchedule {
         ConnectivitySchedule { sets, contacts, n_sats, params, words_per_step, bits }
     }
 
+    /// Number of time indexes the schedule covers.
     pub fn n_steps(&self) -> usize {
         self.sets.len()
+    }
+
+    /// Time indexes with at least one contact, ascending — the event list
+    /// the contact-list engine mode (`EngineMode::ContactList`) advances
+    /// over instead of visiting every step. For sparse scenarios (single
+    /// ground station, strict elevation masks) this is a small fraction of
+    /// `n_steps()`.
+    pub fn active_steps(&self) -> Vec<usize> {
+        (0..self.n_steps()).filter(|&i| !self.sets[i].is_empty()).collect()
     }
 
     /// Is satellite k connected at time index i? O(1) via the bitset.
@@ -263,7 +288,30 @@ impl ConnectivitySchedule {
             .iter()
             .map(|set| set.iter().copied().filter(|_| !rng.gen_bool(p)).collect())
             .collect();
-        ConnectivitySchedule::from_sets(sets, self.n_sats)
+        Self::from_sets_with_params(sets, self.n_sats, self.params.clone())
+    }
+
+    /// Scheduled-outage injection: remove every contact a
+    /// [`DowntimeWindow`] covers. Unlike [`Self::with_dropout`] this is
+    /// deterministic — the outage is part of C, so the FedSpace planner
+    /// forecasts around it rather than being surprised by it (the
+    /// `dove-dropout` scenario exercises exactly that).
+    pub fn with_downtime(&self, windows: &[DowntimeWindow]) -> ConnectivitySchedule {
+        if windows.is_empty() {
+            return self.clone();
+        }
+        let sets: Vec<Vec<usize>> = self
+            .sets
+            .iter()
+            .enumerate()
+            .map(|(i, set)| {
+                set.iter()
+                    .copied()
+                    .filter(|&k| !windows.iter().any(|w| w.sat == k && w.covers(i)))
+                    .collect()
+            })
+            .collect();
+        Self::from_sets_with_params(sets, self.n_sats, self.params.clone())
     }
 
     /// Serialize as CSV lines `i,k1;k2;...` (one row per time index).
@@ -512,6 +560,58 @@ mod tests {
             s.with_dropout(1.0, &mut rng).contacts.iter().map(|c| c.len()).sum::<usize>(),
             0
         );
+    }
+
+    #[test]
+    fn active_steps_are_exactly_nonempty_steps() {
+        let sets = vec![vec![0, 2], vec![], vec![1], vec![], vec![]];
+        let s = ConnectivitySchedule::from_sets(sets, 3);
+        assert_eq!(s.active_steps(), vec![0, 2]);
+        let dense = small_schedule();
+        for &i in &dense.active_steps() {
+            assert!(!dense.sets[i].is_empty());
+        }
+    }
+
+    #[test]
+    fn downtime_silences_covered_contacts_only() {
+        let sets = vec![vec![0, 1], vec![0, 1], vec![0, 1], vec![0, 1]];
+        let s = ConnectivitySchedule::from_sets(sets, 2);
+        let d = s.with_downtime(&[DowntimeWindow { sat: 0, from_step: 1, until_step: 3 }]);
+        assert_eq!(d.sets[0], vec![0, 1]);
+        assert_eq!(d.sets[1], vec![1]);
+        assert_eq!(d.sets[2], vec![1]);
+        assert_eq!(d.sets[3], vec![0, 1]);
+        // satellite 1 untouched
+        assert_eq!(d.contacts[1], s.contacts[1]);
+        // empty window list is the identity
+        let id = s.with_downtime(&[]);
+        assert_eq!(id.sets, s.sets);
+    }
+
+    #[test]
+    fn derived_schedules_keep_link_params() {
+        let c = planet_labs_like(10, 0);
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams { min_elev_deg: 40.0, t0_s: 60.0, ..Default::default() };
+        let s = ConnectivitySchedule::compute(&c, &gs, 24, params);
+        let down = s.with_downtime(&[DowntimeWindow { sat: 0, from_step: 0, until_step: 24 }]);
+        assert_eq!(down.params.min_elev_deg, 40.0);
+        assert_eq!(down.params.t0_s, 60.0);
+        let mut rng = crate::rng::Rng::new(1);
+        let drop = s.with_dropout(0.5, &mut rng);
+        assert_eq!(drop.params.min_elev_deg, 40.0);
+    }
+
+    #[test]
+    fn overlapping_downtime_windows_compose() {
+        let sets = vec![vec![0]; 6];
+        let s = ConnectivitySchedule::from_sets(sets, 1);
+        let d = s.with_downtime(&[
+            DowntimeWindow { sat: 0, from_step: 0, until_step: 2 },
+            DowntimeWindow { sat: 0, from_step: 1, until_step: 4 },
+        ]);
+        assert_eq!(d.contacts[0], vec![4, 5]);
     }
 
     #[test]

@@ -9,12 +9,16 @@ pub struct ConnectivityStats {
     pub set_sizes: Vec<usize>,
     /// n_k = contacts per satellite over the window (Figure 2b histogram).
     pub contacts_per_sat: Vec<usize>,
+    /// max_i |C_i|.
     pub max_set: usize,
+    /// min_i |C_i|.
     pub min_set: usize,
+    /// Mean n_k over satellites.
     pub mean_contacts: f64,
 }
 
 impl ConnectivityStats {
+    /// Summarize a computed schedule.
     pub fn from_schedule(s: &ConnectivitySchedule) -> Self {
         let set_sizes = set_sizes(s);
         let contacts_per_sat: Vec<usize> = s.contacts.iter().map(|c| c.len()).collect();

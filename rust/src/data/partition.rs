@@ -13,6 +13,7 @@ pub struct Partition {
 }
 
 impl Partition {
+    /// Number of satellites the partition covers.
     pub fn n_sats(&self) -> usize {
         self.assignments.len()
     }

@@ -16,22 +16,31 @@
 use crate::data::utm::{utm_cell, N_BANDS};
 use crate::rng::Rng;
 
+/// Image height [px].
 pub const IMG_H: usize = 32;
+/// Image width [px].
 pub const IMG_W: usize = 32;
+/// Image channels.
 pub const IMG_C: usize = 3;
+/// Flat pixels per image.
 pub const IMG_DIM: usize = IMG_H * IMG_W * IMG_C;
+/// Class count (fMoW has 62).
 pub const NUM_CLASSES: usize = 62;
 
 /// Generator parameters.
 #[derive(Clone, Debug)]
 pub struct SynthConfig {
+    /// Training-split size.
     pub n_train: usize,
+    /// Validation-split size.
     pub n_val: usize,
+    /// Classes to generate (≤ [`NUM_CLASSES`]).
     pub num_classes: usize,
     /// Per-pixel Gaussian noise std (task difficulty knob).
     pub noise_sigma: f32,
     /// Home UTM zones per class (geographic concentration).
     pub home_zones_per_class: usize,
+    /// Generator seed.
     pub seed: u64,
 }
 
@@ -51,9 +60,13 @@ impl Default for SynthConfig {
 /// Sample metadata; pixels are derived, not stored.
 #[derive(Clone, Copy, Debug)]
 pub struct Sample {
+    /// Class label.
     pub class: u16,
+    /// Capture latitude [deg].
     pub lat_deg: f32,
+    /// Capture longitude [deg].
     pub lon_deg: f32,
+    /// Per-sample pixel-noise seed.
     pub noise_seed: u64,
 }
 
@@ -79,13 +92,17 @@ struct ClassPattern {
 /// The synthetic dataset: train + validation splits.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Generator parameters it was built from.
     pub cfg: SynthConfig,
+    /// Training split.
     pub train: Vec<Sample>,
+    /// Validation split.
     pub val: Vec<Sample>,
     patterns: Vec<ClassPattern>,
 }
 
 impl Dataset {
+    /// Generate the dataset deterministically from `cfg.seed`.
     pub fn generate(cfg: SynthConfig) -> Self {
         assert!(cfg.num_classes <= NUM_CLASSES);
         let mut rng = Rng::new(cfg.seed);

@@ -103,11 +103,30 @@ impl ThreadPool {
     }
 }
 
-/// The machine's available parallelism (the degree used by
-/// [`global_pool`] and [`scope_chunks`] callers). Cheap: no threads are
+/// Operator-set parallelism bound; 0/unset = machine auto.
+static PARALLELISM_OVERRIDE: OnceLock<usize> = OnceLock::new();
+
+/// Bound the worker count used by [`default_parallelism`] (and therefore
+/// [`global_pool`] and the parallel hot paths). `n = 0` is a no-op (auto);
+/// the first positive setter wins, and it only affects the global pool if
+/// it runs before the pool's first use. This is a resource knob, not a
+/// semantics knob: results are identical at any thread count (ADR-0002).
+/// Wired from `ExperimentConfig::threads` (`[sim] threads`) by the runner.
+pub fn set_default_parallelism(n: usize) {
+    if n > 0 {
+        let _ = PARALLELISM_OVERRIDE.set(n);
+    }
+}
+
+/// The parallelism degree used by [`global_pool`] and [`scope_chunks`]
+/// callers: the operator override when set ([`set_default_parallelism`]),
+/// otherwise the machine's available parallelism. Cheap: no threads are
 /// created by asking.
 pub fn default_parallelism() -> usize {
-    thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    match PARALLELISM_OVERRIDE.get() {
+        Some(&n) if n > 0 => n,
+        _ => thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    }
 }
 
 /// The process-wide pool shared by the coordinator's parallel hot paths.
@@ -232,6 +251,13 @@ mod tests {
     fn scope_chunks_empty_input() {
         let out: Vec<usize> = scope_chunks(&[], 4, |_, chunk| chunk.to_vec());
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn zero_parallelism_override_is_a_noop() {
+        // 0 = auto must not poison the override slot or the default
+        set_default_parallelism(0);
+        assert!(default_parallelism() >= 1);
     }
 
     #[test]

@@ -8,11 +8,14 @@ pub trait AggregationPolicy: Send {
     /// this slot's uploads). Returns true to aggregate now.
     fn decide(&mut self, i: usize, connected: &[usize], buffer: &Buffer) -> bool;
 
+    /// Short lowercase policy name (matches `AlgorithmKind::name`).
     fn name(&self) -> &'static str;
 }
 
 /// Synchronous FL (Eq. 5): wait for every satellite's gradient.
 pub struct SyncPolicy {
+    /// Number of satellites that must contribute before aggregating
+    /// (satellites that can never contribute are excluded by the engine).
     pub n_sats: usize,
 }
 
@@ -41,6 +44,7 @@ impl AggregationPolicy for AsyncPolicy {
 
 /// FedBuff (Eq. 7, Nguyen et al. 2021): aggregate when |R_i| ≥ M.
 pub struct FedBuffPolicy {
+    /// M — distinct contributing satellites required to trigger aggregation.
     pub m: usize,
 }
 
@@ -65,6 +69,7 @@ pub struct ScheduledPolicy {
 }
 
 impl ScheduledPolicy {
+    /// An empty policy (no windows committed yet).
     pub fn new() -> Self {
         ScheduledPolicy { schedule: Vec::new() }
     }
@@ -78,6 +83,15 @@ impl ScheduledPolicy {
     /// How many slots are scheduled so far.
     pub fn horizon(&self) -> usize {
         self.schedule.len()
+    }
+
+    /// First slot `>= from` with a planned aggregation, if any lies within
+    /// the committed horizon — the contact-list engine mode uses this to
+    /// jump straight to the next slot where `decide` could fire without a
+    /// contact having occurred.
+    pub fn next_scheduled(&self, from: usize) -> Option<usize> {
+        let from = from.min(self.schedule.len());
+        self.schedule[from..].iter().position(|&a| a).map(|p| from + p)
     }
 }
 
@@ -145,5 +159,17 @@ mod tests {
         assert!(!p.decide(2, &[], &Buffer::new()));
         // beyond horizon -> false
         assert!(!p.decide(7, &[], &buffer_with(&[0])));
+    }
+
+    #[test]
+    fn next_scheduled_scans_forward_within_horizon() {
+        let mut p = ScheduledPolicy::new();
+        p.extend(&[false, true, false, true]);
+        assert_eq!(p.next_scheduled(0), Some(1));
+        assert_eq!(p.next_scheduled(1), Some(1));
+        assert_eq!(p.next_scheduled(2), Some(3));
+        assert_eq!(p.next_scheduled(4), None);
+        assert_eq!(p.next_scheduled(100), None);
+        assert_eq!(ScheduledPolicy::new().next_scheduled(0), None);
     }
 }

@@ -6,7 +6,9 @@ use std::collections::BTreeSet;
 /// (Algorithm 1: s_k = i_g − i_{g,k} with the *current* i_g).
 #[derive(Clone, Debug)]
 pub struct GradientEntry {
+    /// Uploading satellite k.
     pub sat: usize,
+    /// s_k, fixed when the upload is received.
     pub staleness: usize,
     /// flat local update g_k = w_k^E − w_k^0
     pub grad: Vec<f32>,
@@ -22,6 +24,7 @@ pub struct Buffer {
 }
 
 impl Buffer {
+    /// An empty buffer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -42,14 +45,17 @@ impl Buffer {
         self.entries.len()
     }
 
+    /// True iff no gradients are buffered.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }
 
+    /// The buffered gradients, in arrival order.
     pub fn entries(&self) -> &[GradientEntry] {
         &self.entries
     }
 
+    /// Stalenesses of the buffered gradients, in arrival order.
     pub fn stalenesses(&self) -> Vec<usize> {
         self.entries.iter().map(|e| e.staleness).collect()
     }

@@ -25,7 +25,9 @@ pub enum SatPhase {
 /// One satellite's FL state.
 #[derive(Clone, Debug)]
 pub struct SatClient {
+    /// Satellite id k.
     pub id: usize,
+    /// Where in the training lifecycle this satellite is.
     pub phase: SatPhase,
     /// i_{g,k}: round index of the model the pending update is based on
     pub base_round: usize,
@@ -40,6 +42,7 @@ pub struct SatClient {
 }
 
 impl SatClient {
+    /// A cold client with `n_samples` local samples.
     pub fn new(id: usize, n_samples: usize) -> Self {
         SatClient {
             id,

@@ -42,18 +42,27 @@ pub fn example_schedule() -> ConnectivitySchedule {
 /// Aggregation rule for the mini-simulator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Rule {
+    /// Wait for all three satellites (Eq. 5).
     Sync,
+    /// Aggregate on every upload (Eq. 6).
     Async,
-    FedBuff { m: usize },
+    /// Aggregate once `m` distinct satellites contributed (Eq. 7).
+    FedBuff {
+        /// The buffer threshold M.
+        m: usize,
+    },
 }
 
 /// Outcome of one scheme on the example (one row of Table 1).
 #[derive(Clone, Debug)]
 pub struct IllustrativeResult {
+    /// Scheme name as printed in Table 1.
     pub scheme: &'static str,
+    /// Number of global updates over the window.
     pub global_updates: usize,
     /// staleness → count over all aggregated gradients
     pub staleness: Histogram,
+    /// Total gradients aggregated (Table 1 "total").
     pub total_aggregated: usize,
     /// connections in i ∈ [2, 8] that carried no upload
     pub idle: usize,

@@ -12,6 +12,7 @@ use anyhow::Result;
 /// shipped hot path). Not `Send`: PJRT handles live on the coordinator
 /// thread.
 pub trait ServerAggregator {
+    /// Apply Eq. (4) in place: `w += Σ_k (c(s_k)/C)·g_k` over `entries`.
     fn aggregate(&mut self, w: &mut Vec<f32>, entries: &[GradientEntry], alpha: f64)
         -> Result<()>;
 }
@@ -70,15 +71,20 @@ impl ServerAggregator for CpuAggregator {
 /// GS state of Algorithm 1: current global model w^i, round index i_g, the
 /// buffer B_i, and the running trace the figures need.
 pub struct GsState {
+    /// Current global model w^i.
     pub w: Vec<f32>,
+    /// Global round index i_g.
     pub i_g: usize,
+    /// The gradient buffer B_i.
     pub buffer: Buffer,
+    /// Staleness-compensation exponent α (Eq. 4).
     pub alpha: f64,
     /// total gradients ever aggregated (Table 1 "total")
     pub n_aggregated: usize,
 }
 
 impl GsState {
+    /// Fresh GS state around an initial model.
     pub fn new(w: Vec<f32>, alpha: f64) -> Self {
         GsState { w, i_g: 0, buffer: Buffer::new(), alpha, n_aggregated: 0 }
     }

@@ -16,8 +16,11 @@
 //! Python never runs at coordination time: `runtime` loads the HLO text via
 //! the PJRT C API and executes it natively.
 //!
-//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for the
-//! paper-vs-measured record of every table and figure.
+//! See the top-level README.md for the quickstart and scenario catalog,
+//! docs/ADRs.md for the architecture decision records, and EXPERIMENTS.md
+//! for the paper-vs-measured record of every table and figure.
+
+#![warn(missing_docs)]
 
 pub mod app;
 pub mod bench_util;

@@ -4,7 +4,9 @@
 //!   connectivity  compute the constellation connectivity (Figure 2 data)
 //!   illustrative  run the 3-satellite example (Figures 3-4, Table 1)
 //!   train         run one FL experiment (mock or full PJRT backend)
+//!   scenarios     list/describe/run the named scenario registry
 //!   utility       generate utility samples and fit/report the regressor
+//!   schedule      plan one FedSpace window and print the forecast
 //!   help          this text
 
 use anyhow::{bail, Result};
@@ -16,6 +18,7 @@ fn main() -> Result<()> {
         "connectivity" => fedspace::app::cmd::connectivity(&args),
         "illustrative" => fedspace::app::cmd::illustrative(&args),
         "train" => fedspace::app::cmd::train(&args),
+        "scenarios" => fedspace::app::cmd::scenarios(&args),
         "utility" => fedspace::app::cmd::utility(&args),
         "schedule" => fedspace::app::cmd::schedule(&args),
         "" | "help" | "--help" | "-h" => {

@@ -12,15 +12,18 @@ pub struct Histogram {
 }
 
 impl Histogram {
+    /// An empty histogram.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Count one observation of `v`.
     pub fn add(&mut self, v: i64) {
         *self.counts.entry(v).or_insert(0) += 1;
         self.total += 1;
     }
 
+    /// Count `n` observations of `v`.
     pub fn add_n(&mut self, v: i64, n: u64) {
         if n > 0 {
             *self.counts.entry(v).or_insert(0) += n;
@@ -28,22 +31,27 @@ impl Histogram {
         }
     }
 
+    /// Observations of exactly `v`.
     pub fn count(&self, v: i64) -> u64 {
         self.counts.get(&v).copied().unwrap_or(0)
     }
 
+    /// Total observations.
     pub fn total(&self) -> u64 {
         self.total
     }
 
+    /// (value, count) pairs in ascending value order.
     pub fn entries(&self) -> impl Iterator<Item = (i64, u64)> + '_ {
         self.counts.iter().map(|(&k, &v)| (k, v))
     }
 
+    /// Largest observed value, if any.
     pub fn max_key(&self) -> Option<i64> {
         self.counts.keys().next_back().copied()
     }
 
+    /// Add every entry of `other` into this histogram.
     pub fn merge(&mut self, other: &Histogram) {
         for (k, v) in other.entries() {
             self.add_n(k, v);
@@ -69,21 +77,26 @@ pub struct CurvePoint {
     pub step: usize,
     /// global round index i_g
     pub round: usize,
+    /// Validation top-1 accuracy.
     pub accuracy: f64,
+    /// Validation loss.
     pub loss: f64,
 }
 
 /// A training curve (Figure 6 series) with target-time extraction (Table 2).
 #[derive(Clone, Debug, Default)]
 pub struct TrainingCurve {
+    /// Evaluation points in chronological order.
     pub points: Vec<CurvePoint>,
 }
 
 impl TrainingCurve {
+    /// Append one evaluation point.
     pub fn push(&mut self, p: CurvePoint) {
         self.points.push(p);
     }
 
+    /// Best accuracy seen over the run (0.0 for an empty curve).
     pub fn best_accuracy(&self) -> f64 {
         self.points.iter().map(|p| p.accuracy).fold(0.0, f64::max)
     }
@@ -94,6 +107,7 @@ impl TrainingCurve {
         self.points.iter().find(|p| p.accuracy >= target).map(|p| p.day)
     }
 
+    /// Render `day,step,round,accuracy,loss` CSV.
     pub fn to_csv(&self) -> String {
         let mut s = String::from("day,step,round,accuracy,loss\n");
         for p in &self.points {
@@ -114,15 +128,18 @@ pub struct Table {
 }
 
 impl Table {
+    /// A table with the given column headers.
     pub fn new(headers: &[&str]) -> Self {
         Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header count).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
         self.rows.push(cells.to_vec());
     }
 
+    /// Render with right-aligned, width-fitted columns.
     pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {

@@ -7,10 +7,13 @@ use crate::rng::Rng;
 /// Forest hyper-parameters ("standard random forest regression", §4.1).
 #[derive(Clone, Debug)]
 pub struct RandomForestParams {
+    /// Number of bagged trees.
     pub n_trees: usize,
+    /// Per-tree hyper-parameters.
     pub tree: TreeParams,
     /// Features per split as a fraction of d (sqrt-rule applied if None).
     pub max_features_frac: Option<f64>,
+    /// Bootstrap/feature-subsampling seed.
     pub seed: u64,
 }
 
@@ -32,15 +35,18 @@ impl Default for RandomForestParams {
 
 /// A fitted random forest.
 pub struct RandomForest {
+    /// Hyper-parameters the forest was built with.
     pub params: RandomForestParams,
     trees: Vec<RegressionTree>,
 }
 
 impl RandomForest {
+    /// An unfitted forest with the given hyper-parameters.
     pub fn new(params: RandomForestParams) -> Self {
         RandomForest { params, trees: Vec::new() }
     }
 
+    /// Number of fitted trees (0 before `fit`).
     pub fn n_trees(&self) -> usize {
         self.trees.len()
     }

@@ -13,10 +13,12 @@ pub struct LinearRegression {
 }
 
 impl LinearRegression {
+    /// An unfitted model with ridge coefficient `lambda`.
     pub fn new(lambda: f64) -> Self {
         LinearRegression { lambda, weights: Vec::new() }
     }
 
+    /// Learned weights (last entry is the intercept); empty before `fit`.
     pub fn weights(&self) -> &[f64] {
         &self.weights
     }

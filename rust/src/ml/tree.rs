@@ -6,8 +6,11 @@ use crate::rng::Rng;
 /// Tree hyper-parameters.
 #[derive(Clone, Debug)]
 pub struct TreeParams {
+    /// Maximum tree depth.
     pub max_depth: usize,
+    /// Minimum samples a leaf may hold.
     pub min_samples_leaf: usize,
+    /// Minimum samples a node needs to be split further.
     pub min_samples_split: usize,
     /// Features considered per split; `None` = all (single-tree mode).
     pub max_features: Option<usize>,
@@ -40,12 +43,14 @@ enum Node {
 /// A fitted regression tree (arena-allocated nodes).
 #[derive(Clone, Debug)]
 pub struct RegressionTree {
+    /// Hyper-parameters the tree was built with.
     pub params: TreeParams,
     nodes: Vec<Node>,
     fitted: bool,
 }
 
 impl RegressionTree {
+    /// An unfitted tree with the given hyper-parameters.
     pub fn new(params: TreeParams) -> Self {
         RegressionTree { params, nodes: Vec::new(), fitted: false }
     }
@@ -66,6 +71,7 @@ impl RegressionTree {
         self.fitted = true;
     }
 
+    /// Fit on every row of `x`.
     pub fn fit(&mut self, x: &[Vec<f64>], y: &[f64], rng: &mut Rng) {
         let idx: Vec<usize> = (0..x.len()).collect();
         self.fit_indices(x, y, &idx, rng);
@@ -184,10 +190,12 @@ impl RegressionTree {
         }
     }
 
+    /// Has `fit`/`fit_indices` run?
     pub fn is_fitted(&self) -> bool {
         self.fitted
     }
 
+    /// Arena size (leaves + splits) of the fitted tree.
     pub fn n_nodes(&self) -> usize {
         self.nodes.len()
     }

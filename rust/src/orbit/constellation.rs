@@ -1,4 +1,7 @@
-//! Constellation builder: the Planet-Labs-like 191-satellite fleet (§4.1).
+//! Constellation builders: the Planet-Labs-like fleet of the paper's §4.1
+//! plus a general Walker-delta/star generator and per-satellite downtime
+//! windows — the "constellation zoo" substrate behind
+//! [`crate::cfg::Scenario`].
 
 use super::kepler::CircularOrbit;
 use crate::rng::Rng;
@@ -8,26 +11,117 @@ use std::f64::consts::PI;
 /// over `planes` RAAN values with in-plane phasing.
 #[derive(Clone, Debug)]
 pub struct OrbitalPlaneSpec {
+    /// Number of satellites in this flock.
     pub n_sats: usize,
+    /// Orbital altitude above the spherical Earth surface [m].
     pub alt_m: f64,
+    /// Inclination [deg].
     pub inc_deg: f64,
+    /// Number of orbital planes the flock is spread over.
     pub planes: usize,
     /// RAAN of the first plane [deg]; planes are spread evenly over 360°/planes_span.
     pub raan0_deg: f64,
+    /// Total RAAN span the planes cover [deg].
     pub raan_span_deg: f64,
 }
 
-/// A full constellation: named satellites with their orbits.
+/// Walker constellation phasing pattern (Walker 1984 notation `i:t/p/f`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WalkerPattern {
+    /// Delta pattern: planes spread over the full 360° of RAAN
+    /// (Starlink/Galileo-style).
+    Delta,
+    /// Star pattern: planes spread over 180° of RAAN so ascending and
+    /// descending passes interleave (Iridium-style near-polar shells).
+    Star,
+}
+
+impl WalkerPattern {
+    /// Parse the pattern spelling (`"delta"` / `"star"`) — the suffix of the
+    /// scenario-TOML constellation kinds `walker-delta` / `walker-star`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "delta" => Some(WalkerPattern::Delta),
+            "star" => Some(WalkerPattern::Star),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            WalkerPattern::Delta => "delta",
+            WalkerPattern::Star => "star",
+        }
+    }
+
+    /// RAAN span the planes are spread over [rad].
+    pub fn raan_span(&self) -> f64 {
+        match self {
+            WalkerPattern::Delta => 2.0 * PI,
+            WalkerPattern::Star => PI,
+        }
+    }
+}
+
+/// A Walker constellation `i:t/p/f`: `n_sats` (t) satellites in `planes`
+/// (p) evenly-spaced planes at one altitude and inclination, with
+/// inter-plane phasing offset `phasing` (f).
+#[derive(Clone, Debug)]
+pub struct WalkerSpec {
+    /// Delta (360° RAAN spread) or star (180°).
+    pub pattern: WalkerPattern,
+    /// t — total satellite count; must be divisible by `planes`.
+    pub n_sats: usize,
+    /// p — number of orbital planes.
+    pub planes: usize,
+    /// f — phasing: satellites in adjacent planes are offset in argument of
+    /// latitude by `f · 360° / t`.
+    pub phasing: usize,
+    /// Shell altitude [m].
+    pub alt_m: f64,
+    /// Inclination [deg].
+    pub inc_deg: f64,
+}
+
+/// One scheduled outage: satellite `sat` is treated as unreachable for every
+/// time index `i` with `from_step <= i < until_step` (power fault, tumbling
+/// after a debris hit, decommissioning). Applied to a connectivity schedule
+/// via [`crate::connectivity::ConnectivitySchedule::with_downtime`]; the
+/// scheduler then sees the outage as part of the deterministic C.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DowntimeWindow {
+    /// Satellite id the outage applies to.
+    pub sat: usize,
+    /// First affected time index (inclusive).
+    pub from_step: usize,
+    /// First unaffected time index (exclusive); `usize::MAX` = never recovers.
+    pub until_step: usize,
+}
+
+impl DowntimeWindow {
+    /// Does this window silence its satellite at time index `i`?
+    pub fn covers(&self, i: usize) -> bool {
+        self.from_step <= i && i < self.until_step
+    }
+}
+
+/// A full constellation: satellite orbits plus any scheduled downtime.
 #[derive(Clone, Debug)]
 pub struct Constellation {
+    /// Per-satellite circular orbits; the index is the satellite id.
     pub orbits: Vec<CircularOrbit>,
+    /// Scheduled per-satellite outages (applied at the connectivity layer).
+    pub downtime: Vec<DowntimeWindow>,
 }
 
 impl Constellation {
+    /// Number of satellites.
     pub fn len(&self) -> usize {
         self.orbits.len()
     }
 
+    /// True iff the constellation has no satellites.
     pub fn is_empty(&self) -> bool {
         self.orbits.is_empty()
     }
@@ -56,7 +150,50 @@ impl Constellation {
                 ));
             }
         }
-        Constellation { orbits }
+        Constellation { orbits, downtime: Vec::new() }
+    }
+
+    /// Build an exact Walker `i:t/p/f` constellation (no jitter — Walker
+    /// shells are station-kept, unlike drifting Dove flocks).
+    ///
+    /// Satellite `s` of plane `p` sits at RAAN `span·p/P` and argument of
+    /// latitude `360°·s/S + f·360°·p/t` (S = t/P satellites per plane).
+    pub fn walker(spec: &WalkerSpec) -> Self {
+        assert!(spec.planes > 0, "walker: planes must be > 0");
+        assert!(
+            spec.n_sats % spec.planes == 0,
+            "walker: {} satellites not divisible into {} planes",
+            spec.n_sats,
+            spec.planes
+        );
+        let per_plane = spec.n_sats / spec.planes;
+        let span = spec.pattern.raan_span();
+        let mut orbits = Vec::with_capacity(spec.n_sats);
+        for plane in 0..spec.planes {
+            let raan = span * plane as f64 / spec.planes as f64;
+            let plane_phase = 2.0 * PI * (spec.phasing * plane) as f64 / spec.n_sats as f64;
+            for slot in 0..per_plane {
+                let phase = 2.0 * PI * slot as f64 / per_plane as f64 + plane_phase;
+                orbits.push(CircularOrbit::from_altitude(
+                    spec.alt_m,
+                    spec.inc_deg.to_radians(),
+                    raan,
+                    phase,
+                ));
+            }
+        }
+        Constellation { orbits, downtime: Vec::new() }
+    }
+
+    /// Attach scheduled outages (builder style). Windows naming satellites
+    /// beyond `len()` are rejected.
+    pub fn with_downtime(mut self, windows: Vec<DowntimeWindow>) -> Self {
+        for w in &windows {
+            assert!(w.sat < self.len(), "downtime for unknown satellite {}", w.sat);
+            assert!(w.from_step < w.until_step, "empty downtime window {w:?}");
+        }
+        self.downtime = windows;
+        self
     }
 }
 
@@ -148,5 +285,101 @@ mod tests {
         phases.sort_by(|a, b| a.partial_cmp(b).unwrap());
         let span = phases.last().unwrap() - phases.first().unwrap();
         assert!(span > PI, "span={span}");
+    }
+
+    fn walker_66() -> WalkerSpec {
+        WalkerSpec {
+            pattern: WalkerPattern::Star,
+            n_sats: 66,
+            planes: 6,
+            phasing: 2,
+            alt_m: 780e3,
+            inc_deg: 86.4,
+        }
+    }
+
+    #[test]
+    fn walker_counts_and_geometry() {
+        let c = Constellation::walker(&walker_66());
+        assert_eq!(c.len(), 66);
+        // every orbit shares altitude and inclination exactly
+        for o in &c.orbits {
+            assert_eq!(o.a, c.orbits[0].a);
+            assert_eq!(o.inc, c.orbits[0].inc);
+        }
+        // 6 distinct RAAN values spread over at most 180° (star pattern)
+        let mut raans: Vec<f64> = c.orbits.iter().map(|o| o.raan).collect();
+        raans.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        raans.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        assert_eq!(raans.len(), 6);
+        assert!(raans.last().unwrap() - raans.first().unwrap() < PI + 1e-9);
+    }
+
+    #[test]
+    fn walker_delta_spans_full_circle() {
+        let c = Constellation::walker(&WalkerSpec {
+            pattern: WalkerPattern::Delta,
+            n_sats: 24,
+            planes: 8,
+            phasing: 1,
+            alt_m: 550e3,
+            inc_deg: 53.0,
+        });
+        let mut raans: Vec<f64> = c.orbits.iter().map(|o| o.raan).collect();
+        raans.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        raans.dedup_by(|a, b| (*a - *b).abs() < 1e-12);
+        assert_eq!(raans.len(), 8);
+        // delta spacing: adjacent planes 360°/8 apart
+        assert!((raans[1] - raans[0] - 2.0 * PI / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn walker_phasing_offsets_adjacent_planes() {
+        let mut spec = walker_66();
+        spec.pattern = WalkerPattern::Delta;
+        let c = Constellation::walker(&spec);
+        let per_plane = 66 / 6;
+        // first satellite of plane 1 leads plane 0's by f·360°/t
+        let lead = c.orbits[per_plane].phase0 - c.orbits[0].phase0;
+        assert!((lead - 2.0 * PI * 2.0 / 66.0).abs() < 1e-12, "lead={lead}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn walker_rejects_indivisible_planes() {
+        let mut spec = walker_66();
+        spec.planes = 7; // 66 % 7 != 0
+        let _ = Constellation::walker(&spec);
+    }
+
+    #[test]
+    fn walker_pattern_parse_roundtrip() {
+        for p in [WalkerPattern::Delta, WalkerPattern::Star] {
+            assert_eq!(WalkerPattern::parse(p.name()), Some(p));
+        }
+        assert_eq!(WalkerPattern::parse("helix"), None);
+    }
+
+    #[test]
+    fn downtime_window_covers_half_open_range() {
+        let w = DowntimeWindow { sat: 3, from_step: 10, until_step: 20 };
+        assert!(!w.covers(9));
+        assert!(w.covers(10));
+        assert!(w.covers(19));
+        assert!(!w.covers(20));
+    }
+
+    #[test]
+    fn with_downtime_attaches_windows() {
+        let c = planet_labs_like(10, 0)
+            .with_downtime(vec![DowntimeWindow { sat: 2, from_step: 0, until_step: 5 }]);
+        assert_eq!(c.downtime.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn with_downtime_rejects_unknown_satellite() {
+        let _ = planet_labs_like(5, 0)
+            .with_downtime(vec![DowntimeWindow { sat: 9, from_step: 0, until_step: 1 }]);
     }
 }

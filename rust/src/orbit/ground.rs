@@ -6,13 +6,18 @@ use super::kepler::Vec3;
 /// A ground station at a fixed geodetic site.
 #[derive(Clone, Debug)]
 pub struct GroundStation {
+    /// Site name (unique within a network).
     pub name: String,
+    /// Geodetic latitude [deg].
     pub lat_deg: f64,
+    /// Longitude [deg].
     pub lon_deg: f64,
+    /// Altitude above the WGS84 ellipsoid [m].
     pub alt_m: f64,
 }
 
 impl GroundStation {
+    /// Construct from a geodetic site.
     pub fn new(name: &str, lat_deg: f64, lon_deg: f64, alt_m: f64) -> Self {
         GroundStation { name: name.to_string(), lat_deg, lon_deg, alt_m }
     }

@@ -5,34 +5,44 @@ use super::earth::MU_EARTH;
 /// Minimal 3-vector (no external linear-algebra crate offline).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Vec3 {
+    /// x component.
     pub x: f64,
+    /// y component.
     pub y: f64,
+    /// z component.
     pub z: f64,
 }
 
 impl Vec3 {
+    /// The origin.
     pub const ZERO: Vec3 = Vec3 { x: 0.0, y: 0.0, z: 0.0 };
 
+    /// Construct from components.
     pub fn new(x: f64, y: f64, z: f64) -> Self {
         Vec3 { x, y, z }
     }
 
+    /// Dot product.
     pub fn dot(&self, o: &Vec3) -> f64 {
         self.x * o.x + self.y * o.y + self.z * o.z
     }
 
+    /// Euclidean norm.
     pub fn norm(&self) -> f64 {
         self.dot(self).sqrt()
     }
 
+    /// Component-wise difference `self − o`.
     pub fn sub(&self, o: &Vec3) -> Vec3 {
         Vec3::new(self.x - o.x, self.y - o.y, self.z - o.z)
     }
 
+    /// Scalar multiple.
     pub fn scale(&self, s: f64) -> Vec3 {
         Vec3::new(self.x * s, self.y * s, self.z * s)
     }
 
+    /// Unit vector in this direction; panics on the zero vector.
     pub fn normalized(&self) -> Vec3 {
         let n = self.norm();
         assert!(n > 0.0, "normalizing zero vector");

@@ -17,7 +17,9 @@ pub mod ground;
 pub mod kepler;
 pub mod visibility;
 
-pub use constellation::{planet_labs_like, Constellation, OrbitalPlaneSpec};
+pub use constellation::{
+    planet_labs_like, Constellation, DowntimeWindow, OrbitalPlaneSpec, WalkerPattern, WalkerSpec,
+};
 pub use earth::{
     ecef_from_geodetic, eci_to_ecef, eci_to_ecef_rot, gmst_rad, EARTH_OMEGA, MU_EARTH, R_EARTH_EQ,
 };

@@ -8,6 +8,7 @@ use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputat
 /// All artifacts are lowered with `return_tuple=True`, so execution returns
 /// the flattened tuple elements.
 pub struct Artifact {
+    /// Source path of the HLO text (diagnostics).
     pub name: String,
     exe: PjRtLoadedExecutable,
 }

@@ -11,6 +11,7 @@ use xla::PjRtClient;
 
 /// Loads and executes every artifact of one model size.
 pub struct ModelRuntime {
+    /// Artifact metadata (dimensions, batch shapes, parameter layout).
     pub meta: ModelMeta,
     client: PjRtClient,
     local_train: Artifact,
@@ -19,7 +20,9 @@ pub struct ModelRuntime {
     aggregate_chunk: Artifact,
     /// execution counters (perf accounting)
     pub n_train_calls: std::cell::Cell<u64>,
+    /// eval_step executions (perf accounting).
     pub n_eval_calls: std::cell::Cell<u64>,
+    /// aggregate_chunk executions (perf accounting).
     pub n_agg_calls: std::cell::Cell<u64>,
 }
 
@@ -42,6 +45,7 @@ impl ModelRuntime {
         })
     }
 
+    /// The PJRT client the artifacts are compiled on.
     pub fn client(&self) -> &PjRtClient {
         &self.client
     }
@@ -172,6 +176,7 @@ impl ModelRuntime {
 
 /// `ServerAggregator` adapter: the shipped GS hot path.
 pub struct PjrtAggregator<'a> {
+    /// The loaded runtime providing the `aggregate_chunk` artifact.
     pub rt: &'a ModelRuntime,
 }
 

@@ -7,25 +7,32 @@ use std::collections::BTreeMap;
 /// Parsed lowering metadata for one model size.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelMeta {
+    /// Model-size tag ("small" / "fmow").
     pub size: String,
     /// flat trainable-parameter dimension
     pub d: usize,
+    /// Flat input-image dimension.
     pub img_dim: usize,
+    /// Classifier output classes.
     pub num_classes: usize,
     /// E local SGD steps baked into local_train
     pub e_steps: usize,
     /// local-training batch size B
     pub batch: usize,
+    /// Evaluation batch size.
     pub eval_batch: usize,
     /// gradients per aggregate_chunk call
     pub chunk: usize,
+    /// Frozen-extractor feature width.
     pub feat: usize,
+    /// Dense-head hidden width.
     pub hidden: usize,
     /// (name, shape) of each trainable tensor, in flat-vector order
     pub param_shapes: Vec<(String, Vec<usize>)>,
 }
 
 impl ModelMeta {
+    /// Parse `key=value` metadata text (see `python/compile/aot.py`).
     pub fn parse(text: &str) -> Result<Self> {
         let mut kv = BTreeMap::new();
         for line in text.lines() {
@@ -73,6 +80,7 @@ impl ModelMeta {
         Ok(meta)
     }
 
+    /// Load `artifacts_dir/meta_<size>.txt`.
     pub fn load(artifacts_dir: &str, size: &str) -> Result<Self> {
         let path = format!("{artifacts_dir}/meta_{size}.txt");
         let text = std::fs::read_to_string(&path)

@@ -19,19 +19,23 @@ const UNAVAILABLE: &str =
 
 /// Stub runtime: `load` is the only constructor and it always fails.
 pub struct ModelRuntime {
+    /// Artifact metadata (never observed: construction is impossible).
     pub meta: super::ModelMeta,
     _priv: (),
 }
 
 impl ModelRuntime {
+    /// Always fails: the `pjrt` feature is off in this build.
     pub fn load(_artifacts_dir: &str, _size: &str) -> Result<Self> {
         bail!(UNAVAILABLE)
     }
 
+    /// Mirrors `executor::ModelRuntime::init_params`; unreachable in stubs.
     pub fn init_params(&self, _rng: &mut Rng) -> Vec<f32> {
         unreachable!("stub ModelRuntime cannot be constructed")
     }
 
+    /// Mirrors `executor::ModelRuntime::local_train`; unreachable in stubs.
     pub fn local_train(
         &self,
         _w: &[f32],
@@ -42,14 +46,17 @@ impl ModelRuntime {
         unreachable!("stub ModelRuntime cannot be constructed")
     }
 
+    /// Mirrors `executor::ModelRuntime::grad_eval`; unreachable in stubs.
     pub fn grad_eval(&self, _w: &[f32], _x: &[f32], _y: &[f32]) -> Result<(Vec<f32>, f32)> {
         unreachable!("stub ModelRuntime cannot be constructed")
     }
 
+    /// Mirrors `executor::ModelRuntime::eval_batch`; unreachable in stubs.
     pub fn eval_batch(&self, _w: &[f32], _x: &[f32], _y: &[f32]) -> Result<(f32, f32)> {
         unreachable!("stub ModelRuntime cannot be constructed")
     }
 
+    /// Mirrors `executor::ModelRuntime::aggregate_chunk_raw`; unreachable.
     pub fn aggregate_chunk_raw(
         &self,
         _w: &[f32],
@@ -59,6 +66,7 @@ impl ModelRuntime {
         unreachable!("stub ModelRuntime cannot be constructed")
     }
 
+    /// Mirrors `executor::ModelRuntime::aggregate`; unreachable in stubs.
     pub fn aggregate(
         &self,
         _w: &mut Vec<f32>,
@@ -71,6 +79,7 @@ impl ModelRuntime {
 
 /// Stub `ServerAggregator` adapter mirroring `executor::PjrtAggregator`.
 pub struct PjrtAggregator<'a> {
+    /// The (unconstructible) stub runtime.
     pub rt: &'a ModelRuntime,
 }
 

@@ -23,6 +23,7 @@ pub struct SatForecastState {
 }
 
 impl SatForecastState {
+    /// The cold-start state: no pending update, nothing held, has data.
     pub fn fresh() -> Self {
         SatForecastState { pending: false, staleness_now: 0, holds_current: false, has_data: true }
     }

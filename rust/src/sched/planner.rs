@@ -17,7 +17,9 @@ use crate::rng::Rng;
 
 /// Plans a^{i,i+I0} at every window boundary i ∈ {0, I0, 2I0, …}.
 pub struct FedSpacePlanner {
+    /// The fitted utility regression û.
     pub utility: UtilityModel,
+    /// Random-search hyper-parameters.
     pub params: SearchParams,
     rng: Rng,
     /// predicted utility of each committed window (telemetry)
@@ -25,6 +27,7 @@ pub struct FedSpacePlanner {
 }
 
 impl FedSpacePlanner {
+    /// A planner with its own seeded search RNG.
     pub fn new(utility: UtilityModel, params: SearchParams, seed: u64) -> Self {
         FedSpacePlanner { utility, params, rng: Rng::new(seed), planned_utilities: Vec::new() }
     }

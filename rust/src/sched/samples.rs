@@ -30,7 +30,9 @@ pub trait SampleBackend {
 
 /// Checkpoint sequence from pre-training on the source dataset.
 pub struct CheckpointBank {
+    /// w after each federated pre-training round (index = round).
     pub checkpoints: Vec<Vec<f32>>,
+    /// Source-dataset loss of each checkpoint.
     pub losses: Vec<f64>,
 }
 
@@ -149,13 +151,18 @@ pub fn samples_from_csv(text: &str) -> Result<UtilitySamples> {
 /// updates are noisy gradient steps. Used by tests and scheduler benches;
 /// staleness provably reduces Δf here, which the tests verify û learns.
 pub struct MockBackend {
+    /// Parameter dimension.
     pub dim: usize,
+    /// The least-squares optimum c.
     pub target: Vec<f32>,
+    /// Local-update step size.
     pub lr: f32,
+    /// Gradient noise std.
     pub noise: f32,
 }
 
 impl MockBackend {
+    /// A mock task with a seeded random optimum.
     pub fn new(dim: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         MockBackend {

@@ -23,8 +23,11 @@ use crate::rng::Rng;
 /// Search hyper-parameters (paper §4.1 defaults in `ExperimentConfig`).
 #[derive(Clone, Debug)]
 pub struct SearchParams {
+    /// Window length I0 in slots.
     pub i0: usize,
+    /// Minimum aggregations per window N_min.
     pub n_min: usize,
+    /// Maximum aggregations per window N_max.
     pub n_max: usize,
     /// |R| — number of candidate vectors evaluated
     pub n_search: usize,

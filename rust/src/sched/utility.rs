@@ -37,6 +37,7 @@ impl UtilityModel {
         self.regressor.predict(&featurize(stalenesses, t))
     }
 
+    /// Has `fit` run? (`predict` panics otherwise; use [`Self::heuristic`].)
     pub fn is_fitted(&self) -> bool {
         self.fitted
     }

@@ -1,7 +1,21 @@
 //! The discrete-time engine: Algorithm 1, executed over a connectivity
 //! schedule with any aggregation policy and any trainer backend.
+//!
+//! Two execution modes share one step body ([`crate::cfg::EngineMode`]):
+//!
+//! - **Dense** walks every time index — the paper's literal loop.
+//! - **ContactList** advances directly between *events*: steps with a
+//!   contact ([`ConnectivitySchedule::active_steps`]), periodic-evaluation
+//!   steps, the final step, and — for FedSpace — planner window boundaries
+//!   and planned aggregation slots. Skipped steps are exactly those where
+//!   the step body is a provable no-op: client state only changes at
+//!   contacts, and every policy's `decide` is a pure function of the buffer
+//!   (which skipped steps cannot change) except `ScheduledPolicy`, whose
+//!   potential firing slots are enumerated events. Traces are therefore
+//!   bit-identical between modes — asserted by the tests below and by
+//!   `tests/scenarios.rs` on the `paper-fig7` scenario.
 
-use crate::cfg::AlgorithmKind;
+use crate::cfg::{AlgorithmKind, EngineMode};
 use crate::connectivity::ConnectivitySchedule;
 use crate::fl::{
     AggregationPolicy, AsyncPolicy, FedBuffPolicy, GsState, ScheduledPolicy, ServerAggregator,
@@ -19,19 +33,26 @@ use std::time::Instant;
 /// Engine knobs (subset of `ExperimentConfig` the loop itself needs).
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
+    /// Aggregation-indicator policy to run.
     pub algorithm: AlgorithmKind,
+    /// Staleness-compensation exponent α (Eq. 4).
     pub alpha: f64,
+    /// FedBuff's M (clamped to the effective client count).
     pub fedbuff_m: usize,
     /// evaluate every this many time indexes
     pub eval_every: usize,
+    /// Simulated days per time index (T0 / 86400).
     pub days_per_step: f64,
     /// stop as soon as validation accuracy reaches this (Table 2 runs)
     pub stop_at_accuracy: Option<f64>,
     /// local-training duration in slots (1 = done by next contact)
     pub train_duration_slots: usize,
+    /// Seed for the engine's client RNG streams.
     pub seed: u64,
     /// FedSpace scheduling period I0 (ignored by other algorithms)
     pub i0: usize,
+    /// Dense per-step walk or sparse contact-list event walk.
+    pub mode: EngineMode,
 }
 
 impl Default for EngineConfig {
@@ -46,16 +67,20 @@ impl Default for EngineConfig {
             train_duration_slots: 1,
             seed: 7,
             i0: 24,
+            mode: EngineMode::Dense,
         }
     }
 }
 
 /// Outcome of one run.
 pub struct RunResult {
+    /// Everything the figures/tables need from the run.
     pub trace: RunTrace,
     /// simulated days at which the target accuracy was first reached
     pub days_to_target: Option<f64>,
+    /// Final global model w.
     pub final_w: Vec<f32>,
+    /// Final global round index i_g.
     pub final_round: usize,
 }
 
@@ -75,19 +100,78 @@ impl PolicyImpl {
             PolicyImpl::FedSpace(p) => p.decide(i, conn, buffer),
         }
     }
+
+    /// Can `decide` fire at a step with no contact and no scheduled slot?
+    /// Only the degenerate zero-threshold policies (no satellite has data,
+    /// so Sync's K and FedBuff's clamped M are 0): they aggregate an empty
+    /// buffer every single step, so the contact-list walk must not skip any.
+    fn fires_unconditionally(&self) -> bool {
+        match self {
+            PolicyImpl::Sync(p) => p.n_sats == 0,
+            PolicyImpl::FedBuff(p) => p.m == 0,
+            _ => false,
+        }
+    }
+}
+
+/// First step `>= after` at which the Algorithm-1 step body can differ from
+/// a no-op, given the current policy state — the contact-list mode's
+/// advance function. Returns `n_steps` when no further event exists.
+///
+/// Event sources, mirroring the step body top to bottom:
+/// - FedSpace replanning at the committed horizon (`sp.horizon() <= i`);
+/// - any step with a contact (`active`, ascending);
+/// - FedSpace planned aggregation slots (can fire with an empty C_i);
+/// - periodic evaluation steps (`(i+1) % eval_every == 0`) — these also
+///   refresh the `last_loss` the planner reads, so they must not be skipped;
+/// - the final step (closing evaluation).
+fn next_event(
+    after: usize,
+    active: &[usize],
+    policy: &PolicyImpl,
+    n_steps: usize,
+    eval_every: usize,
+) -> usize {
+    if after >= n_steps {
+        return n_steps;
+    }
+    if policy.fires_unconditionally() {
+        return after;
+    }
+    // the final step is always an event, so start from it and tighten
+    let mut next = n_steps - 1;
+    let idx = active.partition_point(|&s| s < after);
+    if idx < active.len() {
+        next = next.min(active[idx]);
+    }
+    let ee = eval_every.max(1);
+    let next_eval = (after + 1).div_ceil(ee) * ee - 1;
+    next = next.min(next_eval);
+    if let PolicyImpl::FedSpace(sp) = policy {
+        next = next.min(sp.horizon().max(after));
+        if let Some(slot) = sp.next_scheduled(after) {
+            next = next.min(slot);
+        }
+    }
+    next
 }
 
 /// The simulation engine.
 pub struct Engine<'a> {
+    /// The deterministic connectivity schedule C to execute over.
     pub sched: &'a ConnectivitySchedule,
+    /// Local-training backend (PJRT artifacts or the analytic mock).
     pub trainer: &'a dyn Trainer,
+    /// Eq.-4 server-update implementation (CPU or Pallas artifact).
     pub aggregator: &'a mut dyn ServerAggregator,
+    /// Engine knobs.
     pub cfg: EngineConfig,
     /// Some(..) iff algorithm == FedSpace
     pub planner: Option<FedSpacePlanner>,
 }
 
 impl<'a> Engine<'a> {
+    /// Wire up an engine; panics if FedSpace is requested without a planner.
     pub fn new(
         sched: &'a ConnectivitySchedule,
         trainer: &'a dyn Trainer,
@@ -143,7 +227,16 @@ impl<'a> Engine<'a> {
         });
         let mut days_to_target = None;
 
-        for i in 0..sched.n_steps() {
+        // ContactList: precompute the contact-event list once; the other
+        // event sources (planner horizon, scheduled slots) depend on live
+        // policy state and are queried in `next_event`.
+        let active: Option<Vec<usize>> = match cfg.mode {
+            EngineMode::Dense => None,
+            EngineMode::ContactList => Some(sched.active_steps()),
+        };
+        let n_steps = sched.n_steps();
+        let mut i = 0usize;
+        while i < n_steps {
             // FedSpace: (re)plan at window boundaries using the live state
             if let (PolicyImpl::FedSpace(sp), Some(planner)) =
                 (&mut policy, self.planner.as_mut())
@@ -224,6 +317,11 @@ impl<'a> Engine<'a> {
                     }
                 }
             }
+
+            i = match &active {
+                None => i + 1,
+                Some(act) => next_event(i + 1, act, &policy, n_steps, cfg.eval_every),
+            };
         }
         let _ = last_acc;
         // trace.global_updates is incremented exactly where gs.update() runs,
@@ -525,6 +623,112 @@ mod tests {
         for (p, q) in a.trace.curve.points.iter().zip(b.trace.curve.points.iter()) {
             assert_eq!(p.accuracy, q.accuracy);
         }
+    }
+
+    use crate::testing::assert_same_run;
+
+    fn run_mock_mode(
+        algorithm: AlgorithmKind,
+        m: usize,
+        steps: usize,
+        mode: crate::cfg::EngineMode,
+        stop_at: Option<f64>,
+    ) -> RunResult {
+        let sched = small_sched(12, steps);
+        let trainer = MockTrainer::new(16, 12, 0.3, 0);
+        let mut agg = CpuAggregator;
+        let planner = if algorithm == AlgorithmKind::FedSpace {
+            Some(FedSpacePlanner::new(
+                UtilityModel::new("forest").unwrap(),
+                SearchParams { i0: 24, n_min: 2, n_max: 8, n_search: 100 },
+                0,
+            ))
+        } else {
+            None
+        };
+        let cfg = EngineConfig {
+            algorithm,
+            fedbuff_m: m,
+            eval_every: 4,
+            stop_at_accuracy: stop_at,
+            mode,
+            ..Default::default()
+        };
+        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, planner);
+        e.run().unwrap()
+    }
+
+    #[test]
+    fn contact_list_mode_bit_identical_to_dense_all_algorithms() {
+        use crate::cfg::EngineMode;
+        for alg in [
+            AlgorithmKind::Sync,
+            AlgorithmKind::Async,
+            AlgorithmKind::FedBuff,
+            AlgorithmKind::FedSpace,
+        ] {
+            let dense = run_mock_mode(alg, 4, 192, EngineMode::Dense, None);
+            let sparse = run_mock_mode(alg, 4, 192, EngineMode::ContactList, None);
+            assert_same_run(&dense, &sparse, &format!("{alg:?}"));
+        }
+    }
+
+    #[test]
+    fn contact_list_mode_matches_dense_with_early_stop() {
+        use crate::cfg::EngineMode;
+        let dense = run_mock_mode(AlgorithmKind::FedBuff, 4, 192, EngineMode::Dense, Some(0.6));
+        let sparse =
+            run_mock_mode(AlgorithmKind::FedBuff, 4, 192, EngineMode::ContactList, Some(0.6));
+        assert_same_run(&dense, &sparse, "fedbuff stop@0.6");
+    }
+
+    #[test]
+    fn contact_list_mode_handles_sparse_schedules() {
+        use crate::cfg::EngineMode;
+        // hand-built schedule where most steps are contact-free, including
+        // a long dead tail and a dead head
+        let mut sets = vec![Vec::new(); 200];
+        sets[7] = vec![0, 1];
+        sets[8] = vec![2];
+        sets[55] = vec![0, 3];
+        sets[56] = vec![1, 2, 3];
+        sets[120] = vec![0, 1, 2, 3];
+        let sched = ConnectivitySchedule::from_sets(sets, 4);
+        let trainer = MockTrainer::new(8, 4, 0.2, 1);
+        let mut results = Vec::new();
+        for mode in [EngineMode::Dense, EngineMode::ContactList] {
+            let mut agg = CpuAggregator;
+            let cfg = EngineConfig {
+                algorithm: AlgorithmKind::Async,
+                eval_every: 16,
+                mode,
+                ..Default::default()
+            };
+            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+            results.push(e.run().unwrap());
+        }
+        assert_same_run(&results[0], &results[1], "sparse async");
+        assert!(results[0].final_round >= 1);
+    }
+
+    #[test]
+    fn next_event_enumerates_event_superset() {
+        // contacts at 3 and 10, eval_every=4 (evals at 3, 7, 11, ...), 16 steps
+        let active = vec![3usize, 10];
+        let policy = PolicyImpl::Async(AsyncPolicy);
+        let mut events = Vec::new();
+        let mut i = 0usize;
+        while i < 16 {
+            events.push(i);
+            i = next_event(i + 1, &active, &policy, 16, 4);
+        }
+        // step 0 (loop entry), evals at 3/7/11/15, contacts at 3/10, last=15
+        assert_eq!(events, vec![0, 3, 7, 10, 11, 15]);
+        // degenerate sync (no clients) must not skip anything
+        let sync0 = PolicyImpl::Sync(SyncPolicy { n_sats: 0 });
+        assert_eq!(next_event(5, &active, &sync0, 16, 4), 5);
+        // past the end
+        assert_eq!(next_event(16, &active, &policy, 16, 4), 16);
     }
 
     #[test]

@@ -19,11 +19,14 @@ pub struct RunTrace {
     pub curve: TrainingCurve,
     /// wall-clock seconds spent in local training / aggregation / eval
     pub t_train_s: f64,
+    /// wall-clock seconds spent in Eq.-4 aggregation
     pub t_agg_s: f64,
+    /// wall-clock seconds spent in evaluation
     pub t_eval_s: f64,
 }
 
 impl RunTrace {
+    /// Fraction of connections that carried no upload (Figure 7 right).
     pub fn idle_fraction(&self) -> f64 {
         if self.connections == 0 {
             0.0

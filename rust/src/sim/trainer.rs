@@ -13,6 +13,7 @@ use anyhow::Result;
 /// Produces one local update (g_k = w_E − w_0, mean training loss) for a
 /// satellite, and evaluates global validation metrics.
 pub trait Trainer {
+    /// Flat parameter dimension.
     fn d(&self) -> usize;
     /// initial global model
     fn init(&self, rng: &mut Rng) -> Vec<f32>;
@@ -26,15 +27,20 @@ pub trait Trainer {
 
 /// The production trainer: real data batches through the PJRT artifacts.
 pub struct PjrtTrainer<'a> {
+    /// Loaded artifact runtime.
     pub rt: &'a ModelRuntime,
+    /// The dataset satellites sample batches from.
     pub dataset: &'a Dataset,
+    /// Per-satellite sample assignment.
     pub partition: &'a Partition,
+    /// Local-SGD learning rate.
     pub lr: f32,
     /// validation samples used per evaluation (subset for speed)
     pub eval_samples: usize,
 }
 
 impl<'a> PjrtTrainer<'a> {
+    /// Wire a trainer over loaded runtime + data.
     pub fn new(
         rt: &'a ModelRuntime,
         dataset: &'a Dataset,
@@ -97,16 +103,23 @@ impl Trainer for PjrtTrainer<'_> {
 /// meaningful. Staleness hurts exactly as in real SGD: stale deltas point
 /// at where the model used to be.
 pub struct MockTrainer {
+    /// Parameter dimension.
     pub dim: usize,
+    /// Per-satellite objective centers c_k.
     pub centers: Vec<Vec<f32>>,
+    /// Local-SGD step size.
     pub lr: f32,
+    /// Gradient noise std.
     pub noise: f32,
+    /// Local SGD steps per update E.
     pub e_steps: usize,
     optimum: Vec<f32>,
     init_dist: f64,
 }
 
 impl MockTrainer {
+    /// A mock federated task; `heterogeneity` spreads the per-satellite
+    /// centers (the Non-IID knob).
     pub fn new(dim: usize, n_sats: usize, heterogeneity: f32, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
         // shared task center + per-satellite offset (Non-IID knob)
@@ -190,7 +203,9 @@ impl Trainer for MockTrainer {
 /// source dataset D^s" (§4.3): the scheduler learns û on the same task the
 /// satellites train.
 pub struct TrainerSampleBackend<'a> {
+    /// The trainer supplying local updates and losses.
     pub trainer: &'a dyn Trainer,
+    /// Satellites to draw contributors from.
     pub n_sats: usize,
 }
 

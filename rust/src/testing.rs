@@ -53,6 +53,39 @@ pub fn replay<F: Fn(&mut Rng)>(seed: u64, f: F) {
     f(&mut rng);
 }
 
+/// Assert two engine runs are equivalent on everything deterministic —
+/// counters, staleness histogram, curve accuracy/loss bits, final model
+/// bits; wall-clock timing fields are exempt by design (ADR-0002).
+///
+/// This is the single dense-vs-contact-list equivalence gate shared by the
+/// engine unit tests, `tests/scenarios.rs`, and `bench_engine_modes` (the
+/// bench asserts identity before reporting any speedup), so adding a field
+/// to `RunTrace` only needs strengthening one checker.
+pub fn assert_same_run(a: &crate::sim::RunResult, b: &crate::sim::RunResult, ctx: &str) {
+    assert_eq!(a.final_round, b.final_round, "{ctx}: final_round");
+    assert_eq!(a.trace.connections, b.trace.connections, "{ctx}: connections");
+    assert_eq!(a.trace.uploads, b.trace.uploads, "{ctx}: uploads");
+    assert_eq!(a.trace.idle, b.trace.idle, "{ctx}: idle");
+    assert_eq!(a.trace.global_updates, b.trace.global_updates, "{ctx}: global_updates");
+    assert_eq!(
+        a.trace.staleness.entries().collect::<Vec<_>>(),
+        b.trace.staleness.entries().collect::<Vec<_>>(),
+        "{ctx}: staleness histogram"
+    );
+    assert_eq!(a.days_to_target, b.days_to_target, "{ctx}: days_to_target");
+    assert_eq!(a.trace.curve.points.len(), b.trace.curve.points.len(), "{ctx}: curve length");
+    for (p, q) in a.trace.curve.points.iter().zip(b.trace.curve.points.iter()) {
+        assert_eq!(p.step, q.step, "{ctx}: curve step");
+        assert_eq!(p.round, q.round, "{ctx}: curve round");
+        assert_eq!(p.accuracy.to_bits(), q.accuracy.to_bits(), "{ctx}: accuracy bits");
+        assert_eq!(p.loss.to_bits(), q.loss.to_bits(), "{ctx}: loss bits");
+    }
+    assert_eq!(a.final_w.len(), b.final_w.len(), "{ctx}: model dim");
+    for (x, y) in a.final_w.iter().zip(b.final_w.iter()) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: final_w bits");
+    }
+}
+
 /// Assert two f32 slices are element-wise close.
 pub fn assert_allclose(got: &[f32], want: &[f32], rtol: f32, atol: f32) {
     assert_eq!(got.len(), want.len(), "length mismatch");

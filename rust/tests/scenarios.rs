@@ -1,0 +1,102 @@
+//! System tests for the scenario registry and the contact-list engine mode:
+//! every built-in round-trips through TOML and runs end-to-end (scaled down
+//! for CI), and the dense vs contact-list engines produce bit-identical
+//! traces on the seed scenario `paper-fig7`.
+
+use fedspace::app::{run_mock_on_schedule, run_scenario};
+use fedspace::cfg::{AlgorithmKind, EngineMode, Scenario};
+use fedspace::testing::assert_same_run;
+
+#[test]
+fn every_builtin_round_trips_through_toml() {
+    let names = Scenario::builtin_names();
+    assert!(names.len() >= 5);
+    for name in names {
+        let sc = Scenario::builtin(name).unwrap();
+        let back = Scenario::from_toml_text(&sc.to_toml()).unwrap();
+        assert_eq!(sc, back, "TOML round-trip changed {name}");
+    }
+}
+
+#[test]
+fn every_builtin_runs_end_to_end_scaled() {
+    for name in Scenario::builtin_names() {
+        let sc = Scenario::builtin(name).unwrap().scaled(Some(12), Some(48));
+        let outs = run_scenario(&sc, None)
+            .unwrap_or_else(|e| panic!("{name} failed: {e}"));
+        assert_eq!(outs.len(), sc.algorithms.len(), "{name}");
+        for out in &outs {
+            assert!(
+                !out.result.trace.curve.points.is_empty(),
+                "{name}/{} produced no curve",
+                out.algorithm.name()
+            );
+        }
+    }
+}
+
+/// The acceptance gate: on `paper-fig7` (scaled for CI speed, full grid
+/// incl. FedSpace) the contact-list engine's trace is identical to the
+/// dense engine's, bit for bit.
+#[test]
+fn contact_list_engine_identical_on_paper_fig7() {
+    let sc = Scenario::builtin("paper-fig7").unwrap().scaled(Some(24), Some(96));
+    let (_, sched) = sc.build_schedule();
+    for &alg in &sc.algorithms {
+        let mut cfg = sc.experiment_config(alg);
+        cfg.engine_mode = EngineMode::Dense;
+        let dense = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+        cfg.engine_mode = EngineMode::ContactList;
+        let sparse = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+        assert_same_run(&dense.result, &sparse.result, alg.name());
+    }
+}
+
+/// Full-size equivalence run (minutes): `cargo test -q -- --ignored`.
+#[test]
+#[ignore = "full 191-satellite, 5-day run; CI uses the scaled variant"]
+fn contact_list_engine_identical_on_paper_fig7_full_size() {
+    let sc = Scenario::builtin("paper-fig7").unwrap();
+    let (_, sched) = sc.build_schedule();
+    for &alg in &sc.algorithms {
+        let mut cfg = sc.experiment_config(alg);
+        cfg.engine_mode = EngineMode::Dense;
+        let dense = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+        cfg.engine_mode = EngineMode::ContactList;
+        let sparse = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+        assert_same_run(&dense.result, &sparse.result, alg.name());
+    }
+}
+
+#[test]
+fn dropout_scenario_downtime_reaches_the_engine() {
+    // in the scaled dove-dropout, failed satellites upload strictly less
+    // than in the same scenario with downtime removed
+    let sc = Scenario::builtin("dove-dropout").unwrap().scaled(Some(24), Some(240));
+    assert!(!sc.downtime.is_empty(), "scaling dropped every downtime window");
+    let mut healthy = sc.clone();
+    healthy.downtime.clear();
+    healthy.algorithms = vec![AlgorithmKind::FedBuff];
+    let mut faulty = sc;
+    faulty.algorithms = vec![AlgorithmKind::FedBuff];
+    let houts = run_scenario(&healthy, None).unwrap();
+    let fouts = run_scenario(&faulty, None).unwrap();
+    let h = &houts[0].result;
+    let f = &fouts[0].result;
+    assert!(
+        f.trace.connections < h.trace.connections,
+        "downtime did not reduce contacts: faulty={} healthy={}",
+        f.trace.connections,
+        h.trace.connections
+    );
+}
+
+#[test]
+fn walker_and_polar_builtins_have_contacts() {
+    for name in ["walker-starlink-1584", "polar-iridium-66", "sparse-single-gs"] {
+        let sc = Scenario::builtin(name).unwrap().scaled(Some(12), Some(96));
+        let (_, sched) = sc.build_schedule();
+        let total: usize = sched.contacts.iter().map(|c| c.len()).sum();
+        assert!(total > 0, "{name}: no contacts at all");
+    }
+}
