@@ -11,8 +11,9 @@
 //!   connectivity computation (optimized parallel vs the trig-heavy serial
 //!   reference), RF fit/predict, synthetic-image materialization.
 
+use fedspace::bench_report;
 use fedspace::bench_util::{bench, section};
-use fedspace::connectivity::{ConnectivityParams, ConnectivitySchedule};
+use fedspace::connectivity::{ConnectivityParams, ConnectivitySchedule, ConnectivityStream};
 use fedspace::data::{Dataset, SynthConfig};
 use fedspace::exec;
 use fedspace::fl::server::{CpuAggregator, ServerAggregator};
@@ -95,6 +96,7 @@ fn main() -> anyhow::Result<()> {
     });
     let bytes = (entries.len() * d + 2 * d) as f64 * 4.0;
     println!("    -> {:.2} GB/s effective", bytes / s.median_s / 1e9);
+    bench_report::record("cpu_aggregate_16", s.median_s);
 
     section("L3: FedSpace scheduler (Eq. 13 random search)");
     let constellation = planet_labs_like(191, 0);
@@ -119,6 +121,8 @@ fn main() -> anyhow::Result<()> {
             after.throughput(n_search as f64),
             before.median_s / after.median_s
         );
+        bench_report::record(&format!("search_serial_{n_search}"), before.median_s);
+        bench_report::record(&format!("search_parallel_{n_search}"), after.median_s);
     }
 
     section("L3: orbital mechanics (connectivity schedule C)");
@@ -135,6 +139,49 @@ fn main() -> anyhow::Result<()> {
         let _ = ConnectivitySchedule::compute(&constellation, &stations, 96, params.clone());
     });
     println!("    -> {:.2}x vs reference", before.median_s / after.median_s);
+    bench_report::record("connectivity_compute_reference", before.median_s);
+    bench_report::record("connectivity_compute_optimized", after.median_s);
+
+    section("L3: streamed connectivity (chunked, recyclable, ADR-0004)");
+    // whole-horizon generation through the stream vs the all-at-once
+    // compute above — same pipeline, so overhead is chunk bookkeeping only
+    let stream = ConnectivityStream::new(
+        &constellation,
+        &stations,
+        96,
+        ConnectivityParams::default(),
+        ConnectivityStream::DEFAULT_CHUNK_LEN / 4,
+    );
+    let streamed = bench("stream C chunked: 191 sats x 96 slots (24/chunk)", 1, 5, || {
+        let mut chunk = fedspace::connectivity::ScheduleChunk::default();
+        for c in 0..stream.n_chunks() {
+            stream.fill_chunk(c, &mut chunk);
+        }
+    });
+    println!("    -> {:.2}x vs all-at-once", after.median_s / streamed.median_s);
+    bench_report::record("connectivity_stream_chunked", streamed.median_s);
+    // one chunk of a mega-fleet: the unit of work the streamed engine pays
+    // per chunk boundary on a 4408-satellite scenario
+    let mega = fedspace::orbit::Constellation::walker(&fedspace::orbit::WalkerSpec {
+        pattern: fedspace::orbit::WalkerPattern::Delta,
+        n_sats: 1584,
+        planes: 72,
+        phasing: 17,
+        alt_m: 550e3,
+        inc_deg: 53.0,
+    });
+    let mega_stream = ConnectivityStream::new(
+        &mega,
+        &stations,
+        ConnectivityStream::DEFAULT_CHUNK_LEN,
+        ConnectivityParams::default(),
+        ConnectivityStream::DEFAULT_CHUNK_LEN,
+    );
+    let s = bench("stream one chunk: 1584 sats x 96 slots", 1, 3, || {
+        let mut chunk = fedspace::connectivity::ScheduleChunk::default();
+        mega_stream.fill_chunk(0, &mut chunk);
+    });
+    bench_report::record("connectivity_stream_mega_chunk", s.median_s);
 
     section("L3: utility regressor (random forest)");
     let x: Vec<Vec<f64>> = (0..400)
@@ -160,5 +207,9 @@ fn main() -> anyhow::Result<()> {
         let _ = ds.make_batch(&ds.train, &idx);
     });
     println!("    -> {:.0} images/s", s.throughput(128.0));
+
+    if let Some(path) = bench_report::flush_to_env_path()? {
+        println!("\nmachine-readable results written to {path}");
+    }
     Ok(())
 }

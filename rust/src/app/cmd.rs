@@ -24,7 +24,7 @@ COMMANDS:
                   --config FILE           TOML config (optional)
                   --algorithm sync|async|fedbuff|fedspace (fedspace)
                   --dist iid|noniid (iid) --steps N (480) --sats N (191)
-                  --engine dense|contacts (dense) engine time-axis mode
+                  --engine dense|contacts|streamed (dense)  time-axis mode
                   --mock                  analytic backend (default: PJRT)
                   --size small|fmow       model size for PJRT (fmow)
                   --eval-samples N (512)  --target ACC (none)
@@ -35,9 +35,14 @@ COMMANDS:
                   scenarios run <name|--config FILE>
                     --sats N / --steps N         scale the scenario down
                     --algorithm A                run one grid entry only
-                    --engine dense|contacts      override engine mode
+                    --engine dense|contacts|streamed  override engine mode
                     --target ACC                 stop at accuracy
                     --out-dir DIR                write per-algorithm curves
+  bench-check   compare bench JSON against the committed baseline (CI gate)
+                  --baseline FILE         committed baseline (BENCH_pr3.json)
+                  --current A.json,B.json bench outputs to merge and compare
+                  --max-regress F (0.25)  relative slowdown budget per path
+                  --summary-out FILE      also write the markdown summary
   utility       phase-1 utility pipeline on the mock backend; reports MSE
                   --samples N (400)
   schedule      plan one FedSpace aggregation window over the real
@@ -251,6 +256,49 @@ pub fn schedule(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `fedspace bench-check` — the CI perf-regression gate: merge one or more
+/// bench JSON outputs, compare them against the committed baseline, print
+/// a markdown table (also written to `--summary-out` for the CI step
+/// summary), and fail on any tracked path slower than the budget. A
+/// provisional baseline reports in bootstrap mode and never fails (see
+/// `bench_report`).
+pub fn bench_check(args: &Args) -> Result<()> {
+    use crate::bench_report::{compare, BenchReport};
+    let baseline_path = args.require("baseline")?;
+    let current_paths = args.require("current")?;
+    let max_regress = args.get_f64("max-regress", 0.25)?;
+    if max_regress <= 0.0 {
+        bail!("--max-regress must be positive");
+    }
+    let baseline = BenchReport::from_file(baseline_path)?;
+    let mut merged = BenchReport { provisional: false, benches: Default::default() };
+    for path in current_paths.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let part = BenchReport::from_file(path)?;
+        merged.benches.extend(part.benches);
+    }
+    if merged.benches.is_empty() {
+        bail!("no bench results found in --current {current_paths}");
+    }
+    let cmp = compare(&baseline, &merged, max_regress);
+    let md = cmp.to_markdown();
+    println!("{md}");
+    if let Some(path) = args.get("summary-out") {
+        // written before any gate failure below, so CI can append it to the
+        // step summary whether the gate passes or fails
+        write_file(path, &md)?;
+    }
+    if !cmp.regressions.is_empty() {
+        bail!(
+            "perf regression gate failed: {} path(s) >{:.0}% slower than {}: {}",
+            cmp.regressions.len(),
+            max_regress * 100.0,
+            baseline_path,
+            cmp.regressions.join(", ")
+        );
+    }
+    Ok(())
+}
+
 /// Resolve the scenario a `scenarios describe|run` invocation names: a
 /// registry name as the second positional argument, or `--config FILE`.
 fn resolve_scenario(args: &Args) -> Result<Scenario> {
@@ -400,6 +448,40 @@ mod tests {
         assert!(scenarios(&args("scenarios describe nope")).is_err());
         assert!(scenarios(&args("scenarios explode")).is_err());
         assert!(scenarios(&args("scenarios run")).is_err());
+    }
+
+    #[test]
+    fn bench_check_gates_and_bootstraps() {
+        use crate::bench_report::BenchReport;
+        // per-process dir: concurrent test runs must not race on the files
+        let dir =
+            std::env::temp_dir().join(format!("fedspace_bench_check_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = |n: &str| dir.join(n).to_string_lossy().into_owned();
+        let report = |prov: bool, v: f64| BenchReport {
+            provisional: prov,
+            benches: [("a".to_string(), v)].into_iter().collect(),
+        };
+        std::fs::write(path("base.json"), report(false, 1.0).to_json()).unwrap();
+        std::fs::write(path("ok.json"), report(false, 1.1).to_json()).unwrap();
+        std::fs::write(path("bad.json"), report(false, 2.0).to_json()).unwrap();
+        std::fs::write(path("prov.json"), report(true, 0.001).to_json()).unwrap();
+        let run = |base: &str, cur: &str| {
+            bench_check(&args(&format!(
+                "bench-check --baseline {} --current {} --summary-out {}",
+                path(base),
+                path(cur),
+                path("summary.md")
+            )))
+        };
+        run("base.json", "ok.json").unwrap();
+        assert!(run("base.json", "bad.json").is_err(), "2x slowdown must fail the gate");
+        // provisional baseline: report-only, never fails
+        run("prov.json", "bad.json").unwrap();
+        let summary = std::fs::read_to_string(path("summary.md")).unwrap();
+        assert!(summary.contains("Bootstrap mode"));
+        // missing inputs error out
+        assert!(run("nope.json", "ok.json").is_err());
     }
 
     #[test]

@@ -8,6 +8,6 @@ pub mod runner;
 
 pub use args::Args;
 pub use runner::{
-    build_partition, build_schedule, build_utility_model, run_mock_experiment,
-    run_mock_on_schedule, run_pjrt_experiment, run_scenario, ExperimentOutput,
+    build_partition, build_schedule, build_stream, build_utility_model, run_mock_experiment,
+    run_mock_on_schedule, run_mock_on_stream, run_pjrt_experiment, run_scenario, ExperimentOutput,
 };

@@ -1,8 +1,8 @@
 //! Experiment runner: wires config → substrates → engine, for both the
 //! mock (scheduler-level) and PJRT (full three-layer) backends.
 
-use crate::cfg::{AlgorithmKind, DataDist, ExperimentConfig, Scenario};
-use crate::connectivity::{ConnectivityParams, ConnectivitySchedule};
+use crate::cfg::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig, Scenario};
+use crate::connectivity::{ConnectivityParams, ConnectivitySchedule, ConnectivityStream};
 use crate::data::{
     partition::cell_visits, partition_iid, partition_noniid, Dataset, Partition, SynthConfig,
 };
@@ -27,8 +27,12 @@ pub struct ExperimentOutput {
     pub dist: DataDist,
 }
 
-/// Constellation + connectivity for a config.
-pub fn build_schedule(cfg: &ExperimentConfig) -> (Constellation, ConnectivitySchedule) {
+/// Constellation + station network + link params for a config — the one
+/// place the config's connectivity inputs are interpreted, so the dense
+/// and streamed paths can never diverge on them.
+fn connectivity_inputs(
+    cfg: &ExperimentConfig,
+) -> (Constellation, Vec<crate::orbit::GroundStation>, ConnectivityParams) {
     crate::exec::set_default_parallelism(cfg.threads);
     let constellation = planet_labs_like(cfg.n_sats, cfg.constellation_seed);
     let stations = planet_ground_stations();
@@ -37,8 +41,29 @@ pub fn build_schedule(cfg: &ExperimentConfig) -> (Constellation, ConnectivitySch
         min_elev_deg: cfg.min_elev_deg,
         ..Default::default()
     };
+    (constellation, stations, params)
+}
+
+/// Constellation + connectivity for a config.
+pub fn build_schedule(cfg: &ExperimentConfig) -> (Constellation, ConnectivitySchedule) {
+    let (constellation, stations, params) = connectivity_inputs(cfg);
     let sched = ConnectivitySchedule::compute(&constellation, &stations, cfg.n_steps, params);
     (constellation, sched)
+}
+
+/// Constellation + chunked connectivity stream for a config — the
+/// streamed-engine counterpart of [`build_schedule`]: nothing horizon-sized
+/// is materialized.
+pub fn build_stream(cfg: &ExperimentConfig) -> (Constellation, ConnectivityStream) {
+    let (constellation, stations, params) = connectivity_inputs(cfg);
+    let stream = ConnectivityStream::new(
+        &constellation,
+        &stations,
+        cfg.n_steps,
+        params,
+        ConnectivityStream::DEFAULT_CHUNK_LEN,
+    );
+    (constellation, stream)
 }
 
 /// IID or Non-IID partition per §4.1.
@@ -117,13 +142,38 @@ fn make_planner(
 }
 
 /// Scheduler-level experiment on the analytic mock objective. Fast: used by
-/// tests, the ablation bench and quick CLI iterations.
+/// tests, the ablation bench and quick CLI iterations. Streamed-mode
+/// configs route through a [`ConnectivityStream`] automatically.
 pub fn run_mock_experiment(
     cfg: &ExperimentConfig,
     stop_at: Option<f64>,
 ) -> Result<ExperimentOutput> {
+    if cfg.engine_mode == EngineMode::Streamed {
+        let (_, stream) = build_stream(cfg);
+        return run_mock_on_stream(cfg, &stream, stop_at);
+    }
     let (_, sched) = build_schedule(cfg);
     run_mock_on_schedule(cfg, &sched, stop_at)
+}
+
+/// Mock trainer + optional FedSpace planner for one experiment config —
+/// the wiring shared by the schedule-backed and stream-backed mock runs.
+fn mock_parts(cfg: &ExperimentConfig) -> Result<(MockTrainer, Option<FedSpacePlanner>)> {
+    crate::exec::set_default_parallelism(cfg.threads);
+    let heterogeneity = match cfg.dist {
+        DataDist::Iid => 0.1,
+        DataDist::NonIid => 0.8,
+    };
+    let trainer = MockTrainer::new(32, cfg.n_sats, heterogeneity, cfg.data_seed);
+    let planner = if cfg.algorithm == AlgorithmKind::FedSpace {
+        let mut rng = Rng::new(cfg.sim_seed ^ 0xA11CE);
+        let backend = MockBackend::new(32, cfg.data_seed);
+        let utility = build_utility_model(cfg, &backend, None, &mut rng)?;
+        Some(make_planner(cfg, utility))
+    } else {
+        None
+    };
+    Ok((trainer, planner))
 }
 
 /// [`run_mock_experiment`] over a caller-built schedule — scenario grid runs
@@ -139,30 +189,59 @@ pub fn run_mock_on_schedule(
         sched.n_sats,
         cfg.n_sats
     );
-    crate::exec::set_default_parallelism(cfg.threads);
-    let heterogeneity = match cfg.dist {
-        DataDist::Iid => 0.1,
-        DataDist::NonIid => 0.8,
-    };
-    let trainer = MockTrainer::new(32, cfg.n_sats, heterogeneity, cfg.data_seed);
+    anyhow::ensure!(
+        cfg.engine_mode != EngineMode::Streamed,
+        "engine mode 'streamed' runs over a ConnectivityStream — use run_mock_on_stream"
+    );
+    let (trainer, planner) = mock_parts(cfg)?;
     let mut agg = CpuAggregator;
-    let planner = if cfg.algorithm == AlgorithmKind::FedSpace {
-        let mut rng = Rng::new(cfg.sim_seed ^ 0xA11CE);
-        let backend = MockBackend::new(32, cfg.data_seed);
-        let utility = build_utility_model(cfg, &backend, None, &mut rng)?;
-        Some(make_planner(cfg, utility))
-    } else {
-        None
-    };
     let mut engine = Engine::new(sched, &trainer, &mut agg, engine_cfg(cfg, stop_at), planner);
     Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
 }
 
-/// Run a scenario's whole algorithm grid on the mock backend, sharing one
-/// connectivity schedule. Returns one [`ExperimentOutput`] per grid entry,
-/// in grid order.
+/// [`run_mock_experiment`] over a caller-built connectivity stream — the
+/// streamed engine mode's entry point; scenario grids share one stream
+/// (each run walks it chunk by chunk, recycling two chunk buffers).
+pub fn run_mock_on_stream(
+    cfg: &ExperimentConfig,
+    stream: &ConnectivityStream,
+    stop_at: Option<f64>,
+) -> Result<ExperimentOutput> {
+    anyhow::ensure!(
+        stream.n_sats() == cfg.n_sats,
+        "stream covers {} satellites but config says {}",
+        stream.n_sats(),
+        cfg.n_sats
+    );
+    anyhow::ensure!(
+        cfg.engine_mode == EngineMode::Streamed,
+        "run_mock_on_stream requires engine mode 'streamed' (got {})",
+        cfg.engine_mode.name()
+    );
+    let (trainer, planner) = mock_parts(cfg)?;
+    let mut agg = CpuAggregator;
+    let mut engine =
+        Engine::new_streamed(stream, &trainer, &mut agg, engine_cfg(cfg, stop_at), planner);
+    Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
+}
+
+/// Run a scenario's whole algorithm grid on the mock backend. Dense and
+/// contact-list scenarios compute one schedule and share it across the
+/// grid; streamed scenarios share the stream *generator* but each grid
+/// entry re-derives the chunks while walking (that per-run compute is the
+/// price of never materializing the horizon — pass a single algorithm for
+/// time-capped runs like the CI mega smoke). Returns one
+/// [`ExperimentOutput`] per grid entry, in grid order.
 pub fn run_scenario(sc: &Scenario, stop_at: Option<f64>) -> Result<Vec<ExperimentOutput>> {
     sc.validate()?;
+    if sc.engine_mode == EngineMode::Streamed {
+        let (_, stream) = sc.build_stream();
+        return sc
+            .algorithms
+            .iter()
+            .map(|&alg| run_mock_on_stream(&sc.experiment_config(alg), &stream, stop_at))
+            .collect();
+    }
     let (_, sched) = sc.build_schedule();
     sc.algorithms
         .iter()
@@ -225,7 +304,15 @@ pub fn run_pjrt_experiment(
         seed: cfg.data_seed,
         ..Default::default()
     });
-    let (constellation, sched) = build_schedule(cfg);
+    // time axis: chunked stream in streamed mode, materialized schedule
+    // otherwise — either way the constellation feeds the data partition
+    let (constellation, sched, stream) = if cfg.engine_mode == EngineMode::Streamed {
+        let (c, s) = build_stream(cfg);
+        (c, None, Some(s))
+    } else {
+        let (c, s) = build_schedule(cfg);
+        (c, Some(s), None)
+    };
     let mut rng = Rng::new(cfg.sim_seed ^ 0xDA7A);
     let partition = build_partition(cfg, &dataset, &constellation, &mut rng);
     let trainer = PjrtTrainer::new(&rt, &dataset, &partition, cfg.lr, eval_samples);
@@ -241,8 +328,13 @@ pub fn run_pjrt_experiment(
         None
     };
     let mut agg = PjrtAggregator { rt: &rt };
-    let mut engine = Engine::new(&sched, &trainer, &mut agg, engine_cfg(cfg, stop_at), planner);
-    Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
+    let ecfg = engine_cfg(cfg, stop_at);
+    let result = match (&sched, &stream) {
+        (Some(s), _) => Engine::new(s, &trainer, &mut agg, ecfg, planner).run()?,
+        (None, Some(st)) => Engine::new_streamed(st, &trainer, &mut agg, ecfg, planner).run()?,
+        (None, None) => unreachable!("one time axis is always built"),
+    };
+    Ok(ExperimentOutput { result, algorithm: cfg.algorithm, dist: cfg.dist })
 }
 
 #[cfg(test)]
@@ -274,6 +366,28 @@ mod tests {
         ] {
             let out = run_mock_experiment(&tiny_cfg(alg), None).unwrap();
             assert!(!out.result.trace.curve.points.is_empty(), "{alg:?}");
+        }
+    }
+
+    #[test]
+    fn streamed_mock_experiment_matches_dense() {
+        let mut cfg = tiny_cfg(AlgorithmKind::FedBuff);
+        let dense = run_mock_experiment(&cfg, None).unwrap();
+        cfg.engine_mode = EngineMode::Streamed;
+        let streamed = run_mock_experiment(&cfg, None).unwrap();
+        crate::testing::assert_same_run(&dense.result, &streamed.result, "runner streamed");
+    }
+
+    #[test]
+    fn run_scenario_streams_mega_builtins_scaled() {
+        for name in ["walker-starlink-4408", "kuiper-3236"] {
+            let sc = Scenario::builtin(name).unwrap().scaled(Some(10), Some(24));
+            assert_eq!(sc.engine_mode, EngineMode::Streamed, "{name}");
+            let outs = run_scenario(&sc, None).unwrap();
+            assert_eq!(outs.len(), sc.algorithms.len(), "{name}");
+            for out in &outs {
+                assert!(!out.result.trace.curve.points.is_empty(), "{name}");
+            }
         }
     }
 

@@ -1,0 +1,516 @@
+//! Machine-readable bench results and the CI perf-regression gate.
+//!
+//! The bench binaries (`bench_perf`, `bench_engine_modes`) [`record`] the
+//! median of every tracked hot path under a stable snake-case key and, when
+//! the `FEDSPACE_BENCH_JSON` env var names a file, [`flush_to_env_path`]
+//! writes them as a small JSON document. CI runs the benches, then
+//! `fedspace bench-check` parses those documents plus the committed
+//! baseline (`rust/BENCH_pr3.json`), renders a markdown comparison table
+//! into the GitHub step summary, and **fails the build** when any tracked
+//! path is more than `--max-regress` (default 25%) slower than its
+//! baseline median.
+//!
+//! A baseline with `"provisional": true` (or no overlapping keys) puts the
+//! gate in bootstrap mode: the comparison is reported but never fails, and
+//! the summary explains how to commit real numbers. That is how the gate
+//! ships from an authoring environment that cannot run the benches — the
+//! first CI run produces the artifact to commit.
+//!
+//! JSON support is a deliberately tiny in-repo subset (objects, arrays,
+//! strings without `\u` escapes, numbers, booleans, null) — consistent
+//! with the crate's no-new-dependencies substrate policy (ADR-0001).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+/// The schema tag written into every report.
+pub const SCHEMA: &str = "fedspace-bench-v1";
+
+fn registry() -> &'static Mutex<BTreeMap<String, f64>> {
+    static REG: OnceLock<Mutex<BTreeMap<String, f64>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Record one tracked bench result (median seconds) under a stable key.
+/// Later records with the same key overwrite earlier ones.
+pub fn record(name: &str, median_s: f64) {
+    registry().lock().expect("bench registry poisoned").insert(name.to_string(), median_s);
+}
+
+/// Snapshot of everything [`record`]ed so far in this process.
+pub fn recorded() -> BTreeMap<String, f64> {
+    registry().lock().expect("bench registry poisoned").clone()
+}
+
+/// Write the recorded results to the file named by `FEDSPACE_BENCH_JSON`
+/// (no-op returning `None` when the env var is unset). Called by the bench
+/// binaries at the end of `main`.
+pub fn flush_to_env_path() -> Result<Option<String>> {
+    let Ok(path) = std::env::var("FEDSPACE_BENCH_JSON") else {
+        return Ok(None);
+    };
+    let report = BenchReport { provisional: false, benches: recorded() };
+    crate::metrics::write_file(&path, &report.to_json())
+        .with_context(|| format!("writing bench JSON {path}"))?;
+    Ok(Some(path))
+}
+
+/// One bench-results document: tracked path → median seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    /// True for placeholder baselines that must not gate anything yet.
+    pub provisional: bool,
+    /// Median seconds per tracked path.
+    pub benches: BTreeMap<String, f64>,
+}
+
+impl BenchReport {
+    /// Serialize (stable key order, round-trips through [`Self::from_json`]).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+        s.push_str(&format!("  \"provisional\": {},\n", self.provisional));
+        s.push_str("  \"benches\": {");
+        let entries: Vec<String> =
+            self.benches.iter().map(|(k, v)| format!("\n    \"{k}\": {v}")).collect();
+        s.push_str(&entries.join(","));
+        if !entries.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("}\n}\n");
+        s
+    }
+
+    /// Parse a report document.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = parse_json(text)?;
+        let Json::Obj(top) = v else {
+            bail!("bench report must be a JSON object");
+        };
+        let mut report = BenchReport { provisional: false, benches: BTreeMap::new() };
+        for (key, val) in top {
+            match (key.as_str(), val) {
+                ("provisional", Json::Bool(b)) => report.provisional = b,
+                ("benches", Json::Obj(entries)) => {
+                    for (name, entry) in entries {
+                        let Json::Num(n) = entry else {
+                            bail!("bench {name:?} must be a number of seconds");
+                        };
+                        report.benches.insert(name, n);
+                    }
+                }
+                // schema/note/anything else: tolerated and ignored
+                _ => {}
+            }
+        }
+        Ok(report)
+    }
+
+    /// Parse a report from a file on disk.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading bench report {path}"))?;
+        Self::from_json(&text).with_context(|| format!("parsing bench report {path}"))
+    }
+}
+
+/// Verdict for one tracked path in a baseline/current comparison.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowStatus {
+    /// Within the allowed regression budget.
+    Ok,
+    /// Slower than baseline by more than the budget — fails the gate.
+    Regressed,
+    /// Present in the current run only (no baseline yet).
+    NewInCurrent,
+    /// Present in the baseline only (bench removed or renamed).
+    MissingInCurrent,
+}
+
+/// One comparison row.
+#[derive(Clone, Debug)]
+pub struct CompareRow {
+    /// Tracked path key.
+    pub name: String,
+    /// Baseline median seconds, if present.
+    pub baseline_s: Option<f64>,
+    /// Current median seconds, if present.
+    pub current_s: Option<f64>,
+    /// current / baseline when both sides exist.
+    pub ratio: Option<f64>,
+    /// Gate verdict for this row.
+    pub status: RowStatus,
+}
+
+/// Result of comparing a current run against the committed baseline.
+#[derive(Clone, Debug)]
+pub struct Comparison {
+    /// Per-path rows, baseline key order then new keys.
+    pub rows: Vec<CompareRow>,
+    /// Names of rows whose status is [`RowStatus::Regressed`].
+    pub regressions: Vec<String>,
+    /// True when the baseline is provisional or shares no keys with the
+    /// current run — report, never fail.
+    pub bootstrap: bool,
+    /// The regression budget the comparison ran with.
+    pub max_regress: f64,
+}
+
+/// Compare `current` against `baseline` with a relative budget
+/// (`max_regress = 0.25` fails any path >25% slower than its baseline).
+pub fn compare(baseline: &BenchReport, current: &BenchReport, max_regress: f64) -> Comparison {
+    let mut rows = Vec::new();
+    let mut regressions = Vec::new();
+    let mut overlap = 0usize;
+    for (name, &base) in &baseline.benches {
+        match current.benches.get(name) {
+            Some(&cur) => {
+                overlap += 1;
+                let ratio = if base > 0.0 { cur / base } else { 1.0 };
+                let status = if ratio > 1.0 + max_regress {
+                    regressions.push(name.clone());
+                    RowStatus::Regressed
+                } else {
+                    RowStatus::Ok
+                };
+                rows.push(CompareRow {
+                    name: name.clone(),
+                    baseline_s: Some(base),
+                    current_s: Some(cur),
+                    ratio: Some(ratio),
+                    status,
+                });
+            }
+            None => rows.push(CompareRow {
+                name: name.clone(),
+                baseline_s: Some(base),
+                current_s: None,
+                ratio: None,
+                status: RowStatus::MissingInCurrent,
+            }),
+        }
+    }
+    for (name, &cur) in &current.benches {
+        if !baseline.benches.contains_key(name) {
+            rows.push(CompareRow {
+                name: name.clone(),
+                baseline_s: None,
+                current_s: Some(cur),
+                ratio: None,
+                status: RowStatus::NewInCurrent,
+            });
+        }
+    }
+    let bootstrap = baseline.provisional || overlap == 0;
+    if bootstrap {
+        regressions.clear();
+    }
+    Comparison { rows, regressions, bootstrap, max_regress }
+}
+
+impl Comparison {
+    /// Render the comparison as a GitHub-flavored markdown section (the CI
+    /// step-summary payload).
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::from("## Perf-regression gate\n\n");
+        if self.bootstrap {
+            s.push_str(
+                "**Bootstrap mode** — the committed baseline is provisional (or shares no \
+                 tracked paths with this run), so nothing fails yet. To arm the gate, download \
+                 the `bench-output` artifact of this run and commit its merged JSON as \
+                 `rust/BENCH_pr3.json` with `\"provisional\": false`.\n\n",
+            );
+        } else if self.regressions.is_empty() {
+            s.push_str(&format!(
+                "All tracked paths within {:.0}% of the committed baseline.\n\n",
+                self.max_regress * 100.0
+            ));
+        } else {
+            s.push_str(&format!(
+                "**FAIL** — {} tracked path(s) regressed more than {:.0}%: {}. If the slowdown \
+                 is intended, update `rust/BENCH_pr3.json` from this run's `bench-output` \
+                 artifact and justify the change in the PR.\n\n",
+                self.regressions.len(),
+                self.max_regress * 100.0,
+                self.regressions.join(", ")
+            ));
+        }
+        s.push_str("| tracked path | baseline | current | ratio | status |\n");
+        s.push_str("|---|---|---|---|---|\n");
+        for r in &self.rows {
+            let fmt = |v: Option<f64>| match v {
+                Some(x) => crate::bench_util::fmt_s(x),
+                None => "—".to_string(),
+            };
+            let ratio = match r.ratio {
+                Some(x) => format!("{x:.2}x"),
+                None => "—".to_string(),
+            };
+            let status = match r.status {
+                RowStatus::Ok => "ok",
+                RowStatus::Regressed => "**REGRESSED**",
+                RowStatus::NewInCurrent => "new (no baseline)",
+                RowStatus::MissingInCurrent => "missing in current",
+            };
+            s.push_str(&format!(
+                "| `{}` | {} | {} | {} | {} |\n",
+                r.name,
+                fmt(r.baseline_s),
+                fmt(r.current_s),
+                ratio,
+                status
+            ));
+        }
+        s
+    }
+}
+
+/// Minimal JSON value (parse side only — the emit side is hand-formatted).
+/// Payloads of variants the report reader never destructures (arrays,
+/// nulls, loose strings) are still parsed for well-formedness.
+#[allow(dead_code)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+fn parse_json(text: &str) -> Result<Json> {
+    let mut p = Parser { b: text.as_bytes(), i: 0 };
+    p.ws();
+    let v = p.value()?;
+    p.ws();
+    if p.i != p.b.len() {
+        bail!("trailing bytes after JSON value at offset {}", p.i);
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at offset {}", c as char, self.i);
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at offset {}", self.i);
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => bail!("unexpected byte at offset {}", self.i),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            let val = self.value()?;
+            out.push((key, val));
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(out));
+                }
+                _ => bail!("expected ',' or '}}' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut out = Vec::new();
+        self.ws();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            self.ws();
+            out.push(self.value()?);
+            self.ws();
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(out));
+                }
+                _ => bail!("expected ',' or ']' at offset {}", self.i),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => bail!("unterminated string"),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    let esc = self.peek().context("dangling escape")?;
+                    out.push(match esc {
+                        b'"' => '"',
+                        b'\\' => '\\',
+                        b'/' => '/',
+                        b'n' => '\n',
+                        b't' => '\t',
+                        b'r' => '\r',
+                        other => bail!("unsupported escape \\{}", other as char),
+                    });
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // copy one UTF-8 scalar (keys here are ASCII in practice)
+                    let rest = std::str::from_utf8(&self.b[self.i..])
+                        .context("invalid UTF-8 in string")?;
+                    let ch = rest.chars().next().context("unterminated string")?;
+                    out.push(ch);
+                    self.i += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.i += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.b[start..self.i]).expect("ascii number bytes");
+        let n: f64 = s.parse().with_context(|| format!("bad number {s:?}"))?;
+        Ok(Json::Num(n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(entries: &[(&str, f64)], provisional: bool) -> BenchReport {
+        BenchReport {
+            provisional,
+            benches: entries.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let r = report(&[("compute_c", 0.0123), ("search_5000", 1.5)], false);
+        let back = BenchReport::from_json(&r.to_json()).unwrap();
+        assert_eq!(r, back);
+        // empty benches round-trips too
+        let empty = report(&[], true);
+        assert_eq!(BenchReport::from_json(&empty.to_json()).unwrap(), empty);
+    }
+
+    #[test]
+    fn parser_handles_extras_and_rejects_garbage() {
+        let r = BenchReport::from_json(
+            "{\"schema\": \"fedspace-bench-v1\", \"note\": \"hi\\n\", \"provisional\": true, \
+             \"benches\": {\"a\": 1e-3}, \"extra\": [1, 2, null]}",
+        )
+        .unwrap();
+        assert!(r.provisional);
+        assert_eq!(r.benches["a"], 1e-3);
+        assert!(BenchReport::from_json("{\"benches\": {\"a\": \"fast\"}}").is_err());
+        assert!(BenchReport::from_json("[1, 2]").is_err());
+        assert!(BenchReport::from_json("{\"a\": 1} trailing").is_err());
+        assert!(BenchReport::from_json("{\"a\": ").is_err());
+    }
+
+    #[test]
+    fn gate_fails_only_past_the_budget() {
+        let base = report(&[("a", 1.0), ("b", 1.0), ("gone", 1.0)], false);
+        let cur = report(&[("a", 1.24), ("b", 1.26), ("fresh", 0.5)], false);
+        let cmp = compare(&base, &cur, 0.25);
+        assert!(!cmp.bootstrap);
+        assert_eq!(cmp.regressions, vec!["b".to_string()]);
+        let by_name = |n: &str| cmp.rows.iter().find(|r| r.name == n).unwrap().status;
+        assert_eq!(by_name("a"), RowStatus::Ok);
+        assert_eq!(by_name("b"), RowStatus::Regressed);
+        assert_eq!(by_name("gone"), RowStatus::MissingInCurrent);
+        assert_eq!(by_name("fresh"), RowStatus::NewInCurrent);
+        let md = cmp.to_markdown();
+        assert!(md.contains("REGRESSED"));
+        assert!(md.contains("| `a` |"));
+    }
+
+    #[test]
+    fn provisional_baseline_bootstraps_instead_of_failing() {
+        let base = report(&[("a", 0.0001)], true);
+        let cur = report(&[("a", 10.0)], false);
+        let cmp = compare(&base, &cur, 0.25);
+        assert!(cmp.bootstrap);
+        assert!(cmp.regressions.is_empty());
+        assert!(cmp.to_markdown().contains("Bootstrap mode"));
+        // disjoint keys bootstrap too, even with a non-provisional baseline
+        let disjoint = compare(&report(&[("x", 1.0)], false), &cur, 0.25);
+        assert!(disjoint.bootstrap);
+    }
+
+    #[test]
+    fn record_and_snapshot() {
+        record("unit_test_path", 0.5);
+        record("unit_test_path", 0.25); // overwrite wins
+        let snap = recorded();
+        assert_eq!(snap["unit_test_path"], 0.25);
+    }
+}

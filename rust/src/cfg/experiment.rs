@@ -63,10 +63,12 @@ impl DataDist {
 
 /// How the simulation engine walks the time axis.
 ///
-/// Both modes execute the identical Algorithm-1 step body and produce
+/// All modes execute the identical Algorithm-1 step body and produce
 /// bit-identical traces (asserted by `sim::engine` tests); contact-list
-/// mode simply skips steps where provably nothing can happen. See
-/// ADR-0003 in `docs/ADRs.md` for the selection rationale.
+/// mode simply skips steps where provably nothing can happen, and streamed
+/// mode additionally computes the schedule itself in recyclable chunks.
+/// See ADR-0003 and ADR-0004 in `docs/ADRs.md` for the selection
+/// rationale and the memory model.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum EngineMode {
     /// Visit every time index 0..n_steps (the paper's literal loop).
@@ -74,18 +76,25 @@ pub enum EngineMode {
     Dense,
     /// Advance directly between events (contacts, evaluations, scheduled
     /// aggregations, planner boundaries) derived from the bitset schedule —
-    /// the right mode for sparse mega-constellation scenarios where most
-    /// slots carry no contact.
+    /// the right mode for sparse scenarios where most slots carry no
+    /// contact. Still precomputes the whole schedule up front.
     ContactList,
+    /// The contact-list walk driven by a
+    /// [`crate::connectivity::ConnectivityStream`]: connectivity is
+    /// computed chunk by chunk on demand, so peak schedule memory is
+    /// O(sats × chunk) — the only mode in which the mega-constellation
+    /// scenarios (`walker-starlink-4408`, `kuiper-3236`) are feasible.
+    Streamed,
 }
 
 impl EngineMode {
     /// Parse a CLI/TOML spelling (`"dense"` / `"contacts"` /
-    /// `"contact-list"`).
+    /// `"contact-list"` / `"streamed"`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_ascii_lowercase().as_str() {
             "dense" => EngineMode::Dense,
             "contacts" | "contact-list" | "contact_list" | "sparse" => EngineMode::ContactList,
+            "streamed" | "stream" | "chunked" => EngineMode::Streamed,
             other => bail!("unknown engine mode {other:?}"),
         })
     }
@@ -95,6 +104,7 @@ impl EngineMode {
         match self {
             EngineMode::Dense => "dense",
             EngineMode::ContactList => "contacts",
+            EngineMode::Streamed => "streamed",
         }
     }
 }
@@ -164,7 +174,8 @@ pub struct ExperimentConfig {
     /// `exec::set_default_parallelism` by the runner — a resource knob,
     /// never a semantics knob (results are thread-count independent).
     pub threads: usize,
-    /// Dense per-step loop or sparse contact-list event loop.
+    /// Dense per-step loop, sparse contact-list event loop, or the
+    /// chunk-driven streamed loop.
     pub engine_mode: EngineMode,
 }
 
@@ -397,6 +408,10 @@ mod tests {
         for s in ["contacts", "contact-list", "contact_list", "sparse"] {
             assert_eq!(EngineMode::parse(s).unwrap(), EngineMode::ContactList);
         }
+        for s in ["streamed", "stream", "chunked"] {
+            assert_eq!(EngineMode::parse(s).unwrap(), EngineMode::Streamed);
+        }
+        assert_eq!(EngineMode::Streamed.name(), "streamed");
         assert!(EngineMode::parse("warp").is_err());
         let c = ExperimentConfig::from_toml_text("[sim]\nengine = \"contacts\"").unwrap();
         assert_eq!(c.engine_mode, EngineMode::ContactList);

@@ -16,12 +16,29 @@
 
 use super::experiment::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig};
 use super::toml::{parse_toml, TomlDoc, TomlValue};
-use crate::connectivity::{ConnectivityParams, ConnectivitySchedule};
+use crate::connectivity::{ConnectivityParams, ConnectivitySchedule, ConnectivityStream};
 use crate::orbit::{
     planet_ground_stations, planet_labs_like, Constellation, DowntimeWindow, GroundStation,
     WalkerPattern, WalkerSpec,
 };
 use anyhow::{bail, Context, Result};
+
+/// One Walker-delta shell of a multi-shell constellation (mega-fleet
+/// specs: Starlink Gen1 and Kuiper file multiple shells at different
+/// altitudes/inclinations).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShellSpec {
+    /// t — satellites in this shell (divisible by `planes`).
+    pub n_sats: usize,
+    /// p — orbital planes.
+    pub planes: usize,
+    /// f — inter-plane phasing.
+    pub phasing: usize,
+    /// Shell altitude [km] (TOML-friendly unit).
+    pub alt_km: f64,
+    /// Inclination [deg].
+    pub inc_deg: f64,
+}
 
 /// How a scenario's constellation is generated.
 #[derive(Clone, Debug, PartialEq)]
@@ -48,6 +65,13 @@ pub enum ConstellationSpec {
         /// Inclination [deg].
         inc_deg: f64,
     },
+    /// A stack of Walker-delta shells (satellite ids are assigned shell by
+    /// shell, in order) — the real filing shapes of Starlink/Kuiper-class
+    /// systems.
+    Shells {
+        /// The shells, in id-assignment order.
+        shells: Vec<ShellSpec>,
+    },
 }
 
 impl ConstellationSpec {
@@ -56,15 +80,18 @@ impl ConstellationSpec {
         match self {
             ConstellationSpec::PlanetLabsLike { n_sats, .. } => *n_sats,
             ConstellationSpec::Walker { n_sats, .. } => *n_sats,
+            ConstellationSpec::Shells { shells } => shells.iter().map(|s| s.n_sats).sum(),
         }
     }
 
-    /// TOML `kind` spelling (`planet-labs`, `walker-delta`, `walker-star`).
+    /// TOML `kind` spelling (`planet-labs`, `walker-delta`, `walker-star`,
+    /// `walker-shells`).
     pub fn kind_name(&self) -> &'static str {
         match self {
             ConstellationSpec::PlanetLabsLike { .. } => "planet-labs",
             ConstellationSpec::Walker { pattern: WalkerPattern::Delta, .. } => "walker-delta",
             ConstellationSpec::Walker { pattern: WalkerPattern::Star, .. } => "walker-star",
+            ConstellationSpec::Shells { .. } => "walker-shells",
         }
     }
 
@@ -81,6 +108,23 @@ impl ConstellationSpec {
                     alt_m: alt_km * 1e3,
                     inc_deg: *inc_deg,
                 })
+            }
+            ConstellationSpec::Shells { shells } => {
+                let mut orbits = Vec::with_capacity(self.n_sats());
+                for sh in shells {
+                    orbits.extend(
+                        Constellation::walker(&WalkerSpec {
+                            pattern: WalkerPattern::Delta,
+                            n_sats: sh.n_sats,
+                            planes: sh.planes,
+                            phasing: sh.phasing,
+                            alt_m: sh.alt_km * 1e3,
+                            inc_deg: sh.inc_deg,
+                        })
+                        .orbits,
+                    );
+                }
+                Constellation { orbits, downtime: Vec::new() }
             }
         }
     }
@@ -156,8 +200,11 @@ pub struct Scenario {
     pub fedbuff_m: usize,
     /// Data distribution for the mock/PJRT trainer.
     pub dist: DataDist,
-    /// Dense per-step loop or sparse contact-list event loop.
+    /// Dense per-step loop, sparse contact-list event loop, or the chunked
+    /// streamed walk.
     pub engine_mode: EngineMode,
+    /// Steps per connectivity chunk in streamed mode (ignored otherwise).
+    pub chunk_len: usize,
     /// Scheduled per-satellite outages (deterministic, planner-visible).
     pub downtime: Vec<DowntimeWindow>,
 }
@@ -176,6 +223,7 @@ impl Default for Scenario {
             fedbuff_m: 96,
             dist: DataDist::Iid,
             engine_mode: EngineMode::Dense,
+            chunk_len: ConnectivityStream::DEFAULT_CHUNK_LEN,
             downtime: Vec::new(),
         }
     }
@@ -202,10 +250,33 @@ impl Scenario {
         if self.constellation.n_sats() == 0 {
             bail!("constellation has no satellites");
         }
-        if let ConstellationSpec::Walker { n_sats, planes, .. } = &self.constellation {
-            if *planes == 0 || n_sats % planes != 0 {
-                bail!("walker: {n_sats} satellites not divisible into {planes} planes");
+        if self.chunk_len == 0 {
+            bail!("chunk_len must be > 0");
+        }
+        match &self.constellation {
+            ConstellationSpec::Walker { n_sats, planes, .. } => {
+                if *planes == 0 || n_sats % planes != 0 {
+                    bail!("walker: {n_sats} satellites not divisible into {planes} planes");
+                }
             }
+            ConstellationSpec::Shells { shells } => {
+                if shells.is_empty() {
+                    bail!("walker-shells needs at least one shell");
+                }
+                for (idx, sh) in shells.iter().enumerate() {
+                    if sh.n_sats == 0 {
+                        bail!("shell {idx} has no satellites");
+                    }
+                    if sh.planes == 0 || sh.n_sats % sh.planes != 0 {
+                        bail!(
+                            "shell {idx}: {} satellites not divisible into {} planes",
+                            sh.n_sats,
+                            sh.planes
+                        );
+                    }
+                }
+            }
+            ConstellationSpec::PlanetLabsLike { .. } => {}
         }
         let k = self.constellation.n_sats();
         for w in &self.downtime {
@@ -227,11 +298,23 @@ impl Scenario {
             "sparse-single-gs",
             "polar-iridium-66",
             "dove-dropout",
+            "walker-starlink-4408",
+            "kuiper-3236",
         ]
     }
 
     /// Look up one built-in scenario by name.
     pub fn builtin(name: &str) -> Option<Scenario> {
+        /// Shorthand for the mega-fleet shell tables below.
+        fn shell(
+            n_sats: usize,
+            planes: usize,
+            phasing: usize,
+            alt_km: f64,
+            inc_deg: f64,
+        ) -> ShellSpec {
+            ShellSpec { n_sats, planes, phasing, alt_km, inc_deg }
+        }
         let sc = match name {
             "paper-fig7" => Scenario {
                 name: "paper-fig7".into(),
@@ -305,6 +388,42 @@ impl Scenario {
                 fedbuff_m: 16,
                 ..Default::default()
             },
+            "walker-starlink-4408" => Scenario {
+                name: "walker-starlink-4408".into(),
+                summary: "Starlink Gen1 as filed: 5 Walker-delta shells, 4408 satellites, \
+                          2 days — only feasible in the streamed engine"
+                    .into(),
+                constellation: ConstellationSpec::Shells {
+                    shells: vec![
+                        shell(1584, 72, 17, 550.0, 53.0),
+                        shell(1584, 72, 17, 540.0, 53.2),
+                        shell(720, 36, 11, 570.0, 70.0),
+                        shell(348, 6, 5, 560.0, 97.6),
+                        shell(172, 4, 3, 560.0, 97.6),
+                    ],
+                },
+                n_steps: 192,
+                algorithms: vec![AlgorithmKind::Async, AlgorithmKind::FedBuff],
+                engine_mode: EngineMode::Streamed,
+                ..Default::default()
+            },
+            "kuiper-3236" => Scenario {
+                name: "kuiper-3236".into(),
+                summary: "Project Kuiper as filed: 3 Walker-delta shells, 3236 satellites, \
+                          2 days — only feasible in the streamed engine"
+                    .into(),
+                constellation: ConstellationSpec::Shells {
+                    shells: vec![
+                        shell(1156, 34, 7, 630.0, 51.9),
+                        shell(1296, 36, 9, 610.0, 42.0),
+                        shell(784, 28, 5, 590.0, 33.0),
+                    ],
+                },
+                n_steps: 192,
+                algorithms: vec![AlgorithmKind::FedBuff],
+                engine_mode: EngineMode::Streamed,
+                ..Default::default()
+            },
             "dove-dropout" => Scenario {
                 name: "dove-dropout".into(),
                 summary: "paper fleet with mid-run failures: 4 satellites go dark on day 2, \
@@ -353,6 +472,16 @@ impl Scenario {
                 let _ = writeln!(s, "alt_km = {alt_km}");
                 let _ = writeln!(s, "inc_deg = {inc_deg}");
             }
+            ConstellationSpec::Shells { shells } => {
+                let col = |f: &dyn Fn(&ShellSpec) -> String| -> String {
+                    shells.iter().map(f).collect::<Vec<_>>().join(", ")
+                };
+                let _ = writeln!(s, "n_sats = [{}]", col(&|sh| sh.n_sats.to_string()));
+                let _ = writeln!(s, "planes = [{}]", col(&|sh| sh.planes.to_string()));
+                let _ = writeln!(s, "phasing = [{}]", col(&|sh| sh.phasing.to_string()));
+                let _ = writeln!(s, "alt_km = [{}]", col(&|sh| sh.alt_km.to_string()));
+                let _ = writeln!(s, "inc_deg = [{}]", col(&|sh| sh.inc_deg.to_string()));
+            }
         }
         let _ = writeln!(s, "\n[stations]");
         let _ = writeln!(s, "network = \"{}\"", self.stations.name());
@@ -360,6 +489,7 @@ impl Scenario {
         let _ = writeln!(s, "t0_s = {}", self.t0_s);
         let _ = writeln!(s, "n_steps = {}", self.n_steps);
         let _ = writeln!(s, "min_elev_deg = {}", self.min_elev_deg);
+        let _ = writeln!(s, "chunk = {}", self.chunk_len);
         let _ = writeln!(s, "\n[fl]");
         let algs: Vec<String> =
             self.algorithms.iter().map(|a| format!("\"{}\"", a.name())).collect();
@@ -461,6 +591,57 @@ impl Scenario {
                 inc_deg: get_f64(doc, "constellation", "inc_deg")?
                     .context("[constellation] walker needs inc_deg")?,
             },
+            "walker-shells" => {
+                fn arr<'a>(doc: &'a TomlDoc, key: &str) -> Result<&'a [TomlValue]> {
+                    match doc.get("constellation").and_then(|s| s.get(key)) {
+                        Some(TomlValue::Array(items)) => Ok(items),
+                        Some(_) => bail!("[constellation] {key} must be an array"),
+                        None => bail!("[constellation] walker-shells needs a {key} array"),
+                    }
+                }
+                fn usize_arr(doc: &TomlDoc, key: &str) -> Result<Vec<usize>> {
+                    arr(doc, key)?
+                        .iter()
+                        .map(|it| {
+                            let i = it
+                                .as_int()
+                                .with_context(|| format!("[constellation] {key}: integers"))?;
+                            Ok(usize::try_from(i)?)
+                        })
+                        .collect()
+                }
+                fn f64_arr(doc: &TomlDoc, key: &str) -> Result<Vec<f64>> {
+                    arr(doc, key)?
+                        .iter()
+                        .map(|it| {
+                            it.as_float()
+                                .with_context(|| format!("[constellation] {key}: numbers"))
+                        })
+                        .collect()
+                }
+                let n_sats = usize_arr(doc, "n_sats")?;
+                let planes = usize_arr(doc, "planes")?;
+                let phasing = usize_arr(doc, "phasing")?;
+                let alt_km = f64_arr(doc, "alt_km")?;
+                let inc_deg = f64_arr(doc, "inc_deg")?;
+                let n = n_sats.len();
+                if [planes.len(), phasing.len(), alt_km.len(), inc_deg.len()]
+                    .iter()
+                    .any(|&l| l != n)
+                {
+                    bail!("[constellation] walker-shells parallel arrays disagree in length");
+                }
+                let shells = (0..n)
+                    .map(|i| ShellSpec {
+                        n_sats: n_sats[i],
+                        planes: planes[i],
+                        phasing: phasing[i],
+                        alt_km: alt_km[i],
+                        inc_deg: inc_deg[i],
+                    })
+                    .collect();
+                ConstellationSpec::Shells { shells }
+            }
             other => bail!("unknown constellation kind {other:?}"),
         };
 
@@ -475,6 +656,9 @@ impl Scenario {
         }
         if let Some(v) = get_f64(doc, "connectivity", "min_elev_deg")? {
             sc.min_elev_deg = v;
+        }
+        if let Some(v) = get_usize(doc, "connectivity", "chunk")? {
+            sc.chunk_len = v;
         }
         if let Some(v) = get(doc, "fl", "algorithms") {
             let TomlValue::Array(items) = v else {
@@ -538,9 +722,10 @@ impl Scenario {
         self.constellation.build().with_downtime(self.downtime.clone())
     }
 
-    /// Build constellation + connectivity schedule, downtime applied — the
-    /// one deterministic C every algorithm in the grid shares.
-    pub fn build_schedule(&self) -> (Constellation, ConnectivitySchedule) {
+    /// Constellation (downtime attached) + station network + link params —
+    /// the one place a scenario's connectivity inputs are interpreted, so
+    /// the dense and streamed materializations can never diverge on them.
+    fn connectivity_inputs(&self) -> (Constellation, Vec<GroundStation>, ConnectivityParams) {
         let constellation = self.build_constellation();
         let stations = self.stations.build();
         let params = ConnectivityParams {
@@ -548,16 +733,39 @@ impl Scenario {
             min_elev_deg: self.min_elev_deg,
             ..Default::default()
         };
+        (constellation, stations, params)
+    }
+
+    /// Build constellation + connectivity schedule, downtime applied — the
+    /// one deterministic C every algorithm in the grid shares.
+    pub fn build_schedule(&self) -> (Constellation, ConnectivitySchedule) {
+        let (constellation, stations, params) = self.connectivity_inputs();
         let sched = ConnectivitySchedule::compute(&constellation, &stations, self.n_steps, params);
         let sched = sched.with_downtime(&constellation.downtime);
         (constellation, sched)
+    }
+
+    /// Build constellation + chunked connectivity stream — the streamed-
+    /// engine counterpart of [`Self::build_schedule`]. Downtime windows are
+    /// applied per chunk inside the stream, so chunks concatenate to
+    /// exactly what `build_schedule` would materialize.
+    pub fn build_stream(&self) -> (Constellation, ConnectivityStream) {
+        let (constellation, stations, params) = self.connectivity_inputs();
+        let stream = ConnectivityStream::new(
+            &constellation,
+            &stations,
+            self.n_steps,
+            params,
+            self.chunk_len,
+        );
+        (constellation, stream)
     }
 
     /// Experiment configuration for one algorithm of the grid.
     pub fn experiment_config(&self, algorithm: AlgorithmKind) -> ExperimentConfig {
         let seed = match &self.constellation {
             ConstellationSpec::PlanetLabsLike { seed, .. } => *seed,
-            ConstellationSpec::Walker { .. } => 0,
+            ConstellationSpec::Walker { .. } | ConstellationSpec::Shells { .. } => 0,
         };
         ExperimentConfig {
             n_sats: self.constellation.n_sats(),
@@ -604,6 +812,37 @@ impl Scenario {
                         alt_km,
                         inc_deg,
                     }
+                }
+                ConstellationSpec::Shells { shells } => {
+                    // distribute k proportionally over the shells (each
+                    // keeps ≥ 1 satellite), then absorb rounding drift into
+                    // the largest shell; collapse to one shell when k is
+                    // smaller than the shell count
+                    let total: usize = shells.iter().map(|s| s.n_sats).sum::<usize>().max(1);
+                    let mut scaled: Vec<ShellSpec> = shells
+                        .iter()
+                        .map(|sh| ShellSpec { n_sats: (sh.n_sats * k / total).max(1), ..*sh })
+                        .collect();
+                    let sum: usize = scaled.iter().map(|s| s.n_sats).sum();
+                    let largest = scaled
+                        .iter()
+                        .enumerate()
+                        .max_by_key(|(_, s)| s.n_sats)
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    let adjusted = scaled[largest].n_sats as i64 + k as i64 - sum as i64;
+                    if adjusted >= 1 {
+                        scaled[largest].n_sats = adjusted as usize;
+                    } else {
+                        scaled = vec![ShellSpec { n_sats: k, ..shells[0] }];
+                    }
+                    // restore per-shell plane divisibility
+                    for sh in &mut scaled {
+                        if sh.planes == 0 || sh.n_sats % sh.planes != 0 {
+                            sh.planes = 1;
+                        }
+                    }
+                    ConstellationSpec::Shells { shells: scaled }
                 }
             };
         }
@@ -673,13 +912,71 @@ mod tests {
         assert!(shells.contains(&"planet-labs".to_string()));
         assert!(shells.contains(&"walker-delta".to_string()));
         assert!(shells.contains(&"walker-star".to_string()));
+        assert!(shells.contains(&"walker-shells".to_string()));
         assert!(Scenario::builtins().iter().any(|sc| !sc.downtime.is_empty()));
         assert!(Scenario::builtins()
             .iter()
             .any(|sc| sc.engine_mode == EngineMode::ContactList));
         assert!(Scenario::builtins()
             .iter()
+            .any(|sc| sc.engine_mode == EngineMode::Streamed));
+        assert!(Scenario::builtins()
+            .iter()
             .any(|sc| sc.stations == StationNetwork::SingleSvalbard));
+    }
+
+    #[test]
+    fn mega_builtins_match_the_filed_counts() {
+        let sl = Scenario::builtin("walker-starlink-4408").unwrap();
+        assert_eq!(sl.constellation.n_sats(), 4408);
+        assert_eq!(sl.engine_mode, EngineMode::Streamed);
+        let ConstellationSpec::Shells { shells } = &sl.constellation else {
+            panic!("starlink-4408 should be a shell stack");
+        };
+        assert_eq!(shells.len(), 5);
+        let ku = Scenario::builtin("kuiper-3236").unwrap();
+        assert_eq!(ku.constellation.n_sats(), 3236);
+        assert_eq!(ku.engine_mode, EngineMode::Streamed);
+        // orbits materialize with per-shell altitudes, in id order
+        let c = ku.build_constellation();
+        assert_eq!(c.len(), 3236);
+        let alt0 = c.orbits[0].a;
+        let alt_last = c.orbits[3235].a;
+        assert!(alt0 > alt_last, "first shell files higher than the last");
+    }
+
+    #[test]
+    fn scaled_shells_keep_total_and_divisibility() {
+        for k in [3usize, 12, 100, 441] {
+            let sc = Scenario::builtin("walker-starlink-4408").unwrap().scaled(Some(k), Some(48));
+            assert_eq!(sc.constellation.n_sats(), k, "k={k}");
+            sc.validate().unwrap();
+        }
+        // unscaled leaves the filed shells untouched
+        let same = Scenario::builtin("walker-starlink-4408").unwrap().scaled(None, Some(96));
+        assert_eq!(same.constellation.n_sats(), 4408);
+        assert_eq!(same.n_steps, 96);
+    }
+
+    #[test]
+    fn build_stream_matches_build_schedule_on_small_fleet() {
+        let sc = Scenario::builtin("dove-dropout").unwrap().scaled(Some(16), Some(48));
+        let (_, sched) = sc.build_schedule();
+        let (_, stream) = sc.build_stream();
+        assert_eq!(stream.n_sats(), 16);
+        assert_eq!(stream.n_steps(), 48);
+        let collected = stream.collect_dense();
+        assert_eq!(collected.sets, sched.sets, "stream must concatenate to the dense schedule");
+    }
+
+    #[test]
+    fn chunk_len_round_trips_and_rejects_zero() {
+        let mut sc = Scenario::builtin("paper-fig7").unwrap();
+        sc.chunk_len = 17;
+        let back = Scenario::from_toml_text(&sc.to_toml()).unwrap();
+        assert_eq!(back.chunk_len, 17);
+        sc.chunk_len = 0;
+        assert!(sc.validate().is_err());
     }
 
     #[test]
@@ -709,6 +1006,23 @@ mod tests {
         // mismatched downtime arrays
         assert!(Scenario::from_toml_text(
             "[scenario]\nname = \"x\"\n[downtime]\nsats = [1, 2]\nfrom = [0]\nuntil = [5]"
+        )
+        .is_err());
+        // mismatched / missing shell arrays
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[constellation]\nkind = \"walker-shells\"\n\
+             n_sats = [10, 20]\nplanes = [2]\nphasing = [1, 1]\nalt_km = [550.0, 540.0]\n\
+             inc_deg = [53.0, 53.0]"
+        )
+        .is_err());
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[constellation]\nkind = \"walker-shells\"\nn_sats = [10]"
+        )
+        .is_err());
+        // indivisible shell planes
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[constellation]\nkind = \"walker-shells\"\n\
+             n_sats = [10]\nplanes = [3]\nphasing = [1]\nalt_km = [550.0]\ninc_deg = [53.0]"
         )
         .is_err());
         // downtime out of fleet range

@@ -5,9 +5,18 @@
 //! during the window [i·T0, (i+1)·T0). Because orbits and Earth rotation are
 //! deterministic, the whole schedule C = {C_0, C_1, ...} is computable ahead
 //! of time — the key property FedSpace exploits (§3.1).
+//!
+//! Two materializations of the same relation: [`ConnectivitySchedule`]
+//! computes the whole horizon at once (the paper-scale default), while
+//! [`ConnectivityStream`] yields it in fixed-size, recyclable time-chunks
+//! so mega-constellation horizons never reside in memory at once
+//! (ADR-0004). Planning code is written against the [`StepView`] trait and
+//! works over either.
 
 pub mod schedule;
 pub mod stats;
+pub mod stream;
 
-pub use schedule::{ConnectivityParams, ConnectivitySchedule};
+pub use schedule::{ConnectivityParams, ConnectivitySchedule, StepView};
 pub use stats::{contacts_per_day, set_sizes, ConnectivityStats};
+pub use stream::{ConnectivityStream, ScheduleChunk, StreamCursor, WindowView};

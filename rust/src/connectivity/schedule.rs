@@ -28,6 +28,30 @@ use crate::orbit::{
 };
 use std::sync::Arc;
 
+/// Read-only per-step view of a connectivity relation — the subset of
+/// [`ConnectivitySchedule`]'s surface the forecast/search pipeline needs.
+///
+/// Implemented by the fully materialized [`ConnectivitySchedule`] and by
+/// [`crate::connectivity::WindowView`], a planning window materialized on
+/// demand from a [`crate::connectivity::ConnectivityStream`] — so the
+/// FedSpace planner never requires the whole horizon in memory.
+///
+/// `Sync` is a supertrait because candidate scoring shares one view across
+/// the search workers ([`crate::exec::scope_chunks`]).
+pub trait StepView: Sync {
+    /// Number of satellites the relation covers (ids `0..n_sats`).
+    fn n_sats(&self) -> usize;
+    /// Total number of time steps of the underlying horizon (not of the
+    /// materialized slice — forecast end-clamping needs the global value).
+    fn n_steps(&self) -> usize;
+    /// Satellites connected at absolute time index `i`, ascending.
+    ///
+    /// Implementations may cover only a sub-range of `0..n_steps()` and
+    /// panic outside it (the window views do); callers stay within the
+    /// range they materialized.
+    fn sats_at(&self, i: usize) -> &[usize];
+}
+
 /// Parameters of the link model (paper §2.2 / §4.1 defaults).
 #[derive(Clone, Debug)]
 pub struct ConnectivityParams {
@@ -106,7 +130,8 @@ impl ConnectivitySchedule {
         let spw = params.samples_per_window;
         let sin_min = params.min_elev_deg.to_radians().sin();
         let frames: Arc<Vec<StationFrame>> = Arc::new(station_frames(stations));
-        let rots: Arc<Vec<SampleRot>> = Arc::new(sample_rotations(n_steps, spw, params.t0_s));
+        let rots: Arc<Vec<SampleRot>> =
+            Arc::new(sample_rotations_range(0, n_steps, spw, params.t0_s));
         let bases: Vec<OrbitBasis> = constellation.orbits.iter().map(|o| o.basis()).collect();
 
         let pool = exec::global_pool();
@@ -114,12 +139,12 @@ impl ConnectivitySchedule {
             let frames = Arc::clone(&frames);
             let rots = Arc::clone(&rots);
             pool.scope_map(bases, move |basis| {
-                sat_contacts(&basis, &frames, &rots, n_steps, spw, sin_min, need)
+                sat_contacts(&basis, &frames, &rots, 0, n_steps, spw, sin_min, need)
             })
         } else {
             bases
                 .iter()
-                .map(|basis| sat_contacts(basis, &frames, &rots, n_steps, spw, sin_min, need))
+                .map(|basis| sat_contacts(basis, &frames, &rots, 0, n_steps, spw, sin_min, need))
                 .collect()
         };
 
@@ -181,8 +206,9 @@ impl ConnectivitySchedule {
 
     /// [`Self::from_sets`] keeping the given link-model parameters — used by
     /// the derived-schedule constructors (`with_dropout`, `with_downtime`)
-    /// so the documented `params` field stays authoritative for them.
-    fn from_sets_with_params(
+    /// and by [`crate::connectivity::ConnectivityStream::collect_dense`] so
+    /// the documented `params` field stays authoritative for them.
+    pub(crate) fn from_sets_with_params(
         sets: Vec<Vec<usize>>,
         n_sats: usize,
         params: ConnectivityParams,
@@ -325,38 +351,80 @@ impl ConnectivitySchedule {
     }
 }
 
+impl StepView for ConnectivitySchedule {
+    fn n_sats(&self) -> usize {
+        self.n_sats
+    }
+
+    fn n_steps(&self) -> usize {
+        ConnectivitySchedule::n_steps(self)
+    }
+
+    fn sats_at(&self, i: usize) -> &[usize] {
+        ConnectivitySchedule::sats_at(self, i)
+    }
+}
+
 /// Minimum feasible sub-samples for a window to count as connected.
-fn feasible_need(params: &ConnectivityParams) -> usize {
+pub(crate) fn feasible_need(params: &ConnectivityParams) -> usize {
     let need = ((params.samples_per_window as f64) * params.min_feasible_frac).ceil() as usize;
     need.max(1)
 }
 
 /// One sub-sample timestamp with its hoisted GMST rotation (t, sin θ, cos θ).
-type SampleRot = (f64, f64, f64);
+pub(crate) type SampleRot = (f64, f64, f64);
 
-/// The sample timetable: entry `i * samples_per_window + s` covers step i's
-/// s-th sub-sample. Shared across all satellites and stations.
-fn sample_rotations(n_steps: usize, samples_per_window: usize, t0_s: f64) -> Vec<SampleRot> {
-    let mut rots = Vec::with_capacity(n_steps * samples_per_window);
-    for i in 0..n_steps {
+/// Append the sample timetable of steps `step0..step0 + len` to `out`:
+/// entry `(i - step0) * samples_per_window + s` covers absolute step i's
+/// s-th sub-sample. Timestamps are derived from the *absolute* step index,
+/// so a chunked computation ([`crate::connectivity::ConnectivityStream`])
+/// samples the identical instants as the all-at-once [`sample_rotations_range`]
+/// over the whole horizon — the chunk-concatenation bit-identity tests rely
+/// on this. Shared across all satellites and stations.
+pub(crate) fn sample_rotations_into(
+    out: &mut Vec<SampleRot>,
+    step0: usize,
+    len: usize,
+    samples_per_window: usize,
+    t0_s: f64,
+) {
+    out.clear();
+    out.reserve(len * samples_per_window);
+    for i in step0..step0 + len {
         let t_start = i as f64 * t0_s;
         for s in 0..samples_per_window {
             let t = t_start + t0_s * (s as f64 + 0.5) / samples_per_window as f64;
             let (sin_t, cos_t) = crate::orbit::gmst_rad(t).sin_cos();
-            rots.push((t, sin_t, cos_t));
+            out.push((t, sin_t, cos_t));
         }
     }
+}
+
+/// Allocating form of [`sample_rotations_into`].
+pub(crate) fn sample_rotations_range(
+    step0: usize,
+    len: usize,
+    samples_per_window: usize,
+    t0_s: f64,
+) -> Vec<SampleRot> {
+    let mut rots = Vec::new();
+    sample_rotations_into(&mut rots, step0, len, samples_per_window, t0_s);
     rots
 }
 
-/// Connected step indexes of one satellite — the per-satellite unit of work
-/// of the parallel outer loop. Mirrors the reference sampling semantics
+/// Connected step indexes (absolute, ascending) of one satellite over steps
+/// `step0..step0 + len` — the per-satellite unit of work of the parallel
+/// outer loop, for both the all-at-once compute (`step0 = 0`) and the
+/// chunked stream. `rots` must cover exactly that step range (built by
+/// [`sample_rotations_into`]). Mirrors the reference sampling semantics
 /// exactly (any station suffices per sample; early exit at `need`).
-fn sat_contacts(
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sat_contacts(
     basis: &OrbitBasis,
     frames: &[StationFrame],
     rots: &[SampleRot],
-    n_steps: usize,
+    step0: usize,
+    len: usize,
     samples_per_window: usize,
     sin_min: f64,
     need: usize,
@@ -369,10 +437,10 @@ fn sat_contacts(
     // and therefore never changes the outcome.
     let prefilter = sin_min > 0.0;
     let mut out = Vec::new();
-    for i in 0..n_steps {
+    for l in 0..len {
         let mut feasible = 0usize;
         'window: for s in 0..samples_per_window {
-            let (t, sin_t, cos_t) = rots[i * samples_per_window + s];
+            let (t, sin_t, cos_t) = rots[l * samples_per_window + s];
             let p = basis.position_eci(t);
             let e = crate::orbit::eci_to_ecef_rot(&p, sin_t, cos_t);
             for f in frames {
@@ -389,7 +457,7 @@ fn sat_contacts(
             }
         }
         if feasible >= need {
-            out.push(i);
+            out.push(step0 + l);
         }
     }
     out

@@ -1,0 +1,554 @@
+//! Windowed, streaming computation of the connectivity schedule — the
+//! memory model that makes mega-constellation scenarios first-class
+//! (ADR-0004 in docs/ADRs.md).
+//!
+//! [`ConnectivitySchedule::compute`] materializes the whole `sats × slots`
+//! relation before the first engine step runs: fine for the paper's
+//! 191-satellite fleet, a wall for Starlink/Kuiper-class fleets over
+//! multi-week horizons (both the precompute latency and the
+//! O(sats × horizon) resident sets/contacts/bitset). A
+//! [`ConnectivityStream`] instead yields fixed-size time-chunks of the same
+//! bitset representation, computed on demand:
+//!
+//! - each [`ScheduleChunk`] covers `chunk_len` consecutive steps and is
+//!   **recyclable** — [`ConnectivityStream::fill_chunk`] reuses the chunk's
+//!   buffers, so a whole-horizon walk allocates O(sats × chunk_len) once;
+//! - the per-chunk satellite work is sharded across worker threads via
+//!   [`crate::exec::scope_chunks`] (the same substrate the parallel
+//!   scheduler search uses), borrowing the stream's frames/bases zero-copy;
+//! - downtime windows and link parameters are applied *per chunk*, so a
+//!   chunk landing exactly on an outage boundary filters identically to the
+//!   dense [`ConnectivitySchedule::with_downtime`] post-pass (property-
+//!   tested in `tests/properties.rs`).
+//!
+//! Chunks concatenated over the horizon are **bit-identical** to the dense
+//! compute + downtime pipeline: both paths run the same
+//! `sample_rotations_into`/`sat_contacts` helpers with absolute step
+//! indexes, so every floating-point input and operation matches.
+//!
+//! [`StreamCursor`] is the walking companion the streamed engine mode
+//! (`EngineMode::Streamed`) drives: monotone `seek`, a chunk-boundary-safe
+//! [`ScheduleChunk::active_steps`] view in absolute indexes, and
+//! [`StreamCursor::window`] to materialize a FedSpace planning window
+//! ([`WindowView`]) that spans chunk boundaries without materializing the
+//! horizon.
+
+use super::schedule::{
+    feasible_need, sample_rotations_into, sat_contacts, ConnectivityParams, ConnectivitySchedule,
+    SampleRot, StepView,
+};
+use crate::exec;
+use crate::orbit::{station_frames, Constellation, GroundStation, OrbitBasis, StationFrame};
+
+/// On-demand, chunked generator of the deterministic schedule C.
+///
+/// Holds only O(sats + stations) state (orbit bases, station frames, link
+/// params, per-satellite downtime); the O(sats × chunk) working set lives
+/// in caller-owned [`ScheduleChunk`]s.
+pub struct ConnectivityStream {
+    bases: Vec<OrbitBasis>,
+    frames: Vec<StationFrame>,
+    params: ConnectivityParams,
+    n_steps: usize,
+    chunk_len: usize,
+    /// Downtime windows indexed by satellite: `(from_step, until_step)`,
+    /// half-open, applied while assembling every chunk.
+    down_by_sat: Vec<Vec<(usize, usize)>>,
+}
+
+impl ConnectivityStream {
+    /// Default chunk length: one simulated day at T0 = 15 min.
+    pub const DEFAULT_CHUNK_LEN: usize = 96;
+
+    /// Build a stream over a constellation and station network.
+    ///
+    /// The constellation's [`crate::orbit::DowntimeWindow`]s are baked in:
+    /// every chunk comes out with outages already removed, mirroring the
+    /// dense `compute(..)` + `with_downtime(..)` pipeline.
+    pub fn new(
+        constellation: &Constellation,
+        stations: &[GroundStation],
+        n_steps: usize,
+        params: ConnectivityParams,
+        chunk_len: usize,
+    ) -> Self {
+        assert!(chunk_len > 0, "chunk_len must be > 0");
+        let mut down_by_sat = vec![Vec::new(); constellation.len()];
+        for w in &constellation.downtime {
+            down_by_sat[w.sat].push((w.from_step, w.until_step));
+        }
+        ConnectivityStream {
+            bases: constellation.orbits.iter().map(|o| o.basis()).collect(),
+            frames: station_frames(stations),
+            params,
+            n_steps,
+            chunk_len,
+            down_by_sat,
+        }
+    }
+
+    /// Number of satellites the stream covers.
+    pub fn n_sats(&self) -> usize {
+        self.bases.len()
+    }
+
+    /// Total time indexes of the horizon.
+    pub fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    /// Steps per chunk (the final chunk may be shorter).
+    pub fn chunk_len(&self) -> usize {
+        self.chunk_len
+    }
+
+    /// Link-model parameters the stream computes with.
+    pub fn params(&self) -> &ConnectivityParams {
+        &self.params
+    }
+
+    /// Number of chunks covering the horizon.
+    pub fn n_chunks(&self) -> usize {
+        self.n_steps.div_ceil(self.chunk_len)
+    }
+
+    /// Chunk index covering absolute step `i`.
+    pub fn chunk_of(&self, i: usize) -> usize {
+        i / self.chunk_len
+    }
+
+    /// `[start, end)` step range of chunk `c`.
+    pub fn chunk_bounds(&self, c: usize) -> (usize, usize) {
+        let start = c * self.chunk_len;
+        (start, (start + self.chunk_len).min(self.n_steps))
+    }
+
+    /// Compute chunk `c` into a fresh [`ScheduleChunk`].
+    pub fn chunk(&self, c: usize) -> ScheduleChunk {
+        let mut out = ScheduleChunk::default();
+        self.fill_chunk(c, &mut out);
+        out
+    }
+
+    /// Compute chunk `c` in place, recycling `out`'s buffers.
+    ///
+    /// The satellite loop is sharded across worker threads
+    /// ([`exec::scope_chunks`], sized by [`exec::default_parallelism`]);
+    /// per-satellite results are collected in input order, so the chunk is
+    /// identical at any thread count (ADR-0002).
+    pub fn fill_chunk(&self, c: usize, out: &mut ScheduleChunk) {
+        let (start, end) = self.chunk_bounds(c);
+        assert!(start < end || self.n_steps == 0, "chunk {c} out of range");
+        let len = end - start;
+        let spw = self.params.samples_per_window;
+        let sin_min = self.params.min_elev_deg.to_radians().sin();
+        let need = feasible_need(&self.params);
+        sample_rotations_into(&mut out.rots, start, len, spw, self.params.t0_s);
+        let rots = &out.rots;
+        let threads = exec::default_parallelism();
+        let per_sat: Vec<Vec<usize>> = exec::scope_chunks(&self.bases, threads, |k0, shard| {
+            shard
+                .iter()
+                .enumerate()
+                .map(|(j, basis)| {
+                    let k = k0 + j;
+                    let mut cs =
+                        sat_contacts(basis, &self.frames, rots, start, len, spw, sin_min, need);
+                    let down = &self.down_by_sat[k];
+                    if !down.is_empty() {
+                        cs.retain(|&i| {
+                            !down.iter().any(|&(from, until)| (from..until).contains(&i))
+                        });
+                    }
+                    cs
+                })
+                .collect()
+        });
+        out.reset(start, len, self.n_sats());
+        for (k, cs) in per_sat.iter().enumerate() {
+            for &i in cs {
+                out.push_contact(k, i);
+            }
+        }
+        out.finish();
+    }
+
+    /// Materialize the whole horizon as a dense [`ConnectivitySchedule`]
+    /// by concatenating chunks — the correctness bridge used by tests and
+    /// small scenarios (defeats the memory bound; prefer the cursor walk).
+    pub fn collect_dense(&self) -> ConnectivitySchedule {
+        let mut sets: Vec<Vec<usize>> = Vec::with_capacity(self.n_steps);
+        let mut chunk = ScheduleChunk::default();
+        for c in 0..self.n_chunks() {
+            self.fill_chunk(c, &mut chunk);
+            for i in chunk.start()..chunk.end() {
+                sets.push(chunk.sats_at(i).to_vec());
+            }
+        }
+        ConnectivitySchedule::from_sets_with_params(sets, self.n_sats(), self.params.clone())
+    }
+}
+
+/// One computed time-chunk of the schedule: `len` consecutive steps with
+/// the same dual representation as [`ConnectivitySchedule`] (sorted
+/// per-step sets + packed per-step bitset), addressed by **absolute** step
+/// index, plus the chunk-local event list for the streamed engine walk.
+///
+/// Reusable: [`ConnectivityStream::fill_chunk`] recycles all buffers.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleChunk {
+    start: usize,
+    len: usize,
+    n_sats: usize,
+    words_per_step: usize,
+    /// sets[l] = sorted satellite ids connected at absolute step start + l.
+    sets: Vec<Vec<usize>>,
+    /// Packed connectivity: bit k of local step l lives at
+    /// bits[l * words_per_step + k/64] >> (k % 64).
+    bits: Vec<u64>,
+    /// Absolute step indexes inside the chunk with ≥ 1 contact, ascending —
+    /// the chunk-boundary-safe `active_steps` view.
+    active: Vec<usize>,
+    /// Recycled sub-sample rotation table scratch.
+    rots: Vec<SampleRot>,
+}
+
+impl ScheduleChunk {
+    /// First absolute step the chunk covers (inclusive).
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// One past the last absolute step the chunk covers (exclusive).
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+
+    /// Number of steps in the chunk.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True iff the chunk covers no steps.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Does the chunk cover absolute step `i`?
+    pub fn contains(&self, i: usize) -> bool {
+        (self.start..self.end()).contains(&i)
+    }
+
+    /// Satellites connected at absolute step `i`, ascending (zero-copy).
+    pub fn sats_at(&self, i: usize) -> &[usize] {
+        assert!(self.contains(i), "step {i} outside chunk [{}, {})", self.start, self.end());
+        &self.sets[i - self.start]
+    }
+
+    /// Is satellite `k` connected at absolute step `i`? O(1) via the bitset.
+    pub fn connected(&self, k: usize, i: usize) -> bool {
+        if k >= self.n_sats || !self.contains(i) {
+            return false;
+        }
+        let l = i - self.start;
+        (self.bits[l * self.words_per_step + k / 64] >> (k % 64)) & 1 == 1
+    }
+
+    /// Packed connectivity words of absolute step `i` (bit k = satellite k).
+    pub fn step_words(&self, i: usize) -> &[u64] {
+        assert!(self.contains(i), "step {i} outside chunk [{}, {})", self.start, self.end());
+        let base = (i - self.start) * self.words_per_step;
+        &self.bits[base..base + self.words_per_step]
+    }
+
+    /// Absolute step indexes with at least one contact, ascending — safe to
+    /// concatenate across chunk boundaries because indexes are absolute
+    /// (the streamed engine's event list).
+    pub fn active_steps(&self) -> &[usize] {
+        &self.active
+    }
+
+    /// Start a new fill, recycling buffers.
+    fn reset(&mut self, start: usize, len: usize, n_sats: usize) {
+        self.start = start;
+        self.len = len;
+        self.n_sats = n_sats;
+        self.words_per_step = n_sats.div_ceil(64);
+        if self.sets.len() > len {
+            self.sets.truncate(len);
+        }
+        for set in &mut self.sets {
+            set.clear();
+        }
+        self.sets.resize_with(len, Vec::new);
+        self.bits.clear();
+        self.bits.resize(len * self.words_per_step, 0);
+        self.active.clear();
+    }
+
+    /// Record a contact; callers push in ascending (k, i) order so each
+    /// per-step set stays sorted.
+    fn push_contact(&mut self, k: usize, i: usize) {
+        debug_assert!(self.contains(i) && k < self.n_sats);
+        let l = i - self.start;
+        self.sets[l].push(k);
+        self.bits[l * self.words_per_step + k / 64] |= 1u64 << (k % 64);
+    }
+
+    /// Derive the event list after all contacts are pushed.
+    fn finish(&mut self) {
+        self.active.clear();
+        for (l, set) in self.sets.iter().enumerate() {
+            if !set.is_empty() {
+                self.active.push(self.start + l);
+            }
+        }
+    }
+}
+
+/// A FedSpace planning window materialized from a stream: the per-step
+/// contact sets of `[start, start + len)` in absolute indexing, plus the
+/// global horizon length so forecast end-clamping matches the dense path
+/// exactly. This is what `sched::forecast`/`sched::search` see instead of
+/// the whole schedule.
+#[derive(Clone, Debug)]
+pub struct WindowView {
+    start: usize,
+    n_steps_total: usize,
+    n_sats: usize,
+    sets: Vec<Vec<usize>>,
+}
+
+impl WindowView {
+    /// First absolute step of the window.
+    pub fn start(&self) -> usize {
+        self.start
+    }
+
+    /// Number of materialized steps.
+    pub fn len(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// True iff the window covers no steps.
+    pub fn is_empty(&self) -> bool {
+        self.sets.is_empty()
+    }
+}
+
+impl StepView for WindowView {
+    fn n_sats(&self) -> usize {
+        self.n_sats
+    }
+
+    fn n_steps(&self) -> usize {
+        self.n_steps_total
+    }
+
+    fn sats_at(&self, i: usize) -> &[usize] {
+        &self.sets[i - self.start]
+    }
+}
+
+/// Monotone walking state over a [`ConnectivityStream`]: the current chunk
+/// plus one spare, both recycled in place, so a whole-horizon walk holds
+/// at most two chunks — peak schedule memory O(sats × chunk_len) instead
+/// of O(sats × horizon).
+pub struct StreamCursor<'a> {
+    stream: &'a ConnectivityStream,
+    current: ScheduleChunk,
+    current_idx: Option<usize>,
+    spare: ScheduleChunk,
+    spare_idx: Option<usize>,
+}
+
+impl<'a> StreamCursor<'a> {
+    /// A cursor with no chunk loaded yet.
+    pub fn new(stream: &'a ConnectivityStream) -> Self {
+        StreamCursor {
+            stream,
+            current: ScheduleChunk::default(),
+            current_idx: None,
+            spare: ScheduleChunk::default(),
+            spare_idx: None,
+        }
+    }
+
+    /// Make the current chunk cover absolute step `i`, computing it if
+    /// needed (or swapping in the spare when a window materialization
+    /// already computed it).
+    pub fn seek(&mut self, i: usize) {
+        assert!(i < self.stream.n_steps(), "seek past the horizon");
+        let c = self.stream.chunk_of(i);
+        if self.current_idx == Some(c) {
+            return;
+        }
+        if self.spare_idx == Some(c) {
+            std::mem::swap(&mut self.current, &mut self.spare);
+            std::mem::swap(&mut self.current_idx, &mut self.spare_idx);
+            return;
+        }
+        self.stream.fill_chunk(c, &mut self.current);
+        self.current_idx = Some(c);
+    }
+
+    /// The chunk covering the last `seek` target.
+    pub fn chunk(&self) -> &ScheduleChunk {
+        assert!(self.current_idx.is_some(), "seek before reading the cursor");
+        &self.current
+    }
+
+    /// Materialize the planning window `[start, start + len)` (clamped to
+    /// the horizon) by copying per-step sets out of the covering chunks;
+    /// chunks beyond the current one are computed into the recycled spare.
+    /// The current chunk is left untouched, so `sats_at`/`active_steps`
+    /// views taken after this call still see the walk position.
+    pub fn window(&mut self, start: usize, len: usize) -> WindowView {
+        let end = (start + len).min(self.stream.n_steps());
+        let mut sets = Vec::with_capacity(end.saturating_sub(start));
+        for i in start..end {
+            let c = self.stream.chunk_of(i);
+            let set = if self.current_idx == Some(c) {
+                self.current.sats_at(i).to_vec()
+            } else {
+                if self.spare_idx != Some(c) {
+                    self.stream.fill_chunk(c, &mut self.spare);
+                    self.spare_idx = Some(c);
+                }
+                self.spare.sats_at(i).to_vec()
+            };
+            sets.push(set);
+        }
+        WindowView {
+            start,
+            n_steps_total: self.stream.n_steps(),
+            n_sats: self.stream.n_sats(),
+            sets,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::{planet_ground_stations, planet_labs_like, DowntimeWindow};
+
+    fn assert_stream_matches_dense(
+        constellation: &Constellation,
+        n_steps: usize,
+        chunk_len: usize,
+    ) {
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams::default();
+        let dense = ConnectivitySchedule::compute(constellation, &gs, n_steps, params.clone())
+            .with_downtime(&constellation.downtime);
+        let stream = ConnectivityStream::new(constellation, &gs, n_steps, params, chunk_len);
+        assert_eq!(stream.n_chunks(), n_steps.div_ceil(chunk_len));
+        let mut chunk = ScheduleChunk::default();
+        let mut all_active = Vec::new();
+        for c in 0..stream.n_chunks() {
+            stream.fill_chunk(c, &mut chunk);
+            let (start, end) = stream.chunk_bounds(c);
+            assert_eq!((chunk.start(), chunk.end()), (start, end));
+            for i in start..end {
+                assert_eq!(chunk.sats_at(i), dense.sats_at(i), "step {i} chunk_len {chunk_len}");
+                for k in 0..constellation.len() {
+                    assert_eq!(chunk.connected(k, i), dense.connected(k, i), "k={k} i={i}");
+                }
+            }
+            all_active.extend_from_slice(chunk.active_steps());
+        }
+        assert_eq!(all_active, dense.active_steps(), "chunk_len {chunk_len}");
+    }
+
+    #[test]
+    fn chunks_concatenate_to_dense_schedule() {
+        let c = planet_labs_like(20, 0);
+        for chunk_len in [1, 7, 48, 96, 200] {
+            assert_stream_matches_dense(&c, 96, chunk_len);
+        }
+    }
+
+    #[test]
+    fn downtime_on_chunk_edges_matches_dense_postpass() {
+        // outage boundaries exactly on chunk edges (from 24, until 48 with
+        // chunk_len 24) plus one straddling a boundary
+        let c = planet_labs_like(12, 1).with_downtime(vec![
+            DowntimeWindow { sat: 0, from_step: 24, until_step: 48 },
+            DowntimeWindow { sat: 3, from_step: 20, until_step: 25 },
+            DowntimeWindow { sat: 7, from_step: 0, until_step: 96 },
+        ]);
+        assert_stream_matches_dense(&c, 96, 24);
+    }
+
+    #[test]
+    fn collect_dense_equals_compute_with_downtime() {
+        let c = planet_labs_like(10, 2)
+            .with_downtime(vec![DowntimeWindow { sat: 2, from_step: 10, until_step: 30 }]);
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams::default();
+        let dense = ConnectivitySchedule::compute(&c, &gs, 48, params.clone())
+            .with_downtime(&c.downtime);
+        let stream = ConnectivityStream::new(&c, &gs, 48, params, 13);
+        let collected = stream.collect_dense();
+        assert_eq!(collected.sets, dense.sets);
+        assert_eq!(collected.contacts, dense.contacts);
+    }
+
+    #[test]
+    fn cursor_walks_and_windows_across_boundaries() {
+        let c = planet_labs_like(8, 3);
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams::default();
+        let dense = ConnectivitySchedule::compute(&c, &gs, 60, params.clone());
+        let stream = ConnectivityStream::new(&c, &gs, 60, params, 16);
+        let mut cur = StreamCursor::new(&stream);
+        for i in 0..60 {
+            cur.seek(i);
+            assert!(cur.chunk().contains(i));
+            assert_eq!(cur.chunk().sats_at(i), dense.sats_at(i), "step {i}");
+        }
+        // windows spanning one, two, and three chunks, plus horizon clamp
+        let mut cur = StreamCursor::new(&stream);
+        cur.seek(0);
+        for (start, len) in [(0usize, 8usize), (12, 16), (10, 40), (50, 24)] {
+            let w = cur.window(start, len);
+            let end = (start + len).min(60);
+            assert_eq!(w.len(), end - start);
+            assert_eq!(StepView::n_steps(&w), 60);
+            for i in start..end {
+                assert_eq!(w.sats_at(i), dense.sats_at(i), "window step {i}");
+            }
+            // the current chunk still serves the walk position
+            assert_eq!(cur.chunk().sats_at(0), dense.sats_at(0));
+        }
+    }
+
+    #[test]
+    fn seek_reuses_spare_chunk_from_window() {
+        let c = planet_labs_like(6, 4);
+        let gs = planet_ground_stations();
+        let stream =
+            ConnectivityStream::new(&c, &gs, 48, ConnectivityParams::default(), 12);
+        let mut cur = StreamCursor::new(&stream);
+        cur.seek(0);
+        // window reaching into chunk 1 leaves it in the spare slot
+        let _ = cur.window(8, 12);
+        cur.seek(12); // swaps the spare in
+        assert!(cur.chunk().contains(12));
+        let dense = ConnectivitySchedule::compute(&c, &gs, 48, ConnectivityParams::default());
+        assert_eq!(cur.chunk().sats_at(12), dense.sats_at(12));
+    }
+
+    #[test]
+    fn last_partial_chunk_has_right_bounds() {
+        let c = planet_labs_like(5, 5);
+        let gs = planet_ground_stations();
+        let stream =
+            ConnectivityStream::new(&c, &gs, 50, ConnectivityParams::default(), 16);
+        assert_eq!(stream.n_chunks(), 4);
+        assert_eq!(stream.chunk_bounds(3), (48, 50));
+        let ch = stream.chunk(3);
+        assert_eq!((ch.start(), ch.end(), ch.len()), (48, 50, 2));
+    }
+}

@@ -23,6 +23,7 @@
 #![warn(missing_docs)]
 
 pub mod app;
+pub mod bench_report;
 pub mod bench_util;
 pub mod cfg;
 pub mod connectivity;

@@ -7,6 +7,7 @@
 //!   scenarios     list/describe/run the named scenario registry
 //!   utility       generate utility samples and fit/report the regressor
 //!   schedule      plan one FedSpace window and print the forecast
+//!   bench-check   compare bench JSON against the committed baseline (CI)
 //!   help          this text
 
 use anyhow::{bail, Result};
@@ -21,6 +22,7 @@ fn main() -> Result<()> {
         "scenarios" => fedspace::app::cmd::scenarios(&args),
         "utility" => fedspace::app::cmd::utility(&args),
         "schedule" => fedspace::app::cmd::schedule(&args),
+        "bench-check" => fedspace::app::cmd::bench_check(&args),
         "" | "help" | "--help" | "-h" => {
             print!("{}", fedspace::app::cmd::HELP);
             Ok(())

@@ -6,7 +6,7 @@
 //! deterministic, the GS can evaluate *exactly* what any schedule would do
 //! to every satellite's staleness before committing to it.
 
-use crate::connectivity::ConnectivitySchedule;
+use crate::connectivity::StepView;
 
 /// Scheduling-relevant state of one satellite at the window start.
 #[derive(Clone, Copy, Debug)]
@@ -55,14 +55,17 @@ pub struct ForecastScratch {
     buffered: Vec<usize>,
 }
 
-/// Replay `schedule` (a^{start..start+I0}) over the connectivity `sched`.
+/// Replay `schedule` (a^{start..start+I0}) over the known connectivity.
 ///
-/// `states` is indexed by satellite. The replay uses the same client
-/// semantics as the live engine (upload at first contact with a pending
-/// update; re-train only on version change; training completes within one
-/// slot, matching T0 = 15 min ≫ E local steps).
+/// `sched` is any [`StepView`] — the fully materialized schedule or a
+/// [`crate::connectivity::WindowView`] lifted out of a stream; the replay
+/// only reads the window's steps. `states` is indexed by satellite. The
+/// replay uses the same client semantics as the live engine (upload at
+/// first contact with a pending update; re-train only on version change;
+/// training completes within one slot, matching T0 = 15 min ≫ E local
+/// steps).
 pub fn forecast_window(
-    sched: &ConnectivitySchedule,
+    sched: &dyn StepView,
     start: usize,
     schedule: &[bool],
     states: &[SatForecastState],
@@ -73,12 +76,12 @@ pub fn forecast_window(
 /// [`forecast_window`] with caller-owned scratch buffers (hot-path form).
 pub fn forecast_window_with(
     scratch: &mut ForecastScratch,
-    sched: &ConnectivitySchedule,
+    sched: &dyn StepView,
     start: usize,
     schedule: &[bool],
     states: &[SatForecastState],
 ) -> WindowForecast {
-    let k = sched.n_sats;
+    let k = sched.n_sats();
     assert_eq!(states.len(), k);
     // relative aggregation counter; pending base expressed in it
     let mut agg_count: usize = 0;

@@ -12,7 +12,7 @@
 use super::forecast::SatForecastState;
 use super::search::{random_search, SearchParams};
 use super::utility::UtilityModel;
-use crate::connectivity::ConnectivitySchedule;
+use crate::connectivity::StepView;
 use crate::rng::Rng;
 
 /// Plans a^{i,i+I0} at every window boundary i ∈ {0, I0, 2I0, …}.
@@ -35,7 +35,7 @@ impl FedSpacePlanner {
     /// Produce the next window's aggregation vector (Eq. 13).
     pub fn plan(
         &mut self,
-        sched: &ConnectivitySchedule,
+        sched: &dyn StepView,
         start: usize,
         states: &[SatForecastState],
         training_status: f64,

@@ -16,7 +16,7 @@
 
 use super::forecast::{forecast_window_with, ForecastScratch, SatForecastState};
 use super::utility::UtilityModel;
-use crate::connectivity::ConnectivitySchedule;
+use crate::connectivity::StepView;
 use crate::exec;
 use crate::rng::Rng;
 
@@ -47,7 +47,7 @@ pub struct SearchParams {
 /// `chain_t = false` recovers the paper's frozen-T objective (ablation
 /// bench `bench_ablation`).
 pub fn schedule_utility_opts(
-    sched: &ConnectivitySchedule,
+    sched: &dyn StepView,
     start: usize,
     candidate: &[bool],
     states: &[SatForecastState],
@@ -73,7 +73,7 @@ pub fn schedule_utility_opts(
 #[allow(clippy::too_many_arguments)]
 pub fn schedule_utility_with(
     scratch: &mut ForecastScratch,
-    sched: &ConnectivitySchedule,
+    sched: &dyn StepView,
     start: usize,
     candidate: &[bool],
     states: &[SatForecastState],
@@ -100,7 +100,7 @@ pub fn schedule_utility_with(
 
 /// Chained-T window objective (the default; see `schedule_utility_opts`).
 pub fn schedule_utility(
-    sched: &ConnectivitySchedule,
+    sched: &dyn StepView,
     start: usize,
     candidate: &[bool],
     states: &[SatForecastState],
@@ -128,7 +128,7 @@ fn draw_candidate(params: &SearchParams, rng: &mut Rng) -> Vec<bool> {
 /// parallel, and argmax-reduced in candidate order — bit-identical to the
 /// serial reference at any thread count.
 pub fn random_search(
-    sched: &ConnectivitySchedule,
+    sched: &dyn StepView,
     start: usize,
     states: &[SatForecastState],
     utility: &UtilityModel,
@@ -179,7 +179,7 @@ pub fn random_search(
 /// Kept as the determinism oracle for [`random_search`] and the
 /// single-thread baseline in `bench_perf` (EXPERIMENTS.md §Perf).
 pub fn random_search_serial(
-    sched: &ConnectivitySchedule,
+    sched: &dyn StepView,
     start: usize,
     states: &[SatForecastState],
     utility: &UtilityModel,
@@ -208,7 +208,7 @@ pub fn random_search_serial(
 /// N_max from û"): scan aggregation counts on the real window, keep the
 /// count-range whose marginal utility stays positive.
 pub fn infer_n_range(
-    sched: &ConnectivitySchedule,
+    sched: &dyn StepView,
     start: usize,
     states: &[SatForecastState],
     utility: &UtilityModel,
@@ -251,6 +251,7 @@ pub fn infer_n_range(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::connectivity::ConnectivitySchedule;
     use crate::testing::property;
 
     fn line_schedule(k: usize, steps: usize, rng: &mut Rng) -> ConnectivitySchedule {

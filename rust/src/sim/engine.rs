@@ -1,7 +1,8 @@
 //! The discrete-time engine: Algorithm 1, executed over a connectivity
 //! schedule with any aggregation policy and any trainer backend.
 //!
-//! Two execution modes share one step body ([`crate::cfg::EngineMode`]):
+//! Three execution modes share one step body (the private `run_step`,
+//! selected by [`crate::cfg::EngineMode`]):
 //!
 //! - **Dense** walks every time index — the paper's literal loop.
 //! - **ContactList** advances directly between *events*: steps with a
@@ -14,9 +15,17 @@
 //!   potential firing slots are enumerated events. Traces are therefore
 //!   bit-identical between modes — asserted by the tests below and by
 //!   `tests/scenarios.rs` on the `paper-fig7` scenario.
+//! - **Streamed** drives the same contact-list walk from the recyclable
+//!   chunks of a [`ConnectivityStream`] (ADR-0004): contact events come
+//!   from the current chunk's `active_steps`, chunk boundaries are extra
+//!   visited steps (at worst provable no-ops, by the same argument that
+//!   makes skipping sound), and FedSpace planning windows are materialized
+//!   on demand ([`StreamCursor::window`]). Peak schedule memory is
+//!   O(sats × chunk) instead of O(sats × horizon), which is what lets the
+//!   mega-constellation scenarios run at all.
 
 use crate::cfg::{AlgorithmKind, EngineMode};
-use crate::connectivity::ConnectivitySchedule;
+use crate::connectivity::{ConnectivitySchedule, ConnectivityStream, StepView, StreamCursor};
 use crate::fl::{
     AggregationPolicy, AsyncPolicy, FedBuffPolicy, GsState, ScheduledPolicy, ServerAggregator,
     SyncPolicy,
@@ -51,7 +60,8 @@ pub struct EngineConfig {
     pub seed: u64,
     /// FedSpace scheduling period I0 (ignored by other algorithms)
     pub i0: usize,
-    /// Dense per-step walk or sparse contact-list event walk.
+    /// Dense per-step walk, sparse contact-list event walk, or the
+    /// chunk-driven streamed walk.
     pub mode: EngineMode,
 }
 
@@ -156,10 +166,155 @@ fn next_event(
     next
 }
 
+/// Where the engine reads the deterministic schedule C from.
+#[derive(Clone, Copy)]
+pub enum ScheduleSource<'a> {
+    /// A fully materialized schedule (dense and contact-list modes).
+    Precomputed(&'a ConnectivitySchedule),
+    /// A chunked on-demand stream (streamed mode, ADR-0004).
+    Streamed(&'a ConnectivityStream),
+}
+
+impl ScheduleSource<'_> {
+    /// Number of satellites the schedule covers.
+    pub fn n_sats(&self) -> usize {
+        match self {
+            ScheduleSource::Precomputed(s) => s.n_sats,
+            ScheduleSource::Streamed(s) => s.n_sats(),
+        }
+    }
+
+    /// Number of time indexes the schedule covers.
+    pub fn n_steps(&self) -> usize {
+        match self {
+            ScheduleSource::Precomputed(s) => s.n_steps(),
+            ScheduleSource::Streamed(s) => s.n_steps(),
+        }
+    }
+}
+
+/// Mutable per-run state threaded through every walk — one bundle so the
+/// three time-axis walks can share the single step body [`run_step`].
+struct RunState {
+    clients: Vec<SatClient>,
+    sat_rngs: Vec<Rng>,
+    gs: GsState,
+    policy: PolicyImpl,
+    trace: RunTrace,
+    last_loss: f64,
+    days_to_target: Option<f64>,
+}
+
+impl RunState {
+    /// Will the FedSpace policy replan at step `i`? The streamed walk
+    /// materializes the planning window only when this holds.
+    fn needs_replan(&self, i: usize) -> bool {
+        matches!(&self.policy, PolicyImpl::FedSpace(sp) if sp.horizon() <= i)
+    }
+}
+
+/// Algorithm 1's step body at time index `i` — the single implementation
+/// every engine mode executes, so traces can only differ if a walk visits
+/// the wrong steps (which the bit-identity tests would catch).
+///
+/// `plan_view` must cover `[i, i + I0)` of C whenever
+/// [`RunState::needs_replan`] holds: the precomputed walks pass the whole
+/// schedule, the streamed walk passes a window materialized from the
+/// stream. Returns `true` when the early-stop accuracy target was reached.
+#[allow(clippy::too_many_arguments)]
+fn run_step(
+    st: &mut RunState,
+    trainer: &dyn Trainer,
+    aggregator: &mut dyn ServerAggregator,
+    planner: &mut Option<FedSpacePlanner>,
+    cfg: &EngineConfig,
+    plan_view: Option<&dyn StepView>,
+    conn: &[usize],
+    i: usize,
+    n_steps: usize,
+) -> Result<bool> {
+    // FedSpace: (re)plan at window boundaries using the live state
+    if let (PolicyImpl::FedSpace(sp), Some(planner)) = (&mut st.policy, planner.as_mut()) {
+        if sp.horizon() <= i {
+            let states: Vec<SatForecastState> = st
+                .clients
+                .iter()
+                .map(|c| SatForecastState {
+                    pending: c.pending.is_some(),
+                    staleness_now: st.gs.i_g.saturating_sub(c.base_round),
+                    holds_current: c.held_version == Some(st.gs.i_g),
+                    has_data: c.has_data(),
+                })
+                .collect();
+            let view = plan_view.expect("replanning step without a planning window");
+            let window = planner.plan(view, i, &states, st.last_loss);
+            sp.extend(&window);
+        }
+    }
+
+    // 1. receive uploads (Algorithm 1's for k ∈ C_i loop)
+    for &s in conn {
+        st.trace.connections += 1;
+        if st.clients[s].can_upload(i) {
+            let (g, base) = st.clients[s].upload(i);
+            st.gs.receive(s, g, base, st.clients[s].n_samples);
+            st.trace.uploads += 1;
+        } else {
+            st.trace.idle += 1;
+        }
+    }
+
+    // 2. SCHEDULER + SERVERUPDATE
+    if st.policy.decide(i, conn, &st.gs.buffer) {
+        let t = Instant::now();
+        let stalenesses = st.gs.update(aggregator)?;
+        st.trace.t_agg_s += t.elapsed().as_secs_f64();
+        for s in stalenesses {
+            st.trace.staleness.add(s as i64);
+        }
+        st.trace.global_updates += 1;
+    }
+
+    // 3. broadcast (w^{i+1}, i_g) and start local training
+    for &s in conn {
+        if st.clients[s].has_data() && st.clients[s].wants_model(st.gs.i_g, i) {
+            st.clients[s].receive(st.gs.i_g, i, cfg.train_duration_slots);
+            let t = Instant::now();
+            let (delta, _train_loss) = trainer.local_update(s, &st.gs.w, &mut st.sat_rngs[s])?;
+            st.trace.t_train_s += t.elapsed().as_secs_f64();
+            st.clients[s].set_update(delta);
+        }
+    }
+
+    // 4. periodic evaluation
+    let last_step = i + 1 == n_steps;
+    if (i + 1) % cfg.eval_every == 0 || last_step {
+        let t = Instant::now();
+        let (loss, acc) = trainer.evaluate(&st.gs.w)?;
+        st.trace.t_eval_s += t.elapsed().as_secs_f64();
+        st.last_loss = loss;
+        let day = (i + 1) as f64 * cfg.days_per_step;
+        st.trace.curve.push(CurvePoint {
+            day,
+            step: i + 1,
+            round: st.gs.i_g,
+            accuracy: acc,
+            loss,
+        });
+        if let Some(target) = cfg.stop_at_accuracy {
+            if acc >= target && st.days_to_target.is_none() {
+                st.days_to_target = Some(day);
+                return Ok(true);
+            }
+        }
+    }
+    Ok(false)
+}
+
 /// The simulation engine.
 pub struct Engine<'a> {
     /// The deterministic connectivity schedule C to execute over.
-    pub sched: &'a ConnectivitySchedule,
+    pub source: ScheduleSource<'a>,
     /// Local-training backend (PJRT artifacts or the analytic mock).
     pub trainer: &'a dyn Trainer,
     /// Eq.-4 server-update implementation (CPU or Pallas artifact).
@@ -171,7 +326,10 @@ pub struct Engine<'a> {
 }
 
 impl<'a> Engine<'a> {
-    /// Wire up an engine; panics if FedSpace is requested without a planner.
+    /// Wire up an engine over a materialized schedule (dense or
+    /// contact-list mode); panics if FedSpace is requested without a
+    /// planner, or if the config asks for streamed mode (which needs
+    /// [`Self::new_streamed`]).
     pub fn new(
         sched: &'a ConnectivitySchedule,
         trainer: &'a dyn Trainer,
@@ -179,16 +337,38 @@ impl<'a> Engine<'a> {
         cfg: EngineConfig,
         planner: Option<FedSpacePlanner>,
     ) -> Self {
+        assert!(
+            cfg.mode != EngineMode::Streamed,
+            "streamed mode executes over a ConnectivityStream — use Engine::new_streamed"
+        );
         if cfg.algorithm == AlgorithmKind::FedSpace {
             assert!(planner.is_some(), "FedSpace requires a planner");
         }
-        Engine { sched, trainer, aggregator, cfg, planner }
+        Engine { source: ScheduleSource::Precomputed(sched), trainer, aggregator, cfg, planner }
+    }
+
+    /// Wire up an engine over a connectivity stream (streamed mode only).
+    pub fn new_streamed(
+        stream: &'a ConnectivityStream,
+        trainer: &'a dyn Trainer,
+        aggregator: &'a mut dyn ServerAggregator,
+        cfg: EngineConfig,
+        planner: Option<FedSpacePlanner>,
+    ) -> Self {
+        assert!(
+            cfg.mode == EngineMode::Streamed,
+            "Engine::new_streamed requires EngineMode::Streamed"
+        );
+        if cfg.algorithm == AlgorithmKind::FedSpace {
+            assert!(planner.is_some(), "FedSpace requires a planner");
+        }
+        Engine { source: ScheduleSource::Streamed(stream), trainer, aggregator, cfg, planner }
     }
 
     fn make_policy(&self) -> PolicyImpl {
         // effective client count: satellites with data (sync must not wait
         // forever for satellites that can never contribute)
-        let with_data = (0..self.sched.n_sats)
+        let with_data = (0..self.source.n_sats())
             .filter(|&k| self.trainer.sat_samples(k) > 0)
             .count();
         match self.cfg.algorithm {
@@ -204,137 +384,135 @@ impl<'a> Engine<'a> {
     /// Execute Algorithm 1 end to end.
     pub fn run(&mut self) -> Result<RunResult> {
         let cfg = self.cfg.clone();
-        let sched = self.sched;
-        let k = sched.n_sats;
+        let k = self.source.n_sats();
+        let n_steps = self.source.n_steps();
         let mut rng = Rng::new(cfg.seed);
-        let mut sat_rngs: Vec<Rng> = (0..k).map(|i| rng.split(i as u64 + 1)).collect();
-        let mut clients: Vec<SatClient> =
+        let sat_rngs: Vec<Rng> = (0..k).map(|i| rng.split(i as u64 + 1)).collect();
+        let clients: Vec<SatClient> =
             (0..k).map(|i| SatClient::new(i, self.trainer.sat_samples(i))).collect();
-        let mut gs = GsState::new(self.trainer.init(&mut rng), cfg.alpha);
-        let mut policy = self.make_policy();
-        let mut trace = RunTrace::default();
+        let gs = GsState::new(self.trainer.init(&mut rng), cfg.alpha);
+        let policy = self.make_policy();
+        let mut st = RunState {
+            clients,
+            sat_rngs,
+            gs,
+            policy,
+            trace: RunTrace::default(),
+            last_loss: 0.0,
+            days_to_target: None,
+        };
 
         // initial evaluation seeds the curve and the training status T
         let t0 = Instant::now();
-        let (mut last_loss, mut last_acc) = self.trainer.evaluate(&gs.w)?;
-        trace.t_eval_s += t0.elapsed().as_secs_f64();
-        trace.curve.push(CurvePoint {
+        let (loss0, acc0) = self.trainer.evaluate(&st.gs.w)?;
+        st.trace.t_eval_s += t0.elapsed().as_secs_f64();
+        st.last_loss = loss0;
+        st.trace.curve.push(CurvePoint {
             day: 0.0,
             step: 0,
             round: 0,
-            accuracy: last_acc,
-            loss: last_loss,
+            accuracy: acc0,
+            loss: loss0,
         });
-        let mut days_to_target = None;
 
-        // ContactList: precompute the contact-event list once; the other
-        // event sources (planner horizon, scheduled slots) depend on live
-        // policy state and are queried in `next_event`.
-        let active: Option<Vec<usize>> = match cfg.mode {
-            EngineMode::Dense => None,
-            EngineMode::ContactList => Some(sched.active_steps()),
-        };
-        let n_steps = sched.n_steps();
-        let mut i = 0usize;
-        while i < n_steps {
-            // FedSpace: (re)plan at window boundaries using the live state
-            if let (PolicyImpl::FedSpace(sp), Some(planner)) =
-                (&mut policy, self.planner.as_mut())
-            {
-                if sp.horizon() <= i {
-                    let states: Vec<SatForecastState> = clients
-                        .iter()
-                        .map(|c| SatForecastState {
-                            pending: c.pending.is_some(),
-                            staleness_now: gs.i_g.saturating_sub(c.base_round),
-                            holds_current: c.held_version == Some(gs.i_g),
-                            has_data: c.has_data(),
-                        })
-                        .collect();
-                    let window = planner.plan(sched, i, &states, last_loss);
-                    sp.extend(&window);
-                }
-            }
-
-            // zero-copy view into the schedule's sorted contact list
-            let conn = sched.sats_at(i);
-
-            // 1. receive uploads (Algorithm 1's for k ∈ C_i loop)
-            for &s in conn {
-                trace.connections += 1;
-                if clients[s].can_upload(i) {
-                    let (g, base) = clients[s].upload(i);
-                    gs.receive(s, g, base, clients[s].n_samples);
-                    trace.uploads += 1;
-                } else {
-                    trace.idle += 1;
-                }
-            }
-
-            // 2. SCHEDULER + SERVERUPDATE
-            if policy.decide(i, conn, &gs.buffer) {
-                let t = Instant::now();
-                let stalenesses = gs.update(self.aggregator)?;
-                trace.t_agg_s += t.elapsed().as_secs_f64();
-                for s in stalenesses {
-                    trace.staleness.add(s as i64);
-                }
-                trace.global_updates += 1;
-            }
-
-            // 3. broadcast (w^{i+1}, i_g) and start local training
-            for &s in conn {
-                if clients[s].has_data() && clients[s].wants_model(gs.i_g, i) {
-                    clients[s].receive(gs.i_g, i, cfg.train_duration_slots);
-                    let t = Instant::now();
-                    let (delta, _train_loss) =
-                        self.trainer.local_update(s, &gs.w, &mut sat_rngs[s])?;
-                    trace.t_train_s += t.elapsed().as_secs_f64();
-                    clients[s].set_update(delta);
-                }
-            }
-
-            // 4. periodic evaluation
-            let last_step = i + 1 == sched.n_steps();
-            if (i + 1) % cfg.eval_every == 0 || last_step {
-                let t = Instant::now();
-                let (loss, acc) = self.trainer.evaluate(&gs.w)?;
-                trace.t_eval_s += t.elapsed().as_secs_f64();
-                last_loss = loss;
-                last_acc = acc;
-                let day = (i + 1) as f64 * cfg.days_per_step;
-                trace.curve.push(CurvePoint {
-                    day,
-                    step: i + 1,
-                    round: gs.i_g,
-                    accuracy: acc,
-                    loss,
-                });
-                if let Some(target) = cfg.stop_at_accuracy {
-                    if acc >= target && days_to_target.is_none() {
-                        days_to_target = Some(day);
+        match self.source {
+            ScheduleSource::Precomputed(sched) => {
+                // ContactList: precompute the contact-event list once; the
+                // other event sources (planner horizon, scheduled slots)
+                // depend on live policy state and are queried in
+                // `next_event`.
+                let active: Option<Vec<usize>> = match cfg.mode {
+                    EngineMode::Dense => None,
+                    EngineMode::ContactList => Some(sched.active_steps()),
+                    EngineMode::Streamed => unreachable!("rejected by Engine::new"),
+                };
+                let mut i = 0usize;
+                while i < n_steps {
+                    // zero-copy view into the schedule's sorted contact list
+                    let conn = sched.sats_at(i);
+                    let stop = run_step(
+                        &mut st,
+                        self.trainer,
+                        self.aggregator,
+                        &mut self.planner,
+                        &cfg,
+                        Some(sched),
+                        conn,
+                        i,
+                        n_steps,
+                    )?;
+                    if stop {
                         break;
                     }
+                    i = match &active {
+                        None => i + 1,
+                        Some(act) => next_event(i + 1, act, &st.policy, n_steps, cfg.eval_every),
+                    };
                 }
             }
-
-            i = match &active {
-                None => i + 1,
-                Some(act) => next_event(i + 1, act, &policy, n_steps, cfg.eval_every),
-            };
+            ScheduleSource::Streamed(stream) => {
+                let mut cursor = StreamCursor::new(stream);
+                let mut i = 0usize;
+                while i < n_steps {
+                    cursor.seek(i);
+                    // materialize the planning window only at replan steps,
+                    // sized by the planner's own I0 (candidate vectors must
+                    // never index past the materialized window)
+                    let window = if st.needs_replan(i) {
+                        let i0 = self.planner.as_ref().map_or(cfg.i0, |p| p.params.i0).max(1);
+                        Some(cursor.window(i, i0))
+                    } else {
+                        None
+                    };
+                    let plan_view = window.as_ref().map(|w| w as &dyn StepView);
+                    let conn = cursor.chunk().sats_at(i);
+                    let stop = run_step(
+                        &mut st,
+                        self.trainer,
+                        self.aggregator,
+                        &mut self.planner,
+                        &cfg,
+                        plan_view,
+                        conn,
+                        i,
+                        n_steps,
+                    )?;
+                    if stop {
+                        break;
+                    }
+                    // contact events from the current chunk, global events
+                    // from `next_event`; capped at the chunk boundary so
+                    // lookahead never leaves the chunk. Visiting a boundary
+                    // step early is at worst a provable no-op — the same
+                    // argument that makes contact-list skipping sound.
+                    let mut ni = next_event(
+                        i + 1,
+                        cursor.chunk().active_steps(),
+                        &st.policy,
+                        n_steps,
+                        cfg.eval_every,
+                    );
+                    let chunk_end = cursor.chunk().end();
+                    if chunk_end < n_steps {
+                        ni = ni.min(chunk_end);
+                    }
+                    i = ni;
+                }
+            }
         }
-        let _ = last_acc;
+
         // trace.global_updates is incremented exactly where gs.update() runs,
         // so it already equals gs.i_g — asserted here and tested below rather
         // than overwritten (it used to be clobbered with gs.i_g at the end,
         // leaving two competing sources of truth).
-        debug_assert_eq!(trace.global_updates, gs.i_g);
+        debug_assert_eq!(st.trace.global_updates, st.gs.i_g);
         Ok(RunResult {
-            days_to_target: days_to_target
-                .or_else(|| trace.curve.days_to_accuracy(cfg.stop_at_accuracy.unwrap_or(2.0))),
-            trace,
-            final_round: gs.i_g,
-            final_w: gs.w,
+            days_to_target: st
+                .days_to_target
+                .or_else(|| st.trace.curve.days_to_accuracy(cfg.stop_at_accuracy.unwrap_or(2.0))),
+            trace: st.trace,
+            final_round: st.gs.i_g,
+            final_w: st.gs.w,
         })
     }
 }
@@ -357,22 +535,13 @@ mod tests {
         let sched = small_sched(12, steps);
         let trainer = MockTrainer::new(16, 12, 0.3, 0);
         let mut agg = CpuAggregator;
-        let planner = if algorithm == AlgorithmKind::FedSpace {
-            Some(FedSpacePlanner::new(
-                UtilityModel::new("forest").unwrap(), // unfitted -> heuristic
-                SearchParams { i0: 24, n_min: 2, n_max: 8, n_search: 100 },
-                0,
-            ))
-        } else {
-            None
-        };
         let cfg = EngineConfig {
             algorithm,
             fedbuff_m: m,
             eval_every: 4,
             ..Default::default()
         };
-        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, planner);
+        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm));
         e.run().unwrap()
     }
 
@@ -627,17 +796,8 @@ mod tests {
 
     use crate::testing::assert_same_run;
 
-    fn run_mock_mode(
-        algorithm: AlgorithmKind,
-        m: usize,
-        steps: usize,
-        mode: crate::cfg::EngineMode,
-        stop_at: Option<f64>,
-    ) -> RunResult {
-        let sched = small_sched(12, steps);
-        let trainer = MockTrainer::new(16, 12, 0.3, 0);
-        let mut agg = CpuAggregator;
-        let planner = if algorithm == AlgorithmKind::FedSpace {
+    fn mode_planner(algorithm: AlgorithmKind) -> Option<FedSpacePlanner> {
+        if algorithm == AlgorithmKind::FedSpace {
             Some(FedSpacePlanner::new(
                 UtilityModel::new("forest").unwrap(),
                 SearchParams { i0: 24, n_min: 2, n_max: 8, n_search: 100 },
@@ -645,7 +805,22 @@ mod tests {
             ))
         } else {
             None
-        };
+        }
+    }
+
+    /// Run one algorithm in any of the three engine modes over the same
+    /// 12-satellite constellation; streamed mode goes through a
+    /// [`ConnectivityStream`] with a deliberately awkward chunk length so
+    /// events land on chunk boundaries.
+    fn run_mock_mode(
+        algorithm: AlgorithmKind,
+        m: usize,
+        steps: usize,
+        mode: crate::cfg::EngineMode,
+        stop_at: Option<f64>,
+    ) -> RunResult {
+        let trainer = MockTrainer::new(16, 12, 0.3, 0);
+        let mut agg = CpuAggregator;
         let cfg = EngineConfig {
             algorithm,
             fedbuff_m: m,
@@ -654,8 +829,18 @@ mod tests {
             mode,
             ..Default::default()
         };
-        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, planner);
-        e.run().unwrap()
+        if mode == crate::cfg::EngineMode::Streamed {
+            let c = planet_labs_like(12, 0);
+            let gs = planet_ground_stations();
+            let stream = ConnectivityStream::new(&c, &gs, steps, Default::default(), 31);
+            let mut e =
+                Engine::new_streamed(&stream, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            e.run().unwrap()
+        } else {
+            let sched = small_sched(12, steps);
+            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            e.run().unwrap()
+        }
     }
 
     #[test]
@@ -670,6 +855,64 @@ mod tests {
             let dense = run_mock_mode(alg, 4, 192, EngineMode::Dense, None);
             let sparse = run_mock_mode(alg, 4, 192, EngineMode::ContactList, None);
             assert_same_run(&dense, &sparse, &format!("{alg:?}"));
+        }
+    }
+
+    #[test]
+    fn streamed_mode_bit_identical_to_dense_and_contact_list() {
+        use crate::cfg::EngineMode;
+        for alg in [
+            AlgorithmKind::Sync,
+            AlgorithmKind::Async,
+            AlgorithmKind::FedBuff,
+            AlgorithmKind::FedSpace,
+        ] {
+            let dense = run_mock_mode(alg, 4, 192, EngineMode::Dense, None);
+            let sparse = run_mock_mode(alg, 4, 192, EngineMode::ContactList, None);
+            let streamed = run_mock_mode(alg, 4, 192, EngineMode::Streamed, None);
+            assert_same_run(&dense, &streamed, &format!("{alg:?} dense vs streamed"));
+            assert_same_run(&sparse, &streamed, &format!("{alg:?} contacts vs streamed"));
+        }
+    }
+
+    #[test]
+    fn streamed_mode_matches_dense_with_early_stop() {
+        use crate::cfg::EngineMode;
+        let dense = run_mock_mode(AlgorithmKind::FedBuff, 4, 192, EngineMode::Dense, Some(0.6));
+        let streamed =
+            run_mock_mode(AlgorithmKind::FedBuff, 4, 192, EngineMode::Streamed, Some(0.6));
+        assert_same_run(&dense, &streamed, "fedbuff stop@0.6 streamed");
+    }
+
+    #[test]
+    fn streamed_mode_chunk_len_is_a_resource_knob_not_a_semantics_knob() {
+        // any chunk length must reproduce the identical trace — chunk
+        // boundaries are only extra visited no-op steps
+        use crate::cfg::EngineMode;
+        let c = planet_labs_like(12, 0);
+        let gs = planet_ground_stations();
+        let trainer = MockTrainer::new(16, 12, 0.3, 0);
+        let cfg = EngineConfig {
+            algorithm: AlgorithmKind::FedSpace,
+            eval_every: 4,
+            mode: EngineMode::Streamed,
+            ..Default::default()
+        };
+        let mut results = Vec::new();
+        for chunk_len in [1usize, 5, 24, 96, 500] {
+            let stream = ConnectivityStream::new(&c, &gs, 96, Default::default(), chunk_len);
+            let mut agg = CpuAggregator;
+            let mut e = Engine::new_streamed(
+                &stream,
+                &trainer,
+                &mut agg,
+                cfg.clone(),
+                mode_planner(AlgorithmKind::FedSpace),
+            );
+            results.push(e.run().unwrap());
+        }
+        for r in &results[1..] {
+            assert_same_run(&results[0], r, "chunk-length sweep");
         }
     }
 

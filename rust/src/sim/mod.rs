@@ -5,6 +5,6 @@ pub mod engine;
 pub mod trace;
 pub mod trainer;
 
-pub use engine::{Engine, EngineConfig, RunResult};
+pub use engine::{Engine, EngineConfig, RunResult, ScheduleSource};
 pub use trace::RunTrace;
 pub use trainer::{MockTrainer, PjrtTrainer, Trainer, TrainerSampleBackend};

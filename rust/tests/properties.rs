@@ -1,9 +1,12 @@
 //! Property-based tests over coordinator invariants (routing, batching,
 //! scheduling state) using the in-crate mini property framework.
 
-use fedspace::connectivity::ConnectivitySchedule;
+use fedspace::connectivity::{
+    ConnectivityParams, ConnectivitySchedule, ConnectivityStream, ScheduleChunk,
+};
 use fedspace::fl::illustrative;
 use fedspace::fl::{normalized_weights, Buffer, GradientEntry};
+use fedspace::orbit::{planet_ground_stations, planet_labs_like, DowntimeWindow};
 use fedspace::rng::Rng;
 use fedspace::sched::{
     forecast_window, random_search, random_search_serial, SatForecastState, SearchParams,
@@ -153,6 +156,52 @@ fn prop_parallel_search_matches_serial_reference() {
         assert_eq!(a.0, b.0, "seed={seed:#x}");
         assert_eq!(a.1.to_bits(), b.1.to_bits(), "seed={seed:#x}");
         assert_eq!(r1.next_u64(), r2.next_u64(), "rng stream diverged");
+    });
+}
+
+#[test]
+fn prop_stream_chunks_bit_identical_to_dense_compute() {
+    // a ConnectivityStream concatenated over its chunks must equal the
+    // all-at-once compute + downtime post-pass exactly (not approximately:
+    // both paths share the same sampling helpers on absolute step indexes)
+    // for any fleet size, horizon, chunk length, and downtime windows —
+    // including windows whose boundaries land exactly on chunk edges
+    property(8, |rng| {
+        let k = rng.gen_range(1, 14);
+        let steps = rng.gen_range(1, 50);
+        let chunk_len = rng.gen_range(1, steps + 10);
+        let mut windows = Vec::new();
+        for _ in 0..rng.gen_range(0, 4) {
+            let sat = rng.gen_range(0, k);
+            let from = if rng.gen_bool(0.5) {
+                // snap the outage start onto a chunk edge
+                (rng.gen_range(0, steps) / chunk_len) * chunk_len
+            } else {
+                rng.gen_range(0, steps)
+            };
+            let until = (from + 1 + rng.gen_range(0, chunk_len + 2)).min(steps);
+            windows.push(DowntimeWindow { sat, from_step: from, until_step: until });
+        }
+        let c = planet_labs_like(k, rng.next_u64()).with_downtime(windows);
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams::default();
+        let dense = ConnectivitySchedule::compute(&c, &gs, steps, params.clone())
+            .with_downtime(&c.downtime);
+        let stream = ConnectivityStream::new(&c, &gs, steps, params, chunk_len);
+        let mut chunk = ScheduleChunk::default();
+        let mut active = Vec::new();
+        for ci in 0..stream.n_chunks() {
+            stream.fill_chunk(ci, &mut chunk);
+            for i in chunk.start()..chunk.end() {
+                assert_eq!(
+                    chunk.sats_at(i),
+                    dense.sats_at(i),
+                    "step {i} (chunk_len {chunk_len}, k {k})"
+                );
+            }
+            active.extend_from_slice(chunk.active_steps());
+        }
+        assert_eq!(active, dense.active_steps(), "event lists must concatenate");
     });
 }
 

@@ -1,9 +1,10 @@
-//! System tests for the scenario registry and the contact-list engine mode:
+//! System tests for the scenario registry and the engine time-axis modes:
 //! every built-in round-trips through TOML and runs end-to-end (scaled down
-//! for CI), and the dense vs contact-list engines produce bit-identical
-//! traces on the seed scenario `paper-fig7`.
+//! for CI), and the dense, contact-list and streamed engines produce
+//! bit-identical traces on the seed scenario `paper-fig7` — the acceptance
+//! gate for the streamed-connectivity rewrite (ADR-0004).
 
-use fedspace::app::{run_mock_on_schedule, run_scenario};
+use fedspace::app::{run_mock_on_schedule, run_mock_on_stream, run_scenario};
 use fedspace::cfg::{AlgorithmKind, EngineMode, Scenario};
 use fedspace::testing::assert_same_run;
 
@@ -36,19 +37,57 @@ fn every_builtin_runs_end_to_end_scaled() {
 }
 
 /// The acceptance gate: on `paper-fig7` (scaled for CI speed, full grid
-/// incl. FedSpace) the contact-list engine's trace is identical to the
-/// dense engine's, bit for bit.
+/// incl. FedSpace) the contact-list and streamed engines' traces are
+/// identical to the dense engine's, bit for bit, for all four algorithms.
 #[test]
-fn contact_list_engine_identical_on_paper_fig7() {
+fn all_three_engine_modes_identical_on_paper_fig7() {
     let sc = Scenario::builtin("paper-fig7").unwrap().scaled(Some(24), Some(96));
+    assert_eq!(sc.algorithms.len(), 4, "paper-fig7 must sweep the full grid");
     let (_, sched) = sc.build_schedule();
+    let (_, stream) = sc.build_stream();
     for &alg in &sc.algorithms {
         let mut cfg = sc.experiment_config(alg);
         cfg.engine_mode = EngineMode::Dense;
         let dense = run_mock_on_schedule(&cfg, &sched, None).unwrap();
         cfg.engine_mode = EngineMode::ContactList;
         let sparse = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+        cfg.engine_mode = EngineMode::Streamed;
+        let streamed = run_mock_on_stream(&cfg, &stream, None).unwrap();
         assert_same_run(&dense.result, &sparse.result, alg.name());
+        assert_same_run(&dense.result, &streamed.result, &format!("{} streamed", alg.name()));
+    }
+}
+
+/// Downtime windows travel through the stream's per-chunk filter and land
+/// in the engine identically to the dense post-pass path.
+#[test]
+fn streamed_engine_identical_with_downtime() {
+    let mut sc = Scenario::builtin("dove-dropout").unwrap().scaled(Some(24), Some(96));
+    assert!(!sc.downtime.is_empty(), "scaling dropped every downtime window");
+    sc.algorithms = vec![AlgorithmKind::FedBuff];
+    let (_, sched) = sc.build_schedule();
+    let (_, stream) = sc.build_stream();
+    let mut cfg = sc.experiment_config(AlgorithmKind::FedBuff);
+    cfg.engine_mode = EngineMode::Dense;
+    let dense = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+    cfg.engine_mode = EngineMode::Streamed;
+    let streamed = run_mock_on_stream(&cfg, &stream, None).unwrap();
+    assert_same_run(&dense.result, &streamed.result, "dove-dropout streamed");
+}
+
+/// The mega builtins declare the streamed engine and sweep end to end at a
+/// scale CI can afford (the full 4408-satellite run is the CI smoke step).
+#[test]
+fn mega_builtins_run_streamed_scaled() {
+    for name in ["walker-starlink-4408", "kuiper-3236"] {
+        let sc = Scenario::builtin(name).unwrap();
+        assert_eq!(sc.engine_mode, EngineMode::Streamed, "{name}");
+        let scaled = sc.scaled(Some(40), Some(48));
+        let outs = run_scenario(&scaled, None).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(outs.len(), scaled.algorithms.len(), "{name}");
+        for out in &outs {
+            assert!(out.result.trace.connections > 0, "{name}: no contacts reached the engine");
+        }
     }
 }
 
