@@ -16,11 +16,11 @@
 //!
 //! Run from `rust/`: `cargo bench --bench bench_engine_modes`
 
-use fedspace::app::{run_mock_on_schedule, run_mock_on_stream};
+use fedspace::app::{run_mock_on_schedule_routed, run_mock_on_stream};
 use fedspace::bench_report;
 use fedspace::bench_util::{section, time_once};
 use fedspace::cfg::{AlgorithmKind, EngineMode, Scenario};
-use fedspace::connectivity::{ConnectivitySchedule, ConnectivityStream};
+use fedspace::connectivity::{ConnectivitySchedule, ConnectivityStream, ContactGraph};
 use fedspace::testing::assert_same_run;
 
 /// Runs per mode: the tracked medians feed the CI regression gate, and a
@@ -47,6 +47,7 @@ fn timed_median<F: FnMut() -> fedspace::app::ExperimentOutput>(
 fn run_modes(
     sc: &Scenario,
     sched: &ConnectivitySchedule,
+    graph: Option<&ContactGraph>,
     stream: &ConnectivityStream,
     alg: AlgorithmKind,
 ) {
@@ -58,7 +59,7 @@ fn run_modes(
         let label = format!("  {} / {}", alg.name(), mode.name());
         let (result, dt) = timed_median(&label, || match mode {
             EngineMode::Streamed => run_mock_on_stream(&cfg, stream, None).expect("run"),
-            _ => run_mock_on_schedule(&cfg, sched, None).expect("run"),
+            _ => run_mock_on_schedule_routed(&cfg, sched, graph, None).expect("run"),
         });
         bench_report::record(
             &format!("engine_{}_{}_{}", sc.name.replace('-', "_"), alg.name(), mode.name()),
@@ -81,7 +82,11 @@ fn bench_scenario(name: &str, algorithms: &[AlgorithmKind]) {
     section(&format!("{name}: {}", sc.summary));
     // informational only (not a gated key: connectivity compute has proper
     // multi-iteration medians in bench_perf)
-    let ((_, sched), _) = time_once("  build schedule (shared)", || sc.build_schedule());
+    let ((constellation, sched), _) =
+        time_once("  build schedule (shared)", || sc.build_schedule());
+    // with ISLs the routed graph is shared across the grid like the
+    // schedule; the streamed path routes inside its chunks instead
+    let graph = sc.build_contact_graph(&constellation, &sched);
     let (_, stream) = sc.build_stream();
     let active = sched.active_steps().len();
     println!(
@@ -91,7 +96,7 @@ fn bench_scenario(name: &str, algorithms: &[AlgorithmKind]) {
         100.0 * (1.0 - active as f64 / sched.n_steps().max(1) as f64)
     );
     for &alg in algorithms {
-        run_modes(&sc, &sched, &stream, alg);
+        run_modes(&sc, &sched, graph.as_ref(), &stream, alg);
     }
 }
 
@@ -118,6 +123,9 @@ fn bench_mega_streamed(name: &str) {
 fn main() {
     bench_scenario("sparse-single-gs", &[AlgorithmKind::Async, AlgorithmKind::FedBuff]);
     bench_scenario("walker-starlink-1584", &[AlgorithmKind::FedBuff]);
+    // ISL routing (ADR-0005): dense graph vs routed chunks, bit-identity
+    // asserted across all three modes before any timing is reported
+    bench_scenario("isl-iridium-66", &[AlgorithmKind::FedBuff]);
     bench_mega_streamed("walker-starlink-4408");
     if let Some(path) = bench_report::flush_to_env_path().expect("bench JSON") {
         println!("\nmachine-readable results written to {path}");

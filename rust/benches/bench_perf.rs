@@ -183,6 +183,17 @@ fn main() -> anyhow::Result<()> {
     });
     bench_report::record("connectivity_stream_mega_chunk", s.median_s);
 
+    section("L3: ISL routing (per-step BFS over the contact graph, ADR-0005)");
+    // the whole-horizon routing cost the dense/contact-list modes pay once
+    // per scenario — and, divided by n_chunks, what each streamed chunk pays
+    let isl_sc = fedspace::cfg::Scenario::builtin("isl-iridium-66").expect("builtin");
+    let (isl_c, isl_sched) = isl_sc.build_schedule();
+    let topo = isl_sc.build_isl(&isl_c).expect("isl scenario");
+    let s = bench("route 66 sats x 480 steps (+grid, max 3 hops)", 1, 5, || {
+        let _ = fedspace::connectivity::ContactGraph::build(&topo, &isl_sched);
+    });
+    bench_report::record("isl_route_iridium_480", s.median_s);
+
     section("L3: utility regressor (random forest)");
     let x: Vec<Vec<f64>> = (0..400)
         .map(|_| (0..10).map(|_| rng.gen_f64(-1.0, 1.0)).collect())

@@ -39,10 +39,15 @@ COMMANDS:
                     --target ACC                 stop at accuracy
                     --out-dir DIR                write per-algorithm curves
   bench-check   compare bench JSON against the committed baseline (CI gate)
-                  --baseline FILE         committed baseline (BENCH_pr3.json)
+                  --baseline A.json,B.json committed baselines, newest first;
+                                          the first non-provisional one gates
                   --current A.json,B.json bench outputs to merge and compare
                   --max-regress F (0.25)  relative slowdown budget per path
                   --summary-out FILE      also write the markdown summary
+  bench-baseline  merge bench JSON outputs into a ready-to-commit,
+                  non-provisional baseline (the CI arming artifact)
+                  --current A.json,B.json bench outputs to merge
+                  --out FILE              baseline file to write
   utility       phase-1 utility pipeline on the mock backend; reports MSE
                   --samples N (400)
   schedule      plan one FedSpace aggregation window over the real
@@ -264,21 +269,34 @@ pub fn schedule(args: &Args) -> Result<()> {
 /// `bench_report`).
 pub fn bench_check(args: &Args) -> Result<()> {
     use crate::bench_report::{compare, BenchReport};
-    let baseline_path = args.require("baseline")?;
+    let baseline_arg = args.require("baseline")?;
     let current_paths = args.require("current")?;
     let max_regress = args.get_f64("max-regress", 0.25)?;
     if max_regress <= 0.0 {
         bail!("--max-regress must be positive");
     }
-    let baseline = BenchReport::from_file(baseline_path)?;
-    let mut merged = BenchReport { provisional: false, benches: Default::default() };
-    for path in current_paths.split(',').map(str::trim).filter(|p| !p.is_empty()) {
-        let part = BenchReport::from_file(path)?;
-        merged.benches.extend(part.benches);
+    // `--baseline` is a newest-first list: the gate prefers the newest
+    // non-provisional baseline and falls back to the first entry (bootstrap
+    // mode) when every committed baseline is still provisional
+    let mut chosen: Option<(String, BenchReport)> = None;
+    let mut fallback: Option<(String, BenchReport)> = None;
+    for path in baseline_arg.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let report = BenchReport::from_file(path)?;
+        if !report.provisional {
+            chosen = Some((path.to_string(), report));
+            break;
+        }
+        if fallback.is_none() {
+            fallback = Some((path.to_string(), report));
+        }
     }
-    if merged.benches.is_empty() {
-        bail!("no bench results found in --current {current_paths}");
-    }
+    let (baseline_path, baseline) =
+        chosen.or(fallback).context("--baseline lists no readable files")?;
+    println!(
+        "baseline: {baseline_path}{}",
+        if baseline.provisional { " (provisional — bootstrap mode)" } else { "" }
+    );
+    let merged = merge_bench_reports(current_paths)?;
     let cmp = compare(&baseline, &merged, max_regress);
     let md = cmp.to_markdown();
     println!("{md}");
@@ -286,6 +304,17 @@ pub fn bench_check(args: &Args) -> Result<()> {
         // written before any gate failure below, so CI can append it to the
         // step summary whether the gate passes or fails
         write_file(path, &md)?;
+    }
+    if !cmp.new_paths.is_empty() {
+        // a warning with a nonzero count, not a pass: a bench absent from
+        // the baseline is not gated, and silence here would let new benches
+        // dodge the gate forever
+        eprintln!(
+            "warning: {} tracked path(s) have no baseline entry and are NOT gated: {} — \
+             commit an updated baseline (the CI bench-baseline artifact) to arm them",
+            cmp.new_paths.len(),
+            cmp.new_paths.join(", ")
+        );
     }
     if !cmp.regressions.is_empty() {
         bail!(
@@ -296,6 +325,40 @@ pub fn bench_check(args: &Args) -> Result<()> {
             cmp.regressions.join(", ")
         );
     }
+    Ok(())
+}
+
+/// Merge a comma-separated list of bench JSON files into one
+/// non-provisional report (later files win on duplicate keys); errors when
+/// the merge comes out empty. Shared by `bench-check` and `bench-baseline`
+/// so their `--current` semantics can never diverge.
+fn merge_bench_reports(paths: &str) -> Result<crate::bench_report::BenchReport> {
+    use crate::bench_report::BenchReport;
+    let mut merged = BenchReport { provisional: false, benches: Default::default() };
+    for path in paths.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let part = BenchReport::from_file(path)?;
+        merged.benches.extend(part.benches);
+    }
+    if merged.benches.is_empty() {
+        bail!("no bench results found in --current {paths}");
+    }
+    Ok(merged)
+}
+
+/// `fedspace bench-baseline` — merge bench JSON outputs into a
+/// non-provisional baseline document, ready to commit as `rust/BENCH_*.json`.
+/// CI runs this after a green gate and uploads the result as the
+/// `bench-baseline` artifact, so arming (or refreshing) the perf gate is a
+/// single download-and-commit.
+pub fn bench_baseline(args: &Args) -> Result<()> {
+    let current_paths = args.require("current")?;
+    let out = args.require("out")?;
+    let merged = merge_bench_reports(current_paths)?;
+    write_file(out, &merged.to_json())?;
+    println!(
+        "armed baseline written to {out} ({} tracked paths, provisional: false)",
+        merged.benches.len()
+    );
     Ok(())
 }
 
@@ -321,7 +384,8 @@ pub fn scenarios(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
         None | Some("list") => {
             let mut t = Table::new(&[
-                "name", "constellation", "sats", "stations", "steps", "engine", "algorithms",
+                "name", "constellation", "sats", "stations", "steps", "engine", "isl",
+                "algorithms",
             ]);
             for sc in Scenario::builtins() {
                 t.row(&[
@@ -331,6 +395,7 @@ pub fn scenarios(args: &Args) -> Result<()> {
                     sc.stations.name().to_string(),
                     sc.n_steps.to_string(),
                     sc.engine_mode.name().to_string(),
+                    sc.isl.mode.name().to_string(),
                     sc.algorithms
                         .iter()
                         .map(|a| a.name().to_string())
@@ -361,17 +426,19 @@ pub fn scenarios(args: &Args) -> Result<()> {
             }
             let stop_at = args.get("target").map(|t| t.parse::<f64>()).transpose()?;
             println!(
-                "scenario {}: {} ({} sats, {} stations, {} steps, {} engine)",
+                "scenario {}: {} ({} sats, {} stations, {} steps, {} engine, isl {})",
                 sc.name,
                 sc.summary,
                 sc.constellation.n_sats(),
                 sc.stations.build().len(),
                 sc.n_steps,
-                sc.engine_mode.name()
+                sc.engine_mode.name(),
+                sc.isl.mode.name()
             );
             let outs = run_scenario(&sc, stop_at)?;
             let mut t = Table::new(&[
-                "algorithm", "rounds", "uploads", "idle%", "max stale", "best acc", "days→target",
+                "algorithm", "rounds", "uploads", "relayed", "idle%", "max stale", "best acc",
+                "days→target",
             ]);
             for out in &outs {
                 let r = &out.result;
@@ -379,6 +446,7 @@ pub fn scenarios(args: &Args) -> Result<()> {
                     out.algorithm.name().to_string(),
                     r.final_round.to_string(),
                     r.trace.uploads.to_string(),
+                    r.trace.relayed.to_string(),
                     format!("{:.1}", 100.0 * r.trace.idle_fraction()),
                     r.trace.staleness.max_key().unwrap_or(0).to_string(),
                     format!("{:.4}", r.trace.curve.best_accuracy()),
@@ -466,14 +534,16 @@ mod tests {
         std::fs::write(path("ok.json"), report(false, 1.1).to_json()).unwrap();
         std::fs::write(path("bad.json"), report(false, 2.0).to_json()).unwrap();
         std::fs::write(path("prov.json"), report(true, 0.001).to_json()).unwrap();
-        let run = |base: &str, cur: &str| {
+        // `base` is a comma list of file names already resolved to paths
+        let run_raw = |base: &str, cur: &str| {
             bench_check(&args(&format!(
                 "bench-check --baseline {} --current {} --summary-out {}",
-                path(base),
+                base,
                 path(cur),
                 path("summary.md")
             )))
         };
+        let run = |base: &str, cur: &str| run_raw(&path(base), cur);
         run("base.json", "ok.json").unwrap();
         assert!(run("base.json", "bad.json").is_err(), "2x slowdown must fail the gate");
         // provisional baseline: report-only, never fails
@@ -482,6 +552,60 @@ mod tests {
         assert!(summary.contains("Bootstrap mode"));
         // missing inputs error out
         assert!(run("nope.json", "ok.json").is_err());
+        // newest-first baseline list: the first non-provisional entry gates
+        // (prov.json first must NOT put the gate in bootstrap mode)
+        let list = format!("{},{}", path("prov.json"), path("base.json"));
+        assert!(run_raw(&list, "bad.json").is_err(), "armed baseline later in the list must gate");
+        run_raw(&list, "ok.json").unwrap();
+        // all-provisional list falls back to bootstrap
+        run_raw(&format!("{0},{0}", path("prov.json")), "bad.json").unwrap();
+        // a bench unknown to the baseline is a warning, not a silent pass
+        let new_path = BenchReport {
+            provisional: false,
+            benches: [("a".to_string(), 1.0), ("brand_new".to_string(), 9.0)]
+                .into_iter()
+                .collect(),
+        };
+        std::fs::write(path("new.json"), new_path.to_json()).unwrap();
+        run("base.json", "new.json").unwrap();
+        let summary = std::fs::read_to_string(path("summary.md")).unwrap();
+        assert!(summary.contains("no baseline entry"), "{summary}");
+        assert!(summary.contains("brand_new"));
+    }
+
+    #[test]
+    fn bench_baseline_merges_and_arms() {
+        use crate::bench_report::BenchReport;
+        let dir =
+            std::env::temp_dir().join(format!("fedspace_bench_baseline_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = |n: &str| dir.join(n).to_string_lossy().into_owned();
+        let part = |entries: &[(&str, f64)]| BenchReport {
+            // the merge must force provisional to false whatever the inputs say
+            provisional: true,
+            benches: entries.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        };
+        std::fs::write(path("a.json"), part(&[("x", 1.0)]).to_json()).unwrap();
+        std::fs::write(path("b.json"), part(&[("y", 2.0)]).to_json()).unwrap();
+        bench_baseline(&args(&format!(
+            "bench-baseline --current {},{} --out {}",
+            path("a.json"),
+            path("b.json"),
+            path("armed.json")
+        )))
+        .unwrap();
+        let armed = BenchReport::from_file(&path("armed.json")).unwrap();
+        assert!(!armed.provisional);
+        assert_eq!(armed.benches.len(), 2);
+        assert_eq!(armed.benches["x"], 1.0);
+        // empty merge errors
+        std::fs::write(path("empty.json"), "{\"benches\": {}}").unwrap();
+        assert!(bench_baseline(&args(&format!(
+            "bench-baseline --current {} --out {}",
+            path("empty.json"),
+            path("armed2.json")
+        )))
+        .is_err());
     }
 
     #[test]

@@ -9,5 +9,6 @@ pub mod runner;
 pub use args::Args;
 pub use runner::{
     build_partition, build_schedule, build_stream, build_utility_model, run_mock_experiment,
-    run_mock_on_schedule, run_mock_on_stream, run_pjrt_experiment, run_scenario, ExperimentOutput,
+    run_mock_on_schedule, run_mock_on_schedule_routed, run_mock_on_stream, run_pjrt_experiment,
+    run_scenario, ExperimentOutput,
 };

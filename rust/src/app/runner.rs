@@ -2,7 +2,9 @@
 //! mock (scheduler-level) and PJRT (full three-layer) backends.
 
 use crate::cfg::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig, Scenario};
-use crate::connectivity::{ConnectivityParams, ConnectivitySchedule, ConnectivityStream};
+use crate::connectivity::{
+    ConnectivityParams, ConnectivitySchedule, ConnectivityStream, ContactGraph,
+};
 use crate::data::{
     partition::cell_visits, partition_iid, partition_noniid, Dataset, Partition, SynthConfig,
 };
@@ -183,6 +185,18 @@ pub fn run_mock_on_schedule(
     sched: &ConnectivitySchedule,
     stop_at: Option<f64>,
 ) -> Result<ExperimentOutput> {
+    run_mock_on_schedule_routed(cfg, sched, None, stop_at)
+}
+
+/// [`run_mock_on_schedule`] with an optional routed contact graph
+/// (ADR-0005): scenario grids with ISLs route the schedule once and share
+/// the graph across every algorithm, exactly like they share the schedule.
+pub fn run_mock_on_schedule_routed(
+    cfg: &ExperimentConfig,
+    sched: &ConnectivitySchedule,
+    graph: Option<&ContactGraph>,
+    stop_at: Option<f64>,
+) -> Result<ExperimentOutput> {
     anyhow::ensure!(
         sched.n_sats == cfg.n_sats,
         "schedule covers {} satellites but config says {}",
@@ -195,7 +209,8 @@ pub fn run_mock_on_schedule(
     );
     let (trainer, planner) = mock_parts(cfg)?;
     let mut agg = CpuAggregator;
-    let mut engine = Engine::new(sched, &trainer, &mut agg, engine_cfg(cfg, stop_at), planner);
+    let mut engine = Engine::new(sched, &trainer, &mut agg, engine_cfg(cfg, stop_at), planner)
+        .with_contact_graph(graph);
     Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
 }
 
@@ -235,6 +250,7 @@ pub fn run_mock_on_stream(
 pub fn run_scenario(sc: &Scenario, stop_at: Option<f64>) -> Result<Vec<ExperimentOutput>> {
     sc.validate()?;
     if sc.engine_mode == EngineMode::Streamed {
+        // ISLs (if any) ride inside the stream: chunks come out routed
         let (_, stream) = sc.build_stream();
         return sc
             .algorithms
@@ -242,10 +258,14 @@ pub fn run_scenario(sc: &Scenario, stop_at: Option<f64>) -> Result<Vec<Experimen
             .map(|&alg| run_mock_on_stream(&sc.experiment_config(alg), &stream, stop_at))
             .collect();
     }
-    let (_, sched) = sc.build_schedule();
+    let (constellation, sched) = sc.build_schedule();
+    // one routed graph shared across the grid, like the schedule itself
+    let graph = sc.build_contact_graph(&constellation, &sched);
     sc.algorithms
         .iter()
-        .map(|&alg| run_mock_on_schedule(&sc.experiment_config(alg), &sched, stop_at))
+        .map(|&alg| {
+            run_mock_on_schedule_routed(&sc.experiment_config(alg), &sched, graph.as_ref(), stop_at)
+        })
         .collect()
 }
 
@@ -389,6 +409,23 @@ mod tests {
                 assert!(!out.result.trace.curve.points.is_empty(), "{name}");
             }
         }
+    }
+
+    #[test]
+    fn run_scenario_routes_isl_builtins() {
+        // streamed (as declared) and dense (shared ContactGraph) both run
+        let mut sc = Scenario::builtin("isl-iridium-66").unwrap().scaled(Some(12), Some(24));
+        sc.algorithms = vec![AlgorithmKind::FedBuff];
+        let streamed = run_scenario(&sc, None).unwrap();
+        assert_eq!(streamed.len(), 1);
+        let mut dense = sc.clone();
+        dense.engine_mode = EngineMode::Dense;
+        let douts = run_scenario(&dense, None).unwrap();
+        crate::testing::assert_same_run(
+            &streamed[0].result,
+            &douts[0].result,
+            "isl-iridium-66 streamed vs dense",
+        );
     }
 
     #[test]

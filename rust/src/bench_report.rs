@@ -5,16 +5,19 @@
 //! the `FEDSPACE_BENCH_JSON` env var names a file, [`flush_to_env_path`]
 //! writes them as a small JSON document. CI runs the benches, then
 //! `fedspace bench-check` parses those documents plus the committed
-//! baseline (`rust/BENCH_pr3.json`), renders a markdown comparison table
-//! into the GitHub step summary, and **fails the build** when any tracked
-//! path is more than `--max-regress` (default 25%) slower than its
-//! baseline median.
+//! baselines (`rust/BENCH_pr*.json`, listed newest first — the first
+//! non-provisional one gates), renders a markdown comparison table into
+//! the GitHub step summary, and **fails the build** when any tracked path
+//! is more than `--max-regress` (default 25%) slower than its baseline
+//! median. Tracked paths absent from the baseline are a *counted warning*
+//! ([`Comparison::new_paths`]), never a silent pass.
 //!
 //! A baseline with `"provisional": true` (or no overlapping keys) puts the
 //! gate in bootstrap mode: the comparison is reported but never fails, and
 //! the summary explains how to commit real numbers. That is how the gate
-//! ships from an authoring environment that cannot run the benches — the
-//! first CI run produces the artifact to commit.
+//! ships from an authoring environment that cannot run the benches — every
+//! green CI run emits a ready-to-commit armed baseline via
+//! `fedspace bench-baseline` (the `bench-baseline` artifact).
 //!
 //! JSON support is a deliberately tiny in-repo subset (objects, arrays,
 //! strings without `\u` escapes, numbers, booleans, null) — consistent
@@ -151,6 +154,11 @@ pub struct Comparison {
     pub rows: Vec<CompareRow>,
     /// Names of rows whose status is [`RowStatus::Regressed`].
     pub regressions: Vec<String>,
+    /// Names of rows whose status is [`RowStatus::NewInCurrent`] — tracked
+    /// paths with no baseline entry. Not a pass: they are reported as a
+    /// counted warning so a new bench cannot silently dodge the gate until
+    /// the baseline is refreshed.
+    pub new_paths: Vec<String>,
     /// True when the baseline is provisional or shares no keys with the
     /// current run — report, never fail.
     pub bootstrap: bool,
@@ -192,8 +200,10 @@ pub fn compare(baseline: &BenchReport, current: &BenchReport, max_regress: f64) 
             }),
         }
     }
+    let mut new_paths = Vec::new();
     for (name, &cur) in &current.benches {
         if !baseline.benches.contains_key(name) {
+            new_paths.push(name.clone());
             rows.push(CompareRow {
                 name: name.clone(),
                 baseline_s: None,
@@ -207,7 +217,7 @@ pub fn compare(baseline: &BenchReport, current: &BenchReport, max_regress: f64) 
     if bootstrap {
         regressions.clear();
     }
-    Comparison { rows, regressions, bootstrap, max_regress }
+    Comparison { rows, regressions, new_paths, bootstrap, max_regress }
 }
 
 impl Comparison {
@@ -219,8 +229,8 @@ impl Comparison {
             s.push_str(
                 "**Bootstrap mode** — the committed baseline is provisional (or shares no \
                  tracked paths with this run), so nothing fails yet. To arm the gate, download \
-                 the `bench-output` artifact of this run and commit its merged JSON as \
-                 `rust/BENCH_pr3.json` with `\"provisional\": false`.\n\n",
+                 this run's `bench-baseline` artifact (already merged, `\"provisional\": \
+                 false`) and commit it as the newest `rust/BENCH_pr*.json`.\n\n",
             );
         } else if self.regressions.is_empty() {
             s.push_str(&format!(
@@ -230,11 +240,20 @@ impl Comparison {
         } else {
             s.push_str(&format!(
                 "**FAIL** — {} tracked path(s) regressed more than {:.0}%: {}. If the slowdown \
-                 is intended, update `rust/BENCH_pr3.json` from this run's `bench-output` \
+                 is intended, commit a refreshed baseline from this run's `bench-output` \
                  artifact and justify the change in the PR.\n\n",
                 self.regressions.len(),
                 self.max_regress * 100.0,
                 self.regressions.join(", ")
+            ));
+        }
+        if !self.new_paths.is_empty() {
+            s.push_str(&format!(
+                "**Warning** — {} tracked path(s) have no baseline entry and are not \
+                 gated: {}. Refresh the committed baseline (the CI `bench-baseline` \
+                 artifact is ready to commit) so they join the gate.\n\n",
+                self.new_paths.len(),
+                self.new_paths.iter().map(|n| format!("`{n}`")).collect::<Vec<_>>().join(", ")
             ));
         }
         s.push_str("| tracked path | baseline | current | ratio | status |\n");
@@ -483,6 +502,7 @@ mod tests {
         let cmp = compare(&base, &cur, 0.25);
         assert!(!cmp.bootstrap);
         assert_eq!(cmp.regressions, vec!["b".to_string()]);
+        assert_eq!(cmp.new_paths, vec!["fresh".to_string()]);
         let by_name = |n: &str| cmp.rows.iter().find(|r| r.name == n).unwrap().status;
         assert_eq!(by_name("a"), RowStatus::Ok);
         assert_eq!(by_name("b"), RowStatus::Regressed);
@@ -491,6 +511,12 @@ mod tests {
         let md = cmp.to_markdown();
         assert!(md.contains("REGRESSED"));
         assert!(md.contains("| `a` |"));
+        // unknown bench names surface as a counted warning, not a pass
+        assert!(md.contains("**Warning** — 1 tracked path(s)"), "{md}");
+        assert!(md.contains("`fresh`"));
+        let clean = compare(&base, &report(&[("a", 1.0), ("b", 1.0), ("gone", 1.0)], false), 0.25);
+        assert!(clean.new_paths.is_empty());
+        assert!(!clean.to_markdown().contains("Warning"));
     }
 
     #[test]

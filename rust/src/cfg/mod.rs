@@ -7,5 +7,5 @@ pub mod scenario;
 pub mod toml;
 
 pub use experiment::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig};
-pub use scenario::{ConstellationSpec, Scenario, ShellSpec, StationNetwork};
+pub use scenario::{ConstellationSpec, IslMode, IslSpec, Scenario, ShellSpec, StationNetwork};
 pub use toml::{parse_toml, TomlValue};

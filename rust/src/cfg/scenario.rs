@@ -16,10 +16,13 @@
 
 use super::experiment::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig};
 use super::toml::{parse_toml, TomlDoc, TomlValue};
-use crate::connectivity::{ConnectivityParams, ConnectivitySchedule, ConnectivityStream};
+use crate::connectivity::{
+    ConnectivityParams, ConnectivitySchedule, ConnectivityStream, ContactGraph, IslParams,
+    IslTopology,
+};
 use crate::orbit::{
     planet_ground_stations, planet_labs_like, Constellation, DowntimeWindow, GroundStation,
-    WalkerPattern, WalkerSpec,
+    PlaneId, WalkerPattern, WalkerSpec,
 };
 use anyhow::{bail, Context, Result};
 
@@ -111,22 +114,95 @@ impl ConstellationSpec {
             }
             ConstellationSpec::Shells { shells } => {
                 let mut orbits = Vec::with_capacity(self.n_sats());
-                for sh in shells {
-                    orbits.extend(
-                        Constellation::walker(&WalkerSpec {
-                            pattern: WalkerPattern::Delta,
-                            n_sats: sh.n_sats,
-                            planes: sh.planes,
-                            phasing: sh.phasing,
-                            alt_m: sh.alt_km * 1e3,
-                            inc_deg: sh.inc_deg,
-                        })
-                        .orbits,
-                    );
+                let mut plane_ids = Vec::with_capacity(self.n_sats());
+                for (group, sh) in shells.iter().enumerate() {
+                    let sub = Constellation::walker(&WalkerSpec {
+                        pattern: WalkerPattern::Delta,
+                        n_sats: sh.n_sats,
+                        planes: sh.planes,
+                        phasing: sh.phasing,
+                        alt_m: sh.alt_km * 1e3,
+                        inc_deg: sh.inc_deg,
+                    });
+                    // each shell is its own ISL group: links never cross
+                    // shells (different altitudes)
+                    plane_ids
+                        .extend(sub.plane_ids.iter().map(|p| PlaneId { group, plane: p.plane }));
+                    orbits.extend(sub.orbits);
                 }
-                Constellation { orbits, downtime: Vec::new() }
+                Constellation { orbits, downtime: Vec::new(), plane_ids }
             }
         }
+    }
+}
+
+/// Which inter-satellite links a scenario's constellation maintains
+/// (ADR-0005).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum IslMode {
+    /// No ISLs: connectivity stays satellite⇄station only (the paper's
+    /// model, and this repo's model up to PR 3).
+    #[default]
+    Off,
+    /// Permanent intra-plane ring links only (each satellite ⇄ its two
+    /// in-plane neighbors).
+    IntraPlane,
+    /// Intra-plane rings plus range-gated links to satellites in adjacent
+    /// planes of the same shell (the "+grid" LEO network model).
+    IntraCross,
+}
+
+impl IslMode {
+    /// Parse the TOML/CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => IslMode::Off,
+            "intra-plane" | "intra_plane" | "intra" | "ring" => IslMode::IntraPlane,
+            "intra-cross" | "intra_cross" | "intra+cross" | "grid" => IslMode::IntraCross,
+            other => bail!("unknown ISL mode {other:?} (off | intra-plane | intra-cross)"),
+        })
+    }
+
+    /// Canonical lowercase name (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            IslMode::Off => "off",
+            IslMode::IntraPlane => "intra-plane",
+            IslMode::IntraCross => "intra-cross",
+        }
+    }
+}
+
+/// Inter-satellite-link model of a scenario (ADR-0005): which links exist,
+/// how far routing may relay, and what each hop costs in slots. With
+/// `mode = Off` every other field is inert and the scenario behaves —
+/// bit for bit — like the pre-ISL engine (asserted in tests).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IslSpec {
+    /// Which link families the constellation maintains.
+    pub mode: IslMode,
+    /// Maximum relay hops from a satellite to its ground-visible sink.
+    pub max_hops: usize,
+    /// Cross-plane links switch on only within this slant range [km]
+    /// (ignored in `IntraPlane` mode).
+    pub max_range_km: f64,
+    /// Relay latency charged per hop, in engine slots, on both the upload
+    /// and the broadcast leg. 0 models ISL forwarding as fast relative to
+    /// T0 (ms-scale links vs a 15-min slot); raise it for store-and-forward
+    /// regimes where a hop costs a scheduling slot.
+    pub hop_delay_slots: usize,
+}
+
+impl Default for IslSpec {
+    fn default() -> Self {
+        IslSpec { mode: IslMode::Off, max_hops: 3, max_range_km: 4000.0, hop_delay_slots: 0 }
+    }
+}
+
+impl IslSpec {
+    /// Does this spec enable any inter-satellite links?
+    pub fn enabled(&self) -> bool {
+        self.mode != IslMode::Off
     }
 }
 
@@ -207,6 +283,8 @@ pub struct Scenario {
     pub chunk_len: usize,
     /// Scheduled per-satellite outages (deterministic, planner-visible).
     pub downtime: Vec<DowntimeWindow>,
+    /// Inter-satellite-link model (ADR-0005); `IslMode::Off` by default.
+    pub isl: IslSpec,
 }
 
 impl Default for Scenario {
@@ -225,6 +303,7 @@ impl Default for Scenario {
             engine_mode: EngineMode::Dense,
             chunk_len: ConnectivityStream::DEFAULT_CHUNK_LEN,
             downtime: Vec::new(),
+            isl: IslSpec::default(),
         }
     }
 }
@@ -287,6 +366,29 @@ impl Scenario {
                 bail!("empty downtime window for satellite {}", w.sat);
             }
         }
+        if self.isl.enabled() {
+            if self.isl.max_hops == 0 {
+                bail!("ISLs need max_hops >= 1");
+            }
+            if self.isl.max_hops > u8::MAX as usize {
+                bail!("isl max_hops {} exceeds the u8 hop counter", self.isl.max_hops);
+            }
+            // the worst-case relay charge must stay within the horizon: a
+            // longer delay can never deliver anything, and an unbounded
+            // value would wrap the engine's delay arithmetic in release
+            match self.isl.max_hops.checked_mul(self.isl.hop_delay_slots) {
+                Some(worst) if worst <= self.n_steps => {}
+                _ => bail!(
+                    "isl max_hops x hop_delay_slots ({} x {}) exceeds the {}-step horizon",
+                    self.isl.max_hops,
+                    self.isl.hop_delay_slots,
+                    self.n_steps
+                ),
+            }
+            if self.isl.mode == IslMode::IntraCross && self.isl.max_range_km <= 0.0 {
+                bail!("cross-plane ISLs need a positive max_range_km");
+            }
+        }
         Ok(())
     }
 
@@ -300,6 +402,8 @@ impl Scenario {
             "dove-dropout",
             "walker-starlink-4408",
             "kuiper-3236",
+            "isl-iridium-66",
+            "isl-starlink-1584",
         ]
     }
 
@@ -424,6 +528,63 @@ impl Scenario {
                 engine_mode: EngineMode::Streamed,
                 ..Default::default()
             },
+            "isl-iridium-66" => Scenario {
+                name: "isl-iridium-66".into(),
+                summary: "the Iridium shell with +grid ISLs (intra-plane rings + range-gated \
+                          cross-plane links): non-visible satellites relay through a \
+                          ground-visible sink, full algorithm grid (Matthiesen et al. / \
+                          Elmahallawy & Luo regime)"
+                    .into(),
+                constellation: ConstellationSpec::Walker {
+                    pattern: WalkerPattern::Star,
+                    n_sats: 66,
+                    planes: 6,
+                    phasing: 2,
+                    alt_km: 780.0,
+                    inc_deg: 86.4,
+                },
+                stations: StationNetwork::Polar4,
+                algorithms: vec![
+                    AlgorithmKind::Sync,
+                    AlgorithmKind::Async,
+                    AlgorithmKind::FedBuff,
+                    AlgorithmKind::FedSpace,
+                ],
+                fedbuff_m: 16,
+                engine_mode: EngineMode::Streamed,
+                isl: IslSpec {
+                    mode: IslMode::IntraCross,
+                    max_hops: 3,
+                    max_range_km: 4000.0,
+                    hop_delay_slots: 0,
+                },
+                ..Default::default()
+            },
+            "isl-starlink-1584" => Scenario {
+                name: "isl-starlink-1584".into(),
+                summary: "Starlink shell 1 with intra-plane ring ISLs: the 1584-satellite \
+                          Walker delta where every plane ships updates through its visible \
+                          members, 1 day, streamed engine"
+                    .into(),
+                constellation: ConstellationSpec::Walker {
+                    pattern: WalkerPattern::Delta,
+                    n_sats: 1584,
+                    planes: 72,
+                    phasing: 17,
+                    alt_km: 550.0,
+                    inc_deg: 53.0,
+                },
+                n_steps: 96,
+                algorithms: vec![AlgorithmKind::Async, AlgorithmKind::FedBuff],
+                engine_mode: EngineMode::Streamed,
+                isl: IslSpec {
+                    mode: IslMode::IntraPlane,
+                    max_hops: 4,
+                    hop_delay_slots: 0,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
             "dove-dropout" => Scenario {
                 name: "dove-dropout".into(),
                 summary: "paper fleet with mid-run failures: 4 satellites go dark on day 2, \
@@ -503,6 +664,13 @@ impl Scenario {
                 DataDist::NonIid => "noniid",
             }
         );
+        if self.isl.enabled() {
+            let _ = writeln!(s, "\n[isl]");
+            let _ = writeln!(s, "mode = \"{}\"", self.isl.mode.name());
+            let _ = writeln!(s, "max_hops = {}", self.isl.max_hops);
+            let _ = writeln!(s, "max_range_km = {}", self.isl.max_range_km);
+            let _ = writeln!(s, "hop_delay_slots = {}", self.isl.hop_delay_slots);
+        }
         if !self.downtime.is_empty() {
             let col = |f: fn(&DowntimeWindow) -> usize| -> String {
                 self.downtime.iter().map(|w| f(w).to_string()).collect::<Vec<_>>().join(", ")
@@ -680,6 +848,21 @@ impl Scenario {
             sc.dist = DataDist::parse(v)?;
         }
 
+        if doc.get("isl").is_some() {
+            if let Some(v) = get_str(doc, "isl", "mode")? {
+                sc.isl.mode = IslMode::parse(v)?;
+            }
+            if let Some(v) = get_usize(doc, "isl", "max_hops")? {
+                sc.isl.max_hops = v;
+            }
+            if let Some(v) = get_f64(doc, "isl", "max_range_km")? {
+                sc.isl.max_range_km = v;
+            }
+            if let Some(v) = get_usize(doc, "isl", "hop_delay_slots")? {
+                sc.isl.hop_delay_slots = v;
+            }
+        }
+
         if doc.get("downtime").is_some() {
             let col = |key: &str| -> Result<Vec<usize>> {
                 match get(doc, "downtime", key) {
@@ -748,17 +931,57 @@ impl Scenario {
     /// Build constellation + chunked connectivity stream — the streamed-
     /// engine counterpart of [`Self::build_schedule`]. Downtime windows are
     /// applied per chunk inside the stream, so chunks concatenate to
-    /// exactly what `build_schedule` would materialize.
+    /// exactly what `build_schedule` would materialize; with ISLs enabled
+    /// the stream also routes every chunk (ADR-0005), concatenating to
+    /// exactly the dense [`ContactGraph`].
     pub fn build_stream(&self) -> (Constellation, ConnectivityStream) {
         let (constellation, stations, params) = self.connectivity_inputs();
-        let stream = ConnectivityStream::new(
+        let mut stream = ConnectivityStream::new(
             &constellation,
             &stations,
             self.n_steps,
             params,
             self.chunk_len,
         );
+        if let Some(topology) = self.build_isl(&constellation) {
+            stream = stream.with_isl(topology);
+        }
         (constellation, stream)
+    }
+
+    /// The scenario's ISL routing topology over an already-built
+    /// constellation (`None` when [`IslSpec::enabled`] is false). The
+    /// constellation must be this scenario's own
+    /// ([`Self::build_constellation`]) so plane metadata and downtime line
+    /// up.
+    pub fn build_isl(&self, constellation: &Constellation) -> Option<IslTopology> {
+        if !self.isl.enabled() {
+            return None;
+        }
+        let params = IslParams {
+            max_hops: self.isl.max_hops,
+            hop_delay_slots: self.isl.hop_delay_slots,
+            cross_plane: self.isl.mode == IslMode::IntraCross,
+            max_range_m: self.isl.max_range_km * 1e3,
+            t0_s: self.t0_s,
+        };
+        // validate() bounds the spec and every ConstellationSpec builder
+        // emits plane metadata, so construction cannot fail here
+        Some(
+            IslTopology::new(constellation, params)
+                .expect("spec-built constellations always carry plane metadata"),
+        )
+    }
+
+    /// Route a materialized schedule through the scenario's ISL topology —
+    /// the dense/contact-list counterpart of the routed stream (`None`
+    /// when ISLs are off).
+    pub fn build_contact_graph(
+        &self,
+        constellation: &Constellation,
+        sched: &ConnectivitySchedule,
+    ) -> Option<ContactGraph> {
+        self.build_isl(constellation).map(|t| ContactGraph::build(&t, sched))
     }
 
     /// Experiment configuration for one algorithm of the grid.
@@ -977,6 +1200,103 @@ mod tests {
         assert_eq!(back.chunk_len, 17);
         sc.chunk_len = 0;
         assert!(sc.validate().is_err());
+    }
+
+    #[test]
+    fn isl_builtins_declare_links_and_build_topologies() {
+        let ir = Scenario::builtin("isl-iridium-66").unwrap();
+        assert_eq!(ir.isl.mode, IslMode::IntraCross);
+        assert_eq!(ir.algorithms.len(), 4, "the ISL grid must cover all four algorithms");
+        let c = ir.build_constellation();
+        let topo = ir.build_isl(&c).expect("isl on");
+        assert_eq!(topo.n_sats(), 66);
+        let sl = Scenario::builtin("isl-starlink-1584").unwrap();
+        assert_eq!(sl.isl.mode, IslMode::IntraPlane);
+        assert_eq!(sl.engine_mode, EngineMode::Streamed);
+        // every pre-ISL builtin keeps ISLs off (trace compatibility)
+        for name in ["paper-fig7", "walker-starlink-4408", "dove-dropout"] {
+            let sc = Scenario::builtin(name).unwrap();
+            assert!(!sc.isl.enabled(), "{name}");
+            let c = sc.build_constellation();
+            assert!(sc.build_isl(&c).is_none(), "{name}");
+        }
+    }
+
+    #[test]
+    fn isl_spec_round_trips_and_validates() {
+        let mut sc = Scenario::builtin("isl-iridium-66").unwrap();
+        sc.isl.max_hops = 5;
+        sc.isl.hop_delay_slots = 2;
+        let back = Scenario::from_toml_text(&sc.to_toml()).unwrap();
+        assert_eq!(back.isl, sc.isl);
+        // off specs emit no [isl] section and parse back to the default
+        let off = Scenario::builtin("paper-fig7").unwrap();
+        assert!(!off.to_toml().contains("[isl]"));
+        assert_eq!(Scenario::from_toml_text(&off.to_toml()).unwrap().isl, IslSpec::default());
+        // invalid specs rejected
+        sc.isl.max_hops = 0;
+        assert!(sc.validate().is_err());
+        sc.isl.max_hops = 3;
+        sc.isl.max_range_km = 0.0;
+        assert!(sc.validate().is_err(), "cross mode needs a positive range");
+        sc.isl.mode = IslMode::IntraPlane;
+        sc.validate().unwrap();
+        // the worst-case relay charge must fit the horizon (and the check
+        // itself must not overflow)
+        sc.isl.hop_delay_slots = usize::MAX;
+        assert!(sc.validate().is_err(), "unbounded hop delay must be rejected");
+        sc.isl.hop_delay_slots = sc.n_steps; // 3 hops x n_steps > n_steps
+        assert!(sc.validate().is_err());
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[isl]\nmode = \"laser-mesh\""
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn isl_mode_parse_roundtrip() {
+        for m in [IslMode::Off, IslMode::IntraPlane, IslMode::IntraCross] {
+            assert_eq!(IslMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(IslMode::parse("mesh").is_err());
+    }
+
+    #[test]
+    fn scaled_keeps_isl_spec() {
+        let sc = Scenario::builtin("isl-iridium-66").unwrap().scaled(Some(24), Some(96));
+        assert_eq!(sc.isl.mode, IslMode::IntraCross);
+        sc.validate().unwrap();
+        // the scaled constellation still carries plane metadata for ISLs
+        let c = sc.build_constellation();
+        assert!(sc.build_isl(&c).is_some());
+    }
+
+    #[test]
+    fn routed_stream_concatenates_to_dense_contact_graph() {
+        let sc = Scenario::builtin("isl-iridium-66").unwrap().scaled(Some(18), Some(48));
+        let (c, sched) = sc.build_schedule();
+        let graph = sc.build_contact_graph(&c, &sched).expect("isl on");
+        let (_, stream) = sc.build_stream();
+        assert!(stream.has_isl());
+        let mut chunk = crate::connectivity::ScheduleChunk::default();
+        for ci in 0..stream.n_chunks() {
+            stream.fill_chunk(ci, &mut chunk);
+            for i in chunk.start()..chunk.end() {
+                let (s, h) = chunk.contacts_at(i);
+                assert_eq!(s, graph.sats_at(i), "step {i}");
+                assert_eq!(h, graph.hops_at(i), "step {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn shells_plane_metadata_never_crosses_shells() {
+        let sc = Scenario::builtin("walker-starlink-4408").unwrap().scaled(Some(50), Some(24));
+        let c = sc.build_constellation();
+        assert_eq!(c.plane_ids.len(), c.len());
+        let groups: std::collections::BTreeSet<usize> =
+            c.plane_ids.iter().map(|p| p.group).collect();
+        assert!(groups.len() >= 2, "scaled shell stack should keep >= 2 shells");
     }
 
     #[test]

@@ -1,0 +1,445 @@
+//! Per-step contact *graphs*: bounded-hop ISL routing on top of the
+//! satellite⇄station contact sets (ADR-0005).
+//!
+//! PR 3's connectivity is a per-step *set* C_i ⊆ sats; with inter-satellite
+//! links it becomes a graph whose useful projection for the FL layer is the
+//! **reachability relation**: satellite k is reachable at step i when an
+//! ISL path of at most `max_hops` hops ends at a ground-visible sink
+//! satellite (hop 0 = k itself is in C_i). [`IslTopology::route_step`]
+//! computes that relation with one breadth-first search per step, sourced
+//! at the direct contacts, expanding over the static intra-plane rings and
+//! the range-gated adjacent-plane candidates of
+//! [`crate::orbit::IslGeometry`], and skipping satellites silenced by a
+//! downtime window (a powered-off satellite neither uploads nor relays).
+//!
+//! Determinism mirrors the streamed-connectivity discipline (ADR-0004):
+//! the cross-plane range gate samples positions at the window midpoint
+//! `(i + 0.5)·T0` derived from the **absolute** step index, and the BFS
+//! visits in ascending-id frontier order — so the dense whole-horizon
+//! [`ContactGraph`] and the per-chunk routing inside
+//! [`crate::connectivity::ScheduleChunk`] produce bit-identical reach sets
+//! and hop counts, which the engine-mode bit-identity tests rely on.
+//!
+//! What the rest of the stack sees:
+//! - the engine walks `(reach set, hop counts)` per step and charges
+//!   `hops × hop_delay_slots` of relay latency on both the upload and the
+//!   broadcast leg (`sim::engine`), attributing uploads to their *origin*
+//!   satellite so staleness is measured from local train time;
+//! - the scheduler sees reachability through [`StepView`] — a
+//!   [`ContactGraph`] (dense modes) or a routed
+//!   [`crate::connectivity::WindowView`] (streamed mode) — so
+//!   forecast/search/planner count a relayed satellite as connected
+//!   without any code change of their own.
+
+use super::schedule::{ConnectivitySchedule, StepView};
+use crate::orbit::{Constellation, IslGeometry, Vec3};
+use anyhow::{ensure, Result};
+
+/// Resolved ISL routing parameters (the connectivity-layer mirror of
+/// `cfg::IslSpec`, which cannot be imported here without a cycle).
+#[derive(Clone, Copy, Debug)]
+pub struct IslParams {
+    /// Maximum relay hops from a satellite to its ground-visible sink.
+    pub max_hops: usize,
+    /// Relay latency charged per hop, in engine slots.
+    pub hop_delay_slots: usize,
+    /// Maintain range-gated adjacent-plane links in addition to the rings.
+    pub cross_plane: bool,
+    /// Cross-plane links switch on only within this slant range [m].
+    pub max_range_m: f64,
+    /// Wall-clock seconds per time index (for the range-gate sample time).
+    pub t0_s: f64,
+}
+
+/// Recycled working memory of [`IslTopology::route_step`]: per-satellite
+/// hop distances, the BFS frontier, and the per-step position table.
+#[derive(Clone, Debug, Default)]
+pub struct RouteScratch {
+    dist: Vec<u8>,
+    queue: Vec<usize>,
+    pos: Vec<Vec3>,
+}
+
+/// A constellation's ISL routing model: link-candidate geometry plus the
+/// routing bounds and the downtime windows that silence relays.
+#[derive(Clone, Debug)]
+pub struct IslTopology {
+    geo: IslGeometry,
+    /// Maximum relay hops (reach entries never exceed this).
+    pub max_hops: usize,
+    /// Relay latency charged per hop, in engine slots.
+    pub hop_delay_slots: usize,
+    cross_plane: bool,
+    max_range_m: f64,
+    t0_s: f64,
+    /// Downtime windows indexed by satellite: `(from_step, until_step)`,
+    /// half-open — mirrors `ConnectivityStream`'s per-chunk filter.
+    down_by_sat: Vec<Vec<(usize, usize)>>,
+}
+
+impl IslTopology {
+    /// Build the routing model for a constellation (downtime windows are
+    /// taken from the constellation itself, like the streamed path does).
+    pub fn new(constellation: &Constellation, params: IslParams) -> Result<Self> {
+        ensure!(params.max_hops >= 1, "ISL routing needs max_hops >= 1");
+        ensure!(params.max_hops <= u8::MAX as usize, "max_hops must fit a u8 hop counter");
+        let geo = IslGeometry::new(constellation)?;
+        let mut down_by_sat = vec![Vec::new(); constellation.len()];
+        for w in &constellation.downtime {
+            down_by_sat[w.sat].push((w.from_step, w.until_step));
+        }
+        Ok(IslTopology {
+            geo,
+            max_hops: params.max_hops,
+            hop_delay_slots: params.hop_delay_slots,
+            cross_plane: params.cross_plane,
+            max_range_m: params.max_range_m,
+            t0_s: params.t0_s,
+            down_by_sat,
+        })
+    }
+
+    /// Number of satellites the topology covers.
+    pub fn n_sats(&self) -> usize {
+        self.geo.n_sats()
+    }
+
+    /// Is satellite `k` silenced by a downtime window at step `i`?
+    fn down(&self, k: usize, i: usize) -> bool {
+        self.down_by_sat[k].iter().any(|&(from, until)| (from..until).contains(&i))
+    }
+
+    /// Range-gate sample instant of step `i`: the window midpoint, derived
+    /// from the absolute index so dense and chunked routing agree exactly.
+    fn sample_time(&self, i: usize) -> f64 {
+        (i as f64 + 0.5) * self.t0_s
+    }
+
+    /// Is the ISL between `a` and `b` up at step `i`? True for ring
+    /// neighbors and for in-range adjacent-plane candidates, with both
+    /// endpoints alive. Symmetric by construction (tested).
+    pub fn is_linked(&self, a: usize, b: usize, i: usize) -> bool {
+        let n = self.n_sats();
+        if a == b || a >= n || b >= n || self.down(a, i) || self.down(b, i) {
+            return false;
+        }
+        if self.geo.ring_neighbors(a).contains(&b) {
+            return true;
+        }
+        if self.cross_plane && self.geo.cross_candidates(a).contains(&b) {
+            let t = self.sample_time(i);
+            let d = self.geo.position_at(a, t).sub(&self.geo.position_at(b, t)).norm();
+            return d <= self.max_range_m;
+        }
+        false
+    }
+
+    /// Compute the reach set of step `i`: `out_sats` gets the reachable
+    /// satellite ids ascending, `out_hops` the parallel minimal hop counts
+    /// (0 ⇔ the satellite is in `direct`). `direct` must be the step's
+    /// ground-contact set, sorted ascending, already downtime-filtered.
+    pub fn route_step(
+        &self,
+        i: usize,
+        direct: &[usize],
+        scratch: &mut RouteScratch,
+        out_sats: &mut Vec<usize>,
+        out_hops: &mut Vec<u8>,
+    ) {
+        out_sats.clear();
+        out_hops.clear();
+        if direct.is_empty() {
+            // relays need a ground-visible sink: nobody visible, nobody reachable
+            return;
+        }
+        let k = self.n_sats();
+        scratch.dist.clear();
+        scratch.dist.resize(k, u8::MAX);
+        scratch.queue.clear();
+        if self.cross_plane {
+            self.geo.positions_at(self.sample_time(i), &mut scratch.pos);
+        }
+        for &s in direct {
+            scratch.dist[s] = 0;
+            scratch.queue.push(s);
+        }
+        let mut head = 0usize;
+        while head < scratch.queue.len() {
+            let u = scratch.queue[head];
+            head += 1;
+            let d = scratch.dist[u];
+            if d as usize >= self.max_hops {
+                continue;
+            }
+            for &v in self.geo.ring_neighbors(u) {
+                if scratch.dist[v] == u8::MAX && !self.down(v, i) {
+                    scratch.dist[v] = d + 1;
+                    scratch.queue.push(v);
+                }
+            }
+            if self.cross_plane {
+                for &v in self.geo.cross_candidates(u) {
+                    if scratch.dist[v] != u8::MAX
+                        || scratch.pos[u].sub(&scratch.pos[v]).norm() > self.max_range_m
+                    {
+                        continue;
+                    }
+                    if !self.down(v, i) {
+                        scratch.dist[v] = d + 1;
+                        scratch.queue.push(v);
+                    }
+                }
+            }
+        }
+        for (s, &d) in scratch.dist.iter().enumerate() {
+            if d != u8::MAX {
+                out_sats.push(s);
+                out_hops.push(d);
+            }
+        }
+    }
+}
+
+/// The whole-horizon routed relation, materialized: per step the reachable
+/// satellites (ascending) with their minimal hop counts, plus the event
+/// list the contact-list engine walks. The routed counterpart of
+/// [`ConnectivitySchedule`] for the precomputed engine modes; streamed mode
+/// routes chunk by chunk instead ([`crate::connectivity::ScheduleChunk`]).
+#[derive(Clone, Debug)]
+pub struct ContactGraph {
+    /// sets[i] = reachable satellite ids at step i, ascending.
+    sets: Vec<Vec<usize>>,
+    /// hops[i] = minimal hop counts parallel to `sets[i]` (0 = direct).
+    hops: Vec<Vec<u8>>,
+    /// Steps with at least one reachable satellite, ascending.
+    active: Vec<usize>,
+    n_sats: usize,
+    /// Relay latency the engine charges per hop, in slots (copied from the
+    /// topology so the graph is self-contained).
+    pub hop_delay_slots: usize,
+}
+
+impl ContactGraph {
+    /// Route every step of a materialized schedule through the topology.
+    pub fn build(topology: &IslTopology, sched: &ConnectivitySchedule) -> Self {
+        assert_eq!(
+            topology.n_sats(),
+            sched.n_sats,
+            "topology covers {} satellites but the schedule covers {}",
+            topology.n_sats(),
+            sched.n_sats
+        );
+        let n_steps = sched.n_steps();
+        let mut scratch = RouteScratch::default();
+        let mut sets = Vec::with_capacity(n_steps);
+        let mut hops = Vec::with_capacity(n_steps);
+        let mut active = Vec::new();
+        for i in 0..n_steps {
+            let mut s = Vec::new();
+            let mut h = Vec::new();
+            topology.route_step(i, sched.sats_at(i), &mut scratch, &mut s, &mut h);
+            if !s.is_empty() {
+                active.push(i);
+            }
+            sets.push(s);
+            hops.push(h);
+        }
+        ContactGraph {
+            sets,
+            hops,
+            active,
+            n_sats: sched.n_sats,
+            hop_delay_slots: topology.hop_delay_slots,
+        }
+    }
+
+    /// Number of satellites the graph covers.
+    pub fn n_sats(&self) -> usize {
+        self.n_sats
+    }
+
+    /// Number of time indexes the graph covers.
+    pub fn n_steps(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// Reachable satellites at step `i`, ascending (zero-copy).
+    pub fn sats_at(&self, i: usize) -> &[usize] {
+        &self.sets[i]
+    }
+
+    /// Minimal hop counts parallel to [`Self::sats_at`] (0 = direct).
+    pub fn hops_at(&self, i: usize) -> &[u8] {
+        &self.hops[i]
+    }
+
+    /// Steps with at least one reachable satellite, ascending — the event
+    /// list for the contact-list engine mode.
+    pub fn active_steps(&self) -> &[usize] {
+        &self.active
+    }
+}
+
+impl StepView for ContactGraph {
+    fn n_sats(&self) -> usize {
+        self.n_sats
+    }
+
+    fn n_steps(&self) -> usize {
+        ContactGraph::n_steps(self)
+    }
+
+    fn sats_at(&self, i: usize) -> &[usize] {
+        ContactGraph::sats_at(self, i)
+    }
+
+    fn hops_at(&self, i: usize) -> &[u8] {
+        ContactGraph::hops_at(self, i)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::{DowntimeWindow, WalkerPattern, WalkerSpec};
+
+    /// A single 5-satellite plane: ring 0-1-2-3-4-0.
+    fn ring5() -> Constellation {
+        Constellation::walker(&WalkerSpec {
+            pattern: WalkerPattern::Delta,
+            n_sats: 5,
+            planes: 1,
+            phasing: 0,
+            alt_m: 550e3,
+            inc_deg: 53.0,
+        })
+    }
+
+    fn intra_params(max_hops: usize) -> IslParams {
+        IslParams {
+            max_hops,
+            hop_delay_slots: 0,
+            cross_plane: false,
+            max_range_m: 0.0,
+            t0_s: 900.0,
+        }
+    }
+
+    #[test]
+    fn ring_bfs_finds_minimal_hops() {
+        let c = ring5();
+        let topo = IslTopology::new(&c, intra_params(2)).unwrap();
+        let sched = ConnectivitySchedule::from_sets(vec![vec![0]], 5);
+        let g = ContactGraph::build(&topo, &sched);
+        // walker single plane: phase order is id order, so the ring is
+        // 0-1-2-3-4-0 and hops from {0} are [0, 1, 2, 2, 1]
+        assert_eq!(g.sats_at(0), &[0, 1, 2, 3, 4]);
+        assert_eq!(g.hops_at(0), &[0, 1, 2, 2, 1]);
+    }
+
+    #[test]
+    fn hop_bound_truncates_the_ring() {
+        let c = ring5();
+        let topo = IslTopology::new(&c, intra_params(1)).unwrap();
+        let sched = ConnectivitySchedule::from_sets(vec![vec![0]], 5);
+        let g = ContactGraph::build(&topo, &sched);
+        assert_eq!(g.sats_at(0), &[0, 1, 4]);
+        assert_eq!(g.hops_at(0), &[0, 1, 1]);
+    }
+
+    #[test]
+    fn no_ground_contact_means_no_reach() {
+        let c = ring5();
+        let topo = IslTopology::new(&c, intra_params(3)).unwrap();
+        let sched = ConnectivitySchedule::from_sets(vec![vec![], vec![2]], 5);
+        let g = ContactGraph::build(&topo, &sched);
+        assert!(g.sats_at(0).is_empty());
+        assert!(g.hops_at(0).is_empty());
+        assert_eq!(g.active_steps(), &[1]);
+    }
+
+    #[test]
+    fn downed_satellite_neither_relays_nor_appears() {
+        let c = ring5().with_downtime(vec![DowntimeWindow {
+            sat: 1,
+            from_step: 0,
+            until_step: 1,
+        }]);
+        let topo = IslTopology::new(&c, intra_params(2)).unwrap();
+        // direct sets are already downtime-filtered by the schedule layer
+        let sched = ConnectivitySchedule::from_sets(vec![vec![0], vec![0]], 5);
+        let g = ContactGraph::build(&topo, &sched);
+        // step 0: sat 1 down — the clockwise arm stops, counter-clockwise
+        // still reaches 4 (1 hop) and 3 (2 hops)
+        assert_eq!(g.sats_at(0), &[0, 3, 4]);
+        assert_eq!(g.hops_at(0), &[0, 2, 1]);
+        // step 1: sat 1 recovered, full reach again
+        assert_eq!(g.sats_at(1), &[0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn multiple_sinks_take_the_nearer_one() {
+        let c = ring5();
+        let topo = IslTopology::new(&c, intra_params(2)).unwrap();
+        let sched = ConnectivitySchedule::from_sets(vec![vec![0, 2]], 5);
+        let g = ContactGraph::build(&topo, &sched);
+        assert_eq!(g.sats_at(0), &[0, 1, 2, 3, 4]);
+        // sat 1 and 3 are one hop from a sink either way; 4 is 1 from 0
+        assert_eq!(g.hops_at(0), &[0, 1, 0, 1, 1]);
+    }
+
+    #[test]
+    fn cross_plane_range_gate_is_symmetric_and_effective() {
+        let c = Constellation::walker(&WalkerSpec {
+            pattern: WalkerPattern::Star,
+            n_sats: 12,
+            planes: 3,
+            phasing: 1,
+            alt_m: 780e3,
+            inc_deg: 86.4,
+        });
+        let loose = IslTopology::new(
+            &c,
+            IslParams {
+                max_hops: 2,
+                hop_delay_slots: 0,
+                cross_plane: true,
+                max_range_m: 1e9,
+                t0_s: 900.0,
+            },
+        )
+        .unwrap();
+        let tight = IslTopology::new(
+            &c,
+            IslParams {
+                max_hops: 2,
+                hop_delay_slots: 0,
+                cross_plane: true,
+                max_range_m: 1.0,
+                t0_s: 900.0,
+            },
+        )
+        .unwrap();
+        let mut n_loose = 0usize;
+        let mut n_tight = 0usize;
+        for i in [0usize, 5, 11] {
+            for a in 0..12 {
+                for b in 0..12 {
+                    assert_eq!(loose.is_linked(a, b, i), loose.is_linked(b, a, i));
+                    assert_eq!(tight.is_linked(a, b, i), tight.is_linked(b, a, i));
+                    n_loose += loose.is_linked(a, b, i) as usize;
+                    n_tight += tight.is_linked(a, b, i) as usize;
+                }
+            }
+        }
+        // an effectively-infinite range admits every candidate; a 1-metre
+        // range reduces to the rings alone
+        assert!(n_loose > n_tight);
+        assert!(n_tight > 0, "rings survive any range gate");
+    }
+
+    #[test]
+    fn max_hops_zero_is_rejected() {
+        assert!(IslTopology::new(&ring5(), intra_params(0)).is_err());
+    }
+}

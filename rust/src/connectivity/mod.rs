@@ -12,11 +12,19 @@
 //! so mega-constellation horizons never reside in memory at once
 //! (ADR-0004). Planning code is written against the [`StepView`] trait and
 //! works over either.
+//!
+//! [`graph`] lifts the per-step *sets* to per-step *graphs* (ADR-0005):
+//! with inter-satellite links enabled, [`IslTopology`] routes every step's
+//! direct contacts over bounded-hop ISL paths and [`ContactGraph`] (dense)
+//! or the routed chunks/windows (streamed) present the resulting
+//! reachability relation through the same [`StepView`] surface.
 
+pub mod graph;
 pub mod schedule;
 pub mod stats;
 pub mod stream;
 
+pub use graph::{ContactGraph, IslParams, IslTopology, RouteScratch};
 pub use schedule::{ConnectivityParams, ConnectivitySchedule, StepView};
 pub use stats::{contacts_per_day, set_sizes, ConnectivityStats};
 pub use stream::{ConnectivityStream, ScheduleChunk, StreamCursor, WindowView};

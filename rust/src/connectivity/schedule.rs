@@ -50,6 +50,17 @@ pub trait StepView: Sync {
     /// panic outside it (the window views do); callers stay within the
     /// range they materialized.
     fn sats_at(&self, i: usize) -> &[usize];
+
+    /// The routing view (ADR-0005): minimal ISL hop counts parallel to
+    /// [`Self::sats_at`] — entry j is how many relay hops satellite
+    /// `sats_at(i)[j]` needs to reach a ground-visible sink (0 = direct
+    /// contact). The default empty slice means "all direct": plain
+    /// schedules carry no ISLs, so every connected satellite is a sink.
+    /// Overridden by [`crate::connectivity::ContactGraph`] and by routed
+    /// [`crate::connectivity::WindowView`]s.
+    fn hops_at(&self, _i: usize) -> &[u8] {
+        &[]
+    }
 }
 
 /// Parameters of the link model (paper §2.2 / §4.1 defaults).

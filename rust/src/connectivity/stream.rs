@@ -33,6 +33,7 @@
 //! ([`WindowView`]) that spans chunk boundaries without materializing the
 //! horizon.
 
+use super::graph::{IslTopology, RouteScratch};
 use super::schedule::{
     feasible_need, sample_rotations_into, sat_contacts, ConnectivityParams, ConnectivitySchedule,
     SampleRot, StepView,
@@ -54,6 +55,10 @@ pub struct ConnectivityStream {
     /// Downtime windows indexed by satellite: `(from_step, until_step)`,
     /// half-open, applied while assembling every chunk.
     down_by_sat: Vec<Vec<(usize, usize)>>,
+    /// ISL routing model (ADR-0005): when attached, every chunk comes out
+    /// with its routed reach sets computed, bit-identical to the dense
+    /// [`super::ContactGraph`] over the same schedule.
+    isl: Option<IslTopology>,
 }
 
 impl ConnectivityStream {
@@ -84,7 +89,31 @@ impl ConnectivityStream {
             n_steps,
             chunk_len,
             down_by_sat,
+            isl: None,
         }
+    }
+
+    /// Attach an ISL routing model: every chunk filled from now on carries
+    /// the routed reach sets alongside the direct contact sets (builder
+    /// style, mirroring how downtime is baked in at construction).
+    pub fn with_isl(mut self, topology: IslTopology) -> Self {
+        assert_eq!(
+            topology.n_sats(),
+            self.n_sats(),
+            "ISL topology covers a different fleet than the stream"
+        );
+        self.isl = Some(topology);
+        self
+    }
+
+    /// Does the stream route its chunks through an ISL topology?
+    pub fn has_isl(&self) -> bool {
+        self.isl.is_some()
+    }
+
+    /// Relay latency the engine charges per hop, in slots (0 without ISLs).
+    pub fn hop_delay_slots(&self) -> usize {
+        self.isl.as_ref().map_or(0, |t| t.hop_delay_slots)
     }
 
     /// Number of satellites the stream covers.
@@ -171,6 +200,10 @@ impl ConnectivityStream {
             }
         }
         out.finish();
+        match &self.isl {
+            Some(topology) => out.route(topology),
+            None => out.clear_routing(),
+        }
     }
 
     /// Materialize the whole horizon as a dense [`ConnectivitySchedule`]
@@ -211,6 +244,17 @@ pub struct ScheduleChunk {
     active: Vec<usize>,
     /// Recycled sub-sample rotation table scratch.
     rots: Vec<SampleRot>,
+    /// True when the owning stream routed this fill through an ISL topology
+    /// (the `reach_*` fields below are then valid).
+    routed: bool,
+    /// reach_sets[l] = reachable satellite ids at absolute step start + l.
+    reach_sets: Vec<Vec<usize>>,
+    /// reach_hops[l] = minimal hop counts parallel to `reach_sets[l]`.
+    reach_hops: Vec<Vec<u8>>,
+    /// Relay latency per hop in slots (copied from the topology per fill).
+    hop_delay: usize,
+    /// Recycled BFS scratch for the per-step routing.
+    route_scratch: RouteScratch,
 }
 
 impl ScheduleChunk {
@@ -304,6 +348,68 @@ impl ScheduleChunk {
             }
         }
     }
+
+    /// Route every step of the chunk through an ISL topology, recycling the
+    /// reach buffers. Bit-identical to [`super::ContactGraph::build`] over
+    /// the concatenated horizon: both call the same
+    /// [`IslTopology::route_step`] on absolute step indexes.
+    fn route(&mut self, topology: &IslTopology) {
+        self.routed = true;
+        self.hop_delay = topology.hop_delay_slots;
+        if self.reach_sets.len() > self.len {
+            self.reach_sets.truncate(self.len);
+            self.reach_hops.truncate(self.len);
+        }
+        self.reach_sets.resize_with(self.len, Vec::new);
+        self.reach_hops.resize_with(self.len, Vec::new);
+        for l in 0..self.len {
+            topology.route_step(
+                self.start + l,
+                &self.sets[l],
+                &mut self.route_scratch,
+                &mut self.reach_sets[l],
+                &mut self.reach_hops[l],
+            );
+        }
+    }
+
+    /// Mark the chunk unrouted (the owning stream carries no ISL model).
+    fn clear_routing(&mut self) {
+        self.routed = false;
+        self.hop_delay = 0;
+    }
+
+    /// Was this fill routed through an ISL topology?
+    pub fn routed(&self) -> bool {
+        self.routed
+    }
+
+    /// Relay latency per hop in slots (0 when unrouted).
+    pub fn hop_delay_slots(&self) -> usize {
+        self.hop_delay
+    }
+
+    /// The contacts the engine walks at absolute step `i`: `(sats, hops)`.
+    /// Routed chunks return the reach set with its hop counts; unrouted
+    /// chunks return the direct set with an empty hop slice (all direct).
+    pub fn contacts_at(&self, i: usize) -> (&[usize], &[u8]) {
+        assert!(self.contains(i), "step {i} outside chunk [{}, {})", self.start, self.end());
+        let l = i - self.start;
+        if self.routed {
+            (&self.reach_sets[l], &self.reach_hops[l])
+        } else {
+            (&self.sets[l], &[])
+        }
+    }
+
+    /// The engine's event list for this chunk, routed or not: a step has a
+    /// reachable satellite iff it has a direct contact (relays need a
+    /// ground-visible sink, and every sink is itself reachable), so the
+    /// direct event list is exact in both cases. Absolute indexes, safe to
+    /// concatenate across chunks.
+    pub fn events(&self) -> &[usize] {
+        &self.active
+    }
 }
 
 /// A FedSpace planning window materialized from a stream: the per-step
@@ -317,6 +423,9 @@ pub struct WindowView {
     n_steps_total: usize,
     n_sats: usize,
     sets: Vec<Vec<usize>>,
+    /// Hop counts parallel to `sets` (empty inner vecs when the stream
+    /// carries no ISLs — the [`StepView::hops_at`] "all direct" default).
+    hops: Vec<Vec<u8>>,
 }
 
 impl WindowView {
@@ -347,6 +456,10 @@ impl StepView for WindowView {
 
     fn sats_at(&self, i: usize) -> &[usize] {
         &self.sets[i - self.start]
+    }
+
+    fn hops_at(&self, i: usize) -> &[u8] {
+        &self.hops[i - self.start]
     }
 }
 
@@ -406,24 +519,29 @@ impl<'a> StreamCursor<'a> {
     pub fn window(&mut self, start: usize, len: usize) -> WindowView {
         let end = (start + len).min(self.stream.n_steps());
         let mut sets = Vec::with_capacity(end.saturating_sub(start));
+        let mut hops = Vec::with_capacity(end.saturating_sub(start));
         for i in start..end {
             let c = self.stream.chunk_of(i);
-            let set = if self.current_idx == Some(c) {
-                self.current.sats_at(i).to_vec()
+            let (set, hop) = if self.current_idx == Some(c) {
+                let (s, h) = self.current.contacts_at(i);
+                (s.to_vec(), h.to_vec())
             } else {
                 if self.spare_idx != Some(c) {
                     self.stream.fill_chunk(c, &mut self.spare);
                     self.spare_idx = Some(c);
                 }
-                self.spare.sats_at(i).to_vec()
+                let (s, h) = self.spare.contacts_at(i);
+                (s.to_vec(), h.to_vec())
             };
             sets.push(set);
+            hops.push(hop);
         }
         WindowView {
             start,
             n_steps_total: self.stream.n_steps(),
             n_sats: self.stream.n_sats(),
             sets,
+            hops,
         }
     }
 }
@@ -538,6 +656,74 @@ mod tests {
         assert!(cur.chunk().contains(12));
         let dense = ConnectivitySchedule::compute(&c, &gs, 48, ConnectivityParams::default());
         assert_eq!(cur.chunk().sats_at(12), dense.sats_at(12));
+    }
+
+    #[test]
+    fn routed_chunks_bit_identical_to_dense_contact_graph() {
+        use super::super::graph::{ContactGraph, IslParams};
+        use crate::orbit::{Constellation, WalkerPattern, WalkerSpec};
+        let c = Constellation::walker(&WalkerSpec {
+            pattern: WalkerPattern::Star,
+            n_sats: 24,
+            planes: 6,
+            phasing: 2,
+            alt_m: 780e3,
+            inc_deg: 86.4,
+        })
+        .with_downtime(vec![DowntimeWindow { sat: 3, from_step: 10, until_step: 30 }]);
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams::default();
+        let topology = IslTopology::new(
+            &c,
+            IslParams {
+                max_hops: 3,
+                hop_delay_slots: 1,
+                cross_plane: true,
+                max_range_m: 4000e3,
+                t0_s: params.t0_s,
+            },
+        )
+        .unwrap();
+        let dense = ConnectivitySchedule::compute(&c, &gs, 48, params.clone())
+            .with_downtime(&c.downtime);
+        let graph = ContactGraph::build(&topology, &dense);
+        // deliberately awkward chunk length: boundaries inside the horizon
+        let stream = ConnectivityStream::new(&c, &gs, 48, params, 13).with_isl(topology);
+        assert!(stream.has_isl());
+        assert_eq!(stream.hop_delay_slots(), 1);
+        let mut chunk = ScheduleChunk::default();
+        let mut events = Vec::new();
+        for ci in 0..stream.n_chunks() {
+            stream.fill_chunk(ci, &mut chunk);
+            assert!(chunk.routed());
+            assert_eq!(chunk.hop_delay_slots(), 1);
+            for i in chunk.start()..chunk.end() {
+                let (s, h) = chunk.contacts_at(i);
+                assert_eq!(s, graph.sats_at(i), "reach set at step {i}");
+                assert_eq!(h, graph.hops_at(i), "hop counts at step {i}");
+                // direct contacts stay visible underneath the routing
+                assert_eq!(chunk.sats_at(i), dense.sats_at(i), "direct set at step {i}");
+            }
+            events.extend_from_slice(chunk.events());
+        }
+        assert_eq!(events, graph.active_steps());
+    }
+
+    #[test]
+    fn unrouted_chunks_report_direct_contacts() {
+        let c = planet_labs_like(6, 0);
+        let gs = planet_ground_stations();
+        let stream = ConnectivityStream::new(&c, &gs, 24, ConnectivityParams::default(), 10);
+        assert!(!stream.has_isl());
+        assert_eq!(stream.hop_delay_slots(), 0);
+        let chunk = stream.chunk(0);
+        assert!(!chunk.routed());
+        for i in chunk.start()..chunk.end() {
+            let (s, h) = chunk.contacts_at(i);
+            assert_eq!(s, chunk.sats_at(i));
+            assert!(h.is_empty());
+        }
+        assert_eq!(chunk.events(), chunk.active_steps());
     }
 
     #[test]

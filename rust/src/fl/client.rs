@@ -57,9 +57,18 @@ impl SatClient {
 
     /// Does this satellite have an update to send at time index `i`?
     pub fn can_upload(&self, i: usize) -> bool {
+        self.can_upload_relayed(i, 0)
+    }
+
+    /// [`Self::can_upload`] with an ISL relay-latency charge (ADR-0005): an
+    /// update arriving over `h` relay hops spends `h × hop_delay` slots in
+    /// flight, so to land at the ground station at step `i` it must have
+    /// been ready `delay_slots` slots earlier. With `delay_slots = 0` this
+    /// is exactly the direct-contact condition.
+    pub fn can_upload_relayed(&self, i: usize, delay_slots: usize) -> bool {
         matches!(self.phase, SatPhase::HasUpdate | SatPhase::Training)
             && self.pending.is_some()
-            && self.ready_at <= i
+            && self.ready_at.saturating_add(delay_slots) <= i
     }
 
     /// Take the pending update for upload. Returns (g_k, i_{g,k}).
@@ -148,6 +157,21 @@ mod tests {
         c.receive(0, 0, 3); // training until i=3
         assert!(!c.wants_model(1, 1), "mid-training must not restart");
         assert!(c.wants_model(1, 3), "done training, new version welcome");
+    }
+
+    #[test]
+    fn relayed_upload_needs_head_start() {
+        let mut c = SatClient::new(0, 100);
+        c.receive(0, 0, 1); // ready at 1
+        c.set_update(vec![1.0]);
+        // direct contact at 1 works; a 2-slot relay path needs i >= 3
+        assert!(c.can_upload_relayed(1, 0));
+        assert!(!c.can_upload_relayed(1, 2));
+        assert!(!c.can_upload_relayed(2, 2));
+        assert!(c.can_upload_relayed(3, 2));
+        // usize::MAX ready_at (never-finishing training) must not overflow
+        c.ready_at = usize::MAX;
+        assert!(!c.can_upload_relayed(5, 3));
     }
 
     #[test]

@@ -8,6 +8,7 @@
 //!   utility       generate utility samples and fit/report the regressor
 //!   schedule      plan one FedSpace window and print the forecast
 //!   bench-check   compare bench JSON against the committed baseline (CI)
+//!   bench-baseline  merge bench JSON into a ready-to-commit baseline (CI)
 //!   help          this text
 
 use anyhow::{bail, Result};
@@ -23,6 +24,7 @@ fn main() -> Result<()> {
         "utility" => fedspace::app::cmd::utility(&args),
         "schedule" => fedspace::app::cmd::schedule(&args),
         "bench-check" => fedspace::app::cmd::bench_check(&args),
+        "bench-baseline" => fedspace::app::cmd::bench_baseline(&args),
         "" | "help" | "--help" | "-h" => {
             print!("{}", fedspace::app::cmd::HELP);
             Ok(())

@@ -84,6 +84,22 @@ pub struct WalkerSpec {
     pub inc_deg: f64,
 }
 
+/// Orbital-plane membership of one satellite — the structural metadata the
+/// inter-satellite-link model ([`crate::orbit::isl`]) is derived from.
+///
+/// `group` distinguishes independently-filed sub-constellations (one per
+/// [`OrbitalPlaneSpec`] flock or Walker shell); `plane` indexes the orbital
+/// plane within that group. ISLs never cross groups: different shells fly
+/// at different altitudes, so a persistent link between them is not
+/// maintainable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlaneId {
+    /// Sub-constellation (flock / shell) index.
+    pub group: usize,
+    /// Orbital-plane index within the group.
+    pub plane: usize,
+}
+
 /// One scheduled outage: satellite `sat` is treated as unreachable for every
 /// time index `i` with `from_step <= i < until_step` (power fault, tumbling
 /// after a debris hit, decommissioning). Applied to a connectivity schedule
@@ -113,6 +129,11 @@ pub struct Constellation {
     pub orbits: Vec<CircularOrbit>,
     /// Scheduled per-satellite outages (applied at the connectivity layer).
     pub downtime: Vec<DowntimeWindow>,
+    /// Plane membership per satellite (same indexing as `orbits`). Filled
+    /// by every spec-driven builder ([`Self::from_specs`], [`Self::walker`],
+    /// the scenario shell stacker); empty for hand-assembled constellations,
+    /// which therefore cannot carry ISLs.
+    pub plane_ids: Vec<PlaneId>,
 }
 
 impl Constellation {
@@ -131,9 +152,11 @@ impl Constellation {
     /// differential drag — Foster et al. 2018).
     pub fn from_specs(specs: &[OrbitalPlaneSpec], rng: &mut Rng) -> Self {
         let mut orbits = Vec::new();
-        for spec in specs {
+        let mut plane_ids = Vec::new();
+        for (group, spec) in specs.iter().enumerate() {
             for i in 0..spec.n_sats {
                 let plane = i % spec.planes;
+                plane_ids.push(PlaneId { group, plane });
                 let slot = i / spec.planes;
                 let slots_per_plane = spec.n_sats.div_ceil(spec.planes);
                 let raan = (spec.raan0_deg
@@ -150,7 +173,7 @@ impl Constellation {
                 ));
             }
         }
-        Constellation { orbits, downtime: Vec::new() }
+        Constellation { orbits, downtime: Vec::new(), plane_ids }
     }
 
     /// Build an exact Walker `i:t/p/f` constellation (no jitter — Walker
@@ -169,6 +192,7 @@ impl Constellation {
         let per_plane = spec.n_sats / spec.planes;
         let span = spec.pattern.raan_span();
         let mut orbits = Vec::with_capacity(spec.n_sats);
+        let mut plane_ids = Vec::with_capacity(spec.n_sats);
         for plane in 0..spec.planes {
             let raan = span * plane as f64 / spec.planes as f64;
             let plane_phase = 2.0 * PI * (spec.phasing * plane) as f64 / spec.n_sats as f64;
@@ -180,9 +204,10 @@ impl Constellation {
                     raan,
                     phase,
                 ));
+                plane_ids.push(PlaneId { group: 0, plane });
             }
         }
-        Constellation { orbits, downtime: Vec::new() }
+        Constellation { orbits, downtime: Vec::new(), plane_ids }
     }
 
     /// Attach scheduled outages (builder style). Windows naming satellites
@@ -358,6 +383,36 @@ mod tests {
             assert_eq!(WalkerPattern::parse(p.name()), Some(p));
         }
         assert_eq!(WalkerPattern::parse("helix"), None);
+    }
+
+    #[test]
+    fn plane_ids_cover_every_satellite() {
+        let c = planet_labs_like(191, 0);
+        assert_eq!(c.plane_ids.len(), 191);
+        // two groups (SSO flock, ISS flock) with 4 and 3 planes
+        let sso_planes: std::collections::BTreeSet<usize> =
+            c.plane_ids.iter().filter(|p| p.group == 0).map(|p| p.plane).collect();
+        let iss_planes: std::collections::BTreeSet<usize> =
+            c.plane_ids.iter().filter(|p| p.group == 1).map(|p| p.plane).collect();
+        assert_eq!(sso_planes.len(), 4);
+        assert_eq!(iss_planes.len(), 3);
+    }
+
+    #[test]
+    fn walker_plane_ids_match_raan_structure() {
+        let c = Constellation::walker(&walker_66());
+        assert_eq!(c.plane_ids.len(), 66);
+        // satellites sharing a plane id share an exact RAAN
+        for (a, pa) in c.plane_ids.iter().enumerate() {
+            for (b, pb) in c.plane_ids.iter().enumerate() {
+                if pa == pb {
+                    assert_eq!(c.orbits[a].raan, c.orbits[b].raan);
+                }
+            }
+        }
+        let planes: std::collections::BTreeSet<usize> =
+            c.plane_ids.iter().map(|p| p.plane).collect();
+        assert_eq!(planes.len(), 6);
     }
 
     #[test]

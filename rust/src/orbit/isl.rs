@@ -1,0 +1,257 @@
+//! Inter-satellite-link geometry — which satellite pairs *can* maintain a
+//! link, derived deterministically from the Walker plane structure
+//! (ADR-0005 in docs/ADRs.md).
+//!
+//! Two link families, following the standard "+grid" LEO network model
+//! (Matthiesen et al. 2023, arXiv:2206.00307; Elmahallawy & Luo 2023):
+//!
+//! - **intra-plane ring**: each satellite keeps a permanent link to its two
+//!   in-plane neighbors (previous/next by argument of latitude). In-plane
+//!   relative geometry is static for station-kept shells, so these edges
+//!   are time-invariant.
+//! - **cross-plane candidates**: satellites in *adjacent* planes of the
+//!   same group (shell/flock) may link, but only while within a maximum
+//!   slant range — cross-plane relative geometry oscillates over an orbit,
+//!   so these edges are range-gated per time step by the routing layer
+//!   ([`crate::connectivity::IslTopology`]).
+//!
+//! Links never cross groups (different shells fly at different altitudes),
+//! and plane adjacency wraps around the RAAN circle; for Walker-star
+//! shells the wrap pair models the seam, where the range gate — counter-
+//! rotating planes separate fast — keeps links short-lived, matching how
+//! real star constellations treat seam crossings as opportunistic.
+
+use super::constellation::Constellation;
+use super::kepler::{OrbitBasis, Vec3};
+use anyhow::{ensure, Result};
+use std::collections::BTreeMap;
+
+/// The static link-candidate structure of a constellation: intra-plane
+/// rings plus adjacent-plane candidate lists, with the orbit bases needed
+/// to evaluate the cross-plane range gate at any instant.
+#[derive(Clone, Debug)]
+pub struct IslGeometry {
+    n_sats: usize,
+    /// ring[k] = the (≤ 2) in-plane ring neighbors of satellite k, sorted.
+    ring: Vec<Vec<usize>>,
+    /// cross[k] = satellites in planes adjacent to k's plane (same group),
+    /// sorted — candidates only; the range gate decides per instant.
+    cross: Vec<Vec<usize>>,
+    bases: Vec<OrbitBasis>,
+}
+
+impl IslGeometry {
+    /// Derive the link-candidate structure from a constellation's plane
+    /// metadata. Fails when the constellation was assembled by hand and
+    /// carries no [`crate::orbit::PlaneId`]s.
+    pub fn new(constellation: &Constellation) -> Result<Self> {
+        let n = constellation.len();
+        ensure!(
+            constellation.plane_ids.len() == n,
+            "constellation carries no plane metadata ({} ids for {} satellites) — \
+             ISLs need a spec-driven builder (walker / from_specs / shells)",
+            constellation.plane_ids.len(),
+            n
+        );
+        let mut by_plane: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+        for (k, pid) in constellation.plane_ids.iter().enumerate() {
+            by_plane.entry((pid.group, pid.plane)).or_default().push(k);
+        }
+
+        // intra-plane rings, ordered by argument of latitude at epoch
+        let mut ring = vec![Vec::new(); n];
+        for members in by_plane.values() {
+            let mut m = members.clone();
+            m.sort_by(|&a, &b| {
+                constellation.orbits[a]
+                    .phase0
+                    .total_cmp(&constellation.orbits[b].phase0)
+                    .then(a.cmp(&b))
+            });
+            match m.len() {
+                0 | 1 => {}
+                2 => {
+                    ring[m[0]].push(m[1]);
+                    ring[m[1]].push(m[0]);
+                }
+                len => {
+                    for idx in 0..len {
+                        let (u, v) = (m[idx], m[(idx + 1) % len]);
+                        ring[u].push(v);
+                        ring[v].push(u);
+                    }
+                }
+            }
+        }
+        for r in &mut ring {
+            r.sort_unstable();
+            r.dedup();
+        }
+
+        // cross-plane candidates: adjacent planes within each group
+        let mut planes_by_group: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for &(group, plane) in by_plane.keys() {
+            planes_by_group.entry(group).or_default().push(plane);
+        }
+        let mut cross = vec![Vec::new(); n];
+        for (group, planes) in &planes_by_group {
+            let np = planes.len();
+            if np < 2 {
+                continue;
+            }
+            for idx in 0..np {
+                // consecutive pairs + RAAN wrap; with exactly two planes the
+                // wrap collapses onto the single pair, so emit it once
+                if np == 2 && idx == 1 {
+                    continue;
+                }
+                let (p, q) = (planes[idx], planes[(idx + 1) % np]);
+                for &u in &by_plane[&(*group, p)] {
+                    for &v in &by_plane[&(*group, q)] {
+                        cross[u].push(v);
+                        cross[v].push(u);
+                    }
+                }
+            }
+        }
+        for c in &mut cross {
+            c.sort_unstable();
+            c.dedup();
+        }
+
+        Ok(IslGeometry {
+            n_sats: n,
+            ring,
+            cross,
+            bases: constellation.orbits.iter().map(|o| o.basis()).collect(),
+        })
+    }
+
+    /// Number of satellites the geometry covers.
+    pub fn n_sats(&self) -> usize {
+        self.n_sats
+    }
+
+    /// In-plane ring neighbors of satellite `k` (0, 1 or 2 ids, sorted).
+    pub fn ring_neighbors(&self, k: usize) -> &[usize] {
+        &self.ring[k]
+    }
+
+    /// Adjacent-plane link candidates of satellite `k`, sorted.
+    pub fn cross_candidates(&self, k: usize) -> &[usize] {
+        &self.cross[k]
+    }
+
+    /// ECI position of satellite `k` at time `t` [s after epoch].
+    pub fn position_at(&self, k: usize, t: f64) -> Vec3 {
+        self.bases[k].position_eci(t)
+    }
+
+    /// ECI positions of every satellite at time `t`, into a recycled buffer.
+    pub fn positions_at(&self, t: f64, out: &mut Vec<Vec3>) {
+        out.clear();
+        out.extend(self.bases.iter().map(|b| b.position_eci(t)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::orbit::{planet_labs_like, WalkerPattern, WalkerSpec};
+
+    fn iridium_like() -> Constellation {
+        Constellation::walker(&WalkerSpec {
+            pattern: WalkerPattern::Star,
+            n_sats: 66,
+            planes: 6,
+            phasing: 2,
+            alt_m: 780e3,
+            inc_deg: 86.4,
+        })
+    }
+
+    #[test]
+    fn ring_gives_every_satellite_two_in_plane_neighbors() {
+        let g = IslGeometry::new(&iridium_like()).unwrap();
+        for k in 0..66 {
+            assert_eq!(g.ring_neighbors(k).len(), 2, "sat {k}");
+            for &v in g.ring_neighbors(k) {
+                assert!(g.ring_neighbors(v).contains(&k), "{k} <-> {v} asymmetric");
+            }
+        }
+    }
+
+    #[test]
+    fn cross_candidates_are_adjacent_planes_only() {
+        let c = iridium_like();
+        let g = IslGeometry::new(&c).unwrap();
+        for k in 0..66 {
+            let pk = c.plane_ids[k].plane as i64;
+            // 11 satellites per adjacent plane, 2 adjacent planes
+            assert_eq!(g.cross_candidates(k).len(), 22, "sat {k}");
+            for &v in g.cross_candidates(k) {
+                let pv = c.plane_ids[v].plane as i64;
+                let dp = (pk - pv).rem_euclid(6);
+                assert!(dp == 1 || dp == 5, "sat {k} (plane {pk}) links plane {pv}");
+                assert!(g.cross_candidates(v).contains(&k), "{k} <-> {v} asymmetric");
+            }
+        }
+    }
+
+    #[test]
+    fn two_plane_group_links_each_plane_once() {
+        let c = Constellation::walker(&WalkerSpec {
+            pattern: WalkerPattern::Delta,
+            n_sats: 8,
+            planes: 2,
+            phasing: 1,
+            alt_m: 550e3,
+            inc_deg: 53.0,
+        });
+        let g = IslGeometry::new(&c).unwrap();
+        for k in 0..8 {
+            // 4 satellites in the single other plane, no duplicates
+            assert_eq!(g.cross_candidates(k).len(), 4, "sat {k}");
+        }
+    }
+
+    #[test]
+    fn jittered_fleet_rings_stay_within_planes() {
+        let c = planet_labs_like(40, 3);
+        let g = IslGeometry::new(&c).unwrap();
+        for k in 0..40 {
+            for &v in g.ring_neighbors(k) {
+                assert_eq!(c.plane_ids[k], c.plane_ids[v], "{k} ringed across planes to {v}");
+            }
+            for &v in g.cross_candidates(k) {
+                assert_eq!(c.plane_ids[k].group, c.plane_ids[v].group, "{k} crossed groups");
+                assert_ne!(c.plane_ids[k].plane, c.plane_ids[v].plane);
+            }
+        }
+    }
+
+    #[test]
+    fn handmade_constellation_is_rejected() {
+        let mut c = planet_labs_like(5, 0);
+        c.plane_ids.clear();
+        assert!(IslGeometry::new(&c).is_err());
+    }
+
+    #[test]
+    fn single_satellite_plane_has_no_ring() {
+        let c = Constellation::walker(&WalkerSpec {
+            pattern: WalkerPattern::Delta,
+            n_sats: 3,
+            planes: 3,
+            phasing: 0,
+            alt_m: 550e3,
+            inc_deg: 53.0,
+        });
+        let g = IslGeometry::new(&c).unwrap();
+        for k in 0..3 {
+            assert!(g.ring_neighbors(k).is_empty(), "sat {k}");
+            // every other plane is adjacent on the 3-plane circle
+            assert_eq!(g.cross_candidates(k).len(), 2);
+        }
+    }
+}

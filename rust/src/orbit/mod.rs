@@ -10,16 +10,23 @@
 //! heterogeneities of Figure 2 — time-varying |C_i| and the per-satellite
 //! contact-count spread n_k — because those are driven by constellation
 //! geometry and Earth rotation, not by perturbation terms.
+//!
+//! [`isl`] extends the model beyond the paper with inter-satellite-link
+//! geometry (intra-plane rings + range-gated adjacent-plane candidates,
+//! ADR-0005), consumed by the routing layer in `connectivity/graph.rs`.
 
 pub mod constellation;
 pub mod earth;
 pub mod ground;
+pub mod isl;
 pub mod kepler;
 pub mod visibility;
 
 pub use constellation::{
-    planet_labs_like, Constellation, DowntimeWindow, OrbitalPlaneSpec, WalkerPattern, WalkerSpec,
+    planet_labs_like, Constellation, DowntimeWindow, OrbitalPlaneSpec, PlaneId, WalkerPattern,
+    WalkerSpec,
 };
+pub use isl::IslGeometry;
 pub use earth::{
     ecef_from_geodetic, eci_to_ecef, eci_to_ecef_rot, gmst_rad, EARTH_OMEGA, MU_EARTH, R_EARTH_EQ,
 };

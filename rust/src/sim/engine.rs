@@ -25,7 +25,9 @@
 //!   mega-constellation scenarios run at all.
 
 use crate::cfg::{AlgorithmKind, EngineMode};
-use crate::connectivity::{ConnectivitySchedule, ConnectivityStream, StepView, StreamCursor};
+use crate::connectivity::{
+    ConnectivitySchedule, ConnectivityStream, ContactGraph, StepView, StreamCursor,
+};
 use crate::fl::{
     AggregationPolicy, AsyncPolicy, FedBuffPolicy, GsState, ScheduledPolicy, ServerAggregator,
     SyncPolicy,
@@ -221,6 +223,15 @@ impl RunState {
 /// [`RunState::needs_replan`] holds: the precomputed walks pass the whole
 /// schedule, the streamed walk passes a window materialized from the
 /// stream. Returns `true` when the early-stop accuracy target was reached.
+///
+/// With ISLs (ADR-0005), `conn` is the step's *reach* set and `conn_hops`
+/// the parallel minimal hop counts; each contact's relay latency
+/// `hops × hop_delay` is charged on both legs — an upload must have been
+/// ready `delay` slots before `i` to arrive now, and a relayed broadcast
+/// extends local training by `delay` slots. Uploads stay attributed to the
+/// origin satellite, so staleness is measured from its local train time,
+/// not the relay time. An empty `conn_hops` means "all direct" (the plain
+/// PR 3 path, bit-identical to before).
 #[allow(clippy::too_many_arguments)]
 fn run_step(
     st: &mut RunState,
@@ -230,6 +241,8 @@ fn run_step(
     cfg: &EngineConfig,
     plan_view: Option<&dyn StepView>,
     conn: &[usize],
+    conn_hops: &[u8],
+    hop_delay: usize,
     i: usize,
     n_steps: usize,
 ) -> Result<bool> {
@@ -252,13 +265,19 @@ fn run_step(
         }
     }
 
-    // 1. receive uploads (Algorithm 1's for k ∈ C_i loop)
-    for &s in conn {
+    // 1. receive uploads (Algorithm 1's for k ∈ C_i loop; C_i is the reach
+    // set when ISLs are on, and relayed gradients keep their origin id)
+    for (j, &s) in conn.iter().enumerate() {
+        let hops = if conn_hops.is_empty() { 0 } else { conn_hops[j] as usize };
+        let delay = hops * hop_delay;
         st.trace.connections += 1;
-        if st.clients[s].can_upload(i) {
+        if st.clients[s].can_upload_relayed(i, delay) {
             let (g, base) = st.clients[s].upload(i);
             st.gs.receive(s, g, base, st.clients[s].n_samples);
             st.trace.uploads += 1;
+            if hops > 0 {
+                st.trace.relayed += 1;
+            }
         } else {
             st.trace.idle += 1;
         }
@@ -275,10 +294,13 @@ fn run_step(
         st.trace.global_updates += 1;
     }
 
-    // 3. broadcast (w^{i+1}, i_g) and start local training
-    for &s in conn {
+    // 3. broadcast (w^{i+1}, i_g) and start local training; a relayed
+    // delivery spends `delay` slots in flight, pushing ready_at out
+    for (j, &s) in conn.iter().enumerate() {
+        let hops = if conn_hops.is_empty() { 0 } else { conn_hops[j] as usize };
+        let delay = hops * hop_delay;
         if st.clients[s].has_data() && st.clients[s].wants_model(st.gs.i_g, i) {
-            st.clients[s].receive(st.gs.i_g, i, cfg.train_duration_slots);
+            st.clients[s].receive(st.gs.i_g, i, cfg.train_duration_slots + delay);
             let t = Instant::now();
             let (delta, _train_loss) = trainer.local_update(s, &st.gs.w, &mut st.sat_rngs[s])?;
             st.trace.t_train_s += t.elapsed().as_secs_f64();
@@ -323,6 +345,9 @@ pub struct Engine<'a> {
     pub cfg: EngineConfig,
     /// Some(..) iff algorithm == FedSpace
     pub planner: Option<FedSpacePlanner>,
+    /// Routed contact graph for precomputed-schedule engines (ADR-0005);
+    /// streamed engines take their routing from the stream itself.
+    isl: Option<&'a ContactGraph>,
 }
 
 impl<'a> Engine<'a> {
@@ -344,7 +369,32 @@ impl<'a> Engine<'a> {
         if cfg.algorithm == AlgorithmKind::FedSpace {
             assert!(planner.is_some(), "FedSpace requires a planner");
         }
-        Engine { source: ScheduleSource::Precomputed(sched), trainer, aggregator, cfg, planner }
+        Engine {
+            source: ScheduleSource::Precomputed(sched),
+            trainer,
+            aggregator,
+            cfg,
+            planner,
+            isl: None,
+        }
+    }
+
+    /// Attach a routed contact graph (ISLs, ADR-0005) to a
+    /// precomputed-schedule engine: the walk then visits reach sets instead
+    /// of direct contact sets, and the planner forecasts over the routed
+    /// relation. `None` detaches (the plain satellite⇄station walk).
+    /// Streamed engines reject this — they route inside their stream.
+    pub fn with_contact_graph(mut self, graph: Option<&'a ContactGraph>) -> Self {
+        if let Some(g) = graph {
+            assert!(
+                matches!(self.source, ScheduleSource::Precomputed(_)),
+                "streamed engines take ISLs from their ConnectivityStream"
+            );
+            assert_eq!(g.n_sats(), self.source.n_sats(), "graph/schedule fleet mismatch");
+            assert_eq!(g.n_steps(), self.source.n_steps(), "graph/schedule horizon mismatch");
+        }
+        self.isl = graph;
+        self
     }
 
     /// Wire up an engine over a connectivity stream (streamed mode only).
@@ -362,7 +412,14 @@ impl<'a> Engine<'a> {
         if cfg.algorithm == AlgorithmKind::FedSpace {
             assert!(planner.is_some(), "FedSpace requires a planner");
         }
-        Engine { source: ScheduleSource::Streamed(stream), trainer, aggregator, cfg, planner }
+        Engine {
+            source: ScheduleSource::Streamed(stream),
+            trainer,
+            aggregator,
+            cfg,
+            planner,
+            isl: None,
+        }
     }
 
     fn make_policy(&self) -> PolicyImpl {
@@ -417,27 +474,43 @@ impl<'a> Engine<'a> {
 
         match self.source {
             ScheduleSource::Precomputed(sched) => {
-                // ContactList: precompute the contact-event list once; the
-                // other event sources (planner horizon, scheduled slots)
-                // depend on live policy state and are queried in
-                // `next_event`.
+                // ContactList: precompute the contact-event list once (from
+                // the routed graph when ISLs are on); the other event
+                // sources (planner horizon, scheduled slots) depend on live
+                // policy state and are queried in `next_event`.
+                let graph = self.isl;
+                let hop_delay = graph.map_or(0, |g| g.hop_delay_slots);
                 let active: Option<Vec<usize>> = match cfg.mode {
                     EngineMode::Dense => None,
-                    EngineMode::ContactList => Some(sched.active_steps()),
+                    EngineMode::ContactList => Some(match graph {
+                        Some(g) => g.active_steps().to_vec(),
+                        None => sched.active_steps(),
+                    }),
                     EngineMode::Streamed => unreachable!("rejected by Engine::new"),
+                };
+                // the planner forecasts over the routed relation, so a
+                // relayed satellite counts as reachable in the window
+                let plan_view: &dyn StepView = match graph {
+                    Some(g) => g,
+                    None => sched,
                 };
                 let mut i = 0usize;
                 while i < n_steps {
-                    // zero-copy view into the schedule's sorted contact list
-                    let conn = sched.sats_at(i);
+                    // zero-copy views into the sorted contact/reach lists
+                    let (conn, hops) = match graph {
+                        Some(g) => (g.sats_at(i), g.hops_at(i)),
+                        None => (sched.sats_at(i), &[][..]),
+                    };
                     let stop = run_step(
                         &mut st,
                         self.trainer,
                         self.aggregator,
                         &mut self.planner,
                         &cfg,
-                        Some(sched),
+                        Some(plan_view),
                         conn,
+                        hops,
+                        hop_delay,
                         i,
                         n_steps,
                     )?;
@@ -451,13 +524,15 @@ impl<'a> Engine<'a> {
                 }
             }
             ScheduleSource::Streamed(stream) => {
+                let hop_delay = stream.hop_delay_slots();
                 let mut cursor = StreamCursor::new(stream);
                 let mut i = 0usize;
                 while i < n_steps {
                     cursor.seek(i);
                     // materialize the planning window only at replan steps,
                     // sized by the planner's own I0 (candidate vectors must
-                    // never index past the materialized window)
+                    // never index past the materialized window); the window
+                    // carries the routed sets when the stream has ISLs
                     let window = if st.needs_replan(i) {
                         let i0 = self.planner.as_ref().map_or(cfg.i0, |p| p.params.i0).max(1);
                         Some(cursor.window(i, i0))
@@ -465,7 +540,7 @@ impl<'a> Engine<'a> {
                         None
                     };
                     let plan_view = window.as_ref().map(|w| w as &dyn StepView);
-                    let conn = cursor.chunk().sats_at(i);
+                    let (conn, hops) = cursor.chunk().contacts_at(i);
                     let stop = run_step(
                         &mut st,
                         self.trainer,
@@ -474,20 +549,23 @@ impl<'a> Engine<'a> {
                         &cfg,
                         plan_view,
                         conn,
+                        hops,
+                        hop_delay,
                         i,
                         n_steps,
                     )?;
                     if stop {
                         break;
                     }
-                    // contact events from the current chunk, global events
-                    // from `next_event`; capped at the chunk boundary so
-                    // lookahead never leaves the chunk. Visiting a boundary
-                    // step early is at worst a provable no-op — the same
-                    // argument that makes contact-list skipping sound.
+                    // contact events from the current chunk (routed when
+                    // ISLs are on), global events from `next_event`; capped
+                    // at the chunk boundary so lookahead never leaves the
+                    // chunk. Visiting a boundary step early is at worst a
+                    // provable no-op — the same argument that makes
+                    // contact-list skipping sound.
                     let mut ni = next_event(
                         i + 1,
-                        cursor.chunk().active_steps(),
+                        cursor.chunk().events(),
                         &st.policy,
                         n_steps,
                         cfg.eval_every,
@@ -952,6 +1030,117 @@ mod tests {
         }
         assert_same_run(&results[0], &results[1], "sparse async");
         assert!(results[0].final_round >= 1);
+    }
+
+    /// A single 5-satellite plane (ring 0-1-2-3-4-0) where only satellite 0
+    /// ever sees the ground: everything reaches the GS through relays.
+    fn ring5_graph(max_hops: usize, hop_delay_slots: usize, steps: usize) -> ContactGraph {
+        use crate::connectivity::{IslParams, IslTopology};
+        use crate::orbit::{Constellation, WalkerPattern, WalkerSpec};
+        let c = Constellation::walker(&WalkerSpec {
+            pattern: WalkerPattern::Delta,
+            n_sats: 5,
+            planes: 1,
+            phasing: 0,
+            alt_m: 550e3,
+            inc_deg: 53.0,
+        });
+        let topo = IslTopology::new(
+            &c,
+            IslParams {
+                max_hops,
+                hop_delay_slots,
+                cross_plane: false,
+                max_range_m: 0.0,
+                t0_s: 900.0,
+            },
+        )
+        .unwrap();
+        let sched = ConnectivitySchedule::from_sets(vec![vec![0]; steps], 5);
+        ContactGraph::build(&topo, &sched)
+    }
+
+    fn run_ring5(graph: &ContactGraph, steps: usize) -> RunResult {
+        let sched = ConnectivitySchedule::from_sets(vec![vec![0]; steps], 5);
+        let trainer = MockTrainer::new(8, 5, 0.2, 0);
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig {
+            algorithm: AlgorithmKind::Async,
+            eval_every: 4,
+            ..Default::default()
+        };
+        let mut e =
+            Engine::new(&sched, &trainer, &mut agg, cfg, None).with_contact_graph(Some(graph));
+        e.run().unwrap()
+    }
+
+    #[test]
+    fn relays_let_non_visible_satellites_contribute() {
+        const STEPS: usize = 24;
+        let graph = ring5_graph(2, 0, STEPS);
+        let routed = run_ring5(&graph, STEPS);
+        // without ISLs only satellite 0 ever uploads
+        let sched = ConnectivitySchedule::from_sets(vec![vec![0]; STEPS], 5);
+        let trainer = MockTrainer::new(8, 5, 0.2, 0);
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig {
+            algorithm: AlgorithmKind::Async,
+            eval_every: 4,
+            ..Default::default()
+        };
+        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+        let direct = e.run().unwrap();
+        assert!(routed.trace.relayed > 0, "no relayed uploads on a relay-only topology");
+        assert!(
+            routed.trace.uploads > direct.trace.uploads,
+            "relays must add uploads: routed={} direct={}",
+            routed.trace.uploads,
+            direct.trace.uploads
+        );
+        // attribution: relayed gradients land under their origin ids, so
+        // more distinct satellites contribute than the one visible sat
+        assert_eq!(routed.trace.connections, STEPS * 5);
+    }
+
+    #[test]
+    fn hop_delay_defers_relayed_uploads() {
+        const STEPS: usize = 24;
+        let free = run_ring5(&ring5_graph(2, 0, STEPS), STEPS);
+        let slow = run_ring5(&ring5_graph(2, 2, STEPS), STEPS);
+        // charging 2 slots per hop on both legs strictly reduces how many
+        // uploads fit into the same horizon
+        assert!(
+            slow.trace.uploads < free.trace.uploads,
+            "hop delay had no effect: slow={} free={}",
+            slow.trace.uploads,
+            free.trace.uploads
+        );
+        assert!(slow.trace.relayed > 0, "delayed relays must still arrive");
+    }
+
+    #[test]
+    fn contact_graph_engine_identical_across_dense_and_contact_list() {
+        use crate::cfg::EngineMode;
+        const STEPS: usize = 48;
+        let graph = ring5_graph(2, 1, STEPS);
+        let sched = ConnectivitySchedule::from_sets(vec![vec![0]; STEPS], 5);
+        let trainer = MockTrainer::new(8, 5, 0.2, 0);
+        let mut results = Vec::new();
+        for mode in [EngineMode::Dense, EngineMode::ContactList] {
+            let mut agg = CpuAggregator;
+            let cfg = EngineConfig {
+                algorithm: AlgorithmKind::FedBuff,
+                fedbuff_m: 3,
+                eval_every: 4,
+                mode,
+                ..Default::default()
+            };
+            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None)
+                .with_contact_graph(Some(&graph));
+            results.push(e.run().unwrap());
+        }
+        assert_same_run(&results[0], &results[1], "ring5 routed dense vs contacts");
+        assert!(results[0].trace.relayed > 0);
     }
 
     #[test]

@@ -13,6 +13,9 @@ pub struct RunTrace {
     pub connections: usize,
     /// total uploads received
     pub uploads: usize,
+    /// uploads that arrived over ≥ 1 inter-satellite relay hop (subset of
+    /// `uploads`; always 0 when the scenario carries no ISLs — ADR-0005)
+    pub relayed: usize,
     /// number of global updates (i_g at the end)
     pub global_updates: usize,
     /// accuracy/loss curve (Figure 6)

@@ -65,6 +65,7 @@ pub fn assert_same_run(a: &crate::sim::RunResult, b: &crate::sim::RunResult, ctx
     assert_eq!(a.final_round, b.final_round, "{ctx}: final_round");
     assert_eq!(a.trace.connections, b.trace.connections, "{ctx}: connections");
     assert_eq!(a.trace.uploads, b.trace.uploads, "{ctx}: uploads");
+    assert_eq!(a.trace.relayed, b.trace.relayed, "{ctx}: relayed uploads");
     assert_eq!(a.trace.idle, b.trace.idle, "{ctx}: idle");
     assert_eq!(a.trace.global_updates, b.trace.global_updates, "{ctx}: global_updates");
     assert_eq!(

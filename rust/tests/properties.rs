@@ -2,11 +2,15 @@
 //! scheduling state) using the in-crate mini property framework.
 
 use fedspace::connectivity::{
-    ConnectivityParams, ConnectivitySchedule, ConnectivityStream, ScheduleChunk,
+    ConnectivityParams, ConnectivitySchedule, ConnectivityStream, ContactGraph, IslParams,
+    IslTopology, ScheduleChunk,
 };
 use fedspace::fl::illustrative;
 use fedspace::fl::{normalized_weights, Buffer, GradientEntry};
-use fedspace::orbit::{planet_ground_stations, planet_labs_like, DowntimeWindow};
+use fedspace::orbit::{
+    planet_ground_stations, planet_labs_like, Constellation, DowntimeWindow, WalkerPattern,
+    WalkerSpec,
+};
 use fedspace::rng::Rng;
 use fedspace::sched::{
     forecast_window, random_search, random_search_serial, SatForecastState, SearchParams,
@@ -202,6 +206,128 @@ fn prop_stream_chunks_bit_identical_to_dense_compute() {
             active.extend_from_slice(chunk.active_steps());
         }
         assert_eq!(active, dense.active_steps(), "event lists must concatenate");
+    });
+}
+
+/// Random Walker shell + random ISL parameters for the routing properties.
+fn random_topology(rng: &mut Rng) -> (Constellation, IslParams, usize) {
+    let planes = rng.gen_range(1, 7);
+    let per_plane = rng.gen_range(1, 8);
+    let n = planes * per_plane;
+    let c = Constellation::walker(&WalkerSpec {
+        pattern: if rng.gen_bool(0.5) { WalkerPattern::Star } else { WalkerPattern::Delta },
+        n_sats: n,
+        planes,
+        phasing: rng.gen_range(0, n),
+        alt_m: rng.gen_f64(400e3, 1200e3),
+        inc_deg: rng.gen_f64(30.0, 98.0),
+    });
+    let params = IslParams {
+        max_hops: rng.gen_range(1, 5),
+        hop_delay_slots: rng.gen_range(0, 3),
+        cross_plane: rng.gen_bool(0.5),
+        max_range_m: rng.gen_f64(500e3, 8000e3),
+        t0_s: 900.0,
+    };
+    (c, params, n)
+}
+
+#[test]
+fn prop_isl_adjacency_symmetric_never_reflexive() {
+    property(20, |rng| {
+        let (c, params, n) = random_topology(rng);
+        let topo = IslTopology::new(&c, params).unwrap();
+        for i in [0usize, rng.gen_range(1, 50)] {
+            for a in 0..n {
+                assert!(!topo.is_linked(a, a, i), "self-link at sat {a}");
+                for b in (a + 1)..n {
+                    assert_eq!(
+                        topo.is_linked(a, b, i),
+                        topo.is_linked(b, a, i),
+                        "asymmetric link {a}<->{b} at step {i}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_isl_routing_hop_bounded_and_supersets_direct() {
+    property(20, |rng| {
+        let (c, params, n) = random_topology(rng);
+        let topo = IslTopology::new(&c, params).unwrap();
+        let steps = rng.gen_range(1, 20);
+        let sched = random_schedule(rng, n, steps);
+        let graph = ContactGraph::build(&topo, &sched);
+        for i in 0..steps {
+            let reach = graph.sats_at(i);
+            let hops = graph.hops_at(i);
+            assert_eq!(reach.len(), hops.len());
+            // sorted ascending, no duplicates
+            assert!(reach.windows(2).all(|w| w[0] < w[1]), "unsorted reach at {i}");
+            // hop-bounded routing never exceeds max_hops
+            for (&s, &h) in reach.iter().zip(hops.iter()) {
+                assert!(
+                    (h as usize) <= params.max_hops,
+                    "sat {s} at {h} hops > {} (step {i})",
+                    params.max_hops
+                );
+            }
+            // reach ⊇ direct, with hop 0 exactly on the direct contacts
+            for &s in sched.sats_at(i) {
+                let j = reach.binary_search(&s).unwrap_or_else(|_| {
+                    panic!("direct contact {s} missing from reach at step {i}")
+                });
+                assert_eq!(hops[j], 0, "direct contact {s} has nonzero hops");
+            }
+            for (&s, &h) in reach.iter().zip(hops.iter()) {
+                assert_eq!(h == 0, sched.sats_at(i).contains(&s), "hop-0 set != C_i at {i}");
+            }
+            // no ground contact, no reach (relays need a sink)
+            if sched.sats_at(i).is_empty() {
+                assert!(reach.is_empty(), "reach without a sink at step {i}");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_routed_chunks_bit_identical_to_dense_graph() {
+    // the streamed per-chunk routing must concatenate to exactly the dense
+    // ContactGraph — same BFS on absolute step indexes (ADR-0005), for any
+    // shell shape, chunk length, range gate, and downtime windows
+    property(6, |rng| {
+        let (c, params, n) = random_topology(rng);
+        let steps = rng.gen_range(1, 40);
+        let chunk_len = rng.gen_range(1, steps + 8);
+        let mut windows = Vec::new();
+        for _ in 0..rng.gen_range(0, 3) {
+            let sat = rng.gen_range(0, n);
+            let from = rng.gen_range(0, steps);
+            let until = (from + 1 + rng.gen_range(0, chunk_len + 2)).min(steps);
+            windows.push(DowntimeWindow { sat, from_step: from, until_step: until });
+        }
+        let c = c.with_downtime(windows);
+        let gs = planet_ground_stations();
+        let cparams = ConnectivityParams::default();
+        let topo = IslTopology::new(&c, params).unwrap();
+        let dense = ConnectivitySchedule::compute(&c, &gs, steps, cparams.clone())
+            .with_downtime(&c.downtime);
+        let graph = ContactGraph::build(&topo, &dense);
+        let stream = ConnectivityStream::new(&c, &gs, steps, cparams, chunk_len).with_isl(topo);
+        let mut chunk = ScheduleChunk::default();
+        let mut events = Vec::new();
+        for ci in 0..stream.n_chunks() {
+            stream.fill_chunk(ci, &mut chunk);
+            for i in chunk.start()..chunk.end() {
+                let (s, h) = chunk.contacts_at(i);
+                assert_eq!(s, graph.sats_at(i), "reach at step {i} (chunk_len {chunk_len})");
+                assert_eq!(h, graph.hops_at(i), "hops at step {i} (chunk_len {chunk_len})");
+            }
+            events.extend_from_slice(chunk.events());
+        }
+        assert_eq!(events, graph.active_steps(), "event lists must concatenate");
     });
 }
 

@@ -4,8 +4,10 @@
 //! bit-identical traces on the seed scenario `paper-fig7` — the acceptance
 //! gate for the streamed-connectivity rewrite (ADR-0004).
 
-use fedspace::app::{run_mock_on_schedule, run_mock_on_stream, run_scenario};
-use fedspace::cfg::{AlgorithmKind, EngineMode, Scenario};
+use fedspace::app::{
+    run_mock_on_schedule, run_mock_on_schedule_routed, run_mock_on_stream, run_scenario,
+};
+use fedspace::cfg::{AlgorithmKind, EngineMode, IslMode, Scenario};
 use fedspace::testing::assert_same_run;
 
 #[test]
@@ -88,6 +90,71 @@ fn mega_builtins_run_streamed_scaled() {
         for out in &outs {
             assert!(out.result.trace.connections > 0, "{name}: no contacts reached the engine");
         }
+    }
+}
+
+/// ISL acceptance gate (ADR-0005): with ISLs enabled, the dense,
+/// contact-list and streamed engines produce bit-identical traces on
+/// `isl-iridium-66` (scaled for CI) for all four algorithms — the routed
+/// graph, the routed chunks, and the routed planning windows must agree
+/// exactly.
+#[test]
+fn all_three_engine_modes_identical_with_isls_enabled() {
+    let sc = Scenario::builtin("isl-iridium-66").unwrap().scaled(Some(24), Some(96));
+    assert_eq!(sc.algorithms.len(), 4, "isl-iridium-66 must sweep the full grid");
+    assert!(sc.isl.enabled());
+    let (constellation, sched) = sc.build_schedule();
+    let graph = sc.build_contact_graph(&constellation, &sched).expect("isl on");
+    let (_, stream) = sc.build_stream();
+    assert!(stream.has_isl());
+    for &alg in &sc.algorithms {
+        let mut cfg = sc.experiment_config(alg);
+        cfg.engine_mode = EngineMode::Dense;
+        let dense = run_mock_on_schedule_routed(&cfg, &sched, Some(&graph), None).unwrap();
+        cfg.engine_mode = EngineMode::ContactList;
+        let sparse = run_mock_on_schedule_routed(&cfg, &sched, Some(&graph), None).unwrap();
+        cfg.engine_mode = EngineMode::Streamed;
+        let streamed = run_mock_on_stream(&cfg, &stream, None).unwrap();
+        assert_same_run(&dense.result, &sparse.result, &format!("{} isl contacts", alg.name()));
+        assert_same_run(&dense.result, &streamed.result, &format!("{} isl streamed", alg.name()));
+    }
+}
+
+/// Relays change the physics: the routed run reaches strictly more
+/// satellite-contacts than the same scenario with ISLs switched off, and
+/// some uploads actually arrive over relays.
+#[test]
+fn isls_add_reachable_contacts_and_relayed_uploads() {
+    let mut on = Scenario::builtin("isl-iridium-66").unwrap().scaled(Some(24), Some(96));
+    on.algorithms = vec![AlgorithmKind::FedBuff];
+    let mut off = on.clone();
+    off.isl.mode = IslMode::Off;
+    let routed = &run_scenario(&on, None).unwrap()[0].result;
+    let direct = &run_scenario(&off, None).unwrap()[0].result;
+    assert!(
+        routed.trace.connections > direct.trace.connections,
+        "relays added no reach: routed={} direct={}",
+        routed.trace.connections,
+        direct.trace.connections
+    );
+    assert!(routed.trace.relayed > 0, "no upload ever used a relay");
+    assert_eq!(direct.trace.relayed, 0, "relays counted with ISLs off");
+}
+
+/// With `IslSpec` off, the routed plumbing is inert: `run_scenario` (which
+/// threads an optional graph everywhere) reproduces the plain pre-ISL
+/// engine path bit for bit on the seed scenario.
+#[test]
+fn isl_off_scenarios_identical_to_unrouted_engine() {
+    let sc = Scenario::builtin("paper-fig7").unwrap().scaled(Some(12), Some(48));
+    assert!(!sc.isl.enabled());
+    let (constellation, sched) = sc.build_schedule();
+    assert!(sc.build_contact_graph(&constellation, &sched).is_none());
+    let outs = run_scenario(&sc, None).unwrap();
+    for (out, &alg) in outs.iter().zip(&sc.algorithms) {
+        let plain = run_mock_on_schedule(&sc.experiment_config(alg), &sched, None).unwrap();
+        assert_same_run(&out.result, &plain.result, &format!("{} isl-off", alg.name()));
+        assert_eq!(out.result.trace.relayed, 0);
     }
 }
 
