@@ -16,7 +16,7 @@
 //!
 //! Run from `rust/`: `cargo bench --bench bench_engine_modes`
 
-use fedspace::app::{run_mock_on_schedule_routed, run_mock_on_stream};
+use fedspace::app::{run_mock_on_schedule_fed, run_mock_on_stream_fed, FederationRun};
 use fedspace::bench_report;
 use fedspace::bench_util::{section, time_once};
 use fedspace::cfg::{AlgorithmKind, EngineMode, Scenario};
@@ -48,6 +48,7 @@ fn run_modes(
     sc: &Scenario,
     sched: &ConnectivitySchedule,
     graph: Option<&ContactGraph>,
+    fed: Option<FederationRun<'_>>,
     stream: &ConnectivityStream,
     alg: AlgorithmKind,
 ) {
@@ -58,8 +59,10 @@ fn run_modes(
         cfg.engine_mode = mode;
         let label = format!("  {} / {}", alg.name(), mode.name());
         let (result, dt) = timed_median(&label, || match mode {
-            EngineMode::Streamed => run_mock_on_stream(&cfg, stream, None).expect("run"),
-            _ => run_mock_on_schedule_routed(&cfg, sched, graph, None).expect("run"),
+            EngineMode::Streamed => {
+                run_mock_on_stream_fed(&cfg, stream, fed, None).expect("run")
+            }
+            _ => run_mock_on_schedule_fed(&cfg, sched, graph, fed, None).expect("run"),
         });
         bench_report::record(
             &format!("engine_{}_{}_{}", sc.name.replace('-', "_"), alg.name(), mode.name()),
@@ -85,8 +88,11 @@ fn bench_scenario(name: &str, algorithms: &[AlgorithmKind]) {
     let ((constellation, sched), _) =
         time_once("  build schedule (shared)", || sc.build_schedule());
     // with ISLs the routed graph is shared across the grid like the
-    // schedule; the streamed path routes inside its chunks instead
+    // schedule; the streamed path routes inside its chunks instead. The
+    // upload-routing table (multi-gateway scenarios) is shared the same way.
     let graph = sc.build_contact_graph(&constellation, &sched);
+    let routing = sc.build_upload_routing(&constellation);
+    let fed = FederationRun::of(&sc.federation, routing.as_ref());
     let (_, stream) = sc.build_stream();
     let active = sched.active_steps().len();
     println!(
@@ -96,7 +102,7 @@ fn bench_scenario(name: &str, algorithms: &[AlgorithmKind]) {
         100.0 * (1.0 - active as f64 / sched.n_steps().max(1) as f64)
     );
     for &alg in algorithms {
-        run_modes(&sc, &sched, graph.as_ref(), &stream, alg);
+        run_modes(&sc, &sched, graph.as_ref(), fed, &stream, alg);
     }
 }
 
@@ -109,7 +115,7 @@ fn bench_mega_streamed(name: &str) {
     let cfg = sc.experiment_config(alg);
     let (_, stream) = sc.build_stream();
     let (result, dt) = timed_median(&format!("  {} / streamed, 96 steps", alg.name()), || {
-        run_mock_on_stream(&cfg, &stream, None).expect("run")
+        run_mock_on_stream_fed(&cfg, &stream, None, None).expect("run")
     });
     println!(
         "  {} satellites: rounds={} uploads={}",
@@ -126,6 +132,9 @@ fn main() {
     // ISL routing (ADR-0005): dense graph vs routed chunks, bit-identity
     // asserted across all three modes before any timing is reported
     bench_scenario("isl-iridium-66", &[AlgorithmKind::FedBuff]);
+    // multi-gateway federation (ADR-0006): per-gateway buffers + periodic
+    // reconcile, tri-mode bit-identity asserted before timing
+    bench_scenario("fedspace-multi-gs", &[AlgorithmKind::FedBuff]);
     bench_mega_streamed("walker-starlink-4408");
     if let Some(path) = bench_report::flush_to_env_path().expect("bench JSON") {
         println!("\nmachine-readable results written to {path}");

@@ -194,6 +194,34 @@ fn main() -> anyhow::Result<()> {
     });
     bench_report::record("isl_route_iridium_480", s.median_s);
 
+    section("L3: federation reconcile (multi-gateway model merge, ADR-0006)");
+    // one federated "round" at fmow model scale: four gateways each
+    // receive + aggregate one gradient, then the periodic cadence merges
+    // the four replicas (activity-weighted, gateway-index order) — the
+    // cross-gateway hot path a multi-gateway run pays per reconcile
+    {
+        use fedspace::fl::{Federation, FederationSpec, ReconcilePolicy};
+        let fd = 262_144usize;
+        let spec = FederationSpec::split(
+            &["a", "b", "c", "d"],
+            &[0, 1, 2, 3],
+            ReconcilePolicy::Periodic { every: 1 },
+        );
+        let grads: Vec<Vec<f32>> = (0..4).map(|_| rand_vec(&mut rng, fd, 0.01)).collect();
+        let mut fed = Federation::new(&spec, vec![0.0f32; fd], 0.5);
+        let mut agg = CpuAggregator;
+        let s = bench("federated round: 4 gateways x 256k params + merge", 1, 10, || {
+            for (g, grad) in grads.iter().enumerate() {
+                fed.receive(g, g, grad.clone(), fed.round(), 1);
+                fed.update(g, &mut agg).unwrap();
+            }
+            fed.end_of_step(0); // every = 1 -> reconcile fires
+        });
+        let bytes = (4 * fd * 3) as f64 * 4.0; // 4 aggregates + 4-way merge
+        println!("    -> {:.2} GB/s effective", bytes / s.median_s / 1e9);
+        bench_report::record("federation_reconcile", s.median_s);
+    }
+
     section("L3: utility regressor (random forest)");
     let x: Vec<Vec<f64>> = (0..400)
         .map(|_| (0..10).map(|_| rng.gen_f64(-1.0, 1.0)).collect())

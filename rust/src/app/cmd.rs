@@ -21,7 +21,8 @@ COMMANDS:
                   --sats N (191)  --steps N (96)  --out-dir DIR (results)
   illustrative  the 3-satellite example (Figures 3-4, Table 1)
   train         run one FL experiment
-                  --config FILE           TOML config (optional)
+                  --config FILE           TOML config (optional; [isl] and
+                                          [federation] sections supported)
                   --algorithm sync|async|fedbuff|fedspace (fedspace)
                   --dist iid|noniid (iid) --steps N (480) --sats N (191)
                   --engine dense|contacts|streamed (dense)  time-axis mode
@@ -385,7 +386,7 @@ pub fn scenarios(args: &Args) -> Result<()> {
         None | Some("list") => {
             let mut t = Table::new(&[
                 "name", "constellation", "sats", "stations", "steps", "engine", "isl",
-                "algorithms",
+                "gateways", "algorithms",
             ]);
             for sc in Scenario::builtins() {
                 t.row(&[
@@ -396,6 +397,12 @@ pub fn scenarios(args: &Args) -> Result<()> {
                     sc.n_steps.to_string(),
                     sc.engine_mode.name().to_string(),
                     sc.isl.mode.name().to_string(),
+                    if sc.federation.is_single() {
+                        "1".to_string()
+                    } else {
+                        let fed = &sc.federation;
+                        format!("{} ({})", fed.n_gateways(), fed.reconcile.name())
+                    },
                     sc.algorithms
                         .iter()
                         .map(|a| a.name().to_string())
@@ -426,25 +433,33 @@ pub fn scenarios(args: &Args) -> Result<()> {
             }
             let stop_at = args.get("target").map(|t| t.parse::<f64>()).transpose()?;
             println!(
-                "scenario {}: {} ({} sats, {} stations, {} steps, {} engine, isl {})",
+                "scenario {}: {} ({} sats, {} stations, {} steps, {} engine, isl {}, \
+                 {} gateway(s))",
                 sc.name,
                 sc.summary,
                 sc.constellation.n_sats(),
                 sc.stations.build().len(),
                 sc.n_steps,
                 sc.engine_mode.name(),
-                sc.isl.mode.name()
+                sc.isl.mode.name(),
+                sc.federation.n_gateways()
             );
             let outs = run_scenario(&sc, stop_at)?;
             let mut t = Table::new(&[
-                "algorithm", "rounds", "uploads", "relayed", "idle%", "max stale", "best acc",
-                "days→target",
+                "algorithm", "rounds", "gw aggs", "uploads", "relayed", "idle%", "max stale",
+                "best acc", "days→target",
             ]);
             for out in &outs {
                 let r = &out.result;
                 t.row(&[
                     out.algorithm.name().to_string(),
                     r.final_round.to_string(),
+                    r.trace
+                        .gateway_aggs
+                        .iter()
+                        .map(|n| n.to_string())
+                        .collect::<Vec<_>>()
+                        .join("/"),
                     r.trace.uploads.to_string(),
                     r.trace.relayed.to_string(),
                     format!("{:.1}", 100.0 * r.trace.idle_fraction()),
@@ -616,6 +631,11 @@ mod tests {
         .unwrap();
         scenarios(&args(
             "scenarios run sparse-single-gs --sats 10 --steps 48 --engine contacts",
+        ))
+        .unwrap();
+        // the multi-gateway builtin sweeps with per-gateway agg columns
+        scenarios(&args(
+            "scenarios run fedspace-multi-gs --sats 12 --steps 24 --algorithm fedbuff",
         ))
         .unwrap();
     }

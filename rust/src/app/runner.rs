@@ -3,12 +3,12 @@
 
 use crate::cfg::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig, Scenario};
 use crate::connectivity::{
-    ConnectivityParams, ConnectivitySchedule, ConnectivityStream, ContactGraph,
+    ConnectivityParams, ConnectivitySchedule, ConnectivityStream, ContactGraph, IslTopology,
 };
 use crate::data::{
     partition::cell_visits, partition_iid, partition_noniid, Dataset, Partition, SynthConfig,
 };
-use crate::fl::CpuAggregator;
+use crate::fl::{CpuAggregator, FederationSpec, UploadRouting};
 use crate::orbit::{planet_ground_stations, planet_labs_like, Constellation};
 use crate::rng::Rng;
 use crate::runtime::{ModelRuntime, PjrtAggregator};
@@ -17,7 +17,31 @@ use crate::sched::{
     MockBackend, SampleBackend, SearchParams, UtilityModel,
 };
 use crate::sim::{Engine, EngineConfig, MockTrainer, PjrtTrainer, RunResult};
-use anyhow::{Context, Result};
+use anyhow::{ensure, Context, Result};
+
+/// A multi-gateway federation to run under (ADR-0006): the spec and an
+/// upload-routing table built against the *same* station network — for
+/// scenario runs that is the scenario's network, for the config path the
+/// runner's planet12. Passed explicitly so `Scenario::experiment_config`
+/// stays standalone-runnable instead of smuggling a network-bound spec
+/// through `ExperimentConfig`.
+#[derive(Clone, Copy)]
+pub struct FederationRun<'a> {
+    /// Gateway names, station map, reconcile policy.
+    pub spec: &'a FederationSpec,
+    /// Per-contact upload routing for the spec's station network.
+    pub routing: &'a UploadRouting,
+}
+
+impl<'a> FederationRun<'a> {
+    /// Pair a spec with its routing table (`None` routing — the
+    /// single-gateway case — yields `None`): the one place the pairing
+    /// happens, so a spec can't silently ride with another network's
+    /// table.
+    pub fn of(spec: &'a FederationSpec, routing: Option<&'a UploadRouting>) -> Option<Self> {
+        routing.map(|routing| FederationRun { spec, routing })
+    }
+}
 
 /// Everything a bench/figure needs from one run.
 pub struct ExperimentOutput {
@@ -53,18 +77,54 @@ pub fn build_schedule(cfg: &ExperimentConfig) -> (Constellation, ConnectivitySch
     (constellation, sched)
 }
 
+/// The config path's ISL routing model (`[isl]` on `ExperimentConfig`,
+/// ROADMAP item): `None` when disabled. The planet-labs constellation
+/// always carries plane metadata, and `ExperimentConfig::validate` bounds
+/// the spec, so construction cannot fail for validated configs.
+fn cfg_isl_topology(cfg: &ExperimentConfig, constellation: &Constellation) -> Option<IslTopology> {
+    if !cfg.isl.enabled() {
+        return None;
+    }
+    Some(
+        IslTopology::new(constellation, cfg.isl.params(cfg.t0_s))
+            .expect("planet-labs constellations always carry plane metadata"),
+    )
+}
+
+/// The config path's upload-routing table (ADR-0006): built against the
+/// planet12 network the config path always links with. `None` for the
+/// single-gateway default. Errors when the station map doesn't cover
+/// planet12 — the half of federation validation only the runner can check.
+pub fn build_upload_routing(cfg: &ExperimentConfig) -> Result<Option<UploadRouting>> {
+    if cfg.federation.is_single() {
+        return Ok(None);
+    }
+    let (constellation, stations, params) = connectivity_inputs(cfg);
+    cfg.federation.validate(stations.len())?;
+    Ok(Some(UploadRouting::build(
+        &constellation,
+        &stations,
+        cfg.n_steps,
+        &params,
+        &cfg.federation.stations,
+    )))
+}
+
 /// Constellation + chunked connectivity stream for a config — the
 /// streamed-engine counterpart of [`build_schedule`]: nothing horizon-sized
-/// is materialized.
+/// is materialized. Carries the config's ISL topology when `[isl]` is on.
 pub fn build_stream(cfg: &ExperimentConfig) -> (Constellation, ConnectivityStream) {
     let (constellation, stations, params) = connectivity_inputs(cfg);
-    let stream = ConnectivityStream::new(
+    let mut stream = ConnectivityStream::new(
         &constellation,
         &stations,
         cfg.n_steps,
         params,
         ConnectivityStream::DEFAULT_CHUNK_LEN,
     );
+    if let Some(topology) = cfg_isl_topology(cfg, &constellation) {
+        stream = stream.with_isl(topology);
+    }
     (constellation, stream)
 }
 
@@ -127,55 +187,96 @@ fn engine_cfg(cfg: &ExperimentConfig, stop_at: Option<f64>) -> EngineConfig {
     }
 }
 
-fn make_planner(
+/// Seed of gateway `g`'s planner search RNG. Gateway 0 keeps the legacy
+/// derivation exactly (single-gateway bit-identity); higher gateways get
+/// independent, deterministic streams.
+fn planner_seed(sim_seed: u64, g: usize) -> u64 {
+    let base = sim_seed ^ 0x5EED;
+    if g == 0 {
+        base
+    } else {
+        base ^ (g as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+    }
+}
+
+/// One FedSpace planner per gateway (ADR-0006): the fitted û is shared
+/// (cloned) across gateways — phase 1 is offline and gateway-independent —
+/// while each planner draws from its own seeded search RNG.
+fn make_planners(
     cfg: &ExperimentConfig,
     utility: UtilityModel,
-) -> FedSpacePlanner {
-    FedSpacePlanner::new(
-        utility,
-        SearchParams {
-            i0: cfg.i0,
-            n_min: cfg.n_min,
-            n_max: cfg.n_max,
-            n_search: cfg.n_search,
-        },
-        cfg.sim_seed ^ 0x5EED,
-    )
+    n_gateways: usize,
+) -> Vec<FedSpacePlanner> {
+    let params = SearchParams {
+        i0: cfg.i0,
+        n_min: cfg.n_min,
+        n_max: cfg.n_max,
+        n_search: cfg.n_search,
+    };
+    (0..n_gateways)
+        .map(|gi| {
+            FedSpacePlanner::new(utility.clone(), params.clone(), planner_seed(cfg.sim_seed, gi))
+        })
+        .collect()
+}
+
+/// Split a per-gateway planner vec into the constructor's gateway-0 slot
+/// and the `with_federation` extras.
+fn split_planners(
+    mut planners: Vec<FedSpacePlanner>,
+) -> (Option<FedSpacePlanner>, Vec<FedSpacePlanner>) {
+    if planners.is_empty() {
+        (None, Vec::new())
+    } else {
+        let first = planners.remove(0);
+        (Some(first), planners)
+    }
 }
 
 /// Scheduler-level experiment on the analytic mock objective. Fast: used by
 /// tests, the ablation bench and quick CLI iterations. Streamed-mode
-/// configs route through a [`ConnectivityStream`] automatically.
+/// configs route through a [`ConnectivityStream`] automatically; `[isl]`
+/// configs route through a shared [`ContactGraph`] (or the routed stream),
+/// and multi-gateway `[federation]` configs build their planet12 upload
+/// routing here.
 pub fn run_mock_experiment(
     cfg: &ExperimentConfig,
     stop_at: Option<f64>,
 ) -> Result<ExperimentOutput> {
+    let routing = build_upload_routing(cfg)?;
+    let fed = FederationRun::of(&cfg.federation, routing.as_ref());
     if cfg.engine_mode == EngineMode::Streamed {
         let (_, stream) = build_stream(cfg);
-        return run_mock_on_stream(cfg, &stream, stop_at);
+        return run_mock_on_stream_fed(cfg, &stream, fed, stop_at);
     }
-    let (_, sched) = build_schedule(cfg);
-    run_mock_on_schedule(cfg, &sched, stop_at)
+    let (constellation, sched) = build_schedule(cfg);
+    let graph = cfg_isl_topology(cfg, &constellation).map(|t| ContactGraph::build(&t, &sched));
+    run_mock_on_schedule_fed(cfg, &sched, graph.as_ref(), fed, stop_at)
 }
 
-/// Mock trainer + optional FedSpace planner for one experiment config —
+/// Mock trainer + per-gateway FedSpace planners for one experiment config —
 /// the wiring shared by the schedule-backed and stream-backed mock runs.
-fn mock_parts(cfg: &ExperimentConfig) -> Result<(MockTrainer, Option<FedSpacePlanner>)> {
+/// The planner vec is empty for non-FedSpace algorithms and has exactly
+/// one entry per gateway otherwise.
+fn mock_parts(
+    cfg: &ExperimentConfig,
+    n_gateways: usize,
+) -> Result<(MockTrainer, Vec<FedSpacePlanner>)> {
     crate::exec::set_default_parallelism(cfg.threads);
     let heterogeneity = match cfg.dist {
         DataDist::Iid => 0.1,
         DataDist::NonIid => 0.8,
     };
     let trainer = MockTrainer::new(32, cfg.n_sats, heterogeneity, cfg.data_seed);
-    let planner = if cfg.algorithm == AlgorithmKind::FedSpace {
+    let planners = if cfg.algorithm == AlgorithmKind::FedSpace {
         let mut rng = Rng::new(cfg.sim_seed ^ 0xA11CE);
         let backend = MockBackend::new(32, cfg.data_seed);
         let utility = build_utility_model(cfg, &backend, None, &mut rng)?;
-        Some(make_planner(cfg, utility))
+        make_planners(cfg, utility, n_gateways)
     } else {
-        None
+        Vec::new()
     };
-    Ok((trainer, planner))
+    Ok((trainer, planners))
 }
 
 /// [`run_mock_experiment`] over a caller-built schedule — scenario grid runs
@@ -185,7 +286,7 @@ pub fn run_mock_on_schedule(
     sched: &ConnectivitySchedule,
     stop_at: Option<f64>,
 ) -> Result<ExperimentOutput> {
-    run_mock_on_schedule_routed(cfg, sched, None, stop_at)
+    run_mock_on_schedule_fed(cfg, sched, None, None, stop_at)
 }
 
 /// [`run_mock_on_schedule`] with an optional routed contact graph
@@ -197,20 +298,45 @@ pub fn run_mock_on_schedule_routed(
     graph: Option<&ContactGraph>,
     stop_at: Option<f64>,
 ) -> Result<ExperimentOutput> {
-    anyhow::ensure!(
+    run_mock_on_schedule_fed(cfg, sched, graph, None, stop_at)
+}
+
+/// The full-form schedule-backed mock run (ADR-0005 + ADR-0006): optional
+/// shared contact graph and optional shared [`FederationRun`]. When `fed`
+/// is `Some`, its spec governs the run (built by the scenario against *its*
+/// station network, or lifted from `cfg.federation` + planet12 routing by
+/// [`run_mock_experiment`]); when `None`, `cfg.federation` must be the
+/// single-gateway default — the narrower entry points refuse multi-gateway
+/// configs instead of silently collapsing them to one gateway.
+pub fn run_mock_on_schedule_fed(
+    cfg: &ExperimentConfig,
+    sched: &ConnectivitySchedule,
+    graph: Option<&ContactGraph>,
+    fed: Option<FederationRun<'_>>,
+    stop_at: Option<f64>,
+) -> Result<ExperimentOutput> {
+    ensure!(
         sched.n_sats == cfg.n_sats,
         "schedule covers {} satellites but config says {}",
         sched.n_sats,
         cfg.n_sats
     );
-    anyhow::ensure!(
+    ensure!(
         cfg.engine_mode != EngineMode::Streamed,
         "engine mode 'streamed' runs over a ConnectivityStream — use run_mock_on_stream"
     );
-    let (trainer, planner) = mock_parts(cfg)?;
+    ensure!(
+        fed.is_some() || cfg.federation.is_single(),
+        "multi-gateway config without a FederationRun — go through \
+         run_mock_experiment, or pass the spec + routing explicitly"
+    );
+    let spec = fed.map_or(&cfg.federation, |f| f.spec);
+    let (trainer, planners) = mock_parts(cfg, spec.n_gateways())?;
+    let (first, extra) = split_planners(planners);
     let mut agg = CpuAggregator;
-    let mut engine = Engine::new(sched, &trainer, &mut agg, engine_cfg(cfg, stop_at), planner)
-        .with_contact_graph(graph);
+    let mut engine = Engine::new(sched, &trainer, &mut agg, engine_cfg(cfg, stop_at), first)
+        .with_contact_graph(graph)
+        .with_federation(spec, fed.map(|f| f.routing), extra);
     Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
 }
 
@@ -222,21 +348,41 @@ pub fn run_mock_on_stream(
     stream: &ConnectivityStream,
     stop_at: Option<f64>,
 ) -> Result<ExperimentOutput> {
-    anyhow::ensure!(
+    run_mock_on_stream_fed(cfg, stream, None, stop_at)
+}
+
+/// The full-form stream-backed mock run: [`run_mock_on_stream`] plus the
+/// optional shared [`FederationRun`] of a multi-gateway federation
+/// (ADR-0006; same contract as [`run_mock_on_schedule_fed`]).
+pub fn run_mock_on_stream_fed(
+    cfg: &ExperimentConfig,
+    stream: &ConnectivityStream,
+    fed: Option<FederationRun<'_>>,
+    stop_at: Option<f64>,
+) -> Result<ExperimentOutput> {
+    ensure!(
         stream.n_sats() == cfg.n_sats,
         "stream covers {} satellites but config says {}",
         stream.n_sats(),
         cfg.n_sats
     );
-    anyhow::ensure!(
+    ensure!(
         cfg.engine_mode == EngineMode::Streamed,
         "run_mock_on_stream requires engine mode 'streamed' (got {})",
         cfg.engine_mode.name()
     );
-    let (trainer, planner) = mock_parts(cfg)?;
+    ensure!(
+        fed.is_some() || cfg.federation.is_single(),
+        "multi-gateway config without a FederationRun — go through \
+         run_mock_experiment, or pass the spec + routing explicitly"
+    );
+    let spec = fed.map_or(&cfg.federation, |f| f.spec);
+    let (trainer, planners) = mock_parts(cfg, spec.n_gateways())?;
+    let (first, extra) = split_planners(planners);
     let mut agg = CpuAggregator;
     let mut engine =
-        Engine::new_streamed(stream, &trainer, &mut agg, engine_cfg(cfg, stop_at), planner);
+        Engine::new_streamed(stream, &trainer, &mut agg, engine_cfg(cfg, stop_at), first)
+            .with_federation(spec, fed.map(|f| f.routing), extra);
     Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
 }
 
@@ -250,21 +396,29 @@ pub fn run_mock_on_stream(
 pub fn run_scenario(sc: &Scenario, stop_at: Option<f64>) -> Result<Vec<ExperimentOutput>> {
     sc.validate()?;
     if sc.engine_mode == EngineMode::Streamed {
-        // ISLs (if any) ride inside the stream: chunks come out routed
-        let (_, stream) = sc.build_stream();
+        // ISLs (if any) ride inside the stream: chunks come out routed;
+        // the federation (multi-gateway only) is shared across the grid
+        // like the stream generator
+        let (constellation, stream) = sc.build_stream();
+        let routing = sc.build_upload_routing(&constellation);
+        let fed = FederationRun::of(&sc.federation, routing.as_ref());
         return sc
             .algorithms
             .iter()
-            .map(|&alg| run_mock_on_stream(&sc.experiment_config(alg), &stream, stop_at))
+            .map(|&alg| run_mock_on_stream_fed(&sc.experiment_config(alg), &stream, fed, stop_at))
             .collect();
     }
     let (constellation, sched) = sc.build_schedule();
-    // one routed graph shared across the grid, like the schedule itself
+    // one routed graph + one federation shared across the grid, like the
+    // schedule itself
     let graph = sc.build_contact_graph(&constellation, &sched);
+    let routing = sc.build_upload_routing(&constellation);
+    let fed = FederationRun::of(&sc.federation, routing.as_ref());
     sc.algorithms
         .iter()
         .map(|&alg| {
-            run_mock_on_schedule_routed(&sc.experiment_config(alg), &sched, graph.as_ref(), stop_at)
+            let cfg = sc.experiment_config(alg);
+            run_mock_on_schedule_fed(&cfg, &sched, graph.as_ref(), fed, stop_at)
         })
         .collect()
 }
@@ -325,7 +479,11 @@ pub fn run_pjrt_experiment(
         ..Default::default()
     });
     // time axis: chunked stream in streamed mode, materialized schedule
-    // otherwise — either way the constellation feeds the data partition
+    // otherwise — either way the constellation feeds the data partition.
+    // `[isl]` rides inside the stream / a routed graph, `[federation]`
+    // builds its planet12 routing table (ADR-0005/0006) — the PJRT path
+    // carries the full topology surface of the mock path.
+    let routing = build_upload_routing(cfg)?;
     let (constellation, sched, stream) = if cfg.engine_mode == EngineMode::Streamed {
         let (c, s) = build_stream(cfg);
         (c, None, Some(s))
@@ -333,25 +491,35 @@ pub fn run_pjrt_experiment(
         let (c, s) = build_schedule(cfg);
         (c, Some(s), None)
     };
+    let graph = match &sched {
+        Some(s) => cfg_isl_topology(cfg, &constellation).map(|t| ContactGraph::build(&t, s)),
+        None => None,
+    };
     let mut rng = Rng::new(cfg.sim_seed ^ 0xDA7A);
     let partition = build_partition(cfg, &dataset, &constellation, &mut rng);
     let trainer = PjrtTrainer::new(&rt, &dataset, &partition, cfg.lr, eval_samples);
-    let planner = if cfg.algorithm == AlgorithmKind::FedSpace {
+    let planners = if cfg.algorithm == AlgorithmKind::FedSpace {
         let backend = PjrtSampleBackend { rt: &rt, dataset: &dataset, eval_samples, lr: cfg.lr };
         let cache = format!(
             "{}/utility_samples_{}.csv",
             cfg.artifacts_dir, cfg.model_size
         );
         let utility = build_utility_model(cfg, &backend, Some(&cache), &mut rng)?;
-        Some(make_planner(cfg, utility))
+        make_planners(cfg, utility, cfg.federation.n_gateways())
     } else {
-        None
+        Vec::new()
     };
+    let (first, extra) = split_planners(planners);
     let mut agg = PjrtAggregator { rt: &rt };
     let ecfg = engine_cfg(cfg, stop_at);
     let result = match (&sched, &stream) {
-        (Some(s), _) => Engine::new(s, &trainer, &mut agg, ecfg, planner).run()?,
-        (None, Some(st)) => Engine::new_streamed(st, &trainer, &mut agg, ecfg, planner).run()?,
+        (Some(s), _) => Engine::new(s, &trainer, &mut agg, ecfg, first)
+            .with_contact_graph(graph.as_ref())
+            .with_federation(&cfg.federation, routing.as_ref(), extra)
+            .run()?,
+        (None, Some(st)) => Engine::new_streamed(st, &trainer, &mut agg, ecfg, first)
+            .with_federation(&cfg.federation, routing.as_ref(), extra)
+            .run()?,
         (None, None) => unreachable!("one time axis is always built"),
     };
     Ok(ExperimentOutput { result, algorithm: cfg.algorithm, dist: cfg.dist })
@@ -437,6 +605,73 @@ mod tests {
             assert_eq!(out.algorithm, alg);
             assert!(!out.result.trace.curve.points.is_empty(), "{alg:?}");
         }
+    }
+
+    #[test]
+    fn config_path_runs_multi_gateway_federation() {
+        use crate::fl::{FederationSpec, ReconcilePolicy};
+        let mut cfg = tiny_cfg(AlgorithmKind::FedBuff);
+        cfg.federation = FederationSpec::split(
+            &["west", "east"],
+            &[0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1],
+            ReconcilePolicy::Periodic { every: 12 },
+        );
+        let out = run_mock_experiment(&cfg, None).unwrap();
+        let t = &out.result.trace;
+        assert_eq!(t.gateway_aggs.len(), 2);
+        assert_eq!(t.gateway_aggs.iter().sum::<usize>(), out.result.final_round);
+        assert_eq!(t.gateway_uploads.iter().sum::<usize>(), t.uploads);
+        // streamed mode over the same config is bit-identical
+        cfg.engine_mode = EngineMode::Streamed;
+        let streamed = run_mock_experiment(&cfg, None).unwrap();
+        crate::testing::assert_same_run(
+            &out.result,
+            &streamed.result,
+            "multi-gateway config streamed",
+        );
+        // a station map that doesn't cover planet12 errors at routing build
+        cfg.federation =
+            FederationSpec::split(&["a", "b"], &[0, 1], ReconcilePolicy::Centralized);
+        assert!(run_mock_experiment(&cfg, None).is_err());
+        // and the narrow schedule-backed entry refuses multi-gateway configs
+        cfg.engine_mode = EngineMode::Dense;
+        cfg.federation = FederationSpec::split(
+            &["west", "east"],
+            &[0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1],
+            ReconcilePolicy::Centralized,
+        );
+        let (_, sched) = build_schedule(&cfg);
+        assert!(run_mock_on_schedule(&cfg, &sched, None).is_err());
+    }
+
+    #[test]
+    fn config_path_enables_isls() {
+        // ROADMAP item: `train --config` with an [isl] section relays
+        use crate::cfg::{IslMode, IslSpec};
+        let mut cfg = tiny_cfg(AlgorithmKind::FedBuff);
+        cfg.isl = IslSpec {
+            mode: IslMode::IntraCross,
+            max_hops: 3,
+            max_range_km: 4000.0,
+            hop_delay_slots: 0,
+        };
+        cfg.validate().unwrap();
+        let routed = run_mock_experiment(&cfg, None).unwrap();
+        let mut off = cfg.clone();
+        off.isl = IslSpec::default();
+        let direct = run_mock_experiment(&off, None).unwrap();
+        assert!(
+            routed.result.trace.connections >= direct.result.trace.connections,
+            "ISLs must never remove reach"
+        );
+        // streamed config path carries the topology inside the stream
+        cfg.engine_mode = EngineMode::Streamed;
+        let streamed = run_mock_experiment(&cfg, None).unwrap();
+        crate::testing::assert_same_run(
+            &routed.result,
+            &streamed.result,
+            "isl config streamed vs dense",
+        );
     }
 
     #[test]

@@ -2,7 +2,9 @@
 //! setup (191 satellites, 12 ground stations, T0 = 15 min, 5 days,
 //! FedBuff M = 96, FedSpace I0 = 24, N_min = 4, N_max = 8, |R| = 5000).
 
+use super::scenario::IslSpec;
 use super::toml::{parse_toml, TomlDoc, TomlValue};
+use crate::fl::FederationSpec;
 use anyhow::{bail, Context, Result};
 
 /// Which aggregation-indicator algorithm the GS runs (§2.4, Eq. 5–7, §3).
@@ -177,6 +179,14 @@ pub struct ExperimentConfig {
     /// Dense per-step loop, sparse contact-list event loop, or the
     /// chunk-driven streamed loop.
     pub engine_mode: EngineMode,
+    /// Inter-satellite-link model (ADR-0005) — the `[isl]` TOML section,
+    /// so `train --config` can enable ISLs without going through a
+    /// scenario. Off by default.
+    pub isl: IslSpec,
+    /// Gateway federation (ADR-0006) — the `[federation]` TOML section.
+    /// The station map indexes the runner's planet12 network; the default
+    /// single central gateway reproduces the pre-federation engine.
+    pub federation: FederationSpec,
 }
 
 impl Default for ExperimentConfig {
@@ -210,6 +220,8 @@ impl Default for ExperimentConfig {
             eval_every: 4,
             threads: 0, // 0 = auto
             engine_mode: EngineMode::Dense,
+            isl: IslSpec::default(),
+            federation: FederationSpec::single(),
         }
     }
 }
@@ -302,6 +314,12 @@ impl ExperimentConfig {
         if let Some(v) = doc.get("sim").and_then(|s| s.get("engine")) {
             c.engine_mode = EngineMode::parse(v.as_str().context("engine must be string")?)?;
         }
+        if let Some(isl) = IslSpec::from_doc(doc)? {
+            c.isl = isl;
+        }
+        if let Some(federation) = FederationSpec::from_doc(doc)? {
+            c.federation = federation;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -329,6 +347,11 @@ impl ExperimentConfig {
         if !(0.0..=1.0).contains(&self.target_accuracy) {
             bail!("target_accuracy must be in [0,1]");
         }
+        self.isl.validate(self.n_steps)?;
+        // the station-count half of the federation check runs where the
+        // station network is known (the runner against planet12; scenarios
+        // validate against their own network)
+        self.federation.validate_structure()?;
         Ok(())
     }
 
@@ -387,6 +410,49 @@ mod tests {
         assert!(ExperimentConfig::from_toml_text("[constellation]\nn_sats = 0").is_err());
         // would divide by zero in the engine's evaluation modulus
         assert!(ExperimentConfig::from_toml_text("[sim]\neval_every = 0").is_err());
+    }
+
+    #[test]
+    fn isl_section_reaches_the_config_path() {
+        // ROADMAP item: `train --config` can enable ISLs
+        let c = ExperimentConfig::from_toml_text(
+            "[isl]\nmode = \"intra-cross\"\nmax_hops = 2\nmax_range_km = 3000.0\n\
+             hop_delay_slots = 1",
+        )
+        .unwrap();
+        assert!(c.isl.enabled());
+        assert_eq!(c.isl.max_hops, 2);
+        assert_eq!(c.isl.hop_delay_slots, 1);
+        assert!(!ExperimentConfig::default().isl.enabled());
+        // bounds enforced on the config path too
+        assert!(ExperimentConfig::from_toml_text("[isl]\nmode = \"ring\"\nmax_hops = 0").is_err());
+        assert!(ExperimentConfig::from_toml_text(
+            "[connectivity]\nn_steps = 10\n[isl]\nmode = \"ring\"\nmax_hops = 3\n\
+             hop_delay_slots = 100"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn federation_section_reaches_the_config_path() {
+        let c = ExperimentConfig::from_toml_text(
+            "[federation]\ngateways = [\"a\", \"b\"]\n\
+             stations = [0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1]\n\
+             reconcile = \"periodic\"\nevery = 24",
+        )
+        .unwrap();
+        assert_eq!(c.federation.n_gateways(), 2);
+        assert!(ExperimentConfig::default().federation.is_default());
+        // structural rejection at parse time (duplicate names, zero cadence)
+        assert!(ExperimentConfig::from_toml_text(
+            "[federation]\ngateways = [\"a\", \"a\"]\nstations = [0, 1]"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_text(
+            "[federation]\ngateways = [\"a\", \"b\"]\nstations = [0, 1]\n\
+             reconcile = \"periodic\"\nevery = 0"
+        )
+        .is_err());
     }
 
     #[test]

@@ -20,6 +20,7 @@ use crate::connectivity::{
     ConnectivityParams, ConnectivitySchedule, ConnectivityStream, ContactGraph, IslParams,
     IslTopology,
 };
+use crate::fl::{FederationSpec, ReconcilePolicy, UploadRouting};
 use crate::orbit::{
     planet_ground_stations, planet_labs_like, Constellation, DowntimeWindow, GroundStation,
     PlaneId, WalkerPattern, WalkerSpec,
@@ -204,6 +205,86 @@ impl IslSpec {
     pub fn enabled(&self) -> bool {
         self.mode != IslMode::Off
     }
+
+    /// Reject self-inconsistent ISL specs against an `n_steps` horizon —
+    /// shared by `Scenario::validate` and `ExperimentConfig::validate` so
+    /// the two config surfaces can never drift on the bounds.
+    pub fn validate(&self, n_steps: usize) -> Result<()> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        if self.max_hops == 0 {
+            bail!("ISLs need max_hops >= 1");
+        }
+        if self.max_hops > u8::MAX as usize {
+            bail!("isl max_hops {} exceeds the u8 hop counter", self.max_hops);
+        }
+        // the worst-case relay charge must stay within the horizon: a
+        // longer delay can never deliver anything, and an unbounded
+        // value would wrap the engine's delay arithmetic in release
+        match self.max_hops.checked_mul(self.hop_delay_slots) {
+            Some(worst) if worst <= n_steps => {}
+            _ => bail!(
+                "isl max_hops x hop_delay_slots ({} x {}) exceeds the {}-step horizon",
+                self.max_hops,
+                self.hop_delay_slots,
+                n_steps
+            ),
+        }
+        if self.mode == IslMode::IntraCross && self.max_range_km <= 0.0 {
+            bail!("cross-plane ISLs need a positive max_range_km");
+        }
+        Ok(())
+    }
+
+    /// Parse the `[isl]` TOML section (defaults fill missing keys);
+    /// `Ok(None)` when the section is absent — shared by the scenario and
+    /// experiment config parsers.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Option<IslSpec>> {
+        if doc.get("isl").is_none() {
+            return Ok(None);
+        }
+        let get = |key: &str| doc.get("isl").and_then(|s| s.get(key));
+        let mut spec = IslSpec::default();
+        if let Some(v) = get("mode") {
+            spec.mode = IslMode::parse(v.as_str().context("[isl] mode must be a string")?)?;
+        }
+        if let Some(v) = get("max_hops") {
+            spec.max_hops =
+                usize::try_from(v.as_int().context("[isl] max_hops must be an integer")?)?;
+        }
+        if let Some(v) = get("max_range_km") {
+            spec.max_range_km = v.as_float().context("[isl] max_range_km must be a number")?;
+        }
+        if let Some(v) = get("hop_delay_slots") {
+            spec.hop_delay_slots = usize::try_from(
+                v.as_int().context("[isl] hop_delay_slots must be an integer")?,
+            )?;
+        }
+        Ok(Some(spec))
+    }
+
+    /// Emit the `[isl]` TOML section (callers skip it when disabled so
+    /// pre-ISL specs stay byte-identical).
+    pub fn emit_toml(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "\n[isl]");
+        let _ = writeln!(out, "mode = \"{}\"", self.mode.name());
+        let _ = writeln!(out, "max_hops = {}", self.max_hops);
+        let _ = writeln!(out, "max_range_km = {}", self.max_range_km);
+        let _ = writeln!(out, "hop_delay_slots = {}", self.hop_delay_slots);
+    }
+
+    /// The connectivity-layer routing parameters of this spec.
+    pub fn params(&self, t0_s: f64) -> IslParams {
+        IslParams {
+            max_hops: self.max_hops,
+            hop_delay_slots: self.hop_delay_slots,
+            cross_plane: self.mode == IslMode::IntraCross,
+            max_range_m: self.max_range_km * 1e3,
+            t0_s,
+        }
+    }
 }
 
 /// Named ground-station network a scenario links against.
@@ -285,6 +366,10 @@ pub struct Scenario {
     pub downtime: Vec<DowntimeWindow>,
     /// Inter-satellite-link model (ADR-0005); `IslMode::Off` by default.
     pub isl: IslSpec,
+    /// Gateway federation (ADR-0006): station → gateway assignment and the
+    /// cross-gateway reconcile policy. The default single central gateway
+    /// reproduces the pre-federation engine bit for bit.
+    pub federation: FederationSpec,
 }
 
 impl Default for Scenario {
@@ -304,6 +389,7 @@ impl Default for Scenario {
             chunk_len: ConnectivityStream::DEFAULT_CHUNK_LEN,
             downtime: Vec::new(),
             isl: IslSpec::default(),
+            federation: FederationSpec::single(),
         }
     }
 }
@@ -366,29 +452,8 @@ impl Scenario {
                 bail!("empty downtime window for satellite {}", w.sat);
             }
         }
-        if self.isl.enabled() {
-            if self.isl.max_hops == 0 {
-                bail!("ISLs need max_hops >= 1");
-            }
-            if self.isl.max_hops > u8::MAX as usize {
-                bail!("isl max_hops {} exceeds the u8 hop counter", self.isl.max_hops);
-            }
-            // the worst-case relay charge must stay within the horizon: a
-            // longer delay can never deliver anything, and an unbounded
-            // value would wrap the engine's delay arithmetic in release
-            match self.isl.max_hops.checked_mul(self.isl.hop_delay_slots) {
-                Some(worst) if worst <= self.n_steps => {}
-                _ => bail!(
-                    "isl max_hops x hop_delay_slots ({} x {}) exceeds the {}-step horizon",
-                    self.isl.max_hops,
-                    self.isl.hop_delay_slots,
-                    self.n_steps
-                ),
-            }
-            if self.isl.mode == IslMode::IntraCross && self.isl.max_range_km <= 0.0 {
-                bail!("cross-plane ISLs need a positive max_range_km");
-            }
-        }
+        self.isl.validate(self.n_steps)?;
+        self.federation.validate(self.stations.build().len())?;
         Ok(())
     }
 
@@ -404,6 +469,7 @@ impl Scenario {
             "kuiper-3236",
             "isl-iridium-66",
             "isl-starlink-1584",
+            "fedspace-multi-gs",
         ]
     }
 
@@ -585,6 +651,37 @@ impl Scenario {
                 },
                 ..Default::default()
             },
+            "fedspace-multi-gs" => Scenario {
+                name: "fedspace-multi-gs".into(),
+                summary: "the Iridium polar shell over polar4 split into two gateway \
+                          networks (arctic: svalbard+inuvik+fairbanks, antarctic: troll) \
+                          with periodic cross-gateway reconciliation — full four-algorithm \
+                          grid (ADR-0006; Razmi et al. / Matthiesen et al. regime)"
+                    .into(),
+                constellation: ConstellationSpec::Walker {
+                    pattern: WalkerPattern::Star,
+                    n_sats: 66,
+                    planes: 6,
+                    phasing: 2,
+                    alt_km: 780.0,
+                    inc_deg: 86.4,
+                },
+                stations: StationNetwork::Polar4,
+                algorithms: vec![
+                    AlgorithmKind::Sync,
+                    AlgorithmKind::Async,
+                    AlgorithmKind::FedBuff,
+                    AlgorithmKind::FedSpace,
+                ],
+                fedbuff_m: 16,
+                federation: FederationSpec::split(
+                    &["arctic", "antarctic"],
+                    // polar4 build order: svalbard, inuvik, fairbanks, troll
+                    &[0, 0, 0, 1],
+                    ReconcilePolicy::Periodic { every: 24 },
+                ),
+                ..Default::default()
+            },
             "dove-dropout" => Scenario {
                 name: "dove-dropout".into(),
                 summary: "paper fleet with mid-run failures: 4 satellites go dark on day 2, \
@@ -665,11 +762,10 @@ impl Scenario {
             }
         );
         if self.isl.enabled() {
-            let _ = writeln!(s, "\n[isl]");
-            let _ = writeln!(s, "mode = \"{}\"", self.isl.mode.name());
-            let _ = writeln!(s, "max_hops = {}", self.isl.max_hops);
-            let _ = writeln!(s, "max_range_km = {}", self.isl.max_range_km);
-            let _ = writeln!(s, "hop_delay_slots = {}", self.isl.hop_delay_slots);
+            self.isl.emit_toml(&mut s);
+        }
+        if !self.federation.is_default() {
+            self.federation.emit_toml(&mut s);
         }
         if !self.downtime.is_empty() {
             let col = |f: fn(&DowntimeWindow) -> usize| -> String {
@@ -848,19 +944,11 @@ impl Scenario {
             sc.dist = DataDist::parse(v)?;
         }
 
-        if doc.get("isl").is_some() {
-            if let Some(v) = get_str(doc, "isl", "mode")? {
-                sc.isl.mode = IslMode::parse(v)?;
-            }
-            if let Some(v) = get_usize(doc, "isl", "max_hops")? {
-                sc.isl.max_hops = v;
-            }
-            if let Some(v) = get_f64(doc, "isl", "max_range_km")? {
-                sc.isl.max_range_km = v;
-            }
-            if let Some(v) = get_usize(doc, "isl", "hop_delay_slots")? {
-                sc.isl.hop_delay_slots = v;
-            }
+        if let Some(isl) = IslSpec::from_doc(doc)? {
+            sc.isl = isl;
+        }
+        if let Some(federation) = FederationSpec::from_doc(doc)? {
+            sc.federation = federation;
         }
 
         if doc.get("downtime").is_some() {
@@ -905,17 +993,25 @@ impl Scenario {
         self.constellation.build().with_downtime(self.downtime.clone())
     }
 
-    /// Constellation (downtime attached) + station network + link params —
-    /// the one place a scenario's connectivity inputs are interpreted, so
-    /// the dense and streamed materializations can never diverge on them.
-    fn connectivity_inputs(&self) -> (Constellation, Vec<GroundStation>, ConnectivityParams) {
-        let constellation = self.build_constellation();
+    /// Station network + link params — the one place a scenario's
+    /// station-side connectivity inputs are interpreted, shared by the
+    /// schedule, stream, and upload-routing builds so none of them can
+    /// diverge on sampling parameters.
+    fn station_params(&self) -> (Vec<GroundStation>, ConnectivityParams) {
         let stations = self.stations.build();
         let params = ConnectivityParams {
             t0_s: self.t0_s,
             min_elev_deg: self.min_elev_deg,
             ..Default::default()
         };
+        (stations, params)
+    }
+
+    /// Constellation (downtime attached) + station network + link params —
+    /// the full input set of the dense and streamed materializations.
+    fn connectivity_inputs(&self) -> (Constellation, Vec<GroundStation>, ConnectivityParams) {
+        let constellation = self.build_constellation();
+        let (stations, params) = self.station_params();
         (constellation, stations, params)
     }
 
@@ -958,17 +1054,10 @@ impl Scenario {
         if !self.isl.enabled() {
             return None;
         }
-        let params = IslParams {
-            max_hops: self.isl.max_hops,
-            hop_delay_slots: self.isl.hop_delay_slots,
-            cross_plane: self.isl.mode == IslMode::IntraCross,
-            max_range_m: self.isl.max_range_km * 1e3,
-            t0_s: self.t0_s,
-        };
         // validate() bounds the spec and every ConstellationSpec builder
         // emits plane metadata, so construction cannot fail here
         Some(
-            IslTopology::new(constellation, params)
+            IslTopology::new(constellation, self.isl.params(self.t0_s))
                 .expect("spec-built constellations always carry plane metadata"),
         )
     }
@@ -984,12 +1073,42 @@ impl Scenario {
         self.build_isl(constellation).map(|t| ContactGraph::build(&t, sched))
     }
 
+    /// The upload-routing table of a multi-gateway scenario (ADR-0006):
+    /// which gateway hears which satellite at which step, attributed from
+    /// the same visibility pipeline the schedule uses. `None` for
+    /// single-gateway scenarios — the engine then skips routing entirely
+    /// (the bit-identical fast path). The constellation must be this
+    /// scenario's own ([`Self::build_constellation`]); one table is shared
+    /// across the whole algorithm grid, like the schedule itself.
+    pub fn build_upload_routing(&self, constellation: &Constellation) -> Option<UploadRouting> {
+        if self.federation.is_single() {
+            return None;
+        }
+        // same single source of station-side inputs as the schedule/stream
+        // builds, so the routing table can never sample a different
+        // visibility relation than the contacts it attributes — without
+        // rebuilding the constellation the caller already holds
+        let (stations, params) = self.station_params();
+        Some(UploadRouting::build(
+            constellation,
+            &stations,
+            self.n_steps,
+            &params,
+            &self.federation.stations,
+        ))
+    }
+
     /// Experiment configuration for one algorithm of the grid.
     pub fn experiment_config(&self, algorithm: AlgorithmKind) -> ExperimentConfig {
         let seed = match &self.constellation {
             ConstellationSpec::PlanetLabsLike { seed, .. } => *seed,
             ConstellationSpec::Walker { .. } | ConstellationSpec::Shells { .. } => 0,
         };
+        // scenario-owned topology (ISLs, federation) is deliberately NOT
+        // copied: those specs are bound to the scenario's constellation and
+        // station network, and the config path always rebuilds planet12 —
+        // the conversion stays standalone-runnable, and scenario runs pass
+        // their graph/routing/spec explicitly (`app::runner::FederationRun`)
         ExperimentConfig {
             n_sats: self.constellation.n_sats(),
             constellation_seed: seed,
@@ -1308,6 +1427,88 @@ mod tests {
         {
             assert_eq!(StationNetwork::parse(n.name()).unwrap(), n);
         }
+    }
+
+    #[test]
+    fn federation_toml_roundtrip_present_and_omitted() {
+        // a non-default federation section round-trips exactly
+        let sc = Scenario::builtin("fedspace-multi-gs").unwrap();
+        assert!(!sc.federation.is_default());
+        let toml = sc.to_toml();
+        assert!(toml.contains("[federation]"), "{toml}");
+        assert!(toml.contains("reconcile = \"periodic\""), "{toml}");
+        let back = Scenario::from_toml_text(&toml).unwrap();
+        assert_eq!(back.federation, sc.federation);
+        assert_eq!(back, sc);
+        // the default single gateway emits nothing — pre-federation specs
+        // stay byte-identical and parse back to the default
+        let off = Scenario::builtin("paper-fig7").unwrap();
+        assert!(!off.to_toml().contains("[federation]"));
+        let back = Scenario::from_toml_text(&off.to_toml()).unwrap();
+        assert!(back.federation.is_default());
+    }
+
+    #[test]
+    fn federation_validate_through_scenario() {
+        use crate::fl::{FederationSpec, ReconcilePolicy};
+        let mut sc = Scenario::builtin("fedspace-multi-gs").unwrap();
+        sc.validate().unwrap();
+        // unmapped stations: polar4 has 4 stations, map covers 3
+        sc.federation =
+            FederationSpec::split(&["a", "b"], &[0, 0, 1], ReconcilePolicy::Centralized);
+        assert!(sc.validate().is_err());
+        // empty gateway
+        sc.federation =
+            FederationSpec::split(&["a", "b"], &[0, 0, 0, 0], ReconcilePolicy::Centralized);
+        assert!(sc.validate().is_err());
+        // zero periodic cadence
+        sc.federation = FederationSpec::split(
+            &["a", "b"],
+            &[0, 0, 1, 1],
+            ReconcilePolicy::Periodic { every: 0 },
+        );
+        assert!(sc.validate().is_err());
+        // TOML-level rejection too
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[federation]\ngateways = [\"a\", \"a\"]"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn multi_gs_builtin_shape_and_routing() {
+        let sc = Scenario::builtin("fedspace-multi-gs").unwrap();
+        assert_eq!(sc.federation.n_gateways(), 2);
+        assert_eq!(sc.algorithms.len(), 4, "the federation grid must cover all four algorithms");
+        assert_eq!(sc.stations, StationNetwork::Polar4);
+        let cfg = sc.experiment_config(AlgorithmKind::FedBuff);
+        // the conversion stays standalone-runnable: scenario-owned topology
+        // (federation, ISLs) is passed explicitly by run_scenario instead
+        assert!(cfg.federation.is_default());
+        assert!(!cfg.isl.enabled());
+        // routing builds and attributes within bounds on a scaled copy
+        let scaled = sc.scaled(Some(12), Some(48));
+        assert_eq!(scaled.federation, sc.federation, "scaling must keep the federation");
+        scaled.validate().unwrap();
+        let c = scaled.build_constellation();
+        let routing = scaled.build_upload_routing(&c).expect("multi-gateway scenario");
+        assert_eq!(routing.n_steps(), 48);
+        assert_eq!(routing.n_gateways(), 2);
+        let (_, sched) = scaled.build_schedule();
+        let mut per_gw = vec![0usize; 2];
+        for i in 0..sched.n_steps() {
+            for &s in sched.sats_at(i) {
+                per_gw[routing.gateway_for(i, s, 0)] += 1;
+            }
+        }
+        assert!(
+            per_gw.iter().all(|&n| n > 0),
+            "polar orbits should reach both gateway networks: {per_gw:?}"
+        );
+        // single-gateway scenarios build no table
+        let single = Scenario::builtin("paper-fig7").unwrap().scaled(Some(8), Some(24));
+        let c = single.build_constellation();
+        assert!(single.build_upload_routing(&c).is_none());
     }
 
     #[test]

@@ -296,6 +296,10 @@ impl StepView for ContactGraph {
     fn hops_at(&self, i: usize) -> &[u8] {
         ContactGraph::hops_at(self, i)
     }
+
+    fn hop_delay_slots(&self) -> usize {
+        self.hop_delay_slots
+    }
 }
 
 #[cfg(test)]

@@ -61,6 +61,16 @@ pub trait StepView: Sync {
     fn hops_at(&self, _i: usize) -> &[u8] {
         &[]
     }
+
+    /// Relay latency charged per ISL hop, in engine slots (ADR-0005/0006).
+    /// The default 0 matches plain schedules (no ISLs ⇒ no relay latency);
+    /// routed views ([`crate::connectivity::ContactGraph`], routed
+    /// [`crate::connectivity::WindowView`]s) override it so the forecast
+    /// can discount relayed contacts by `hops × hop_delay_slots` instead of
+    /// treating them as direct.
+    fn hop_delay_slots(&self) -> usize {
+        0
+    }
 }
 
 /// Parameters of the link model (paper §2.2 / §4.1 defaults).
@@ -474,6 +484,56 @@ pub(crate) fn sat_contacts(
     out
 }
 
+/// Station attribution of one satellite's connected windows over steps
+/// `step0..step0 + len`: `(absolute step, lowest-indexed visible station)`
+/// pairs, ascending by step — the multi-gateway upload-routing primitive
+/// (ADR-0006). A window is emitted iff [`sat_contacts`] would emit it (the
+/// feasibility count is computed identically, just without the early exit
+/// at `need`, which cannot change the ≥-`need` decision), so attribution is
+/// total over every schedule contact. Within each feasible sub-sample the
+/// station scan stops at the first visible station (exactly the "any
+/// station suffices" order of the schedule compute); the window attribution
+/// is the minimum of those station indexes over its feasible samples —
+/// "the first station, by index, that heard the satellite".
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sat_station_attr(
+    basis: &OrbitBasis,
+    frames: &[StationFrame],
+    rots: &[SampleRot],
+    step0: usize,
+    len: usize,
+    samples_per_window: usize,
+    sin_min: f64,
+    need: usize,
+) -> Vec<(usize, u16)> {
+    let prefilter = sin_min > 0.0;
+    let mut out = Vec::new();
+    for l in 0..len {
+        let mut feasible = 0usize;
+        let mut min_station = u16::MAX;
+        for s in 0..samples_per_window {
+            let (t, sin_t, cos_t) = rots[l * samples_per_window + s];
+            let p = basis.position_eci(t);
+            let e = crate::orbit::eci_to_ecef_rot(&p, sin_t, cos_t);
+            for (fi, f) in frames.iter().enumerate() {
+                if prefilter && f.up.dot(&e) < f.up_dot_pos {
+                    continue; // below this station's horizon plane
+                }
+                if crate::orbit::visible_from_frame(&e, f, sin_min) {
+                    feasible += 1;
+                    min_station = min_station.min(fi as u16);
+                    break; // any station suffices for this sample
+                }
+            }
+        }
+        if feasible >= need {
+            debug_assert_ne!(min_station, u16::MAX, "feasible window saw no station");
+            out.push((step0 + l, min_station));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -691,6 +751,31 @@ mod tests {
             DowntimeWindow { sat: 0, from_step: 1, until_step: 4 },
         ]);
         assert_eq!(d.contacts[0], vec![4, 5]);
+    }
+
+    #[test]
+    fn station_attribution_covers_exactly_the_scheduled_contacts() {
+        // the attribution pass must emit a station for precisely the
+        // windows sat_contacts admits (same feasibility count, no early
+        // exit), and every attributed station index must be in range
+        let c = planet_labs_like(14, 0);
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams::default();
+        let need = feasible_need(&params);
+        let spw = params.samples_per_window;
+        let sin_min = params.min_elev_deg.to_radians().sin();
+        let frames = station_frames(&gs);
+        let rots = sample_rotations_range(0, 48, spw, params.t0_s);
+        for orbit in &c.orbits {
+            let basis = orbit.basis();
+            let contacts = sat_contacts(&basis, &frames, &rots, 0, 48, spw, sin_min, need);
+            let attr = sat_station_attr(&basis, &frames, &rots, 0, 48, spw, sin_min, need);
+            let steps: Vec<usize> = attr.iter().map(|&(i, _)| i).collect();
+            assert_eq!(steps, contacts);
+            for &(_, st) in &attr {
+                assert!((st as usize) < gs.len());
+            }
+        }
     }
 
     #[test]

@@ -426,6 +426,9 @@ pub struct WindowView {
     /// Hop counts parallel to `sets` (empty inner vecs when the stream
     /// carries no ISLs — the [`StepView::hops_at`] "all direct" default).
     hops: Vec<Vec<u8>>,
+    /// Relay latency per hop in slots, copied from the owning stream so the
+    /// forecast can discount relayed contacts (0 without ISLs).
+    hop_delay: usize,
 }
 
 impl WindowView {
@@ -460,6 +463,10 @@ impl StepView for WindowView {
 
     fn hops_at(&self, i: usize) -> &[u8] {
         &self.hops[i - self.start]
+    }
+
+    fn hop_delay_slots(&self) -> usize {
+        self.hop_delay
     }
 }
 
@@ -542,6 +549,7 @@ impl<'a> StreamCursor<'a> {
             n_sats: self.stream.n_sats(),
             sets,
             hops,
+            hop_delay: self.stream.hop_delay_slots(),
         }
     }
 }

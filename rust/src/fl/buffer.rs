@@ -1,6 +1,12 @@
 //! The GS gradient buffer B_i of Algorithm 1.
-
-use std::collections::BTreeSet;
+//!
+//! Under a multi-gateway federation (ADR-0006) each gateway owns one of
+//! these, fed only by the satellites its stations happen to hear — so the
+//! satellite ids a buffer sees are **sparse and arbitrary** (gateway 1 may
+//! only ever buffer sats {3, 57, 190}). Everything here is therefore sized
+//! by the buffer's own contents: the contributor set is a sorted vec of the
+//! ids actually buffered (never an id-indexed table), `n_sats` is O(1), and
+//! no operation allocates or scans past the local buffer's entries.
 
 /// One buffered local update (g_k, s_k). Staleness is fixed at receive time
 /// (Algorithm 1: s_k = i_g − i_{g,k} with the *current* i_g).
@@ -19,8 +25,13 @@ pub struct GradientEntry {
 /// B_i plus the contributing-satellite index set R_i.
 #[derive(Clone, Debug, Default)]
 pub struct Buffer {
+    /// Arrival order — `drain` hands entries to Eq. 4 in exactly this
+    /// order, so aggregation results are independent of the contributor
+    /// set's representation.
     entries: Vec<GradientEntry>,
-    sats: BTreeSet<usize>,
+    /// R_i as a sorted vec of the distinct ids buffered (O(|R_i|) memory
+    /// whatever the global fleet size or id range).
+    sats: Vec<usize>,
 }
 
 impl Buffer {
@@ -31,7 +42,9 @@ impl Buffer {
 
     /// Receive (g_k, i_{g,k}) from satellite k (Algorithm 1 receive step).
     pub fn push(&mut self, entry: GradientEntry) {
-        self.sats.insert(entry.sat);
+        if let Err(pos) = self.sats.binary_search(&entry.sat) {
+            self.sats.insert(pos, entry.sat);
+        }
         self.entries.push(entry);
     }
 
@@ -61,6 +74,7 @@ impl Buffer {
     }
 
     /// Drain for aggregation (Algorithm 1: B_{i+1} ← ∅, R_{i+1} ← ∅).
+    /// Entries come out in arrival order — the order Eq. 4 accumulates in.
     pub fn drain(&mut self) -> Vec<GradientEntry> {
         self.sats.clear();
         std::mem::take(&mut self.entries)
@@ -68,7 +82,7 @@ impl Buffer {
 
     /// R_i as a sorted vec (for policies / logging).
     pub fn sat_set(&self) -> Vec<usize> {
-        self.sats.iter().copied().collect()
+        self.sats.clone()
     }
 }
 
@@ -101,5 +115,32 @@ mod tests {
         assert_eq!(drained.len(), 1);
         assert!(b.is_empty());
         assert_eq!(b.n_sats(), 0);
+    }
+
+    #[test]
+    fn sparse_ids_cost_only_the_buffered_contents() {
+        // a per-gateway buffer may see arbitrarily sparse ids — the
+        // contributor set must track exactly what was pushed, not the id
+        // range (an id-indexed table would need ~10^18 slots here)
+        let mut b = Buffer::new();
+        for &sat in &[usize::MAX - 1, 3, 999_999_999_999, 3, 0] {
+            b.push(entry(sat, 1));
+        }
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.n_sats(), 4);
+        assert_eq!(b.sat_set(), vec![0, 3, 999_999_999_999, usize::MAX - 1]);
+    }
+
+    #[test]
+    fn drain_preserves_arrival_order() {
+        // Eq. 4 accumulates per element in entry order; re-uploads and
+        // out-of-order ids must come back exactly as they arrived
+        let mut b = Buffer::new();
+        for (i, &sat) in [9usize, 2, 9, 5].iter().enumerate() {
+            b.push(entry(sat, i));
+        }
+        let drained = b.drain();
+        assert_eq!(drained.iter().map(|e| e.sat).collect::<Vec<_>>(), vec![9, 2, 9, 5]);
+        assert_eq!(drained.iter().map(|e| e.staleness).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
     }
 }

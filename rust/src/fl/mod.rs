@@ -1,10 +1,14 @@
 //! The federated-learning core (paper §2.3–2.4): GS state, gradient buffer,
-//! staleness compensation, the four aggregation-indicator policies, and the
-//! 3-satellite illustrative example behind Figures 3–4 / Table 1.
+//! staleness compensation, the four aggregation-indicator policies, the
+//! 3-satellite illustrative example behind Figures 3–4 / Table 1, and the
+//! multi-gateway [`Federation`] layer (ADR-0006) that generalizes the
+//! single logical FL server to per-gateway buffers with deterministic
+//! cross-gateway reconciliation.
 
 pub mod algorithms;
 pub mod buffer;
 pub mod client;
+pub mod federation;
 pub mod illustrative;
 pub mod server;
 pub mod staleness;
@@ -12,5 +16,9 @@ pub mod staleness;
 pub use algorithms::{AggregationPolicy, AsyncPolicy, FedBuffPolicy, ScheduledPolicy, SyncPolicy};
 pub use buffer::{Buffer, GradientEntry};
 pub use client::{SatClient, SatPhase};
-pub use server::{CpuAggregator, GsState, ServerAggregator};
+pub use federation::{
+    Federation, FederationSpec, Gateway, GatewayWindow, ReconcilePolicy, StationMap,
+    UploadRouting,
+};
+pub use server::{weighted_model_merge, CpuAggregator, GsState, ServerAggregator};
 pub use staleness::{compensation, normalized_weights};

@@ -68,8 +68,27 @@ impl ServerAggregator for CpuAggregator {
     }
 }
 
+/// Weighted element-wise model merge: `out[e] = Σ_g wt_g · w_g[e]`,
+/// accumulated **in input order** — the deterministic cross-gateway
+/// reconcile primitive of [`crate::fl::Federation`] (ADR-0006; callers pass
+/// gateways in index order so replays are bit-identical). A single model
+/// with weight 1.0 comes back bit-for-bit unchanged (`0.0 + 1.0·x = x`
+/// exactly in f32), which is what makes single-gateway `Periodic`
+/// reconciliation trace-identical to `Centralized`.
+pub fn weighted_model_merge(models: &[(&[f32], f32)], d: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; d];
+    for (w, wt) in models {
+        assert_eq!(w.len(), d, "merge dim mismatch");
+        for (o, x) in out.iter_mut().zip(w.iter()) {
+            *o += wt * x;
+        }
+    }
+    out
+}
+
 /// GS state of Algorithm 1: current global model w^i, round index i_g, the
-/// buffer B_i, and the running trace the figures need.
+/// buffer B_i, and the running trace the figures need — the single-server
+/// building block [`crate::fl::Federation`] generalizes to many gateways.
 pub struct GsState {
     /// Current global model w^i.
     pub w: Vec<f32>,
@@ -237,5 +256,32 @@ mod tests {
     fn future_round_rejected() {
         let mut gs = GsState::new(vec![0.0], 0.5);
         gs.receive(0, vec![1.0], 7, 1);
+    }
+
+    #[test]
+    fn weighted_merge_is_exact_for_a_single_full_weight_model() {
+        let w: Vec<f32> = (0..100).map(|i| (i as f32).sin() * 1e3).collect();
+        let merged = weighted_model_merge(&[(&w, 1.0)], w.len());
+        for (a, b) in merged.iter().zip(w.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn weighted_merge_accumulates_in_input_order() {
+        let a = vec![1.0f32, 2.0];
+        let b = vec![3.0f32, 5.0];
+        let m = weighted_model_merge(&[(&a, 0.25), (&b, 0.75)], 2);
+        assert!((m[0] - 2.5).abs() < 1e-6);
+        assert!((m[1] - 4.25).abs() < 1e-6);
+        // empty input is the zero model
+        assert_eq!(weighted_model_merge(&[], 3), vec![0.0; 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn weighted_merge_rejects_dim_mismatch() {
+        let a = vec![1.0f32];
+        let _ = weighted_model_merge(&[(&a, 1.0)], 2);
     }
 }

@@ -34,6 +34,7 @@ impl Default for RandomForestParams {
 }
 
 /// A fitted random forest.
+#[derive(Clone)]
 pub struct RandomForest {
     /// Hyper-parameters the forest was built with.
     pub params: RandomForestParams,
@@ -85,6 +86,10 @@ impl Regressor for RandomForest {
 
     fn is_fitted(&self) -> bool {
         !self.trees.is_empty()
+    }
+
+    fn clone_box(&self) -> Box<dyn Regressor> {
+        Box::new(self.clone())
     }
 }
 

@@ -5,6 +5,7 @@ use super::Regressor;
 
 /// Linear regression fit by solving the (ridge-damped) normal equations
 /// with Gaussian elimination — d is tiny (≈10 features) so O(d^3) is free.
+#[derive(Clone)]
 pub struct LinearRegression {
     /// ridge coefficient λ
     pub lambda: f64,
@@ -88,6 +89,10 @@ impl Regressor for LinearRegression {
 
     fn is_fitted(&self) -> bool {
         !self.weights.is_empty()
+    }
+
+    fn clone_box(&self) -> Box<dyn Regressor> {
+        Box::new(self.clone())
     }
 }
 

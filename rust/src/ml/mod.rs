@@ -22,6 +22,9 @@ pub trait Regressor: Send + Sync {
     fn predict(&self, row: &[f64]) -> f64;
     /// Has `fit` been called with non-empty data?
     fn is_fitted(&self) -> bool;
+    /// Clone behind the trait object — lets a fitted û be shared across
+    /// per-gateway planners (ADR-0006) without refitting.
+    fn clone_box(&self) -> Box<dyn Regressor>;
 }
 
 /// Mean squared error of a fitted regressor over a dataset.
@@ -80,6 +83,9 @@ mod tests {
             }
             fn is_fitted(&self) -> bool {
                 true
+            }
+            fn clone_box(&self) -> Box<dyn Regressor> {
+                Box::new(Exact)
             }
         }
         let x = vec![vec![1.0], vec![2.0]];

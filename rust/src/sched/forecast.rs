@@ -53,6 +53,10 @@ pub struct ForecastScratch {
     base: Vec<i64>,
     holds_current: Vec<bool>,
     buffered: Vec<usize>,
+    /// Step at which each satellite's pending update became (or becomes)
+    /// ready — the relay-latency bookkeeping (only consulted while
+    /// `pending` is set; with hop delay 0 it reduces to "next slot").
+    ready: Vec<i64>,
 }
 
 /// Replay `schedule` (a^{start..start+I0}) over the known connectivity.
@@ -64,6 +68,15 @@ pub struct ForecastScratch {
 /// first contact with a pending update; re-train only on version change;
 /// training completes within one slot, matching T0 = 15 min ≫ E local
 /// steps).
+///
+/// Relayed contacts are discounted by their relay latency (ADR-0005): a
+/// contact over `h` hops with `hop_delay = sched.hop_delay_slots()` both
+/// delivers the model `h × hop_delay` slots late (training finishes later)
+/// and requires the pending update to have been ready `h × hop_delay`
+/// slots before the contact. With `hop_delay = 0` — every pre-existing
+/// schedule, and both ISL built-ins — the replay is unchanged bit for bit.
+/// Initial pending updates are modelled as ready at the window start (the
+/// engine knows the exact `ready_at`; the window does not carry it).
 pub fn forecast_window(
     sched: &dyn StepView,
     start: usize,
@@ -83,6 +96,7 @@ pub fn forecast_window_with(
 ) -> WindowForecast {
     let k = sched.n_sats();
     assert_eq!(states.len(), k);
+    let hop_delay = sched.hop_delay_slots();
     // relative aggregation counter; pending base expressed in it
     let mut agg_count: usize = 0;
     scratch.pending.clear();
@@ -94,10 +108,14 @@ pub fn forecast_window_with(
     scratch.holds_current.clear();
     scratch.holds_current.extend(states.iter().map(|s| s.holds_current));
     scratch.buffered.clear();
+    // initial pendings: ready at the window start at the latest
+    scratch.ready.clear();
+    scratch.ready.resize(k, start as i64);
     let pending = &mut scratch.pending;
     let base = &mut scratch.base;
     let holds_current = &mut scratch.holds_current;
     let buffered = &mut scratch.buffered;
+    let ready = &mut scratch.ready;
     let mut aggregations = Vec::new();
     let mut idle = 0usize;
     let mut contacts = 0usize;
@@ -105,16 +123,33 @@ pub fn forecast_window_with(
     let end = (start + schedule.len()).min(sched.n_steps());
     for (w, l) in (start..end).enumerate() {
         let conn = sched.sats_at(l);
-        for &s in conn {
+        let hops = sched.hops_at(l);
+        // relay latency of contact j: hops[j] × hop_delay slots each way
+        // (empty hops ⇒ all direct, the plain-schedule fast path)
+        let delay_of = |j: usize| -> i64 {
+            if hops.is_empty() {
+                0
+            } else {
+                (hops[j] as usize * hop_delay) as i64
+            }
+        };
+        for (j, &s) in conn.iter().enumerate() {
             contacts += 1;
             if !states[s].has_data {
                 idle += 1;
                 continue;
             }
-            if pending[s] {
+            // an upload over this contact's relay path must have been ready
+            // `delay` slots ago to land now (mirrors SatClient::
+            // can_upload_relayed); with hop_delay = 0 this is exactly the
+            // legacy "pending ⇒ upload" condition
+            if pending[s] && ready[s] + delay_of(j) <= l as i64 {
                 buffered.push((agg_count as i64 - base[s]) as usize);
                 pending[s] = false;
-            } else if holds_current[s] {
+            } else if pending[s] || holds_current[s] {
+                // connected with nothing deliverable: a re-contact holding
+                // the current version, or a pending update still in flight
+                // on its relay path (hop_delay > 0 only)
                 idle += 1;
             }
         }
@@ -127,12 +162,15 @@ pub fn forecast_window_with(
             }
         }
         // broadcast: connected sats not holding the current version receive
-        // it and start training (update pending by next slot)
-        for &s in conn {
+        // it and start training; a relayed delivery spends `delay` slots in
+        // flight, so the update is ready that much later (mirrors the
+        // engine's `train_duration_slots + delay`)
+        for (j, &s) in conn.iter().enumerate() {
             if states[s].has_data && !holds_current[s] {
                 holds_current[s] = true;
                 base[s] = agg_count as i64;
                 pending[s] = true;
+                ready[s] = l as i64 + 1 + delay_of(j);
             }
         }
     }
@@ -214,6 +252,86 @@ mod tests {
             assert_eq!(a.idle, b.idle);
             assert_eq!(a.contacts, b.contacts);
         }
+    }
+
+    /// A hand-built routed view: explicit reach sets, hop counts, and a
+    /// per-hop relay latency — what a [`crate::connectivity::ContactGraph`]
+    /// or routed window presents to the planner.
+    struct RelayView {
+        sets: Vec<Vec<usize>>,
+        hops: Vec<Vec<u8>>,
+        n_sats: usize,
+        delay: usize,
+    }
+
+    impl StepView for RelayView {
+        fn n_sats(&self) -> usize {
+            self.n_sats
+        }
+        fn n_steps(&self) -> usize {
+            self.sets.len()
+        }
+        fn sats_at(&self, i: usize) -> &[usize] {
+            &self.sets[i]
+        }
+        fn hops_at(&self, i: usize) -> &[u8] {
+            &self.hops[i]
+        }
+        fn hop_delay_slots(&self) -> usize {
+            self.delay
+        }
+    }
+
+    fn relay_ring(steps: usize, hops: u8, delay: usize) -> RelayView {
+        RelayView {
+            sets: vec![vec![0]; steps],
+            hops: vec![vec![hops]; steps],
+            n_sats: 1,
+            delay,
+        }
+    }
+
+    #[test]
+    fn hop_delay_discounts_relayed_contacts() {
+        // one satellite reachable every step over a 1-hop relay; with
+        // hop_delay = 2 both legs are charged: the broadcast at step 0
+        // finishes training at 0 + 1 + 2 = 3, and the upload needs two more
+        // slots in flight, so the first aggregation can fire at step 5 —
+        // against 7 aggregations when the relay is treated as free
+        let free = forecast_window(&relay_ring(8, 1, 0), 0, &vec![true; 8], &fresh(1));
+        let slow = forecast_window(&relay_ring(8, 1, 2), 0, &vec![true; 8], &fresh(1));
+        assert_eq!(free.aggregations.len(), 7);
+        assert_eq!(slow.aggregations.len(), 1);
+        // the forecast counts in-flight contacts as idle, like the engine
+        assert!(slow.idle > free.idle, "slow={} free={}", slow.idle, free.idle);
+    }
+
+    #[test]
+    fn zero_hop_contacts_ignore_hop_delay() {
+        // direct contacts (hop count 0) must be untouched by any delay —
+        // and a routed view with all-zero hops must equal the plain view
+        let direct = forecast_window(&relay_ring(8, 0, 5), 0, &vec![true; 8], &fresh(1));
+        let sets = vec![vec![0usize]; 8];
+        let plain = ConnectivitySchedule::from_sets(sets, 1);
+        let legacy = forecast_window(&plain, 0, &vec![true; 8], &fresh(1));
+        assert_eq!(direct.aggregations, legacy.aggregations);
+        assert_eq!(direct.idle, legacy.idle);
+        assert_eq!(direct.contacts, legacy.contacts);
+    }
+
+    #[test]
+    fn initial_pending_waits_out_its_relay_path() {
+        // a pending update at window start over a 2-hop path with delay 1
+        // is modelled ready at `start`, so it lands at start + 2
+        let v = relay_ring(6, 2, 1);
+        let st = vec![SatForecastState {
+            pending: true,
+            staleness_now: 4,
+            holds_current: true,
+            has_data: true,
+        }];
+        let f = forecast_window(&v, 0, &[true, true, true, false, false, false], &st);
+        assert_eq!(f.aggregations, vec![vec![4]], "lands at step 2 with its staleness intact");
     }
 
     #[test]

@@ -11,6 +11,14 @@ pub struct UtilityModel {
     fitted: bool,
 }
 
+impl Clone for UtilityModel {
+    /// Deep-clones the fitted regressor — one phase-1 fit can feed every
+    /// gateway's planner in a multi-gateway federation (ADR-0006).
+    fn clone(&self) -> Self {
+        UtilityModel { regressor: self.regressor.clone_box(), fitted: self.fitted }
+    }
+}
+
 impl UtilityModel {
     /// `kind`: "forest" (paper default) or "linear" (ablation baseline).
     pub fn new(kind: &str) -> Result<Self> {
@@ -111,6 +119,18 @@ mod tests {
     fn predict_before_fit_panics() {
         let u = UtilityModel::new("forest").unwrap();
         let _ = u.predict(&[0], 1.0);
+    }
+
+    #[test]
+    fn clone_predicts_identically() {
+        let (s, y) = synthetic_samples(300);
+        let mut u = UtilityModel::new("forest").unwrap();
+        u.fit(&s, &y);
+        let c = u.clone();
+        assert!(c.is_fitted());
+        for probe in [&[0usize, 1, 2][..], &[4], &[0, 0, 0, 0, 6]] {
+            assert_eq!(u.predict(probe, 1.5).to_bits(), c.predict(probe, 1.5).to_bits());
+        }
     }
 
     #[test]

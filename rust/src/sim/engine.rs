@@ -29,8 +29,8 @@ use crate::connectivity::{
     ConnectivitySchedule, ConnectivityStream, ContactGraph, StepView, StreamCursor,
 };
 use crate::fl::{
-    AggregationPolicy, AsyncPolicy, FedBuffPolicy, GsState, ScheduledPolicy, ServerAggregator,
-    SyncPolicy,
+    AggregationPolicy, AsyncPolicy, FedBuffPolicy, Federation, FederationSpec, ReconcilePolicy,
+    ScheduledPolicy, ServerAggregator, SyncPolicy, UploadRouting,
 };
 use crate::fl::client::SatClient;
 use crate::metrics::CurvePoint;
@@ -131,23 +131,30 @@ impl PolicyImpl {
 /// advance function. Returns `n_steps` when no further event exists.
 ///
 /// Event sources, mirroring the step body top to bottom:
-/// - FedSpace replanning at the committed horizon (`sp.horizon() <= i`);
+/// - FedSpace replanning at the committed horizon (`sp.horizon() <= i`),
+///   for any gateway's policy;
 /// - any step with a contact (`active`, ascending);
 /// - FedSpace planned aggregation slots (can fire with an empty C_i);
 /// - periodic evaluation steps (`(i+1) % eval_every == 0`) — these also
 ///   refresh the `last_loss` the planner reads, so they must not be skipped;
+/// - `Periodic` reconcile boundaries (`reconcile_every`, same modulus
+///   shape) — a merge after an event-step aggregation can land on an
+///   otherwise quiet step, and skipping it would defer the merge
+///   (ADR-0006). Quiet boundaries are no-op merges, so visiting them is
+///   sound in every mode;
 /// - the final step (closing evaluation).
 fn next_event(
     after: usize,
     active: &[usize],
-    policy: &PolicyImpl,
+    policies: &[PolicyImpl],
     n_steps: usize,
     eval_every: usize,
+    reconcile_every: Option<usize>,
 ) -> usize {
     if after >= n_steps {
         return n_steps;
     }
-    if policy.fires_unconditionally() {
+    if policies.iter().any(PolicyImpl::fires_unconditionally) {
         return after;
     }
     // the final step is always an event, so start from it and tighten
@@ -159,10 +166,16 @@ fn next_event(
     let ee = eval_every.max(1);
     let next_eval = (after + 1).div_ceil(ee) * ee - 1;
     next = next.min(next_eval);
-    if let PolicyImpl::FedSpace(sp) = policy {
-        next = next.min(sp.horizon().max(after));
-        if let Some(slot) = sp.next_scheduled(after) {
-            next = next.min(slot);
+    if let Some(every) = reconcile_every {
+        let re = every.max(1);
+        next = next.min((after + 1).div_ceil(re) * re - 1);
+    }
+    for policy in policies {
+        if let PolicyImpl::FedSpace(sp) = policy {
+            next = next.min(sp.horizon().max(after));
+            if let Some(slot) = sp.next_scheduled(after) {
+                next = next.min(slot);
+            }
         }
     }
     next
@@ -197,21 +210,30 @@ impl ScheduleSource<'_> {
 
 /// Mutable per-run state threaded through every walk — one bundle so the
 /// three time-axis walks can share the single step body [`run_step`].
+/// The server side is a [`Federation`] (ADR-0006): one gateway per spec
+/// entry, each with its own buffer and its own policy instance; the
+/// single-gateway default reduces to the pre-federation `GsState` engine
+/// bit for bit.
 struct RunState {
     clients: Vec<SatClient>,
     sat_rngs: Vec<Rng>,
-    gs: GsState,
-    policy: PolicyImpl,
+    fed: Federation,
+    /// One aggregation-indicator policy per gateway (index = gateway).
+    policies: Vec<PolicyImpl>,
     trace: RunTrace,
     last_loss: f64,
     days_to_target: Option<f64>,
 }
 
 impl RunState {
-    /// Will the FedSpace policy replan at step `i`? The streamed walk
-    /// materializes the planning window only when this holds.
+    /// Will any gateway's FedSpace policy replan at step `i`? The streamed
+    /// walk materializes the planning window only when this holds. (All
+    /// gateways extend their horizon by I0 at the same boundaries, so "any"
+    /// and "all" coincide in practice.)
     fn needs_replan(&self, i: usize) -> bool {
-        matches!(&self.policy, PolicyImpl::FedSpace(sp) if sp.horizon() <= i)
+        self.policies
+            .iter()
+            .any(|p| matches!(p, PolicyImpl::FedSpace(sp) if sp.horizon() <= i))
     }
 }
 
@@ -232,12 +254,22 @@ impl RunState {
 /// origin satellite, so staleness is measured from its local train time,
 /// not the relay time. An empty `conn_hops` means "all direct" (the plain
 /// PR 3 path, bit-identical to before).
+///
+/// With a multi-gateway federation (ADR-0006), `routing` is `Some`: every
+/// upload and broadcast goes through the gateway of the station that heard
+/// the satellite, each gateway's policy `decide`s against its own buffer
+/// (in gateway-index order), FedSpace plans per gateway over
+/// [`UploadRouting::gateway_window`] slices, and `Periodic` reconciles
+/// fire at the end of the step, before evaluation. `routing == None` is
+/// the single-gateway fast path — no lookup, no filtering, no merge: the
+/// pre-federation engine bit for bit.
 #[allow(clippy::too_many_arguments)]
 fn run_step(
     st: &mut RunState,
     trainer: &dyn Trainer,
     aggregator: &mut dyn ServerAggregator,
-    planner: &mut Option<FedSpacePlanner>,
+    planners: &mut [FedSpacePlanner],
+    routing: Option<&UploadRouting>,
     cfg: &EngineConfig,
     plan_view: Option<&dyn StepView>,
     conn: &[usize],
@@ -246,24 +278,51 @@ fn run_step(
     i: usize,
     n_steps: usize,
 ) -> Result<bool> {
-    // FedSpace: (re)plan at window boundaries using the live state
-    if let (PolicyImpl::FedSpace(sp), Some(planner)) = (&mut st.policy, planner.as_mut()) {
-        if sp.horizon() <= i {
-            let states: Vec<SatForecastState> = st
-                .clients
-                .iter()
-                .map(|c| SatForecastState {
-                    pending: c.pending.is_some(),
-                    staleness_now: st.gs.i_g.saturating_sub(c.base_round),
-                    holds_current: c.held_version == Some(st.gs.i_g),
-                    has_data: c.has_data(),
-                })
-                .collect();
-            let view = plan_view.expect("replanning step without a planning window");
-            let window = planner.plan(view, i, &states, st.last_loss);
-            sp.extend(&window);
+    // FedSpace: (re)plan at window boundaries using the live state, one
+    // window per gateway (a single shared `states` snapshot — versions and
+    // staleness are global, ADR-0006)
+    if st.needs_replan(i) {
+        let round = st.fed.round();
+        let states: Vec<SatForecastState> = st
+            .clients
+            .iter()
+            .map(|c| SatForecastState {
+                pending: c.pending.is_some(),
+                staleness_now: round.saturating_sub(c.base_round),
+                holds_current: c.held_version == Some(round),
+                has_data: c.has_data(),
+            })
+            .collect();
+        let view = plan_view.expect("replanning step without a planning window");
+        for (g, policy) in st.policies.iter_mut().enumerate() {
+            if let PolicyImpl::FedSpace(sp) = policy {
+                if sp.horizon() <= i {
+                    let planner = &mut planners[g];
+                    let window = match routing {
+                        None => planner.plan(view, i, &states, st.last_loss),
+                        Some(r) => {
+                            // each gateway forecasts only the contacts the
+                            // station map routes to it
+                            let i0 = planner.params.i0.max(1);
+                            let gw_view = r.gateway_window(view, i, i0, g);
+                            planner.plan(&gw_view, i, &states, st.last_loss)
+                        }
+                    };
+                    sp.extend(&window);
+                }
+            }
         }
     }
+
+    // upload/broadcast routing: the gateway of the station that heard the
+    // satellite; relayed contacts land at the step's first listening
+    // station (UploadRouting::gateway_for). Single gateway: everything is 0.
+    let route = |s: usize, hops: usize| -> usize {
+        match routing {
+            None => 0,
+            Some(r) => r.gateway_for(i, s, hops),
+        }
+    };
 
     // 1. receive uploads (Algorithm 1's for k ∈ C_i loop; C_i is the reach
     // set when ISLs are on, and relayed gradients keep their origin id)
@@ -272,8 +331,8 @@ fn run_step(
         let delay = hops * hop_delay;
         st.trace.connections += 1;
         if st.clients[s].can_upload_relayed(i, delay) {
-            let (g, base) = st.clients[s].upload(i);
-            st.gs.receive(s, g, base, st.clients[s].n_samples);
+            let (grad, base) = st.clients[s].upload(i);
+            st.fed.receive(route(s, hops), s, grad, base, st.clients[s].n_samples);
             st.trace.uploads += 1;
             if hops > 0 {
                 st.trace.relayed += 1;
@@ -283,43 +342,55 @@ fn run_step(
         }
     }
 
-    // 2. SCHEDULER + SERVERUPDATE
-    if st.policy.decide(i, conn, &st.gs.buffer) {
-        let t = Instant::now();
-        let stalenesses = st.gs.update(aggregator)?;
-        st.trace.t_agg_s += t.elapsed().as_secs_f64();
-        for s in stalenesses {
-            st.trace.staleness.add(s as i64);
+    // 2. SCHEDULER + SERVERUPDATE, per gateway in index order (the
+    // deterministic merge/update order of ADR-0006)
+    for (g, policy) in st.policies.iter_mut().enumerate() {
+        if policy.decide(i, conn, &st.fed.gateways[g].buffer) {
+            let t = Instant::now();
+            let stalenesses = st.fed.update(g, aggregator)?;
+            st.trace.t_agg_s += t.elapsed().as_secs_f64();
+            for s in stalenesses {
+                st.trace.staleness.add(s as i64);
+            }
+            st.trace.global_updates += 1;
         }
-        st.trace.global_updates += 1;
     }
 
-    // 3. broadcast (w^{i+1}, i_g) and start local training; a relayed
-    // delivery spends `delay` slots in flight, pushing ready_at out
+    // 3. broadcast (w^{i+1}, i_g) from each satellite's gateway and start
+    // local training; a relayed delivery spends `delay` slots in flight,
+    // pushing ready_at out. The version stamp is the global round.
+    let round = st.fed.round();
     for (j, &s) in conn.iter().enumerate() {
         let hops = if conn_hops.is_empty() { 0 } else { conn_hops[j] as usize };
         let delay = hops * hop_delay;
-        if st.clients[s].has_data() && st.clients[s].wants_model(st.gs.i_g, i) {
-            st.clients[s].receive(st.gs.i_g, i, cfg.train_duration_slots + delay);
+        if st.clients[s].has_data() && st.clients[s].wants_model(round, i) {
+            st.clients[s].receive(round, i, cfg.train_duration_slots + delay);
             let t = Instant::now();
-            let (delta, _train_loss) = trainer.local_update(s, &st.gs.w, &mut st.sat_rngs[s])?;
+            let model = st.fed.broadcast_model(route(s, hops));
+            let (delta, _train_loss) = trainer.local_update(s, model, &mut st.sat_rngs[s])?;
             st.trace.t_train_s += t.elapsed().as_secs_f64();
             st.clients[s].set_update(delta);
         }
     }
 
-    // 4. periodic evaluation
+    // 3b. cross-gateway reconcile cadence (ADR-0006): before evaluation,
+    // so the curve sees the model "after reconcile". A no-op for
+    // `Centralized` and on quiet boundaries.
+    st.fed.end_of_step(i);
+
+    // 4. periodic evaluation (of the global model)
     let last_step = i + 1 == n_steps;
     if (i + 1) % cfg.eval_every == 0 || last_step {
         let t = Instant::now();
-        let (loss, acc) = trainer.evaluate(&st.gs.w)?;
+        let global_w = st.fed.global_model();
+        let (loss, acc) = trainer.evaluate(&global_w)?;
         st.trace.t_eval_s += t.elapsed().as_secs_f64();
         st.last_loss = loss;
         let day = (i + 1) as f64 * cfg.days_per_step;
         st.trace.curve.push(CurvePoint {
             day,
             step: i + 1,
-            round: st.gs.i_g,
+            round: st.fed.round(),
             accuracy: acc,
             loss,
         });
@@ -339,15 +410,23 @@ pub struct Engine<'a> {
     pub source: ScheduleSource<'a>,
     /// Local-training backend (PJRT artifacts or the analytic mock).
     pub trainer: &'a dyn Trainer,
-    /// Eq.-4 server-update implementation (CPU or Pallas artifact).
+    /// Eq.-4 server-update implementation (CPU or Pallas artifact) —
+    /// engine-owned and shared across gateways (a stateless kernel,
+    /// ADR-0006).
     pub aggregator: &'a mut dyn ServerAggregator,
     /// Engine knobs.
     pub cfg: EngineConfig,
-    /// Some(..) iff algorithm == FedSpace
-    pub planner: Option<FedSpacePlanner>,
+    /// Per-gateway FedSpace planners, in gateway-index order (one entry
+    /// per gateway iff algorithm == FedSpace, empty otherwise). The
+    /// constructors seed entry 0; [`Self::with_federation`] appends the
+    /// rest.
+    pub planners: Vec<FedSpacePlanner>,
     /// Routed contact graph for precomputed-schedule engines (ADR-0005);
     /// streamed engines take their routing from the stream itself.
     isl: Option<&'a ContactGraph>,
+    /// Federation topology + upload routing (ADR-0006); `None` runs the
+    /// implicit single central gateway.
+    federation: Option<(&'a FederationSpec, Option<&'a UploadRouting>)>,
 }
 
 impl<'a> Engine<'a> {
@@ -374,8 +453,9 @@ impl<'a> Engine<'a> {
             trainer,
             aggregator,
             cfg,
-            planner,
+            planners: planner.into_iter().collect(),
             isl: None,
+            federation: None,
         }
     }
 
@@ -394,6 +474,66 @@ impl<'a> Engine<'a> {
             assert_eq!(g.n_steps(), self.source.n_steps(), "graph/schedule horizon mismatch");
         }
         self.isl = graph;
+        self
+    }
+
+    /// Attach a multi-gateway federation (ADR-0006): `spec` names the
+    /// gateways and reconcile policy; `routing` is required (and only
+    /// consulted) when the spec has more than one gateway — single-gateway
+    /// specs keep the raw pre-federation fast path. `extra_planners` are
+    /// the FedSpace planners of gateways `1..` (one per extra gateway,
+    /// empty for other algorithms); gateway 0's planner is the one the
+    /// constructor took.
+    pub fn with_federation(
+        mut self,
+        spec: &'a FederationSpec,
+        routing: Option<&'a UploadRouting>,
+        extra_planners: Vec<FedSpacePlanner>,
+    ) -> Self {
+        let g = spec.n_gateways();
+        assert!(g >= 1, "federation needs at least one gateway");
+        let routing = if g > 1 {
+            let r = routing.expect("multi-gateway federation needs an UploadRouting");
+            assert_eq!(
+                r.n_steps(),
+                self.source.n_steps(),
+                "routing/schedule horizon mismatch"
+            );
+            // a table built for a wider federation would emit gateway
+            // indexes past the spec's Federation (OOB mid-run); for a
+            // validated spec the table's map-max+1 equals the gateway count
+            assert!(
+                r.n_gateways() <= g,
+                "routing table addresses {} gateways but the spec has {g}",
+                r.n_gateways()
+            );
+            Some(r)
+        } else {
+            None
+        };
+        if self.cfg.algorithm == AlgorithmKind::FedSpace {
+            assert_eq!(
+                self.planners.len() + extra_planners.len(),
+                g,
+                "FedSpace needs exactly one planner per gateway"
+            );
+            // the streamed walk materializes ONE planning window sized by
+            // gateway 0's I0 and every gateway slices it — heterogeneous
+            // window lengths would index past the materialized steps, so
+            // reject them here instead of panicking inside the walk
+            if let Some(first) = self.planners.first() {
+                for p in &extra_planners {
+                    assert_eq!(
+                        p.params.i0, first.params.i0,
+                        "per-gateway planners must share one I0 window length"
+                    );
+                }
+            }
+        } else {
+            assert!(extra_planners.is_empty(), "planners without FedSpace");
+        }
+        self.planners.extend(extra_planners);
+        self.federation = Some((spec, routing));
         self
     }
 
@@ -417,8 +557,9 @@ impl<'a> Engine<'a> {
             trainer,
             aggregator,
             cfg,
-            planner,
+            planners: planner.into_iter().collect(),
             isl: None,
+            federation: None,
         }
     }
 
@@ -447,13 +588,34 @@ impl<'a> Engine<'a> {
         let sat_rngs: Vec<Rng> = (0..k).map(|i| rng.split(i as u64 + 1)).collect();
         let clients: Vec<SatClient> =
             (0..k).map(|i| SatClient::new(i, self.trainer.sat_samples(i))).collect();
-        let gs = GsState::new(self.trainer.init(&mut rng), cfg.alpha);
-        let policy = self.make_policy();
+        // the implicit single central gateway unless a spec was attached
+        let default_spec;
+        let (spec, routing) = match self.federation {
+            Some((s, r)) => (s, r),
+            None => {
+                default_spec = FederationSpec::single();
+                (&default_spec, None)
+            }
+        };
+        if cfg.algorithm == AlgorithmKind::FedSpace {
+            assert_eq!(
+                self.planners.len(),
+                spec.n_gateways(),
+                "FedSpace needs one planner per gateway"
+            );
+        }
+        let fed = Federation::new(spec, self.trainer.init(&mut rng), cfg.alpha);
+        let reconcile_every = match spec.reconcile {
+            ReconcilePolicy::Periodic { every } => Some(every),
+            _ => None,
+        };
+        let policies: Vec<PolicyImpl> =
+            (0..spec.n_gateways()).map(|_| self.make_policy()).collect();
         let mut st = RunState {
             clients,
             sat_rngs,
-            gs,
-            policy,
+            fed,
+            policies,
             trace: RunTrace::default(),
             last_loss: 0.0,
             days_to_target: None,
@@ -461,7 +623,7 @@ impl<'a> Engine<'a> {
 
         // initial evaluation seeds the curve and the training status T
         let t0 = Instant::now();
-        let (loss0, acc0) = self.trainer.evaluate(&st.gs.w)?;
+        let (loss0, acc0) = self.trainer.evaluate(&st.fed.global_model())?;
         st.trace.t_eval_s += t0.elapsed().as_secs_f64();
         st.last_loss = loss0;
         st.trace.curve.push(CurvePoint {
@@ -505,7 +667,8 @@ impl<'a> Engine<'a> {
                         &mut st,
                         self.trainer,
                         self.aggregator,
-                        &mut self.planner,
+                        &mut self.planners,
+                        routing,
                         &cfg,
                         Some(plan_view),
                         conn,
@@ -519,7 +682,14 @@ impl<'a> Engine<'a> {
                     }
                     i = match &active {
                         None => i + 1,
-                        Some(act) => next_event(i + 1, act, &st.policy, n_steps, cfg.eval_every),
+                        Some(act) => next_event(
+                            i + 1,
+                            act,
+                            &st.policies,
+                            n_steps,
+                            cfg.eval_every,
+                            reconcile_every,
+                        ),
                     };
                 }
             }
@@ -534,7 +704,7 @@ impl<'a> Engine<'a> {
                     // never index past the materialized window); the window
                     // carries the routed sets when the stream has ISLs
                     let window = if st.needs_replan(i) {
-                        let i0 = self.planner.as_ref().map_or(cfg.i0, |p| p.params.i0).max(1);
+                        let i0 = self.planners.first().map_or(cfg.i0, |p| p.params.i0).max(1);
                         Some(cursor.window(i, i0))
                     } else {
                         None
@@ -545,7 +715,8 @@ impl<'a> Engine<'a> {
                         &mut st,
                         self.trainer,
                         self.aggregator,
-                        &mut self.planner,
+                        &mut self.planners,
+                        routing,
                         &cfg,
                         plan_view,
                         conn,
@@ -566,9 +737,10 @@ impl<'a> Engine<'a> {
                     let mut ni = next_event(
                         i + 1,
                         cursor.chunk().events(),
-                        &st.policy,
+                        &st.policies,
                         n_steps,
                         cfg.eval_every,
+                        reconcile_every,
                     );
                     let chunk_end = cursor.chunk().end();
                     if chunk_end < n_steps {
@@ -579,18 +751,22 @@ impl<'a> Engine<'a> {
             }
         }
 
-        // trace.global_updates is incremented exactly where gs.update() runs,
-        // so it already equals gs.i_g — asserted here and tested below rather
-        // than overwritten (it used to be clobbered with gs.i_g at the end,
-        // leaving two competing sources of truth).
-        debug_assert_eq!(st.trace.global_updates, st.gs.i_g);
+        // trace.global_updates is incremented exactly where fed.update()
+        // runs, so it already equals the global round — asserted here and
+        // tested below rather than overwritten (it used to be clobbered
+        // with gs.i_g at the end, leaving two competing sources of truth).
+        debug_assert_eq!(st.trace.global_updates, st.fed.round());
+        st.trace.gateway_aggs = st.fed.gateways.iter().map(|g| g.aggregations).collect();
+        st.trace.gateway_uploads = st.fed.gateways.iter().map(|g| g.uploads).collect();
+        st.trace.reconciles = st.fed.reconciles;
+        let final_round = st.fed.round();
         Ok(RunResult {
             days_to_target: st
                 .days_to_target
                 .or_else(|| st.trace.curve.days_to_accuracy(cfg.stop_at_accuracy.unwrap_or(2.0))),
             trace: st.trace,
-            final_round: st.gs.i_g,
-            final_w: st.gs.w,
+            final_round,
+            final_w: st.fed.into_global_model(),
         })
     }
 }
@@ -1147,20 +1323,161 @@ mod tests {
     fn next_event_enumerates_event_superset() {
         // contacts at 3 and 10, eval_every=4 (evals at 3, 7, 11, ...), 16 steps
         let active = vec![3usize, 10];
-        let policy = PolicyImpl::Async(AsyncPolicy);
+        let policy = [PolicyImpl::Async(AsyncPolicy)];
         let mut events = Vec::new();
         let mut i = 0usize;
         while i < 16 {
             events.push(i);
-            i = next_event(i + 1, &active, &policy, 16, 4);
+            i = next_event(i + 1, &active, &policy, 16, 4, None);
         }
         // step 0 (loop entry), evals at 3/7/11/15, contacts at 3/10, last=15
         assert_eq!(events, vec![0, 3, 7, 10, 11, 15]);
         // degenerate sync (no clients) must not skip anything
-        let sync0 = PolicyImpl::Sync(SyncPolicy { n_sats: 0 });
-        assert_eq!(next_event(5, &active, &sync0, 16, 4), 5);
+        let sync0 = [PolicyImpl::Sync(SyncPolicy { n_sats: 0 })];
+        assert_eq!(next_event(5, &active, &sync0, 16, 4, None), 5);
         // past the end
-        assert_eq!(next_event(16, &active, &policy, 16, 4), 16);
+        assert_eq!(next_event(16, &active, &policy, 16, 4, None), 16);
+        // periodic reconcile boundaries are events: every=6 fires at steps
+        // 5 and 11 (end of slots 6 and 12)
+        assert_eq!(next_event(4, &active, &policy, 16, 100, Some(6)), 5);
+        assert_eq!(next_event(6, &active, &policy, 16, 100, Some(6)), 10);
+        assert_eq!(next_event(11, &active, &policy, 16, 100, Some(6)), 11);
+        // a degenerate policy in ANY gateway slot disables skipping
+        let mixed = [PolicyImpl::Async(AsyncPolicy), PolicyImpl::FedBuff(FedBuffPolicy { m: 0 })];
+        assert_eq!(next_event(5, &active, &mixed, 16, 4, None), 5);
+    }
+
+    /// Run one algorithm under an explicit federation spec over the
+    /// 12-satellite fleet and the full 12-station network (6/6 split for
+    /// two gateways), dense mode.
+    fn run_fed(spec: &FederationSpec, algorithm: AlgorithmKind, steps: usize) -> RunResult {
+        let c = planet_labs_like(12, 0);
+        let stations = planet_ground_stations();
+        let params: crate::connectivity::ConnectivityParams = Default::default();
+        let sched = ConnectivitySchedule::compute(&c, &stations, steps, params.clone());
+        spec.validate(stations.len()).unwrap();
+        let routing = (!spec.is_single()).then(|| {
+            crate::fl::UploadRouting::build(&c, &stations, steps, &params, &spec.stations)
+        });
+        let trainer = MockTrainer::new(16, 12, 0.3, 0);
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig {
+            algorithm,
+            fedbuff_m: 4,
+            eval_every: 4,
+            ..Default::default()
+        };
+        let extra: Vec<FedSpacePlanner> = if algorithm == AlgorithmKind::FedSpace {
+            (1..spec.n_gateways())
+                .map(|g| {
+                    FedSpacePlanner::new(
+                        UtilityModel::new("forest").unwrap(),
+                        SearchParams { i0: 24, n_min: 2, n_max: 8, n_search: 100 },
+                        g as u64,
+                    )
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm))
+            .with_federation(spec, routing.as_ref(), extra);
+        e.run().unwrap()
+    }
+
+    fn half_half_spec(reconcile: crate::fl::ReconcilePolicy) -> FederationSpec {
+        FederationSpec::split(&["west", "east"], &[0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1], reconcile)
+    }
+
+    #[test]
+    fn single_gateway_federation_identical_to_implicit_engine() {
+        // an explicit 1-gateway spec must reproduce the plain engine path
+        // bit for bit — the federation refactor's core safety net
+        for alg in [AlgorithmKind::Async, AlgorithmKind::FedBuff, AlgorithmKind::FedSpace] {
+            let plain = run_mock(alg, 4, 96);
+            let fed = run_fed(&FederationSpec::single(), alg, 96);
+            assert_same_run(&plain, &fed, &format!("{alg:?} single-gateway spec"));
+            assert_eq!(fed.trace.gateway_aggs, vec![fed.final_round]);
+            assert_eq!(fed.trace.gateway_uploads, vec![fed.trace.uploads]);
+            assert_eq!(fed.trace.reconciles, 0);
+        }
+    }
+
+    #[test]
+    fn single_gateway_periodic_reconcile_identical_to_centralized() {
+        // the ISSUE's property: Periodic { every } with ONE gateway must be
+        // trace-identical to Centralized for any cadence and algorithm —
+        // merging one full-weight model is an exact copy. Only the merge
+        // counter may differ (Periodic counts its no-op-on-bits merges).
+        crate::testing::property(6, |rng| {
+            let every = rng.gen_range(1, 40);
+            let alg = match rng.gen_range(0, 3) {
+                0 => AlgorithmKind::Async,
+                1 => AlgorithmKind::FedBuff,
+                _ => AlgorithmKind::FedSpace,
+            };
+            let central = run_fed(&FederationSpec::single(), alg, 96);
+            let spec = FederationSpec::single()
+                .with_reconcile(crate::fl::ReconcilePolicy::Periodic { every });
+            let mut periodic = run_fed(&spec, alg, 96);
+            periodic.trace.reconciles = central.trace.reconciles;
+            assert_same_run(&central, &periodic, &format!("{alg:?} every={every}"));
+        });
+    }
+
+    #[test]
+    fn on_aggregate_reconcile_identical_to_centralized_on_two_gateways() {
+        // eager reconciliation pushes every aggregation through the merge
+        // machinery; arithmetically that IS centralized aggregation, so the
+        // traces must agree bit for bit (modulo the merge counter) — the
+        // strongest gate on the merge path
+        let spec = half_half_spec(crate::fl::ReconcilePolicy::Centralized);
+        let central = run_fed(&spec, AlgorithmKind::FedBuff, 96);
+        let spec = half_half_spec(crate::fl::ReconcilePolicy::OnAggregate);
+        let mut eager = run_fed(&spec, AlgorithmKind::FedBuff, 96);
+        assert!(eager.trace.reconciles > 0, "eager reconcile never merged");
+        eager.trace.reconciles = central.trace.reconciles;
+        assert_same_run(&central, &eager, "on-aggregate vs centralized");
+    }
+
+    #[test]
+    fn two_gateways_report_per_gateway_counters() {
+        let spec = half_half_spec(crate::fl::ReconcilePolicy::Centralized);
+        let r = run_fed(&spec, AlgorithmKind::Async, 96);
+        assert_eq!(r.trace.gateway_aggs.len(), 2);
+        assert_eq!(r.trace.gateway_uploads.len(), 2);
+        assert_eq!(r.trace.gateway_aggs.iter().sum::<usize>(), r.final_round);
+        assert_eq!(r.trace.gateway_uploads.iter().sum::<usize>(), r.trace.uploads);
+        // the planet12 network splits real traffic across both halves
+        assert!(
+            r.trace.gateway_uploads.iter().all(|&u| u > 0),
+            "both gateways should hear satellites: {:?}",
+            r.trace.gateway_uploads
+        );
+    }
+
+    #[test]
+    fn periodic_reconcile_changes_the_trace_deterministically() {
+        let spec = half_half_spec(crate::fl::ReconcilePolicy::Periodic { every: 12 });
+        let a = run_fed(&spec, AlgorithmKind::FedBuff, 192);
+        let b = run_fed(&spec, AlgorithmKind::FedBuff, 192);
+        assert_same_run(&a, &b, "periodic replay");
+        assert!(a.trace.reconciles > 0, "cadence never fired");
+        // diverged gateway replicas must leave a visible mark vs centralized
+        let cspec = half_half_spec(crate::fl::ReconcilePolicy::Centralized);
+        let central = run_fed(&cspec, AlgorithmKind::FedBuff, 192);
+        let diverged = a
+            .final_w
+            .iter()
+            .zip(central.final_w.iter())
+            .any(|(x, y)| x.to_bits() != y.to_bits())
+            || a.trace
+                .curve
+                .points
+                .iter()
+                .zip(central.trace.curve.points.iter())
+                .any(|(p, q)| p.accuracy.to_bits() != q.accuracy.to_bits());
+        assert!(diverged, "periodic reconcile left no trace difference");
     }
 
     #[test]

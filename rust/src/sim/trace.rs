@@ -18,6 +18,15 @@ pub struct RunTrace {
     pub relayed: usize,
     /// number of global updates (i_g at the end)
     pub global_updates: usize,
+    /// aggregations per gateway, in gateway-index order (ADR-0006); length
+    /// 1 for single-gateway runs, and the entries sum to `global_updates`
+    pub gateway_aggs: Vec<usize>,
+    /// uploads received per gateway, in gateway-index order (sums to
+    /// `uploads`)
+    pub gateway_uploads: Vec<usize>,
+    /// cross-gateway reconcile merges performed (0 under `Centralized`
+    /// and for every single-gateway run that never diverges)
+    pub reconciles: usize,
     /// accuracy/loss curve (Figure 6)
     pub curve: TrainingCurve,
     /// wall-clock seconds spent in local training / aggregation / eval

@@ -68,6 +68,12 @@ pub fn assert_same_run(a: &crate::sim::RunResult, b: &crate::sim::RunResult, ctx
     assert_eq!(a.trace.relayed, b.trace.relayed, "{ctx}: relayed uploads");
     assert_eq!(a.trace.idle, b.trace.idle, "{ctx}: idle");
     assert_eq!(a.trace.global_updates, b.trace.global_updates, "{ctx}: global_updates");
+    assert_eq!(a.trace.gateway_aggs, b.trace.gateway_aggs, "{ctx}: per-gateway aggregations");
+    assert_eq!(
+        a.trace.gateway_uploads, b.trace.gateway_uploads,
+        "{ctx}: per-gateway uploads"
+    );
+    assert_eq!(a.trace.reconciles, b.trace.reconciles, "{ctx}: reconcile merges");
     assert_eq!(
         a.trace.staleness.entries().collect::<Vec<_>>(),
         b.trace.staleness.entries().collect::<Vec<_>>(),

@@ -5,9 +5,11 @@
 //! gate for the streamed-connectivity rewrite (ADR-0004).
 
 use fedspace::app::{
-    run_mock_on_schedule, run_mock_on_schedule_routed, run_mock_on_stream, run_scenario,
+    run_mock_on_schedule, run_mock_on_schedule_fed, run_mock_on_schedule_routed,
+    run_mock_on_stream, run_mock_on_stream_fed, run_scenario, FederationRun,
 };
 use fedspace::cfg::{AlgorithmKind, EngineMode, IslMode, Scenario};
+use fedspace::fl::ReconcilePolicy;
 use fedspace::testing::assert_same_run;
 
 #[test]
@@ -118,6 +120,77 @@ fn all_three_engine_modes_identical_with_isls_enabled() {
         assert_same_run(&dense.result, &sparse.result, &format!("{} isl contacts", alg.name()));
         assert_same_run(&dense.result, &streamed.result, &format!("{} isl streamed", alg.name()));
     }
+}
+
+/// Federation acceptance gate (ADR-0006): on `fedspace-multi-gs` (scaled
+/// for CI, full grid incl. FedSpace with per-gateway planners) the dense,
+/// contact-list and streamed engines produce bit-identical traces — the
+/// shared routing table, the per-gateway buffers/policies, and the
+/// periodic reconcile boundaries must agree exactly across all three
+/// time-axis walks.
+#[test]
+fn all_three_engine_modes_identical_on_multi_gateway_federation() {
+    let sc = Scenario::builtin("fedspace-multi-gs").unwrap().scaled(Some(24), Some(96));
+    assert_eq!(sc.algorithms.len(), 4, "fedspace-multi-gs must sweep the full grid");
+    assert_eq!(sc.federation.n_gateways(), 2);
+    let (constellation, sched) = sc.build_schedule();
+    let (_, stream) = sc.build_stream();
+    let routing = sc.build_upload_routing(&constellation).expect("multi-gateway");
+    let fed = FederationRun::of(&sc.federation, Some(&routing));
+    for &alg in &sc.algorithms {
+        let mut cfg = sc.experiment_config(alg);
+        cfg.engine_mode = EngineMode::Dense;
+        let dense = run_mock_on_schedule_fed(&cfg, &sched, None, fed, None).unwrap();
+        cfg.engine_mode = EngineMode::ContactList;
+        let sparse = run_mock_on_schedule_fed(&cfg, &sched, None, fed, None).unwrap();
+        cfg.engine_mode = EngineMode::Streamed;
+        let streamed = run_mock_on_stream_fed(&cfg, &stream, fed, None).unwrap();
+        let name = alg.name();
+        assert_same_run(&dense.result, &sparse.result, &format!("{name} multi-gs contacts"));
+        assert_same_run(&dense.result, &streamed.result, &format!("{name} multi-gs streamed"));
+        assert_eq!(dense.result.trace.gateway_aggs.len(), 2, "{}", alg.name());
+    }
+}
+
+/// The ≥2-gateway acceptance criterion: per-gateway aggregation counts are
+/// reported, both gateway networks carry traffic, and `Periodic` reconcile
+/// changes the trace deterministically under a fixed seed.
+#[test]
+fn multi_gateway_periodic_reconcile_reports_and_diverges_deterministically() {
+    let mut sc = Scenario::builtin("fedspace-multi-gs").unwrap().scaled(Some(24), Some(192));
+    sc.algorithms = vec![AlgorithmKind::FedBuff];
+    assert!(matches!(sc.federation.reconcile, ReconcilePolicy::Periodic { .. }));
+    let periodic_a = &run_scenario(&sc, None).unwrap()[0].result;
+    let periodic_b = &run_scenario(&sc, None).unwrap()[0].result;
+    assert_same_run(periodic_a, periodic_b, "periodic multi-gs replay");
+    assert!(periodic_a.trace.reconciles > 0, "the cadence never fired");
+    let aggs = &periodic_a.trace.gateway_aggs;
+    assert_eq!(aggs.len(), 2);
+    assert_eq!(aggs.iter().sum::<usize>(), periodic_a.final_round);
+    assert!(
+        periodic_a.trace.gateway_uploads.iter().all(|&u| u > 0),
+        "polar orbits must feed both gateways: {:?}",
+        periodic_a.trace.gateway_uploads
+    );
+    // the same scenario with centralized reconcile produces a different
+    // trace: diverged gateway replicas are visible in the learning curve
+    let mut central = sc.clone();
+    central.federation = central.federation.with_reconcile(ReconcilePolicy::Centralized);
+    let central = &run_scenario(&central, None).unwrap()[0].result;
+    assert_eq!(central.trace.reconciles, 0);
+    let diverged = periodic_a
+        .final_w
+        .iter()
+        .zip(central.final_w.iter())
+        .any(|(x, y)| x.to_bits() != y.to_bits())
+        || periodic_a
+            .trace
+            .curve
+            .points
+            .iter()
+            .zip(central.trace.curve.points.iter())
+            .any(|(p, q)| p.accuracy.to_bits() != q.accuracy.to_bits());
+    assert!(diverged, "periodic reconcile left no mark on the trace");
 }
 
 /// Relays change the physics: the routed run reaches strictly more
