@@ -222,6 +222,47 @@ fn main() -> anyhow::Result<()> {
         bench_report::record("federation_reconcile", s.median_s);
     }
 
+    section("L3: robust aggregation (Byzantine-tolerant Eq. 4, ADR-0007)");
+    // one buffer flush at mega-constellation streamed scale: 48 gradients
+    // of 256k params — the dense mean is the reference the per-coordinate
+    // order statistics are measured against
+    {
+        use fedspace::fl::{CoordinateMedian, MultiKrum, TrimmedMean};
+        let rd = 262_144usize;
+        let rw = rand_vec(&mut rng, rd, 0.1);
+        let rentries: Vec<GradientEntry> = (0..48)
+            .map(|sat| GradientEntry {
+                sat,
+                staleness: sat % 5,
+                grad: rand_vec(&mut rng, rd, 0.01),
+                n_samples: 1,
+            })
+            .collect();
+        let mean = bench("mean 48 x 256k (reference)", 1, 5, || {
+            let mut wc = rw.clone();
+            CpuAggregator.aggregate(&mut wc, &rentries, 0.5).unwrap();
+        });
+        bench_report::record("robust_aggregate_mean", mean.median_s);
+        let med = bench("coordinate-median 48 x 256k", 1, 5, || {
+            let mut wc = rw.clone();
+            CoordinateMedian.aggregate(&mut wc, &rentries, 0.5).unwrap();
+        });
+        println!("    -> {:.2}x the mean's cost", med.median_s / mean.median_s);
+        bench_report::record("robust_aggregate_median", med.median_s);
+        let tm = bench("trimmed-mean (trim=0.1) 48 x 256k", 1, 5, || {
+            let mut wc = rw.clone();
+            TrimmedMean { trim: 0.1 }.aggregate(&mut wc, &rentries, 0.5).unwrap();
+        });
+        println!("    -> {:.2}x the mean's cost", tm.median_s / mean.median_s);
+        bench_report::record("robust_aggregate_trimmed", tm.median_s);
+        let mk = bench("multi-krum (f=5) 48 x 256k", 1, 5, || {
+            let mut wc = rw.clone();
+            MultiKrum { f: 5, m: 0 }.aggregate(&mut wc, &rentries, 0.5).unwrap();
+        });
+        println!("    -> {:.2}x the mean's cost", mk.median_s / mean.median_s);
+        bench_report::record("robust_aggregate_krum", mk.median_s);
+    }
+
     section("L3: utility regressor (random forest)");
     let x: Vec<Vec<f64>> = (0..400)
         .map(|_| (0..10).map(|_| rng.gen_f64(-1.0, 1.0)).collect())

@@ -386,7 +386,7 @@ pub fn scenarios(args: &Args) -> Result<()> {
         None | Some("list") => {
             let mut t = Table::new(&[
                 "name", "constellation", "sats", "stations", "steps", "engine", "isl",
-                "gateways", "algorithms",
+                "gateways", "attack", "agg", "algorithms",
             ]);
             for sc in Scenario::builtins() {
                 t.row(&[
@@ -403,6 +403,8 @@ pub fn scenarios(args: &Args) -> Result<()> {
                         let fed = &sc.federation;
                         format!("{} ({})", fed.n_gateways(), fed.reconcile.name())
                     },
+                    sc.attack.kind.name().to_string(),
+                    sc.robust.aggregator.name().to_string(),
                     sc.algorithms
                         .iter()
                         .map(|a| a.name().to_string())
@@ -434,7 +436,7 @@ pub fn scenarios(args: &Args) -> Result<()> {
             let stop_at = args.get("target").map(|t| t.parse::<f64>()).transpose()?;
             println!(
                 "scenario {}: {} ({} sats, {} stations, {} steps, {} engine, isl {}, \
-                 {} gateway(s))",
+                 {} gateway(s), attack {}, agg {})",
                 sc.name,
                 sc.summary,
                 sc.constellation.n_sats(),
@@ -442,12 +444,14 @@ pub fn scenarios(args: &Args) -> Result<()> {
                 sc.n_steps,
                 sc.engine_mode.name(),
                 sc.isl.mode.name(),
-                sc.federation.n_gateways()
+                sc.federation.n_gateways(),
+                sc.attack.kind.name(),
+                sc.robust.aggregator.name()
             );
             let outs = run_scenario(&sc, stop_at)?;
             let mut t = Table::new(&[
-                "algorithm", "rounds", "gw aggs", "uploads", "relayed", "idle%", "max stale",
-                "best acc", "days→target",
+                "algorithm", "rounds", "gw aggs", "uploads", "relayed", "inj/drop/corr",
+                "idle%", "max stale", "best acc", "days→target",
             ]);
             for out in &outs {
                 let r = &out.result;
@@ -462,6 +466,10 @@ pub fn scenarios(args: &Args) -> Result<()> {
                         .join("/"),
                     r.trace.uploads.to_string(),
                     r.trace.relayed.to_string(),
+                    format!(
+                        "{}/{}/{}",
+                        r.trace.injected, r.trace.dropped, r.trace.corrupted
+                    ),
                     format!("{:.1}", 100.0 * r.trace.idle_fraction()),
                     r.trace.staleness.max_key().unwrap_or(0).to_string(),
                     format!("{:.4}", r.trace.curve.best_accuracy()),

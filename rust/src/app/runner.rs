@@ -8,7 +8,7 @@ use crate::connectivity::{
 use crate::data::{
     partition::cell_visits, partition_iid, partition_noniid, Dataset, Partition, SynthConfig,
 };
-use crate::fl::{CpuAggregator, FederationSpec, UploadRouting};
+use crate::fl::{FederationSpec, UploadRouting};
 use crate::orbit::{planet_ground_stations, planet_labs_like, Constellation};
 use crate::rng::Rng;
 use crate::runtime::{ModelRuntime, PjrtAggregator};
@@ -184,6 +184,7 @@ fn engine_cfg(cfg: &ExperimentConfig, stop_at: Option<f64>) -> EngineConfig {
         seed: cfg.sim_seed,
         i0: cfg.i0,
         mode: cfg.engine_mode,
+        attack: cfg.attack.clone(),
     }
 }
 
@@ -333,8 +334,10 @@ pub fn run_mock_on_schedule_fed(
     let spec = fed.map_or(&cfg.federation, |f| f.spec);
     let (trainer, planners) = mock_parts(cfg, spec.n_gateways())?;
     let (first, extra) = split_planners(planners);
-    let mut agg = CpuAggregator;
-    let mut engine = Engine::new(sched, &trainer, &mut agg, engine_cfg(cfg, stop_at), first)
+    // [robust] picks the Eq.-4 aggregator family; the default is the plain
+    // CpuAggregator, bit for bit (ADR-0007)
+    let mut agg = cfg.robust.make();
+    let mut engine = Engine::new(sched, &trainer, &mut *agg, engine_cfg(cfg, stop_at), first)
         .with_contact_graph(graph)
         .with_federation(spec, fed.map(|f| f.routing), extra);
     Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
@@ -379,9 +382,9 @@ pub fn run_mock_on_stream_fed(
     let spec = fed.map_or(&cfg.federation, |f| f.spec);
     let (trainer, planners) = mock_parts(cfg, spec.n_gateways())?;
     let (first, extra) = split_planners(planners);
-    let mut agg = CpuAggregator;
+    let mut agg = cfg.robust.make();
     let mut engine =
-        Engine::new_streamed(stream, &trainer, &mut agg, engine_cfg(cfg, stop_at), first)
+        Engine::new_streamed(stream, &trainer, &mut *agg, engine_cfg(cfg, stop_at), first)
             .with_federation(spec, fed.map(|f| f.routing), extra);
     Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
 }
@@ -470,6 +473,12 @@ pub fn run_pjrt_experiment(
     eval_samples: usize,
     stop_at: Option<f64>,
 ) -> Result<ExperimentOutput> {
+    ensure!(
+        cfg.robust.is_default(),
+        "[robust] aggregators run on the CPU Eq.-4 path only — the PJRT path \
+         aggregates through the Pallas artifact (use the mock backend for \
+         robust-aggregation studies)"
+    );
     let rt = ModelRuntime::load(&cfg.artifacts_dir, &cfg.model_size)?;
     let dataset = Dataset::generate(SynthConfig {
         n_train: cfg.n_train,
@@ -672,6 +681,38 @@ mod tests {
             &streamed.result,
             "isl config streamed vs dense",
         );
+    }
+
+    #[test]
+    fn config_path_carries_attack_and_robust() {
+        use crate::fl::RobustKind;
+        use crate::sim::{AttackKind, AttackSpec};
+        let mut cfg = tiny_cfg(AlgorithmKind::FedBuff);
+        cfg.attack = AttackSpec {
+            kind: AttackKind::ScaledGrad,
+            fraction: 0.25,
+            scale: -20.0,
+            ..Default::default()
+        };
+        cfg.robust.aggregator = RobustKind::TrimmedMean;
+        cfg.robust.trim = 0.2;
+        cfg.validate().unwrap();
+        let dense = run_mock_experiment(&cfg, None).unwrap();
+        assert!(dense.result.trace.injected > 0, "adversaries never uploaded");
+        // the attacked, robustly-aggregated run keeps the tri-mode identity
+        cfg.engine_mode = EngineMode::Streamed;
+        let streamed = run_mock_experiment(&cfg, None).unwrap();
+        crate::testing::assert_same_run(
+            &dense.result,
+            &streamed.result,
+            "attacked config streamed vs dense",
+        );
+        // attack-free configs build no injector: counters stay zero
+        let clean = run_mock_experiment(&tiny_cfg(AlgorithmKind::FedBuff), None).unwrap();
+        let t = &clean.result.trace;
+        assert_eq!((t.injected, t.dropped, t.corrupted), (0, 0, 0));
+        // the PJRT path refuses robust aggregators (Pallas artifact only)
+        assert!(run_pjrt_experiment(&cfg, 16, None).is_err());
     }
 
     #[test]

@@ -4,7 +4,8 @@
 
 use super::scenario::IslSpec;
 use super::toml::{parse_toml, TomlDoc, TomlValue};
-use crate::fl::FederationSpec;
+use crate::fl::{FederationSpec, RobustSpec};
+use crate::sim::AttackSpec;
 use anyhow::{bail, Context, Result};
 
 /// Which aggregation-indicator algorithm the GS runs (§2.4, Eq. 5–7, §3).
@@ -187,6 +188,13 @@ pub struct ExperimentConfig {
     /// The station map indexes the runner's planet12 network; the default
     /// single central gateway reproduces the pre-federation engine.
     pub federation: FederationSpec,
+    /// Adversary / link-fault injection (ADR-0007) — the `[attack]` TOML
+    /// section. Disabled by default: the engine builds no injector and the
+    /// run stays bit-identical to the pre-robustness engine.
+    pub attack: AttackSpec,
+    /// Server-side robust aggregation (ADR-0007) — the `[robust]` TOML
+    /// section. The default mean is the plain Eq.-4 aggregator.
+    pub robust: RobustSpec,
 }
 
 impl Default for ExperimentConfig {
@@ -222,6 +230,8 @@ impl Default for ExperimentConfig {
             engine_mode: EngineMode::Dense,
             isl: IslSpec::default(),
             federation: FederationSpec::single(),
+            attack: AttackSpec::default(),
+            robust: RobustSpec::default(),
         }
     }
 }
@@ -320,6 +330,12 @@ impl ExperimentConfig {
         if let Some(federation) = FederationSpec::from_doc(doc)? {
             c.federation = federation;
         }
+        if let Some(attack) = AttackSpec::from_doc(doc)? {
+            c.attack = attack;
+        }
+        if let Some(robust) = RobustSpec::from_doc(doc)? {
+            c.robust = robust;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -352,6 +368,8 @@ impl ExperimentConfig {
         // station network is known (the runner against planet12; scenarios
         // validate against their own network)
         self.federation.validate_structure()?;
+        self.attack.validate(self.n_sats)?;
+        self.robust.validate()?;
         Ok(())
     }
 
@@ -451,6 +469,30 @@ mod tests {
         assert!(ExperimentConfig::from_toml_text(
             "[federation]\ngateways = [\"a\", \"b\"]\nstations = [0, 1]\n\
              reconcile = \"periodic\"\nevery = 0"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn attack_and_robust_sections_reach_the_config_path() {
+        let c = ExperimentConfig::from_toml_text(
+            "[attack]\nkind = \"scaled-grad\"\nfraction = 0.2\nscale = -5.0\n\
+             drop_prob = 0.05\n\n[robust]\naggregator = \"trimmed-mean\"\ntrim = 0.25",
+        )
+        .unwrap();
+        assert!(c.attack.enabled());
+        assert!((c.attack.fraction - 0.2).abs() < 1e-12);
+        assert!(!c.robust.is_default());
+        assert!(!ExperimentConfig::default().attack.enabled());
+        assert!(ExperimentConfig::default().robust.is_default());
+        // bounds enforced on the config path too
+        assert!(ExperimentConfig::from_toml_text("[attack]\nkind = \"label-flip\"\nfraction = 1.5")
+            .is_err());
+        assert!(ExperimentConfig::from_toml_text("[robust]\naggregator = \"median\"\ntrim = 0.5")
+            .is_err());
+        // an attack that selects no adversaries is rejected against n_sats
+        assert!(ExperimentConfig::from_toml_text(
+            "[constellation]\nn_sats = 4\n[attack]\nkind = \"label-flip\"\nfraction = 0.05"
         )
         .is_err());
     }

@@ -20,11 +20,12 @@ use crate::connectivity::{
     ConnectivityParams, ConnectivitySchedule, ConnectivityStream, ContactGraph, IslParams,
     IslTopology,
 };
-use crate::fl::{FederationSpec, ReconcilePolicy, UploadRouting};
+use crate::fl::{FederationSpec, ReconcilePolicy, RobustKind, RobustSpec, UploadRouting};
 use crate::orbit::{
     planet_ground_stations, planet_labs_like, Constellation, DowntimeWindow, GroundStation,
     PlaneId, WalkerPattern, WalkerSpec,
 };
+use crate::sim::{AttackKind, AttackSpec};
 use anyhow::{bail, Context, Result};
 
 /// One Walker-delta shell of a multi-shell constellation (mega-fleet
@@ -370,6 +371,14 @@ pub struct Scenario {
     /// cross-gateway reconcile policy. The default single central gateway
     /// reproduces the pre-federation engine bit for bit.
     pub federation: FederationSpec,
+    /// Adversary / link-fault injection (ADR-0007). The default disabled
+    /// spec builds no injector and consumes no adversary randomness, so
+    /// attack-free runs stay bit-identical to the pre-robustness engine.
+    pub attack: AttackSpec,
+    /// Server-side robust aggregation (ADR-0007). The default
+    /// [`RobustKind::Mean`] is the plain Eq.-4 [`crate::fl::CpuAggregator`],
+    /// bit for bit.
+    pub robust: RobustSpec,
 }
 
 impl Default for Scenario {
@@ -390,6 +399,8 @@ impl Default for Scenario {
             downtime: Vec::new(),
             isl: IslSpec::default(),
             federation: FederationSpec::single(),
+            attack: AttackSpec::default(),
+            robust: RobustSpec::default(),
         }
     }
 }
@@ -454,6 +465,8 @@ impl Scenario {
         }
         self.isl.validate(self.n_steps)?;
         self.federation.validate(self.stations.build().len())?;
+        self.attack.validate(self.constellation.n_sats())?;
+        self.robust.validate()?;
         Ok(())
     }
 
@@ -470,6 +483,8 @@ impl Scenario {
             "isl-iridium-66",
             "isl-starlink-1584",
             "fedspace-multi-gs",
+            "byz-iridium-66",
+            "byz-multi-gs",
         ]
     }
 
@@ -682,6 +697,84 @@ impl Scenario {
                 ),
                 ..Default::default()
             },
+            "byz-iridium-66" => Scenario {
+                name: "byz-iridium-66".into(),
+                summary: "the Iridium polar shell with 10% scaled-gradient Byzantine \
+                          satellites, defended by trimmed-mean aggregation — full \
+                          four-algorithm grid (ADR-0007)"
+                    .into(),
+                constellation: ConstellationSpec::Walker {
+                    pattern: WalkerPattern::Star,
+                    n_sats: 66,
+                    planes: 6,
+                    phasing: 2,
+                    alt_km: 780.0,
+                    inc_deg: 86.4,
+                },
+                stations: StationNetwork::Polar4,
+                algorithms: vec![
+                    AlgorithmKind::Sync,
+                    AlgorithmKind::Async,
+                    AlgorithmKind::FedBuff,
+                    AlgorithmKind::FedSpace,
+                ],
+                fedbuff_m: 16,
+                attack: AttackSpec {
+                    kind: AttackKind::ScaledGrad,
+                    fraction: 0.1,
+                    scale: -20.0,
+                    ..Default::default()
+                },
+                robust: RobustSpec {
+                    aggregator: RobustKind::TrimmedMean,
+                    trim: 0.15,
+                    ..Default::default()
+                },
+                ..Default::default()
+            },
+            "byz-multi-gs" => Scenario {
+                name: "byz-multi-gs".into(),
+                summary: "fedspace-multi-gs under attack: one full orbital plane turns \
+                          Byzantine under the arctic gateway, links drop and corrupt \
+                          uploads, and every gateway aggregates with a coordinate-wise \
+                          median (ADR-0007)"
+                    .into(),
+                constellation: ConstellationSpec::Walker {
+                    pattern: WalkerPattern::Star,
+                    n_sats: 66,
+                    planes: 6,
+                    phasing: 2,
+                    alt_km: 780.0,
+                    inc_deg: 86.4,
+                },
+                stations: StationNetwork::Polar4,
+                algorithms: vec![
+                    AlgorithmKind::Sync,
+                    AlgorithmKind::Async,
+                    AlgorithmKind::FedBuff,
+                    AlgorithmKind::FedSpace,
+                ],
+                fedbuff_m: 16,
+                federation: FederationSpec::split(
+                    &["arctic", "antarctic"],
+                    // polar4 build order: svalbard, inuvik, fairbanks, troll
+                    &[0, 0, 0, 1],
+                    ReconcilePolicy::Periodic { every: 24 },
+                ),
+                attack: AttackSpec {
+                    kind: AttackKind::ScaledGrad,
+                    // walker ids are assigned plane by plane: 0..11 is the
+                    // whole first plane — adversaries concentrated in one
+                    // orbital neighborhood rather than spread fleet-wide
+                    sats: (0..11).collect(),
+                    scale: -20.0,
+                    drop_prob: 0.02,
+                    corrupt_prob: 0.01,
+                    ..Default::default()
+                },
+                robust: RobustSpec { aggregator: RobustKind::Median, ..Default::default() },
+                ..Default::default()
+            },
             "dove-dropout" => Scenario {
                 name: "dove-dropout".into(),
                 summary: "paper fleet with mid-run failures: 4 satellites go dark on day 2, \
@@ -766,6 +859,12 @@ impl Scenario {
         }
         if !self.federation.is_default() {
             self.federation.emit_toml(&mut s);
+        }
+        if self.attack.enabled() {
+            self.attack.emit_toml(&mut s);
+        }
+        if !self.robust.is_default() {
+            self.robust.emit_toml(&mut s);
         }
         if !self.downtime.is_empty() {
             let col = |f: fn(&DowntimeWindow) -> usize| -> String {
@@ -950,6 +1049,12 @@ impl Scenario {
         if let Some(federation) = FederationSpec::from_doc(doc)? {
             sc.federation = federation;
         }
+        if let Some(attack) = AttackSpec::from_doc(doc)? {
+            sc.attack = attack;
+        }
+        if let Some(robust) = RobustSpec::from_doc(doc)? {
+            sc.robust = robust;
+        }
 
         if doc.get("downtime").is_some() {
             let col = |key: &str| -> Result<Vec<usize>> {
@@ -1108,7 +1213,9 @@ impl Scenario {
         // copied: those specs are bound to the scenario's constellation and
         // station network, and the config path always rebuilds planet12 —
         // the conversion stays standalone-runnable, and scenario runs pass
-        // their graph/routing/spec explicitly (`app::runner::FederationRun`)
+        // their graph/routing/spec explicitly (`app::runner::FederationRun`).
+        // Attack and robust specs ARE copied: they are plain value specs
+        // over satellite ids / the server aggregator, not topology.
         ExperimentConfig {
             n_sats: self.constellation.n_sats(),
             constellation_seed: seed,
@@ -1119,6 +1226,8 @@ impl Scenario {
             algorithm,
             fedbuff_m: self.fedbuff_m,
             engine_mode: self.engine_mode,
+            attack: self.attack.clone(),
+            robust: self.robust.clone(),
             ..Default::default()
         }
     }
@@ -1191,6 +1300,16 @@ impl Scenario {
         // drop downtime windows that fell outside the scaled run
         let k = sc.constellation.n_sats();
         sc.downtime.retain(|w| w.sat < k && w.from_step < sc.n_steps);
+        // explicit adversary ids beyond the scaled fleet no longer exist;
+        // fraction-based adversary selection rescales automatically
+        sc.attack.sats.retain(|&s| s < k);
+        if sc.attack.kind != AttackKind::None && sc.attack.adversaries(k).iter().all(|a| !a) {
+            // keep the adversarial character at tiny smoke scales, where
+            // the strided fraction rounds to zero adversaries (or the
+            // whole explicit list fell outside the fleet) — validate()
+            // rejects an attack that selects nobody
+            sc.attack.sats = vec![0];
+        }
         let n_steps = sc.n_steps;
         for w in &mut sc.downtime {
             // retain guarantees from_step < n_steps, so the clamp range is valid
@@ -1627,6 +1746,105 @@ mod tests {
         let (_, sched) = sc.build_schedule();
         let active = sched.active_steps().len();
         assert!(active < 96, "single-station schedule should have contact-free steps");
+    }
+
+    #[test]
+    fn attack_robust_toml_roundtrip_present_and_omitted() {
+        // a byz builtin emits both sections and round-trips exactly
+        let sc = Scenario::builtin("byz-multi-gs").unwrap();
+        let toml = sc.to_toml();
+        assert!(toml.contains("[attack]"), "{toml}");
+        assert!(toml.contains("[robust]"), "{toml}");
+        assert!(toml.contains("kind = \"scaled-grad\""), "{toml}");
+        assert!(toml.contains("aggregator = \"median\""), "{toml}");
+        let back = Scenario::from_toml_text(&toml).unwrap();
+        assert_eq!(back.attack, sc.attack);
+        assert_eq!(back.robust, sc.robust);
+        assert_eq!(back, sc);
+        // attack-free specs emit neither section — pre-robustness scenario
+        // files stay byte-identical and parse back to the defaults
+        let off = Scenario::builtin("paper-fig7").unwrap();
+        let toml = off.to_toml();
+        assert!(!toml.contains("[attack]"), "{toml}");
+        assert!(!toml.contains("[robust]"), "{toml}");
+        let back = Scenario::from_toml_text(&toml).unwrap();
+        assert!(!back.attack.enabled());
+        assert!(back.robust.is_default());
+    }
+
+    #[test]
+    fn byz_builtins_shape() {
+        let ir = Scenario::builtin("byz-iridium-66").unwrap();
+        assert_eq!(ir.algorithms.len(), 4, "the byz grid must cover all four algorithms");
+        assert_eq!(ir.attack.kind, AttackKind::ScaledGrad);
+        assert_eq!(ir.robust.aggregator, RobustKind::TrimmedMean);
+        // 10% of 66 rounds to 7 strided adversaries
+        let adv = ir.attack.adversaries(66);
+        assert_eq!(adv.iter().filter(|&&a| a).count(), 7);
+        // the attack and defense travel into the per-algorithm config
+        let cfg = ir.experiment_config(AlgorithmKind::FedSpace);
+        assert_eq!(cfg.attack, ir.attack);
+        assert_eq!(cfg.robust, ir.robust);
+        cfg.validate().unwrap();
+
+        let mg = Scenario::builtin("byz-multi-gs").unwrap();
+        assert_eq!(mg.federation.n_gateways(), 2);
+        assert_eq!(mg.robust.aggregator, RobustKind::Median);
+        assert!(mg.attack.drop_prob > 0.0 && mg.attack.corrupt_prob > 0.0);
+        // the compromised set is exactly one orbital plane
+        let c = mg.build_constellation();
+        assert_eq!(mg.attack.sats.len(), 11);
+        for &s in &mg.attack.sats {
+            assert_eq!(c.plane_ids[s].plane, 0, "sat {s} should sit in plane 0");
+        }
+        // every pre-robustness builtin keeps the attack off and the plain
+        // Eq.-4 mean (trace compatibility)
+        for name in ["paper-fig7", "polar-iridium-66", "fedspace-multi-gs", "isl-iridium-66"] {
+            let sc = Scenario::builtin(name).unwrap();
+            assert!(!sc.attack.enabled(), "{name}");
+            assert!(sc.robust.is_default(), "{name}");
+        }
+    }
+
+    #[test]
+    fn attack_robust_validate_through_scenario() {
+        let mut sc = Scenario::builtin("byz-iridium-66").unwrap();
+        sc.validate().unwrap();
+        // adversary id outside the fleet
+        sc.attack.sats = vec![66];
+        assert!(sc.validate().is_err());
+        sc.attack.sats = vec![3];
+        sc.validate().unwrap();
+        // trim fraction must leave survivors
+        sc.robust.trim = 0.5;
+        assert!(sc.validate().is_err());
+        sc.robust.trim = 0.15;
+        sc.validate().unwrap();
+        // TOML-level rejection of unknown spellings
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[attack]\nkind = \"jamming\""
+        )
+        .is_err());
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[robust]\naggregator = \"blockchain\""
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn scaled_trims_attack_sats_and_keeps_an_adversary() {
+        // explicit ids beyond the scaled fleet are dropped
+        let sc = Scenario::builtin("byz-multi-gs").unwrap().scaled(Some(6), Some(48));
+        assert!(!sc.attack.sats.is_empty());
+        assert!(sc.attack.sats.iter().all(|&s| s < 6), "{:?}", sc.attack.sats);
+        sc.validate().unwrap();
+        // fraction-based selection that rounds to zero adversaries falls
+        // back to one explicit adversary instead of failing validation
+        let tiny = Scenario::builtin("byz-iridium-66").unwrap().scaled(Some(4), Some(24));
+        assert!(tiny.attack.adversaries(4).iter().any(|&a| a));
+        tiny.validate().unwrap();
+        // the defense travels through scaling untouched
+        assert_eq!(tiny.robust, Scenario::builtin("byz-iridium-66").unwrap().robust);
     }
 
     #[test]

@@ -57,6 +57,20 @@ pub enum ReconcilePolicy {
     /// through the same merge machinery (trace-identical to `Centralized`,
     /// tested; the policy exists to exercise and gate the merge path).
     OnAggregate,
+    /// Like `Periodic`, but each gateway's Sync aggregation threshold is
+    /// the number of with-data satellites the routing table attributes
+    /// *directly to that gateway* rather than the global fleet — the
+    /// ROADMAP per-gateway sync quorum. A starved gateway (few direct
+    /// contacts) reaches quorum over the satellites it can actually hear
+    /// instead of stalling the whole Sync run waiting for uploads that
+    /// will only ever land elsewhere. Only Sync consults the quorum;
+    /// FedBuff's `m` and the scheduled policies are already local by
+    /// construction. Single-gateway runs have no routing table, so the
+    /// quorum falls back to the global with-data count — ≡ `Periodic`.
+    Quorum {
+        /// Merge cadence in engine slots (validated > 0).
+        every: usize,
+    },
 }
 
 impl ReconcilePolicy {
@@ -66,6 +80,16 @@ impl ReconcilePolicy {
             ReconcilePolicy::Centralized => "centralized",
             ReconcilePolicy::Periodic { .. } => "periodic",
             ReconcilePolicy::OnAggregate => "on-aggregate",
+            ReconcilePolicy::Quorum { .. } => "quorum",
+        }
+    }
+
+    /// The end-of-step merge cadence, for the policies that have one
+    /// (`Periodic` and `Quorum` share the merge schedule).
+    pub fn cadence(&self) -> Option<usize> {
+        match self {
+            ReconcilePolicy::Periodic { every } | ReconcilePolicy::Quorum { every } => Some(*every),
+            _ => None,
         }
     }
 }
@@ -100,9 +124,22 @@ impl StationMap {
         self.map.len()
     }
 
-    /// Gateway of station `s` (gateway 0 for unassigned — only reachable
-    /// for catch-all maps, since `validate` rejects partially mapped ones).
+    /// Gateway of station `s`.
+    ///
+    /// Contract: the gateway-0 catch-all exists **only** for the empty
+    /// (single-gateway) map — `validate` rejects partially mapped networks,
+    /// so on a non-empty map every queried station must be in range. A
+    /// station index beyond a non-empty map is a caller bug (a routing
+    /// table built against a different station network); silently mapping
+    /// it to gateway 0 would mis-attribute its uploads, so debug builds
+    /// assert the bound.
     pub fn gateway(&self, station: usize) -> usize {
+        debug_assert!(
+            self.map.is_empty() || station < self.map.len(),
+            "station {station} is outside the {}-station map — the routing table and \
+             station network disagree",
+            self.map.len()
+        );
         self.map.get(station).copied().unwrap_or(0)
     }
 
@@ -194,9 +231,9 @@ impl FederationSpec {
                 bail!("[federation] duplicate gateway name {name:?}");
             }
         }
-        if let ReconcilePolicy::Periodic { every } = self.reconcile {
+        if let Some(every) = self.reconcile.cadence() {
             if every == 0 {
-                bail!("[federation] periodic reconcile needs every > 0");
+                bail!("[federation] {} reconcile needs every > 0", self.reconcile.name());
             }
         }
         if self.is_single() && self.stations.is_empty() {
@@ -251,7 +288,7 @@ impl FederationSpec {
             let _ = writeln!(out, "stations = [{}]", cols.join(", "));
         }
         let _ = writeln!(out, "reconcile = \"{}\"", self.reconcile.name());
-        if let ReconcilePolicy::Periodic { every } = self.reconcile {
+        if let Some(every) = self.reconcile.cadence() {
             let _ = writeln!(out, "every = {every}");
         }
     }
@@ -301,17 +338,24 @@ impl FederationSpec {
         spec.reconcile = match kind.to_ascii_lowercase().as_str() {
             "centralized" | "central" => ReconcilePolicy::Centralized,
             "on-aggregate" | "on_aggregate" | "onaggregate" => ReconcilePolicy::OnAggregate,
-            "periodic" => {
+            kind @ ("periodic" | "quorum") => {
                 let every = match doc.get("federation").and_then(|s| s.get("every")) {
                     Some(v) => usize::try_from(
                         v.as_int().context("[federation] every must be an integer")?,
                     )?,
-                    None => bail!("[federation] periodic reconcile needs an `every` cadence"),
+                    None => bail!("[federation] {kind} reconcile needs an `every` cadence"),
                 };
-                ReconcilePolicy::Periodic { every }
+                if kind == "periodic" {
+                    ReconcilePolicy::Periodic { every }
+                } else {
+                    ReconcilePolicy::Quorum { every }
+                }
             }
             other => {
-                bail!("unknown reconcile policy {other:?} (centralized | periodic | on-aggregate)")
+                bail!(
+                    "unknown reconcile policy {other:?} \
+                     (centralized | periodic | on-aggregate | quorum)"
+                )
             }
         };
         Ok(Some(spec))
@@ -419,6 +463,32 @@ impl UploadRouting {
     /// Number of gateways the table routes to.
     pub fn n_gateways(&self) -> usize {
         self.n_gateways
+    }
+
+    /// Per-gateway sync quorum (`ReconcilePolicy::Quorum`): how many
+    /// distinct satellites with local data each gateway ever hears
+    /// *directly* over the horizon (relayed contacts are excluded — their
+    /// attribution is the step fallback, not a stable gateway membership).
+    /// This is the Sync threshold of each gateway under the quorum policy:
+    /// the fleet a gateway can actually await.
+    pub fn quorum_counts(
+        &self,
+        n_sats: usize,
+        has_data: impl Fn(usize) -> bool,
+    ) -> Vec<usize> {
+        let mut heard = vec![false; self.n_gateways * n_sats];
+        for (sats, gws) in self.sats.iter().zip(self.gws.iter()) {
+            for (&sat, &g) in sats.iter().zip(gws.iter()) {
+                heard[g as usize * n_sats + sat as usize] = true;
+            }
+        }
+        (0..self.n_gateways)
+            .map(|g| {
+                (0..n_sats)
+                    .filter(|&k| heard[g * n_sats + k] && has_data(k))
+                    .count()
+            })
+            .collect()
     }
 
     /// The gateway that hears satellite `sat` at step `i` over `hops` relay
@@ -716,9 +786,9 @@ impl Federation {
     }
 
     /// End-of-step hook the engine calls before evaluating: fires the
-    /// `Periodic` cadence (step `i` completes slot `i + 1`).
+    /// `Periodic` / `Quorum` cadence (step `i` completes slot `i + 1`).
     pub fn end_of_step(&mut self, i: usize) {
-        if let ReconcilePolicy::Periodic { every } = self.reconcile {
+        if let Some(every) = self.reconcile.cadence() {
             if every > 0 && (i + 1) % every == 0 {
                 self.reconcile_now();
             }
@@ -755,9 +825,32 @@ mod tests {
         assert!(blank.validate(1).is_err());
         let dup = FederationSpec::split(&["x", "x"], &[0, 1], ReconcilePolicy::Centralized);
         assert!(dup.validate(2).is_err());
-        // periodic cadence 0
+        // periodic / quorum cadence 0
         assert!(two_gw_spec(ReconcilePolicy::Periodic { every: 0 }).validate(4).is_err());
         two_gw_spec(ReconcilePolicy::Periodic { every: 24 }).validate(4).unwrap();
+        assert!(two_gw_spec(ReconcilePolicy::Quorum { every: 0 }).validate(4).is_err());
+        two_gw_spec(ReconcilePolicy::Quorum { every: 24 }).validate(4).unwrap();
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "outside the")]
+    fn station_map_rejects_out_of_range_station_in_debug() {
+        // regression: a non-empty map used to silently send unknown
+        // stations to gateway 0 — a routing table built against the wrong
+        // station network would mis-attribute every such upload
+        let map = StationMap::new(vec![0, 1]);
+        map.gateway(2);
+    }
+
+    #[test]
+    fn station_map_catch_all_stays_permissive() {
+        // the documented contract: only the EMPTY map is a catch-all
+        let map = StationMap::all_to_single();
+        assert_eq!(map.gateway(0), 0);
+        assert_eq!(map.gateway(999), 0);
+        let map = StationMap::new(vec![0, 1]);
+        assert_eq!(map.gateway(1), 1);
     }
 
     #[test]
@@ -766,6 +859,7 @@ mod tests {
             two_gw_spec(ReconcilePolicy::Periodic { every: 24 }),
             two_gw_spec(ReconcilePolicy::OnAggregate),
             two_gw_spec(ReconcilePolicy::Centralized),
+            two_gw_spec(ReconcilePolicy::Quorum { every: 12 }),
         ] {
             let mut s = String::new();
             spec.emit_toml(&mut s);
@@ -780,6 +874,8 @@ mod tests {
         let doc =
             crate::cfg::toml::parse_toml("[federation]\nreconcile = \"periodic\"").unwrap();
         assert!(FederationSpec::from_doc(&doc).is_err());
+        let doc = crate::cfg::toml::parse_toml("[federation]\nreconcile = \"quorum\"").unwrap();
+        assert!(FederationSpec::from_doc(&doc).is_err(), "quorum needs an `every` cadence");
         let doc = crate::cfg::toml::parse_toml("[federation]\nreconcile = \"gossip\"").unwrap();
         assert!(FederationSpec::from_doc(&doc).is_err());
     }
@@ -941,5 +1037,26 @@ mod tests {
         assert_eq!(routing.gateway_for(1, 0, 0), 1);
         // relayed contacts take the fallback even when directly listed
         assert_eq!(routing.gateway_for(0, 1, 2), 0);
+    }
+
+    #[test]
+    fn quorum_counts_are_distinct_direct_with_data_sats() {
+        // gateway 0 hears sat 0 (twice — counted once) and sat 2; gateway 1
+        // hears sats 1 and 2; sat 2 has no data and drops out of both
+        let routing = UploadRouting {
+            n_steps: 3,
+            n_gateways: 2,
+            sats: vec![vec![0, 1], vec![0, 2], vec![2]],
+            gws: vec![vec![0, 1], vec![0, 0], vec![1]],
+            fallback: vec![0, 0, 1],
+        };
+        let counts = routing.quorum_counts(3, |s| s != 2);
+        assert_eq!(counts, vec![1, 1]);
+        let counts = routing.quorum_counts(3, |_| true);
+        assert_eq!(counts, vec![2, 2]);
+        // a gateway the table never routes to has quorum 0 (the engine
+        // clamps it to 1 so Sync cannot fire unconditionally)
+        let counts = routing.quorum_counts(3, |_| false);
+        assert_eq!(counts, vec![0, 0]);
     }
 }

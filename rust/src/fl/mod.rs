@@ -10,6 +10,7 @@ pub mod buffer;
 pub mod client;
 pub mod federation;
 pub mod illustrative;
+pub mod robust;
 pub mod server;
 pub mod staleness;
 
@@ -20,5 +21,6 @@ pub use federation::{
     Federation, FederationSpec, Gateway, GatewayWindow, ReconcilePolicy, StationMap,
     UploadRouting,
 };
+pub use robust::{CoordinateMedian, MultiKrum, RobustKind, RobustSpec, TrimmedMean};
 pub use server::{weighted_model_merge, CpuAggregator, GsState, ServerAggregator};
 pub use staleness::{compensation, normalized_weights};

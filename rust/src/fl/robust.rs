@@ -1,0 +1,540 @@
+//! Byzantine-robust Eq.-4 aggregators (ADR-0007): coordinate-wise median,
+//! trimmed mean, and multi-Krum beside the reference [`CpuAggregator`]
+//! mean, plus the `[robust]` spec that selects one per scenario.
+//!
+//! The federation trusts every upload; a single poisoned gradient moves the
+//! weighted mean arbitrarily far (Eq. 4 is linear in each entry). These
+//! aggregators bound that influence. Staleness-weight handling is defined
+//! per aggregator:
+//!
+//! - **Trimmed mean** keeps the Eq.-4 staleness weights: per coordinate the
+//!   `t` smallest and `t` largest entry values are discarded and the
+//!   survivors' weights renormalized. At `t == 0` (trim fraction below
+//!   `1/n`) it takes the exact [`CpuAggregator`] blocked accumulate — the
+//!   bit-identity the property tests assert.
+//! - **Coordinate median** ignores magnitude weights entirely: the median
+//!   is already insensitive to any minority of outliers, and weighting
+//!   would reopen the door it closes. Staleness still shapes *when*
+//!   gradients arrive; it just no longer scales them here.
+//! - **Multi-Krum** (Blanchard et al. 2017) selects whole entries by
+//!   pairwise-distance score before aggregating, then applies the Eq.-4
+//!   staleness weights renormalized over the selected subset — an
+//!   adversary must look like its peers to be heard at all.
+//!
+//! All three run the 256k-parameter hot path blocked and parallel on
+//! [`exec::scope_chunks`]: per-coordinate work is independent, so the model
+//! vector is split into cache-sized blocks and each block's delta is
+//! computed on its own thread, deterministically at any thread count
+//! (block results are combined in block order, and nothing in a block
+//! depends on the thread that ran it).
+
+use super::buffer::GradientEntry;
+use super::server::{CpuAggregator, ServerAggregator};
+use super::staleness::normalized_weights;
+use crate::cfg::toml::{TomlDoc, TomlValue};
+use crate::exec;
+use anyhow::{bail, Context, Result};
+
+/// Elements per parallel block (matches `CpuAggregator`'s cache blocking).
+const BLOCK: usize = 4096;
+
+/// Reject entry/model dimension mismatches before touching any element —
+/// same hoisted contract as [`CpuAggregator`].
+fn check_dims(w: &[f32], entries: &[GradientEntry]) -> Result<()> {
+    for entry in entries {
+        anyhow::ensure!(
+            entry.grad.len() == w.len(),
+            "gradient/model dim mismatch: {} vs {}",
+            entry.grad.len(),
+            w.len()
+        );
+    }
+    Ok(())
+}
+
+/// Compute per-block deltas in parallel and apply them to `w` in block
+/// order. `per_coord(e)` returns the robust update for coordinate `e`;
+/// it must not depend on anything thread-local, which makes the result
+/// bit-identical at any thread count.
+fn blocked_apply<F: Fn(usize) -> f32 + Sync>(w: &mut [f32], per_coord: F) {
+    let d = w.len();
+    let blocks: Vec<usize> = (0..d.div_ceil(BLOCK)).collect();
+    let threads = exec::default_parallelism();
+    let deltas: Vec<Vec<f32>> = exec::scope_chunks(&blocks, threads, |_, chunk| {
+        chunk
+            .iter()
+            .map(|&b| {
+                let lo = b * BLOCK;
+                let hi = ((b + 1) * BLOCK).min(d);
+                (lo..hi).map(&per_coord).collect()
+            })
+            .collect()
+    });
+    for (b, delta) in deltas.iter().enumerate() {
+        let lo = b * BLOCK;
+        for (wi, di) in w[lo..].iter_mut().zip(delta.iter()) {
+            *wi += di;
+        }
+    }
+}
+
+/// Coordinate-wise median: `w[e] += median_k(g_k[e])`. Unweighted by
+/// design (see module docs); the even-count median is the midpoint of the
+/// two central values. Permutation-invariant: each coordinate sorts its
+/// values, so entry order cannot change a bit of the output.
+pub struct CoordinateMedian;
+
+impl ServerAggregator for CoordinateMedian {
+    fn aggregate(
+        &mut self,
+        w: &mut Vec<f32>,
+        entries: &[GradientEntry],
+        _alpha: f64,
+    ) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        check_dims(w, entries)?;
+        let n = entries.len();
+        blocked_apply(w, |e| {
+            let mut vals: Vec<f32> = entries.iter().map(|en| en.grad[e]).collect();
+            vals.sort_unstable_by(f32::total_cmp);
+            if n % 2 == 1 {
+                vals[n / 2]
+            } else {
+                0.5 * (vals[n / 2 - 1] + vals[n / 2])
+            }
+        });
+        Ok(())
+    }
+}
+
+/// Trimmed mean: per coordinate, drop the `t` smallest and `t` largest
+/// entry values (`t = ⌊trim · n⌋`, clamped so at least one survives), then
+/// take the staleness-weighted mean of the survivors with renormalized
+/// weights. With up to `t` adversarial entries the output stays inside the
+/// honest values' range per coordinate (property-tested). `t == 0` is the
+/// exact [`CpuAggregator`] accumulate, bit for bit.
+pub struct TrimmedMean {
+    /// Fraction trimmed from *each* side, in `[0, 0.5)`.
+    pub trim: f64,
+}
+
+impl ServerAggregator for TrimmedMean {
+    fn aggregate(&mut self, w: &mut Vec<f32>, entries: &[GradientEntry], alpha: f64) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        let n = entries.len();
+        let t = ((self.trim * n as f64).floor() as usize).min((n - 1) / 2);
+        if t == 0 {
+            // nothing to trim: take the reference blocked accumulate so a
+            // trim=0 spec is bit-identical to the plain mean
+            return CpuAggregator.aggregate(w, entries, alpha);
+        }
+        check_dims(w, entries)?;
+        let stalenesses: Vec<usize> = entries.iter().map(|e| e.staleness).collect();
+        let weights = normalized_weights(&stalenesses, alpha);
+        blocked_apply(w, |e| {
+            let mut pairs: Vec<(f32, f32)> =
+                entries.iter().zip(weights.iter()).map(|(en, &wt)| (en.grad[e], wt)).collect();
+            // total order on (value, weight) so equal values with unequal
+            // weights trim identically under any entry permutation
+            pairs.sort_unstable_by(|a, b| {
+                a.0.total_cmp(&b.0).then_with(|| a.1.total_cmp(&b.1))
+            });
+            let survivors = &pairs[t..n - t];
+            let mut num = 0.0f64;
+            let mut den = 0.0f64;
+            for &(v, wt) in survivors {
+                num += wt as f64 * v as f64;
+                den += wt as f64;
+            }
+            if den > 0.0 {
+                (num / den) as f32
+            } else {
+                0.0
+            }
+        });
+        Ok(())
+    }
+}
+
+/// Multi-Krum (Blanchard et al. 2017, adapted to buffered uploads): score
+/// every entry by the sum of its `n - f - 2` smallest squared distances to
+/// the other entries, keep the `m` best-scored entries, and aggregate them
+/// with Eq.-4 staleness weights renormalized over the selection. Entries
+/// far from every cluster (scaled or flipped gradients) score badly and
+/// are excluded wholesale. `m == 0` means "auto": keep `n - f`. With
+/// `n < f + 3` the score is undefined and the aggregator degrades to the
+/// weighted mean over all entries (documented fallback, not an error —
+/// tiny buffers are common early in a run).
+///
+/// Deterministic and permutation-invariant: selection ties break on
+/// `(score, sat, staleness)` and the selected entries accumulate in that
+/// canonical order.
+pub struct MultiKrum {
+    /// Assumed upper bound on Byzantine entries per buffer.
+    pub f: usize,
+    /// Entries to keep (0 = auto: `n - f`).
+    pub m: usize,
+}
+
+impl ServerAggregator for MultiKrum {
+    fn aggregate(&mut self, w: &mut Vec<f32>, entries: &[GradientEntry], alpha: f64) -> Result<()> {
+        if entries.is_empty() {
+            return Ok(());
+        }
+        check_dims(w, entries)?;
+        let n = entries.len();
+        if n < self.f + 3 {
+            return CpuAggregator.aggregate(w, entries, alpha);
+        }
+        // pairwise squared distances, one row per entry, rows in parallel
+        let idx: Vec<usize> = (0..n).collect();
+        let threads = exec::default_parallelism();
+        let rows: Vec<Vec<f64>> = exec::scope_chunks(&idx, threads, |_, chunk| {
+            chunk
+                .iter()
+                .map(|&i| {
+                    (0..n)
+                        .map(|j| {
+                            if i == j {
+                                return 0.0;
+                            }
+                            entries[i]
+                                .grad
+                                .iter()
+                                .zip(entries[j].grad.iter())
+                                .map(|(a, b)| {
+                                    let d = (*a as f64) - (*b as f64);
+                                    d * d
+                                })
+                                .sum()
+                        })
+                        .collect()
+                })
+                .collect()
+        });
+        let neighbors = n - self.f - 2;
+        let mut scored: Vec<(f64, usize)> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, row)| {
+                let mut dists: Vec<f64> =
+                    row.iter().enumerate().filter(|&(j, _)| j != i).map(|(_, &d)| d).collect();
+                dists.sort_unstable_by(f64::total_cmp);
+                (dists[..neighbors.max(1).min(dists.len())].iter().sum(), i)
+            })
+            .collect();
+        // canonical selection order: score, then intrinsic entry identity
+        scored.sort_unstable_by(|a, b| {
+            a.0.total_cmp(&b.0)
+                .then_with(|| entries[a.1].sat.cmp(&entries[b.1].sat))
+                .then_with(|| entries[a.1].staleness.cmp(&entries[b.1].staleness))
+        });
+        let m = if self.m == 0 { n - self.f } else { self.m };
+        let m = m.clamp(1, n);
+        let selected: Vec<&GradientEntry> =
+            scored[..m].iter().map(|&(_, i)| &entries[i]).collect();
+        let stalenesses: Vec<usize> = selected.iter().map(|e| e.staleness).collect();
+        let weights = normalized_weights(&stalenesses, alpha);
+        blocked_apply(w, |e| {
+            let mut acc = 0.0f32;
+            for (entry, &wt) in selected.iter().zip(weights.iter()) {
+                acc += wt * entry.grad[e];
+            }
+            acc
+        });
+        Ok(())
+    }
+}
+
+/// Which Eq.-4 aggregator a run uses (the `[robust]` TOML `aggregator`
+/// key); `Mean` is the implicit default — the untouched [`CpuAggregator`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RobustKind {
+    /// The reference staleness-weighted mean ([`CpuAggregator`]).
+    #[default]
+    Mean,
+    /// Coordinate-wise median ([`CoordinateMedian`]).
+    Median,
+    /// Per-coordinate trimmed mean ([`TrimmedMean`]).
+    TrimmedMean,
+    /// Entry-level multi-Krum selection ([`MultiKrum`]).
+    MultiKrum,
+}
+
+impl RobustKind {
+    /// Parse the TOML/CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "mean" => RobustKind::Mean,
+            "median" => RobustKind::Median,
+            "trimmed-mean" | "trimmed_mean" | "trimmed" => RobustKind::TrimmedMean,
+            "multi-krum" | "multi_krum" | "krum" => RobustKind::MultiKrum,
+            other => bail!(
+                "unknown robust aggregator {other:?} (mean | median | trimmed-mean | multi-krum)"
+            ),
+        })
+    }
+
+    /// Canonical lowercase name (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RobustKind::Mean => "mean",
+            RobustKind::Median => "median",
+            RobustKind::TrimmedMean => "trimmed-mean",
+            RobustKind::MultiKrum => "multi-krum",
+        }
+    }
+}
+
+/// The `[robust]` TOML section on `Scenario` and `ExperimentConfig`:
+/// which aggregator Eq. 4 runs through, with its knobs. Omitted ⇒ the
+/// default ⇒ [`CpuAggregator`] ⇒ bit-identical pre-robust runs (specs
+/// stay byte-identical too — the section is only emitted when
+/// non-default).
+#[derive(Clone, Debug, PartialEq)]
+pub struct RobustSpec {
+    /// Aggregator family.
+    pub aggregator: RobustKind,
+    /// Trim fraction per side for `trimmed-mean`, in `[0, 0.5)`.
+    pub trim: f64,
+    /// Assumed Byzantine entries per buffer for `multi-krum`.
+    pub krum_f: usize,
+    /// Entries `multi-krum` keeps (0 = auto: `n - f`).
+    pub krum_m: usize,
+}
+
+impl Default for RobustSpec {
+    fn default() -> Self {
+        RobustSpec { aggregator: RobustKind::Mean, trim: 0.1, krum_f: 1, krum_m: 0 }
+    }
+}
+
+impl RobustSpec {
+    /// Exactly the implicit default (controls `[robust]` emission).
+    pub fn is_default(&self) -> bool {
+        *self == Self::default()
+    }
+
+    /// Reject self-inconsistent specs.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..0.5).contains(&self.trim) {
+            bail!("[robust] trim must be in [0, 0.5), got {}", self.trim);
+        }
+        Ok(())
+    }
+
+    /// Build the live aggregator this spec names.
+    pub fn make(&self) -> Box<dyn ServerAggregator> {
+        match self.aggregator {
+            RobustKind::Mean => Box::new(CpuAggregator),
+            RobustKind::Median => Box::new(CoordinateMedian),
+            RobustKind::TrimmedMean => Box::new(TrimmedMean { trim: self.trim }),
+            RobustKind::MultiKrum => Box::new(MultiKrum { f: self.krum_f, m: self.krum_m }),
+        }
+    }
+
+    /// Emit the `[robust]` TOML section (callers skip the call when
+    /// [`Self::is_default`] so pre-robust specs stay byte-identical).
+    pub fn emit_toml(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "\n[robust]");
+        let _ = writeln!(out, "aggregator = \"{}\"", self.aggregator.name());
+        let _ = writeln!(out, "trim = {}", self.trim);
+        let _ = writeln!(out, "krum_f = {}", self.krum_f);
+        let _ = writeln!(out, "krum_m = {}", self.krum_m);
+    }
+
+    /// Parse the `[robust]` section; `Ok(None)` when absent (callers keep
+    /// their default) — the shared scenario/experiment-config idiom.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Option<RobustSpec>> {
+        if doc.get("robust").is_none() {
+            return Ok(None);
+        }
+        let get = |key: &str| -> Option<&TomlValue> { doc.get("robust").and_then(|s| s.get(key)) };
+        let mut spec = RobustSpec::default();
+        if let Some(v) = get("aggregator") {
+            spec.aggregator =
+                RobustKind::parse(v.as_str().context("[robust] aggregator must be a string")?)?;
+        }
+        if let Some(v) = get("trim") {
+            spec.trim = v.as_float().context("[robust] trim must be a number")?;
+        }
+        if let Some(v) = get("krum_f") {
+            spec.krum_f =
+                usize::try_from(v.as_int().context("[robust] krum_f must be an integer")?)?;
+        }
+        if let Some(v) = get("krum_m") {
+            spec.krum_m =
+                usize::try_from(v.as_int().context("[robust] krum_m must be an integer")?)?;
+        }
+        Ok(Some(spec))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(sat: usize, staleness: usize, grad: Vec<f32>) -> GradientEntry {
+        GradientEntry { sat, staleness, grad, n_samples: 1 }
+    }
+
+    #[test]
+    fn median_odd_and_even_counts() {
+        let mut w = vec![0.0f32; 2];
+        let entries = vec![
+            entry(0, 0, vec![1.0, -3.0]),
+            entry(1, 0, vec![2.0, 5.0]),
+            entry(2, 0, vec![100.0, 1.0]),
+        ];
+        CoordinateMedian.aggregate(&mut w, &entries, 0.5).unwrap();
+        assert_eq!(w, vec![2.0, 1.0], "odd count: middle value, outlier ignored");
+        let mut w = vec![0.0f32];
+        let entries =
+            vec![entry(0, 0, vec![1.0]), entry(1, 0, vec![3.0]), entry(2, 0, vec![5.0]),
+                 entry(3, 0, vec![7.0])];
+        CoordinateMedian.aggregate(&mut w, &entries, 0.5).unwrap();
+        assert_eq!(w, vec![4.0], "even count: midpoint of the two central values");
+    }
+
+    #[test]
+    fn trimmed_mean_drops_extremes_per_coordinate() {
+        // 5 equal-staleness entries, trim 0.2 -> t = 1 per side
+        let mut w = vec![0.0f32];
+        let entries = vec![
+            entry(0, 0, vec![-1000.0]),
+            entry(1, 0, vec![1.0]),
+            entry(2, 0, vec![2.0]),
+            entry(3, 0, vec![3.0]),
+            entry(4, 0, vec![1000.0]),
+        ];
+        TrimmedMean { trim: 0.2 }.aggregate(&mut w, &entries, 0.5).unwrap();
+        assert!((w[0] - 2.0).abs() < 1e-6, "{w:?}");
+    }
+
+    #[test]
+    fn trim_zero_is_bit_identical_to_mean() {
+        let mut rng = crate::rng::Rng::new(11);
+        let d = 2 * super::BLOCK + 5;
+        let w0: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let entries: Vec<GradientEntry> = (0..4)
+            .map(|s| entry(s, s % 3, (0..d).map(|_| rng.normal_f32(0.0, 0.1)).collect()))
+            .collect();
+        let mut a = w0.clone();
+        let mut b = w0.clone();
+        TrimmedMean { trim: 0.0 }.aggregate(&mut a, &entries, 0.5).unwrap();
+        CpuAggregator.aggregate(&mut b, &entries, 0.5).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn multi_krum_excludes_the_scaled_outlier() {
+        // 5 clustered honest entries + 1 scaled adversary; f=1 keeps n-f=5
+        let mut rng = crate::rng::Rng::new(3);
+        let d = 64;
+        let honest: Vec<f32> = (0..d).map(|_| rng.normal_f32(1.0, 0.01)).collect();
+        let mut entries: Vec<GradientEntry> = (0..5)
+            .map(|s| {
+                entry(s, 0, honest.iter().map(|v| v + rng.normal_f32(0.0, 0.01)).collect())
+            })
+            .collect();
+        entries.push(entry(5, 0, honest.iter().map(|v| v * -50.0).collect()));
+        let mut w = vec![0.0f32; d];
+        MultiKrum { f: 1, m: 0 }.aggregate(&mut w, &entries, 0.5).unwrap();
+        for v in &w {
+            assert!((v - 1.0).abs() < 0.1, "adversary leaked into the update: {v}");
+        }
+    }
+
+    #[test]
+    fn multi_krum_tiny_buffer_falls_back_to_mean() {
+        let mut w = vec![0.0f32; 2];
+        let entries = vec![entry(0, 0, vec![2.0, 4.0]), entry(1, 0, vec![4.0, 2.0])];
+        let mut w_mean = w.clone();
+        MultiKrum { f: 1, m: 0 }.aggregate(&mut w, &entries, 0.5).unwrap();
+        CpuAggregator.aggregate(&mut w_mean, &entries, 0.5).unwrap();
+        assert_eq!(w, w_mean, "n < f + 3 degrades to the weighted mean");
+    }
+
+    #[test]
+    fn robust_aggregators_reject_dim_mismatch_untouched() {
+        let entries = vec![entry(0, 0, vec![1.0; 4]), entry(1, 0, vec![1.0; 3])];
+        let aggs: Vec<Box<dyn ServerAggregator>> = vec![
+            Box::new(CoordinateMedian),
+            Box::new(TrimmedMean { trim: 0.3 }),
+            Box::new(MultiKrum { f: 0, m: 0 }),
+        ];
+        for mut a in aggs {
+            let mut w = vec![0.0f32; 4];
+            assert!(a.aggregate(&mut w, &entries, 0.5).is_err());
+            assert_eq!(w, vec![0.0f32; 4], "failed aggregation must not touch the model");
+        }
+    }
+
+    #[test]
+    fn empty_buffer_is_identity_for_all() {
+        for mut a in [
+            Box::new(CoordinateMedian) as Box<dyn ServerAggregator>,
+            Box::new(TrimmedMean { trim: 0.2 }),
+            Box::new(MultiKrum { f: 1, m: 0 }),
+        ] {
+            let mut w = vec![7.0f32; 3];
+            a.aggregate(&mut w, &[], 0.5).unwrap();
+            assert_eq!(w, vec![7.0f32; 3]);
+        }
+    }
+
+    #[test]
+    fn spec_round_trips_and_validates() {
+        let mut spec = RobustSpec {
+            aggregator: RobustKind::TrimmedMean,
+            trim: 0.15,
+            krum_f: 2,
+            krum_m: 4,
+        };
+        let mut s = String::new();
+        spec.emit_toml(&mut s);
+        let doc = crate::cfg::toml::parse_toml(&s).unwrap();
+        let back = RobustSpec::from_doc(&doc).unwrap().expect("section present");
+        assert_eq!(back, spec, "{s}");
+        // absent section -> None; default never emits
+        let doc = crate::cfg::toml::parse_toml("[scenario]\nname = \"x\"").unwrap();
+        assert!(RobustSpec::from_doc(&doc).unwrap().is_none());
+        assert!(RobustSpec::default().is_default());
+        // invalid trim rejected
+        spec.trim = 0.5;
+        assert!(spec.validate().is_err());
+        spec.trim = -0.1;
+        assert!(spec.validate().is_err());
+        assert!(RobustKind::parse("huber").is_err());
+        for k in
+            [RobustKind::Mean, RobustKind::Median, RobustKind::TrimmedMean, RobustKind::MultiKrum]
+        {
+            assert_eq!(RobustKind::parse(k.name()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn spec_make_builds_each_family() {
+        // the made aggregator behaves like its family on a known buffer
+        let entries = vec![
+            entry(0, 0, vec![1.0]),
+            entry(1, 0, vec![2.0]),
+            entry(2, 0, vec![900.0]),
+        ];
+        let spec = RobustSpec { aggregator: RobustKind::Median, ..Default::default() };
+        let mut w = vec![0.0f32];
+        spec.make().aggregate(&mut w, &entries, 0.5).unwrap();
+        assert_eq!(w, vec![2.0]);
+        let mean = RobustSpec::default();
+        let mut w = vec![0.0f32];
+        mean.make().aggregate(&mut w, &entries, 0.5).unwrap();
+        assert!(w[0] > 100.0, "mean is poisoned by the outlier: {w:?}");
+    }
+}

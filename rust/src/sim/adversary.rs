@@ -1,0 +1,443 @@
+//! Deterministic adversary / fault injection at the upload boundary
+//! (ADR-0007): label-flip and scaled-gradient Byzantine satellites,
+//! stale-update replay, and link-level faults (dropped uploads,
+//! bit-corrupted gradients).
+//!
+//! Everything here is a *scenario axis*, not a mode switch: the `[attack]`
+//! TOML section selects which satellites misbehave and how lossy the links
+//! are, and the [`Adversary`] runtime applies those transforms to each
+//! upload inside the shared `run_step` body — after the satellite hands
+//! over its gradient, before the federation receives it. Because contact
+//! steps are events in all three engine modes and the dense mode's extra
+//! steps see an empty contact list (so no adversary RNG is consumed),
+//! attack-on runs stay trace-bit-identical across Dense / ContactList /
+//! Streamed, and attack-off runs consume no adversary randomness at all —
+//! bit-identical to a build without this module.
+//!
+//! Seed stability: the injector draws from its own xoshiro stream,
+//! `Rng::new(run_seed ^ ADVERSARY_STREAM)`, created only when the attack
+//! is enabled. The training / planning / data streams are untouched, so
+//! the honest side of an attacked run matches the clean run until the
+//! first poisoned aggregate lands.
+
+use crate::cfg::toml::{TomlDoc, TomlValue};
+use crate::rng::Rng;
+use crate::sim::trace::RunTrace;
+use anyhow::{bail, Context, Result};
+
+/// Stream-id XOR'd into the run seed for the adversary RNG, keeping its
+/// draws independent of the training (`split(i+1)`), planner (`^ 0x5EED`)
+/// and data (`^ 0xA11CE` / `^ 0xDA7A`) streams.
+pub const ADVERSARY_STREAM: u64 = 0xBAD5_EED5;
+
+/// What compromised satellites do to their own updates (the `[attack]`
+/// TOML `kind` key). Link faults (`drop_prob` / `corrupt_prob`) are
+/// orthogonal and may run with `kind = "none"`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AttackKind {
+    /// No compromised satellites (link faults may still apply).
+    #[default]
+    None,
+    /// Sign-flipped gradients — the classic label-flip proxy: the update
+    /// points away from descent.
+    LabelFlip,
+    /// Gradients multiplied by `scale` (negative scale both flips and
+    /// amplifies — the strongest mean-poisoning primitive).
+    ScaledGrad,
+    /// Each upload is swapped with the adversary's previously transmitted
+    /// gradient — replaying genuinely stale updates that hide inside the
+    /// staleness model (the first upload passes through honestly while
+    /// being recorded).
+    StaleReplay,
+}
+
+impl AttackKind {
+    /// Parse the TOML/CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" => AttackKind::None,
+            "label-flip" | "label_flip" => AttackKind::LabelFlip,
+            "scaled-grad" | "scaled_grad" | "scaled" => AttackKind::ScaledGrad,
+            "stale-replay" | "stale_replay" | "replay" => AttackKind::StaleReplay,
+            other => bail!(
+                "unknown attack kind {other:?} (none | label-flip | scaled-grad | stale-replay)"
+            ),
+        })
+    }
+
+    /// Canonical lowercase name (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttackKind::None => "none",
+            AttackKind::LabelFlip => "label-flip",
+            AttackKind::ScaledGrad => "scaled-grad",
+            AttackKind::StaleReplay => "stale-replay",
+        }
+    }
+}
+
+/// The `[attack]` TOML section: which satellites are compromised, what
+/// they do, and how faulty the links are. Omitted ⇒ default ⇒ disabled ⇒
+/// byte-identical old specs and bit-identical clean runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AttackSpec {
+    /// Adversary behaviour.
+    pub kind: AttackKind,
+    /// Fraction of the fleet compromised (used when `sats` is empty);
+    /// resolved to `round(fraction · n)` evenly strided satellite ids.
+    pub fraction: f64,
+    /// Explicit compromised satellite ids (overrides `fraction`).
+    pub sats: Vec<usize>,
+    /// Multiplier for `scaled-grad`.
+    pub scale: f64,
+    /// Per-contact probability an upload is dropped in transit.
+    pub drop_prob: f64,
+    /// Per-contact probability one bit of the gradient is corrupted.
+    pub corrupt_prob: f64,
+}
+
+impl Default for AttackSpec {
+    fn default() -> Self {
+        AttackSpec {
+            kind: AttackKind::None,
+            fraction: 0.1,
+            sats: Vec::new(),
+            scale: -10.0,
+            drop_prob: 0.0,
+            corrupt_prob: 0.0,
+        }
+    }
+}
+
+impl AttackSpec {
+    /// Whether this spec injects anything at all. Disabled ⇒ the engine
+    /// builds no [`Adversary`] and consumes no adversary randomness.
+    pub fn enabled(&self) -> bool {
+        self.kind != AttackKind::None || self.drop_prob > 0.0 || self.corrupt_prob > 0.0
+    }
+
+    /// Reject self-inconsistent specs against the fleet size.
+    pub fn validate(&self, n_sats: usize) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.fraction) {
+            bail!("[attack] fraction must be in [0, 1], got {}", self.fraction);
+        }
+        for p in [("drop_prob", self.drop_prob), ("corrupt_prob", self.corrupt_prob)] {
+            if !(0.0..=1.0).contains(&p.1) {
+                bail!("[attack] {} must be in [0, 1], got {}", p.0, p.1);
+            }
+        }
+        if self.kind == AttackKind::ScaledGrad && (!self.scale.is_finite() || self.scale == 0.0) {
+            bail!("[attack] scale must be finite and nonzero for scaled-grad, got {}", self.scale);
+        }
+        for &s in &self.sats {
+            if s >= n_sats {
+                bail!("[attack] sats lists satellite {s} but the fleet has {n_sats}");
+            }
+        }
+        if self.kind != AttackKind::None && self.adversaries(n_sats).iter().all(|a| !a) {
+            bail!(
+                "[attack] kind = \"{}\" selects no adversaries (fraction {} of {} satellites)",
+                self.kind.name(),
+                self.fraction,
+                n_sats
+            );
+        }
+        Ok(())
+    }
+
+    /// Resolve the compromised set to a per-satellite mask: explicit
+    /// `sats` verbatim, else `round(fraction · n)` ids strided evenly
+    /// across the fleet (`j·n/count` — deterministic, constellation-shape
+    /// independent, distinct because `count ≤ n`).
+    pub fn adversaries(&self, n_sats: usize) -> Vec<bool> {
+        let mut mask = vec![false; n_sats];
+        if self.kind == AttackKind::None {
+            return mask;
+        }
+        if !self.sats.is_empty() {
+            for &s in &self.sats {
+                if s < n_sats {
+                    mask[s] = true;
+                }
+            }
+            return mask;
+        }
+        let count = ((self.fraction * n_sats as f64).round() as usize).min(n_sats);
+        for j in 0..count {
+            mask[j * n_sats / count] = true;
+        }
+        mask
+    }
+
+    /// Emit the `[attack]` TOML section (callers skip the call when
+    /// `!enabled()` so pre-attack specs stay byte-identical).
+    pub fn emit_toml(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "\n[attack]");
+        let _ = writeln!(out, "kind = \"{}\"", self.kind.name());
+        let _ = writeln!(out, "fraction = {}", self.fraction);
+        if !self.sats.is_empty() {
+            let ids: Vec<String> = self.sats.iter().map(|s| s.to_string()).collect();
+            let _ = writeln!(out, "sats = [{}]", ids.join(", "));
+        }
+        let _ = writeln!(out, "scale = {}", self.scale);
+        let _ = writeln!(out, "drop_prob = {}", self.drop_prob);
+        let _ = writeln!(out, "corrupt_prob = {}", self.corrupt_prob);
+    }
+
+    /// Parse the `[attack]` section; `Ok(None)` when absent (callers keep
+    /// their default) — the shared scenario/experiment-config idiom.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Option<AttackSpec>> {
+        if doc.get("attack").is_none() {
+            return Ok(None);
+        }
+        let get = |key: &str| -> Option<&TomlValue> { doc.get("attack").and_then(|s| s.get(key)) };
+        let mut spec = AttackSpec::default();
+        if let Some(v) = get("kind") {
+            spec.kind = AttackKind::parse(v.as_str().context("[attack] kind must be a string")?)?;
+        }
+        if let Some(v) = get("fraction") {
+            spec.fraction = v.as_float().context("[attack] fraction must be a number")?;
+        }
+        if let Some(v) = get("sats") {
+            let TomlValue::Array(items) = v else {
+                bail!("[attack] sats must be an array of satellite ids");
+            };
+            spec.sats = items
+                .iter()
+                .map(|x| {
+                    usize::try_from(x.as_int().context("[attack] sats entries must be integers")?)
+                        .map_err(Into::into)
+                })
+                .collect::<Result<Vec<usize>>>()?;
+        }
+        if let Some(v) = get("scale") {
+            spec.scale = v.as_float().context("[attack] scale must be a number")?;
+        }
+        if let Some(v) = get("drop_prob") {
+            spec.drop_prob = v.as_float().context("[attack] drop_prob must be a number")?;
+        }
+        if let Some(v) = get("corrupt_prob") {
+            spec.corrupt_prob = v.as_float().context("[attack] corrupt_prob must be a number")?;
+        }
+        Ok(Some(spec))
+    }
+}
+
+/// Live injector owned by the engine's `RunState`, built only when
+/// [`AttackSpec::enabled`]. [`Self::apply`] transforms each upload at the
+/// boundary between `SatClient::upload` and `Federation::receive`, in a
+/// fixed draw order (drop → transform → corrupt) so every engine mode
+/// consumes the stream identically.
+pub struct Adversary {
+    spec: AttackSpec,
+    is_adv: Vec<bool>,
+    /// Per-satellite previously transmitted gradient for `stale-replay`.
+    replay: Vec<Option<Vec<f32>>>,
+    rng: Rng,
+}
+
+impl Adversary {
+    /// Build the injector for a fleet of `n_sats` under `run_seed` (the
+    /// scenario seed; the adversary stream is derived, not shared).
+    pub fn new(spec: &AttackSpec, n_sats: usize, run_seed: u64) -> Adversary {
+        Adversary {
+            is_adv: spec.adversaries(n_sats),
+            replay: vec![None; n_sats],
+            rng: Rng::new(run_seed ^ ADVERSARY_STREAM),
+            spec: spec.clone(),
+        }
+    }
+
+    /// Transform one upload from satellite `sat`. Returns `None` when the
+    /// link drops it (the satellite has already consumed its `upload`, so
+    /// it believes it transmitted — exactly a lost frame). Draw order is
+    /// part of the determinism contract:
+    /// 1. link drop (`drop_prob`), counted in `trace.dropped`;
+    /// 2. adversary transform when `sat` is compromised, counted in
+    ///    `trace.injected` (a replayed *first* upload passes through
+    ///    honestly and is not counted);
+    /// 3. single-bit corruption (`corrupt_prob`), counted in
+    ///    `trace.corrupted` — the flipped bit is drawn from the mantissa
+    ///    (0..=22) or sign (31), never the exponent, so a finite gradient
+    ///    stays finite (no NaN/inf can enter Eq. 4 through this fault).
+    pub fn apply(&mut self, sat: usize, mut grad: Vec<f32>, trace: &mut RunTrace) -> Option<Vec<f32>> {
+        if self.spec.drop_prob > 0.0 && self.rng.gen_bool(self.spec.drop_prob) {
+            trace.dropped += 1;
+            return None;
+        }
+        if self.is_adv[sat] {
+            match self.spec.kind {
+                AttackKind::None => {}
+                AttackKind::LabelFlip => {
+                    for v in grad.iter_mut() {
+                        *v = -*v;
+                    }
+                    trace.injected += 1;
+                }
+                AttackKind::ScaledGrad => {
+                    let scale = self.spec.scale as f32;
+                    for v in grad.iter_mut() {
+                        *v *= scale;
+                    }
+                    trace.injected += 1;
+                }
+                AttackKind::StaleReplay => match &mut self.replay[sat] {
+                    slot @ None => {
+                        *slot = Some(grad.clone());
+                    }
+                    Some(stored) => {
+                        std::mem::swap(stored, &mut grad);
+                        trace.injected += 1;
+                    }
+                },
+            }
+        }
+        if self.spec.corrupt_prob > 0.0 && self.rng.gen_bool(self.spec.corrupt_prob) && !grad.is_empty()
+        {
+            let e = self.rng.gen_range(0, grad.len());
+            let sel = self.rng.gen_range(0, 24);
+            let bit = if sel == 23 { 31 } else { sel };
+            grad[e] = f32::from_bits(grad[e].to_bits() ^ (1u32 << bit));
+            trace.corrupted += 1;
+        }
+        Some(grad)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strided_resolution_hits_the_requested_count() {
+        let spec = AttackSpec { kind: AttackKind::LabelFlip, fraction: 0.1, ..Default::default() };
+        let mask = spec.adversaries(66);
+        assert_eq!(mask.iter().filter(|&&a| a).count(), 7, "round(0.1 · 66)");
+        let spec = AttackSpec { kind: AttackKind::LabelFlip, fraction: 1.0, ..Default::default() };
+        assert!(spec.adversaries(5).iter().all(|&a| a));
+        let spec = AttackSpec {
+            kind: AttackKind::LabelFlip,
+            sats: vec![3, 7],
+            ..Default::default()
+        };
+        let mask = spec.adversaries(10);
+        assert_eq!(mask.iter().filter(|&&a| a).count(), 2);
+        assert!(mask[3] && mask[7], "explicit ids override fraction");
+        // kind None selects nobody even with fraction 1
+        let spec = AttackSpec { fraction: 1.0, ..Default::default() };
+        assert!(spec.adversaries(10).iter().all(|&a| !a));
+    }
+
+    #[test]
+    fn transforms_are_seed_stable() {
+        let spec = AttackSpec {
+            kind: AttackKind::ScaledGrad,
+            fraction: 0.5,
+            scale: -3.0,
+            drop_prob: 0.2,
+            corrupt_prob: 0.2,
+            ..Default::default()
+        };
+        let run = |seed: u64| {
+            let mut adv = Adversary::new(&spec, 4, seed);
+            let mut trace = RunTrace::default();
+            let mut out = Vec::new();
+            for i in 0..64usize {
+                let g = vec![i as f32, -(i as f32), 0.5];
+                out.push(adv.apply(i % 4, g, &mut trace));
+            }
+            (out, trace.injected, trace.dropped, trace.corrupted)
+        };
+        let a = run(42);
+        let b = run(42);
+        assert_eq!(a.0, b.0, "same seed ⇒ identical transformed stream");
+        assert_eq!((a.1, a.2, a.3), (b.1, b.2, b.3));
+        let c = run(43);
+        assert_ne!(a.0, c.0, "different seed ⇒ different drop/corrupt draws");
+        assert!(a.2 > 0 && a.3 > 0, "probabilistic faults actually fired: {a:?}");
+    }
+
+    #[test]
+    fn corruption_never_breaks_finiteness() {
+        // exponent bits are excluded, so finite inputs stay finite no
+        // matter how many corruption draws land
+        let spec =
+            AttackSpec { corrupt_prob: 1.0, ..Default::default() };
+        let mut adv = Adversary::new(&spec, 1, 7);
+        let mut trace = RunTrace::default();
+        for i in 0..2000 {
+            let g = vec![1.5e30, -2.5e-30, 0.0, i as f32];
+            let out = adv.apply(0, g, &mut trace).unwrap();
+            for v in out {
+                assert!(v.is_finite(), "corruption produced a non-finite value: {v}");
+            }
+        }
+        assert_eq!(trace.corrupted, 2000);
+    }
+
+    #[test]
+    fn stale_replay_swaps_from_the_second_upload() {
+        let spec = AttackSpec { kind: AttackKind::StaleReplay, sats: vec![0], ..Default::default() };
+        let mut adv = Adversary::new(&spec, 2, 1);
+        let mut trace = RunTrace::default();
+        // first upload passes through honestly while being recorded
+        let out = adv.apply(0, vec![1.0], &mut trace).unwrap();
+        assert_eq!(out, vec![1.0]);
+        assert_eq!(trace.injected, 0);
+        // second upload is replaced by the first; the second is now stored
+        let out = adv.apply(0, vec![2.0], &mut trace).unwrap();
+        assert_eq!(out, vec![1.0]);
+        assert_eq!(trace.injected, 1);
+        let out = adv.apply(0, vec![3.0], &mut trace).unwrap();
+        assert_eq!(out, vec![2.0], "rolling swap, always one upload behind");
+        // honest satellite untouched
+        let out = adv.apply(1, vec![9.0], &mut trace).unwrap();
+        assert_eq!(out, vec![9.0]);
+        assert_eq!(trace.injected, 2);
+    }
+
+    #[test]
+    fn spec_round_trips_and_validates() {
+        let spec = AttackSpec {
+            kind: AttackKind::ScaledGrad,
+            fraction: 0.25,
+            sats: vec![1, 4, 9],
+            scale: -20.0,
+            drop_prob: 0.02,
+            corrupt_prob: 0.01,
+        };
+        let mut s = String::new();
+        spec.emit_toml(&mut s);
+        let doc = crate::cfg::toml::parse_toml(&s).unwrap();
+        let back = AttackSpec::from_doc(&doc).unwrap().expect("section present");
+        assert_eq!(back, spec, "{s}");
+        assert!(spec.validate(10).is_ok());
+        // absent section -> None; disabled default never emits
+        let doc = crate::cfg::toml::parse_toml("[scenario]\nname = \"x\"").unwrap();
+        assert!(AttackSpec::from_doc(&doc).unwrap().is_none());
+        assert!(!AttackSpec::default().enabled());
+        // fault-only spec is enabled with kind none
+        let faults = AttackSpec { drop_prob: 0.1, ..Default::default() };
+        assert!(faults.enabled());
+        assert!(faults.validate(10).is_ok());
+        // rejections: out-of-range sat, bad probs, zero scale, empty selection
+        assert!(spec.validate(5).is_err(), "sat 9 out of a 5-sat fleet");
+        let bad = AttackSpec { drop_prob: 1.5, ..Default::default() };
+        assert!(bad.validate(10).is_err());
+        let bad = AttackSpec { kind: AttackKind::ScaledGrad, scale: 0.0, ..Default::default() };
+        assert!(bad.validate(10).is_err());
+        let bad =
+            AttackSpec { kind: AttackKind::LabelFlip, fraction: 0.0, ..Default::default() };
+        assert!(bad.validate(10).is_err(), "attack kind set but nobody compromised");
+        assert!(AttackKind::parse("gaussian").is_err());
+        for k in [
+            AttackKind::None,
+            AttackKind::LabelFlip,
+            AttackKind::ScaledGrad,
+            AttackKind::StaleReplay,
+        ] {
+            assert_eq!(AttackKind::parse(k.name()).unwrap(), k);
+        }
+    }
+}

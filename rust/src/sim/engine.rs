@@ -36,6 +36,7 @@ use crate::fl::client::SatClient;
 use crate::metrics::CurvePoint;
 use crate::rng::Rng;
 use crate::sched::{FedSpacePlanner, SatForecastState};
+use crate::sim::adversary::{Adversary, AttackSpec};
 use crate::sim::trace::RunTrace;
 use crate::sim::trainer::Trainer;
 use anyhow::Result;
@@ -65,6 +66,10 @@ pub struct EngineConfig {
     /// Dense per-step walk, sparse contact-list event walk, or the
     /// chunk-driven streamed walk.
     pub mode: EngineMode,
+    /// Adversary / fault injection at the upload boundary (ADR-0007);
+    /// disabled by default — no injector is built and no adversary
+    /// randomness is consumed.
+    pub attack: AttackSpec,
 }
 
 impl Default for EngineConfig {
@@ -80,6 +85,7 @@ impl Default for EngineConfig {
             seed: 7,
             i0: 24,
             mode: EngineMode::Dense,
+            attack: AttackSpec::default(),
         }
     }
 }
@@ -220,6 +226,9 @@ struct RunState {
     fed: Federation,
     /// One aggregation-indicator policy per gateway (index = gateway).
     policies: Vec<PolicyImpl>,
+    /// Attack/fault injector (ADR-0007); `None` when the spec is disabled,
+    /// in which case the upload path is byte-for-byte the clean one.
+    adversary: Option<Adversary>,
     trace: RunTrace,
     last_loss: f64,
     days_to_target: Option<f64>,
@@ -325,17 +334,28 @@ fn run_step(
     };
 
     // 1. receive uploads (Algorithm 1's for k ∈ C_i loop; C_i is the reach
-    // set when ISLs are on, and relayed gradients keep their origin id)
+    // set when ISLs are on, and relayed gradients keep their origin id).
+    // The adversary sits exactly at the upload boundary (ADR-0007): the
+    // satellite has committed its transmission, the federation hasn't seen
+    // it yet. Contact steps are events in every engine mode and dense-only
+    // extra steps have an empty `conn`, so the injector's RNG draws — and
+    // therefore the whole attacked trace — stay tri-mode bit-identical.
     for (j, &s) in conn.iter().enumerate() {
         let hops = if conn_hops.is_empty() { 0 } else { conn_hops[j] as usize };
         let delay = hops * hop_delay;
         st.trace.connections += 1;
         if st.clients[s].can_upload_relayed(i, delay) {
             let (grad, base) = st.clients[s].upload(i);
-            st.fed.receive(route(s, hops), s, grad, base, st.clients[s].n_samples);
-            st.trace.uploads += 1;
-            if hops > 0 {
-                st.trace.relayed += 1;
+            let grad = match &mut st.adversary {
+                None => Some(grad),
+                Some(adv) => adv.apply(s, grad, &mut st.trace),
+            };
+            if let Some(grad) = grad {
+                st.fed.receive(route(s, hops), s, grad, base, st.clients[s].n_samples);
+                st.trace.uploads += 1;
+                if hops > 0 {
+                    st.trace.relayed += 1;
+                }
             }
         } else {
             st.trace.idle += 1;
@@ -563,14 +583,25 @@ impl<'a> Engine<'a> {
         }
     }
 
-    fn make_policy(&self) -> PolicyImpl {
+    /// Build one gateway's policy. `quorum` is the gateway's per-gateway
+    /// Sync threshold under `ReconcilePolicy::Quorum` — the with-data
+    /// satellites the routing table attributes directly to it; `None`
+    /// keeps the global with-data fleet (every other policy). The quorum
+    /// is clamped to `[1, with_data]`: never below 1 (a zero-threshold
+    /// Sync fires unconditionally on every step — a degenerate busy-loop,
+    /// not a starved gateway's rescue) and never above the fleet that can
+    /// contribute at all.
+    fn make_policy(&self, quorum: Option<usize>) -> PolicyImpl {
         // effective client count: satellites with data (sync must not wait
         // forever for satellites that can never contribute)
         let with_data = (0..self.source.n_sats())
             .filter(|&k| self.trainer.sat_samples(k) > 0)
             .count();
         match self.cfg.algorithm {
-            AlgorithmKind::Sync => PolicyImpl::Sync(SyncPolicy { n_sats: with_data }),
+            AlgorithmKind::Sync => {
+                let n_sats = quorum.map_or(with_data, |q| q.max(1).min(with_data.max(1)));
+                PolicyImpl::Sync(SyncPolicy { n_sats })
+            }
             AlgorithmKind::Async => PolicyImpl::Async(AsyncPolicy),
             AlgorithmKind::FedBuff => {
                 PolicyImpl::FedBuff(FedBuffPolicy { m: self.cfg.fedbuff_m.min(with_data) })
@@ -605,17 +636,29 @@ impl<'a> Engine<'a> {
             );
         }
         let fed = Federation::new(spec, self.trainer.init(&mut rng), cfg.alpha);
-        let reconcile_every = match spec.reconcile {
-            ReconcilePolicy::Periodic { every } => Some(every),
+        let reconcile_every = spec.reconcile.cadence();
+        // per-gateway sync quorum (ReconcilePolicy::Quorum): each gateway
+        // awaits only the with-data satellites the routing table attributes
+        // directly to it. Single-gateway runs have no table — the quorum
+        // falls back to the global with-data fleet (≡ Periodic).
+        let quorums: Option<Vec<usize>> = match spec.reconcile {
+            ReconcilePolicy::Quorum { .. } => routing
+                .map(|r| r.quorum_counts(k, |s| self.trainer.sat_samples(s) > 0)),
             _ => None,
         };
-        let policies: Vec<PolicyImpl> =
-            (0..spec.n_gateways()).map(|_| self.make_policy()).collect();
+        let policies: Vec<PolicyImpl> = (0..spec.n_gateways())
+            .map(|g| self.make_policy(quorums.as_ref().map(|q| q[g])))
+            .collect();
+        let adversary = cfg
+            .attack
+            .enabled()
+            .then(|| Adversary::new(&cfg.attack, k, cfg.seed));
         let mut st = RunState {
             clients,
             sat_rngs,
             fed,
             policies,
+            adversary,
             trace: RunTrace::default(),
             last_loss: 0.0,
             days_to_target: None,
@@ -1513,5 +1556,196 @@ mod tests {
         let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
         let r = e.run().unwrap();
         assert!(r.final_round > 0);
+    }
+
+    #[test]
+    fn make_policy_applies_the_sync_quorum_clamped() {
+        let sched = small_sched(12, 24);
+        let trainer = MockTrainer::new(16, 12, 0.3, 0);
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig { algorithm: AlgorithmKind::Sync, ..Default::default() };
+        let e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+        // no quorum: the global with-data fleet
+        let PolicyImpl::Sync(p) = e.make_policy(None) else { panic!() };
+        assert_eq!(p.n_sats, 12);
+        // a gateway that hears 3 with-data satellites awaits exactly those
+        let PolicyImpl::Sync(p) = e.make_policy(Some(3)) else { panic!() };
+        assert_eq!(p.n_sats, 3);
+        // clamped below by 1 (quorum 0 must not become an unconditional
+        // every-step aggregation) and above by the with-data fleet
+        let PolicyImpl::Sync(p) = e.make_policy(Some(0)) else { panic!() };
+        assert_eq!(p.n_sats, 1);
+        let PolicyImpl::Sync(p) = e.make_policy(Some(99)) else { panic!() };
+        assert_eq!(p.n_sats, 12);
+        // the quorum only touches Sync
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig {
+            algorithm: AlgorithmKind::FedBuff,
+            fedbuff_m: 4,
+            ..Default::default()
+        };
+        let e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+        let PolicyImpl::FedBuff(p) = e.make_policy(Some(2)) else { panic!() };
+        assert_eq!(p.m, 4);
+    }
+
+    #[test]
+    fn quorum_single_gateway_identical_to_periodic() {
+        // with one gateway there is no routing table: the quorum falls back
+        // to the global with-data fleet and the cadence machinery is shared,
+        // so Quorum ≡ Periodic bit for bit
+        for alg in [AlgorithmKind::Sync, AlgorithmKind::FedBuff] {
+            let p = FederationSpec::single()
+                .with_reconcile(crate::fl::ReconcilePolicy::Periodic { every: 12 });
+            let q = FederationSpec::single()
+                .with_reconcile(crate::fl::ReconcilePolicy::Quorum { every: 12 });
+            let a = run_fed(&p, alg, 96);
+            let b = run_fed(&q, alg, 96);
+            assert_same_run(&a, &b, &format!("{alg:?} single-gateway quorum vs periodic"));
+        }
+    }
+
+    #[test]
+    fn quorum_is_periodic_for_non_sync_algorithms() {
+        // FedBuff's M and Async are already per-gateway-local: the quorum
+        // policy differs from Periodic only through Sync thresholds, so on
+        // any other algorithm the two runs are bit-identical
+        let p = half_half_spec(crate::fl::ReconcilePolicy::Periodic { every: 12 });
+        let q = half_half_spec(crate::fl::ReconcilePolicy::Quorum { every: 12 });
+        for alg in [AlgorithmKind::Async, AlgorithmKind::FedBuff] {
+            let a = run_fed(&p, alg, 192);
+            let b = run_fed(&q, alg, 192);
+            assert_same_run(&a, &b, &format!("{alg:?} quorum vs periodic, two gateways"));
+        }
+    }
+
+    #[test]
+    fn quorum_sync_two_gateways_replays_and_lowers_thresholds() {
+        let spec = half_half_spec(crate::fl::ReconcilePolicy::Quorum { every: 12 });
+        let a = run_fed(&spec, AlgorithmKind::Sync, 192);
+        let b = run_fed(&spec, AlgorithmKind::Sync, 192);
+        assert_same_run(&a, &b, "sync quorum replay");
+        // the thresholds the engine derived: per-gateway direct audiences,
+        // each a nonempty subset of the fleet
+        let c = planet_labs_like(12, 0);
+        let stations = planet_ground_stations();
+        let params: crate::connectivity::ConnectivityParams = Default::default();
+        let routing =
+            crate::fl::UploadRouting::build(&c, &stations, 192, &params, &spec.stations);
+        let counts = routing.quorum_counts(12, |_| true);
+        assert_eq!(counts.len(), 2);
+        assert!(
+            counts.iter().all(|&q| (1..=12).contains(&q)),
+            "per-gateway quorums out of range: {counts:?}"
+        );
+    }
+
+    /// [`run_mock_mode`] with an attack spec attached.
+    fn run_mock_mode_atk(
+        algorithm: AlgorithmKind,
+        steps: usize,
+        mode: crate::cfg::EngineMode,
+        attack: AttackSpec,
+    ) -> RunResult {
+        let trainer = MockTrainer::new(16, 12, 0.3, 0);
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig {
+            algorithm,
+            fedbuff_m: 4,
+            eval_every: 4,
+            mode,
+            attack,
+            ..Default::default()
+        };
+        if mode == crate::cfg::EngineMode::Streamed {
+            let c = planet_labs_like(12, 0);
+            let gs = planet_ground_stations();
+            let stream = ConnectivityStream::new(&c, &gs, steps, Default::default(), 31);
+            let mut e =
+                Engine::new_streamed(&stream, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            e.run().unwrap()
+        } else {
+            let sched = small_sched(12, steps);
+            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            e.run().unwrap()
+        }
+    }
+
+    fn noisy_attack() -> AttackSpec {
+        AttackSpec {
+            kind: crate::sim::adversary::AttackKind::ScaledGrad,
+            fraction: 0.25,
+            scale: -20.0,
+            drop_prob: 0.15,
+            corrupt_prob: 0.1,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn attacked_runs_bit_identical_across_all_modes() {
+        // the tentpole invariant: adversary RNG draws happen only inside
+        // the conn loop at contact steps — events in every mode — so the
+        // attacked trace is tri-mode bit-identical for every algorithm
+        use crate::cfg::EngineMode;
+        for alg in [
+            AlgorithmKind::Sync,
+            AlgorithmKind::Async,
+            AlgorithmKind::FedBuff,
+            AlgorithmKind::FedSpace,
+        ] {
+            let dense = run_mock_mode_atk(alg, 192, EngineMode::Dense, noisy_attack());
+            let sparse = run_mock_mode_atk(alg, 192, EngineMode::ContactList, noisy_attack());
+            let streamed = run_mock_mode_atk(alg, 192, EngineMode::Streamed, noisy_attack());
+            assert_same_run(&dense, &sparse, &format!("{alg:?} attacked dense vs contacts"));
+            assert_same_run(&dense, &streamed, &format!("{alg:?} attacked dense vs streamed"));
+            assert!(dense.trace.injected > 0, "{alg:?}: no adversarial uploads landed");
+        }
+    }
+
+    #[test]
+    fn attack_changes_the_run_but_not_connectivity() {
+        use crate::cfg::EngineMode;
+        let clean = run_mock_mode(AlgorithmKind::Async, 4, 192, EngineMode::Dense, None);
+        let attacked = run_mock_mode_atk(AlgorithmKind::Async, 192, EngineMode::Dense, noisy_attack());
+        // geometry is untouched: the same contacts occur
+        assert_eq!(clean.trace.connections, attacked.trace.connections);
+        // the clean run has pristine counters
+        assert_eq!(clean.trace.injected, 0);
+        assert_eq!(clean.trace.dropped, 0);
+        assert_eq!(clean.trace.corrupted, 0);
+        // the attacked run visibly injected, dropped, and corrupted
+        assert!(attacked.trace.injected > 0);
+        assert!(attacked.trace.dropped > 0);
+        assert!(attacked.trace.corrupted > 0);
+        // dropped uploads never reached a buffer
+        assert!(attacked.trace.uploads < clean.trace.uploads + attacked.trace.dropped);
+        // and the poisoned model is a different model
+        let same_bits = clean
+            .final_w
+            .iter()
+            .zip(attacked.final_w.iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(!same_bits, "a -20x scaled-gradient attack left the model untouched");
+    }
+
+    #[test]
+    fn attacked_run_is_seed_reproducible() {
+        use crate::cfg::EngineMode;
+        let a = run_mock_mode_atk(AlgorithmKind::FedBuff, 192, EngineMode::Dense, noisy_attack());
+        let b = run_mock_mode_atk(AlgorithmKind::FedBuff, 192, EngineMode::Dense, noisy_attack());
+        assert_same_run(&a, &b, "attacked replay");
+    }
+
+    #[test]
+    fn stale_replay_and_label_flip_inject_through_the_engine() {
+        use crate::cfg::EngineMode;
+        use crate::sim::adversary::AttackKind;
+        for kind in [AttackKind::LabelFlip, AttackKind::StaleReplay] {
+            let attack = AttackSpec { kind, fraction: 0.25, ..Default::default() };
+            let r = run_mock_mode_atk(AlgorithmKind::Async, 192, EngineMode::Dense, attack);
+            assert!(r.trace.injected > 0, "{kind:?} never injected");
+            assert_eq!(r.trace.dropped, 0, "{kind:?} has no link faults configured");
+        }
     }
 }

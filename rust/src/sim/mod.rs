@@ -1,10 +1,12 @@
 //! Discrete-time simulation of Algorithm 1 over a connectivity schedule —
 //! the engine behind Figure 6, Table 2 and Figure 7.
 
+pub mod adversary;
 pub mod engine;
 pub mod trace;
 pub mod trainer;
 
+pub use adversary::{Adversary, AttackKind, AttackSpec};
 pub use engine::{Engine, EngineConfig, RunResult, ScheduleSource};
 pub use trace::RunTrace;
 pub use trainer::{MockTrainer, PjrtTrainer, Trainer, TrainerSampleBackend};

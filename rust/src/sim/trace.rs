@@ -27,6 +27,15 @@ pub struct RunTrace {
     /// cross-gateway reconcile merges performed (0 under `Centralized`
     /// and for every single-gateway run that never diverges)
     pub reconciles: usize,
+    /// uploads transformed by a Byzantine satellite (ADR-0007); always 0
+    /// when the scenario carries no `[attack]` section
+    pub injected: usize,
+    /// uploads lost to injected link faults (not counted in `uploads` —
+    /// the federation never saw them)
+    pub dropped: usize,
+    /// uploads that suffered a single-bit link corruption (subset of
+    /// `uploads`)
+    pub corrupted: usize,
     /// accuracy/loss curve (Figure 6)
     pub curve: TrainingCurve,
     /// wall-clock seconds spent in local training / aggregation / eval

@@ -395,6 +395,143 @@ fn prop_illustrative_invariants_hold_for_any_m() {
 }
 
 #[test]
+fn prop_robust_aggregators_permutation_invariant() {
+    // reordering the buffer must not change a single bit of the robust
+    // update (ADR-0007): the median sorts per coordinate, the trimmed mean
+    // sorts (value, weight) pairs, and multi-Krum breaks score ties on the
+    // entry's intrinsic identity. The generators keep clear of the two
+    // documented mean fallbacks (trim below 1/n, Krum with n < f + 3) —
+    // the reference mean accumulates in entry order and is exempt.
+    use fedspace::fl::server::ServerAggregator;
+    use fedspace::fl::{CoordinateMedian, MultiKrum, TrimmedMean};
+    property(25, |rng| {
+        let d = rng.gen_range(1, 40);
+        let n = rng.gen_range(3, 12);
+        let w0: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut entries: Vec<GradientEntry> = (0..n)
+            .map(|sat| GradientEntry {
+                sat,
+                staleness: rng.gen_range(0, 6),
+                grad: (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                n_samples: 1,
+            })
+            .collect();
+        let alpha = rng.gen_f64(0.0, 2.0);
+        let trim = rng.gen_f64(1.0 / n as f64, 0.49); // floor(trim n) >= 1
+        let f = rng.gen_range(0, (n - 2).min(5)); // n >= f + 3
+        let apply = |which: usize, entries: &[GradientEntry]| -> Vec<f32> {
+            let mut w = w0.clone();
+            match which {
+                0 => CoordinateMedian.aggregate(&mut w, entries, alpha).unwrap(),
+                1 => TrimmedMean { trim }.aggregate(&mut w, entries, alpha).unwrap(),
+                _ => MultiKrum { f, m: 0 }.aggregate(&mut w, entries, alpha).unwrap(),
+            }
+            w
+        };
+        let baseline: Vec<Vec<f32>> = (0..3).map(|which| apply(which, &entries)).collect();
+        for _ in 0..3 {
+            rng.shuffle(&mut entries);
+            for (which, name) in ["median", "trimmed-mean", "multi-krum"].iter().enumerate() {
+                let w = apply(which, &entries);
+                for (j, (x, y)) in w.iter().zip(&baseline[which]).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{name} not permutation-invariant at dim {j} (n={n} d={d})"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_trimmed_mean_at_zero_trim_is_the_reference_mean() {
+    // any trim fraction below 1/n trims nothing, and the spec says that
+    // case IS the CpuAggregator — bit for bit, so a [robust] section with
+    // trim 0 cannot perturb a pre-robustness trace
+    use fedspace::fl::server::{CpuAggregator, ServerAggregator};
+    use fedspace::fl::TrimmedMean;
+    property(40, |rng| {
+        let d = rng.gen_range(1, 60);
+        let n = rng.gen_range(1, 12);
+        let w0: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let entries: Vec<GradientEntry> = (0..n)
+            .map(|sat| GradientEntry {
+                sat,
+                staleness: rng.gen_range(0, 8),
+                grad: (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                n_samples: 1,
+            })
+            .collect();
+        let alpha = rng.gen_f64(0.0, 2.0);
+        let trim = if rng.gen_bool(0.5) { 0.0 } else { rng.gen_f64(0.0, 0.99 / n as f64) };
+        let mut a = w0.clone();
+        let mut b = w0;
+        TrimmedMean { trim }.aggregate(&mut a, &entries, alpha).unwrap();
+        CpuAggregator.aggregate(&mut b, &entries, alpha).unwrap();
+        for (j, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "dim {j} (trim={trim} n={n})");
+        }
+    });
+}
+
+#[test]
+fn prop_trimmed_mean_contained_by_honest_range_under_bounded_adversaries() {
+    // the ADR-0007 containment guarantee: with at most t = floor(trim n)
+    // Byzantine entries, every coordinate of the trimmed-mean update lies
+    // inside the honest values' [min, max] for that coordinate — arbitrary
+    // poisoned magnitudes are clipped out, never averaged in
+    use fedspace::fl::server::ServerAggregator;
+    use fedspace::fl::TrimmedMean;
+    property(40, |rng| {
+        let d = rng.gen_range(1, 30);
+        let n_adv = rng.gen_range(1, 4);
+        let n_honest = rng.gen_range(2 * n_adv + 1, 13);
+        let n = n_honest + n_adv;
+        // trim fraction chosen so t >= n_adv (containment precondition)
+        let trim = rng.gen_f64(n_adv as f64 / n as f64, 0.49);
+        let honest: Vec<Vec<f32>> = (0..n_honest)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let mut entries: Vec<GradientEntry> = honest
+            .iter()
+            .enumerate()
+            .map(|(sat, g)| GradientEntry {
+                sat,
+                staleness: rng.gen_range(0, 6),
+                grad: g.clone(),
+                n_samples: 1,
+            })
+            .collect();
+        for a in 0..n_adv {
+            // adversaries push huge values of either sign
+            let scale = if rng.gen_bool(0.5) { 1e6 } else { -1e6 };
+            entries.push(GradientEntry {
+                sat: n_honest + a,
+                staleness: rng.gen_range(0, 6),
+                grad: (0..d).map(|_| scale * (1.0 + rng.next_f32())).collect(),
+                n_samples: 1,
+            });
+        }
+        rng.shuffle(&mut entries);
+        let mut w = vec![0.0f32; d];
+        TrimmedMean { trim }.aggregate(&mut w, &entries, rng.gen_f64(0.0, 2.0)).unwrap();
+        for j in 0..d {
+            let lo = honest.iter().map(|g| g[j]).fold(f32::INFINITY, f32::min);
+            let hi = honest.iter().map(|g| g[j]).fold(f32::NEG_INFINITY, f32::max);
+            let eps = 1e-4 * (1.0 + lo.abs().max(hi.abs()));
+            assert!(
+                w[j] >= lo - eps && w[j] <= hi + eps,
+                "dim {j}: update {} escaped honest range [{lo}, {hi}] \
+                 (n_honest={n_honest} n_adv={n_adv} trim={trim})",
+                w[j]
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_cpu_aggregation_linear_in_weights() {
     // Eq. (4) with equal stalenesses is a plain average: w' - w must equal
     // the mean gradient, for any buffer size and dimension

@@ -9,7 +9,8 @@ use fedspace::app::{
     run_mock_on_stream, run_mock_on_stream_fed, run_scenario, FederationRun,
 };
 use fedspace::cfg::{AlgorithmKind, EngineMode, IslMode, Scenario};
-use fedspace::fl::ReconcilePolicy;
+use fedspace::fl::{ReconcilePolicy, RobustKind, RobustSpec};
+use fedspace::sim::AttackSpec;
 use fedspace::testing::assert_same_run;
 
 #[test]
@@ -268,6 +269,147 @@ fn dropout_scenario_downtime_reaches_the_engine() {
         f.trace.connections,
         h.trace.connections
     );
+}
+
+/// Robustness acceptance gate, half 1 (ADR-0007): with the `[attack]`
+/// section cleared and the default mean aggregator restored, the byz
+/// builtin IS `polar-iridium-66` — the same scenario struct modulo
+/// name/summary/algorithm-grid — and its runs are bit-identical to that
+/// pre-robustness scenario's, dense and streamed, for all four algorithms.
+/// Attack-off builds no injector and consumes no adversary randomness.
+#[test]
+fn attack_off_default_agg_identical_to_pre_robustness_engine() {
+    let mut sc = Scenario::builtin("byz-iridium-66").unwrap();
+    sc.attack = AttackSpec::default();
+    sc.robust = RobustSpec::default();
+    let base = Scenario::builtin("polar-iridium-66").unwrap();
+    let mut stripped = sc.clone();
+    stripped.name = base.name.clone();
+    stripped.summary = base.summary.clone();
+    stripped.algorithms = base.algorithms.clone();
+    assert_eq!(stripped, base, "byz-iridium-66 must be the polar shell + attack/robust");
+    let sc = sc.scaled(Some(24), Some(96));
+    let base = base.scaled(Some(24), Some(96));
+    let (_, sched) = sc.build_schedule();
+    let (_, stream) = sc.build_stream();
+    for &alg in &sc.algorithms {
+        let cleared = sc.experiment_config(alg);
+        let pre = base.experiment_config(alg);
+        let a = run_mock_on_schedule(&cleared, &sched, None).unwrap();
+        let b = run_mock_on_schedule(&pre, &sched, None).unwrap();
+        let s = run_mock_on_stream(&cleared, &stream, None).unwrap();
+        let name = alg.name();
+        assert_same_run(&a.result, &b.result, &format!("{name} attack-off dense"));
+        assert_same_run(&a.result, &s.result, &format!("{name} attack-off streamed"));
+        assert_eq!(
+            (a.result.trace.injected, a.result.trace.dropped, a.result.trace.corrupted),
+            (0, 0, 0),
+            "{name}: a clean run touched the adversary counters"
+        );
+    }
+}
+
+/// Robustness acceptance gate, half 2 (ADR-0007): with the adversary armed,
+/// the dense, contact-list and streamed engines still produce bit-identical
+/// traces on `byz-iridium-66` for the full four-algorithm grid — the
+/// injector draws from its own seeded stream at the upload boundary, so the
+/// attacked run is also exactly seed-reproducible.
+#[test]
+fn attacked_runs_identical_across_modes_and_seed_reproducible() {
+    let sc = Scenario::builtin("byz-iridium-66").unwrap().scaled(Some(24), Some(96));
+    assert_eq!(sc.algorithms.len(), 4, "byz-iridium-66 must sweep the full grid");
+    assert!(sc.attack.enabled());
+    let (_, sched) = sc.build_schedule();
+    let (_, stream) = sc.build_stream();
+    for &alg in &sc.algorithms {
+        let mut cfg = sc.experiment_config(alg);
+        cfg.engine_mode = EngineMode::Dense;
+        let dense = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+        let replay = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+        cfg.engine_mode = EngineMode::ContactList;
+        let sparse = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+        cfg.engine_mode = EngineMode::Streamed;
+        let streamed = run_mock_on_stream(&cfg, &stream, None).unwrap();
+        let name = alg.name();
+        assert_same_run(&dense.result, &replay.result, &format!("{name} byz replay"));
+        assert_same_run(&dense.result, &sparse.result, &format!("{name} byz contacts"));
+        assert_same_run(&dense.result, &streamed.result, &format!("{name} byz streamed"));
+        assert!(
+            dense.result.trace.injected > 0,
+            "{name}: no poisoned upload ever reached the server"
+        );
+    }
+}
+
+/// The attacked federation: on `byz-multi-gs` (one whole orbital plane
+/// Byzantine under the arctic gateway, lossy links, per-gateway median)
+/// the three engine modes agree bit for bit and both gateways still
+/// aggregate — faults injected at the upload boundary are routed exactly
+/// like honest uploads.
+#[test]
+fn byz_multi_gateway_modes_identical_under_attack() {
+    let sc = Scenario::builtin("byz-multi-gs").unwrap().scaled(Some(24), Some(96));
+    assert_eq!(sc.federation.n_gateways(), 2);
+    assert!(sc.attack.enabled());
+    let (constellation, sched) = sc.build_schedule();
+    let (_, stream) = sc.build_stream();
+    let routing = sc.build_upload_routing(&constellation).expect("multi-gateway");
+    let fed = FederationRun::of(&sc.federation, Some(&routing));
+    for &alg in &sc.algorithms {
+        let mut cfg = sc.experiment_config(alg);
+        cfg.engine_mode = EngineMode::Dense;
+        let dense = run_mock_on_schedule_fed(&cfg, &sched, None, fed, None).unwrap();
+        cfg.engine_mode = EngineMode::ContactList;
+        let sparse = run_mock_on_schedule_fed(&cfg, &sched, None, fed, None).unwrap();
+        cfg.engine_mode = EngineMode::Streamed;
+        let streamed = run_mock_on_stream_fed(&cfg, &stream, fed, None).unwrap();
+        let name = alg.name();
+        assert_same_run(&dense.result, &sparse.result, &format!("{name} byz-gs contacts"));
+        assert_same_run(&dense.result, &streamed.result, &format!("{name} byz-gs streamed"));
+        assert!(
+            dense.result.trace.injected > 0,
+            "{name}: the Byzantine plane never uploaded"
+        );
+        assert_eq!(dense.result.trace.gateway_aggs.len(), 2, "{name}");
+    }
+}
+
+/// The headline robustness claim (ADR-0007): under the scaled-gradient
+/// attack, trimmed-mean and median aggregation keep the global model
+/// strictly closer to the clean run's than the plain Eq.-4 mean, which the
+/// poisoned uploads drag away.
+#[test]
+fn robust_aggregators_recover_the_model_under_attack() {
+    fn l2(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| (f64::from(x) - f64::from(y)).powi(2))
+            .sum::<f64>()
+            .sqrt()
+    }
+    let mut sc = Scenario::builtin("byz-iridium-66").unwrap().scaled(Some(24), Some(192));
+    sc.algorithms = vec![AlgorithmKind::FedBuff];
+    // the scaled-down FedBuff buffer is small; raise the trim ratio so at
+    // least one entry per side is actually trimmed (floor(0.3 m) >= 1)
+    sc.robust.trim = 0.3;
+    let mut clean = sc.clone();
+    clean.attack = AttackSpec::default();
+    clean.robust = RobustSpec::default();
+    let mut mean = sc.clone();
+    mean.robust = RobustSpec::default();
+    let mut median = sc.clone();
+    median.robust.aggregator = RobustKind::Median;
+    let clean = &run_scenario(&clean, None).unwrap()[0].result;
+    let attacked_mean = &run_scenario(&mean, None).unwrap()[0].result;
+    let trimmed = &run_scenario(&sc, None).unwrap()[0].result;
+    let median = &run_scenario(&median, None).unwrap()[0].result;
+    assert_eq!(clean.trace.injected, 0);
+    assert!(attacked_mean.trace.injected > 0 && trimmed.trace.injected > 0);
+    let d_mean = l2(&attacked_mean.final_w, &clean.final_w);
+    let d_trim = l2(&trimmed.final_w, &clean.final_w);
+    let d_med = l2(&median.final_w, &clean.final_w);
+    assert!(d_trim < d_mean, "trimmed-mean no closer to clean than mean: {d_trim} vs {d_mean}");
+    assert!(d_med < d_mean, "median no closer to clean than mean: {d_med} vs {d_mean}");
 }
 
 #[test]
