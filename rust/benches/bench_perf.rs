@@ -86,7 +86,7 @@ fn main() -> anyhow::Result<()> {
         .map(|sat| GradientEntry {
             sat,
             staleness: sat % 5,
-            grad: rand_vec(&mut rng, d, 0.01),
+            grad: rand_vec(&mut rng, d, 0.01).into(),
             n_samples: 1,
         })
         .collect();
@@ -182,6 +182,22 @@ fn main() -> anyhow::Result<()> {
         mega_stream.fill_chunk(0, &mut chunk);
     });
     bench_report::record("connectivity_stream_mega_chunk", s.median_s);
+    // the same chunk with pass durations recorded (ADR-0008): the extra
+    // cost a byte-budgeted run pays to know each contact's capacity
+    let mega_timed = ConnectivityStream::new(
+        &mega,
+        &stations,
+        ConnectivityStream::DEFAULT_CHUNK_LEN,
+        ConnectivityParams::default(),
+        ConnectivityStream::DEFAULT_CHUNK_LEN,
+    )
+    .with_durations();
+    let timed = bench("timed chunk: 1584 sats x 96 slots (durations on)", 1, 3, || {
+        let mut chunk = fedspace::connectivity::ScheduleChunk::default();
+        mega_timed.fill_chunk(0, &mut chunk);
+    });
+    println!("    -> {:.2}x the untimed chunk", timed.median_s / s.median_s);
+    bench_report::record("contact_capacity_route", timed.median_s);
 
     section("L3: ISL routing (per-step BFS over the contact graph, ADR-0005)");
     // the whole-horizon routing cost the dense/contact-list modes pay once
@@ -234,7 +250,7 @@ fn main() -> anyhow::Result<()> {
             .map(|sat| GradientEntry {
                 sat,
                 staleness: sat % 5,
-                grad: rand_vec(&mut rng, rd, 0.01),
+                grad: rand_vec(&mut rng, rd, 0.01).into(),
                 n_samples: 1,
             })
             .collect();
@@ -261,6 +277,46 @@ fn main() -> anyhow::Result<()> {
         });
         println!("    -> {:.2}x the mean's cost", mk.median_s / mean.median_s);
         bench_report::record("robust_aggregate_krum", mk.median_s);
+    }
+
+    section("L3: sparse aggregation (top-k wire form, ADR-0008)");
+    // one buffer flush at the walker-starlink-4408 streamed scale, dense
+    // vs the top-k 1% sparse wire form the compression scenarios ship —
+    // the sparse path touches 48 x 2.6k coordinates instead of 48 x 256k
+    {
+        use fedspace::fl::{CodecKind, LinkSpec, UpdateCodec};
+        let rd = 262_144usize;
+        let rw = rand_vec(&mut rng, rd, 0.1);
+        let dense_entries: Vec<GradientEntry> = (0..48)
+            .map(|sat| GradientEntry {
+                sat,
+                staleness: sat % 5,
+                grad: rand_vec(&mut rng, rd, 0.01).into(),
+                n_samples: 1,
+            })
+            .collect();
+        let spec = LinkSpec { codec: CodecKind::TopK, topk_frac: 0.01, ..Default::default() };
+        let mut codec = UpdateCodec::new(&spec, 7);
+        let sparse_entries: Vec<GradientEntry> = dense_entries
+            .iter()
+            .map(|e| GradientEntry {
+                sat: e.sat,
+                staleness: e.staleness,
+                grad: codec.encode(e.grad.to_dense(), &mut Vec::new()),
+                n_samples: e.n_samples,
+            })
+            .collect();
+        let dense_s = bench("dense aggregate 48 x 256k (reference)", 1, 5, || {
+            let mut wc = rw.clone();
+            CpuAggregator.aggregate(&mut wc, &dense_entries, 0.5).unwrap();
+        });
+        let sparse_s = bench("sparse aggregate 48 x top-k 1% of 256k", 1, 5, || {
+            let mut wc = rw.clone();
+            CpuAggregator.aggregate(&mut wc, &sparse_entries, 0.5).unwrap();
+        });
+        println!("    -> {:.2}x vs dense", dense_s.median_s / sparse_s.median_s);
+        bench_report::record("sparse_aggregate_dense_ref", dense_s.median_s);
+        bench_report::record("sparse_aggregate_topk", sparse_s.median_s);
     }
 
     section("L3: utility regressor (random forest)");

@@ -21,8 +21,8 @@ COMMANDS:
                   --sats N (191)  --steps N (96)  --out-dir DIR (results)
   illustrative  the 3-satellite example (Figures 3-4, Table 1)
   train         run one FL experiment
-                  --config FILE           TOML config (optional; [isl] and
-                                          [federation] sections supported)
+                  --config FILE           TOML config (optional; [isl],
+                                          [federation] and [link] supported)
                   --algorithm sync|async|fedbuff|fedspace (fedspace)
                   --dist iid|noniid (iid) --steps N (480) --sats N (191)
                   --engine dense|contacts|streamed (dense)  time-axis mode
@@ -386,7 +386,7 @@ pub fn scenarios(args: &Args) -> Result<()> {
         None | Some("list") => {
             let mut t = Table::new(&[
                 "name", "constellation", "sats", "stations", "steps", "engine", "isl",
-                "gateways", "attack", "agg", "algorithms",
+                "gateways", "attack", "agg", "codec", "algorithms",
             ]);
             for sc in Scenario::builtins() {
                 t.row(&[
@@ -405,6 +405,11 @@ pub fn scenarios(args: &Args) -> Result<()> {
                     },
                     sc.attack.kind.name().to_string(),
                     sc.robust.aggregator.name().to_string(),
+                    if sc.link.enabled() {
+                        sc.link.codec.name().to_string()
+                    } else {
+                        "off".to_string()
+                    },
                     sc.algorithms
                         .iter()
                         .map(|a| a.name().to_string())
@@ -436,7 +441,7 @@ pub fn scenarios(args: &Args) -> Result<()> {
             let stop_at = args.get("target").map(|t| t.parse::<f64>()).transpose()?;
             println!(
                 "scenario {}: {} ({} sats, {} stations, {} steps, {} engine, isl {}, \
-                 {} gateway(s), attack {}, agg {})",
+                 {} gateway(s), attack {}, agg {}, codec {})",
                 sc.name,
                 sc.summary,
                 sc.constellation.n_sats(),
@@ -446,12 +451,13 @@ pub fn scenarios(args: &Args) -> Result<()> {
                 sc.isl.mode.name(),
                 sc.federation.n_gateways(),
                 sc.attack.kind.name(),
-                sc.robust.aggregator.name()
+                sc.robust.aggregator.name(),
+                if sc.link.enabled() { sc.link.codec.name() } else { "off" }
             );
             let outs = run_scenario(&sc, stop_at)?;
             let mut t = Table::new(&[
-                "algorithm", "rounds", "gw aggs", "uploads", "relayed", "inj/drop/corr",
-                "idle%", "max stale", "best acc", "days→target",
+                "algorithm", "rounds", "gw aggs", "uploads", "deferred", "relayed",
+                "inj/drop/corr", "idle%", "max stale", "best acc", "days→target",
             ]);
             for out in &outs {
                 let r = &out.result;
@@ -465,6 +471,7 @@ pub fn scenarios(args: &Args) -> Result<()> {
                         .collect::<Vec<_>>()
                         .join("/"),
                     r.trace.uploads.to_string(),
+                    r.trace.deferred.to_string(),
                     r.trace.relayed.to_string(),
                     format!(
                         "{}/{}/{}",

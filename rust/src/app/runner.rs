@@ -70,10 +70,16 @@ fn connectivity_inputs(
     (constellation, stations, params)
 }
 
-/// Constellation + connectivity for a config.
+/// Constellation + connectivity for a config. With a `[link]` byte budget
+/// the schedule also records pass durations (ADR-0008); contact membership
+/// is identical either way.
 pub fn build_schedule(cfg: &ExperimentConfig) -> (Constellation, ConnectivitySchedule) {
     let (constellation, stations, params) = connectivity_inputs(cfg);
-    let sched = ConnectivitySchedule::compute(&constellation, &stations, cfg.n_steps, params);
+    let sched = if cfg.link.capacity_enabled() {
+        ConnectivitySchedule::compute_with_durations(&constellation, &stations, cfg.n_steps, params)
+    } else {
+        ConnectivitySchedule::compute(&constellation, &stations, cfg.n_steps, params)
+    };
     (constellation, sched)
 }
 
@@ -124,6 +130,10 @@ pub fn build_stream(cfg: &ExperimentConfig) -> (Constellation, ConnectivityStrea
     );
     if let Some(topology) = cfg_isl_topology(cfg, &constellation) {
         stream = stream.with_isl(topology);
+    }
+    if cfg.link.capacity_enabled() {
+        // validate() already rejects the ISL combination
+        stream = stream.with_durations();
     }
     (constellation, stream)
 }
@@ -185,6 +195,7 @@ fn engine_cfg(cfg: &ExperimentConfig, stop_at: Option<f64>) -> EngineConfig {
         i0: cfg.i0,
         mode: cfg.engine_mode,
         attack: cfg.attack.clone(),
+        link: cfg.link.clone(),
     }
 }
 
@@ -713,6 +724,34 @@ mod tests {
         assert_eq!((t.injected, t.dropped, t.corrupted), (0, 0, 0));
         // the PJRT path refuses robust aggregators (Pallas artifact only)
         assert!(run_pjrt_experiment(&cfg, 16, None).is_err());
+    }
+
+    #[test]
+    fn config_path_carries_link() {
+        use crate::fl::{CodecKind, LinkSpec};
+        let mut cfg = tiny_cfg(AlgorithmKind::FedBuff);
+        cfg.link =
+            LinkSpec { rate_bytes_per_slot: 64, codec: CodecKind::TopK, topk_frac: 0.05 };
+        cfg.validate().unwrap();
+        // capacity on => the config path builds timed connectivity
+        let (_, sched) = build_schedule(&cfg);
+        assert!(sched.has_durations());
+        let (_, stream) = build_stream(&cfg);
+        assert!(stream.has_durations());
+        let dense = run_mock_experiment(&cfg, None).unwrap();
+        assert!(dense.result.trace.uploads > 0, "some passes must fit the budget");
+        // the compressed, budgeted run keeps the tri-mode identity
+        cfg.engine_mode = EngineMode::Streamed;
+        let streamed = run_mock_experiment(&cfg, None).unwrap();
+        crate::testing::assert_same_run(
+            &dense.result,
+            &streamed.result,
+            "link config streamed vs dense",
+        );
+        // link-free configs track no durations and defer nothing
+        let plain = run_mock_experiment(&tiny_cfg(AlgorithmKind::FedBuff), None).unwrap();
+        assert_eq!(plain.result.trace.deferred, 0);
+        assert!(!build_schedule(&tiny_cfg(AlgorithmKind::FedBuff)).1.has_durations());
     }
 
     #[test]

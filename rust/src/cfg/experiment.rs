@@ -4,7 +4,7 @@
 
 use super::scenario::IslSpec;
 use super::toml::{parse_toml, TomlDoc, TomlValue};
-use crate::fl::{FederationSpec, RobustSpec};
+use crate::fl::{FederationSpec, LinkSpec, RobustSpec};
 use crate::sim::AttackSpec;
 use anyhow::{bail, Context, Result};
 
@@ -195,6 +195,10 @@ pub struct ExperimentConfig {
     /// Server-side robust aggregation (ADR-0007) — the `[robust]` TOML
     /// section. The default mean is the plain Eq.-4 aggregator.
     pub robust: RobustSpec,
+    /// Link byte budget + upload codec (ADR-0008) — the `[link]` TOML
+    /// section. Disabled by default: the engine builds no codec, skips
+    /// every capacity check, and runs bit-identical to the pre-link engine.
+    pub link: LinkSpec,
 }
 
 impl Default for ExperimentConfig {
@@ -232,6 +236,7 @@ impl Default for ExperimentConfig {
             federation: FederationSpec::single(),
             attack: AttackSpec::default(),
             robust: RobustSpec::default(),
+            link: LinkSpec::default(),
         }
     }
 }
@@ -336,6 +341,9 @@ impl ExperimentConfig {
         if let Some(robust) = RobustSpec::from_doc(doc)? {
             c.robust = robust;
         }
+        if let Some(link) = LinkSpec::from_doc(doc)? {
+            c.link = link;
+        }
         c.validate()?;
         Ok(c)
     }
@@ -370,6 +378,13 @@ impl ExperimentConfig {
         self.federation.validate_structure()?;
         self.attack.validate(self.n_sats)?;
         self.robust.validate()?;
+        self.link.validate()?;
+        if self.link.capacity_enabled() && self.isl.enabled() {
+            bail!(
+                "[link] byte budgets and [isl] routing are mutually exclusive: a relayed \
+                 contact has no single pass duration to budget against"
+            );
+        }
         Ok(())
     }
 
@@ -495,6 +510,37 @@ mod tests {
             "[constellation]\nn_sats = 4\n[attack]\nkind = \"label-flip\"\nfraction = 0.05"
         )
         .is_err());
+    }
+
+    #[test]
+    fn link_section_reaches_the_config_path() {
+        use crate::fl::CodecKind;
+        let c = ExperimentConfig::from_toml_text(
+            "[link]\nrate_bytes_per_slot = 1500000\ncodec = \"top-k\"\ntopk_frac = 0.02",
+        )
+        .unwrap();
+        assert!(c.link.enabled() && c.link.capacity_enabled());
+        assert_eq!(c.link.codec, CodecKind::TopK);
+        assert!((c.link.topk_frac - 0.02).abs() < 1e-12);
+        assert!(!ExperimentConfig::default().link.enabled());
+        // bounds enforced on the config path too
+        assert!(ExperimentConfig::from_toml_text(
+            "[link]\ncodec = \"top-k\"\ntopk_frac = 0.0"
+        )
+        .is_err());
+        assert!(ExperimentConfig::from_toml_text("[link]\ncodec = \"gzip\"").is_err());
+        // byte budgets and ISL relays cannot combine: a relayed contact
+        // has no single pass duration
+        assert!(ExperimentConfig::from_toml_text(
+            "[link]\nrate_bytes_per_slot = 1000\n[isl]\nmode = \"ring\""
+        )
+        .is_err());
+        // codec-only compression composes with ISLs (no capacity check)
+        let c = ExperimentConfig::from_toml_text(
+            "[link]\ncodec = \"quant-q8\"\n[isl]\nmode = \"ring\"",
+        )
+        .unwrap();
+        assert!(c.link.enabled() && !c.link.capacity_enabled());
     }
 
     #[test]

@@ -20,7 +20,9 @@ use crate::connectivity::{
     ConnectivityParams, ConnectivitySchedule, ConnectivityStream, ContactGraph, IslParams,
     IslTopology,
 };
-use crate::fl::{FederationSpec, ReconcilePolicy, RobustKind, RobustSpec, UploadRouting};
+use crate::fl::{
+    CodecKind, FederationSpec, LinkSpec, ReconcilePolicy, RobustKind, RobustSpec, UploadRouting,
+};
 use crate::orbit::{
     planet_ground_stations, planet_labs_like, Constellation, DowntimeWindow, GroundStation,
     PlaneId, WalkerPattern, WalkerSpec,
@@ -379,6 +381,10 @@ pub struct Scenario {
     /// [`RobustKind::Mean`] is the plain Eq.-4 [`crate::fl::CpuAggregator`],
     /// bit for bit.
     pub robust: RobustSpec,
+    /// Link byte budget + upload codec (ADR-0008). The default disabled
+    /// spec builds no codec, tracks no pass durations, and keeps the run
+    /// bit-identical to the pre-link engine.
+    pub link: LinkSpec,
 }
 
 impl Default for Scenario {
@@ -401,6 +407,7 @@ impl Default for Scenario {
             federation: FederationSpec::single(),
             attack: AttackSpec::default(),
             robust: RobustSpec::default(),
+            link: LinkSpec::default(),
         }
     }
 }
@@ -467,6 +474,13 @@ impl Scenario {
         self.federation.validate(self.stations.build().len())?;
         self.attack.validate(self.constellation.n_sats())?;
         self.robust.validate()?;
+        self.link.validate()?;
+        if self.link.capacity_enabled() && self.isl.enabled() {
+            bail!(
+                "[link] byte budgets and [isl] routing are mutually exclusive: a relayed \
+                 contact has no single pass duration to budget against"
+            );
+        }
         Ok(())
     }
 
@@ -485,6 +499,7 @@ impl Scenario {
             "fedspace-multi-gs",
             "byz-iridium-66",
             "byz-multi-gs",
+            "compress-starlink-1584",
         ]
     }
 
@@ -775,6 +790,32 @@ impl Scenario {
                 robust: RobustSpec { aggregator: RobustKind::Median, ..Default::default() },
                 ..Default::default()
             },
+            "compress-starlink-1584" => Scenario {
+                name: "compress-starlink-1584".into(),
+                summary: "Starlink shell 1 under a finite downlink: every pass carries \
+                          rate x duration bytes, uploads ship top-k 1% sparsified \
+                          updates with error feedback, 1 day, streamed engine (ADR-0008)"
+                    .into(),
+                constellation: ConstellationSpec::Walker {
+                    pattern: WalkerPattern::Delta,
+                    n_sats: 1584,
+                    planes: 72,
+                    phasing: 17,
+                    alt_km: 550.0,
+                    inc_deg: 53.0,
+                },
+                n_steps: 96,
+                algorithms: vec![AlgorithmKind::Async, AlgorithmKind::FedBuff],
+                engine_mode: EngineMode::Streamed,
+                link: LinkSpec {
+                    // ~2 MB per full 15-min slot: short passes defer the
+                    // dense fmow payload but carry the top-k one
+                    rate_bytes_per_slot: 2_000_000,
+                    codec: CodecKind::TopK,
+                    topk_frac: 0.01,
+                },
+                ..Default::default()
+            },
             "dove-dropout" => Scenario {
                 name: "dove-dropout".into(),
                 summary: "paper fleet with mid-run failures: 4 satellites go dark on day 2, \
@@ -865,6 +906,9 @@ impl Scenario {
         }
         if !self.robust.is_default() {
             self.robust.emit_toml(&mut s);
+        }
+        if self.link.enabled() {
+            self.link.emit_toml(&mut s);
         }
         if !self.downtime.is_empty() {
             let col = |f: fn(&DowntimeWindow) -> usize| -> String {
@@ -1055,6 +1099,9 @@ impl Scenario {
         if let Some(robust) = RobustSpec::from_doc(doc)? {
             sc.robust = robust;
         }
+        if let Some(link) = LinkSpec::from_doc(doc)? {
+            sc.link = link;
+        }
 
         if doc.get("downtime").is_some() {
             let col = |key: &str| -> Result<Vec<usize>> {
@@ -1121,10 +1168,21 @@ impl Scenario {
     }
 
     /// Build constellation + connectivity schedule, downtime applied — the
-    /// one deterministic C every algorithm in the grid shares.
+    /// one deterministic C every algorithm in the grid shares. With a byte
+    /// budget enabled the schedule also records pass durations (ADR-0008);
+    /// the contact membership is identical either way.
     pub fn build_schedule(&self) -> (Constellation, ConnectivitySchedule) {
         let (constellation, stations, params) = self.connectivity_inputs();
-        let sched = ConnectivitySchedule::compute(&constellation, &stations, self.n_steps, params);
+        let sched = if self.link.capacity_enabled() {
+            ConnectivitySchedule::compute_with_durations(
+                &constellation,
+                &stations,
+                self.n_steps,
+                params,
+            )
+        } else {
+            ConnectivitySchedule::compute(&constellation, &stations, self.n_steps, params)
+        };
         let sched = sched.with_downtime(&constellation.downtime);
         (constellation, sched)
     }
@@ -1146,6 +1204,10 @@ impl Scenario {
         );
         if let Some(topology) = self.build_isl(&constellation) {
             stream = stream.with_isl(topology);
+        }
+        if self.link.capacity_enabled() {
+            // validate() already rejects the ISL combination
+            stream = stream.with_durations();
         }
         (constellation, stream)
     }
@@ -1214,8 +1276,9 @@ impl Scenario {
         // station network, and the config path always rebuilds planet12 —
         // the conversion stays standalone-runnable, and scenario runs pass
         // their graph/routing/spec explicitly (`app::runner::FederationRun`).
-        // Attack and robust specs ARE copied: they are plain value specs
-        // over satellite ids / the server aggregator, not topology.
+        // Attack, robust and link specs ARE copied: they are plain value
+        // specs over satellite ids / the server aggregator / the upload
+        // boundary, not topology.
         ExperimentConfig {
             n_sats: self.constellation.n_sats(),
             constellation_seed: seed,
@@ -1228,6 +1291,7 @@ impl Scenario {
             engine_mode: self.engine_mode,
             attack: self.attack.clone(),
             robust: self.robust.clone(),
+            link: self.link.clone(),
             ..Default::default()
         }
     }
@@ -1845,6 +1909,89 @@ mod tests {
         tiny.validate().unwrap();
         // the defense travels through scaling untouched
         assert_eq!(tiny.robust, Scenario::builtin("byz-iridium-66").unwrap().robust);
+    }
+
+    #[test]
+    fn link_toml_roundtrip_present_and_omitted() {
+        // the compress builtin emits the section and round-trips exactly
+        let sc = Scenario::builtin("compress-starlink-1584").unwrap();
+        let toml = sc.to_toml();
+        assert!(toml.contains("[link]"), "{toml}");
+        assert!(toml.contains("codec = \"top-k\""), "{toml}");
+        let back = Scenario::from_toml_text(&toml).unwrap();
+        assert_eq!(back.link, sc.link);
+        assert_eq!(back, sc);
+        // link-free specs emit no [link] section — pre-link scenario files
+        // stay byte-identical and parse back to the default
+        let off = Scenario::builtin("paper-fig7").unwrap();
+        assert!(!off.to_toml().contains("[link]"), "{}", off.to_toml());
+        assert_eq!(Scenario::from_toml_text(&off.to_toml()).unwrap().link, LinkSpec::default());
+    }
+
+    #[test]
+    fn compress_builtin_shape() {
+        let sc = Scenario::builtin("compress-starlink-1584").unwrap();
+        assert_eq!(sc.engine_mode, EngineMode::Streamed);
+        assert_eq!(sc.link.codec, CodecKind::TopK);
+        assert!((sc.link.topk_frac - 0.01).abs() < 1e-12);
+        assert!(sc.link.capacity_enabled());
+        // the link spec travels into the per-algorithm config
+        let cfg = sc.experiment_config(AlgorithmKind::FedBuff);
+        assert_eq!(cfg.link, sc.link);
+        cfg.validate().unwrap();
+        // and through scaling untouched
+        let scaled = sc.scaled(Some(12), Some(48));
+        assert_eq!(scaled.link, sc.link);
+        scaled.validate().unwrap();
+        // every pre-link builtin keeps the link off (trace compatibility)
+        for name in ["paper-fig7", "walker-starlink-4408", "byz-iridium-66", "isl-iridium-66"] {
+            assert!(!Scenario::builtin(name).unwrap().link.enabled(), "{name}");
+        }
+    }
+
+    #[test]
+    fn link_validate_through_scenario() {
+        let mut sc = Scenario::builtin("compress-starlink-1584").unwrap();
+        sc.validate().unwrap();
+        sc.link.topk_frac = 0.0;
+        assert!(sc.validate().is_err());
+        sc.link.topk_frac = 0.01;
+        sc.validate().unwrap();
+        // byte budgets and ISL relays cannot combine
+        sc.isl.mode = IslMode::IntraPlane;
+        assert!(sc.validate().is_err(), "capacity + ISL must be rejected");
+        // codec-only compression composes with ISLs
+        sc.link.rate_bytes_per_slot = 0;
+        sc.engine_mode = EngineMode::Streamed;
+        sc.validate().unwrap();
+        // TOML-level rejection of unknown codecs
+        assert!(Scenario::from_toml_text(
+            "[scenario]\nname = \"x\"\n[link]\ncodec = \"gzip\""
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn capacity_scenarios_build_timed_connectivity() {
+        let sc = Scenario::builtin("compress-starlink-1584").unwrap().scaled(Some(24), Some(48));
+        let (_, sched) = sc.build_schedule();
+        assert!(sched.has_durations(), "capacity on => durations recorded");
+        let (_, stream) = sc.build_stream();
+        assert!(stream.has_durations());
+        // the timed stream concatenates to the timed dense schedule
+        let collected = stream.collect_dense();
+        assert_eq!(collected.sets, sched.sets);
+        for i in 0..sched.n_steps() {
+            assert_eq!(
+                collected.contact_durations_at(i),
+                sched.contact_durations_at(i),
+                "step {i}"
+            );
+        }
+        // capacity off => no duration tracking anywhere
+        let plain = Scenario::builtin("paper-fig7").unwrap().scaled(Some(8), Some(24));
+        assert!(!plain.build_schedule().1.has_durations());
+        assert!(!plain.build_stream().1.has_durations());
     }
 
     #[test]

@@ -71,6 +71,24 @@ pub trait StepView: Sync {
     fn hop_delay_slots(&self) -> usize {
         0
     }
+
+    /// Contact durations parallel to [`Self::sats_at`] (ADR-0008): entry j
+    /// is how many of the window's sub-samples satellite `sats_at(i)[j]`
+    /// was actually visible for, i.e. the pass spans
+    /// `durations_at(i)[j] / duration_denom()` of the slot. The default
+    /// empty slice means "full slot" — views that never computed durations
+    /// charge every contact the whole slot's byte budget, which is exactly
+    /// the capacity-off behaviour. Overridden by schedules/windows built
+    /// with durations.
+    fn durations_at(&self, _i: usize) -> &[u16] {
+        &[]
+    }
+
+    /// Denominator of [`Self::durations_at`] fractions (the window's
+    /// sub-sample count). 1 when durations are not computed.
+    fn duration_denom(&self) -> u16 {
+        1
+    }
 }
 
 /// Parameters of the link model (paper §2.2 / §4.1 defaults).
@@ -129,6 +147,12 @@ pub struct ConnectivitySchedule {
     /// Packed connectivity: bit k of step i lives at
     /// bits[i * words_per_step + k/64] >> (k % 64).
     bits: Vec<u64>,
+    /// Per-step feasible-sample counts parallel to `sets` (ADR-0008):
+    /// durs[i][j] is how many sub-samples satellite `sets[i][j]` was
+    /// visible for — the contact spans `durs[i][j] / samples_per_window`
+    /// of the slot. Empty when durations were not computed (capacity-off
+    /// runs and plain [`Self::compute`]), meaning "full slot".
+    durs: Vec<Vec<u16>>,
 }
 
 impl ConnectivitySchedule {
@@ -259,7 +283,86 @@ impl ConnectivitySchedule {
                 bits[base + k / 64] |= 1u64 << (k % 64);
             }
         }
-        ConnectivitySchedule { sets, contacts, n_sats, params, words_per_step, bits }
+        ConnectivitySchedule { sets, contacts, n_sats, params, words_per_step, bits, durs: Vec::new() }
+    }
+
+    /// [`Self::compute`] plus per-contact pass durations (ADR-0008): every
+    /// admitted window also records how many of its sub-samples were
+    /// feasible, which the engine's byte-budget check scales the link rate
+    /// by. Membership is provably identical to [`Self::compute`] — the
+    /// per-satellite pass counts feasibility the same way, only without the
+    /// early exit at `need` (see [`sat_contacts_with_durs`]).
+    pub fn compute_with_durations(
+        constellation: &Constellation,
+        stations: &[GroundStation],
+        n_steps: usize,
+        params: ConnectivityParams,
+    ) -> Self {
+        let n_sats = constellation.len();
+        let need = feasible_need(&params);
+        let spw = params.samples_per_window;
+        let sin_min = params.min_elev_deg.to_radians().sin();
+        let frames: Arc<Vec<StationFrame>> = Arc::new(station_frames(stations));
+        let rots: Arc<Vec<SampleRot>> =
+            Arc::new(sample_rotations_range(0, n_steps, spw, params.t0_s));
+        let bases: Vec<OrbitBasis> = constellation.orbits.iter().map(|o| o.basis()).collect();
+
+        let pool = exec::global_pool();
+        let per_sat: Vec<Vec<(usize, u16)>> = if n_sats > 1 && pool.size() > 1 {
+            let frames = Arc::clone(&frames);
+            let rots = Arc::clone(&rots);
+            pool.scope_map(bases, move |basis| {
+                sat_contacts_with_durs(&basis, &frames, &rots, 0, n_steps, spw, sin_min, need)
+            })
+        } else {
+            bases
+                .iter()
+                .map(|basis| {
+                    sat_contacts_with_durs(basis, &frames, &rots, 0, n_steps, spw, sin_min, need)
+                })
+                .collect()
+        };
+
+        let mut sets = vec![Vec::new(); n_steps];
+        let mut durs = vec![Vec::new(); n_steps];
+        let mut contacts = vec![Vec::new(); n_sats];
+        for (k, windows) in per_sat.iter().enumerate() {
+            for &(i, dur) in windows {
+                sets[i].push(k); // k ascends, so each set stays sorted
+                durs[i].push(dur);
+                contacts[k].push(i);
+            }
+        }
+        let mut s = Self::assemble(sets, contacts, n_sats, params);
+        s.durs = durs;
+        s
+    }
+
+    /// Attach per-contact durations computed elsewhere (the streamed
+    /// bridge, [`crate::connectivity::ConnectivityStream::collect_dense`]).
+    /// Shapes must mirror `sets` exactly.
+    pub(crate) fn set_durations(&mut self, durs: Vec<Vec<u16>>) {
+        assert_eq!(durs.len(), self.sets.len(), "durations cover a different horizon");
+        for (set, ds) in self.sets.iter().zip(durs.iter()) {
+            assert_eq!(ds.len(), set.len(), "durations desynchronized from sets");
+        }
+        self.durs = durs;
+    }
+
+    /// Were per-contact durations computed for this schedule?
+    pub fn has_durations(&self) -> bool {
+        !self.durs.is_empty()
+    }
+
+    /// Pass durations parallel to [`Self::sats_at`] — empty when the
+    /// schedule was built without durations (full-slot capacity).
+    #[inline]
+    pub fn contact_durations_at(&self, i: usize) -> &[u16] {
+        if self.durs.is_empty() {
+            &[]
+        } else {
+            &self.durs[i]
+        }
     }
 
     /// Number of time indexes the schedule covers.
@@ -330,12 +433,24 @@ impl ConnectivitySchedule {
     /// converges.
     pub fn with_dropout(&self, p: f64, rng: &mut crate::rng::Rng) -> ConnectivitySchedule {
         assert!((0.0..=1.0).contains(&p));
-        let sets: Vec<Vec<usize>> = self
-            .sets
-            .iter()
-            .map(|set| set.iter().copied().filter(|_| !rng.gen_bool(p)).collect())
-            .collect();
-        Self::from_sets_with_params(sets, self.n_sats, self.params.clone())
+        let keep_durs = self.has_durations();
+        let mut durs = if keep_durs { vec![Vec::new(); self.sets.len()] } else { Vec::new() };
+        let mut sets: Vec<Vec<usize>> = Vec::with_capacity(self.sets.len());
+        for (i, set) in self.sets.iter().enumerate() {
+            let mut kept = Vec::new();
+            for (j, &k) in set.iter().enumerate() {
+                if !rng.gen_bool(p) {
+                    kept.push(k);
+                    if keep_durs {
+                        durs[i].push(self.durs[i][j]);
+                    }
+                }
+            }
+            sets.push(kept);
+        }
+        let mut s = Self::from_sets_with_params(sets, self.n_sats, self.params.clone());
+        s.durs = durs;
+        s
     }
 
     /// Scheduled-outage injection: remove every contact a
@@ -347,18 +462,24 @@ impl ConnectivitySchedule {
         if windows.is_empty() {
             return self.clone();
         }
-        let sets: Vec<Vec<usize>> = self
-            .sets
-            .iter()
-            .enumerate()
-            .map(|(i, set)| {
-                set.iter()
-                    .copied()
-                    .filter(|&k| !windows.iter().any(|w| w.sat == k && w.covers(i)))
-                    .collect()
-            })
-            .collect();
-        Self::from_sets_with_params(sets, self.n_sats, self.params.clone())
+        let keep_durs = self.has_durations();
+        let mut durs = if keep_durs { vec![Vec::new(); self.sets.len()] } else { Vec::new() };
+        let mut sets: Vec<Vec<usize>> = Vec::with_capacity(self.sets.len());
+        for (i, set) in self.sets.iter().enumerate() {
+            let mut kept = Vec::new();
+            for (j, &k) in set.iter().enumerate() {
+                if !windows.iter().any(|w| w.sat == k && w.covers(i)) {
+                    kept.push(k);
+                    if keep_durs {
+                        durs[i].push(self.durs[i][j]);
+                    }
+                }
+            }
+            sets.push(kept);
+        }
+        let mut s = Self::from_sets_with_params(sets, self.n_sats, self.params.clone());
+        s.durs = durs;
+        s
     }
 
     /// Serialize as CSV lines `i,k1;k2;...` (one row per time index).
@@ -383,6 +504,14 @@ impl StepView for ConnectivitySchedule {
 
     fn sats_at(&self, i: usize) -> &[usize] {
         ConnectivitySchedule::sats_at(self, i)
+    }
+
+    fn durations_at(&self, i: usize) -> &[u16] {
+        self.contact_durations_at(i)
+    }
+
+    fn duration_denom(&self) -> u16 {
+        self.params.samples_per_window as u16
     }
 }
 
@@ -479,6 +608,51 @@ pub(crate) fn sat_contacts(
         }
         if feasible >= need {
             out.push(step0 + l);
+        }
+    }
+    out
+}
+
+/// Connected windows of one satellite with their pass durations over steps
+/// `step0..step0 + len`: `(absolute step, feasible sub-sample count)` pairs,
+/// ascending by step — the byte-budget primitive (ADR-0008). A window is
+/// emitted iff [`sat_contacts`] would emit it: the feasibility count is
+/// computed identically, just without the early exit at `need`, which
+/// cannot change the ≥-`need` decision (the same argument documented on
+/// [`sat_station_attr`]). The count is therefore always in
+/// `need..=samples_per_window`, so the capacity fraction
+/// `dur / samples_per_window` is at least `min_feasible_frac`.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sat_contacts_with_durs(
+    basis: &OrbitBasis,
+    frames: &[StationFrame],
+    rots: &[SampleRot],
+    step0: usize,
+    len: usize,
+    samples_per_window: usize,
+    sin_min: f64,
+    need: usize,
+) -> Vec<(usize, u16)> {
+    let prefilter = sin_min > 0.0;
+    let mut out = Vec::new();
+    for l in 0..len {
+        let mut feasible = 0usize;
+        for s in 0..samples_per_window {
+            let (t, sin_t, cos_t) = rots[l * samples_per_window + s];
+            let p = basis.position_eci(t);
+            let e = crate::orbit::eci_to_ecef_rot(&p, sin_t, cos_t);
+            for f in frames {
+                if prefilter && f.up.dot(&e) < f.up_dot_pos {
+                    continue; // below this station's horizon plane
+                }
+                if crate::orbit::visible_from_frame(&e, f, sin_min) {
+                    feasible += 1;
+                    break; // any station suffices for this sample
+                }
+            }
+        }
+        if feasible >= need {
+            out.push((step0 + l, feasible as u16));
         }
     }
     out
@@ -776,6 +950,74 @@ mod tests {
                 assert!((st as usize) < gs.len());
             }
         }
+    }
+
+    #[test]
+    fn durations_cover_exactly_the_scheduled_contacts() {
+        // compute_with_durations must admit precisely the windows compute
+        // admits (same feasibility count, no early exit), with every
+        // duration in need..=samples_per_window
+        let c = planet_labs_like(14, 0);
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams::default();
+        let need = feasible_need(&params);
+        let spw = params.samples_per_window;
+        let plain = ConnectivitySchedule::compute(&c, &gs, 48, params.clone());
+        let timed = ConnectivitySchedule::compute_with_durations(&c, &gs, 48, params);
+        assert!(!plain.has_durations());
+        assert!(timed.has_durations());
+        assert_eq!(timed.sets, plain.sets);
+        assert_eq!(timed.contacts, plain.contacts);
+        for i in 0..48 {
+            let durs = timed.contact_durations_at(i);
+            assert_eq!(durs.len(), timed.sets[i].len());
+            for &d in durs {
+                assert!((need..=spw).contains(&(d as usize)), "dur {d} out of range");
+            }
+            // the StepView surface agrees with the inherent accessors
+            assert_eq!(StepView::durations_at(&timed, i), durs);
+            assert!(StepView::durations_at(&plain, i).is_empty());
+        }
+        assert_eq!(StepView::duration_denom(&timed), spw as u16);
+    }
+
+    #[test]
+    fn derived_schedules_preserve_durations_of_surviving_contacts() {
+        let c = planet_labs_like(12, 0);
+        let gs = planet_ground_stations();
+        let s = ConnectivitySchedule::compute_with_durations(
+            &c,
+            &gs,
+            48,
+            ConnectivityParams::default(),
+        );
+        // downtime: surviving contacts keep their exact duration, in order
+        let down = s.with_downtime(&[DowntimeWindow { sat: 0, from_step: 0, until_step: 48 }]);
+        assert!(down.has_durations());
+        for i in 0..48 {
+            let expect: Vec<u16> = s.sets[i]
+                .iter()
+                .zip(s.contact_durations_at(i))
+                .filter(|(&k, _)| k != 0)
+                .map(|(_, &d)| d)
+                .collect();
+            assert_eq!(down.contact_durations_at(i), &expect[..], "step {i}");
+        }
+        // dropout: every surviving (sat, dur) pair existed in the original
+        let mut rng = crate::rng::Rng::new(9);
+        let dropped = s.with_dropout(0.5, &mut rng);
+        assert!(dropped.has_durations());
+        for i in 0..48 {
+            for (&k, &d) in dropped.sets[i].iter().zip(dropped.contact_durations_at(i)) {
+                let j = s.sets[i].iter().position(|&x| x == k).expect("invented contact");
+                assert_eq!(s.contact_durations_at(i)[j], d, "step {i} sat {k}");
+            }
+        }
+        // a schedule without durations stays without them through deriving
+        let plain = ConnectivitySchedule::compute(&c, &gs, 48, ConnectivityParams::default());
+        assert!(!plain
+            .with_downtime(&[DowntimeWindow { sat: 1, from_step: 2, until_step: 5 }])
+            .has_durations());
     }
 
     #[test]

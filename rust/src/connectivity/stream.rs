@@ -35,8 +35,8 @@
 
 use super::graph::{IslTopology, RouteScratch};
 use super::schedule::{
-    feasible_need, sample_rotations_into, sat_contacts, ConnectivityParams, ConnectivitySchedule,
-    SampleRot, StepView,
+    feasible_need, sample_rotations_into, sat_contacts, sat_contacts_with_durs,
+    ConnectivityParams, ConnectivitySchedule, SampleRot, StepView,
 };
 use crate::exec;
 use crate::orbit::{station_frames, Constellation, GroundStation, OrbitBasis, StationFrame};
@@ -59,6 +59,10 @@ pub struct ConnectivityStream {
     /// with its routed reach sets computed, bit-identical to the dense
     /// [`super::ContactGraph`] over the same schedule.
     isl: Option<IslTopology>,
+    /// Compute per-contact pass durations (ADR-0008)? Mutually exclusive
+    /// with ISL routing — relayed reach sets have no single pass duration,
+    /// so routed streams always charge full-slot capacity.
+    durations: bool,
 }
 
 impl ConnectivityStream {
@@ -90,6 +94,32 @@ impl ConnectivityStream {
             chunk_len,
             down_by_sat,
             isl: None,
+            durations: false,
+        }
+    }
+
+    /// Compute per-contact pass durations in every chunk from now on
+    /// (builder style, like [`Self::with_isl`]). Panics when combined with
+    /// ISL routing — a relayed reach set has no single pass duration
+    /// (ADR-0008), so capacity-limited scenarios must be unrouted.
+    pub fn with_durations(mut self) -> Self {
+        assert!(self.isl.is_none(), "pass durations and ISL routing are mutually exclusive");
+        self.durations = true;
+        self
+    }
+
+    /// Does the stream compute per-contact pass durations?
+    pub fn has_durations(&self) -> bool {
+        self.durations
+    }
+
+    /// Denominator of the per-contact duration fractions (1 when the
+    /// stream computes no durations).
+    pub fn duration_denom(&self) -> u16 {
+        if self.durations {
+            self.params.samples_per_window as u16
+        } else {
+            1
         }
     }
 
@@ -102,6 +132,7 @@ impl ConnectivityStream {
             self.n_sats(),
             "ISL topology covers a different fleet than the stream"
         );
+        assert!(!self.durations, "pass durations and ISL routing are mutually exclusive");
         self.isl = Some(topology);
         self
     }
@@ -175,6 +206,41 @@ impl ConnectivityStream {
         sample_rotations_into(&mut out.rots, start, len, spw, self.params.t0_s);
         let rots = &out.rots;
         let threads = exec::default_parallelism();
+        if self.durations {
+            // timed fill: same membership as the plain path (the duration
+            // pass counts feasibility identically, minus the early exit)
+            let per_sat: Vec<Vec<(usize, u16)>> =
+                exec::scope_chunks(&self.bases, threads, |k0, shard| {
+                    shard
+                        .iter()
+                        .enumerate()
+                        .map(|(j, basis)| {
+                            let k = k0 + j;
+                            let mut cs = sat_contacts_with_durs(
+                                basis, &self.frames, rots, start, len, spw, sin_min, need,
+                            );
+                            let down = &self.down_by_sat[k];
+                            if !down.is_empty() {
+                                cs.retain(|&(i, _)| {
+                                    !down.iter().any(|&(from, until)| (from..until).contains(&i))
+                                });
+                            }
+                            cs
+                        })
+                        .collect()
+                });
+            out.reset(start, len, self.n_sats());
+            out.timed = true;
+            for (k, cs) in per_sat.iter().enumerate() {
+                for &(i, d) in cs {
+                    out.push_contact(k, i);
+                    out.durs[i - start].push(d);
+                }
+            }
+            out.finish();
+            out.clear_routing();
+            return;
+        }
         let per_sat: Vec<Vec<usize>> = exec::scope_chunks(&self.bases, threads, |k0, shard| {
             shard
                 .iter()
@@ -211,14 +277,23 @@ impl ConnectivityStream {
     /// small scenarios (defeats the memory bound; prefer the cursor walk).
     pub fn collect_dense(&self) -> ConnectivitySchedule {
         let mut sets: Vec<Vec<usize>> = Vec::with_capacity(self.n_steps);
+        let mut durs: Vec<Vec<u16>> = Vec::new();
         let mut chunk = ScheduleChunk::default();
         for c in 0..self.n_chunks() {
             self.fill_chunk(c, &mut chunk);
             for i in chunk.start()..chunk.end() {
                 sets.push(chunk.sats_at(i).to_vec());
+                if self.durations {
+                    durs.push(chunk.durations_at(i).to_vec());
+                }
             }
         }
-        ConnectivitySchedule::from_sets_with_params(sets, self.n_sats(), self.params.clone())
+        let mut s =
+            ConnectivitySchedule::from_sets_with_params(sets, self.n_sats(), self.params.clone());
+        if self.durations {
+            s.set_durations(durs);
+        }
+        s
     }
 }
 
@@ -255,6 +330,12 @@ pub struct ScheduleChunk {
     hop_delay: usize,
     /// Recycled BFS scratch for the per-step routing.
     route_scratch: RouteScratch,
+    /// True when the owning stream filled this chunk with pass durations
+    /// (`durs` below is then parallel to `sets`).
+    timed: bool,
+    /// durs[l] = feasible sub-sample counts parallel to `sets[l]`
+    /// (ADR-0008). Recycled like `sets`.
+    durs: Vec<Vec<u16>>,
 }
 
 impl ScheduleChunk {
@@ -328,6 +409,14 @@ impl ScheduleChunk {
         self.bits.clear();
         self.bits.resize(len * self.words_per_step, 0);
         self.active.clear();
+        self.timed = false;
+        if self.durs.len() > len {
+            self.durs.truncate(len);
+        }
+        for d in &mut self.durs {
+            d.clear();
+        }
+        self.durs.resize_with(len, Vec::new);
     }
 
     /// Record a contact; callers push in ascending (k, i) order so each
@@ -402,6 +491,22 @@ impl ScheduleChunk {
         }
     }
 
+    /// Was this fill computed with pass durations?
+    pub fn timed(&self) -> bool {
+        self.timed
+    }
+
+    /// Pass durations parallel to [`Self::sats_at`] — empty when the
+    /// owning stream computes no durations (full-slot capacity).
+    pub fn durations_at(&self, i: usize) -> &[u16] {
+        assert!(self.contains(i), "step {i} outside chunk [{}, {})", self.start, self.end());
+        if self.timed {
+            &self.durs[i - self.start]
+        } else {
+            &[]
+        }
+    }
+
     /// The engine's event list for this chunk, routed or not: a step has a
     /// reachable satellite iff it has a direct contact (relays need a
     /// ground-visible sink, and every sink is itself reachable), so the
@@ -429,6 +534,12 @@ pub struct WindowView {
     /// Relay latency per hop in slots, copied from the owning stream so the
     /// forecast can discount relayed contacts (0 without ISLs).
     hop_delay: usize,
+    /// Pass durations parallel to `sets` (empty inner vecs when the stream
+    /// computes no durations — the [`StepView::durations_at`] full-slot
+    /// default).
+    durs: Vec<Vec<u16>>,
+    /// Denominator of the duration fractions (1 without durations).
+    denom: u16,
 }
 
 impl WindowView {
@@ -467,6 +578,14 @@ impl StepView for WindowView {
 
     fn hop_delay_slots(&self) -> usize {
         self.hop_delay
+    }
+
+    fn durations_at(&self, i: usize) -> &[u16] {
+        &self.durs[i - self.start]
+    }
+
+    fn duration_denom(&self) -> u16 {
+        self.denom
     }
 }
 
@@ -527,21 +646,23 @@ impl<'a> StreamCursor<'a> {
         let end = (start + len).min(self.stream.n_steps());
         let mut sets = Vec::with_capacity(end.saturating_sub(start));
         let mut hops = Vec::with_capacity(end.saturating_sub(start));
+        let mut durs = Vec::with_capacity(end.saturating_sub(start));
         for i in start..end {
             let c = self.stream.chunk_of(i);
-            let (set, hop) = if self.current_idx == Some(c) {
+            let (set, hop, dur) = if self.current_idx == Some(c) {
                 let (s, h) = self.current.contacts_at(i);
-                (s.to_vec(), h.to_vec())
+                (s.to_vec(), h.to_vec(), self.current.durations_at(i).to_vec())
             } else {
                 if self.spare_idx != Some(c) {
                     self.stream.fill_chunk(c, &mut self.spare);
                     self.spare_idx = Some(c);
                 }
                 let (s, h) = self.spare.contacts_at(i);
-                (s.to_vec(), h.to_vec())
+                (s.to_vec(), h.to_vec(), self.spare.durations_at(i).to_vec())
             };
             sets.push(set);
             hops.push(hop);
+            durs.push(dur);
         }
         WindowView {
             start,
@@ -550,6 +671,8 @@ impl<'a> StreamCursor<'a> {
             sets,
             hops,
             hop_delay: self.stream.hop_delay_slots(),
+            durs,
+            denom: self.stream.duration_denom(),
         }
     }
 }
@@ -732,6 +855,83 @@ mod tests {
             assert!(h.is_empty());
         }
         assert_eq!(chunk.events(), chunk.active_steps());
+    }
+
+    #[test]
+    fn timed_chunks_match_dense_durations_bitwise() {
+        // same membership as the untimed stream, and the duration of every
+        // contact equals the dense compute_with_durations value — across
+        // chunk boundaries and with downtime filtering applied
+        let c = planet_labs_like(12, 0)
+            .with_downtime(vec![DowntimeWindow { sat: 2, from_step: 10, until_step: 30 }]);
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams::default();
+        let dense = ConnectivitySchedule::compute_with_durations(&c, &gs, 48, params.clone())
+            .with_downtime(&c.downtime);
+        let stream =
+            ConnectivityStream::new(&c, &gs, 48, params, 13).with_durations();
+        assert!(stream.has_durations());
+        assert_eq!(stream.duration_denom(), 10);
+        let mut chunk = ScheduleChunk::default();
+        for ci in 0..stream.n_chunks() {
+            stream.fill_chunk(ci, &mut chunk);
+            assert!(chunk.timed());
+            for i in chunk.start()..chunk.end() {
+                assert_eq!(chunk.sats_at(i), dense.sats_at(i), "sets at step {i}");
+                assert_eq!(
+                    chunk.durations_at(i),
+                    dense.contact_durations_at(i),
+                    "durations at step {i}"
+                );
+            }
+        }
+        // collect_dense carries the durations through
+        let collected = stream.collect_dense();
+        assert!(collected.has_durations());
+        for i in 0..48 {
+            assert_eq!(collected.contact_durations_at(i), dense.contact_durations_at(i));
+        }
+        // cursor windows expose them on the StepView surface
+        let mut cur = StreamCursor::new(&stream);
+        cur.seek(0);
+        let w = cur.window(8, 20);
+        assert_eq!(StepView::duration_denom(&w), 10);
+        for i in 8..28 {
+            assert_eq!(StepView::durations_at(&w, i), dense.contact_durations_at(i));
+        }
+        // an untimed stream's chunks and windows report full-slot defaults
+        let plain = ConnectivityStream::new(&c, &gs, 48, ConnectivityParams::default(), 13);
+        let ch = plain.chunk(0);
+        assert!(!ch.timed());
+        assert!(ch.durations_at(0).is_empty());
+        let mut cur = StreamCursor::new(&plain);
+        cur.seek(0);
+        let w = cur.window(0, 8);
+        assert!(StepView::durations_at(&w, 0).is_empty());
+        assert_eq!(StepView::duration_denom(&w), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "mutually exclusive")]
+    fn durations_refuse_isl_routing() {
+        use super::super::graph::IslParams;
+        let c = planet_labs_like(6, 0);
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams::default();
+        let topology = IslTopology::new(
+            &c,
+            IslParams {
+                max_hops: 2,
+                hop_delay_slots: 1,
+                cross_plane: true,
+                max_range_m: 4000e3,
+                t0_s: params.t0_s,
+            },
+        )
+        .unwrap();
+        let _ = ConnectivityStream::new(&c, &gs, 24, params, 12)
+            .with_durations()
+            .with_isl(topology);
     }
 
     #[test]

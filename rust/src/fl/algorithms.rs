@@ -120,7 +120,7 @@ mod tests {
     fn buffer_with(sats: &[usize]) -> Buffer {
         let mut b = Buffer::new();
         for &s in sats {
-            b.push(GradientEntry { sat: s, staleness: 0, grad: vec![], n_samples: 1 });
+            b.push(GradientEntry { sat: s, staleness: 0, grad: Vec::new().into(), n_samples: 1 });
         }
         b
     }

@@ -8,6 +8,8 @@
 //! ids actually buffered (never an id-indexed table), `n_sats` is O(1), and
 //! no operation allocates or scans past the local buffer's entries.
 
+use crate::fl::codec::Update;
+
 /// One buffered local update (g_k, s_k). Staleness is fixed at receive time
 /// (Algorithm 1: s_k = i_g − i_{g,k} with the *current* i_g).
 #[derive(Clone, Debug)]
@@ -16,8 +18,9 @@ pub struct GradientEntry {
     pub sat: usize,
     /// s_k, fixed when the upload is received.
     pub staleness: usize,
-    /// flat local update g_k = w_k^E − w_k^0
-    pub grad: Vec<f32>,
+    /// flat local update g_k = w_k^E − w_k^0, in the codec's wire form
+    /// (dense, or top-k sparse — ADR-0008)
+    pub grad: Update,
     /// number of local samples m_k (available for size-weighted variants)
     pub n_samples: usize,
 }
@@ -91,7 +94,7 @@ mod tests {
     use super::*;
 
     fn entry(sat: usize, s: usize) -> GradientEntry {
-        GradientEntry { sat, staleness: s, grad: vec![0.0; 4], n_samples: 10 }
+        GradientEntry { sat, staleness: s, grad: vec![0.0; 4].into(), n_samples: 10 }
     }
 
     #[test]

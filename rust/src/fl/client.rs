@@ -39,6 +39,11 @@ pub struct SatClient {
     pub pending: Option<Vec<f32>>,
     /// m_k
     pub n_samples: usize,
+    /// error-feedback residual carried by lossy upload codecs (ADR-0008):
+    /// the part of past updates a `top-k` / `quant-q8` encode did not
+    /// transmit, added back before the next encode. Empty until the first
+    /// lossy encode (and always empty when the codec is off).
+    pub residual: Vec<f32>,
 }
 
 impl SatClient {
@@ -52,6 +57,7 @@ impl SatClient {
             ready_at: 0,
             pending: None,
             n_samples,
+            residual: Vec::new(),
         }
     }
 

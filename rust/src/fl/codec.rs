@@ -1,0 +1,552 @@
+//! Gradient compression at the upload boundary (ADR-0008): a pluggable
+//! `UpdateCodec` between `SatClient::upload` and the adversary/federation,
+//! plus the `[link]` byte-budget spec that makes contacts carry a finite
+//! capacity (rate × pass duration) instead of treating uploads as free.
+//!
+//! The codec sits at the *same* single boundary the PR 6 adversary uses,
+//! with a fixed ordering — encode first, adversary second — so poisoning
+//! and link faults act on what is actually transmitted. Payloads flow as
+//! [`Update`]: dense `Vec<f32>` (identity / quantized) or `(indices,
+//! values)` sparse pairs (top-k), which the aggregators consume without
+//! densifying (sparse accumulate on `CpuAggregator`, lazy per-coordinate
+//! reads in `fl/robust.rs`).
+//!
+//! Determinism contract, mirroring ADR-0007: the stochastic quantizer
+//! draws from its own xoshiro stream `Rng::new(run_seed ^ CODEC_STREAM)`,
+//! created only when a codec is enabled, and draws happen only at contact
+//! steps — so codec-on runs are trace-bit-identical across Dense /
+//! ContactList / Streamed, and codec-off runs consume no codec randomness
+//! at all (bit-identical to a build without this module). Top-k keeps the
+//! exact f32 bits of the coordinates it selects and holds the unselected
+//! remainder as an error-feedback residual on the client, so
+//! `decoded + residual` reconstructs the compensated update exactly.
+
+use crate::cfg::toml::{TomlDoc, TomlValue};
+use crate::rng::Rng;
+use anyhow::{bail, Context, Result};
+
+/// Stream-id XOR'd into the run seed for the codec RNG, keeping its draws
+/// independent of the training (`split(i+1)`), planner (`^ 0x5EED`), data
+/// (`^ 0xA11CE` / `^ 0xDA7A`) and adversary (`^ 0xBAD5_EED5`) streams.
+pub const CODEC_STREAM: u64 = 0xC0DE_C0DE;
+
+/// One transmitted model update. Dense is the uncompressed (and quantized)
+/// wire form; Sparse is the top-k `(indices, values)` pair with indices
+/// strictly ascending. `Sparse` keeps its logical dimension so dimension
+/// checks and lazy per-coordinate reads need no side channel.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Update {
+    /// All `d` coordinates, in order.
+    Dense(Vec<f32>),
+    /// `(indices, values)` pairs over a `dim`-sized vector; `idx` is
+    /// strictly ascending and `val` is parallel to it. Coordinates not
+    /// listed are exactly zero.
+    Sparse { dim: usize, idx: Vec<u32>, val: Vec<f32> },
+}
+
+impl Update {
+    /// Logical dimension (what a dense view would have). Named `len` so
+    /// existing `entry.grad.len()` dimension checks read unchanged.
+    pub fn len(&self) -> usize {
+        match self {
+            Update::Dense(v) => v.len(),
+            Update::Sparse { dim, .. } => *dim,
+        }
+    }
+
+    /// True when the logical dimension is zero.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Stored (transmitted) coordinates: `d` for dense, `nnz` for sparse.
+    pub fn nnz(&self) -> usize {
+        match self {
+            Update::Dense(v) => v.len(),
+            Update::Sparse { val, .. } => val.len(),
+        }
+    }
+
+    /// Coordinate `e` of the logical vector (0.0 for unlisted sparse
+    /// coordinates). `O(1)` dense, `O(log nnz)` sparse — the lazy
+    /// densify primitive the robust aggregators use per coordinate.
+    pub fn at(&self, e: usize) -> f32 {
+        match self {
+            Update::Dense(v) => v[e],
+            Update::Sparse { idx, val, .. } => match idx.binary_search(&(e as u32)) {
+                Ok(p) => val[p],
+                Err(_) => 0.0,
+            },
+        }
+    }
+
+    /// The raw stored values (dense coordinates, or sparse `val`). The
+    /// adversary's transforms operate here: on the wire payload, whatever
+    /// its encoding — matching the codec→adversary boundary ordering.
+    pub fn values(&self) -> &[f32] {
+        match self {
+            Update::Dense(v) => v,
+            Update::Sparse { val, .. } => val,
+        }
+    }
+
+    /// Mutable view of the stored values (see [`Self::values`]).
+    pub fn values_mut(&mut self) -> &mut [f32] {
+        match self {
+            Update::Dense(v) => v,
+            Update::Sparse { val, .. } => val,
+        }
+    }
+
+    /// Borrow the dense coordinate slice, if this is a dense update.
+    pub fn as_dense(&self) -> Option<&[f32]> {
+        match self {
+            Update::Dense(v) => Some(v),
+            Update::Sparse { .. } => None,
+        }
+    }
+
+    /// Materialize the full `len()`-sized vector (sparse gaps are 0.0).
+    pub fn to_dense(&self) -> Vec<f32> {
+        match self {
+            Update::Dense(v) => v.clone(),
+            Update::Sparse { dim, idx, val } => {
+                let mut out = vec![0.0f32; *dim];
+                for (&j, &v) in idx.iter().zip(val.iter()) {
+                    out[j as usize] = v;
+                }
+                out
+            }
+        }
+    }
+
+    /// Squared euclidean distance in f64, per-coordinate in index order —
+    /// the multi-Krum scoring primitive. The dense×dense arm is the exact
+    /// loop the PR 6 engine ran, so scores (and selections) are
+    /// bit-identical for uncompressed runs.
+    pub fn sq_dist(&self, other: &Update) -> f64 {
+        match (self, other) {
+            (Update::Dense(a), Update::Dense(b)) => a
+                .iter()
+                .zip(b.iter())
+                .map(|(x, y)| {
+                    let d = *x as f64 - *y as f64;
+                    d * d
+                })
+                .sum(),
+            _ => (0..self.len().min(other.len()))
+                .map(|e| {
+                    let d = self.at(e) as f64 - other.at(e) as f64;
+                    d * d
+                })
+                .sum(),
+        }
+    }
+}
+
+impl From<Vec<f32>> for Update {
+    fn from(v: Vec<f32>) -> Update {
+        Update::Dense(v)
+    }
+}
+
+/// Which codec runs at the upload boundary (the `[link]` TOML `codec`
+/// key). `Identity` transmits the raw f32 payload untouched.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CodecKind {
+    /// No compression: the dense gradient crosses the link as-is.
+    #[default]
+    Identity,
+    /// Top-k magnitude sparsification with error-feedback residuals held
+    /// on the satellite (`topk_frac` selects `k = ceil(frac · d)`).
+    TopK,
+    /// 8-bit stochastic quantization (per-update max-abs scale), drawn
+    /// from the codec stream; the quantization error feeds the residual.
+    QuantQ8,
+}
+
+impl CodecKind {
+    /// Parse the TOML/CLI spelling.
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "identity" | "none" => CodecKind::Identity,
+            "top-k" | "topk" | "top_k" => CodecKind::TopK,
+            "quant-q8" | "quant_q8" | "q8" => CodecKind::QuantQ8,
+            other => bail!("unknown codec {other:?} (identity | top-k | quant-q8)"),
+        })
+    }
+
+    /// Canonical lowercase name (inverse of [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecKind::Identity => "identity",
+            CodecKind::TopK => "top-k",
+            CodecKind::QuantQ8 => "quant-q8",
+        }
+    }
+}
+
+/// The `[link]` TOML section: per-contact byte budget and upload codec.
+/// Omitted ⇒ default ⇒ disabled ⇒ byte-identical old specs and
+/// bit-identical uncompressed, capacity-free runs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LinkSpec {
+    /// Bytes one link moves in one full time slot (rate × slot length).
+    /// A contact spanning a fraction of the slot carries that fraction of
+    /// this budget. `0` = unlimited (the pre-PR 7 instantaneous model).
+    pub rate_bytes_per_slot: u64,
+    /// Upload codec at the boundary (encode runs before the adversary).
+    pub codec: CodecKind,
+    /// Fraction of coordinates `top-k` keeps, in `(0, 1]`.
+    pub topk_frac: f64,
+}
+
+impl Default for LinkSpec {
+    fn default() -> Self {
+        LinkSpec { rate_bytes_per_slot: 0, codec: CodecKind::Identity, topk_frac: 0.01 }
+    }
+}
+
+impl LinkSpec {
+    /// Whether this spec changes anything at all. Disabled ⇒ the engine
+    /// builds no [`Codec`], skips every capacity check, and consumes no
+    /// codec randomness.
+    pub fn enabled(&self) -> bool {
+        self.rate_bytes_per_slot > 0 || self.codec != CodecKind::Identity
+    }
+
+    /// Whether contacts carry a finite byte budget (uploads can defer).
+    pub fn capacity_enabled(&self) -> bool {
+        self.rate_bytes_per_slot > 0
+    }
+
+    /// Top-k keep count for a `d`-dimensional model: `ceil(frac · d)`,
+    /// at least 1, at most `d`.
+    pub fn topk_k(&self, d: usize) -> usize {
+        ((self.topk_frac * d as f64).ceil() as usize).clamp(1, d.max(1))
+    }
+
+    /// Nominal wire size of one encoded update of dimension `d`: the
+    /// number the capacity check charges against the contact budget.
+    /// Dense f32 = 4 bytes/coord; sparse = 8 bytes per kept pair
+    /// (u32 index + f32 value); q8 = 1 byte/coord + a 4-byte scale.
+    pub fn payload_bytes(&self, d: usize) -> u64 {
+        match self.codec {
+            CodecKind::Identity => 4 * d as u64,
+            CodecKind::TopK => 8 * self.topk_k(d) as u64,
+            CodecKind::QuantQ8 => d as u64 + 4,
+        }
+    }
+
+    /// Reject self-inconsistent specs.
+    pub fn validate(&self) -> Result<()> {
+        if !self.topk_frac.is_finite() || self.topk_frac <= 0.0 || self.topk_frac > 1.0 {
+            bail!("[link] topk_frac must be in (0, 1], got {}", self.topk_frac);
+        }
+        Ok(())
+    }
+
+    /// Emit the `[link]` TOML section (callers skip the call when
+    /// `!enabled()` so pre-link specs stay byte-identical).
+    pub fn emit_toml(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = writeln!(out, "\n[link]");
+        let _ = writeln!(out, "rate_bytes_per_slot = {}", self.rate_bytes_per_slot);
+        let _ = writeln!(out, "codec = \"{}\"", self.codec.name());
+        let _ = writeln!(out, "topk_frac = {}", self.topk_frac);
+    }
+
+    /// Parse the `[link]` section; `Ok(None)` when absent (callers keep
+    /// their default) — the shared scenario/experiment-config idiom.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Option<LinkSpec>> {
+        if doc.get("link").is_none() {
+            return Ok(None);
+        }
+        let get = |key: &str| -> Option<&TomlValue> { doc.get("link").and_then(|s| s.get(key)) };
+        let mut spec = LinkSpec::default();
+        if let Some(v) = get("rate_bytes_per_slot") {
+            let raw = v.as_int().context("[link] rate_bytes_per_slot must be an integer")?;
+            spec.rate_bytes_per_slot =
+                u64::try_from(raw).context("[link] rate_bytes_per_slot must be non-negative")?;
+        }
+        if let Some(v) = get("codec") {
+            spec.codec = CodecKind::parse(v.as_str().context("[link] codec must be a string")?)?;
+        }
+        if let Some(v) = get("topk_frac") {
+            spec.topk_frac = v.as_float().context("[link] topk_frac must be a number")?;
+        }
+        Ok(Some(spec))
+    }
+}
+
+/// Live encoder owned by the engine's `RunState`, built only when
+/// [`LinkSpec::enabled`]. One instance serves the whole fleet; per-client
+/// error-feedback residuals live on `SatClient` and are passed in.
+pub struct UpdateCodec {
+    spec: LinkSpec,
+    rng: Rng,
+}
+
+impl UpdateCodec {
+    /// Build the encoder under `run_seed` (the scenario seed; the codec
+    /// stream is derived, not shared).
+    pub fn new(spec: &LinkSpec, run_seed: u64) -> UpdateCodec {
+        UpdateCodec { spec: spec.clone(), rng: Rng::new(run_seed ^ CODEC_STREAM) }
+    }
+
+    /// Encode one upload. `residual` is the calling client's error-
+    /// feedback carry (resized lazily on first use); lossy codecs add it
+    /// to the gradient before compressing and store the uncompensated
+    /// remainder back, so no signal is ever discarded — only delayed.
+    ///
+    /// `Identity` is a byte-level no-op: the gradient's f32 bits move
+    /// into the returned `Update::Dense` unchanged, the residual is never
+    /// touched, and no randomness is consumed.
+    pub fn encode(&mut self, grad: Vec<f32>, residual: &mut Vec<f32>) -> Update {
+        match self.spec.codec {
+            CodecKind::Identity => Update::Dense(grad),
+            CodecKind::TopK => self.encode_topk(grad, residual),
+            CodecKind::QuantQ8 => self.encode_q8(grad, residual),
+        }
+    }
+
+    /// Top-k: compensate (`x = grad + residual`), keep the `k` largest
+    /// magnitudes (ties broken toward the lower index — fully
+    /// deterministic, no RNG), transmit their exact f32 bits as
+    /// `(indices, values)`, and hold everything else in the residual.
+    fn encode_topk(&mut self, grad: Vec<f32>, residual: &mut Vec<f32>) -> Update {
+        let d = grad.len();
+        if residual.len() != d {
+            residual.resize(d, 0.0);
+        }
+        let mut x = grad;
+        for (xi, r) in x.iter_mut().zip(residual.iter()) {
+            *xi += *r;
+        }
+        let k = self.spec.topk_k(d);
+        let mut order: Vec<u32> = (0..d as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            x[b as usize]
+                .abs()
+                .total_cmp(&x[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        let mut idx = order[..k.min(d)].to_vec();
+        idx.sort_unstable();
+        let val: Vec<f32> = idx.iter().map(|&j| x[j as usize]).collect();
+        residual.copy_from_slice(&x);
+        for &j in &idx {
+            residual[j as usize] = 0.0;
+        }
+        Update::Sparse { dim: d, idx, val }
+    }
+
+    /// Q8: compensate, scale by the update's max-abs over 127 levels,
+    /// round stochastically (one codec-stream draw per coordinate —
+    /// skipped entirely for an all-zero update), dequantize immediately
+    /// (the wire form is `i8 × scale`, the in-memory form is the
+    /// dequantized dense vector), and carry the quantization error.
+    fn encode_q8(&mut self, grad: Vec<f32>, residual: &mut Vec<f32>) -> Update {
+        let d = grad.len();
+        if residual.len() != d {
+            residual.resize(d, 0.0);
+        }
+        let mut x = grad;
+        for (xi, r) in x.iter_mut().zip(residual.iter()) {
+            *xi += *r;
+        }
+        let mut scale = 0.0f32;
+        for &v in &x {
+            scale = scale.max(v.abs());
+        }
+        let mut deq = vec![0.0f32; d];
+        if scale > 0.0 && scale.is_finite() {
+            let s = scale / 127.0;
+            for (o, &v) in deq.iter_mut().zip(x.iter()) {
+                let t = (v / s).clamp(-127.0, 127.0);
+                let lo = t.floor();
+                let q = if (self.rng.next_f64() as f32) < t - lo { lo + 1.0 } else { lo };
+                *o = q.clamp(-127.0, 127.0) * s;
+            }
+        }
+        for ((r, &xv), &dv) in residual.iter_mut().zip(x.iter()).zip(deq.iter()) {
+            *r = xv - dv;
+        }
+        Update::Dense(deq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ramp(d: usize) -> Vec<f32> {
+        (0..d).map(|i| ((i as f32) - (d as f32) / 3.0) * 0.37).collect()
+    }
+
+    #[test]
+    fn identity_is_a_byte_level_noop() {
+        let spec = LinkSpec::default();
+        let mut codec = UpdateCodec::new(&spec, 42);
+        let grad = vec![1.5, -0.0, f32::MIN_POSITIVE, 3.25e-30];
+        let bits: Vec<u32> = grad.iter().map(|v| v.to_bits()).collect();
+        let mut residual = Vec::new();
+        let out = codec.encode(grad, &mut residual);
+        let Update::Dense(v) = out else { panic!("identity must stay dense") };
+        assert_eq!(v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(), bits);
+        assert!(residual.is_empty(), "identity must never touch the residual");
+    }
+
+    #[test]
+    fn topk_keeps_selected_bits_and_reconstructs_exactly() {
+        let spec =
+            LinkSpec { codec: CodecKind::TopK, topk_frac: 0.25, ..Default::default() };
+        let mut codec = UpdateCodec::new(&spec, 7);
+        let grad = ramp(32);
+        let mut residual = Vec::new();
+        let out = codec.encode(grad.clone(), &mut residual);
+        let Update::Sparse { dim, ref idx, ref val } = out else { panic!("topk is sparse") };
+        assert_eq!(dim, 32);
+        assert_eq!(idx.len(), 8, "k = ceil(0.25 · 32)");
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices strictly ascending");
+        // with a fresh residual, selected coordinates carry the original bits
+        for (&j, &v) in idx.iter().zip(val.iter()) {
+            assert_eq!(v.to_bits(), grad[j as usize].to_bits());
+        }
+        // error-feedback invariant: decoded + residual == original, bit-for-bit
+        let dec = out.to_dense();
+        for e in 0..32 {
+            assert_eq!(
+                (dec[e] + residual[e]).to_bits(),
+                grad[e].to_bits(),
+                "coordinate {e}: decoded + residual must reconstruct the update"
+            );
+        }
+        // second round: the compensated update is grad + residual, exactly
+        let carried = residual.clone();
+        let out2 = codec.encode(grad.clone(), &mut residual);
+        let dec2 = out2.to_dense();
+        for e in 0..32 {
+            assert_eq!(
+                (dec2[e] + residual[e]).to_bits(),
+                (grad[e] + carried[e]).to_bits(),
+                "coordinate {e}: round 2 reconstructs grad + carried residual"
+            );
+        }
+    }
+
+    #[test]
+    fn topk_selects_largest_magnitudes_with_index_ties() {
+        let spec = LinkSpec { codec: CodecKind::TopK, topk_frac: 0.5, ..Default::default() };
+        let mut codec = UpdateCodec::new(&spec, 1);
+        let mut residual = Vec::new();
+        // |…| = [3, 1, 3, 2]; k = 2 ⇒ the two 3s win, lower index first
+        let out = codec.encode(vec![-3.0, 1.0, 3.0, 2.0], &mut residual);
+        let Update::Sparse { idx, val, .. } = out else { panic!() };
+        assert_eq!(idx, vec![0, 2]);
+        assert_eq!(val, vec![-3.0, 3.0]);
+        assert_eq!(residual, vec![0.0, 1.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn q8_is_seed_stable_and_error_bounded() {
+        let spec = LinkSpec { codec: CodecKind::QuantQ8, ..Default::default() };
+        let run = |seed: u64| {
+            let mut codec = UpdateCodec::new(&spec, seed);
+            let mut residual = Vec::new();
+            let mut outs = Vec::new();
+            for r in 0..8 {
+                let grad: Vec<f32> = ramp(64).iter().map(|v| v * (r as f32 + 1.0)).collect();
+                outs.push(codec.encode(grad, &mut residual));
+            }
+            (outs, residual)
+        };
+        let (a, ra) = run(42);
+        let (b, rb) = run(42);
+        assert_eq!(a, b, "same seed ⇒ identical quantized stream");
+        assert_eq!(ra, rb);
+        let (c, _) = run(43);
+        assert_ne!(a, c, "different seed ⇒ different stochastic rounding");
+        // every quantized coordinate is within one level of the input
+        let mut codec = UpdateCodec::new(&spec, 9);
+        let mut residual = Vec::new();
+        let grad = ramp(64);
+        let out = codec.encode(grad.clone(), &mut residual);
+        let scale = grad.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+        let level = scale / 127.0;
+        for (e, (&g, &q)) in grad.iter().zip(out.values().iter()).enumerate() {
+            assert!((g - q).abs() <= level * 1.001, "coord {e}: {g} vs {q}");
+            assert_eq!(residual[e], g - q, "residual carries the quantization error");
+        }
+        // all-zero update: no draws, exact zero out (stream position must
+        // not depend on call count — verified by the identical-runs check
+        // above which includes differently-scaled rounds)
+        let out = codec.encode(vec![0.0; 16], &mut residual);
+        assert!(out.values().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn update_accessors_agree_with_dense_view() {
+        let sp = Update::Sparse { dim: 6, idx: vec![1, 4], val: vec![2.5, -1.25] };
+        assert_eq!(sp.len(), 6);
+        assert_eq!(sp.nnz(), 2);
+        assert_eq!(sp.to_dense(), vec![0.0, 2.5, 0.0, 0.0, -1.25, 0.0]);
+        for e in 0..6 {
+            assert_eq!(sp.at(e), sp.to_dense()[e]);
+        }
+        let de: Update = vec![1.0, 2.0, 3.0].into();
+        assert_eq!(de.as_dense(), Some(&[1.0, 2.0, 3.0][..]));
+        assert_eq!(de.values(), &[1.0, 2.0, 3.0]);
+        assert!(sp.as_dense().is_none());
+        // sq_dist: sparse arm agrees with the dense oracle
+        let dense_self = Update::Dense(sp.to_dense());
+        let other = Update::Dense(vec![1.0, -1.0, 0.5, 0.0, 2.0, -3.0]);
+        assert_eq!(sp.sq_dist(&other), dense_self.sq_dist(&other));
+        assert_eq!(sp.sq_dist(&sp.clone()), 0.0);
+    }
+
+    #[test]
+    fn spec_round_trips_and_validates() {
+        let spec = LinkSpec {
+            rate_bytes_per_slot: 1_500_000,
+            codec: CodecKind::TopK,
+            topk_frac: 0.01,
+        };
+        let mut s = String::new();
+        spec.emit_toml(&mut s);
+        let doc = crate::cfg::toml::parse_toml(&s).unwrap();
+        let back = LinkSpec::from_doc(&doc).unwrap().expect("section present");
+        assert_eq!(back, spec, "{s}");
+        assert!(spec.validate().is_ok());
+        assert!(spec.enabled() && spec.capacity_enabled());
+        // absent section -> None; disabled default never emits
+        let doc = crate::cfg::toml::parse_toml("[scenario]\nname = \"x\"").unwrap();
+        assert!(LinkSpec::from_doc(&doc).unwrap().is_none());
+        assert!(!LinkSpec::default().enabled());
+        // codec-only spec is enabled without a byte budget
+        let codec_only = LinkSpec { codec: CodecKind::QuantQ8, ..Default::default() };
+        assert!(codec_only.enabled() && !codec_only.capacity_enabled());
+        // rejections
+        let bad = LinkSpec { topk_frac: 0.0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = LinkSpec { topk_frac: 1.5, ..Default::default() };
+        assert!(bad.validate().is_err());
+        assert!(CodecKind::parse("gzip").is_err());
+        for k in [CodecKind::Identity, CodecKind::TopK, CodecKind::QuantQ8] {
+            assert_eq!(CodecKind::parse(k.name()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn payload_bytes_matches_the_wire_model() {
+        let d = 1000;
+        assert_eq!(LinkSpec::default().payload_bytes(d), 4000);
+        let topk = LinkSpec { codec: CodecKind::TopK, topk_frac: 0.01, ..Default::default() };
+        assert_eq!(topk.topk_k(d), 10);
+        assert_eq!(topk.payload_bytes(d), 80, "8 bytes per kept (index, value) pair");
+        let q8 = LinkSpec { codec: CodecKind::QuantQ8, ..Default::default() };
+        assert_eq!(q8.payload_bytes(d), 1004);
+        // k is at least 1 even for tiny models
+        assert_eq!(topk.topk_k(3), 1);
+    }
+}

@@ -31,6 +31,7 @@
 //! three engine modes in `sim::engine` tests and `tests/scenarios.rs`.
 
 use super::buffer::{Buffer, GradientEntry};
+use super::codec::Update;
 use super::server::{weighted_model_merge, ServerAggregator};
 use crate::cfg::toml::{TomlDoc, TomlValue};
 use crate::connectivity::{ConnectivityParams, StepView};
@@ -663,11 +664,13 @@ impl Federation {
 
     /// Receive (g_k, i_{g,k}) at gateway `g`: staleness fixed now against
     /// the global round, exactly like `GsState::receive` against its i_g.
+    /// The update arrives in whatever wire form the codec produced
+    /// (a plain `Vec<f32>` converts implicitly).
     pub fn receive(
         &mut self,
         g: usize,
         sat: usize,
-        grad: Vec<f32>,
+        grad: impl Into<Update>,
         base_round: usize,
         n_samples: usize,
     ) {
@@ -675,7 +678,7 @@ impl Federation {
         let staleness = self.round - base_round;
         let gw = &mut self.gateways[g];
         gw.uploads += 1;
-        gw.buffer.push(GradientEntry { sat, staleness, grad, n_samples });
+        gw.buffer.push(GradientEntry { sat, staleness, grad: grad.into(), n_samples });
     }
 
     /// SERVERUPDATE at gateway `g` (Eq. 4): aggregate its buffer into the
@@ -1007,6 +1010,63 @@ mod tests {
                     "contact (sat {s}, step {i}) has no attribution"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn quorum_counts_respect_the_downtime_boundary() {
+        // a satellite downed for the whole horizon is never heard, so it
+        // must not inflate any gateway's sync quorum; downing it for only
+        // part of the horizon leaves the quorum untouched (membership is
+        // "ever heard directly", not per-step)
+        use crate::connectivity::ConnectivityParams;
+        use crate::orbit::{planet_ground_stations, planet_labs_like, DowntimeWindow};
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams::default();
+        let map = StationMap::new(vec![0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1]);
+        let clean = planet_labs_like(6, 0);
+        let base = UploadRouting::build(&clean, &gs, 96, &params, &map);
+        let counts_clean = base.quorum_counts(6, |_| true);
+        // full-horizon downtime: sat 0 leaves every quorum it was in
+        let downed = planet_labs_like(6, 0)
+            .with_downtime(vec![DowntimeWindow { sat: 0, from_step: 0, until_step: 96 }]);
+        let routed = UploadRouting::build(&downed, &gs, 96, &params, &map);
+        let counts_downed = routed.quorum_counts(6, |_| true);
+        for (g, (a, b)) in counts_clean.iter().zip(counts_downed.iter()).enumerate() {
+            let was_member = base
+                .sats
+                .iter()
+                .zip(base.gws.iter())
+                .any(|(s, gw)| {
+                    s.iter().zip(gw.iter()).any(|(&sat, &x)| sat == 0 && x as usize == g)
+                });
+            assert_eq!(*b, *a - usize::from(was_member), "gateway {g}");
+        }
+        // partial downtime leaving at least one live contact: unchanged
+        let blip = planet_labs_like(6, 0)
+            .with_downtime(vec![DowntimeWindow { sat: 0, from_step: 0, until_step: 1 }]);
+        let routed = UploadRouting::build(&blip, &gs, 96, &params, &map);
+        assert_eq!(routed.quorum_counts(6, |_| true), counts_clean);
+    }
+
+    #[test]
+    fn zero_activity_reconcile_is_a_no_op_not_a_reset() {
+        // regression companion to the weighted_model_merge all-zero-weight
+        // guard: a reconcile cadence landing on a window in which no
+        // gateway aggregated must leave every replica untouched
+        let w0: Vec<f32> = (0..8).map(|i| (i as f32) * 0.5 - 1.0).collect();
+        let mut fed = Federation::new(
+            &two_gw_spec(ReconcilePolicy::Periodic { every: 1 }),
+            w0.clone(),
+            0.5,
+        );
+        for i in 0..5 {
+            fed.end_of_step(i); // cadence fires every step, nothing to merge
+        }
+        assert_eq!(fed.reconciles, 0);
+        assert_eq!(fed.global_model().as_ref(), &w0[..]);
+        for gw in &fed.gateways {
+            assert_eq!(gw.w, w0, "idle reconcile must not move a replica");
         }
     }
 

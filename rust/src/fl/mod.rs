@@ -8,6 +8,7 @@
 pub mod algorithms;
 pub mod buffer;
 pub mod client;
+pub mod codec;
 pub mod federation;
 pub mod illustrative;
 pub mod robust;
@@ -16,6 +17,7 @@ pub mod staleness;
 
 pub use algorithms::{AggregationPolicy, AsyncPolicy, FedBuffPolicy, ScheduledPolicy, SyncPolicy};
 pub use buffer::{Buffer, GradientEntry};
+pub use codec::{CodecKind, LinkSpec, Update, UpdateCodec, CODEC_STREAM};
 pub use client::{SatClient, SatPhase};
 pub use federation::{
     Federation, FederationSpec, Gateway, GatewayWindow, ReconcilePolicy, StationMap,

@@ -97,7 +97,7 @@ impl ServerAggregator for CoordinateMedian {
         check_dims(w, entries)?;
         let n = entries.len();
         blocked_apply(w, |e| {
-            let mut vals: Vec<f32> = entries.iter().map(|en| en.grad[e]).collect();
+            let mut vals: Vec<f32> = entries.iter().map(|en| en.grad.at(e)).collect();
             vals.sort_unstable_by(f32::total_cmp);
             if n % 2 == 1 {
                 vals[n / 2]
@@ -137,7 +137,7 @@ impl ServerAggregator for TrimmedMean {
         let weights = normalized_weights(&stalenesses, alpha);
         blocked_apply(w, |e| {
             let mut pairs: Vec<(f32, f32)> =
-                entries.iter().zip(weights.iter()).map(|(en, &wt)| (en.grad[e], wt)).collect();
+                entries.iter().zip(weights.iter()).map(|(en, &wt)| (en.grad.at(e), wt)).collect();
             // total order on (value, weight) so equal values with unequal
             // weights trim identically under any entry permutation
             pairs.sort_unstable_by(|a, b| {
@@ -202,15 +202,9 @@ impl ServerAggregator for MultiKrum {
                             if i == j {
                                 return 0.0;
                             }
-                            entries[i]
-                                .grad
-                                .iter()
-                                .zip(entries[j].grad.iter())
-                                .map(|(a, b)| {
-                                    let d = (*a as f64) - (*b as f64);
-                                    d * d
-                                })
-                                .sum()
+                            // dense×dense takes the exact pre-codec loop;
+                            // sparse operands read lazily per coordinate
+                            entries[i].grad.sq_dist(&entries[j].grad)
                         })
                         .collect()
                 })
@@ -242,7 +236,7 @@ impl ServerAggregator for MultiKrum {
         blocked_apply(w, |e| {
             let mut acc = 0.0f32;
             for (entry, &wt) in selected.iter().zip(weights.iter()) {
-                acc += wt * entry.grad[e];
+                acc += wt * entry.grad.at(e);
             }
             acc
         });
@@ -380,7 +374,7 @@ mod tests {
     use super::*;
 
     fn entry(sat: usize, staleness: usize, grad: Vec<f32>) -> GradientEntry {
-        GradientEntry { sat, staleness, grad, n_samples: 1 }
+        GradientEntry { sat, staleness, grad: grad.into(), n_samples: 1 }
     }
 
     #[test]
@@ -487,6 +481,52 @@ mod tests {
             let mut w = vec![7.0f32; 3];
             a.aggregate(&mut w, &[], 0.5).unwrap();
             assert_eq!(w, vec![7.0f32; 3]);
+        }
+    }
+
+    #[test]
+    fn sparse_entries_aggregate_like_their_dense_view() {
+        // lazy per-coordinate densify (ADR-0008): a sparse wire-form entry
+        // must aggregate exactly like its dense materialization in every
+        // robust family — `at(e)` reads 0.0 for unlisted coordinates and
+        // the stored bits for listed ones, so the per-coordinate math is
+        // literally the same
+        use crate::fl::codec::Update;
+        let d = super::BLOCK + 33;
+        let mut rng = crate::rng::Rng::new(17);
+        let mut entries: Vec<GradientEntry> = Vec::new();
+        for s in 0..5usize {
+            let grad = if s % 2 == 0 {
+                let idx: Vec<u32> = (0..d as u32).filter(|j| (j + s as u32) % 53 == 0).collect();
+                let val: Vec<f32> = idx.iter().map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                Update::Sparse { dim: d, idx, val }
+            } else {
+                Update::Dense((0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            };
+            entries.push(GradientEntry { sat: s, staleness: s % 2, grad, n_samples: 1 });
+        }
+        let dense: Vec<GradientEntry> = entries
+            .iter()
+            .map(|e| GradientEntry {
+                sat: e.sat,
+                staleness: e.staleness,
+                grad: e.grad.to_dense().into(),
+                n_samples: e.n_samples,
+            })
+            .collect();
+        let families: Vec<fn() -> Box<dyn ServerAggregator>> = vec![
+            || Box::new(CoordinateMedian),
+            || Box::new(TrimmedMean { trim: 0.2 }),
+            || Box::new(MultiKrum { f: 1, m: 0 }),
+        ];
+        for make in families {
+            let mut a = vec![0.25f32; d];
+            let mut b = vec![0.25f32; d];
+            make().aggregate(&mut a, &entries, 0.5).unwrap();
+            make().aggregate(&mut b, &dense, 0.5).unwrap();
+            for (x, y) in a.iter().zip(b.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
         }
     }
 

@@ -1,6 +1,7 @@
 //! Ground-station (GS) state and the Eq. (4) model update.
 
 use super::buffer::{Buffer, GradientEntry};
+use super::codec::Update;
 use super::staleness::normalized_weights;
 use anyhow::Result;
 
@@ -26,6 +27,13 @@ pub trait ServerAggregator {
 /// floating-point results to the naive per-entry loop, just ~`entries`×
 /// less write-back traffic on `w`. The dimension check is hoisted out of
 /// the hot loop entirely.
+///
+/// Sparse entries (top-k wire form, ADR-0008) take a dedicated arm inside
+/// the same blocked walk: a per-entry cursor advances through the ascending
+/// index list, touching only the `nnz` stored coordinates — never
+/// densifying. Because each coordinate still receives its adds in entry
+/// order, a sparse accumulate is bit-identical to densify-then-aggregate
+/// (the oracle the tests assert against).
 pub struct CpuAggregator;
 
 /// Elements per block of the blocked accumulate: 16 KiB of f32 — a few
@@ -53,13 +61,26 @@ impl ServerAggregator for CpuAggregator {
             );
         }
         let d = w.len();
+        // per-entry cursor into each sparse entry's ascending index list
+        let mut pos = vec![0usize; entries.len()];
         let mut lo = 0usize;
         while lo < d {
             let hi = (lo + AGG_BLOCK).min(d);
             let wb = &mut w[lo..hi];
-            for (entry, &wt) in entries.iter().zip(weights.iter()) {
-                for (wi, gi) in wb.iter_mut().zip(entry.grad[lo..hi].iter()) {
-                    *wi += wt * gi;
+            for (ei, (entry, &wt)) in entries.iter().zip(weights.iter()).enumerate() {
+                match &entry.grad {
+                    Update::Dense(g) => {
+                        for (wi, gi) in wb.iter_mut().zip(g[lo..hi].iter()) {
+                            *wi += wt * gi;
+                        }
+                    }
+                    Update::Sparse { idx, val, .. } => {
+                        let p = &mut pos[ei];
+                        while *p < idx.len() && (idx[*p] as usize) < hi {
+                            wb[idx[*p] as usize - lo] += wt * val[*p];
+                            *p += 1;
+                        }
+                    }
                 }
             }
             lo = hi;
@@ -75,7 +96,16 @@ impl ServerAggregator for CpuAggregator {
 /// with weight 1.0 comes back bit-for-bit unchanged (`0.0 + 1.0·x = x`
 /// exactly in f32), which is what makes single-gateway `Periodic`
 /// reconciliation trace-identical to `Centralized`.
+///
+/// An all-zero weight vector (every replica idle over the merge window —
+/// e.g. a reconcile cadence landing on an all-downtime window) would
+/// otherwise zero the model; the guard returns the first replica unchanged
+/// instead, so an idle reconcile is a no-op rather than a reset.
 pub fn weighted_model_merge(models: &[(&[f32], f32)], d: usize) -> Vec<f32> {
+    if !models.is_empty() && models.iter().all(|(_, wt)| *wt == 0.0) {
+        assert_eq!(models[0].0.len(), d, "merge dim mismatch");
+        return models[0].0.to_vec();
+    }
     let mut out = vec![0.0f32; d];
     for (w, wt) in models {
         assert_eq!(w.len(), d, "merge dim mismatch");
@@ -108,13 +138,21 @@ impl GsState {
         GsState { w, i_g: 0, buffer: Buffer::new(), alpha, n_aggregated: 0 }
     }
 
-    /// Receive (g_k, i_{g,k}) from satellite k: staleness fixed now.
-    pub fn receive(&mut self, sat: usize, grad: Vec<f32>, base_round: usize, n_samples: usize) {
+    /// Receive (g_k, i_{g,k}) from satellite k: staleness fixed now. The
+    /// update arrives in whatever wire form the codec produced (a plain
+    /// `Vec<f32>` converts implicitly).
+    pub fn receive(
+        &mut self,
+        sat: usize,
+        grad: impl Into<Update>,
+        base_round: usize,
+        n_samples: usize,
+    ) {
         assert!(base_round <= self.i_g, "satellite from the future");
         self.buffer.push(GradientEntry {
             sat,
             staleness: self.i_g - base_round,
-            grad,
+            grad: grad.into(),
             n_samples,
         });
     }
@@ -144,8 +182,8 @@ mod tests {
     fn cpu_aggregator_matches_manual_eq4() {
         let mut w = vec![1.0f32, 2.0, 3.0];
         let entries = vec![
-            GradientEntry { sat: 0, staleness: 0, grad: vec![1.0, 0.0, 0.0], n_samples: 1 },
-            GradientEntry { sat: 1, staleness: 1, grad: vec![0.0, 2.0, 0.0], n_samples: 1 },
+            GradientEntry { sat: 0, staleness: 0, grad: vec![1.0, 0.0, 0.0].into(), n_samples: 1 },
+            GradientEntry { sat: 1, staleness: 1, grad: vec![0.0, 2.0, 0.0].into(), n_samples: 1 },
         ];
         let alpha = 0.5;
         let c0 = 1.0f64;
@@ -175,7 +213,7 @@ mod tests {
             .map(|sat| GradientEntry {
                 sat,
                 staleness: sat % 3,
-                grad: (0..d).map(|_| rng.normal_f32(0.0, 0.1)).collect(),
+                grad: (0..d).map(|_| rng.normal_f32(0.0, 0.1)).collect::<Vec<f32>>().into(),
                 n_samples: 1,
             })
             .collect();
@@ -185,7 +223,7 @@ mod tests {
         let st: Vec<usize> = entries.iter().map(|e| e.staleness).collect();
         let weights = crate::fl::staleness::normalized_weights(&st, alpha);
         for (entry, &wt) in entries.iter().zip(weights.iter()) {
-            for (wi, gi) in w_ref.iter_mut().zip(entry.grad.iter()) {
+            for (wi, gi) in w_ref.iter_mut().zip(entry.grad.values().iter()) {
                 *wi += wt * gi;
             }
         }
@@ -193,11 +231,71 @@ mod tests {
     }
 
     #[test]
+    fn sparse_accumulate_matches_densify_then_aggregate_bitwise() {
+        // the sparse-vs-dense oracle (ADR-0008): mixed dense + sparse
+        // entries through the blocked loop must equal the same entries
+        // densified first, to the bit — per coordinate the adds happen in
+        // entry order either way
+        let mut rng = crate::rng::Rng::new(31);
+        let d = 2 * super::AGG_BLOCK + 129;
+        let w0: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut entries = Vec::new();
+        for sat in 0..7usize {
+            if sat % 2 == 0 {
+                // sparse: a strided 1% of coordinates, crossing block edges
+                let idx: Vec<u32> =
+                    (0..d as u32).filter(|j| (j + sat as u32) % 97 == 0).collect();
+                let val: Vec<f32> = idx.iter().map(|_| rng.normal_f32(0.0, 0.1)).collect();
+                entries.push(GradientEntry {
+                    sat,
+                    staleness: sat % 3,
+                    grad: Update::Sparse { dim: d, idx, val },
+                    n_samples: 1,
+                });
+            } else {
+                entries.push(GradientEntry {
+                    sat,
+                    staleness: sat % 3,
+                    grad: (0..d).map(|_| rng.normal_f32(0.0, 0.1)).collect::<Vec<f32>>().into(),
+                    n_samples: 1,
+                });
+            }
+        }
+        let dense_entries: Vec<GradientEntry> = entries
+            .iter()
+            .map(|e| GradientEntry {
+                sat: e.sat,
+                staleness: e.staleness,
+                grad: e.grad.to_dense().into(),
+                n_samples: e.n_samples,
+            })
+            .collect();
+        let mut w = w0.clone();
+        let mut w_ref = w0;
+        CpuAggregator.aggregate(&mut w, &entries, 0.5).unwrap();
+        CpuAggregator.aggregate(&mut w_ref, &dense_entries, 0.5).unwrap();
+        assert_eq!(w, w_ref, "sparse accumulate ≡ densify-then-aggregate, bit-for-bit");
+    }
+
+    #[test]
+    fn sparse_dim_mismatch_is_rejected_by_the_hoisted_check() {
+        let mut w = vec![0.0f32; 4];
+        let entries = vec![GradientEntry {
+            sat: 0,
+            staleness: 0,
+            grad: Update::Sparse { dim: 3, idx: vec![1], val: vec![1.0] },
+            n_samples: 1,
+        }];
+        assert!(CpuAggregator.aggregate(&mut w, &entries, 0.5).is_err());
+        assert_eq!(w, vec![0.0f32; 4]);
+    }
+
+    #[test]
     fn dim_mismatch_is_an_error_not_a_partial_update() {
         let mut w = vec![0.0f32; 4];
         let entries = vec![
-            GradientEntry { sat: 0, staleness: 0, grad: vec![1.0; 4], n_samples: 1 },
-            GradientEntry { sat: 1, staleness: 0, grad: vec![1.0; 3], n_samples: 1 },
+            GradientEntry { sat: 0, staleness: 0, grad: vec![1.0; 4].into(), n_samples: 1 },
+            GradientEntry { sat: 1, staleness: 0, grad: vec![1.0; 3].into(), n_samples: 1 },
         ];
         assert!(CpuAggregator.aggregate(&mut w, &entries, 0.5).is_err());
         // the hoisted check rejects before any element is touched
@@ -276,6 +374,24 @@ mod tests {
         assert!((m[1] - 4.25).abs() < 1e-6);
         // empty input is the zero model
         assert_eq!(weighted_model_merge(&[], 3), vec![0.0; 3]);
+    }
+
+    #[test]
+    fn weighted_merge_all_zero_weights_returns_first_replica_unchanged() {
+        // zero-activity regression: a merge window in which no gateway
+        // aggregated anything must not zero the model
+        let a: Vec<f32> = (0..50).map(|i| (i as f32).cos() * 7.0).collect();
+        let b = vec![9.0f32; 50];
+        let m = weighted_model_merge(&[(&a, 0.0), (&b, 0.0)], 50);
+        for (x, y) in m.iter().zip(a.iter()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "first replica, bit-for-bit");
+        }
+        // a single zero-weight replica likewise survives
+        let m = weighted_model_merge(&[(&a, 0.0)], 50);
+        assert_eq!(m, a);
+        // any nonzero weight re-enables the weighted path
+        let m = weighted_model_merge(&[(&a, 0.0), (&b, 1.0)], 50);
+        assert_eq!(m, b);
     }
 
     #[test]

@@ -161,7 +161,12 @@ impl ModelRuntime {
             for slot in 0..ch {
                 if let Some(e) = chunk_entries.get(slot) {
                     ensure!(e.grad.len() == m.d, "gradient dim mismatch");
-                    gbuf[slot * m.d..(slot + 1) * m.d].copy_from_slice(&e.grad);
+                    let row = &mut gbuf[slot * m.d..(slot + 1) * m.d];
+                    match e.grad.as_dense() {
+                        Some(g) => row.copy_from_slice(g),
+                        // sparse wire form (ADR-0008): densify the row
+                        None => row.copy_from_slice(&e.grad.to_dense()),
+                    }
                     wbuf[slot] = chunk_weights[slot];
                 } else {
                     // zero weight masks the stale row left in gbuf

@@ -57,7 +57,7 @@ pub fn pretrain_bank(
                 Ok(GradientEntry {
                     sat: c,
                     staleness: 0,
-                    grad: backend.local_delta(&w, rng)?,
+                    grad: backend.local_delta(&w, rng)?.into(),
                     n_samples: 1,
                 })
             })
@@ -101,7 +101,7 @@ pub fn generate_samples(
                 Ok(GradientEntry {
                     sat: c,
                     staleness: s,
-                    grad: backend.local_delta(base, rng)?,
+                    grad: backend.local_delta(base, rng)?.into(),
                     n_samples: 1,
                 })
             })

@@ -21,6 +21,7 @@
 //! first poisoned aggregate lands.
 
 use crate::cfg::toml::{TomlDoc, TomlValue};
+use crate::fl::codec::Update;
 use crate::rng::Rng;
 use crate::sim::trace::RunTrace;
 use anyhow::{bail, Context, Result};
@@ -232,8 +233,8 @@ impl AttackSpec {
 pub struct Adversary {
     spec: AttackSpec,
     is_adv: Vec<bool>,
-    /// Per-satellite previously transmitted gradient for `stale-replay`.
-    replay: Vec<Option<Vec<f32>>>,
+    /// Per-satellite previously transmitted update for `stale-replay`.
+    replay: Vec<Option<Update>>,
     rng: Rng,
 }
 
@@ -251,8 +252,13 @@ impl Adversary {
 
     /// Transform one upload from satellite `sat`. Returns `None` when the
     /// link drops it (the satellite has already consumed its `upload`, so
-    /// it believes it transmitted — exactly a lost frame). Draw order is
-    /// part of the determinism contract:
+    /// it believes it transmitted — exactly a lost frame). The upload
+    /// arrives in the codec's wire form (ADR-0008: encode runs first), and
+    /// every transform operates on the *stored* values — dense
+    /// coordinates, or a sparse payload's `(indices, values)` values — so
+    /// an adversary poisons what is actually transmitted. For dense
+    /// updates this is bit-identical to the pre-codec behaviour. Draw
+    /// order is part of the determinism contract:
     /// 1. link drop (`drop_prob`), counted in `trace.dropped`;
     /// 2. adversary transform when `sat` is compromised, counted in
     ///    `trace.injected` (a replayed *first* upload passes through
@@ -261,7 +267,7 @@ impl Adversary {
     ///    `trace.corrupted` — the flipped bit is drawn from the mantissa
     ///    (0..=22) or sign (31), never the exponent, so a finite gradient
     ///    stays finite (no NaN/inf can enter Eq. 4 through this fault).
-    pub fn apply(&mut self, sat: usize, mut grad: Vec<f32>, trace: &mut RunTrace) -> Option<Vec<f32>> {
+    pub fn apply(&mut self, sat: usize, mut grad: Update, trace: &mut RunTrace) -> Option<Update> {
         if self.spec.drop_prob > 0.0 && self.rng.gen_bool(self.spec.drop_prob) {
             trace.dropped += 1;
             return None;
@@ -270,14 +276,14 @@ impl Adversary {
             match self.spec.kind {
                 AttackKind::None => {}
                 AttackKind::LabelFlip => {
-                    for v in grad.iter_mut() {
+                    for v in grad.values_mut() {
                         *v = -*v;
                     }
                     trace.injected += 1;
                 }
                 AttackKind::ScaledGrad => {
                     let scale = self.spec.scale as f32;
-                    for v in grad.iter_mut() {
+                    for v in grad.values_mut() {
                         *v *= scale;
                     }
                     trace.injected += 1;
@@ -293,12 +299,15 @@ impl Adversary {
                 },
             }
         }
-        if self.spec.corrupt_prob > 0.0 && self.rng.gen_bool(self.spec.corrupt_prob) && !grad.is_empty()
+        if self.spec.corrupt_prob > 0.0
+            && self.rng.gen_bool(self.spec.corrupt_prob)
+            && !grad.values().is_empty()
         {
-            let e = self.rng.gen_range(0, grad.len());
+            let e = self.rng.gen_range(0, grad.values().len());
             let sel = self.rng.gen_range(0, 24);
             let bit = if sel == 23 { 31 } else { sel };
-            grad[e] = f32::from_bits(grad[e].to_bits() ^ (1u32 << bit));
+            let vals = grad.values_mut();
+            vals[e] = f32::from_bits(vals[e].to_bits() ^ (1u32 << bit));
             trace.corrupted += 1;
         }
         Some(grad)
@@ -345,7 +354,7 @@ mod tests {
             let mut out = Vec::new();
             for i in 0..64usize {
                 let g = vec![i as f32, -(i as f32), 0.5];
-                out.push(adv.apply(i % 4, g, &mut trace));
+                out.push(adv.apply(i % 4, g.into(), &mut trace));
             }
             (out, trace.injected, trace.dropped, trace.corrupted)
         };
@@ -368,8 +377,8 @@ mod tests {
         let mut trace = RunTrace::default();
         for i in 0..2000 {
             let g = vec![1.5e30, -2.5e-30, 0.0, i as f32];
-            let out = adv.apply(0, g, &mut trace).unwrap();
-            for v in out {
+            let out = adv.apply(0, g.into(), &mut trace).unwrap();
+            for v in out.values() {
                 assert!(v.is_finite(), "corruption produced a non-finite value: {v}");
             }
         }
@@ -382,19 +391,47 @@ mod tests {
         let mut adv = Adversary::new(&spec, 2, 1);
         let mut trace = RunTrace::default();
         // first upload passes through honestly while being recorded
-        let out = adv.apply(0, vec![1.0], &mut trace).unwrap();
-        assert_eq!(out, vec![1.0]);
+        let out = adv.apply(0, vec![1.0].into(), &mut trace).unwrap();
+        assert_eq!(out, vec![1.0].into());
         assert_eq!(trace.injected, 0);
         // second upload is replaced by the first; the second is now stored
-        let out = adv.apply(0, vec![2.0], &mut trace).unwrap();
-        assert_eq!(out, vec![1.0]);
+        let out = adv.apply(0, vec![2.0].into(), &mut trace).unwrap();
+        assert_eq!(out, vec![1.0].into());
         assert_eq!(trace.injected, 1);
-        let out = adv.apply(0, vec![3.0], &mut trace).unwrap();
-        assert_eq!(out, vec![2.0], "rolling swap, always one upload behind");
+        let out = adv.apply(0, vec![3.0].into(), &mut trace).unwrap();
+        assert_eq!(out, vec![2.0].into(), "rolling swap, always one upload behind");
         // honest satellite untouched
-        let out = adv.apply(1, vec![9.0], &mut trace).unwrap();
-        assert_eq!(out, vec![9.0]);
+        let out = adv.apply(1, vec![9.0].into(), &mut trace).unwrap();
+        assert_eq!(out, vec![9.0].into());
         assert_eq!(trace.injected, 2);
+    }
+
+    #[test]
+    fn transforms_act_on_sparse_wire_payloads() {
+        // codec→adversary ordering (ADR-0008): a top-k sparse upload is
+        // poisoned on its stored values — indices and dimension untouched
+        let spec = AttackSpec {
+            kind: AttackKind::ScaledGrad,
+            sats: vec![0],
+            scale: -2.0,
+            ..Default::default()
+        };
+        let mut adv = Adversary::new(&spec, 1, 5);
+        let mut trace = RunTrace::default();
+        let up = Update::Sparse { dim: 10, idx: vec![2, 7], val: vec![1.0, -3.0] };
+        let out = adv.apply(0, up, &mut trace).unwrap();
+        assert_eq!(out, Update::Sparse { dim: 10, idx: vec![2, 7], val: vec![-2.0, 6.0] });
+        assert_eq!(trace.injected, 1);
+        // corruption indexes the stored values, never past nnz
+        let spec = AttackSpec { corrupt_prob: 1.0, ..Default::default() };
+        let mut adv = Adversary::new(&spec, 1, 6);
+        for _ in 0..200 {
+            let up = Update::Sparse { dim: 1_000_000, idx: vec![5, 999_999], val: vec![1.0, 2.0] };
+            let out = adv.apply(0, up, &mut trace).unwrap();
+            let Update::Sparse { dim, idx, val } = out else { panic!() };
+            assert_eq!((dim, idx.len(), val.len()), (1_000_000, 2, 2));
+            assert!(val.iter().all(|v| v.is_finite()));
+        }
     }
 
     #[test]

@@ -29,8 +29,9 @@ use crate::connectivity::{
     ConnectivitySchedule, ConnectivityStream, ContactGraph, StepView, StreamCursor,
 };
 use crate::fl::{
-    AggregationPolicy, AsyncPolicy, FedBuffPolicy, Federation, FederationSpec, ReconcilePolicy,
-    ScheduledPolicy, ServerAggregator, SyncPolicy, UploadRouting,
+    AggregationPolicy, AsyncPolicy, FedBuffPolicy, Federation, FederationSpec, LinkSpec,
+    ReconcilePolicy, ScheduledPolicy, ServerAggregator, SyncPolicy, Update, UpdateCodec,
+    UploadRouting,
 };
 use crate::fl::client::SatClient;
 use crate::metrics::CurvePoint;
@@ -70,6 +71,10 @@ pub struct EngineConfig {
     /// disabled by default — no injector is built and no adversary
     /// randomness is consumed.
     pub attack: AttackSpec,
+    /// Link byte budget + update codec (ADR-0008); disabled by default —
+    /// no codec is built, no capacity check runs, and the upload path is
+    /// byte-for-byte the plain one.
+    pub link: LinkSpec,
 }
 
 impl Default for EngineConfig {
@@ -86,6 +91,7 @@ impl Default for EngineConfig {
             i0: 24,
             mode: EngineMode::Dense,
             attack: AttackSpec::default(),
+            link: LinkSpec::default(),
         }
     }
 }
@@ -187,6 +193,88 @@ fn next_event(
     next
 }
 
+/// Byte budget of contact `j` at one step (ADR-0008): the link rate scaled
+/// by the contact's pass-duration fraction. An empty duration slice means
+/// "full slot" — the whole rate. Integer math, so the budget is exact and
+/// platform-independent.
+#[inline]
+fn contact_budget(rate: u64, durs: &[u16], j: usize, denom: u16) -> u64 {
+    match durs.get(j) {
+        None => rate,
+        Some(&d) => rate * d as u64 / denom.max(1) as u64,
+    }
+}
+
+/// A planning window with capacity-infeasible contacts removed (ADR-0008):
+/// the FedSpace forecast must not count on an upload the byte budget can't
+/// carry. Materialized only at replan steps, and only when the budget is
+/// on — capacity-off planning reads the raw view, untouched.
+struct CapacityView {
+    start: usize,
+    n_steps_total: usize,
+    n_sats: usize,
+    sets: Vec<Vec<usize>>,
+    hops: Vec<Vec<u8>>,
+    hop_delay: usize,
+}
+
+impl StepView for CapacityView {
+    fn n_sats(&self) -> usize {
+        self.n_sats
+    }
+
+    fn n_steps(&self) -> usize {
+        self.n_steps_total
+    }
+
+    fn sats_at(&self, i: usize) -> &[usize] {
+        &self.sets[i - self.start]
+    }
+
+    fn hops_at(&self, i: usize) -> &[u8] {
+        &self.hops[i - self.start]
+    }
+
+    fn hop_delay_slots(&self) -> usize {
+        self.hop_delay
+    }
+}
+
+/// Copy `[start, start + len)` of `view`, dropping every contact whose
+/// byte budget is below the nominal payload. Hop slices stay parallel to
+/// the filtered sets (empty stays empty — "all direct").
+fn capacity_filtered(view: &dyn StepView, start: usize, len: usize, payload: u64, rate: u64) -> CapacityView {
+    let end = (start + len).min(view.n_steps());
+    let mut sets = Vec::with_capacity(end.saturating_sub(start));
+    let mut hops = Vec::with_capacity(end.saturating_sub(start));
+    let denom = view.duration_denom();
+    for i in start..end {
+        let conn = view.sats_at(i);
+        let h = view.hops_at(i);
+        let durs = view.durations_at(i);
+        let mut set = Vec::with_capacity(conn.len());
+        let mut hop = Vec::with_capacity(h.len());
+        for (j, &s) in conn.iter().enumerate() {
+            if payload <= contact_budget(rate, durs, j, denom) {
+                set.push(s);
+                if !h.is_empty() {
+                    hop.push(h[j]);
+                }
+            }
+        }
+        sets.push(set);
+        hops.push(hop);
+    }
+    CapacityView {
+        start,
+        n_steps_total: view.n_steps(),
+        n_sats: view.n_sats(),
+        sets,
+        hops,
+        hop_delay: view.hop_delay_slots(),
+    }
+}
+
 /// Where the engine reads the deterministic schedule C from.
 #[derive(Clone, Copy)]
 pub enum ScheduleSource<'a> {
@@ -229,6 +317,15 @@ struct RunState {
     /// Attack/fault injector (ADR-0007); `None` when the spec is disabled,
     /// in which case the upload path is byte-for-byte the clean one.
     adversary: Option<Adversary>,
+    /// Update codec at the upload boundary (ADR-0008), applied BEFORE the
+    /// adversary — the attacker tampers with what actually crosses the
+    /// link, i.e. the encoded wire payload. `None` when `[link]` is
+    /// disabled: uploads move as plain dense vectors, untouched.
+    codec: Option<UpdateCodec>,
+    /// Nominal encoded upload size in bytes (the wire model of
+    /// [`LinkSpec::payload_bytes`] at the trainer's dimension); 0 when the
+    /// byte budget is off, in which case no capacity check runs.
+    payload_bytes: u64,
     trace: RunTrace,
     last_loss: f64,
     days_to_target: Option<f64>,
@@ -284,6 +381,8 @@ fn run_step(
     conn: &[usize],
     conn_hops: &[u8],
     hop_delay: usize,
+    conn_durs: &[u16],
+    dur_denom: u16,
     i: usize,
     n_steps: usize,
 ) -> Result<bool> {
@@ -302,7 +401,24 @@ fn run_step(
                 has_data: c.has_data(),
             })
             .collect();
-        let view = plan_view.expect("replanning step without a planning window");
+        let raw_view = plan_view.expect("replanning step without a planning window");
+        // byte budget on: the forecast sees only capacity-feasible contacts
+        // (ADR-0008) — an upload the budget can't carry will be deferred at
+        // run time, so planning around it would schedule phantom arrivals
+        let cap_view;
+        let view: &dyn StepView = if st.payload_bytes > 0 {
+            let i0 = planners.first().map_or(cfg.i0, |p| p.params.i0).max(1);
+            cap_view = capacity_filtered(
+                raw_view,
+                i,
+                i0,
+                st.payload_bytes,
+                cfg.link.rate_bytes_per_slot,
+            );
+            &cap_view
+        } else {
+            raw_view
+        };
         for (g, policy) in st.policies.iter_mut().enumerate() {
             if let PolicyImpl::FedSpace(sp) = policy {
                 if sp.horizon() <= i {
@@ -345,7 +461,24 @@ fn run_step(
         let delay = hops * hop_delay;
         st.trace.connections += 1;
         if st.clients[s].can_upload_relayed(i, delay) {
+            // byte budget (ADR-0008): the encoded payload must fit the
+            // contact's capacity (rate × pass duration). A blocked upload
+            // stays pending on the satellite for its next contact — no
+            // client state changes, no RNG draws, not an idle contact.
+            if st.payload_bytes > 0
+                && st.payload_bytes > contact_budget(cfg.link.rate_bytes_per_slot, conn_durs, j, dur_denom)
+            {
+                st.trace.deferred += 1;
+                continue;
+            }
             let (grad, base) = st.clients[s].upload(i);
+            // codec BEFORE adversary (ADR-0008): the attacker tampers with
+            // the encoded wire payload. Codec-off is a plain move into the
+            // dense wire form — zero arithmetic, zero randomness.
+            let grad: Update = match &mut st.codec {
+                None => grad.into(),
+                Some(codec) => codec.encode(grad, &mut st.clients[s].residual),
+            };
             let grad = match &mut st.adversary {
                 None => Some(grad),
                 Some(adv) => adv.apply(s, grad, &mut st.trace),
@@ -653,12 +786,20 @@ impl<'a> Engine<'a> {
             .attack
             .enabled()
             .then(|| Adversary::new(&cfg.attack, k, cfg.seed));
+        let codec = cfg.link.enabled().then(|| UpdateCodec::new(&cfg.link, cfg.seed));
+        let payload_bytes = if cfg.link.capacity_enabled() {
+            cfg.link.payload_bytes(self.trainer.d())
+        } else {
+            0
+        };
         let mut st = RunState {
             clients,
             sat_rngs,
             fed,
             policies,
             adversary,
+            codec,
+            payload_bytes,
             trace: RunTrace::default(),
             last_loss: 0.0,
             days_to_target: None,
@@ -699,12 +840,18 @@ impl<'a> Engine<'a> {
                     Some(g) => g,
                     None => sched,
                 };
+                // pass durations ride the plain schedule only (ISL reach
+                // sets have no single pass duration — ADR-0008)
+                let dur_denom = match graph {
+                    Some(_) => 1,
+                    None => StepView::duration_denom(sched),
+                };
                 let mut i = 0usize;
                 while i < n_steps {
                     // zero-copy views into the sorted contact/reach lists
-                    let (conn, hops) = match graph {
-                        Some(g) => (g.sats_at(i), g.hops_at(i)),
-                        None => (sched.sats_at(i), &[][..]),
+                    let (conn, hops, durs) = match graph {
+                        Some(g) => (g.sats_at(i), g.hops_at(i), &[][..]),
+                        None => (sched.sats_at(i), &[][..], sched.contact_durations_at(i)),
                     };
                     let stop = run_step(
                         &mut st,
@@ -717,6 +864,8 @@ impl<'a> Engine<'a> {
                         conn,
                         hops,
                         hop_delay,
+                        durs,
+                        dur_denom,
                         i,
                         n_steps,
                     )?;
@@ -754,6 +903,7 @@ impl<'a> Engine<'a> {
                     };
                     let plan_view = window.as_ref().map(|w| w as &dyn StepView);
                     let (conn, hops) = cursor.chunk().contacts_at(i);
+                    let durs = cursor.chunk().durations_at(i);
                     let stop = run_step(
                         &mut st,
                         self.trainer,
@@ -765,6 +915,8 @@ impl<'a> Engine<'a> {
                         conn,
                         hops,
                         hop_delay,
+                        durs,
+                        stream.duration_denom(),
                         i,
                         n_steps,
                     )?;
@@ -1747,5 +1899,182 @@ mod tests {
             assert!(r.trace.injected > 0, "{kind:?} never injected");
             assert_eq!(r.trace.dropped, 0, "{kind:?} has no link faults configured");
         }
+    }
+
+    /// [`run_mock_mode`] with a `[link]` spec attached; capacity-enabled
+    /// specs get pass durations (dense: `compute_with_durations`, streamed:
+    /// `with_durations` — bit-identical by the stream tests).
+    fn run_mock_mode_link(
+        algorithm: AlgorithmKind,
+        steps: usize,
+        mode: crate::cfg::EngineMode,
+        link: crate::fl::LinkSpec,
+    ) -> RunResult {
+        let trainer = MockTrainer::new(16, 12, 0.3, 0);
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig {
+            algorithm,
+            fedbuff_m: 4,
+            eval_every: 4,
+            mode,
+            link,
+            ..Default::default()
+        };
+        let c = planet_labs_like(12, 0);
+        let gs = planet_ground_stations();
+        if mode == crate::cfg::EngineMode::Streamed {
+            let mut stream = ConnectivityStream::new(&c, &gs, steps, Default::default(), 31);
+            if cfg.link.capacity_enabled() {
+                stream = stream.with_durations();
+            }
+            let mut e =
+                Engine::new_streamed(&stream, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            e.run().unwrap()
+        } else {
+            let sched = if cfg.link.capacity_enabled() {
+                ConnectivitySchedule::compute_with_durations(&c, &gs, steps, Default::default())
+            } else {
+                small_sched(12, steps)
+            };
+            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            e.run().unwrap()
+        }
+    }
+
+    /// Top-k at 1/16 of the mock model (k=1, 8-byte payload) over a 20 B/slot
+    /// link: short passes (duration < 4/10 of a slot) can't carry the
+    /// payload, long ones can — exercises defer AND deliver in one run.
+    fn lossy_link() -> crate::fl::LinkSpec {
+        crate::fl::LinkSpec {
+            rate_bytes_per_slot: 20,
+            codec: crate::fl::CodecKind::TopK,
+            topk_frac: 0.05,
+        }
+    }
+
+    #[test]
+    fn codec_and_budget_runs_bit_identical_across_all_modes() {
+        // the PR's tentpole invariant: codec RNG draws and capacity checks
+        // happen only inside the conn loop at contact steps — events in
+        // every mode — and all three modes see bit-identical pass durations,
+        // so the compressed, capacity-limited trace is tri-mode identical
+        use crate::cfg::EngineMode;
+        for alg in [
+            AlgorithmKind::Sync,
+            AlgorithmKind::Async,
+            AlgorithmKind::FedBuff,
+            AlgorithmKind::FedSpace,
+        ] {
+            let dense = run_mock_mode_link(alg, 192, EngineMode::Dense, lossy_link());
+            let sparse = run_mock_mode_link(alg, 192, EngineMode::ContactList, lossy_link());
+            let streamed = run_mock_mode_link(alg, 192, EngineMode::Streamed, lossy_link());
+            assert_same_run(&dense, &sparse, &format!("{alg:?} link dense vs contacts"));
+            assert_same_run(&dense, &streamed, &format!("{alg:?} link dense vs streamed"));
+            assert!(dense.trace.uploads > 0, "{alg:?}: budget starved every upload");
+            assert!(dense.trace.deferred > 0, "{alg:?}: budget never deferred an upload");
+        }
+    }
+
+    #[test]
+    fn generous_budget_identity_codec_is_bit_identical_to_plain() {
+        // capacity machinery on (durations computed, budget checked every
+        // contact) + identity codec + a budget no payload exceeds ⇒ the
+        // run must be bit-for-bit the plain engine's
+        use crate::cfg::EngineMode;
+        let link = crate::fl::LinkSpec {
+            rate_bytes_per_slot: 1_000_000,
+            ..Default::default()
+        };
+        for mode in [EngineMode::Dense, EngineMode::ContactList, EngineMode::Streamed] {
+            let plain = run_mock_mode(AlgorithmKind::FedBuff, 4, 192, mode, None);
+            let budgeted = run_mock_mode_link(AlgorithmKind::FedBuff, 192, mode, link.clone());
+            assert_same_run(&plain, &budgeted, &format!("{mode:?} generous budget"));
+            assert_eq!(budgeted.trace.deferred, 0);
+        }
+    }
+
+    #[test]
+    fn codec_changes_the_run_but_not_connectivity() {
+        // quantization without a byte budget: same contacts, no deferrals,
+        // different arithmetic — and an error-bounded one (the run still
+        // learns)
+        use crate::cfg::EngineMode;
+        let link = crate::fl::LinkSpec {
+            codec: crate::fl::CodecKind::QuantQ8,
+            ..Default::default()
+        };
+        let clean = run_mock_mode(AlgorithmKind::FedBuff, 4, 192, EngineMode::Dense, None);
+        let coded = run_mock_mode_link(AlgorithmKind::FedBuff, 192, EngineMode::Dense, link);
+        assert_eq!(clean.trace.connections, coded.trace.connections);
+        assert_eq!(clean.trace.uploads, coded.trace.uploads);
+        assert_eq!(coded.trace.deferred, 0, "no byte budget, nothing to defer");
+        let same_bits = clean
+            .final_w
+            .iter()
+            .zip(coded.final_w.iter())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(!same_bits, "q8 quantization left the model untouched");
+        let first = coded.trace.curve.points.first().unwrap().accuracy;
+        assert!(coded.trace.curve.best_accuracy() > first, "quantized run did not learn");
+    }
+
+    #[test]
+    fn codec_run_is_seed_reproducible() {
+        use crate::cfg::EngineMode;
+        let a = run_mock_mode_link(AlgorithmKind::FedBuff, 192, EngineMode::Dense, lossy_link());
+        let b = run_mock_mode_link(AlgorithmKind::FedBuff, 192, EngineMode::Dense, lossy_link());
+        assert_same_run(&a, &b, "link replay");
+    }
+
+    /// [`run_fed`] with an attack spec — the quorum-under-link-faults gate.
+    fn run_fed_atk(
+        spec: &FederationSpec,
+        algorithm: AlgorithmKind,
+        steps: usize,
+        attack: AttackSpec,
+    ) -> RunResult {
+        let c = planet_labs_like(12, 0);
+        let stations = planet_ground_stations();
+        let params: crate::connectivity::ConnectivityParams = Default::default();
+        let sched = ConnectivitySchedule::compute(&c, &stations, steps, params.clone());
+        spec.validate(stations.len()).unwrap();
+        let routing = (!spec.is_single()).then(|| {
+            crate::fl::UploadRouting::build(&c, &stations, steps, &params, &spec.stations)
+        });
+        let trainer = MockTrainer::new(16, 12, 0.3, 0);
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig {
+            algorithm,
+            fedbuff_m: 4,
+            eval_every: 4,
+            attack,
+            ..Default::default()
+        };
+        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm))
+            .with_federation(spec, routing.as_ref(), Vec::new());
+        e.run().unwrap()
+    }
+
+    #[test]
+    fn dropped_uploads_never_count_toward_a_sync_quorum() {
+        // drop_prob 1.0: every committed upload dies on the link before any
+        // gateway buffer sees it. Under ReconcilePolicy::Quorum the Sync
+        // thresholds therefore never fill — zero aggregations, zero quorum
+        // reconciles — even though every contact still happened.
+        let spec = half_half_spec(crate::fl::ReconcilePolicy::Quorum { every: 12 });
+        let all_dropped = AttackSpec { drop_prob: 1.0, ..Default::default() };
+        let starved = run_fed_atk(&spec, AlgorithmKind::Sync, 96, all_dropped.clone());
+        assert!(starved.trace.dropped > 0, "links never fired");
+        assert_eq!(starved.trace.uploads, 0, "a dropped upload reached a buffer");
+        assert_eq!(starved.trace.gateway_uploads, vec![0, 0]);
+        assert_eq!(starved.final_round, 0, "a quorum filled without uploads");
+        assert_eq!(starved.trace.reconciles, 0, "zero-activity reconcile must not merge");
+        assert!(starved.trace.connections > 0, "geometry must be untouched");
+        // the run replays bit for bit
+        let replay = run_fed_atk(&spec, AlgorithmKind::Sync, 96, all_dropped);
+        assert_same_run(&starved, &replay, "all-dropped quorum replay");
+        // control: with the links healthy the same spec aggregates
+        let healthy = run_fed_atk(&spec, AlgorithmKind::Sync, 96, AttackSpec::default());
+        assert!(healthy.final_round > 0, "control run never aggregated");
     }
 }

@@ -36,6 +36,11 @@ pub struct RunTrace {
     /// uploads that suffered a single-bit link corruption (subset of
     /// `uploads`)
     pub corrupted: usize,
+    /// uploads deferred because the contact's byte budget could not carry
+    /// the encoded payload (ADR-0008); always 0 when the scenario carries
+    /// no `[link]` byte budget. A deferred upload stays pending on the
+    /// satellite — it is neither an `upload` nor an `idle` contact.
+    pub deferred: usize,
     /// accuracy/loss curve (Figure 6)
     pub curve: TrainingCurve,
     /// wall-clock seconds spent in local training / aggregation / eval

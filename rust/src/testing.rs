@@ -77,6 +77,7 @@ pub fn assert_same_run(a: &crate::sim::RunResult, b: &crate::sim::RunResult, ctx
     assert_eq!(a.trace.injected, b.trace.injected, "{ctx}: injected uploads");
     assert_eq!(a.trace.dropped, b.trace.dropped, "{ctx}: dropped uploads");
     assert_eq!(a.trace.corrupted, b.trace.corrupted, "{ctx}: corrupted uploads");
+    assert_eq!(a.trace.deferred, b.trace.deferred, "{ctx}: capacity-deferred uploads");
     assert_eq!(
         a.trace.staleness.entries().collect::<Vec<_>>(),
         b.trace.staleness.entries().collect::<Vec<_>>(),

@@ -63,7 +63,7 @@ fn prop_buffer_counts_consistent() {
             buf.push(GradientEntry {
                 sat,
                 staleness: rng.gen_range(0, 8),
-                grad: vec![0.0; 3],
+                grad: vec![0.0; 3].into(),
                 n_samples: 1,
             });
         }
@@ -412,7 +412,7 @@ fn prop_robust_aggregators_permutation_invariant() {
             .map(|sat| GradientEntry {
                 sat,
                 staleness: rng.gen_range(0, 6),
-                grad: (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                grad: (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect::<Vec<f32>>().into(),
                 n_samples: 1,
             })
             .collect();
@@ -460,7 +460,7 @@ fn prop_trimmed_mean_at_zero_trim_is_the_reference_mean() {
             .map(|sat| GradientEntry {
                 sat,
                 staleness: rng.gen_range(0, 8),
-                grad: (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                grad: (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect::<Vec<f32>>().into(),
                 n_samples: 1,
             })
             .collect();
@@ -500,7 +500,7 @@ fn prop_trimmed_mean_contained_by_honest_range_under_bounded_adversaries() {
             .map(|(sat, g)| GradientEntry {
                 sat,
                 staleness: rng.gen_range(0, 6),
-                grad: g.clone(),
+                grad: g.clone().into(),
                 n_samples: 1,
             })
             .collect();
@@ -510,7 +510,7 @@ fn prop_trimmed_mean_contained_by_honest_range_under_bounded_adversaries() {
             entries.push(GradientEntry {
                 sat: n_honest + a,
                 staleness: rng.gen_range(0, 6),
-                grad: (0..d).map(|_| scale * (1.0 + rng.next_f32())).collect(),
+                grad: (0..d).map(|_| scale * (1.0 + rng.next_f32())).collect::<Vec<f32>>().into(),
                 n_samples: 1,
             });
         }
@@ -544,7 +544,7 @@ fn prop_cpu_aggregation_linear_in_weights() {
             .map(|sat| GradientEntry {
                 sat,
                 staleness: 2, // equal -> uniform weights
-                grad: (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect(),
+                grad: (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect::<Vec<f32>>().into(),
                 n_samples: 1,
             })
             .collect();
@@ -552,9 +552,214 @@ fn prop_cpu_aggregation_linear_in_weights() {
         CpuAggregator.aggregate(&mut w, &entries, 0.7).unwrap();
         for j in 0..d {
             let mean: f32 =
-                entries.iter().map(|e| e.grad[j]).sum::<f32>() / n as f32;
+                entries.iter().map(|e| e.grad.at(j)).sum::<f32>() / n as f32;
             let got = w[j] - w0[j];
             assert!((got - mean).abs() < 1e-4, "dim {j}: {got} vs {mean}");
         }
     });
+}
+
+#[test]
+fn prop_topk_ships_exact_bits_and_loses_nothing() {
+    // ADR-0008's lossless-delay guarantee, coordinate by coordinate: after
+    // error-feedback compensation x = grad + residual_in, every selected
+    // coordinate ships x's exact f32 bits, every dropped coordinate lands
+    // bit-for-bit in the residual (zeroed where shipped), and no dropped
+    // magnitude exceeds the smallest kept one
+    use fedspace::fl::{CodecKind, LinkSpec, Update, UpdateCodec};
+    property(60, |rng| {
+        let d = rng.gen_range(1, 80);
+        let spec = LinkSpec {
+            codec: CodecKind::TopK,
+            topk_frac: rng.gen_f64(0.01, 1.0),
+            ..Default::default()
+        };
+        let mut codec = UpdateCodec::new(&spec, rng.next_u64());
+        let mut residual: Vec<f32> = if rng.gen_bool(0.5) {
+            (0..d).map(|_| rng.normal_f32(0.0, 0.3)).collect()
+        } else {
+            Vec::new() // lazily sized on first use
+        };
+        let grad: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut x = grad.clone();
+        for (xi, r) in x.iter_mut().zip(residual.iter()) {
+            *xi += *r;
+        }
+        let out = codec.encode(grad, &mut residual);
+        let Update::Sparse { dim, idx, val } = out else { panic!("top-k must go sparse") };
+        assert_eq!(dim, d);
+        assert_eq!(idx.len(), spec.topk_k(d));
+        assert!(idx.windows(2).all(|w| w[0] < w[1]), "indices must be sorted unique");
+        let kept_min = val.iter().map(|v| v.abs()).fold(f32::INFINITY, f32::min);
+        for j in 0..d {
+            match idx.binary_search(&(j as u32)) {
+                Ok(p) => {
+                    assert_eq!(val[p].to_bits(), x[j].to_bits(), "shipped coord {j}");
+                    assert_eq!(residual[j].to_bits(), 0.0f32.to_bits(), "coord {j}");
+                }
+                Err(_) => {
+                    assert_eq!(residual[j].to_bits(), x[j].to_bits(), "dropped coord {j}");
+                    assert!(x[j].abs() <= kept_min, "dropped {j} beats a kept coord");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_identity_codec_never_perturbs_anything() {
+    // the codec-off ≡ PR 6 bit-identity argument rests on Identity being a
+    // byte-level no-op that consumes no randomness: any two encoder seeds
+    // must emit the same dense bits and leave the residual untouched
+    use fedspace::fl::{CodecKind, LinkSpec, Update, UpdateCodec};
+    property(60, |rng| {
+        let d = rng.gen_range(1, 60);
+        let spec = LinkSpec {
+            rate_bytes_per_slot: rng.gen_range(0, 1000) as u64,
+            codec: CodecKind::Identity,
+            topk_frac: 1.0,
+        };
+        let grad: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let bits: Vec<u32> = grad.iter().map(|v| v.to_bits()).collect();
+        let junk: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let mut out = Vec::new();
+        for seed in [rng.next_u64(), rng.next_u64()] {
+            let mut codec = UpdateCodec::new(&spec, seed);
+            let mut residual = junk.clone();
+            let enc = codec.encode(grad.clone(), &mut residual);
+            let Update::Dense(v) = enc else { panic!("identity must stay dense") };
+            assert_eq!(v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(), bits);
+            for (r, j) in residual.iter().zip(junk.iter()) {
+                assert_eq!(r.to_bits(), j.to_bits(), "residual was touched");
+            }
+            out.push(v);
+        }
+        assert_eq!(out[0], out[1], "identity output depended on the codec seed");
+    });
+}
+
+#[test]
+fn prop_codec_stream_is_seed_reproducible() {
+    // two encoders built from the same run seed must replay the identical
+    // randomized quantization over a whole sequence of uploads — bits of
+    // every update AND every carried residual (this is what makes codec
+    // runs seed-reproducible end to end)
+    use fedspace::fl::{CodecKind, LinkSpec, UpdateCodec};
+    property(30, |rng| {
+        let d = rng.gen_range(1, 50);
+        let uploads = rng.gen_range(1, 6);
+        let spec = LinkSpec {
+            codec: if rng.gen_bool(0.5) { CodecKind::QuantQ8 } else { CodecKind::TopK },
+            topk_frac: rng.gen_f64(0.05, 1.0),
+            ..Default::default()
+        };
+        let seed = rng.next_u64();
+        let grads: Vec<Vec<f32>> = (0..uploads)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect())
+            .collect();
+        let mut a = UpdateCodec::new(&spec, seed);
+        let mut b = UpdateCodec::new(&spec, seed);
+        let (mut ra, mut rb) = (Vec::new(), Vec::new());
+        for g in &grads {
+            let ua = a.encode(g.clone(), &mut ra);
+            let ub = b.encode(g.clone(), &mut rb);
+            for (x, y) in ua.values().iter().zip(ub.values()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "update bits diverged");
+            }
+            assert_eq!(ua.len(), ub.len());
+            for (x, y) in ra.iter().zip(rb.iter()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "residual bits diverged");
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_aggregation_matches_the_densified_oracle() {
+    // a buffer mixing sparse top-k wire forms with plain dense uploads must
+    // aggregate bit-for-bit like the same buffer with every sparse entry
+    // densified first — for the reference mean and the per-coordinate
+    // median alike (the lazy-densify path cannot be a different algorithm)
+    use fedspace::fl::server::{CpuAggregator, ServerAggregator};
+    use fedspace::fl::{CodecKind, CoordinateMedian, LinkSpec, UpdateCodec};
+    property(40, |rng| {
+        let d = rng.gen_range(1, 60);
+        let n = rng.gen_range(1, 10);
+        let spec = LinkSpec {
+            codec: CodecKind::TopK,
+            topk_frac: rng.gen_f64(0.05, 1.0),
+            ..Default::default()
+        };
+        let mut codec = UpdateCodec::new(&spec, rng.next_u64());
+        let entries: Vec<GradientEntry> = (0..n)
+            .map(|sat| {
+                let g: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+                let grad = if rng.gen_bool(0.5) {
+                    codec.encode(g, &mut Vec::new())
+                } else {
+                    g.into()
+                };
+                GradientEntry { sat, staleness: rng.gen_range(0, 6), grad, n_samples: 1 }
+            })
+            .collect();
+        let densified: Vec<GradientEntry> = entries
+            .iter()
+            .map(|e| GradientEntry {
+                sat: e.sat,
+                staleness: e.staleness,
+                grad: e.grad.to_dense().into(),
+                n_samples: e.n_samples,
+            })
+            .collect();
+        let alpha = rng.gen_f64(0.0, 2.0);
+        let w0: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for which in 0..2 {
+            let mut a = w0.clone();
+            let mut b = w0.clone();
+            if which == 0 {
+                CpuAggregator.aggregate(&mut a, &entries, alpha).unwrap();
+                CpuAggregator.aggregate(&mut b, &densified, alpha).unwrap();
+            } else {
+                CoordinateMedian.aggregate(&mut a, &entries, alpha).unwrap();
+                CoordinateMedian.aggregate(&mut b, &densified, alpha).unwrap();
+            }
+            for (j, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "aggregator {which}: dim {j} (n={n} d={d})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn no_committed_shrink_seed_files() {
+    // failures reproduce via FEDSPACE_PROP_SEED alone; a committed
+    // proptest-style regression corpus would silently pin stale seeds and
+    // mask the env knob, so the tree must not carry one
+    let root = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut stack = vec![root];
+    let mut offenders = Vec::new();
+    while let Some(dir) = stack.pop() {
+        let Ok(rd) = std::fs::read_dir(&dir) else { continue };
+        for ent in rd.flatten() {
+            let p = ent.path();
+            let name = ent.file_name().to_string_lossy().into_owned();
+            if p.is_dir() {
+                if name == "target" || name.starts_with('.') {
+                    continue;
+                }
+                if name == "proptest-regressions" {
+                    offenders.push(p);
+                    continue;
+                }
+                stack.push(p);
+            } else if name.ends_with(".proptest-regressions") || name == "prop-seeds.txt" {
+                offenders.push(p);
+            }
+        }
+    }
+    assert!(offenders.is_empty(), "committed shrink-seed files: {offenders:?}");
 }

@@ -9,7 +9,7 @@ use fedspace::app::{
     run_mock_on_stream, run_mock_on_stream_fed, run_scenario, FederationRun,
 };
 use fedspace::cfg::{AlgorithmKind, EngineMode, IslMode, Scenario};
-use fedspace::fl::{ReconcilePolicy, RobustKind, RobustSpec};
+use fedspace::fl::{CodecKind, LinkSpec, ReconcilePolicy, RobustKind, RobustSpec};
 use fedspace::sim::AttackSpec;
 use fedspace::testing::assert_same_run;
 
@@ -410,6 +410,115 @@ fn robust_aggregators_recover_the_model_under_attack() {
     let d_med = l2(&median.final_w, &clean.final_w);
     assert!(d_trim < d_mean, "trimmed-mean no closer to clean than mean: {d_trim} vs {d_mean}");
     assert!(d_med < d_mean, "median no closer to clean than mean: {d_med} vs {d_mean}");
+}
+
+/// Link acceptance gate, half 1 (ADR-0008): the compress builtin with its
+/// `[link]` section cleared IS `walker-starlink-1584` — the same scenario
+/// struct modulo name/summary/engine-mode — and with the link left default
+/// the engine builds no codec, tracks no durations, defers nothing, and
+/// reproduces the pre-link engine bit for bit on `polar-iridium-66` for
+/// all four algorithms in all three time-axis modes (the generous-budget
+/// identity codec run must also be a byte-level no-op end to end).
+#[test]
+fn link_off_identical_to_pre_link_engine() {
+    let mut sc = Scenario::builtin("compress-starlink-1584").unwrap();
+    sc.link = LinkSpec::default();
+    let base = Scenario::builtin("walker-starlink-1584").unwrap();
+    let mut stripped = sc.clone();
+    stripped.name = base.name.clone();
+    stripped.summary = base.summary.clone();
+    stripped.engine_mode = base.engine_mode;
+    assert_eq!(stripped, base, "compress-starlink-1584 must be starlink shell 1 + [link]");
+
+    let mut sc = Scenario::builtin("polar-iridium-66").unwrap().scaled(Some(24), Some(96));
+    sc.algorithms = vec![
+        AlgorithmKind::Sync,
+        AlgorithmKind::Async,
+        AlgorithmKind::FedBuff,
+        AlgorithmKind::FedSpace,
+    ];
+    assert!(!sc.link.enabled());
+    let (_, sched_off) = sc.build_schedule();
+    let (_, stream_off) = sc.build_stream();
+    assert!(!sched_off.has_durations());
+    // identity codec under a budget no contact can exhaust: the whole
+    // capacity/codec plumbing engages (timed schedule, forecast filter,
+    // encode calls) yet must change nothing
+    let mut generous = sc.clone();
+    generous.link = LinkSpec {
+        rate_bytes_per_slot: 1 << 40,
+        codec: CodecKind::Identity,
+        topk_frac: 0.01,
+    };
+    let (_, sched_on) = generous.build_schedule();
+    let (_, stream_on) = generous.build_stream();
+    assert!(sched_on.has_durations() && stream_on.has_durations());
+    for &alg in &sc.algorithms {
+        let name = alg.name();
+        let mut off = sc.experiment_config(alg);
+        let mut on = generous.experiment_config(alg);
+        for mode in [EngineMode::Dense, EngineMode::ContactList] {
+            off.engine_mode = mode;
+            on.engine_mode = mode;
+            let a = run_mock_on_schedule(&off, &sched_off, None).unwrap();
+            let b = run_mock_on_schedule(&on, &sched_on, None).unwrap();
+            assert_same_run(&a.result, &b.result, &format!("{name} link-off {}", mode.name()));
+            assert_eq!(b.result.trace.deferred, 0, "{name}: a generous budget deferred");
+        }
+        off.engine_mode = EngineMode::Streamed;
+        on.engine_mode = EngineMode::Streamed;
+        let a = run_mock_on_stream(&off, &stream_off, None).unwrap();
+        let b = run_mock_on_stream(&on, &stream_on, None).unwrap();
+        assert_same_run(&a.result, &b.result, &format!("{name} link-off streamed"));
+        assert_eq!(a.result.trace.deferred, 0, "{name}: link-off run deferred an upload");
+    }
+}
+
+/// Link acceptance gate, half 2 (ADR-0008): with the top-k codec and a
+/// finite byte budget armed, the dense, contact-list and streamed engines
+/// still produce bit-identical traces on `compress-starlink-1584` for the
+/// whole grid — sparse payloads, capacity deferrals and the filtered
+/// forecast must agree exactly across all three time-axis walks — and the
+/// compressed run is exactly seed-reproducible.
+#[test]
+fn compressed_budgeted_runs_identical_across_modes_and_seed_reproducible() {
+    let sc = Scenario::builtin("compress-starlink-1584").unwrap().scaled(Some(24), Some(96));
+    assert!(sc.link.capacity_enabled());
+    assert_eq!(sc.link.codec, CodecKind::TopK);
+    let (_, sched) = sc.build_schedule();
+    let (_, stream) = sc.build_stream();
+    assert!(sched.has_durations() && stream.has_durations());
+    for &alg in &sc.algorithms {
+        let mut cfg = sc.experiment_config(alg);
+        cfg.engine_mode = EngineMode::Dense;
+        let dense = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+        let replay = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+        cfg.engine_mode = EngineMode::ContactList;
+        let sparse = run_mock_on_schedule(&cfg, &sched, None).unwrap();
+        cfg.engine_mode = EngineMode::Streamed;
+        let streamed = run_mock_on_stream(&cfg, &stream, None).unwrap();
+        let name = alg.name();
+        assert_same_run(&dense.result, &replay.result, &format!("{name} codec replay"));
+        assert_same_run(&dense.result, &sparse.result, &format!("{name} codec contacts"));
+        assert_same_run(&dense.result, &streamed.result, &format!("{name} codec streamed"));
+        assert!(dense.result.trace.uploads > 0, "{name}: nothing fit the budget");
+    }
+}
+
+/// A budget below the smallest encoded payload starves the uplink
+/// entirely: every contact defers, nothing aggregates — the deterministic
+/// worst case of the capacity model.
+#[test]
+fn starved_link_defers_every_upload() {
+    let mut sc = Scenario::builtin("compress-starlink-1584").unwrap().scaled(Some(12), Some(48));
+    sc.algorithms = vec![AlgorithmKind::FedBuff];
+    // top-k keeps >= 1 pair = 8 bytes; one byte per slot can never carry it
+    sc.link.rate_bytes_per_slot = 1;
+    let r = &run_scenario(&sc, None).unwrap()[0].result;
+    assert!(r.trace.connections > 0, "the constellation never saw a station");
+    assert_eq!(r.trace.uploads, 0, "an upload crossed a starved link");
+    assert!(r.trace.deferred > 0, "contacts happened but none were charged");
+    assert_eq!(r.final_round, 0);
 }
 
 #[test]
