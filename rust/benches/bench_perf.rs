@@ -319,6 +319,32 @@ fn main() -> anyhow::Result<()> {
         bench_report::record("sparse_aggregate_topk", sparse_s.median_s);
     }
 
+    section("L3: event-stream observer overhead (ADR-0009)");
+    // the same mock run with event recording off (NullSink fast path — what
+    // every normal run pays) vs on (every event cloned into the log); the
+    // tracked median is the recording-on run, the printout shows the ratio
+    {
+        use fedspace::app::run_mock_experiment;
+        use fedspace::cfg::{AlgorithmKind, Scenario};
+        let sc = Scenario::builtin("paper-fig7")
+            .expect("builtin registry")
+            .scaled(Some(24), Some(192));
+        let mut cfg = sc.experiment_config(AlgorithmKind::FedBuff);
+        cfg.events.record = false;
+        let off = bench("engine run, events off (NullSink)", 1, 5, || {
+            let _ = run_mock_experiment(&cfg, None).unwrap();
+        });
+        cfg.events.record = true;
+        let on = bench("engine run, events recorded", 1, 5, || {
+            let _ = run_mock_experiment(&cfg, None).unwrap();
+        });
+        println!(
+            "    -> recording costs {:+.1}% over the null path",
+            100.0 * (on.median_s / off.median_s - 1.0)
+        );
+        bench_report::record("event_sink_overhead", on.median_s);
+    }
+
     section("L3: utility regressor (random forest)");
     let x: Vec<Vec<f64>> = (0..400)
         .map(|_| (0..10).map(|_| rng.gen_f64(-1.0, 1.0)).collect())

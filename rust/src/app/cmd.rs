@@ -8,6 +8,7 @@ use crate::fl::illustrative;
 use crate::metrics::{write_file, Table};
 use crate::rng::Rng;
 use crate::sched::{generate_samples, pretrain_bank, MockBackend, UtilityModel};
+use crate::sim::{bundle_json, EventSpec, RunArtifact};
 use anyhow::{bail, Context, Result};
 
 /// Top-level CLI usage text (`fedspace help`).
@@ -33,12 +34,17 @@ COMMANDS:
   scenarios     the named scenario registry (constellation zoo)
                   scenarios list                 catalog of built-ins
                   scenarios describe <name>      summary + full TOML spec
+                    --json [FILE]                spec as JSON (stdout or FILE)
                   scenarios run <name|--config FILE>
                     --sats N / --steps N         scale the scenario down
                     --algorithm A                run one grid entry only
                     --engine dense|contacts|streamed  override engine mode
                     --target ACC                 stop at accuracy
                     --out-dir DIR                write per-algorithm curves
+                                                 + the run-artifact bundle
+                    --json [FILE]                run-artifact bundle with the
+                                                 full event stream (ADR-0009)
+                                                 to stdout or FILE
   bench-check   compare bench JSON against the committed baseline (CI gate)
                   --baseline A.json,B.json committed baselines, newest first;
                                           the first non-provisional one gates
@@ -262,6 +268,23 @@ pub fn schedule(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Benches added after the newest committed baseline was armed: reported by
+/// the harness but knowingly absent from the baseline until the next
+/// bench-baseline refresh. `bench-check` lists these as "pending" instead of
+/// warning about an unknown name, so a freshly added bench reads as expected
+/// lag rather than a misconfiguration.
+const PENDING_BASELINE_BENCHES: &[&str] = &[
+    "event_sink_overhead",
+    "sparse_aggregate_dense_ref",
+    "sparse_aggregate_topk",
+    "contact_capacity_route",
+    "robust_aggregate_mean",
+    "robust_aggregate_median",
+    "robust_aggregate_trimmed",
+    "robust_aggregate_krum",
+    "federation_reconcile",
+];
+
 /// `fedspace bench-check` — the CI perf-regression gate: merge one or more
 /// bench JSON outputs, compare them against the committed baseline, print
 /// a markdown table (also written to `--summary-out` for the CI step
@@ -307,15 +330,34 @@ pub fn bench_check(args: &Args) -> Result<()> {
         write_file(path, &md)?;
     }
     if !cmp.new_paths.is_empty() {
-        // a warning with a nonzero count, not a pass: a bench absent from
-        // the baseline is not gated, and silence here would let new benches
-        // dodge the gate forever
-        eprintln!(
-            "warning: {} tracked path(s) have no baseline entry and are NOT gated: {} — \
-             commit an updated baseline (the CI bench-baseline artifact) to arm them",
-            cmp.new_paths.len(),
-            cmp.new_paths.join(", ")
-        );
+        // benches the harness reports but the committed baseline predates are
+        // expected to lag one baseline refresh behind — list them as pending
+        // rather than crying wolf; anything NOT on the pending list is a
+        // genuinely unknown name and keeps the loud warning, because a bench
+        // absent from the baseline is not gated, and silence here would let
+        // new benches dodge the gate forever
+        let (pending, unknown): (Vec<&str>, Vec<&str>) = cmp
+            .new_paths
+            .iter()
+            .map(String::as_str)
+            .partition(|p| PENDING_BASELINE_BENCHES.contains(p));
+        if !pending.is_empty() {
+            println!(
+                "note: {} bench(es) reported but not yet gated (newer than the armed \
+                 baseline): {} — refresh the committed baseline (the CI bench-baseline \
+                 artifact) to arm them",
+                pending.len(),
+                pending.join(", ")
+            );
+        }
+        if !unknown.is_empty() {
+            eprintln!(
+                "warning: {} tracked path(s) have no baseline entry and are NOT gated: {} — \
+                 commit an updated baseline (the CI bench-baseline artifact) to arm them",
+                unknown.len(),
+                unknown.join(", ")
+            );
+        }
     }
     if !cmp.regressions.is_empty() {
         bail!(
@@ -380,6 +422,44 @@ fn resolve_scenario(args: &Args) -> Result<Scenario> {
     }
 }
 
+/// Where a `--json` request routes machine-readable output: nowhere (flag
+/// absent), stdout (`--json` bare), or a file (`--json FILE`).
+enum JsonOut {
+    No,
+    Stdout,
+    File(String),
+}
+
+/// Decode the `--json [FILE]` option shared by `scenarios describe` and
+/// `scenarios run`. A bare `--json` parses as a flag; `--json FILE` binds
+/// the path as an option value (see `args::Args`).
+fn json_request(args: &Args) -> JsonOut {
+    if let Some(path) = args.get("json") {
+        JsonOut::File(path.to_string())
+    } else if args.has_flag("json") {
+        JsonOut::Stdout
+    } else {
+        JsonOut::No
+    }
+}
+
+/// Render a scenario description as a standalone JSON document (schema
+/// `fedspace-scenario-v1`): identity fields plus the full TOML spec, so a
+/// consumer can both inspect and replay the scenario.
+fn describe_json(sc: &Scenario) -> String {
+    use crate::sim::events::json_escape;
+    format!(
+        "{{\"schema\":\"fedspace-scenario-v1\",\"name\":\"{}\",\"summary\":\"{}\",\
+         \"engine\":\"{}\",\"n_sats\":{},\"n_steps\":{},\"toml\":\"{}\"}}",
+        json_escape(&sc.name),
+        json_escape(&sc.summary),
+        sc.engine_mode.name(),
+        sc.constellation.n_sats(),
+        sc.n_steps,
+        json_escape(&sc.to_toml()),
+    )
+}
+
 /// `fedspace scenarios` — list, describe or run the constellation zoo.
 pub fn scenarios(args: &Args) -> Result<()> {
     match args.positional.first().map(String::as_str) {
@@ -423,8 +503,17 @@ pub fn scenarios(args: &Args) -> Result<()> {
         }
         Some("describe") => {
             let sc = resolve_scenario(args)?;
-            println!("# {} — {}\n", sc.name, sc.summary);
-            print!("{}", sc.to_toml());
+            match json_request(args) {
+                JsonOut::No => {
+                    println!("# {} — {}\n", sc.name, sc.summary);
+                    print!("{}", sc.to_toml());
+                }
+                JsonOut::Stdout => println!("{}", describe_json(&sc)),
+                JsonOut::File(path) => {
+                    write_file(&path, &describe_json(&sc))?;
+                    println!("scenario description written to {path}");
+                }
+            }
             Ok(())
         }
         Some("run") => {
@@ -439,6 +528,12 @@ pub fn scenarios(args: &Args) -> Result<()> {
                 sc.engine_mode = EngineMode::parse(e)?;
             }
             let stop_at = args.get("target").map(|t| t.parse::<f64>()).transpose()?;
+            let json_out = json_request(args);
+            if !matches!(json_out, JsonOut::No) {
+                // a bundle without its event stream is just the trace again;
+                // force recording on so --json always carries full events
+                sc.events = EventSpec { record: true };
+            }
             println!(
                 "scenario {}: {} ({} sats, {} stations, {} steps, {} engine, isl {}, \
                  {} gateway(s), attack {}, agg {}, codec {})",
@@ -455,43 +550,72 @@ pub fn scenarios(args: &Args) -> Result<()> {
                 if sc.link.enabled() { sc.link.codec.name() } else { "off" }
             );
             let outs = run_scenario(&sc, stop_at)?;
+            // every run becomes a run-artifact first; the human table below
+            // is rendered FROM the artifacts, so table and bundle can never
+            // disagree (ADR-0009)
+            let artifacts: Vec<RunArtifact> = outs
+                .iter()
+                .map(|out| {
+                    RunArtifact::from_run(
+                        &sc.name,
+                        out.algorithm.name(),
+                        sc.engine_mode.name(),
+                        sc.constellation.n_sats(),
+                        sc.n_steps,
+                        &out.result,
+                    )
+                })
+                .collect();
             let mut t = Table::new(&[
                 "algorithm", "rounds", "gw aggs", "uploads", "deferred", "relayed",
                 "inj/drop/corr", "idle%", "max stale", "best acc", "days→target",
             ]);
-            for out in &outs {
-                let r = &out.result;
+            for art in &artifacts {
                 t.row(&[
-                    out.algorithm.name().to_string(),
-                    r.final_round.to_string(),
-                    r.trace
+                    art.algorithm.clone(),
+                    art.final_round.to_string(),
+                    art.trace
                         .gateway_aggs
                         .iter()
                         .map(|n| n.to_string())
                         .collect::<Vec<_>>()
                         .join("/"),
-                    r.trace.uploads.to_string(),
-                    r.trace.deferred.to_string(),
-                    r.trace.relayed.to_string(),
+                    art.trace.uploads.to_string(),
+                    art.trace.deferred.to_string(),
+                    art.trace.relayed.to_string(),
                     format!(
                         "{}/{}/{}",
-                        r.trace.injected, r.trace.dropped, r.trace.corrupted
+                        art.trace.injected, art.trace.dropped, art.trace.corrupted
                     ),
-                    format!("{:.1}", 100.0 * r.trace.idle_fraction()),
-                    r.trace.staleness.max_key().unwrap_or(0).to_string(),
-                    format!("{:.4}", r.trace.curve.best_accuracy()),
-                    match r.days_to_target {
+                    format!("{:.1}", 100.0 * art.trace.idle_fraction()),
+                    art.trace.staleness.max_key().unwrap_or(0).to_string(),
+                    format!("{:.4}", art.trace.curve.best_accuracy()),
+                    match art.days_to_target {
                         Some(d) => format!("{d:.2}"),
                         None => "-".to_string(),
                     },
                 ]);
                 if let Some(dir) = args.get("out-dir") {
-                    let path = format!("{dir}/{}_{}.csv", sc.name, out.algorithm.name());
-                    write_file(&path, &r.trace.curve.to_csv())?;
+                    let path = format!("{dir}/{}_{}.csv", sc.name, art.algorithm);
+                    write_file(&path, &art.trace.curve.to_csv())?;
                     println!("curve written to {path}");
                 }
             }
             println!("{}", t.render());
+            match json_out {
+                JsonOut::Stdout => println!("{}", bundle_json(&artifacts)),
+                JsonOut::File(path) => {
+                    write_file(&path, &bundle_json(&artifacts))?;
+                    println!("run-artifact bundle written to {path}");
+                }
+                JsonOut::No => {
+                    if let Some(dir) = args.get("out-dir") {
+                        let path = format!("{dir}/{}_artifact.json", sc.name);
+                        write_file(&path, &bundle_json(&artifacts))?;
+                        println!("run-artifact bundle written to {path}");
+                    }
+                }
+            }
             Ok(())
         }
         Some(other) => bail!("unknown scenarios action {other:?} (list|describe|run)"),
@@ -636,6 +760,75 @@ mod tests {
             path("armed2.json")
         )))
         .is_err());
+    }
+
+    #[test]
+    fn bench_check_lists_pending_benches() {
+        use crate::bench_report::BenchReport;
+        let dir =
+            std::env::temp_dir().join(format!("fedspace_bench_pending_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = |n: &str| dir.join(n).to_string_lossy().into_owned();
+        let report = |benches: &[(&str, f64)]| BenchReport {
+            provisional: false,
+            benches: benches.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        };
+        std::fs::write(path("base.json"), report(&[("a", 1.0)]).to_json()).unwrap();
+        // a pending bench is reported (and wildly slow) yet never gated —
+        // the note replaces the unknown-name warning, the gate stays green
+        std::fs::write(
+            path("cur.json"),
+            report(&[("a", 1.0), ("event_sink_overhead", 9.0)]).to_json(),
+        )
+        .unwrap();
+        bench_check(&args(&format!(
+            "bench-check --baseline {} --current {} --summary-out {}",
+            path("base.json"),
+            path("cur.json"),
+            path("summary.md")
+        )))
+        .unwrap();
+        let summary = std::fs::read_to_string(path("summary.md")).unwrap();
+        assert!(summary.contains("event_sink_overhead"), "{summary}");
+        assert!(PENDING_BASELINE_BENCHES.contains(&"event_sink_overhead"));
+    }
+
+    #[test]
+    fn scenarios_json_outputs_round_trip() {
+        use crate::bench_report::parse_json;
+        let dir =
+            std::env::temp_dir().join(format!("fedspace_scen_json_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bundle = dir.join("bundle.json").to_string_lossy().into_owned();
+        scenarios(&args(&format!(
+            "scenarios run paper-fig7 --sats 6 --steps 24 --algorithm fedbuff --json {bundle}"
+        )))
+        .unwrap();
+        let doc = parse_json(&std::fs::read_to_string(&bundle).unwrap()).unwrap();
+        assert_eq!(
+            doc.get("schema").and_then(|v| v.as_str()),
+            Some("fedspace-run-artifact-v1")
+        );
+        let runs = doc.get("runs").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(runs.len(), 1, "one grid entry, one artifact");
+        let run = &runs[0];
+        assert_eq!(run.get("algorithm").and_then(|v| v.as_str()), Some("fedbuff"));
+        assert_eq!(run.get("n_sats").and_then(|v| v.as_num()), Some(6.0));
+        // --json forces event recording: the stream opens with run_start
+        let events = run.get("events").and_then(|v| v.as_arr()).unwrap();
+        assert!(!events.is_empty(), "--json must carry the event stream");
+        assert_eq!(events[0].get("type").and_then(|v| v.as_str()), Some("run_start"));
+        // every summary counter in the bundle is parseable as a number
+        let summary = run.get("summary").unwrap();
+        assert!(summary.get("uploads").and_then(|v| v.as_num()).is_some());
+        // describe --json round-trips through the same in-repo parser
+        let desc = dir.join("desc.json").to_string_lossy().into_owned();
+        scenarios(&args(&format!("scenarios describe paper-fig7 --json {desc}"))).unwrap();
+        let doc = parse_json(&std::fs::read_to_string(&desc).unwrap()).unwrap();
+        assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some("fedspace-scenario-v1"));
+        assert_eq!(doc.get("name").and_then(|v| v.as_str()), Some("paper-fig7"));
+        let toml = doc.get("toml").and_then(|v| v.as_str()).unwrap();
+        assert!(toml.contains("[constellation]"), "embedded TOML spec survives escaping");
     }
 
     #[test]

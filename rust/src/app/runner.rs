@@ -196,6 +196,7 @@ fn engine_cfg(cfg: &ExperimentConfig, stop_at: Option<f64>) -> EngineConfig {
         mode: cfg.engine_mode,
         attack: cfg.attack.clone(),
         link: cfg.link.clone(),
+        record_events: cfg.events.record,
     }
 }
 

@@ -287,19 +287,75 @@ impl Comparison {
 }
 
 /// Minimal JSON value (parse side only — the emit side is hand-formatted).
-/// Payloads of variants the report reader never destructures (arrays,
-/// nulls, loose strings) are still parsed for well-formedness.
-#[allow(dead_code)]
-enum Json {
+/// Public since PR 8: the run-artifact bundle (`sim::events::RunArtifact`)
+/// serializes through the same tiny layer, and its tests parse back with
+/// [`parse_json`] + the accessors below.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (parsed as `f64`).
     Num(f64),
+    /// Double-quoted string.
     Str(String),
+    /// `[...]` array.
     Arr(Vec<Json>),
+    /// `{...}` object, in document key order (duplicate keys preserved).
     Obj(Vec<(String, Json)>),
 }
 
-fn parse_json(text: &str) -> Result<Json> {
+impl Json {
+    /// First value under `key`, if this is an object.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(entries) => entries.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// As number, if this is a `Num`.
+    pub fn as_num(&self) -> Option<f64> {
+        match self {
+            Json::Num(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// As string slice, if this is a `Str`.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// As bool, if this is a `Bool`.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// As array slice, if this is an `Arr`.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// Is this the `null` literal?
+    pub fn is_null(&self) -> bool {
+        matches!(self, Json::Null)
+    }
+}
+
+/// Parse one JSON document (the subset the module doc names); rejects
+/// trailing bytes.
+pub fn parse_json(text: &str) -> Result<Json> {
     let mut p = Parser { b: text.as_bytes(), i: 0 };
     p.ws();
     let v = p.value()?;

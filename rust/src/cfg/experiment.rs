@@ -3,9 +3,10 @@
 //! FedBuff M = 96, FedSpace I0 = 24, N_min = 4, N_max = 8, |R| = 5000).
 
 use super::scenario::IslSpec;
+use super::section::{apply_section, validate_section, SectionCtx};
 use super::toml::{parse_toml, TomlDoc, TomlValue};
 use crate::fl::{FederationSpec, LinkSpec, RobustSpec};
-use crate::sim::AttackSpec;
+use crate::sim::{AttackSpec, EventSpec};
 use anyhow::{bail, Context, Result};
 
 /// Which aggregation-indicator algorithm the GS runs (§2.4, Eq. 5–7, §3).
@@ -199,6 +200,9 @@ pub struct ExperimentConfig {
     /// section. Disabled by default: the engine builds no codec, skips
     /// every capacity check, and runs bit-identical to the pre-link engine.
     pub link: LinkSpec,
+    /// Run-event recording (ADR-0009) — the `[events]` TOML section. Off
+    /// by default; the event stream still drives the trace either way.
+    pub events: EventSpec,
 }
 
 impl Default for ExperimentConfig {
@@ -237,6 +241,7 @@ impl Default for ExperimentConfig {
             attack: AttackSpec::default(),
             robust: RobustSpec::default(),
             link: LinkSpec::default(),
+            events: EventSpec::default(),
         }
     }
 }
@@ -329,21 +334,12 @@ impl ExperimentConfig {
         if let Some(v) = doc.get("sim").and_then(|s| s.get("engine")) {
             c.engine_mode = EngineMode::parse(v.as_str().context("engine must be string")?)?;
         }
-        if let Some(isl) = IslSpec::from_doc(doc)? {
-            c.isl = isl;
-        }
-        if let Some(federation) = FederationSpec::from_doc(doc)? {
-            c.federation = federation;
-        }
-        if let Some(attack) = AttackSpec::from_doc(doc)? {
-            c.attack = attack;
-        }
-        if let Some(robust) = RobustSpec::from_doc(doc)? {
-            c.robust = robust;
-        }
-        if let Some(link) = LinkSpec::from_doc(doc)? {
-            c.link = link;
-        }
+        apply_section(doc, &mut c.isl)?;
+        apply_section(doc, &mut c.federation)?;
+        apply_section(doc, &mut c.attack)?;
+        apply_section(doc, &mut c.robust)?;
+        apply_section(doc, &mut c.link)?;
+        apply_section(doc, &mut c.events)?;
         c.validate()?;
         Ok(c)
     }
@@ -371,14 +367,17 @@ impl ExperimentConfig {
         if !(0.0..=1.0).contains(&self.target_accuracy) {
             bail!("target_accuracy must be in [0,1]");
         }
-        self.isl.validate(self.n_steps)?;
         // the station-count half of the federation check runs where the
         // station network is known (the runner against planet12; scenarios
-        // validate against their own network)
-        self.federation.validate_structure()?;
-        self.attack.validate(self.n_sats)?;
-        self.robust.validate()?;
-        self.link.validate()?;
+        // validate against their own network) — signalled by the `None`
+        // station count in the context
+        let ctx = SectionCtx { n_steps: self.n_steps, n_sats: self.n_sats, n_stations: None };
+        validate_section(&self.isl, &ctx)?;
+        validate_section(&self.federation, &ctx)?;
+        validate_section(&self.attack, &ctx)?;
+        validate_section(&self.robust, &ctx)?;
+        validate_section(&self.link, &ctx)?;
+        validate_section(&self.events, &ctx)?;
         if self.link.capacity_enabled() && self.isl.enabled() {
             bail!(
                 "[link] byte budgets and [isl] routing are mutually exclusive: a relayed \

@@ -4,8 +4,10 @@
 
 pub mod experiment;
 pub mod scenario;
+pub mod section;
 pub mod toml;
 
 pub use experiment::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig};
+pub use section::{apply_section, emit_section, validate_section, SectionCtx, SectionSpec};
 pub use scenario::{ConstellationSpec, IslMode, IslSpec, Scenario, ShellSpec, StationNetwork};
 pub use toml::{parse_toml, TomlValue};

@@ -15,6 +15,7 @@
 //! identity (tested per built-in).
 
 use super::experiment::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig};
+use super::section::{apply_section, emit_section, validate_section, SectionCtx, SectionSpec};
 use super::toml::{parse_toml, TomlDoc, TomlValue};
 use crate::connectivity::{
     ConnectivityParams, ConnectivitySchedule, ConnectivityStream, ContactGraph, IslParams,
@@ -27,7 +28,7 @@ use crate::orbit::{
     planet_ground_stations, planet_labs_like, Constellation, DowntimeWindow, GroundStation,
     PlaneId, WalkerPattern, WalkerSpec,
 };
-use crate::sim::{AttackKind, AttackSpec};
+use crate::sim::{AttackKind, AttackSpec, EventSpec};
 use anyhow::{bail, Context, Result};
 
 /// One Walker-delta shell of a multi-shell constellation (mega-fleet
@@ -290,6 +291,26 @@ impl IslSpec {
     }
 }
 
+impl SectionSpec for IslSpec {
+    const SECTION: &'static str = "isl";
+
+    fn from_doc(doc: &TomlDoc) -> Result<Option<Self>> {
+        IslSpec::from_doc(doc)
+    }
+
+    fn emit_toml(&self, out: &mut String) {
+        IslSpec::emit_toml(self, out)
+    }
+
+    fn is_emitted(&self) -> bool {
+        self.enabled()
+    }
+
+    fn validate(&self, ctx: &SectionCtx) -> Result<()> {
+        IslSpec::validate(self, ctx.n_steps)
+    }
+}
+
 /// Named ground-station network a scenario links against.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum StationNetwork {
@@ -385,6 +406,9 @@ pub struct Scenario {
     /// spec builds no codec, tracks no pass durations, and keeps the run
     /// bit-identical to the pre-link engine.
     pub link: LinkSpec,
+    /// Run-event recording (ADR-0009). Off by default: the event stream is
+    /// still how the trace is derived, but nothing is kept in memory.
+    pub events: EventSpec,
 }
 
 impl Default for Scenario {
@@ -408,6 +432,7 @@ impl Default for Scenario {
             attack: AttackSpec::default(),
             robust: RobustSpec::default(),
             link: LinkSpec::default(),
+            events: EventSpec::default(),
         }
     }
 }
@@ -470,11 +495,19 @@ impl Scenario {
                 bail!("empty downtime window for satellite {}", w.sat);
             }
         }
-        self.isl.validate(self.n_steps)?;
-        self.federation.validate(self.stations.build().len())?;
-        self.attack.validate(self.constellation.n_sats())?;
-        self.robust.validate()?;
-        self.link.validate()?;
+        // every TOML section validates through the one SectionSpec surface,
+        // so the scenario and experiment-config parsers share bounds
+        let ctx = SectionCtx {
+            n_steps: self.n_steps,
+            n_sats: self.constellation.n_sats(),
+            n_stations: Some(self.stations.build().len()),
+        };
+        validate_section(&self.isl, &ctx)?;
+        validate_section(&self.federation, &ctx)?;
+        validate_section(&self.attack, &ctx)?;
+        validate_section(&self.robust, &ctx)?;
+        validate_section(&self.link, &ctx)?;
+        validate_section(&self.events, &ctx)?;
         if self.link.capacity_enabled() && self.isl.enabled() {
             bail!(
                 "[link] byte budgets and [isl] routing are mutually exclusive: a relayed \
@@ -895,21 +928,12 @@ impl Scenario {
                 DataDist::NonIid => "noniid",
             }
         );
-        if self.isl.enabled() {
-            self.isl.emit_toml(&mut s);
-        }
-        if !self.federation.is_default() {
-            self.federation.emit_toml(&mut s);
-        }
-        if self.attack.enabled() {
-            self.attack.emit_toml(&mut s);
-        }
-        if !self.robust.is_default() {
-            self.robust.emit_toml(&mut s);
-        }
-        if self.link.enabled() {
-            self.link.emit_toml(&mut s);
-        }
+        emit_section(&self.isl, &mut s);
+        emit_section(&self.federation, &mut s);
+        emit_section(&self.attack, &mut s);
+        emit_section(&self.robust, &mut s);
+        emit_section(&self.link, &mut s);
+        emit_section(&self.events, &mut s);
         if !self.downtime.is_empty() {
             let col = |f: fn(&DowntimeWindow) -> usize| -> String {
                 self.downtime.iter().map(|w| f(w).to_string()).collect::<Vec<_>>().join(", ")
@@ -1087,21 +1111,12 @@ impl Scenario {
             sc.dist = DataDist::parse(v)?;
         }
 
-        if let Some(isl) = IslSpec::from_doc(doc)? {
-            sc.isl = isl;
-        }
-        if let Some(federation) = FederationSpec::from_doc(doc)? {
-            sc.federation = federation;
-        }
-        if let Some(attack) = AttackSpec::from_doc(doc)? {
-            sc.attack = attack;
-        }
-        if let Some(robust) = RobustSpec::from_doc(doc)? {
-            sc.robust = robust;
-        }
-        if let Some(link) = LinkSpec::from_doc(doc)? {
-            sc.link = link;
-        }
+        apply_section(doc, &mut sc.isl)?;
+        apply_section(doc, &mut sc.federation)?;
+        apply_section(doc, &mut sc.attack)?;
+        apply_section(doc, &mut sc.robust)?;
+        apply_section(doc, &mut sc.link)?;
+        apply_section(doc, &mut sc.events)?;
 
         if doc.get("downtime").is_some() {
             let col = |key: &str| -> Result<Vec<usize>> {
@@ -1292,6 +1307,7 @@ impl Scenario {
             attack: self.attack.clone(),
             robust: self.robust.clone(),
             link: self.link.clone(),
+            events: self.events,
             ..Default::default()
         }
     }

@@ -279,6 +279,26 @@ impl LinkSpec {
     }
 }
 
+impl crate::cfg::section::SectionSpec for LinkSpec {
+    const SECTION: &'static str = "link";
+
+    fn from_doc(doc: &TomlDoc) -> Result<Option<Self>> {
+        LinkSpec::from_doc(doc)
+    }
+
+    fn emit_toml(&self, out: &mut String) {
+        LinkSpec::emit_toml(self, out)
+    }
+
+    fn is_emitted(&self) -> bool {
+        self.enabled()
+    }
+
+    fn validate(&self, _ctx: &crate::cfg::section::SectionCtx) -> Result<()> {
+        LinkSpec::validate(self)
+    }
+}
+
 /// Live encoder owned by the engine's `RunState`, built only when
 /// [`LinkSpec::enabled`]. One instance serves the whole fleet; per-client
 /// error-feedback residuals live on `SatClient` and are passed in.

@@ -363,6 +363,32 @@ impl FederationSpec {
     }
 }
 
+impl crate::cfg::section::SectionSpec for FederationSpec {
+    const SECTION: &'static str = "federation";
+
+    fn from_doc(doc: &TomlDoc) -> Result<Option<Self>> {
+        FederationSpec::from_doc(doc)
+    }
+
+    fn emit_toml(&self, out: &mut String) {
+        FederationSpec::emit_toml(self, out)
+    }
+
+    fn is_emitted(&self) -> bool {
+        !self.is_default()
+    }
+
+    fn validate(&self, ctx: &crate::cfg::section::SectionCtx) -> Result<()> {
+        // the station map can only be bounds-checked against a known
+        // station network; contexts without one (experiment configs, which
+        // always rebuild planet12 downstream) check internal consistency
+        match ctx.n_stations {
+            Some(n) => FederationSpec::validate(self, n),
+            None => self.validate_structure(),
+        }
+    }
+}
+
 /// The per-contact upload-routing table of a multi-gateway run: which
 /// gateway hears which satellite at which step, attributed to the
 /// lowest-indexed visible station (ADR-0006). Built once per run from raw

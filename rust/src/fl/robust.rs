@@ -369,6 +369,26 @@ impl RobustSpec {
     }
 }
 
+impl crate::cfg::section::SectionSpec for RobustSpec {
+    const SECTION: &'static str = "robust";
+
+    fn from_doc(doc: &TomlDoc) -> Result<Option<Self>> {
+        RobustSpec::from_doc(doc)
+    }
+
+    fn emit_toml(&self, out: &mut String) {
+        RobustSpec::emit_toml(self, out)
+    }
+
+    fn is_emitted(&self) -> bool {
+        !self.is_default()
+    }
+
+    fn validate(&self, _ctx: &crate::cfg::section::SectionCtx) -> Result<()> {
+        RobustSpec::validate(self)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

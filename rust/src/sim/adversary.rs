@@ -20,10 +20,10 @@
 //! the honest side of an attacked run matches the clean run until the
 //! first poisoned aggregate lands.
 
+use crate::cfg::section::{SectionCtx, SectionSpec};
 use crate::cfg::toml::{TomlDoc, TomlValue};
 use crate::fl::codec::Update;
 use crate::rng::Rng;
-use crate::sim::trace::RunTrace;
 use anyhow::{bail, Context, Result};
 
 /// Stream-id XOR'd into the run seed for the adversary RNG, keeping its
@@ -225,6 +225,47 @@ impl AttackSpec {
     }
 }
 
+impl SectionSpec for AttackSpec {
+    const SECTION: &'static str = "attack";
+
+    fn from_doc(doc: &TomlDoc) -> Result<Option<Self>> {
+        AttackSpec::from_doc(doc)
+    }
+
+    fn emit_toml(&self, out: &mut String) {
+        AttackSpec::emit_toml(self, out)
+    }
+
+    fn is_emitted(&self) -> bool {
+        self.enabled()
+    }
+
+    fn validate(&self, ctx: &SectionCtx) -> Result<()> {
+        AttackSpec::validate(self, ctx.n_sats)
+    }
+}
+
+/// What [`Adversary::apply`] did to one upload. The engine folds these
+/// flags into its `Upload` run event (ADR-0009) — the adversary itself no
+/// longer touches any trace.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ApplyOutcome {
+    /// The (possibly transformed) upload; `None` when the link dropped it.
+    pub update: Option<Update>,
+    /// A compromised satellite transformed the upload (a replayed *first*
+    /// upload passes through honestly and is not flagged).
+    pub injected: bool,
+    /// A link fault flipped one stored bit.
+    pub corrupted: bool,
+}
+
+impl ApplyOutcome {
+    /// An untouched pass-through (the attack-off path).
+    pub fn clean(update: Update) -> Self {
+        ApplyOutcome { update: Some(update), injected: false, corrupted: false }
+    }
+}
+
 /// Live injector owned by the engine's `RunState`, built only when
 /// [`AttackSpec::enabled`]. [`Self::apply`] transforms each upload at the
 /// boundary between `SatClient::upload` and `Federation::receive`, in a
@@ -250,28 +291,30 @@ impl Adversary {
         }
     }
 
-    /// Transform one upload from satellite `sat`. Returns `None` when the
-    /// link drops it (the satellite has already consumed its `upload`, so
-    /// it believes it transmitted — exactly a lost frame). The upload
+    /// Transform one upload from satellite `sat`. The returned
+    /// [`ApplyOutcome`] carries `update: None` when the link drops it (the
+    /// satellite has already consumed its `upload`, so it believes it
+    /// transmitted — exactly a lost frame) plus the injected/corrupted
+    /// flags the engine folds into its `Upload` run event. The upload
     /// arrives in the codec's wire form (ADR-0008: encode runs first), and
     /// every transform operates on the *stored* values — dense
     /// coordinates, or a sparse payload's `(indices, values)` values — so
     /// an adversary poisons what is actually transmitted. For dense
     /// updates this is bit-identical to the pre-codec behaviour. Draw
     /// order is part of the determinism contract:
-    /// 1. link drop (`drop_prob`), counted in `trace.dropped`;
-    /// 2. adversary transform when `sat` is compromised, counted in
-    ///    `trace.injected` (a replayed *first* upload passes through
-    ///    honestly and is not counted);
-    /// 3. single-bit corruption (`corrupt_prob`), counted in
-    ///    `trace.corrupted` — the flipped bit is drawn from the mantissa
-    ///    (0..=22) or sign (31), never the exponent, so a finite gradient
-    ///    stays finite (no NaN/inf can enter Eq. 4 through this fault).
-    pub fn apply(&mut self, sat: usize, mut grad: Update, trace: &mut RunTrace) -> Option<Update> {
+    /// 1. link drop (`drop_prob`) — a drop short-circuits, so a dropped
+    ///    upload is never also flagged injected/corrupted;
+    /// 2. adversary transform when `sat` is compromised (a replayed
+    ///    *first* upload passes through honestly, unflagged);
+    /// 3. single-bit corruption (`corrupt_prob`) — the flipped bit is
+    ///    drawn from the mantissa (0..=22) or sign (31), never the
+    ///    exponent, so a finite gradient stays finite (no NaN/inf can
+    ///    enter Eq. 4 through this fault).
+    pub fn apply(&mut self, sat: usize, mut grad: Update) -> ApplyOutcome {
         if self.spec.drop_prob > 0.0 && self.rng.gen_bool(self.spec.drop_prob) {
-            trace.dropped += 1;
-            return None;
+            return ApplyOutcome { update: None, injected: false, corrupted: false };
         }
+        let mut injected = false;
         if self.is_adv[sat] {
             match self.spec.kind {
                 AttackKind::None => {}
@@ -279,14 +322,14 @@ impl Adversary {
                     for v in grad.values_mut() {
                         *v = -*v;
                     }
-                    trace.injected += 1;
+                    injected = true;
                 }
                 AttackKind::ScaledGrad => {
                     let scale = self.spec.scale as f32;
                     for v in grad.values_mut() {
                         *v *= scale;
                     }
-                    trace.injected += 1;
+                    injected = true;
                 }
                 AttackKind::StaleReplay => match &mut self.replay[sat] {
                     slot @ None => {
@@ -294,11 +337,12 @@ impl Adversary {
                     }
                     Some(stored) => {
                         std::mem::swap(stored, &mut grad);
-                        trace.injected += 1;
+                        injected = true;
                     }
                 },
             }
         }
+        let mut corrupted = false;
         if self.spec.corrupt_prob > 0.0
             && self.rng.gen_bool(self.spec.corrupt_prob)
             && !grad.values().is_empty()
@@ -308,9 +352,9 @@ impl Adversary {
             let bit = if sel == 23 { 31 } else { sel };
             let vals = grad.values_mut();
             vals[e] = f32::from_bits(vals[e].to_bits() ^ (1u32 << bit));
-            trace.corrupted += 1;
+            corrupted = true;
         }
-        Some(grad)
+        ApplyOutcome { update: Some(grad), injected, corrupted }
     }
 }
 
@@ -350,13 +394,17 @@ mod tests {
         };
         let run = |seed: u64| {
             let mut adv = Adversary::new(&spec, 4, seed);
-            let mut trace = RunTrace::default();
+            let (mut injected, mut dropped, mut corrupted) = (0usize, 0usize, 0usize);
             let mut out = Vec::new();
             for i in 0..64usize {
                 let g = vec![i as f32, -(i as f32), 0.5];
-                out.push(adv.apply(i % 4, g.into(), &mut trace));
+                let fx = adv.apply(i % 4, g.into());
+                injected += fx.injected as usize;
+                dropped += fx.update.is_none() as usize;
+                corrupted += fx.corrupted as usize;
+                out.push(fx.update);
             }
-            (out, trace.injected, trace.dropped, trace.corrupted)
+            (out, injected, dropped, corrupted)
         };
         let a = run(42);
         let b = run(42);
@@ -374,36 +422,38 @@ mod tests {
         let spec =
             AttackSpec { corrupt_prob: 1.0, ..Default::default() };
         let mut adv = Adversary::new(&spec, 1, 7);
-        let mut trace = RunTrace::default();
+        let mut corrupted = 0usize;
         for i in 0..2000 {
             let g = vec![1.5e30, -2.5e-30, 0.0, i as f32];
-            let out = adv.apply(0, g.into(), &mut trace).unwrap();
-            for v in out.values() {
+            let fx = adv.apply(0, g.into());
+            corrupted += fx.corrupted as usize;
+            let up = fx.update.unwrap();
+            for v in up.values() {
                 assert!(v.is_finite(), "corruption produced a non-finite value: {v}");
             }
         }
-        assert_eq!(trace.corrupted, 2000);
+        assert_eq!(corrupted, 2000);
     }
 
     #[test]
     fn stale_replay_swaps_from_the_second_upload() {
         let spec = AttackSpec { kind: AttackKind::StaleReplay, sats: vec![0], ..Default::default() };
         let mut adv = Adversary::new(&spec, 2, 1);
-        let mut trace = RunTrace::default();
         // first upload passes through honestly while being recorded
-        let out = adv.apply(0, vec![1.0].into(), &mut trace).unwrap();
-        assert_eq!(out, vec![1.0].into());
-        assert_eq!(trace.injected, 0);
+        let fx = adv.apply(0, vec![1.0].into());
+        assert_eq!(fx.update, Some(vec![1.0].into()));
+        assert!(!fx.injected, "honest first pass must not be flagged");
         // second upload is replaced by the first; the second is now stored
-        let out = adv.apply(0, vec![2.0].into(), &mut trace).unwrap();
-        assert_eq!(out, vec![1.0].into());
-        assert_eq!(trace.injected, 1);
-        let out = adv.apply(0, vec![3.0].into(), &mut trace).unwrap();
-        assert_eq!(out, vec![2.0].into(), "rolling swap, always one upload behind");
+        let fx = adv.apply(0, vec![2.0].into());
+        assert_eq!(fx.update, Some(vec![1.0].into()));
+        assert!(fx.injected);
+        let fx = adv.apply(0, vec![3.0].into());
+        assert_eq!(fx.update, Some(vec![2.0].into()), "rolling swap, always one upload behind");
+        assert!(fx.injected);
         // honest satellite untouched
-        let out = adv.apply(1, vec![9.0].into(), &mut trace).unwrap();
-        assert_eq!(out, vec![9.0].into());
-        assert_eq!(trace.injected, 2);
+        let fx = adv.apply(1, vec![9.0].into());
+        assert_eq!(fx.update, Some(vec![9.0].into()));
+        assert!(!fx.injected);
     }
 
     #[test]
@@ -417,18 +467,21 @@ mod tests {
             ..Default::default()
         };
         let mut adv = Adversary::new(&spec, 1, 5);
-        let mut trace = RunTrace::default();
         let up = Update::Sparse { dim: 10, idx: vec![2, 7], val: vec![1.0, -3.0] };
-        let out = adv.apply(0, up, &mut trace).unwrap();
-        assert_eq!(out, Update::Sparse { dim: 10, idx: vec![2, 7], val: vec![-2.0, 6.0] });
-        assert_eq!(trace.injected, 1);
+        let fx = adv.apply(0, up);
+        assert_eq!(
+            fx.update,
+            Some(Update::Sparse { dim: 10, idx: vec![2, 7], val: vec![-2.0, 6.0] })
+        );
+        assert!(fx.injected);
         // corruption indexes the stored values, never past nnz
         let spec = AttackSpec { corrupt_prob: 1.0, ..Default::default() };
         let mut adv = Adversary::new(&spec, 1, 6);
         for _ in 0..200 {
             let up = Update::Sparse { dim: 1_000_000, idx: vec![5, 999_999], val: vec![1.0, 2.0] };
-            let out = adv.apply(0, up, &mut trace).unwrap();
-            let Update::Sparse { dim, idx, val } = out else { panic!() };
+            let fx = adv.apply(0, up);
+            assert!(fx.corrupted);
+            let Some(Update::Sparse { dim, idx, val }) = fx.update else { panic!() };
             assert_eq!((dim, idx.len(), val.len()), (1_000_000, 2, 2));
             assert!(val.iter().all(|v| v.is_finite()));
         }

@@ -34,10 +34,10 @@ use crate::fl::{
     UploadRouting,
 };
 use crate::fl::client::SatClient;
-use crate::metrics::CurvePoint;
 use crate::rng::Rng;
 use crate::sched::{FedSpacePlanner, SatForecastState};
-use crate::sim::adversary::{Adversary, AttackSpec};
+use crate::sim::adversary::{Adversary, ApplyOutcome, AttackSpec};
+use crate::sim::events::{EventSink, NullSink, RunEvent, TimingPhase, TraceSink, UploadOutcome};
 use crate::sim::trace::RunTrace;
 use crate::sim::trainer::Trainer;
 use anyhow::Result;
@@ -75,6 +75,10 @@ pub struct EngineConfig {
     /// no codec is built, no capacity check runs, and the upload path is
     /// byte-for-byte the plain one.
     pub link: LinkSpec,
+    /// Record the typed event stream into [`RunResult::events`]
+    /// (ADR-0009). Off by default: the stream is still *emitted* (that is
+    /// how the trace is derived), but nothing is allocated to keep it.
+    pub record_events: bool,
 }
 
 impl Default for EngineConfig {
@@ -92,13 +96,15 @@ impl Default for EngineConfig {
             mode: EngineMode::Dense,
             attack: AttackSpec::default(),
             link: LinkSpec::default(),
+            record_events: false,
         }
     }
 }
 
 /// Outcome of one run.
 pub struct RunResult {
-    /// Everything the figures/tables need from the run.
+    /// Everything the figures/tables need from the run — a derived view
+    /// over the event stream (ADR-0009).
     pub trace: RunTrace,
     /// simulated days at which the target accuracy was first reached
     pub days_to_target: Option<f64>,
@@ -106,6 +112,10 @@ pub struct RunResult {
     pub final_w: Vec<f32>,
     /// Final global round index i_g.
     pub final_round: usize,
+    /// The typed event stream, recorded only when
+    /// [`EngineConfig::record_events`] is set (empty otherwise).
+    /// `testing::assert_same_run` compares these element-wise.
+    pub events: Vec<RunEvent>,
 }
 
 enum PolicyImpl {
@@ -326,7 +336,11 @@ struct RunState {
     /// [`LinkSpec::payload_bytes`] at the trainer's dimension); 0 when the
     /// byte budget is off, in which case no capacity check runs.
     payload_bytes: u64,
+    /// Derived view over the event stream: mutated exclusively through
+    /// [`TraceSink::apply`] inside [`emit_event`] (ADR-0009).
     trace: RunTrace,
+    /// Recorded event stream; `Some` iff [`EngineConfig::record_events`].
+    recorded: Option<Vec<RunEvent>>,
     last_loss: f64,
     days_to_target: Option<f64>,
 }
@@ -340,6 +354,26 @@ impl RunState {
         self.policies
             .iter()
             .any(|p| matches!(p, PolicyImpl::FedSpace(sp) if sp.horizon() <= i))
+    }
+}
+
+/// Route one [`RunEvent`] through the three consumer paths (ADR-0009):
+/// the trace derivation ([`TraceSink::apply`] — the only place trace
+/// counters mutate), the observer (monomorphized; [`NullSink`] inlines to
+/// nothing), and the recorder (populated only under
+/// [`EngineConfig::record_events`]). Takes disjoint `RunState` fields so
+/// call sites may hold other `st` borrows.
+#[inline]
+fn emit_event<S: EventSink>(
+    trace: &mut RunTrace,
+    recorded: &mut Option<Vec<RunEvent>>,
+    observer: &mut S,
+    event: RunEvent,
+) {
+    TraceSink::apply(trace, &event);
+    observer.emit(&event);
+    if let Some(log) = recorded {
+        log.push(event);
     }
 }
 
@@ -370,7 +404,7 @@ impl RunState {
 /// the single-gateway fast path — no lookup, no filtering, no merge: the
 /// pre-federation engine bit for bit.
 #[allow(clippy::too_many_arguments)]
-fn run_step(
+fn run_step<S: EventSink>(
     st: &mut RunState,
     trainer: &dyn Trainer,
     aggregator: &mut dyn ServerAggregator,
@@ -385,6 +419,7 @@ fn run_step(
     dur_denom: u16,
     i: usize,
     n_steps: usize,
+    observer: &mut S,
 ) -> Result<bool> {
     // FedSpace: (re)plan at window boundaries using the live state, one
     // window per gateway (a single shared `states` snapshot — versions and
@@ -434,6 +469,17 @@ fn run_step(
                         }
                     };
                     sp.extend(&window);
+                    emit_event(
+                        &mut st.trace,
+                        &mut st.recorded,
+                        observer,
+                        RunEvent::PlanDecision {
+                            step: i,
+                            gateway: g,
+                            horizon: window.len(),
+                            planned_aggs: window.iter().filter(|&&b| b).count(),
+                        },
+                    );
                 }
             }
         }
@@ -459,7 +505,12 @@ fn run_step(
     for (j, &s) in conn.iter().enumerate() {
         let hops = if conn_hops.is_empty() { 0 } else { conn_hops[j] as usize };
         let delay = hops * hop_delay;
-        st.trace.connections += 1;
+        emit_event(
+            &mut st.trace,
+            &mut st.recorded,
+            observer,
+            RunEvent::Contact { step: i, sat: s, hops },
+        );
         if st.clients[s].can_upload_relayed(i, delay) {
             // byte budget (ADR-0008): the encoded payload must fit the
             // contact's capacity (rate × pass duration). A blocked upload
@@ -468,7 +519,21 @@ fn run_step(
             if st.payload_bytes > 0
                 && st.payload_bytes > contact_budget(cfg.link.rate_bytes_per_slot, conn_durs, j, dur_denom)
             {
-                st.trace.deferred += 1;
+                emit_event(
+                    &mut st.trace,
+                    &mut st.recorded,
+                    observer,
+                    RunEvent::Upload {
+                        step: i,
+                        origin: s,
+                        gateway: 0,
+                        hops,
+                        bytes: st.payload_bytes,
+                        outcome: UploadOutcome::Deferred,
+                        injected: false,
+                        corrupted: false,
+                    },
+                );
                 continue;
             }
             let (grad, base) = st.clients[s].upload(i);
@@ -479,19 +544,49 @@ fn run_step(
                 None => grad.into(),
                 Some(codec) => codec.encode(grad, &mut st.clients[s].residual),
             };
-            let grad = match &mut st.adversary {
-                None => Some(grad),
-                Some(adv) => adv.apply(s, grad, &mut st.trace),
+            let fx = match &mut st.adversary {
+                None => ApplyOutcome::clean(grad),
+                Some(adv) => adv.apply(s, grad),
             };
-            if let Some(grad) = grad {
-                st.fed.receive(route(s, hops), s, grad, base, st.clients[s].n_samples);
-                st.trace.uploads += 1;
-                if hops > 0 {
-                    st.trace.relayed += 1;
+            let (outcome, gateway) = match fx.update {
+                Some(grad) => {
+                    let g = route(s, hops);
+                    st.fed.receive(g, s, grad, base, st.clients[s].n_samples);
+                    (UploadOutcome::Delivered, g)
                 }
-            }
+                None => (UploadOutcome::Dropped, 0),
+            };
+            emit_event(
+                &mut st.trace,
+                &mut st.recorded,
+                observer,
+                RunEvent::Upload {
+                    step: i,
+                    origin: s,
+                    gateway,
+                    hops,
+                    bytes: st.payload_bytes,
+                    outcome,
+                    injected: fx.injected,
+                    corrupted: fx.corrupted,
+                },
+            );
         } else {
-            st.trace.idle += 1;
+            emit_event(
+                &mut st.trace,
+                &mut st.recorded,
+                observer,
+                RunEvent::Upload {
+                    step: i,
+                    origin: s,
+                    gateway: 0,
+                    hops,
+                    bytes: st.payload_bytes,
+                    outcome: UploadOutcome::Idle,
+                    injected: false,
+                    corrupted: false,
+                },
+            );
         }
     }
 
@@ -499,13 +594,36 @@ fn run_step(
     // deterministic merge/update order of ADR-0006)
     for (g, policy) in st.policies.iter_mut().enumerate() {
         if policy.decide(i, conn, &st.fed.gateways[g].buffer) {
+            let reconciles_before = st.fed.reconciles;
             let t = Instant::now();
             let stalenesses = st.fed.update(g, aggregator)?;
-            st.trace.t_agg_s += t.elapsed().as_secs_f64();
-            for s in stalenesses {
-                st.trace.staleness.add(s as i64);
+            let dt = t.elapsed().as_secs_f64();
+            emit_event(
+                &mut st.trace,
+                &mut st.recorded,
+                observer,
+                RunEvent::Aggregate {
+                    step: i,
+                    gateway: g,
+                    round: st.fed.round(),
+                    staleness: stalenesses,
+                },
+            );
+            emit_event(
+                &mut st.trace,
+                &mut st.recorded,
+                observer,
+                RunEvent::Timing { phase: TimingPhase::Aggregate, seconds: dt },
+            );
+            let merges = st.fed.reconciles - reconciles_before;
+            if merges > 0 {
+                emit_event(
+                    &mut st.trace,
+                    &mut st.recorded,
+                    observer,
+                    RunEvent::Reconcile { step: i, merges },
+                );
             }
-            st.trace.global_updates += 1;
         }
     }
 
@@ -521,7 +639,13 @@ fn run_step(
             let t = Instant::now();
             let model = st.fed.broadcast_model(route(s, hops));
             let (delta, _train_loss) = trainer.local_update(s, model, &mut st.sat_rngs[s])?;
-            st.trace.t_train_s += t.elapsed().as_secs_f64();
+            let dt = t.elapsed().as_secs_f64();
+            emit_event(
+                &mut st.trace,
+                &mut st.recorded,
+                observer,
+                RunEvent::Timing { phase: TimingPhase::Train, seconds: dt },
+            );
             st.clients[s].set_update(delta);
         }
     }
@@ -529,7 +653,17 @@ fn run_step(
     // 3b. cross-gateway reconcile cadence (ADR-0006): before evaluation,
     // so the curve sees the model "after reconcile". A no-op for
     // `Centralized` and on quiet boundaries.
+    let reconciles_before = st.fed.reconciles;
     st.fed.end_of_step(i);
+    let merges = st.fed.reconciles - reconciles_before;
+    if merges > 0 {
+        emit_event(
+            &mut st.trace,
+            &mut st.recorded,
+            observer,
+            RunEvent::Reconcile { step: i, merges },
+        );
+    }
 
     // 4. periodic evaluation (of the global model)
     let last_step = i + 1 == n_steps;
@@ -537,16 +671,27 @@ fn run_step(
         let t = Instant::now();
         let global_w = st.fed.global_model();
         let (loss, acc) = trainer.evaluate(&global_w)?;
-        st.trace.t_eval_s += t.elapsed().as_secs_f64();
+        let dt = t.elapsed().as_secs_f64();
         st.last_loss = loss;
         let day = (i + 1) as f64 * cfg.days_per_step;
-        st.trace.curve.push(CurvePoint {
-            day,
-            step: i + 1,
-            round: st.fed.round(),
-            accuracy: acc,
-            loss,
-        });
+        emit_event(
+            &mut st.trace,
+            &mut st.recorded,
+            observer,
+            RunEvent::Eval {
+                step: i + 1,
+                round: st.fed.round(),
+                day,
+                accuracy: acc,
+                loss,
+            },
+        );
+        emit_event(
+            &mut st.trace,
+            &mut st.recorded,
+            observer,
+            RunEvent::Timing { phase: TimingPhase::Eval, seconds: dt },
+        );
         if let Some(target) = cfg.stop_at_accuracy {
             if acc >= target && st.days_to_target.is_none() {
                 st.days_to_target = Some(day);
@@ -743,8 +888,19 @@ impl<'a> Engine<'a> {
         }
     }
 
-    /// Execute Algorithm 1 end to end.
+    /// Execute Algorithm 1 end to end with the default [`NullSink`]
+    /// observer (zero-cost: the sink monomorphizes to empty inlined
+    /// calls, so unobserved runs stay bit- and speed-identical).
     pub fn run(&mut self) -> Result<RunResult> {
+        self.run_observed(&mut NullSink)
+    }
+
+    /// Execute Algorithm 1 end to end, pushing every [`RunEvent`] into
+    /// `observer` as it happens (ADR-0009). The engine's own `RunTrace`
+    /// is itself derived from the same stream via [`TraceSink::apply`] —
+    /// there is exactly one emission site per phenomenon and no separate
+    /// counter bookkeeping.
+    pub fn run_observed<S: EventSink>(&mut self, observer: &mut S) -> Result<RunResult> {
         let cfg = self.cfg.clone();
         let k = self.source.n_sats();
         let n_steps = self.source.n_steps();
@@ -801,22 +957,37 @@ impl<'a> Engine<'a> {
             codec,
             payload_bytes,
             trace: RunTrace::default(),
+            recorded: cfg.record_events.then(Vec::new),
             last_loss: 0.0,
             days_to_target: None,
         };
 
+        // stream header: sizes every derived per-gateway vector up front,
+        // so zero-activity gateways still show up as explicit zeros
+        emit_event(
+            &mut st.trace,
+            &mut st.recorded,
+            observer,
+            RunEvent::RunStart { n_sats: k, n_steps, n_gateways: spec.n_gateways() },
+        );
+
         // initial evaluation seeds the curve and the training status T
         let t0 = Instant::now();
         let (loss0, acc0) = self.trainer.evaluate(&st.fed.global_model())?;
-        st.trace.t_eval_s += t0.elapsed().as_secs_f64();
+        let dt0 = t0.elapsed().as_secs_f64();
         st.last_loss = loss0;
-        st.trace.curve.push(CurvePoint {
-            day: 0.0,
-            step: 0,
-            round: 0,
-            accuracy: acc0,
-            loss: loss0,
-        });
+        emit_event(
+            &mut st.trace,
+            &mut st.recorded,
+            observer,
+            RunEvent::Eval { step: 0, round: 0, day: 0.0, accuracy: acc0, loss: loss0 },
+        );
+        emit_event(
+            &mut st.trace,
+            &mut st.recorded,
+            observer,
+            RunEvent::Timing { phase: TimingPhase::Eval, seconds: dt0 },
+        );
 
         match self.source {
             ScheduleSource::Precomputed(sched) => {
@@ -868,6 +1039,7 @@ impl<'a> Engine<'a> {
                         dur_denom,
                         i,
                         n_steps,
+                        observer,
                     )?;
                     if stop {
                         break;
@@ -919,6 +1091,7 @@ impl<'a> Engine<'a> {
                         stream.duration_denom(),
                         i,
                         n_steps,
+                        observer,
                     )?;
                     if stop {
                         break;
@@ -946,20 +1119,26 @@ impl<'a> Engine<'a> {
             }
         }
 
-        // trace.global_updates is incremented exactly where fed.update()
-        // runs, so it already equals the global round — asserted here and
-        // tested below rather than overwritten (it used to be clobbered
-        // with gs.i_g at the end, leaving two competing sources of truth).
+        // every trace counter is a derived view over the event stream
+        // (ADR-0009) — the federation's own counters are kept only as an
+        // independent cross-check that the derivation didn't drift
         debug_assert_eq!(st.trace.global_updates, st.fed.round());
-        st.trace.gateway_aggs = st.fed.gateways.iter().map(|g| g.aggregations).collect();
-        st.trace.gateway_uploads = st.fed.gateways.iter().map(|g| g.uploads).collect();
-        st.trace.reconciles = st.fed.reconciles;
+        debug_assert_eq!(st.trace.reconciles, st.fed.reconciles);
+        debug_assert_eq!(
+            st.trace.gateway_aggs,
+            st.fed.gateways.iter().map(|g| g.aggregations).collect::<Vec<_>>()
+        );
+        debug_assert_eq!(
+            st.trace.gateway_uploads,
+            st.fed.gateways.iter().map(|g| g.uploads).collect::<Vec<_>>()
+        );
         let final_round = st.fed.round();
         Ok(RunResult {
             days_to_target: st
                 .days_to_target
                 .or_else(|| st.trace.curve.days_to_accuracy(cfg.stop_at_accuracy.unwrap_or(2.0))),
             trace: st.trace,
+            events: st.recorded.take().unwrap_or_default(),
             final_round,
             final_w: st.fed.into_global_model(),
         })

@@ -1,0 +1,806 @@
+//! Typed run events, the observer layer, and run-artifact bundles
+//! (ADR-0009).
+//!
+//! Every observable thing a run does — a contact, an upload attempt, a
+//! gateway aggregation, a cross-gateway reconcile, an evaluation, a planner
+//! decision — is one [`RunEvent`], emitted from the *single* `run_step`
+//! body all three engine modes share. Because emission happens only there,
+//! the event stream inherits the repo's core invariant for free: Dense,
+//! ContactList and Streamed modes produce identical streams, and
+//! `testing::assert_same_run` compares streams element-wise — a strictly
+//! stronger gate than the old hand-picked counter comparison.
+//!
+//! Consumers implement [`EventSink`]. Three built-ins cover the framework's
+//! needs:
+//!
+//! - [`NullSink`] — the default observer: a zero-sized type whose `emit`
+//!   is an inlined empty body, so events-off runs monomorphize to exactly
+//!   the pre-events engine (no allocation, no branch, bit- and
+//!   speed-identical);
+//! - [`TraceSink`] — rebuilds [`RunTrace`] from events. The engine derives
+//!   its trace exclusively through [`TraceSink::apply`], which is now the
+//!   *only* place trace counters mutate: every `RunTrace` field is a
+//!   derived view over the stream;
+//! - [`ArtifactSink`] — records the stream verbatim for the JSON
+//!   run-artifact bundle ([`RunArtifact`]) that `scenarios run` renders
+//!   its tables from and `--json` emits for CI/EXPERIMENTS tooling.
+//!
+//! The `[events]` TOML section ([`EventSpec`]) switches stream *recording*
+//! into `RunResult::events` on; observation via [`EventSink`] needs no
+//! config at all.
+
+use crate::cfg::section::{SectionCtx, SectionSpec};
+use crate::cfg::toml::TomlDoc;
+use crate::metrics::CurvePoint;
+use crate::sim::trace::RunTrace;
+use anyhow::{Context, Result};
+use std::fmt::Write as _;
+
+/// Schema tag written into every run-artifact bundle.
+pub const ARTIFACT_SCHEMA: &str = "fedspace-run-artifact-v1";
+
+/// How one upload attempt at a contact resolved.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UploadOutcome {
+    /// The gradient reached its gateway's buffer.
+    Delivered,
+    /// The satellite was in contact but had no finished update to send.
+    Idle,
+    /// The update did not fit the contact's byte budget (ADR-0008); the
+    /// satellite retries at its next pass.
+    Deferred,
+    /// The link dropped the frame in transit (ADR-0007).
+    Dropped,
+}
+
+impl UploadOutcome {
+    /// Stable lowercase name (artifact-bundle spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            UploadOutcome::Delivered => "delivered",
+            UploadOutcome::Idle => "idle",
+            UploadOutcome::Deferred => "deferred",
+            UploadOutcome::Dropped => "dropped",
+        }
+    }
+}
+
+/// Which engine phase a [`RunEvent::Timing`] measured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimingPhase {
+    /// Local training (`Trainer::local_update`).
+    Train,
+    /// Gateway aggregation (Eq. 4).
+    Aggregate,
+    /// Global-model evaluation.
+    Eval,
+}
+
+impl TimingPhase {
+    /// Stable lowercase name (artifact-bundle spelling).
+    pub fn name(&self) -> &'static str {
+        match self {
+            TimingPhase::Train => "train",
+            TimingPhase::Aggregate => "aggregate",
+            TimingPhase::Eval => "eval",
+        }
+    }
+}
+
+/// One observation from the shared `run_step` body. Everything except
+/// [`RunEvent::Timing`] is deterministic per (scenario, seed) and identical
+/// across the three engine modes — the property `assert_same_run` gates.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RunEvent {
+    /// The run began: fleet and horizon shape, emitted exactly once so
+    /// sinks can size per-gateway state before any traffic.
+    RunStart {
+        /// Fleet size.
+        n_sats: usize,
+        /// Horizon in slots.
+        n_steps: usize,
+        /// Gateway count (1 for the implicit single-gateway federation).
+        n_gateways: usize,
+    },
+    /// A satellite was in (possibly relayed) contact with the ground at
+    /// `step` — the geometry fact, before any transport outcome.
+    Contact {
+        /// Engine step index.
+        step: usize,
+        /// Satellite id.
+        sat: usize,
+        /// ISL relay hops to its ground-visible sink (0 = direct).
+        hops: usize,
+    },
+    /// How the contact's upload opportunity resolved.
+    Upload {
+        /// Engine step index.
+        step: usize,
+        /// Originating satellite id.
+        origin: usize,
+        /// Receiving gateway index — meaningful only for
+        /// [`UploadOutcome::Delivered`] (0 otherwise; routing is not
+        /// consulted for idle/deferred/dropped attempts, exactly as the
+        /// pre-events engine never routed them).
+        gateway: usize,
+        /// Relay hops the upload path used.
+        hops: usize,
+        /// Nominal wire size of one update under the `[link]` codec
+        /// (0 when byte budgets are off — nothing is charged).
+        bytes: u64,
+        /// Transport outcome.
+        outcome: UploadOutcome,
+        /// A compromised satellite transformed this upload (ADR-0007).
+        injected: bool,
+        /// A link fault flipped one stored bit (ADR-0007).
+        corrupted: bool,
+    },
+    /// A gateway ran its aggregation (Eq. 4) over its buffer.
+    Aggregate {
+        /// Engine step index.
+        step: usize,
+        /// Aggregating gateway index.
+        gateway: usize,
+        /// Global round count *after* this aggregation.
+        round: usize,
+        /// Staleness of every aggregated update, in buffer order.
+        staleness: Vec<usize>,
+    },
+    /// Cross-gateway reconciliation merged the gateway models (ADR-0006).
+    Reconcile {
+        /// Engine step index.
+        step: usize,
+        /// Merge operations performed (one per reconcile trigger).
+        merges: usize,
+    },
+    /// The global model was evaluated — one training-curve point.
+    Eval {
+        /// Engine step index (0 for the pre-run baseline eval).
+        step: usize,
+        /// Global round count at evaluation time.
+        round: usize,
+        /// Simulated days since start.
+        day: f64,
+        /// Validation top-1 accuracy.
+        accuracy: f64,
+        /// Validation loss.
+        loss: f64,
+    },
+    /// A FedSpace planner committed a scheduling window (Alg. 1 line 4).
+    PlanDecision {
+        /// Engine step index the window starts at.
+        step: usize,
+        /// Planning gateway index.
+        gateway: usize,
+        /// Window length in slots.
+        horizon: usize,
+        /// Steps inside the window the planner marked for aggregation.
+        planned_aggs: usize,
+    },
+    /// Wall-clock phase timing. Identity-exempt (ADR-0002): values differ
+    /// between otherwise bit-identical runs, so `assert_same_run` filters
+    /// these out of the stream comparison.
+    Timing {
+        /// Which engine phase was measured.
+        phase: TimingPhase,
+        /// Wall-clock seconds spent.
+        seconds: f64,
+    },
+}
+
+impl RunEvent {
+    /// Stable snake-case tag (the artifact bundle's `"type"` field).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RunEvent::RunStart { .. } => "run_start",
+            RunEvent::Contact { .. } => "contact",
+            RunEvent::Upload { .. } => "upload",
+            RunEvent::Aggregate { .. } => "aggregate",
+            RunEvent::Reconcile { .. } => "reconcile",
+            RunEvent::Eval { .. } => "eval",
+            RunEvent::PlanDecision { .. } => "plan_decision",
+            RunEvent::Timing { .. } => "timing",
+        }
+    }
+
+    /// Is this event part of the determinism contract? False only for
+    /// wall-clock [`RunEvent::Timing`] (ADR-0002's identity exemption).
+    pub fn is_deterministic(&self) -> bool {
+        !matches!(self, RunEvent::Timing { .. })
+    }
+
+    /// One-line JSON object (an element of the bundle's `"events"` array).
+    pub fn to_json(&self) -> String {
+        let mut s = format!("{{\"type\": \"{}\"", self.kind());
+        match self {
+            RunEvent::RunStart { n_sats, n_steps, n_gateways } => {
+                let _ = write!(
+                    s,
+                    ", \"n_sats\": {n_sats}, \"n_steps\": {n_steps}, \"n_gateways\": {n_gateways}"
+                );
+            }
+            RunEvent::Contact { step, sat, hops } => {
+                let _ = write!(s, ", \"step\": {step}, \"sat\": {sat}, \"hops\": {hops}");
+            }
+            RunEvent::Upload { step, origin, gateway, hops, bytes, outcome, injected, corrupted } => {
+                let _ = write!(
+                    s,
+                    ", \"step\": {step}, \"origin\": {origin}, \"gateway\": {gateway}, \
+                     \"hops\": {hops}, \"bytes\": {bytes}, \"outcome\": \"{}\", \
+                     \"injected\": {injected}, \"corrupted\": {corrupted}",
+                    outcome.name()
+                );
+            }
+            RunEvent::Aggregate { step, gateway, round, staleness } => {
+                let stale: Vec<String> = staleness.iter().map(|v| v.to_string()).collect();
+                let _ = write!(
+                    s,
+                    ", \"step\": {step}, \"gateway\": {gateway}, \"round\": {round}, \
+                     \"staleness\": [{}]",
+                    stale.join(", ")
+                );
+            }
+            RunEvent::Reconcile { step, merges } => {
+                let _ = write!(s, ", \"step\": {step}, \"merges\": {merges}");
+            }
+            RunEvent::Eval { step, round, day, accuracy, loss } => {
+                let _ = write!(
+                    s,
+                    ", \"step\": {step}, \"round\": {round}, \"day\": {day}, \
+                     \"accuracy\": {accuracy}, \"loss\": {loss}"
+                );
+            }
+            RunEvent::PlanDecision { step, gateway, horizon, planned_aggs } => {
+                let _ = write!(
+                    s,
+                    ", \"step\": {step}, \"gateway\": {gateway}, \"horizon\": {horizon}, \
+                     \"planned_aggs\": {planned_aggs}"
+                );
+            }
+            RunEvent::Timing { phase, seconds } => {
+                let _ = write!(s, ", \"phase\": \"{}\", \"seconds\": {seconds}", phase.name());
+            }
+        }
+        s.push('}');
+        s
+    }
+}
+
+/// An observer of the engine's event stream.
+///
+/// The engine is generic over its sink and monomorphizes per
+/// implementation, so an empty `emit` body compiles to nothing — the
+/// zero-cost contract [`NullSink`] relies on. `emit` takes the event by
+/// reference: sinks that keep events clone them, everyone else reads in
+/// place.
+pub trait EventSink {
+    /// Observe one event.
+    fn emit(&mut self, event: &RunEvent);
+}
+
+/// The default observer: does nothing, costs nothing. Runs driven through
+/// `Engine::run` use this sink, and the monomorphized engine is the
+/// pre-events engine — asserted bit-identical in the property tests.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    #[inline(always)]
+    fn emit(&mut self, _event: &RunEvent) {}
+}
+
+/// Rebuilds a [`RunTrace`] from the event stream. The engine itself
+/// derives its trace through [`TraceSink::apply`] — the single site where
+/// trace counters mutate — so a standalone `TraceSink` fed a recorded
+/// stream reproduces the run's trace exactly (tested in
+/// `tests/scenarios.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct TraceSink {
+    /// The trace derived so far.
+    pub trace: RunTrace,
+}
+
+impl TraceSink {
+    /// A sink starting from an empty trace.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one event into a trace — the counter semantics of every
+    /// `RunTrace` field, in one place. Gateway vectors are sized by
+    /// [`RunEvent::RunStart`] (and grown defensively if a stream starts
+    /// mid-run), so zero-activity gateways still report a 0 entry.
+    pub fn apply(trace: &mut RunTrace, event: &RunEvent) {
+        match event {
+            RunEvent::RunStart { n_gateways, .. } => {
+                trace.gateway_aggs.resize(*n_gateways, 0);
+                trace.gateway_uploads.resize(*n_gateways, 0);
+            }
+            RunEvent::Contact { .. } => trace.connections += 1,
+            RunEvent::Upload { gateway, hops, outcome, injected, corrupted, .. } => {
+                match outcome {
+                    UploadOutcome::Delivered => {
+                        trace.uploads += 1;
+                        if *hops > 0 {
+                            trace.relayed += 1;
+                        }
+                        if trace.gateway_uploads.len() <= *gateway {
+                            trace.gateway_uploads.resize(*gateway + 1, 0);
+                        }
+                        trace.gateway_uploads[*gateway] += 1;
+                    }
+                    UploadOutcome::Idle => trace.idle += 1,
+                    UploadOutcome::Deferred => trace.deferred += 1,
+                    UploadOutcome::Dropped => trace.dropped += 1,
+                }
+                if *injected {
+                    trace.injected += 1;
+                }
+                if *corrupted {
+                    trace.corrupted += 1;
+                }
+            }
+            RunEvent::Aggregate { gateway, staleness, .. } => {
+                trace.global_updates += 1;
+                if trace.gateway_aggs.len() <= *gateway {
+                    trace.gateway_aggs.resize(*gateway + 1, 0);
+                }
+                trace.gateway_aggs[*gateway] += 1;
+                for &s in staleness {
+                    trace.staleness.add(s as i64);
+                }
+            }
+            RunEvent::Reconcile { merges, .. } => trace.reconciles += merges,
+            RunEvent::Eval { step, round, day, accuracy, loss } => {
+                trace.curve.push(CurvePoint {
+                    day: *day,
+                    step: *step,
+                    round: *round,
+                    accuracy: *accuracy,
+                    loss: *loss,
+                });
+            }
+            RunEvent::PlanDecision { .. } => {}
+            RunEvent::Timing { phase, seconds } => match phase {
+                TimingPhase::Train => trace.t_train_s += seconds,
+                TimingPhase::Aggregate => trace.t_agg_s += seconds,
+                TimingPhase::Eval => trace.t_eval_s += seconds,
+            },
+        }
+    }
+
+    /// The derived trace.
+    pub fn into_trace(self) -> RunTrace {
+        self.trace
+    }
+}
+
+impl EventSink for TraceSink {
+    fn emit(&mut self, event: &RunEvent) {
+        Self::apply(&mut self.trace, event);
+    }
+}
+
+/// Records the stream verbatim — the in-memory form of the run-artifact
+/// bundle's `"events"` array.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactSink {
+    /// Events in emission order.
+    pub events: Vec<RunEvent>,
+}
+
+impl ArtifactSink {
+    /// An empty recorder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl EventSink for ArtifactSink {
+    fn emit(&mut self, event: &RunEvent) {
+        self.events.push(event.clone());
+    }
+}
+
+/// The `[events]` TOML section: opt into recording the full event stream
+/// into `RunResult::events` (and therefore into the artifact bundle).
+/// Off by default — recording allocates one `Vec` entry per event, which
+/// mega-constellation runs don't want unless asked.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EventSpec {
+    /// Record the typed event stream into the run result.
+    pub record: bool,
+}
+
+impl EventSpec {
+    /// Exactly the implicit default (controls `[events]` emission).
+    pub fn is_default(&self) -> bool {
+        *self == EventSpec::default()
+    }
+
+    /// Emit the `[events]` TOML section (callers skip it when default so
+    /// pre-events specs stay byte-identical).
+    pub fn emit_toml(&self, out: &mut String) {
+        let _ = writeln!(out, "\n[events]");
+        let _ = writeln!(out, "record = {}", self.record);
+    }
+
+    /// Parse the `[events]` section; `Ok(None)` when absent (callers keep
+    /// their default) — the shared scenario/experiment-config idiom.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Option<EventSpec>> {
+        if doc.get("events").is_none() {
+            return Ok(None);
+        }
+        let mut spec = EventSpec::default();
+        if let Some(v) = doc.get("events").and_then(|s| s.get("record")) {
+            spec.record = v.as_bool().context("[events] record must be a boolean")?;
+        }
+        Ok(Some(spec))
+    }
+}
+
+impl SectionSpec for EventSpec {
+    const SECTION: &'static str = "events";
+
+    fn from_doc(doc: &TomlDoc) -> Result<Option<Self>> {
+        EventSpec::from_doc(doc)
+    }
+
+    fn emit_toml(&self, out: &mut String) {
+        EventSpec::emit_toml(self, out)
+    }
+
+    fn is_emitted(&self) -> bool {
+        !self.is_default()
+    }
+
+    fn validate(&self, _ctx: &SectionCtx) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// One run's artifact bundle: metadata + the derived trace + the recorded
+/// event stream, serializable to the `fedspace-run-artifact-v1` JSON
+/// document. `scenarios run` renders its human table *from* this struct,
+/// and `--json` emits it verbatim, so humans and CI read the same surface.
+#[derive(Clone, Debug)]
+pub struct RunArtifact {
+    /// Scenario name the run came from.
+    pub scenario: String,
+    /// Algorithm name (`sync` / `async` / `fedbuff` / `fedspace`).
+    pub algorithm: String,
+    /// Engine mode name (`dense` / `contact-list` / `streamed`).
+    pub engine: String,
+    /// Fleet size of the run.
+    pub n_sats: usize,
+    /// Horizon of the run in slots.
+    pub n_steps: usize,
+    /// Global rounds completed.
+    pub final_round: usize,
+    /// First simulated day the accuracy target was reached, if ever.
+    pub days_to_target: Option<f64>,
+    /// The run's derived trace (every counter a view over the events).
+    pub trace: RunTrace,
+    /// Recorded event stream (empty unless `[events] record = true` or the
+    /// run was driven with `--json`).
+    pub events: Vec<RunEvent>,
+}
+
+impl RunArtifact {
+    /// Bundle one engine run. `result` is `sim::RunResult` — taken by its
+    /// parts to keep this constructor usable from every caller layer.
+    pub fn from_run(
+        scenario: &str,
+        algorithm: &str,
+        engine: &str,
+        n_sats: usize,
+        n_steps: usize,
+        result: &crate::sim::engine::RunResult,
+    ) -> Self {
+        RunArtifact {
+            scenario: scenario.to_string(),
+            algorithm: algorithm.to_string(),
+            engine: engine.to_string(),
+            n_sats,
+            n_steps,
+            final_round: result.final_round,
+            days_to_target: result.days_to_target,
+            trace: result.trace.clone(),
+            events: result.events.clone(),
+        }
+    }
+
+    /// Serialize to one `fedspace-run-artifact-v1` JSON object (parsed
+    /// back by `bench_report::parse_json` in the tests).
+    pub fn to_json(&self) -> String {
+        let t = &self.trace;
+        let mut s = String::from("{\n");
+        let _ = writeln!(s, "  \"schema\": \"{ARTIFACT_SCHEMA}\",");
+        let _ = writeln!(s, "  \"scenario\": \"{}\",", json_escape(&self.scenario));
+        let _ = writeln!(s, "  \"algorithm\": \"{}\",", json_escape(&self.algorithm));
+        let _ = writeln!(s, "  \"engine\": \"{}\",", json_escape(&self.engine));
+        let _ = writeln!(s, "  \"n_sats\": {},", self.n_sats);
+        let _ = writeln!(s, "  \"n_steps\": {},", self.n_steps);
+        s.push_str("  \"summary\": {\n");
+        let _ = writeln!(s, "    \"final_round\": {},", self.final_round);
+        let _ = writeln!(s, "    \"global_updates\": {},", t.global_updates);
+        let _ = writeln!(s, "    \"connections\": {},", t.connections);
+        let _ = writeln!(s, "    \"uploads\": {},", t.uploads);
+        let _ = writeln!(s, "    \"relayed\": {},", t.relayed);
+        let _ = writeln!(s, "    \"deferred\": {},", t.deferred);
+        let _ = writeln!(s, "    \"idle\": {},", t.idle);
+        let _ = writeln!(s, "    \"idle_fraction\": {},", t.idle_fraction());
+        let _ = writeln!(s, "    \"injected\": {},", t.injected);
+        let _ = writeln!(s, "    \"dropped\": {},", t.dropped);
+        let _ = writeln!(s, "    \"corrupted\": {},", t.corrupted);
+        let _ = writeln!(s, "    \"reconciles\": {},", t.reconciles);
+        let _ = writeln!(s, "    \"gateway_aggs\": {},", json_usize_array(&t.gateway_aggs));
+        let _ = writeln!(s, "    \"gateway_uploads\": {},", json_usize_array(&t.gateway_uploads));
+        let _ = writeln!(s, "    \"max_staleness\": {},", t.staleness.max_key().unwrap_or(0));
+        let _ = writeln!(s, "    \"best_accuracy\": {},", t.curve.best_accuracy());
+        let _ = writeln!(s, "    \"days_to_target\": {},", json_opt_f64(self.days_to_target));
+        let _ = writeln!(s, "    \"t_train_s\": {},", t.t_train_s);
+        let _ = writeln!(s, "    \"t_agg_s\": {},", t.t_agg_s);
+        let _ = writeln!(s, "    \"t_eval_s\": {}", t.t_eval_s);
+        s.push_str("  },\n");
+        let stale: Vec<String> =
+            t.staleness.entries().map(|(v, n)| format!("[{v}, {n}]")).collect();
+        let _ = writeln!(s, "  \"staleness\": [{}],", stale.join(", "));
+        s.push_str("  \"curve\": [");
+        let curve: Vec<String> = t
+            .curve
+            .points
+            .iter()
+            .map(|p| {
+                format!(
+                    "\n    {{\"day\": {}, \"step\": {}, \"round\": {}, \"accuracy\": {}, \
+                     \"loss\": {}}}",
+                    p.day, p.step, p.round, p.accuracy, p.loss
+                )
+            })
+            .collect();
+        s.push_str(&curve.join(","));
+        if !curve.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("],\n");
+        s.push_str("  \"events\": [");
+        let events: Vec<String> =
+            self.events.iter().map(|e| format!("\n    {}", e.to_json())).collect();
+        s.push_str(&events.join(","));
+        if !events.is_empty() {
+            s.push_str("\n  ");
+        }
+        s.push_str("]\n}\n");
+        s
+    }
+}
+
+/// Wrap per-algorithm artifacts of one `scenarios run` invocation into a
+/// single JSON document (the `--json` output).
+pub fn bundle_json(artifacts: &[RunArtifact]) -> String {
+    let mut s = String::from("{\n");
+    let _ = writeln!(s, "  \"schema\": \"{ARTIFACT_SCHEMA}\",");
+    let _ = writeln!(s, "  \"runs\": [");
+    let runs: Vec<String> = artifacts
+        .iter()
+        .map(|a| {
+            let body = a.to_json();
+            // indent the nested object two spaces, dropping its trailing \n
+            body.trim_end().lines().map(|l| format!("    {l}")).collect::<Vec<_>>().join("\n")
+        })
+        .collect();
+    s.push_str(&runs.join(",\n"));
+    s.push_str("\n  ]\n}\n");
+    s
+}
+
+/// Escape a string for a JSON double-quoted literal (the subset our names
+/// can contain; control characters are dropped to keep the writer total).
+pub(crate) fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {}
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_usize_array(xs: &[usize]) -> String {
+    let items: Vec<String> = xs.iter().map(|x| x.to_string()).collect();
+    format!("[{}]", items.join(", "))
+}
+
+fn json_opt_f64(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x}"),
+        None => "null".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synthetic_stream() -> Vec<RunEvent> {
+        vec![
+            RunEvent::RunStart { n_sats: 4, n_steps: 10, n_gateways: 2 },
+            RunEvent::Eval { step: 0, round: 0, day: 0.0, accuracy: 0.1, loss: 2.3 },
+            RunEvent::Contact { step: 1, sat: 0, hops: 0 },
+            RunEvent::Upload {
+                step: 1,
+                origin: 0,
+                gateway: 1,
+                hops: 0,
+                bytes: 64,
+                outcome: UploadOutcome::Delivered,
+                injected: true,
+                corrupted: false,
+            },
+            RunEvent::Contact { step: 1, sat: 1, hops: 2 },
+            RunEvent::Upload {
+                step: 1,
+                origin: 1,
+                gateway: 0,
+                hops: 2,
+                bytes: 64,
+                outcome: UploadOutcome::Delivered,
+                injected: false,
+                corrupted: true,
+            },
+            RunEvent::Contact { step: 2, sat: 2, hops: 0 },
+            RunEvent::Upload {
+                step: 2,
+                origin: 2,
+                gateway: 0,
+                hops: 0,
+                bytes: 64,
+                outcome: UploadOutcome::Idle,
+                injected: false,
+                corrupted: false,
+            },
+            RunEvent::Contact { step: 3, sat: 3, hops: 0 },
+            RunEvent::Upload {
+                step: 3,
+                origin: 3,
+                gateway: 0,
+                hops: 0,
+                bytes: 64,
+                outcome: UploadOutcome::Deferred,
+                injected: false,
+                corrupted: false,
+            },
+            RunEvent::Contact { step: 4, sat: 0, hops: 0 },
+            RunEvent::Upload {
+                step: 4,
+                origin: 0,
+                gateway: 0,
+                hops: 0,
+                bytes: 64,
+                outcome: UploadOutcome::Dropped,
+                injected: false,
+                corrupted: false,
+            },
+            RunEvent::PlanDecision { step: 4, gateway: 0, horizon: 24, planned_aggs: 3 },
+            RunEvent::Aggregate { step: 5, gateway: 1, round: 1, staleness: vec![0, 2, 2] },
+            RunEvent::Timing { phase: TimingPhase::Aggregate, seconds: 0.25 },
+            RunEvent::Reconcile { step: 5, merges: 1 },
+            RunEvent::Eval { step: 5, round: 1, day: 0.5, accuracy: 0.4, loss: 1.1 },
+            RunEvent::Timing { phase: TimingPhase::Eval, seconds: 0.125 },
+        ]
+    }
+
+    #[test]
+    fn null_sink_is_free() {
+        assert_eq!(std::mem::size_of::<NullSink>(), 0, "NullSink must stay zero-sized");
+        let mut sink = NullSink;
+        for e in synthetic_stream() {
+            sink.emit(&e);
+        }
+    }
+
+    #[test]
+    fn trace_sink_derives_every_counter() {
+        let mut sink = TraceSink::new();
+        for e in synthetic_stream() {
+            sink.emit(&e);
+        }
+        let t = sink.into_trace();
+        assert_eq!(t.connections, 5);
+        assert_eq!(t.uploads, 2);
+        assert_eq!(t.relayed, 1);
+        assert_eq!(t.idle, 1);
+        assert_eq!(t.deferred, 1);
+        assert_eq!(t.dropped, 1);
+        assert_eq!(t.injected, 1);
+        assert_eq!(t.corrupted, 1);
+        assert_eq!(t.global_updates, 1);
+        assert_eq!(t.gateway_aggs, vec![0, 1], "RunStart must pre-size zero-activity gateways");
+        assert_eq!(t.gateway_uploads, vec![1, 1]);
+        assert_eq!(t.reconciles, 1);
+        assert_eq!(t.staleness.count(2), 2);
+        assert_eq!(t.staleness.total(), 3);
+        assert_eq!(t.curve.points.len(), 2);
+        assert_eq!(t.curve.points[1].step, 5);
+        assert!((t.t_agg_s - 0.25).abs() < 1e-12);
+        assert!((t.t_eval_s - 0.125).abs() < 1e-12);
+        assert!((t.t_train_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn artifact_and_timing_filters() {
+        let stream = synthetic_stream();
+        let mut sink = ArtifactSink::new();
+        for e in &stream {
+            sink.emit(e);
+        }
+        assert_eq!(sink.events, stream, "artifact sink must record verbatim");
+        let det: Vec<&RunEvent> = stream.iter().filter(|e| e.is_deterministic()).collect();
+        assert_eq!(stream.len() - det.len(), 2, "exactly the two Timing events filter out");
+    }
+
+    #[test]
+    fn artifact_json_parses_back() {
+        let mut trace = RunTrace::default();
+        for e in synthetic_stream() {
+            TraceSink::apply(&mut trace, &e);
+        }
+        let artifact = RunArtifact {
+            scenario: "paper-fig7".into(),
+            algorithm: "fedbuff".into(),
+            engine: "dense".into(),
+            n_sats: 4,
+            n_steps: 10,
+            final_round: 1,
+            days_to_target: None,
+            trace,
+            events: synthetic_stream(),
+        };
+        let json = artifact.to_json();
+        let doc = crate::bench_report::parse_json(&json).unwrap();
+        assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some(ARTIFACT_SCHEMA));
+        assert_eq!(doc.get("algorithm").and_then(|v| v.as_str()), Some("fedbuff"));
+        let summary = doc.get("summary").expect("summary object");
+        assert_eq!(summary.get("uploads").and_then(|v| v.as_num()), Some(2.0));
+        assert_eq!(summary.get("reconciles").and_then(|v| v.as_num()), Some(1.0));
+        assert_eq!(summary.get("days_to_target").map(|v| v.is_null()), Some(true));
+        let events = doc.get("events").and_then(|v| v.as_arr()).expect("events array");
+        assert_eq!(events.len(), artifact.events.len());
+        assert_eq!(events[0].get("type").and_then(|v| v.as_str()), Some("run_start"));
+        let curve = doc.get("curve").and_then(|v| v.as_arr()).expect("curve array");
+        assert_eq!(curve.len(), 2);
+        assert_eq!(curve[1].get("accuracy").and_then(|v| v.as_num()), Some(0.4));
+        // the bundle wrapper parses too and nests both runs
+        let bundle = bundle_json(&[artifact.clone(), artifact]);
+        let doc = crate::bench_report::parse_json(&bundle).unwrap();
+        assert_eq!(doc.get("runs").and_then(|v| v.as_arr()).map(|r| r.len()), Some(2));
+    }
+
+    #[test]
+    fn event_spec_knob() {
+        assert!(!EventSpec::default().record, "recording must be opt-in");
+        assert!(EventSpec::default().is_default());
+        let on = EventSpec { record: true };
+        let mut s = String::new();
+        on.emit_toml(&mut s);
+        let doc = crate::cfg::toml::parse_toml(&s).unwrap();
+        assert_eq!(EventSpec::from_doc(&doc).unwrap(), Some(on));
+        let bad = crate::cfg::toml::parse_toml("[events]\nrecord = 3").unwrap();
+        assert!(EventSpec::from_doc(&bad).is_err());
+        let absent = crate::cfg::toml::parse_toml("[scenario]\nname = \"x\"").unwrap();
+        assert_eq!(EventSpec::from_doc(&absent).unwrap(), None);
+    }
+
+    #[test]
+    fn json_escape_covers_the_subset() {
+        assert_eq!(json_escape("plain-name_1"), "plain-name_1");
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

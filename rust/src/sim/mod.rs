@@ -3,10 +3,15 @@
 
 pub mod adversary;
 pub mod engine;
+pub mod events;
 pub mod trace;
 pub mod trainer;
 
-pub use adversary::{Adversary, AttackKind, AttackSpec};
+pub use adversary::{Adversary, ApplyOutcome, AttackKind, AttackSpec};
 pub use engine::{Engine, EngineConfig, RunResult, ScheduleSource};
+pub use events::{
+    bundle_json, ArtifactSink, EventSink, EventSpec, NullSink, RunArtifact, RunEvent, TimingPhase,
+    TraceSink, UploadOutcome,
+};
 pub use trace::RunTrace;
 pub use trainer::{MockTrainer, PjrtTrainer, Trainer, TrainerSampleBackend};

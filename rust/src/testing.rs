@@ -55,12 +55,17 @@ pub fn replay<F: Fn(&mut Rng)>(seed: u64, f: F) {
 
 /// Assert two engine runs are equivalent on everything deterministic —
 /// counters, staleness histogram, curve accuracy/loss bits, final model
-/// bits; wall-clock timing fields are exempt by design (ADR-0002).
+/// bits, and (when recorded) the full typed event streams; wall-clock
+/// timing fields — and [`RunEvent::Timing`] events — are exempt by design
+/// (ADR-0002).
 ///
 /// This is the single dense-vs-contact-list equivalence gate shared by the
 /// engine unit tests, `tests/scenarios.rs`, and `bench_engine_modes` (the
 /// bench asserts identity before reporting any speedup), so adding a field
-/// to `RunTrace` only needs strengthening one checker.
+/// to `RunTrace` only needs strengthening one checker. Event streams are a
+/// strictly stronger check than the derived counters (ordering and
+/// per-event payloads, not just totals); runs made without
+/// `record_events` carry empty streams and the comparison is vacuous.
 pub fn assert_same_run(a: &crate::sim::RunResult, b: &crate::sim::RunResult, ctx: &str) {
     assert_eq!(a.final_round, b.final_round, "{ctx}: final_round");
     assert_eq!(a.trace.connections, b.trace.connections, "{ctx}: connections");
@@ -94,6 +99,14 @@ pub fn assert_same_run(a: &crate::sim::RunResult, b: &crate::sim::RunResult, ctx
     assert_eq!(a.final_w.len(), b.final_w.len(), "{ctx}: model dim");
     for (x, y) in a.final_w.iter().zip(b.final_w.iter()) {
         assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: final_w bits");
+    }
+    // recorded event streams, with the wall-clock-dependent Timing events
+    // filtered out (the stream analogue of the timing-field exemption)
+    let ea: Vec<_> = a.events.iter().filter(|e| e.is_deterministic()).collect();
+    let eb: Vec<_> = b.events.iter().filter(|e| e.is_deterministic()).collect();
+    assert_eq!(ea.len(), eb.len(), "{ctx}: event count");
+    for (idx, (x, y)) in ea.iter().zip(eb.iter()).enumerate() {
+        assert_eq!(x, y, "{ctx}: event #{idx}");
     }
 }
 

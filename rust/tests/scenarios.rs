@@ -530,3 +530,89 @@ fn walker_and_polar_builtins_have_contacts() {
         assert!(total > 0, "{name}: no contacts at all");
     }
 }
+
+/// ADR-0009 acceptance gate 1: turning event recording on never changes a
+/// trace bit — the NullSink fast path and the recording path execute the
+/// same relocated counter arithmetic, for all four algorithms in all three
+/// engine modes.
+#[test]
+fn event_recording_never_changes_the_trace() {
+    let sc = Scenario::builtin("paper-fig7").unwrap().scaled(Some(24), Some(96));
+    assert_eq!(sc.algorithms.len(), 4, "paper-fig7 must sweep the full grid");
+    let (_, sched) = sc.build_schedule();
+    let (_, stream) = sc.build_stream();
+    for &alg in &sc.algorithms {
+        for mode in [EngineMode::Dense, EngineMode::ContactList, EngineMode::Streamed] {
+            let mut cfg = sc.experiment_config(alg);
+            cfg.engine_mode = mode;
+            cfg.events.record = false;
+            let off = match mode {
+                EngineMode::Streamed => run_mock_on_stream(&cfg, &stream, None).unwrap(),
+                _ => run_mock_on_schedule(&cfg, &sched, None).unwrap(),
+            };
+            cfg.events.record = true;
+            let mut on = match mode {
+                EngineMode::Streamed => run_mock_on_stream(&cfg, &stream, None).unwrap(),
+                _ => run_mock_on_schedule(&cfg, &sched, None).unwrap(),
+            };
+            let label = format!("{} / {} events-on", alg.name(), mode.name());
+            assert!(!on.result.events.is_empty(), "{label}: nothing recorded");
+            // the off run carries no stream; clear the on run's before the
+            // bit-identity check so only the derived state is compared
+            on.result.events.clear();
+            assert_same_run(&off.result, &on.result, &label);
+        }
+    }
+}
+
+/// ADR-0009 acceptance gate 2: the recorded stream is a complete account of
+/// the run — replaying it through `TraceSink::apply` over a fresh trace
+/// rebuilds the run's `RunTrace` exactly (counters, per-gateway vectors,
+/// staleness histogram, curve bits and timing sums alike).
+#[test]
+fn trace_sink_replay_rebuilds_the_trace() {
+    use fedspace::sim::{RunTrace, TraceSink};
+    for name in ["byz-iridium-66", "compress-starlink-1584"] {
+        let mut sc = Scenario::builtin(name).unwrap().scaled(Some(12), Some(48));
+        sc.events.record = true;
+        for out in run_scenario(&sc, None).unwrap() {
+            let r = &out.result;
+            let ctx = format!("{name}/{} replay", out.algorithm.name());
+            assert!(!r.events.is_empty(), "{ctx}: nothing recorded");
+            let mut d = RunTrace::default();
+            for e in &r.events {
+                TraceSink::apply(&mut d, e);
+            }
+            let t = &r.trace;
+            assert_eq!(d.connections, t.connections, "{ctx}: connections");
+            assert_eq!(d.uploads, t.uploads, "{ctx}: uploads");
+            assert_eq!(d.relayed, t.relayed, "{ctx}: relayed");
+            assert_eq!(d.idle, t.idle, "{ctx}: idle");
+            assert_eq!(d.deferred, t.deferred, "{ctx}: deferred");
+            assert_eq!(d.injected, t.injected, "{ctx}: injected");
+            assert_eq!(d.dropped, t.dropped, "{ctx}: dropped");
+            assert_eq!(d.corrupted, t.corrupted, "{ctx}: corrupted");
+            assert_eq!(d.global_updates, t.global_updates, "{ctx}: global_updates");
+            assert_eq!(d.gateway_aggs, t.gateway_aggs, "{ctx}: gateway_aggs");
+            assert_eq!(d.gateway_uploads, t.gateway_uploads, "{ctx}: gateway_uploads");
+            assert_eq!(d.reconciles, t.reconciles, "{ctx}: reconciles");
+            assert_eq!(
+                d.staleness.entries().collect::<Vec<_>>(),
+                t.staleness.entries().collect::<Vec<_>>(),
+                "{ctx}: staleness histogram"
+            );
+            assert_eq!(d.curve.points.len(), t.curve.points.len(), "{ctx}: curve length");
+            for (p, q) in d.curve.points.iter().zip(t.curve.points.iter()) {
+                assert_eq!(p.step, q.step, "{ctx}: curve step");
+                assert_eq!(p.round, q.round, "{ctx}: curve round");
+                assert_eq!(p.accuracy.to_bits(), q.accuracy.to_bits(), "{ctx}: accuracy bits");
+                assert_eq!(p.loss.to_bits(), q.loss.to_bits(), "{ctx}: loss bits");
+            }
+            // timing sums replay bit-identically: the run accumulated them
+            // through the very same apply() on the very same event values
+            assert_eq!(d.t_train_s.to_bits(), t.t_train_s.to_bits(), "{ctx}: t_train_s");
+            assert_eq!(d.t_agg_s.to_bits(), t.t_agg_s.to_bits(), "{ctx}: t_agg_s");
+            assert_eq!(d.t_eval_s.to_bits(), t.t_eval_s.to_bits(), "{ctx}: t_eval_s");
+        }
+    }
+}
