@@ -345,6 +345,78 @@ fn main() -> anyhow::Result<()> {
         bench_report::record("event_sink_overhead", on.median_s);
     }
 
+    section("L3: serving front end (bounded ingest + batched drain, ADR-0010)");
+    // steady-state serving cost: offers fanned over four bounded gateway
+    // queues with periodic batched drains, then flushed to empty — the
+    // uploads/sec ceiling the loadgen replay measures end to end
+    {
+        use fedspace::fl::{
+            FederationSpec, Offer, PendingUpload, ReconcilePolicy, ServeCore, ServeSpec,
+        };
+        use fedspace::sim::NullSink;
+        let mut sink = NullSink;
+        let sd = 4096usize;
+        let spec = FederationSpec::split(
+            &["a", "b", "c", "d"],
+            &[0, 1, 2, 3],
+            ReconcilePolicy::Periodic { every: 4 },
+        );
+        let sspec = ServeSpec { queue_cap: 4096, batch: 256, shards: 0 };
+        let grads: Vec<Vec<f32>> = (0..256).map(|_| rand_vec(&mut rng, sd, 0.01)).collect();
+        let n_offers = 1024usize;
+        let s = bench("ingest+drain 1024 uploads x 4k params, 4 gateways", 1, 5, || {
+            let mut serve = ServeCore::new(&spec, &sspec, vec![0.0f32; sd], 0.5);
+            let mut agg = CpuAggregator;
+            for j in 0..n_offers {
+                let up = PendingUpload {
+                    sat: j % 64,
+                    grad: grads[j % grads.len()].clone().into(),
+                    base_round: serve.core().round(),
+                    n_samples: 1,
+                };
+                let _ = serve.offer(j % 4, up);
+                if j % 256 == 255 {
+                    serve.drain(&mut agg, &mut sink).unwrap();
+                }
+            }
+            while (0..4).any(|g| serve.queue_depth(g) > 0) {
+                serve.drain(&mut agg, &mut sink).unwrap();
+            }
+        });
+        println!("    -> {:.0} uploads/s sustained", s.throughput(n_offers as f64));
+        bench_report::record("serve_ingest_throughput", s.median_s);
+        // one drain tick that aggregates a gradient per gateway and crosses
+        // the reconcile cadence at fmow-chunk model scale — the p99-shaped
+        // unit of latency the loadgen percentiles are made of
+        let fd = 262_144usize;
+        let every1 = FederationSpec::split(
+            &["a", "b", "c", "d"],
+            &[0, 1, 2, 3],
+            ReconcilePolicy::Periodic { every: 1 },
+        );
+        let big: Vec<Vec<f32>> = (0..4).map(|_| rand_vec(&mut rng, fd, 0.01)).collect();
+        let s = bench("drain tick: 4 gateways x 256k params + reconcile", 1, 5, || {
+            let mut serve = ServeCore::new(
+                &every1,
+                &ServeSpec { queue_cap: 16, batch: 4, shards: 0 },
+                vec![0.0f32; fd],
+                0.5,
+            );
+            let mut agg = CpuAggregator;
+            for (g, grad) in big.iter().enumerate() {
+                let up = PendingUpload {
+                    sat: g,
+                    grad: grad.clone().into(),
+                    base_round: 0,
+                    n_samples: 1,
+                };
+                assert!(matches!(serve.offer(g, up), Offer::Accepted));
+            }
+            serve.drain(&mut agg, &mut sink).unwrap();
+        });
+        bench_report::record("serve_reconcile_latency", s.median_s);
+    }
+
     section("L3: utility regressor (random forest)");
     let x: Vec<Vec<f64>> = (0..400)
         .map(|_| (0..10).map(|_| rng.gen_f64(-1.0, 1.0)).collect())

@@ -1,7 +1,9 @@
 //! CLI subcommand implementations.
 
 use super::args::Args;
-use super::runner::{run_mock_experiment, run_pjrt_experiment, run_scenario};
+use super::runner::{
+    run_loadgen, run_mock_experiment, run_pjrt_experiment, run_scenario, LoadgenOpts,
+};
 use crate::cfg::{AlgorithmKind, DataDist, EngineMode, ExperimentConfig, Scenario};
 use crate::connectivity::ConnectivityStats;
 use crate::fl::illustrative;
@@ -55,6 +57,19 @@ COMMANDS:
                   non-provisional baseline (the CI arming artifact)
                   --current A.json,B.json bench outputs to merge
                   --out FILE              baseline file to write
+  serve         drive the serving front end over a scenario's contact trace,
+                paced in wall-clock time (ADR-0010)
+                  serve <name|--config FILE>
+                    --sats N / --steps N         scale the scenario down
+                    --pace S (0.05)              wall seconds per replayed slot
+                    --queue-cap N / --batch N / --shards N   [serve] overrides
+                    --json [FILE]                run-artifact bundle
+  loadgen       replay a scenario's contact trace at full speed and report
+                sustained uploads/sec + p50/p99 drain latency (ADR-0010)
+                  loadgen <name|--config FILE>
+                    --sats N / --steps N         scale the scenario down
+                    --queue-cap N / --batch N / --shards N   [serve] overrides
+                    --json [FILE]                run-artifact bundle
   utility       phase-1 utility pipeline on the mock backend; reports MSE
                   --samples N (400)
   schedule      plan one FedSpace aggregation window over the real
@@ -283,6 +298,8 @@ const PENDING_BASELINE_BENCHES: &[&str] = &[
     "robust_aggregate_trimmed",
     "robust_aggregate_krum",
     "federation_reconcile",
+    "serve_ingest_throughput",
+    "serve_reconcile_latency",
 ];
 
 /// `fedspace bench-check` — the CI perf-regression gate: merge one or more
@@ -408,18 +425,98 @@ pub fn bench_baseline(args: &Args) -> Result<()> {
 /// Resolve the scenario a `scenarios describe|run` invocation names: a
 /// registry name as the second positional argument, or `--config FILE`.
 fn resolve_scenario(args: &Args) -> Result<Scenario> {
+    resolve_scenario_at(args, 1, "fedspace scenarios <list|describe|run> [name] [options]")
+}
+
+/// [`resolve_scenario`] generalized over the positional slot the name sits
+/// in (`scenarios run <name>` puts it second; `serve <name>` / `loadgen
+/// <name>` put it first).
+fn resolve_scenario_at(args: &Args, pos: usize, usage: &str) -> Result<Scenario> {
     if let Some(path) = args.get("config") {
         return Scenario::from_file(path);
     }
-    match args.positional.get(1) {
+    match args.positional.get(pos) {
         Some(name) => Scenario::builtin(name).with_context(|| {
             format!(
                 "unknown scenario {name:?} — `fedspace scenarios list` shows: {}",
                 Scenario::builtin_names().join(", ")
             )
         }),
-        None => bail!("usage: fedspace scenarios <list|describe|run> [name] [options]"),
+        None => bail!("usage: {usage}"),
     }
+}
+
+/// The shared body of `fedspace serve` / `fedspace loadgen` (ADR-0010):
+/// resolve + scale the scenario, apply `[serve]` knob overrides, replay the
+/// contact trace into the serving front end, report throughput/latency, and
+/// emit the run-artifact bundle on `--json`.
+fn serve_replay(args: &Args, cmd_name: &str, pace_default: f64) -> Result<()> {
+    let sc = resolve_scenario_at(args, 0, &format!("fedspace {cmd_name} <name> [options]"))?;
+    let sats = args.get("sats").map(|v| v.parse::<usize>()).transpose()?;
+    let steps = args.get("steps").map(|v| v.parse::<usize>()).transpose()?;
+    let mut sc = sc.scaled(sats, steps);
+    sc.serve.queue_cap = args.get_usize("queue-cap", sc.serve.queue_cap)?;
+    sc.serve.batch = args.get_usize("batch", sc.serve.batch)?;
+    sc.serve.shards = args.get_usize("shards", sc.serve.shards)?;
+    let pace_s = args.get_f64("pace", pace_default)?;
+    let json_out = json_request(args);
+    println!(
+        "{cmd_name} {}: {} sats, {} steps, {} gateway(s), queue_cap {}, batch {}, shards {}{}",
+        sc.name,
+        sc.constellation.n_sats(),
+        sc.n_steps,
+        sc.federation.n_gateways(),
+        sc.serve.queue_cap,
+        sc.serve.batch,
+        sc.serve.shards,
+        if pace_s > 0.0 { format!(", pace {pace_s}s/slot") } else { String::new() }
+    );
+    let opts = LoadgenOpts { pace_s, record_events: true };
+    let r = run_loadgen(&sc, &opts)?;
+    println!(
+        "served {} uploads in {:.2}s — {:.0} uploads/s (deferred {}, rejected {})",
+        r.uploads, r.wall_s, r.uploads_per_s, r.deferred_offers, r.rejected
+    );
+    println!(
+        "ticks {} rounds {} reconciles {}; drain latency p50 {:.3} ms, p99 {:.3} ms",
+        r.ticks, r.final_round, r.reconciles, r.p50_ms, r.p99_ms
+    );
+    // queue depths at drain, log2-bucketed — the saturation picture
+    let depths: Vec<String> = r
+        .depth_hist
+        .iter()
+        .enumerate()
+        .filter(|(_, &n)| n > 0)
+        .map(|(b, &n)| {
+            if b == 0 {
+                format!("0: {n}")
+            } else {
+                format!("[{}, {}): {n}", 1usize << (b - 1), 1usize << b)
+            }
+        })
+        .collect();
+    println!("queue depth at drain: {}", depths.join("  "));
+    match json_out {
+        JsonOut::Stdout => println!("{}", bundle_json(&[r.artifact])),
+        JsonOut::File(path) => {
+            write_file(&path, &bundle_json(&[r.artifact]))?;
+            println!("run-artifact bundle written to {path}");
+        }
+        JsonOut::No => {}
+    }
+    Ok(())
+}
+
+/// `fedspace serve` — the serving front end paced in wall-clock time: the
+/// long-lived-driver mode (a replayed trace stands in for live gateways).
+pub fn serve(args: &Args) -> Result<()> {
+    serve_replay(args, "serve", 0.05)
+}
+
+/// `fedspace loadgen` — the same replay at maximum speed: the
+/// throughput/latency measurement mode (sustained uploads/sec, p50/p99).
+pub fn loadgen(args: &Args) -> Result<()> {
+    serve_replay(args, "loadgen", 0.0)
 }
 
 /// Where a `--json` request routes machine-readable output: nowhere (flag
@@ -829,6 +926,33 @@ mod tests {
         assert_eq!(doc.get("name").and_then(|v| v.as_str()), Some("paper-fig7"));
         let toml = doc.get("toml").and_then(|v| v.as_str()).unwrap();
         assert!(toml.contains("[constellation]"), "embedded TOML spec survives escaping");
+    }
+
+    #[test]
+    fn loadgen_and_serve_commands_replay_a_trace() {
+        use crate::bench_report::parse_json;
+        let dir = std::env::temp_dir().join(format!("fedspace_loadgen_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let bundle = dir.join("serve_bundle.json").to_string_lossy().into_owned();
+        loadgen(&args(&format!(
+            "loadgen fedspace-multi-gs --sats 8 --steps 24 --json {bundle}"
+        )))
+        .unwrap();
+        let doc = parse_json(&std::fs::read_to_string(&bundle).unwrap()).unwrap();
+        assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some("fedspace-run-artifact-v1"));
+        let runs = doc.get("runs").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(runs.len(), 1);
+        let events = runs[0].get("events").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(events[0].get("type").and_then(|v| v.as_str()), Some("run_start"));
+        let report = events
+            .iter()
+            .find(|e| e.get("type").and_then(|v| v.as_str()) == Some("serve_report"))
+            .expect("the replay must end in a serve_report");
+        assert!(report.get("uploads_per_s").and_then(|v| v.as_num()).unwrap() > 0.0);
+        // the paced driver runs the same machinery (pace 0 keeps tests fast)
+        serve(&args("serve paper-fig7 --sats 6 --steps 12 --pace 0 --batch 8")).unwrap();
+        // a missing scenario name is a usage error
+        assert!(loadgen(&args("loadgen")).is_err());
     }
 
     #[test]

@@ -9,7 +9,7 @@ pub mod runner;
 pub use args::Args;
 pub use runner::{
     build_partition, build_schedule, build_stream, build_upload_routing, build_utility_model,
-    run_mock_experiment, run_mock_on_schedule, run_mock_on_schedule_fed,
+    run_loadgen, run_mock_experiment, run_mock_on_schedule, run_mock_on_schedule_fed,
     run_mock_on_schedule_routed, run_mock_on_stream, run_mock_on_stream_fed, run_pjrt_experiment,
-    run_scenario, ExperimentOutput, FederationRun,
+    run_scenario, ExperimentOutput, FederationRun, LoadgenOpts, LoadgenReport,
 };

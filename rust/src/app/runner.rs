@@ -8,7 +8,9 @@ use crate::connectivity::{
 use crate::data::{
     partition::cell_visits, partition_iid, partition_noniid, Dataset, Partition, SynthConfig,
 };
-use crate::fl::{FederationSpec, UploadRouting};
+use crate::fl::{
+    CpuAggregator, FederationSpec, Offer, PendingUpload, ServeCore, UploadRouting,
+};
 use crate::orbit::{planet_ground_stations, planet_labs_like, Constellation};
 use crate::rng::Rng;
 use crate::runtime::{ModelRuntime, PjrtAggregator};
@@ -16,7 +18,10 @@ use crate::sched::{
     generate_samples, pretrain_bank, samples_from_csv, samples_to_csv, FedSpacePlanner,
     MockBackend, SampleBackend, SearchParams, UtilityModel,
 };
-use crate::sim::{Engine, EngineConfig, MockTrainer, PjrtTrainer, RunResult};
+use crate::sim::{
+    ArtifactSink, Engine, EngineConfig, MockTrainer, PjrtTrainer, RunArtifact, RunEvent,
+    RunResult, TraceSink, UploadOutcome,
+};
 use anyhow::{ensure, Context, Result};
 
 /// A multi-gateway federation to run under (ADR-0006): the spec and an
@@ -233,19 +238,6 @@ fn make_planners(
         .collect()
 }
 
-/// Split a per-gateway planner vec into the constructor's gateway-0 slot
-/// and the `with_federation` extras.
-fn split_planners(
-    mut planners: Vec<FedSpacePlanner>,
-) -> (Option<FedSpacePlanner>, Vec<FedSpacePlanner>) {
-    if planners.is_empty() {
-        (None, Vec::new())
-    } else {
-        let first = planners.remove(0);
-        (Some(first), planners)
-    }
-}
-
 /// Scheduler-level experiment on the analytic mock objective. Fast: used by
 /// tests, the ablation bench and quick CLI iterations. Streamed-mode
 /// configs route through a [`ConnectivityStream`] automatically; `[isl]`
@@ -345,13 +337,18 @@ pub fn run_mock_on_schedule_fed(
     );
     let spec = fed.map_or(&cfg.federation, |f| f.spec);
     let (trainer, planners) = mock_parts(cfg, spec.n_gateways())?;
-    let (first, extra) = split_planners(planners);
     // [robust] picks the Eq.-4 aggregator family; the default is the plain
     // CpuAggregator, bit for bit (ADR-0007)
     let mut agg = cfg.robust.make();
-    let mut engine = Engine::new(sched, &trainer, &mut *agg, engine_cfg(cfg, stop_at), first)
-        .with_contact_graph(graph)
-        .with_federation(spec, fed.map(|f| f.routing), extra);
+    let mut engine = Engine::builder()
+        .schedule(sched)
+        .trainer(&trainer)
+        .aggregator(&mut *agg)
+        .config(engine_cfg(cfg, stop_at))
+        .planners(planners)
+        .contact_graph(graph)
+        .federation(spec, fed.map(|f| f.routing))
+        .build();
     Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
 }
 
@@ -393,11 +390,15 @@ pub fn run_mock_on_stream_fed(
     );
     let spec = fed.map_or(&cfg.federation, |f| f.spec);
     let (trainer, planners) = mock_parts(cfg, spec.n_gateways())?;
-    let (first, extra) = split_planners(planners);
     let mut agg = cfg.robust.make();
-    let mut engine =
-        Engine::new_streamed(stream, &trainer, &mut *agg, engine_cfg(cfg, stop_at), first)
-            .with_federation(spec, fed.map(|f| f.routing), extra);
+    let mut engine = Engine::builder()
+        .stream(stream)
+        .trainer(&trainer)
+        .aggregator(&mut *agg)
+        .config(engine_cfg(cfg, stop_at))
+        .planners(planners)
+        .federation(spec, fed.map(|f| f.routing))
+        .build();
     Ok(ExperimentOutput { result: engine.run()?, algorithm: cfg.algorithm, dist: cfg.dist })
 }
 
@@ -423,11 +424,10 @@ pub fn run_scenario(sc: &Scenario, stop_at: Option<f64>) -> Result<Vec<Experimen
             .map(|&alg| run_mock_on_stream_fed(&sc.experiment_config(alg), &stream, fed, stop_at))
             .collect();
     }
-    let (constellation, sched) = sc.build_schedule();
-    // one routed graph + one federation shared across the grid, like the
-    // schedule itself
+    // schedule + routing out of ONE fused visibility sweep; one routed
+    // graph + one federation shared across the grid, like the schedule
+    let (constellation, sched, routing) = sc.build_schedule_routed();
     let graph = sc.build_contact_graph(&constellation, &sched);
-    let routing = sc.build_upload_routing(&constellation);
     let fed = FederationRun::of(&sc.federation, routing.as_ref());
     sc.algorithms
         .iter()
@@ -436,6 +436,195 @@ pub fn run_scenario(sc: &Scenario, stop_at: Option<f64>) -> Result<Vec<Experimen
             run_mock_on_schedule_fed(&cfg, &sched, graph.as_ref(), fed, stop_at)
         })
         .collect()
+}
+
+/// Options of one serving replay ([`run_loadgen`]): pacing and whether the
+/// recorded event stream rides into the artifact.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadgenOpts {
+    /// Wall-clock seconds to spend per replayed slot (`0` = replay as fast
+    /// as possible — the throughput-measurement mode). The `serve`
+    /// subcommand paces; `loadgen` does not.
+    pub pace_s: f64,
+    /// Keep the full event stream in the returned artifact (the `--json`
+    /// bundle needs it; human-table runs can skip the memory).
+    pub record_events: bool,
+}
+
+impl Default for LoadgenOpts {
+    fn default() -> Self {
+        LoadgenOpts { pace_s: 0.0, record_events: true }
+    }
+}
+
+/// What one serving replay measured (ADR-0010). Model-state fields are
+/// deterministic per (scenario, seed); the wall-clock fields are not —
+/// exactly the split `RunEvent::is_deterministic` encodes.
+pub struct LoadgenReport {
+    /// The run-artifact bundle entry (schema `fedspace-run-artifact-v1`).
+    pub artifact: RunArtifact,
+    /// Uploads accepted into gateway queues.
+    pub uploads: u64,
+    /// Offers backpressured by a full queue (every one was retried).
+    pub deferred_offers: u64,
+    /// Uploads discarded by ingest validation.
+    pub rejected: u64,
+    /// Serving ticks (drains) executed.
+    pub ticks: usize,
+    /// Global rounds the federation completed.
+    pub final_round: usize,
+    /// Cross-gateway merges performed.
+    pub reconciles: usize,
+    /// Power-of-two queue-depth histogram (bucket 0 = drained-empty).
+    pub depth_hist: Vec<u64>,
+    /// Wall-clock seconds the replay took.
+    pub wall_s: f64,
+    /// Sustained accepted-upload rate.
+    pub uploads_per_s: f64,
+    /// Median per-tick drain+aggregate latency, ms.
+    pub p50_ms: f64,
+    /// 99th-percentile per-tick drain+aggregate latency, ms.
+    pub p99_ms: f64,
+}
+
+/// Replay a scenario's contact trace into the serving front end
+/// (ADR-0010): every schedule contact becomes one seeded mock upload
+/// offered to its routed gateway's bounded queue, one schedule step is one
+/// serving tick, and deferred offers retry ahead of newer arrivals so no
+/// gateway's stream reorders. After the trace, queues flush to empty.
+/// Reports sustained uploads/sec and p50/p99 tick latency; the final model
+/// and the deterministic event stream depend only on (scenario, seed).
+pub fn run_loadgen(sc: &Scenario, opts: &LoadgenOpts) -> Result<LoadgenReport> {
+    use std::collections::VecDeque;
+    use std::time::Instant;
+    sc.validate()?;
+    sc.serve.validate()?;
+    let (_constellation, sched, routing) = sc.build_schedule_routed();
+    let cfg = sc.experiment_config(sc.algorithms[0]);
+    crate::exec::set_default_parallelism(cfg.threads);
+    let dim = 32usize; // mock-trainer model width; serving is backend-mock-grade
+    let mut rng = Rng::new(cfg.sim_seed ^ 0x10AD);
+    let mut serve = ServeCore::new(&sc.federation, &sc.serve, vec![0.0; dim], cfg.alpha);
+    let n_gateways = sc.federation.n_gateways();
+    let mut agg = CpuAggregator;
+    let mut sink = ArtifactSink::new();
+    sink.emit(&RunEvent::RunStart { n_sats: sched.n_sats, n_steps: sched.n_steps(), n_gateways });
+    // deferred offers park here and re-offer before any newer upload — the
+    // FIFO-per-gateway guarantee the backpressure test gates
+    let mut retry: VecDeque<(usize, PendingUpload)> = VecDeque::new();
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    let started = Instant::now();
+    let offer = |serve: &mut ServeCore,
+                     retry: &mut VecDeque<(usize, PendingUpload)>,
+                     sink: &mut ArtifactSink,
+                     step: usize,
+                     g: usize,
+                     up: PendingUpload| {
+        let origin = up.sat;
+        match serve.offer(g, up) {
+            Offer::Accepted => sink.emit(&RunEvent::Upload {
+                step,
+                origin,
+                gateway: g,
+                hops: 0,
+                bytes: 0,
+                outcome: UploadOutcome::Delivered,
+                injected: false,
+                corrupted: false,
+            }),
+            Offer::Deferred(up) => {
+                sink.emit(&RunEvent::Upload {
+                    step,
+                    origin,
+                    gateway: 0,
+                    hops: 0,
+                    bytes: 0,
+                    outcome: UploadOutcome::Deferred,
+                    injected: false,
+                    corrupted: false,
+                });
+                retry.push_back((g, up));
+            }
+        }
+    };
+    for i in 0..sched.n_steps() {
+        let tick_started = Instant::now();
+        for _ in 0..retry.len() {
+            let (g, up) = retry.pop_front().expect("counted");
+            offer(&mut serve, &mut retry, &mut sink, i, g, up);
+        }
+        for &sat in sched.sats_at(i) {
+            let grad: Vec<f32> = (0..dim).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+            let up = PendingUpload {
+                sat,
+                grad: grad.into(),
+                base_round: serve.core().round(),
+                n_samples: 1 + sat % 5,
+            };
+            let g = routing.as_ref().map_or(0, |r| r.gateway_for(i, sat, 0));
+            offer(&mut serve, &mut retry, &mut sink, i, g, up);
+        }
+        let drain_started = Instant::now();
+        serve.drain(&mut agg, &mut sink)?;
+        latencies_ms.push(drain_started.elapsed().as_secs_f64() * 1e3);
+        if opts.pace_s > 0.0 {
+            let left = opts.pace_s - tick_started.elapsed().as_secs_f64();
+            if left > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(left));
+            }
+        }
+    }
+    // flush: the trace is over, drain until every queue (and the retry
+    // park) is empty — backpressure defers, it never strands an upload
+    let mut flush_guard = serve.accepted() + serve.deferred() + 16;
+    while !retry.is_empty() || (0..n_gateways).any(|g| serve.queue_depth(g) > 0) {
+        ensure!(flush_guard > 0, "serving flush failed to converge (batch too small?)");
+        flush_guard -= 1;
+        let step = sched.n_steps();
+        for _ in 0..retry.len() {
+            let (g, up) = retry.pop_front().expect("counted");
+            offer(&mut serve, &mut retry, &mut sink, step, g, up);
+        }
+        let drain_started = Instant::now();
+        serve.drain(&mut agg, &mut sink)?;
+        latencies_ms.push(drain_started.elapsed().as_secs_f64() * 1e3);
+    }
+    let wall_s = started.elapsed().as_secs_f64();
+    let uploads = serve.accepted();
+    let uploads_per_s = uploads as f64 / wall_s.max(1e-9);
+    let p50_ms = crate::fl::serve::percentile(&latencies_ms, 50.0);
+    let p99_ms = crate::fl::serve::percentile(&latencies_ms, 99.0);
+    sink.emit(&RunEvent::ServeReport { uploads, wall_s, uploads_per_s, p50_ms, p99_ms });
+    let mut trace = crate::sim::RunTrace::default();
+    for e in &sink.events {
+        TraceSink::apply(&mut trace, e);
+    }
+    let final_round = serve.core().round();
+    let reconciles = serve.core().reconciles;
+    Ok(LoadgenReport {
+        artifact: RunArtifact {
+            scenario: sc.name.clone(),
+            algorithm: "loadgen".into(),
+            engine: "serve".into(),
+            n_sats: sched.n_sats,
+            n_steps: sched.n_steps(),
+            final_round,
+            days_to_target: None,
+            trace,
+            events: if opts.record_events { sink.events } else { Vec::new() },
+        },
+        uploads,
+        deferred_offers: serve.deferred(),
+        rejected: serve.rejected(),
+        ticks: serve.ticks(),
+        final_round,
+        reconciles,
+        depth_hist: serve.depth_hist().to_vec(),
+        wall_s,
+        uploads_per_s,
+        p50_ms,
+        p99_ms,
+    })
 }
 
 /// PJRT sample backend: local updates and losses through the artifacts.
@@ -530,16 +719,27 @@ pub fn run_pjrt_experiment(
     } else {
         Vec::new()
     };
-    let (first, extra) = split_planners(planners);
     let mut agg = PjrtAggregator { rt: &rt };
     let ecfg = engine_cfg(cfg, stop_at);
     let result = match (&sched, &stream) {
-        (Some(s), _) => Engine::new(s, &trainer, &mut agg, ecfg, first)
-            .with_contact_graph(graph.as_ref())
-            .with_federation(&cfg.federation, routing.as_ref(), extra)
+        (Some(s), _) => Engine::builder()
+            .schedule(s)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(ecfg)
+            .planners(planners)
+            .contact_graph(graph.as_ref())
+            .federation(&cfg.federation, routing.as_ref())
+            .build()
             .run()?,
-        (None, Some(st)) => Engine::new_streamed(st, &trainer, &mut agg, ecfg, first)
-            .with_federation(&cfg.federation, routing.as_ref(), extra)
+        (None, Some(st)) => Engine::builder()
+            .stream(st)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(ecfg)
+            .planners(planners)
+            .federation(&cfg.federation, routing.as_ref())
+            .build()
             .run()?,
         (None, None) => unreachable!("one time axis is always built"),
     };
@@ -753,6 +953,44 @@ mod tests {
         let plain = run_mock_experiment(&tiny_cfg(AlgorithmKind::FedBuff), None).unwrap();
         assert_eq!(plain.result.trace.deferred, 0);
         assert!(!build_schedule(&tiny_cfg(AlgorithmKind::FedBuff)).1.has_durations());
+    }
+
+    #[test]
+    fn loadgen_replay_is_deterministic_and_flushes() {
+        // the serving replay: same scenario ⇒ same accepted-upload count,
+        // same final round, identical deterministic event stream — only
+        // the wall-clock fields may differ between the two runs
+        let sc = Scenario::builtin("fedspace-multi-gs").unwrap().scaled(Some(10), Some(32));
+        let a = run_loadgen(&sc, &LoadgenOpts::default()).unwrap();
+        let b = run_loadgen(&sc, &LoadgenOpts::default()).unwrap();
+        assert!(a.uploads > 0, "the trace must carry contacts");
+        assert_eq!(a.uploads, b.uploads);
+        assert_eq!(a.final_round, b.final_round);
+        assert_eq!(a.rejected, 0);
+        let det = |r: &LoadgenReport| -> Vec<crate::sim::RunEvent> {
+            r.artifact.events.iter().filter(|e| e.is_deterministic()).cloned().collect()
+        };
+        assert_eq!(det(&a), det(&b), "deterministic serving streams diverged");
+        assert_eq!(a.artifact.events[0].kind(), "run_start");
+        assert!(a.artifact.events.iter().any(|e| e.kind() == "serve_report"));
+        // every queue flushed: accepted == drained into the federation
+        assert_eq!(a.artifact.trace.uploads as u64, a.uploads);
+        // the artifact JSON carries the v1 schema the CI smoke pins
+        let json = crate::sim::bundle_json(&[a.artifact]);
+        assert!(json.contains("fedspace-run-artifact-v1"));
+    }
+
+    #[test]
+    fn loadgen_backpressures_under_a_tiny_queue() {
+        // a 2-deep queue in front of a 12-sat fleet must defer — and still
+        // deliver every upload (flush drains to empty, nothing strands)
+        let mut sc = Scenario::builtin("paper-fig7").unwrap().scaled(Some(12), Some(24));
+        sc.algorithms = vec![AlgorithmKind::FedBuff];
+        sc.serve = crate::fl::ServeSpec { queue_cap: 2, batch: 1, shards: 2 };
+        let r = run_loadgen(&sc, &LoadgenOpts::default()).unwrap();
+        assert!(r.deferred_offers > 0, "cap 2 must backpressure this fleet");
+        assert_eq!(r.artifact.trace.uploads as u64, r.uploads, "deferred offers must land");
+        assert!(r.ticks >= 24, "flush ticks extend the serving clock");
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use super::scenario::IslSpec;
 use super::section::{apply_section, validate_section, SectionCtx};
 use super::toml::{parse_toml, TomlDoc, TomlValue};
-use crate::fl::{FederationSpec, LinkSpec, RobustSpec};
+use crate::fl::{FederationSpec, LinkSpec, RobustSpec, ServeSpec};
 use crate::sim::{AttackSpec, EventSpec};
 use anyhow::{bail, Context, Result};
 
@@ -203,6 +203,10 @@ pub struct ExperimentConfig {
     /// Run-event recording (ADR-0009) — the `[events]` TOML section. Off
     /// by default; the event stream still drives the trace either way.
     pub events: EventSpec,
+    /// Serving front-end resource shape (ADR-0010) — the `[serve]` TOML
+    /// section. Only the `serve`/`loadgen` drivers read it; sim runs
+    /// ignore it entirely.
+    pub serve: ServeSpec,
 }
 
 impl Default for ExperimentConfig {
@@ -242,6 +246,7 @@ impl Default for ExperimentConfig {
             robust: RobustSpec::default(),
             link: LinkSpec::default(),
             events: EventSpec::default(),
+            serve: ServeSpec::default(),
         }
     }
 }
@@ -340,6 +345,7 @@ impl ExperimentConfig {
         apply_section(doc, &mut c.robust)?;
         apply_section(doc, &mut c.link)?;
         apply_section(doc, &mut c.events)?;
+        apply_section(doc, &mut c.serve)?;
         c.validate()?;
         Ok(c)
     }
@@ -378,6 +384,7 @@ impl ExperimentConfig {
         validate_section(&self.robust, &ctx)?;
         validate_section(&self.link, &ctx)?;
         validate_section(&self.events, &ctx)?;
+        validate_section(&self.serve, &ctx)?;
         if self.link.capacity_enabled() && self.isl.enabled() {
             bail!(
                 "[link] byte budgets and [isl] routing are mutually exclusive: a relayed \
@@ -540,6 +547,19 @@ mod tests {
         )
         .unwrap();
         assert!(c.link.enabled() && !c.link.capacity_enabled());
+    }
+
+    #[test]
+    fn serve_section_reaches_the_config_path() {
+        let c = ExperimentConfig::from_toml_text(
+            "[serve]\nqueue_cap = 64\nbatch = 16\nshards = 2",
+        )
+        .unwrap();
+        assert_eq!((c.serve.queue_cap, c.serve.batch, c.serve.shards), (64, 16, 2));
+        assert!(ExperimentConfig::default().serve.is_default());
+        // bounds enforced on the config path too
+        assert!(ExperimentConfig::from_toml_text("[serve]\nqueue_cap = 0").is_err());
+        assert!(ExperimentConfig::from_toml_text("[serve]\nbatch = 0").is_err());
     }
 
     #[test]

@@ -22,7 +22,8 @@ use crate::connectivity::{
     IslTopology,
 };
 use crate::fl::{
-    CodecKind, FederationSpec, LinkSpec, ReconcilePolicy, RobustKind, RobustSpec, UploadRouting,
+    CodecKind, FederationSpec, LinkSpec, ReconcilePolicy, RobustKind, RobustSpec, ServeSpec,
+    UploadRouting,
 };
 use crate::orbit::{
     planet_ground_stations, planet_labs_like, Constellation, DowntimeWindow, GroundStation,
@@ -409,6 +410,10 @@ pub struct Scenario {
     /// Run-event recording (ADR-0009). Off by default: the event stream is
     /// still how the trace is derived, but nothing is kept in memory.
     pub events: EventSpec,
+    /// Serving front-end resource shape (ADR-0010): per-gateway ingestion
+    /// queue capacity, drain batch size, validation shards. Only the
+    /// `serve`/`loadgen` drivers read it; sim runs ignore it entirely.
+    pub serve: ServeSpec,
 }
 
 impl Default for Scenario {
@@ -433,6 +438,7 @@ impl Default for Scenario {
             robust: RobustSpec::default(),
             link: LinkSpec::default(),
             events: EventSpec::default(),
+            serve: ServeSpec::default(),
         }
     }
 }
@@ -508,6 +514,7 @@ impl Scenario {
         validate_section(&self.robust, &ctx)?;
         validate_section(&self.link, &ctx)?;
         validate_section(&self.events, &ctx)?;
+        validate_section(&self.serve, &ctx)?;
         if self.link.capacity_enabled() && self.isl.enabled() {
             bail!(
                 "[link] byte budgets and [isl] routing are mutually exclusive: a relayed \
@@ -934,6 +941,7 @@ impl Scenario {
         emit_section(&self.robust, &mut s);
         emit_section(&self.link, &mut s);
         emit_section(&self.events, &mut s);
+        emit_section(&self.serve, &mut s);
         if !self.downtime.is_empty() {
             let col = |f: fn(&DowntimeWindow) -> usize| -> String {
                 self.downtime.iter().map(|w| f(w).to_string()).collect::<Vec<_>>().join(", ")
@@ -1117,6 +1125,7 @@ impl Scenario {
         apply_section(doc, &mut sc.robust)?;
         apply_section(doc, &mut sc.link)?;
         apply_section(doc, &mut sc.events)?;
+        apply_section(doc, &mut sc.serve)?;
 
         if doc.get("downtime").is_some() {
             let col = |key: &str| -> Result<Vec<usize>> {
@@ -1200,6 +1209,31 @@ impl Scenario {
         };
         let sched = sched.with_downtime(&constellation.downtime);
         (constellation, sched)
+    }
+
+    /// [`Self::build_schedule`] and [`Self::build_upload_routing`] fused
+    /// into ONE visibility sweep for multi-gateway scenarios (the sampling
+    /// pipeline used to run twice over the horizon); single-gateway
+    /// scenarios keep the plain schedule build and return no routing.
+    /// Bit-identical to calling the two builders separately — asserted by
+    /// the `UploadRouting` fused-build tests.
+    pub fn build_schedule_routed(
+        &self,
+    ) -> (Constellation, ConnectivitySchedule, Option<UploadRouting>) {
+        if self.federation.is_single() {
+            let (constellation, sched) = self.build_schedule();
+            return (constellation, sched, None);
+        }
+        let (constellation, stations, params) = self.connectivity_inputs();
+        let (sched, routing) = UploadRouting::build_with_schedule(
+            &constellation,
+            &stations,
+            self.n_steps,
+            &params,
+            &self.federation.stations,
+            self.link.capacity_enabled(),
+        );
+        (constellation, sched, Some(routing))
     }
 
     /// Build constellation + chunked connectivity stream — the streamed-
@@ -1308,6 +1342,7 @@ impl Scenario {
             robust: self.robust.clone(),
             link: self.link.clone(),
             events: self.events,
+            serve: self.serve,
             ..Default::default()
         }
     }

@@ -1,7 +1,7 @@
 //! One shared contract for every optional TOML section.
 //!
-//! `[isl]`, `[federation]`, `[attack]`, `[robust]`, `[link]` and `[events]`
-//! all follow the same lifecycle — absent ⇒ default ⇒ not emitted, present ⇒
+//! `[isl]`, `[federation]`, `[attack]`, `[robust]`, `[link]`, `[events]`
+//! and `[serve]` all follow the same lifecycle — absent ⇒ default ⇒ not emitted, present ⇒
 //! parsed key-by-key over the default, validated against the run it rides
 //! in — but before PR 8 each spec hand-rolled that surface and
 //! `cfg/scenario.rs` / `cfg/experiment.rs` each open-coded the call chains.
@@ -91,6 +91,7 @@ mod tests {
     use crate::fl::codec::{CodecKind, LinkSpec};
     use crate::fl::federation::{FederationSpec, ReconcilePolicy};
     use crate::fl::robust::{RobustKind, RobustSpec};
+    use crate::fl::serve::ServeSpec;
     use crate::sim::adversary::{AttackKind, AttackSpec};
     use crate::sim::events::EventSpec;
 
@@ -160,6 +161,7 @@ mod tests {
             topk_frac: 0.0625,
         });
         roundtrip(EventSpec { record: true });
+        roundtrip(ServeSpec { queue_cap: 4096, batch: 64, shards: 4 });
     }
 
     #[test]

@@ -25,6 +25,6 @@ pub mod stats;
 pub mod stream;
 
 pub use graph::{ContactGraph, IslParams, IslTopology, RouteScratch};
-pub use schedule::{ConnectivityParams, ConnectivitySchedule, StepView};
+pub use schedule::{ConnectivityParams, ConnectivitySchedule, StepView, SweepOutput, SweepRecord};
 pub use stats::{contacts_per_day, set_sizes, ConnectivityStats};
 pub use stream::{ConnectivityStream, ScheduleChunk, StreamCursor, WindowView};

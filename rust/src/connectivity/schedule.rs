@@ -155,6 +155,29 @@ pub struct ConnectivitySchedule {
     durs: Vec<Vec<u16>>,
 }
 
+/// What the one-pass visibility sweep records beyond contact membership
+/// (see [`ConnectivitySchedule::compute_sweep`]). The default records
+/// nothing extra — the plain [`ConnectivitySchedule::compute`] semantics.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SweepRecord {
+    /// Record per-contact pass durations (ADR-0008 byte budgets).
+    pub durations: bool,
+    /// Record per-contact lowest-visible-station attribution (ADR-0006
+    /// multi-gateway upload routing).
+    pub attribution: bool,
+}
+
+/// Output of [`ConnectivitySchedule::compute_sweep`].
+#[derive(Clone, Debug)]
+pub struct SweepOutput {
+    /// The computed schedule, durations attached iff they were recorded.
+    pub schedule: ConnectivitySchedule,
+    /// `attribution[i][j]` = lowest-indexed station that heard satellite
+    /// `schedule.sets[i][j]` at step `i`; `Some` iff attribution was
+    /// recorded.
+    pub attribution: Option<Vec<Vec<u16>>>,
+}
+
 impl ConnectivitySchedule {
     /// Compute C for `n_steps` windows from a constellation + station list.
     ///
@@ -170,6 +193,27 @@ impl ConnectivitySchedule {
         n_steps: usize,
         params: ConnectivityParams,
     ) -> Self {
+        Self::compute_sweep(constellation, stations, n_steps, params, SweepRecord::default())
+            .schedule
+    }
+
+    /// The unified one-pass visibility sweep every dense compute goes
+    /// through: membership always, plus whatever `record` asks for —
+    /// per-contact pass durations (ADR-0008) and/or per-contact station
+    /// attribution (ADR-0006, the upload-routing primitive). Membership is
+    /// identical for every `record` combination (the extra bookkeeping
+    /// never changes the ≥-`need` admission decision), so
+    /// [`Self::compute`] and [`Self::compute_with_durations`] are thin
+    /// wrappers over this, and the multi-gateway precompute
+    /// (`UploadRouting::build_with_schedule`) fuses its attribution sweep
+    /// into the same pass instead of sampling the horizon twice.
+    pub fn compute_sweep(
+        constellation: &Constellation,
+        stations: &[GroundStation],
+        n_steps: usize,
+        params: ConnectivityParams,
+        record: SweepRecord,
+    ) -> SweepOutput {
         let n_sats = constellation.len();
         let need = feasible_need(&params);
         let spw = params.samples_per_window;
@@ -178,28 +222,64 @@ impl ConnectivitySchedule {
         let rots: Arc<Vec<SampleRot>> =
             Arc::new(sample_rotations_range(0, n_steps, spw, params.t0_s));
         let bases: Vec<OrbitBasis> = constellation.orbits.iter().map(|o| o.basis()).collect();
-
         let pool = exec::global_pool();
-        let contacts: Vec<Vec<usize>> = if n_sats > 1 && pool.size() > 1 {
+
+        if record == SweepRecord::default() {
+            // membership-only fast path: keeps the early exit at `need`
+            let contacts: Vec<Vec<usize>> = if n_sats > 1 && pool.size() > 1 {
+                let frames = Arc::clone(&frames);
+                let rots = Arc::clone(&rots);
+                pool.scope_map(bases, move |basis| {
+                    sat_contacts(&basis, &frames, &rots, 0, n_steps, spw, sin_min, need)
+                })
+            } else {
+                bases
+                    .iter()
+                    .map(|basis| {
+                        sat_contacts(basis, &frames, &rots, 0, n_steps, spw, sin_min, need)
+                    })
+                    .collect()
+            };
+            let mut sets = vec![Vec::new(); n_steps];
+            for (k, cs) in contacts.iter().enumerate() {
+                for &i in cs {
+                    sets[i].push(k); // k ascends, so each set stays sorted
+                }
+            }
+            let schedule = Self::assemble(sets, contacts, n_sats, params);
+            return SweepOutput { schedule, attribution: None };
+        }
+
+        let per_sat: Vec<Vec<(usize, u16, u16)>> = if n_sats > 1 && pool.size() > 1 {
             let frames = Arc::clone(&frames);
             let rots = Arc::clone(&rots);
             pool.scope_map(bases, move |basis| {
-                sat_contacts(&basis, &frames, &rots, 0, n_steps, spw, sin_min, need)
+                sat_sweep(&basis, &frames, &rots, 0, n_steps, spw, sin_min, need)
             })
         } else {
             bases
                 .iter()
-                .map(|basis| sat_contacts(basis, &frames, &rots, 0, n_steps, spw, sin_min, need))
+                .map(|basis| sat_sweep(basis, &frames, &rots, 0, n_steps, spw, sin_min, need))
                 .collect()
         };
 
         let mut sets = vec![Vec::new(); n_steps];
-        for (k, cs) in contacts.iter().enumerate() {
-            for &i in cs {
+        let mut durs = vec![Vec::new(); n_steps];
+        let mut attr = vec![Vec::new(); n_steps];
+        let mut contacts = vec![Vec::new(); n_sats];
+        for (k, windows) in per_sat.iter().enumerate() {
+            for &(i, dur, st) in windows {
                 sets[i].push(k); // k ascends, so each set stays sorted
+                durs[i].push(dur);
+                attr[i].push(st);
+                contacts[k].push(i);
             }
         }
-        Self::assemble(sets, contacts, n_sats, params)
+        let mut schedule = Self::assemble(sets, contacts, n_sats, params);
+        if record.durations {
+            schedule.durs = durs;
+        }
+        SweepOutput { schedule, attribution: record.attribution.then_some(attr) }
     }
 
     /// The original (pre-optimization) serial implementation: per-test
@@ -298,44 +378,14 @@ impl ConnectivitySchedule {
         n_steps: usize,
         params: ConnectivityParams,
     ) -> Self {
-        let n_sats = constellation.len();
-        let need = feasible_need(&params);
-        let spw = params.samples_per_window;
-        let sin_min = params.min_elev_deg.to_radians().sin();
-        let frames: Arc<Vec<StationFrame>> = Arc::new(station_frames(stations));
-        let rots: Arc<Vec<SampleRot>> =
-            Arc::new(sample_rotations_range(0, n_steps, spw, params.t0_s));
-        let bases: Vec<OrbitBasis> = constellation.orbits.iter().map(|o| o.basis()).collect();
-
-        let pool = exec::global_pool();
-        let per_sat: Vec<Vec<(usize, u16)>> = if n_sats > 1 && pool.size() > 1 {
-            let frames = Arc::clone(&frames);
-            let rots = Arc::clone(&rots);
-            pool.scope_map(bases, move |basis| {
-                sat_contacts_with_durs(&basis, &frames, &rots, 0, n_steps, spw, sin_min, need)
-            })
-        } else {
-            bases
-                .iter()
-                .map(|basis| {
-                    sat_contacts_with_durs(basis, &frames, &rots, 0, n_steps, spw, sin_min, need)
-                })
-                .collect()
-        };
-
-        let mut sets = vec![Vec::new(); n_steps];
-        let mut durs = vec![Vec::new(); n_steps];
-        let mut contacts = vec![Vec::new(); n_sats];
-        for (k, windows) in per_sat.iter().enumerate() {
-            for &(i, dur) in windows {
-                sets[i].push(k); // k ascends, so each set stays sorted
-                durs[i].push(dur);
-                contacts[k].push(i);
-            }
-        }
-        let mut s = Self::assemble(sets, contacts, n_sats, params);
-        s.durs = durs;
-        s
+        Self::compute_sweep(
+            constellation,
+            stations,
+            n_steps,
+            params,
+            SweepRecord { durations: true, attribution: false },
+        )
+        .schedule
     }
 
     /// Attach per-contact durations computed elsewhere (the streamed
@@ -633,44 +683,24 @@ pub(crate) fn sat_contacts_with_durs(
     sin_min: f64,
     need: usize,
 ) -> Vec<(usize, u16)> {
-    let prefilter = sin_min > 0.0;
-    let mut out = Vec::new();
-    for l in 0..len {
-        let mut feasible = 0usize;
-        for s in 0..samples_per_window {
-            let (t, sin_t, cos_t) = rots[l * samples_per_window + s];
-            let p = basis.position_eci(t);
-            let e = crate::orbit::eci_to_ecef_rot(&p, sin_t, cos_t);
-            for f in frames {
-                if prefilter && f.up.dot(&e) < f.up_dot_pos {
-                    continue; // below this station's horizon plane
-                }
-                if crate::orbit::visible_from_frame(&e, f, sin_min) {
-                    feasible += 1;
-                    break; // any station suffices for this sample
-                }
-            }
-        }
-        if feasible >= need {
-            out.push((step0 + l, feasible as u16));
-        }
-    }
-    out
+    sat_sweep(basis, frames, rots, step0, len, samples_per_window, sin_min, need)
+        .into_iter()
+        .map(|(i, dur, _)| (i, dur))
+        .collect()
 }
 
-/// Station attribution of one satellite's connected windows over steps
-/// `step0..step0 + len`: `(absolute step, lowest-indexed visible station)`
-/// pairs, ascending by step — the multi-gateway upload-routing primitive
-/// (ADR-0006). A window is emitted iff [`sat_contacts`] would emit it (the
-/// feasibility count is computed identically, just without the early exit
-/// at `need`, which cannot change the ≥-`need` decision), so attribution is
-/// total over every schedule contact. Within each feasible sub-sample the
-/// station scan stops at the first visible station (exactly the "any
-/// station suffices" order of the schedule compute); the window attribution
-/// is the minimum of those station indexes over its feasible samples —
-/// "the first station, by index, that heard the satellite".
+/// The one fused per-satellite sweep behind every non-early-exit variant:
+/// `(absolute step, feasible sub-sample count, lowest-indexed visible
+/// station)` triples over steps `step0..step0 + len`, ascending by step. A
+/// window is emitted iff [`sat_contacts`] would emit it — the feasibility
+/// count is computed identically, just without the early exit at `need`,
+/// which cannot change the ≥-`need` decision. Within each feasible
+/// sub-sample the station scan stops at the first visible station (exactly
+/// the "any station suffices" order of the membership sweep); the window
+/// attribution is the minimum of those station indexes over its feasible
+/// samples.
 #[allow(clippy::too_many_arguments)]
-pub(crate) fn sat_station_attr(
+pub(crate) fn sat_sweep(
     basis: &OrbitBasis,
     frames: &[StationFrame],
     rots: &[SampleRot],
@@ -679,7 +709,7 @@ pub(crate) fn sat_station_attr(
     samples_per_window: usize,
     sin_min: f64,
     need: usize,
-) -> Vec<(usize, u16)> {
+) -> Vec<(usize, u16, u16)> {
     let prefilter = sin_min > 0.0;
     let mut out = Vec::new();
     for l in 0..len {
@@ -702,10 +732,35 @@ pub(crate) fn sat_station_attr(
         }
         if feasible >= need {
             debug_assert_ne!(min_station, u16::MAX, "feasible window saw no station");
-            out.push((step0 + l, min_station));
+            out.push((step0 + l, feasible as u16, min_station));
         }
     }
     out
+}
+
+/// Station attribution of one satellite's connected windows over steps
+/// `step0..step0 + len`: `(absolute step, lowest-indexed visible station)`
+/// pairs, ascending by step — the multi-gateway upload-routing primitive
+/// (ADR-0006), a projection of [`sat_sweep`]. Attribution is total over
+/// every schedule contact ("the first station, by index, that heard the
+/// satellite"). The two-pass `UploadRouting::build` oracle goes through
+/// this; production precompute fuses the attribution into the schedule
+/// sweep itself (`UploadRouting::build_with_schedule`).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn sat_station_attr(
+    basis: &OrbitBasis,
+    frames: &[StationFrame],
+    rots: &[SampleRot],
+    step0: usize,
+    len: usize,
+    samples_per_window: usize,
+    sin_min: f64,
+    need: usize,
+) -> Vec<(usize, u16)> {
+    sat_sweep(basis, frames, rots, step0, len, samples_per_window, sin_min, need)
+        .into_iter()
+        .map(|(i, _, st)| (i, st))
+        .collect()
 }
 
 #[cfg(test)]

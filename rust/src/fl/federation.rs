@@ -34,7 +34,7 @@ use super::buffer::{Buffer, GradientEntry};
 use super::codec::Update;
 use super::server::{weighted_model_merge, ServerAggregator};
 use crate::cfg::toml::{TomlDoc, TomlValue};
-use crate::connectivity::{ConnectivityParams, StepView};
+use crate::connectivity::{ConnectivityParams, ConnectivitySchedule, StepView, SweepRecord};
 use crate::exec;
 use crate::orbit::{station_frames, Constellation, GroundStation};
 use anyhow::{bail, Context, Result};
@@ -396,7 +396,7 @@ impl crate::cfg::section::SectionSpec for FederationSpec {
 /// compute, so attribution exists for every schedule contact (downtime
 /// only *removes* contacts). Memory is O(total contacts), far below the
 /// schedule bitsets, so even streamed runs can afford the table.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct UploadRouting {
     n_steps: usize,
     n_gateways: usize,
@@ -480,6 +480,59 @@ impl UploadRouting {
             .map(|&st| if st == u16::MAX { 0 } else { map.gateway(st as usize) as u8 })
             .collect();
         UploadRouting { n_steps, n_gateways, sats, gws, fallback }
+    }
+
+    /// One-pass multi-gateway precompute: the connectivity schedule
+    /// (downtime applied, durations recorded iff `durations`) AND its
+    /// attribution table out of a single visibility sweep
+    /// ([`ConnectivitySchedule::compute_sweep`]). The two-pass pipeline —
+    /// a schedule compute followed by [`Self::build`] — samples the whole
+    /// horizon twice with the identical pipeline; this fuses the sweeps
+    /// and is asserted bit-identical to the two-pass build in tests, which
+    /// keeps [`Self::build`] as the oracle.
+    pub fn build_with_schedule(
+        constellation: &Constellation,
+        stations: &[GroundStation],
+        n_steps: usize,
+        params: &ConnectivityParams,
+        map: &StationMap,
+        durations: bool,
+    ) -> (ConnectivitySchedule, Self) {
+        let out = ConnectivitySchedule::compute_sweep(
+            constellation,
+            stations,
+            n_steps,
+            params.clone(),
+            SweepRecord { durations, attribution: true },
+        );
+        let attr = out.attribution.expect("attribution was requested");
+        let n_gateways = map.as_slice().iter().map(|&g| g + 1).max().unwrap_or(1);
+        let mut down_by_sat = vec![Vec::new(); constellation.len()];
+        for w in &constellation.downtime {
+            down_by_sat[w.sat].push((w.from_step, w.until_step));
+        }
+        let mut sats = vec![Vec::new(); n_steps];
+        let mut gws = vec![Vec::new(); n_steps];
+        let mut fallback = vec![0u8; n_steps];
+        for (i, (set, st_at)) in out.schedule.sets.iter().zip(attr.iter()).enumerate() {
+            let mut min_station = u16::MAX;
+            for (&k, &st) in set.iter().zip(st_at.iter()) {
+                let down = &down_by_sat[k];
+                if down.iter().any(|&(from, until)| (from..until).contains(&i)) {
+                    continue; // downed: neither attributed nor a fallback
+                }
+                // k ascends within each step's set, so `sats[i]` stays sorted
+                sats[i].push(k as u32);
+                gws[i].push(map.gateway(st as usize) as u8);
+                min_station = min_station.min(st);
+            }
+            if min_station != u16::MAX {
+                fallback[i] = map.gateway(min_station as usize) as u8;
+            }
+        }
+        let routing = UploadRouting { n_steps, n_gateways, sats, gws, fallback };
+        let sched = out.schedule.with_downtime(&constellation.downtime);
+        (sched, routing)
     }
 
     /// Number of time indexes the table covers.
@@ -633,9 +686,16 @@ pub struct Gateway {
     grads_since_merge: usize,
 }
 
-/// The live multi-gateway server side of Algorithm 1 — what the engine's
-/// `run_step` drives instead of a single `GsState`.
-pub struct Federation {
+/// The clock-agnostic federation state machine (ADR-0010): receive →
+/// buffer → aggregate → reconcile, with no knowledge of sim steps or
+/// wall-clock time. Drivers own the clock and translate it into calls on
+/// this core: the sim-step driver ([`Federation`]) maps engine slots onto
+/// reconcile ticks via [`Federation::end_of_step`], and the serving driver
+/// ([`crate::fl::serve::ServeCore`]) maps drain batches onto the same
+/// ticks. Every state transition the engine's `run_step` arithmetic
+/// depends on lives here, so identical call sequences replay identical
+/// state bit for bit regardless of which driver issued them.
+pub struct FederationCore {
     /// Per-gateway state, in spec (= merge) order.
     pub gateways: Vec<Gateway>,
     /// Reconciliation policy.
@@ -651,8 +711,8 @@ pub struct Federation {
     w: Vec<f32>,
 }
 
-impl Federation {
-    /// A fresh federation around an initial model.
+impl FederationCore {
+    /// A fresh federation core around an initial model.
     pub fn new(spec: &FederationSpec, w0: Vec<f32>, alpha: f64) -> Self {
         let centralized = matches!(spec.reconcile, ReconcilePolicy::Centralized);
         let gateways = spec
@@ -668,7 +728,7 @@ impl Federation {
                 grads_since_merge: 0,
             })
             .collect();
-        Federation {
+        FederationCore {
             gateways,
             reconcile: spec.reconcile,
             alpha,
@@ -686,6 +746,11 @@ impl Federation {
     /// The global round counter i_g.
     pub fn round(&self) -> usize {
         self.round
+    }
+
+    /// Dimension of the global model (and of every acceptable update).
+    pub fn model_dim(&self) -> usize {
+        self.w.len()
     }
 
     /// Receive (g_k, i_{g,k}) at gateway `g`: staleness fixed now against
@@ -814,14 +879,66 @@ impl Federation {
         true
     }
 
+    /// Clock-agnostic cadence boundary: the driver reports that `tick`
+    /// ticks of *its* clock have completed — engine slots for the sim
+    /// driver, drain batches for the serving driver — and the `Periodic` /
+    /// `Quorum` merge fires whenever the cadence divides the tick count.
+    /// Returns whether a merge actually happened (an idle boundary is a
+    /// no-op, like [`Self::reconcile_now`]).
+    pub fn on_boundary(&mut self, tick: usize) -> bool {
+        if let Some(every) = self.reconcile.cadence() {
+            if every > 0 && tick % every == 0 {
+                return self.reconcile_now();
+            }
+        }
+        false
+    }
+}
+
+/// The sim-step driver over [`FederationCore`] — what the engine's
+/// `run_step` drives instead of a single `GsState`. It `Deref`s to the
+/// core (call sites read gateway state and issue receive/update/reconcile
+/// directly); the only thing the driver itself owns is the sim clock:
+/// completing engine step `i` completes reconcile tick `i + 1`.
+pub struct Federation {
+    core: FederationCore,
+}
+
+impl std::ops::Deref for Federation {
+    type Target = FederationCore;
+
+    fn deref(&self) -> &FederationCore {
+        &self.core
+    }
+}
+
+impl std::ops::DerefMut for Federation {
+    fn deref_mut(&mut self) -> &mut FederationCore {
+        &mut self.core
+    }
+}
+
+impl Federation {
+    /// A fresh federation around an initial model.
+    pub fn new(spec: &FederationSpec, w0: Vec<f32>, alpha: f64) -> Self {
+        Federation { core: FederationCore::new(spec, w0, alpha) }
+    }
+
+    /// Decompose into the clock-agnostic core (e.g. to hand the state to
+    /// the serving driver).
+    pub fn into_core(self) -> FederationCore {
+        self.core
+    }
+
+    /// [`FederationCore::into_global_model`] through the driver.
+    pub fn into_global_model(self) -> Vec<f32> {
+        self.core.into_global_model()
+    }
+
     /// End-of-step hook the engine calls before evaluating: fires the
     /// `Periodic` / `Quorum` cadence (step `i` completes slot `i + 1`).
     pub fn end_of_step(&mut self, i: usize) {
-        if let Some(every) = self.reconcile.cadence() {
-            if every > 0 && (i + 1) % every == 0 {
-                self.reconcile_now();
-            }
-        }
+        self.core.on_boundary(i + 1);
     }
 }
 
@@ -1040,6 +1157,44 @@ mod tests {
     }
 
     #[test]
+    fn fused_build_is_bit_identical_to_the_two_pass_build() {
+        // the one-pass precompute must reproduce EXACTLY what the two-pass
+        // pipeline (schedule compute, then UploadRouting::build) produces —
+        // same routing table, same contact sets, same pass durations —
+        // including under downtime windows
+        use crate::connectivity::ConnectivitySchedule;
+        use crate::orbit::{planet_ground_stations, planet_labs_like, DowntimeWindow};
+        let c = planet_labs_like(6, 0)
+            .with_downtime(vec![DowntimeWindow { sat: 2, from_step: 5, until_step: 30 }]);
+        let gs = planet_ground_stations();
+        let params = ConnectivityParams::default();
+        let map = StationMap::new(vec![0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 1, 1]);
+        let (fused_sched, fused_routing) =
+            UploadRouting::build_with_schedule(&c, &gs, 48, &params, &map, true);
+        let two_pass_routing = UploadRouting::build(&c, &gs, 48, &params, &map);
+        assert_eq!(fused_routing, two_pass_routing);
+        let two_pass_sched =
+            ConnectivitySchedule::compute_with_durations(&c, &gs, 48, params.clone())
+                .with_downtime(&c.downtime);
+        assert_eq!(fused_sched.sets, two_pass_sched.sets);
+        assert_eq!(fused_sched.contacts, two_pass_sched.contacts);
+        assert!(fused_sched.has_durations());
+        for i in 0..48 {
+            assert_eq!(
+                fused_sched.contact_durations_at(i),
+                two_pass_sched.contact_durations_at(i),
+                "durations diverge at step {i}"
+            );
+        }
+        // and without durations the fused schedule matches plain compute
+        let (plain, _) = UploadRouting::build_with_schedule(&c, &gs, 48, &params, &map, false);
+        assert!(!plain.has_durations());
+        assert_eq!(plain.sets, ConnectivitySchedule::compute(&c, &gs, 48, params)
+            .with_downtime(&c.downtime)
+            .sets);
+    }
+
+    #[test]
     fn quorum_counts_respect_the_downtime_boundary() {
         // a satellite downed for the whole horizon is never heard, so it
         // must not inflate any gateway's sync quorum; downing it for only
@@ -1093,6 +1248,32 @@ mod tests {
         assert_eq!(fed.global_model().as_ref(), &w0[..]);
         for gw in &fed.gateways {
             assert_eq!(gw.w, w0, "idle reconcile must not move a replica");
+        }
+    }
+
+    #[test]
+    fn sim_driver_and_raw_core_replay_identically() {
+        // ADR-0010: the sim driver adds only the slot → tick clock mapping;
+        // the same call sequence against the bare core replays bit for bit
+        let spec = two_gw_spec(ReconcilePolicy::Periodic { every: 4 });
+        let mut fed = Federation::new(&spec, vec![0.0f32; 1], 0.5);
+        let mut core = FederationCore::new(&spec, vec![0.0f32; 1], 0.5);
+        for step in 0..8 {
+            if step % 2 == 0 {
+                let g = step % 4 / 2;
+                fed.receive(g, step, vec![1.0 - step as f32], fed.round(), 1);
+                fed.update(g, &mut CpuAggregator).unwrap();
+                core.receive(g, step, vec![1.0 - step as f32], core.round(), 1);
+                core.update(g, &mut CpuAggregator).unwrap();
+            }
+            fed.end_of_step(step);
+            core.on_boundary(step + 1);
+        }
+        assert_eq!(fed.reconciles, core.reconciles);
+        assert_eq!(fed.round(), core.round());
+        assert!(fed.reconciles > 0, "the cadence must have fired in this replay");
+        for (x, y) in fed.global_model().iter().zip(core.global_model().iter()) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
     }
 

@@ -1,9 +1,10 @@
 //! The federated-learning core (paper §2.3–2.4): GS state, gradient buffer,
 //! staleness compensation, the four aggregation-indicator policies, the
-//! 3-satellite illustrative example behind Figures 3–4 / Table 1, and the
+//! 3-satellite illustrative example behind Figures 3–4 / Table 1, the
 //! multi-gateway [`Federation`] layer (ADR-0006) that generalizes the
 //! single logical FL server to per-gateway buffers with deterministic
-//! cross-gateway reconciliation.
+//! cross-gateway reconciliation, and the throughput-grade serving driver
+//! ([`serve`], ADR-0010) over the clock-agnostic [`FederationCore`].
 
 pub mod algorithms;
 pub mod buffer;
@@ -12,6 +13,7 @@ pub mod codec;
 pub mod federation;
 pub mod illustrative;
 pub mod robust;
+pub mod serve;
 pub mod server;
 pub mod staleness;
 
@@ -20,9 +22,10 @@ pub use buffer::{Buffer, GradientEntry};
 pub use codec::{CodecKind, LinkSpec, Update, UpdateCodec, CODEC_STREAM};
 pub use client::{SatClient, SatPhase};
 pub use federation::{
-    Federation, FederationSpec, Gateway, GatewayWindow, ReconcilePolicy, StationMap,
-    UploadRouting,
+    Federation, FederationCore, FederationSpec, Gateway, GatewayWindow, ReconcilePolicy,
+    StationMap, UploadRouting,
 };
+pub use serve::{DrainStats, Offer, PendingUpload, ServeCore, ServeSpec};
 pub use robust::{CoordinateMedian, MultiKrum, RobustKind, RobustSpec, TrimmedMean};
 pub use server::{weighted_model_merge, CpuAggregator, GsState, ServerAggregator};
 pub use staleness::{compensation, normalized_weights};

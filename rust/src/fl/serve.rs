@@ -1,0 +1,544 @@
+//! The long-lived serving driver over [`FederationCore`] (ADR-0010).
+//!
+//! The sim engine drives the federation synchronously: one step, one pass
+//! over the step's contacts, aggregation decided inline. A serving front
+//! end cannot work that way — uploads arrive whenever a pass opens, burst
+//! with the constellation geometry, and the server must keep accepting
+//! while it aggregates. This module is the second driver the ADR-0010
+//! split exists for:
+//!
+//! - **Bounded ingestion queue per gateway.** [`ServeCore::offer`] enqueues
+//!   an upload at its gateway; a full queue returns
+//!   [`Offer::Deferred`] *with the upload handed back* — the PR 7
+//!   deferred-upload semantics reused as backpressure. Nothing is dropped
+//!   and nothing is reordered: a gateway's queue is strictly FIFO.
+//! - **Sharded ingest validation.** Each drain batch is validated
+//!   (dimension + finiteness) across [`exec::scope_chunks`] worker shards.
+//!   `scope_chunks` is order-preserving and thread-count independent, so
+//!   the shard count is a resource knob, never a semantics knob — the
+//!   shard-determinism tests gate exactly this.
+//! - **Batched, double-buffered aggregation.** [`ServeCore::drain`] splits
+//!   at most `batch` uploads off the *front* of each queue and aggregates
+//!   them while the queue itself keeps accepting new offers — the
+//!   in-process form of double buffering. One drain is one tick of the
+//!   serving clock, and [`FederationCore::on_boundary`] maps ticks onto
+//!   the same `Periodic`/`Quorum` reconcile cadence the sim driver uses.
+//! - **Observability.** Each drain emits deterministic
+//!   [`RunEvent::ServeBatch`] events (queue depth, drained count, deferred
+//!   count) plus the standard `Aggregate`/`Reconcile` events, so serving
+//!   runs flow through the exact PR 8 sink/artifact layer sim runs do.
+//!   Wall-clock throughput lands in the identity-exempt
+//!   [`RunEvent::ServeReport`].
+//!
+//! Model state is deterministic per (trace, seed, spec); wall-clock timing
+//! is not — that asymmetry is the point (ADR-0010), and `is_deterministic`
+//! encodes it per event.
+
+use super::codec::Update;
+use super::federation::{FederationCore, FederationSpec};
+use super::server::ServerAggregator;
+use crate::cfg::section::{SectionCtx, SectionSpec};
+use crate::cfg::toml::TomlDoc;
+use crate::exec;
+use crate::sim::events::{EventSink, RunEvent};
+use anyhow::{bail, Context, Result};
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+
+/// The `[serve]` TOML section: the serving front end's resource shape.
+/// Like `[sim] threads`, every knob here is a resource knob, not a
+/// semantics knob — the final model is identical at any shard count, and
+/// queue capacity changes only *when* an upload is accepted, never whether
+/// it eventually is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServeSpec {
+    /// Bounded ingestion-queue capacity per gateway; a full queue defers
+    /// (backpressure), it never drops.
+    pub queue_cap: usize,
+    /// Maximum uploads drained from one gateway's queue per serving tick.
+    pub batch: usize,
+    /// Validation worker shards per drain batch (0 = auto, the exec-layer
+    /// default parallelism).
+    pub shards: usize,
+}
+
+impl Default for ServeSpec {
+    fn default() -> Self {
+        ServeSpec { queue_cap: 1024, batch: 256, shards: 0 }
+    }
+}
+
+impl ServeSpec {
+    /// Exactly the implicit default (controls `[serve]` emission).
+    pub fn is_default(&self) -> bool {
+        *self == ServeSpec::default()
+    }
+
+    /// Reject shapes the serving core cannot honour.
+    pub fn validate(&self) -> Result<()> {
+        if self.queue_cap == 0 {
+            bail!("[serve] queue_cap must be > 0 (a zero-capacity queue defers everything)");
+        }
+        if self.batch == 0 {
+            bail!("[serve] batch must be > 0 (a zero batch would never drain)");
+        }
+        Ok(())
+    }
+
+    /// Emit the `[serve]` TOML section (callers skip it when default so
+    /// pre-serving specs stay byte-identical).
+    pub fn emit_toml(&self, out: &mut String) {
+        let _ = writeln!(out, "\n[serve]");
+        let _ = writeln!(out, "queue_cap = {}", self.queue_cap);
+        let _ = writeln!(out, "batch = {}", self.batch);
+        let _ = writeln!(out, "shards = {}", self.shards);
+    }
+
+    /// Parse the `[serve]` section; `Ok(None)` when absent (callers keep
+    /// their default) — the shared scenario/experiment-config idiom.
+    pub fn from_doc(doc: &TomlDoc) -> Result<Option<ServeSpec>> {
+        let Some(section) = doc.get("serve") else {
+            return Ok(None);
+        };
+        let mut spec = ServeSpec::default();
+        let read = |key: &str| -> Result<Option<usize>> {
+            match section.get(key) {
+                None => Ok(None),
+                Some(v) => {
+                    let n =
+                        v.as_int().with_context(|| format!("[serve] {key} must be an integer"))?;
+                    Ok(Some(usize::try_from(n)?))
+                }
+            }
+        };
+        if let Some(n) = read("queue_cap")? {
+            spec.queue_cap = n;
+        }
+        if let Some(n) = read("batch")? {
+            spec.batch = n;
+        }
+        if let Some(n) = read("shards")? {
+            spec.shards = n;
+        }
+        Ok(Some(spec))
+    }
+}
+
+impl SectionSpec for ServeSpec {
+    const SECTION: &'static str = "serve";
+
+    fn from_doc(doc: &TomlDoc) -> Result<Option<Self>> {
+        ServeSpec::from_doc(doc)
+    }
+
+    fn emit_toml(&self, out: &mut String) {
+        ServeSpec::emit_toml(self, out)
+    }
+
+    fn is_emitted(&self) -> bool {
+        !self.is_default()
+    }
+
+    fn validate(&self, _ctx: &SectionCtx) -> Result<()> {
+        ServeSpec::validate(self)
+    }
+}
+
+/// One upload waiting in a gateway's ingestion queue: exactly the
+/// arguments the caller would have passed to [`FederationCore::receive`],
+/// in wire form.
+#[derive(Clone, Debug)]
+pub struct PendingUpload {
+    /// Originating satellite id.
+    pub sat: usize,
+    /// The (possibly codec-compressed) gradient payload.
+    pub grad: Update,
+    /// Global round the satellite's local model was based on (fixed when
+    /// the upload was *generated*; staleness accrues while it queues).
+    pub base_round: usize,
+    /// Local sample count behind the gradient.
+    pub n_samples: usize,
+}
+
+/// Outcome of one [`ServeCore::offer`].
+#[derive(Debug)]
+pub enum Offer {
+    /// The upload entered its gateway's queue.
+    Accepted,
+    /// The queue is full: the upload is handed back untouched and the
+    /// caller retries later — PR 7's deferred-upload semantics as
+    /// backpressure. Never a drop, never a reorder.
+    Deferred(PendingUpload),
+}
+
+/// Per-drain summary returned by [`ServeCore::drain`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DrainStats {
+    /// Uploads taken off queues and received into gateway buffers.
+    pub drained: usize,
+    /// Gateway aggregations performed this tick.
+    pub aggregations: usize,
+    /// Whether the tick boundary fired a cross-gateway merge.
+    pub merged: bool,
+}
+
+/// The serving driver: bounded per-gateway ingestion queues in front of a
+/// clock-agnostic [`FederationCore`], drained in batches on the serving
+/// clock. See the module docs for the full contract.
+pub struct ServeCore {
+    core: FederationCore,
+    spec: ServeSpec,
+    queues: Vec<VecDeque<PendingUpload>>,
+    /// Offers deferred per gateway since its last drain (reported in the
+    /// next `ServeBatch` event, then reset).
+    deferred_since_drain: Vec<usize>,
+    ticks: usize,
+    accepted: u64,
+    deferred: u64,
+    rejected: u64,
+    /// Power-of-two queue-depth histogram: bucket 0 is depth 0, bucket
+    /// `b > 0` covers depths in `[2^(b-1), 2^b)`.
+    depth_hist: Vec<u64>,
+}
+
+impl ServeCore {
+    /// A fresh serving core around an initial model.
+    pub fn new(fed: &FederationSpec, spec: &ServeSpec, w0: Vec<f32>, alpha: f64) -> Self {
+        Self::from_core(FederationCore::new(fed, w0, alpha), spec)
+    }
+
+    /// Wrap an existing federation core (e.g. state handed over from a sim
+    /// run via `Federation::into_core`).
+    pub fn from_core(core: FederationCore, spec: &ServeSpec) -> Self {
+        let n = core.n_gateways();
+        let buckets = (usize::BITS - spec.queue_cap.leading_zeros()) as usize + 1;
+        ServeCore {
+            core,
+            spec: *spec,
+            queues: (0..n).map(|_| VecDeque::new()).collect(),
+            deferred_since_drain: vec![0; n],
+            ticks: 0,
+            accepted: 0,
+            deferred: 0,
+            rejected: 0,
+            depth_hist: vec![0; buckets],
+        }
+    }
+
+    /// The wrapped clock-agnostic state machine.
+    pub fn core(&self) -> &FederationCore {
+        &self.core
+    }
+
+    /// Decompose back into the bare federation core.
+    pub fn into_core(self) -> FederationCore {
+        self.core
+    }
+
+    /// Serving ticks (drains) completed.
+    pub fn ticks(&self) -> usize {
+        self.ticks
+    }
+
+    /// Uploads accepted into queues so far.
+    pub fn accepted(&self) -> u64 {
+        self.accepted
+    }
+
+    /// Offers backpressured so far.
+    pub fn deferred(&self) -> u64 {
+        self.deferred
+    }
+
+    /// Uploads that failed ingest validation and were discarded.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// Current depth of gateway `g`'s ingestion queue.
+    pub fn queue_depth(&self, g: usize) -> usize {
+        self.queues[g].len()
+    }
+
+    /// The power-of-two queue-depth histogram, sampled once per gateway
+    /// per drain (bucket 0 = empty queue).
+    pub fn depth_hist(&self) -> &[u64] {
+        &self.depth_hist
+    }
+
+    /// Offer one upload to gateway `g`'s bounded queue. A full queue
+    /// defers — the upload comes back to the caller, untouched, for retry.
+    pub fn offer(&mut self, g: usize, up: PendingUpload) -> Offer {
+        if self.queues[g].len() >= self.spec.queue_cap {
+            self.deferred_since_drain[g] += 1;
+            self.deferred += 1;
+            return Offer::Deferred(up);
+        }
+        self.queues[g].push_back(up);
+        self.accepted += 1;
+        Offer::Accepted
+    }
+
+    /// One tick of the serving clock: for every gateway in index order,
+    /// split up to `batch` uploads off the front of its queue (the queue
+    /// keeps accepting — the double buffer), validate them across worker
+    /// shards, receive the valid ones FIFO, and aggregate. The tick then
+    /// reports the boundary to the core, which fires the `Periodic` /
+    /// `Quorum` reconcile cadence on the serving clock.
+    pub fn drain<S: EventSink>(
+        &mut self,
+        aggregator: &mut dyn ServerAggregator,
+        sink: &mut S,
+    ) -> Result<DrainStats> {
+        let tick = self.ticks + 1;
+        let dim = self.core.model_dim();
+        let shards =
+            if self.spec.shards == 0 { exec::default_parallelism() } else { self.spec.shards };
+        let mut stats = DrainStats::default();
+        for g in 0..self.core.n_gateways() {
+            let depth = self.queues[g].len();
+            let bucket = (usize::BITS - depth.leading_zeros()) as usize;
+            let bucket = bucket.min(self.depth_hist.len() - 1);
+            self.depth_hist[bucket] += 1;
+            let deferred = std::mem::take(&mut self.deferred_since_drain[g]);
+            let take = depth.min(self.spec.batch);
+            let batch: Vec<PendingUpload> = self.queues[g].drain(..take).collect();
+            // sharded ingest validation: order-preserving by scope_chunks'
+            // contract, so any shard count accepts the same uploads in the
+            // same order
+            let valid: Vec<bool> = exec::scope_chunks(&batch, shards, |_start, chunk| {
+                chunk
+                    .iter()
+                    .map(|u| u.grad.len() == dim && u.grad.values().iter().all(|v| v.is_finite()))
+                    .collect()
+            });
+            let mut drained = 0;
+            for (up, ok) in batch.into_iter().zip(valid) {
+                if !ok {
+                    self.rejected += 1;
+                    continue;
+                }
+                self.core.receive(g, up.sat, up.grad, up.base_round, up.n_samples);
+                drained += 1;
+            }
+            if drained > 0 {
+                let staleness = self.core.update(g, aggregator)?;
+                let round = self.core.round();
+                sink.emit(&RunEvent::Aggregate { step: tick, gateway: g, round, staleness });
+                stats.aggregations += 1;
+            }
+            sink.emit(&RunEvent::ServeBatch { tick, gateway: g, drained, depth, deferred });
+            stats.drained += drained;
+        }
+        self.ticks = tick;
+        stats.merged = self.core.on_boundary(tick);
+        if stats.merged {
+            sink.emit(&RunEvent::Reconcile { step: tick, merges: 1 });
+        }
+        Ok(stats)
+    }
+}
+
+/// Nearest-rank percentile over an unsorted latency sample set (`p` in
+/// `[0, 100]`); 0 when the set is empty. The loadgen's p50/p99 reducer.
+pub fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("latency samples must be comparable"));
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    sorted[rank.saturating_sub(1).min(sorted.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fl::{CpuAggregator, ReconcilePolicy};
+    use crate::sim::events::ArtifactSink;
+    use crate::sim::NullSink;
+
+    fn spec2() -> FederationSpec {
+        FederationSpec::split(
+            &["north", "south"],
+            &[0, 1],
+            ReconcilePolicy::Periodic { every: 2 },
+        )
+    }
+
+    fn upload(sat: usize, v: f32, base_round: usize) -> PendingUpload {
+        PendingUpload { sat, grad: vec![v, -v].into(), base_round, n_samples: 1 }
+    }
+
+    #[test]
+    fn serve_spec_roundtrip_validate_and_default_omission() {
+        assert!(ServeSpec::default().is_default());
+        ServeSpec::default().validate().unwrap();
+        let spec = ServeSpec { queue_cap: 8, batch: 2, shards: 3 };
+        let mut s = String::new();
+        spec.emit_toml(&mut s);
+        let doc = crate::cfg::toml::parse_toml(&s).unwrap();
+        assert_eq!(ServeSpec::from_doc(&doc).unwrap(), Some(spec));
+        let absent = crate::cfg::toml::parse_toml("[scenario]\nname = \"x\"").unwrap();
+        assert_eq!(ServeSpec::from_doc(&absent).unwrap(), None);
+        assert!(ServeSpec { queue_cap: 0, ..Default::default() }.validate().is_err());
+        assert!(ServeSpec { batch: 0, ..Default::default() }.validate().is_err());
+        let bad = crate::cfg::toml::parse_toml("[serve]\nqueue_cap = \"big\"").unwrap();
+        assert!(ServeSpec::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn backpressure_defers_never_drops_or_reorders() {
+        // cap 3, batch 2: the 4th offer must come back (not vanish), and
+        // after retrying every deferred offer the served model must equal a
+        // federation driven directly in arrival order — the only way that
+        // holds is if no upload was dropped or reordered
+        let serve_spec = ServeSpec { queue_cap: 3, batch: 2, shards: 2 };
+        let mut serve = ServeCore::new(&spec2(), &serve_spec, vec![0.0; 2], 0.5);
+        let values: Vec<f32> = (1..=7).map(|i| i as f32 * 0.25).collect();
+        let mut pending: VecDeque<PendingUpload> =
+            values.iter().enumerate().map(|(i, &v)| upload(i, v, 0)).collect();
+        let mut arrival_order = Vec::new();
+        let mut guard = 0;
+        while let Some(up) = pending.pop_front() {
+            guard += 1;
+            assert!(guard < 100, "retry loop must converge");
+            match serve.offer(0, up) {
+                Offer::Accepted => {
+                    arrival_order.push(*arrival_order.last().unwrap_or(&0usize) + 1);
+                }
+                Offer::Deferred(up) => {
+                    // the upload comes back intact; drain, then retry it
+                    // before anything that arrived after it
+                    assert!(serve.deferred() > 0);
+                    serve.drain(&mut CpuAggregator, &mut NullSink).unwrap();
+                    pending.push_front(up);
+                }
+            }
+        }
+        while serve.queue_depth(0) > 0 {
+            serve.drain(&mut CpuAggregator, &mut NullSink).unwrap();
+        }
+        assert_eq!(serve.accepted(), 7);
+        assert_eq!(serve.rejected(), 0);
+        // reference: the same uploads in arrival order, aggregated in the
+        // same batch boundaries the serve core used
+        let mut reference = FederationCore::new(&spec2(), vec![0.0; 2], 0.5);
+        let mut tick = 0;
+        let mut queued = 0;
+        for (i, &v) in values.iter().enumerate() {
+            reference.receive(0, i, vec![v, -v], 0, 1);
+            queued += 1;
+            if queued == serve_spec.batch {
+                reference.update(0, &mut CpuAggregator).unwrap();
+                tick += 1;
+                reference.on_boundary(tick);
+                queued = 0;
+            }
+        }
+        if queued > 0 {
+            reference.update(0, &mut CpuAggregator).unwrap();
+            tick += 1;
+            reference.on_boundary(tick);
+        }
+        for (a, b) in serve.core().global_model().iter().zip(reference.global_model().iter()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "served model diverged from FIFO reference");
+        }
+    }
+
+    #[test]
+    fn shard_count_never_changes_state_or_deterministic_events() {
+        // the satellite-task determinism gate: same trace ⇒ identical final
+        // model bits and identical deterministic event stream at any
+        // worker-shard count
+        let mut streams = Vec::new();
+        let mut models = Vec::new();
+        for shards in [1usize, 2, 3, 8] {
+            let serve_spec = ServeSpec { queue_cap: 16, batch: 4, shards };
+            let mut serve = ServeCore::new(&spec2(), &serve_spec, vec![0.0; 2], 0.5);
+            let mut sink = ArtifactSink::new();
+            for round in 0..6usize {
+                for sat in 0..5usize {
+                    let v = (round * 5 + sat) as f32 * 0.125 - 1.0;
+                    let g = sat % 2;
+                    match serve.offer(g, upload(sat, v, serve.core().round())) {
+                        Offer::Accepted => {}
+                        Offer::Deferred(_) => panic!("cap 16 cannot fill in this replay"),
+                    }
+                }
+                serve.drain(&mut CpuAggregator, &mut sink).unwrap();
+            }
+            let stream: Vec<_> =
+                sink.events.into_iter().filter(|e| e.is_deterministic()).collect();
+            streams.push(stream);
+            models.push(serve.core().global_model().into_owned());
+        }
+        for i in 1..streams.len() {
+            assert_eq!(streams[0], streams[i], "event stream diverged at shard set {i}");
+            assert_eq!(models[0].len(), models[i].len());
+            for (a, b) in models[0].iter().zip(models[i].iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "model bits diverged at shard set {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn invalid_uploads_are_rejected_not_aggregated() {
+        let serve_spec = ServeSpec { queue_cap: 8, batch: 8, shards: 2 };
+        let mut serve = ServeCore::new(&spec2(), &serve_spec, vec![0.0; 2], 0.5);
+        // wrong dimension and a NaN payload: both must be filtered by the
+        // sharded validation pass, leaving the good upload aggregated
+        let bad_dim = PendingUpload { sat: 0, grad: vec![1.0].into(), base_round: 0, n_samples: 1 };
+        let bad_nan =
+            PendingUpload { sat: 1, grad: vec![f32::NAN, 0.0].into(), base_round: 0, n_samples: 1 };
+        assert!(matches!(serve.offer(0, bad_dim), Offer::Accepted));
+        assert!(matches!(serve.offer(0, bad_nan), Offer::Accepted));
+        assert!(matches!(serve.offer(0, upload(2, 1.0, 0)), Offer::Accepted));
+        let stats = serve.drain(&mut CpuAggregator, &mut NullSink).unwrap();
+        assert_eq!(stats.drained, 1);
+        assert_eq!(serve.rejected(), 2);
+        assert_eq!(serve.core().round(), 1);
+    }
+
+    #[test]
+    fn drain_ticks_fire_the_reconcile_cadence() {
+        // Periodic { every: 2 } on the serving clock: merges at ticks 2, 4
+        let serve_spec = ServeSpec { queue_cap: 8, batch: 8, shards: 1 };
+        let mut serve = ServeCore::new(&spec2(), &serve_spec, vec![0.0; 2], 0.5);
+        let mut merged_ticks = Vec::new();
+        for tick in 1..=4usize {
+            serve.offer(tick % 2, upload(tick, tick as f32, serve.core().round()));
+            let stats = serve.drain(&mut CpuAggregator, &mut NullSink).unwrap();
+            if stats.merged {
+                merged_ticks.push(tick);
+            }
+        }
+        assert_eq!(merged_ticks, vec![2, 4]);
+        assert_eq!(serve.core().reconciles, 2);
+    }
+
+    #[test]
+    fn depth_histogram_buckets_are_log2() {
+        let serve_spec = ServeSpec { queue_cap: 8, batch: 1, shards: 1 };
+        let mut serve = ServeCore::new(&spec2(), &serve_spec, vec![0.0; 2], 0.5);
+        // depths observed at drain: 0 (bucket 0), then 3 (bucket 2)
+        serve.drain(&mut CpuAggregator, &mut NullSink).unwrap();
+        for i in 0..3 {
+            serve.offer(0, upload(i, 1.0, 0));
+        }
+        serve.drain(&mut CpuAggregator, &mut NullSink).unwrap();
+        let hist = serve.depth_hist();
+        assert_eq!(hist[0], 3, "gateway 1 was empty twice, gateway 0 once");
+        assert_eq!(hist[2], 1, "depth 3 lands in the [2, 4) bucket");
+    }
+
+    #[test]
+    fn percentile_is_nearest_rank() {
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 50.0), 50.0);
+        assert_eq!(percentile(&xs, 99.0), 99.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert_eq!(percentile(&[5.0, 1.0, 3.0], 50.0), 3.0);
+    }
+}

@@ -5,6 +5,8 @@
 //!   illustrative  run the 3-satellite example (Figures 3-4, Table 1)
 //!   train         run one FL experiment (mock or full PJRT backend)
 //!   scenarios     list/describe/run the named scenario registry
+//!   serve         drive the serving front end over a scenario trace, paced
+//!   loadgen       replay a scenario trace at full speed; report throughput
 //!   utility       generate utility samples and fit/report the regressor
 //!   schedule      plan one FedSpace window and print the forecast
 //!   bench-check   compare bench JSON against the committed baseline (CI)
@@ -21,6 +23,8 @@ fn main() -> Result<()> {
         "illustrative" => fedspace::app::cmd::illustrative(&args),
         "train" => fedspace::app::cmd::train(&args),
         "scenarios" => fedspace::app::cmd::scenarios(&args),
+        "serve" => fedspace::app::cmd::serve(&args),
+        "loadgen" => fedspace::app::cmd::loadgen(&args),
         "utility" => fedspace::app::cmd::utility(&args),
         "schedule" => fedspace::app::cmd::schedule(&args),
         "bench-check" => fedspace::app::cmd::bench_check(&args),

@@ -715,9 +715,8 @@ pub struct Engine<'a> {
     /// Engine knobs.
     pub cfg: EngineConfig,
     /// Per-gateway FedSpace planners, in gateway-index order (one entry
-    /// per gateway iff algorithm == FedSpace, empty otherwise). The
-    /// constructors seed entry 0; [`Self::with_federation`] appends the
-    /// rest.
+    /// per gateway iff algorithm == FedSpace, empty otherwise), collected
+    /// by [`EngineBuilder::planner`] / [`EngineBuilder::planners`].
     pub planners: Vec<FedSpacePlanner>,
     /// Routed contact graph for precomputed-schedule engines (ADR-0005);
     /// streamed engines take their routing from the stream itself.
@@ -727,50 +726,76 @@ pub struct Engine<'a> {
     federation: Option<(&'a FederationSpec, Option<&'a UploadRouting>)>,
 }
 
-impl<'a> Engine<'a> {
-    /// Wire up an engine over a materialized schedule (dense or
-    /// contact-list mode); panics if FedSpace is requested without a
-    /// planner, or if the config asks for streamed mode (which needs
-    /// [`Self::new_streamed`]).
-    pub fn new(
-        sched: &'a ConnectivitySchedule,
-        trainer: &'a dyn Trainer,
-        aggregator: &'a mut dyn ServerAggregator,
-        cfg: EngineConfig,
-        planner: Option<FedSpacePlanner>,
-    ) -> Self {
-        assert!(
-            cfg.mode != EngineMode::Streamed,
-            "streamed mode executes over a ConnectivityStream — use Engine::new_streamed"
-        );
-        if cfg.algorithm == AlgorithmKind::FedSpace {
-            assert!(planner.is_some(), "FedSpace requires a planner");
-        }
-        Engine {
-            source: ScheduleSource::Precomputed(sched),
-            trainer,
-            aggregator,
-            cfg,
-            planners: planner.into_iter().collect(),
-            isl: None,
-            federation: None,
-        }
+/// Typed, validated construction of an [`Engine`] — the one surface that
+/// replaced the `new` / `new_streamed` / `with_contact_graph` /
+/// `with_federation` sprawl. Setters are order-free and purely assign;
+/// every structural invariant (source/mode agreement, graph and routing
+/// shape, planner-per-gateway counts) is asserted once, in
+/// [`EngineBuilder::build`], so no partially-checked engine can exist.
+pub struct EngineBuilder<'a> {
+    source: Option<ScheduleSource<'a>>,
+    trainer: Option<&'a dyn Trainer>,
+    aggregator: Option<&'a mut dyn ServerAggregator>,
+    cfg: Option<EngineConfig>,
+    planners: Vec<FedSpacePlanner>,
+    isl: Option<&'a ContactGraph>,
+    federation: Option<(&'a FederationSpec, Option<&'a UploadRouting>)>,
+}
+
+impl<'a> EngineBuilder<'a> {
+    /// Execute over a materialized schedule (dense / contact-list modes).
+    /// Mutually exclusive with [`Self::stream`]; the later call wins.
+    pub fn schedule(mut self, sched: &'a ConnectivitySchedule) -> Self {
+        self.source = Some(ScheduleSource::Precomputed(sched));
+        self
+    }
+
+    /// Execute over a chunked connectivity stream (streamed mode).
+    pub fn stream(mut self, stream: &'a ConnectivityStream) -> Self {
+        self.source = Some(ScheduleSource::Streamed(stream));
+        self
+    }
+
+    /// Local-training backend.
+    pub fn trainer(mut self, trainer: &'a dyn Trainer) -> Self {
+        self.trainer = Some(trainer);
+        self
+    }
+
+    /// Eq.-4 server-update implementation (shared across gateways).
+    pub fn aggregator(mut self, aggregator: &'a mut dyn ServerAggregator) -> Self {
+        self.aggregator = Some(aggregator);
+        self
+    }
+
+    /// Engine knobs.
+    pub fn config(mut self, cfg: EngineConfig) -> Self {
+        self.cfg = Some(cfg);
+        self
+    }
+
+    /// Append one FedSpace planner in gateway-index order (`None` appends
+    /// nothing) — the single-gateway convenience form of [`Self::planners`].
+    pub fn planner(mut self, planner: Option<FedSpacePlanner>) -> Self {
+        self.planners.extend(planner);
+        self
+    }
+
+    /// Append per-gateway FedSpace planners in gateway-index order. FedSpace
+    /// engines need exactly one planner per gateway by [`Self::build`] time;
+    /// other algorithms take none.
+    pub fn planners(mut self, planners: Vec<FedSpacePlanner>) -> Self {
+        self.planners.extend(planners);
+        self
     }
 
     /// Attach a routed contact graph (ISLs, ADR-0005) to a
     /// precomputed-schedule engine: the walk then visits reach sets instead
     /// of direct contact sets, and the planner forecasts over the routed
     /// relation. `None` detaches (the plain satellite⇄station walk).
-    /// Streamed engines reject this — they route inside their stream.
-    pub fn with_contact_graph(mut self, graph: Option<&'a ContactGraph>) -> Self {
-        if let Some(g) = graph {
-            assert!(
-                matches!(self.source, ScheduleSource::Precomputed(_)),
-                "streamed engines take ISLs from their ConnectivityStream"
-            );
-            assert_eq!(g.n_sats(), self.source.n_sats(), "graph/schedule fleet mismatch");
-            assert_eq!(g.n_steps(), self.source.n_steps(), "graph/schedule horizon mismatch");
-        }
+    /// Streamed engines reject this at build — they route inside their
+    /// stream.
+    pub fn contact_graph(mut self, graph: Option<&'a ContactGraph>) -> Self {
         self.isl = graph;
         self
     }
@@ -778,41 +803,73 @@ impl<'a> Engine<'a> {
     /// Attach a multi-gateway federation (ADR-0006): `spec` names the
     /// gateways and reconcile policy; `routing` is required (and only
     /// consulted) when the spec has more than one gateway — single-gateway
-    /// specs keep the raw pre-federation fast path. `extra_planners` are
-    /// the FedSpace planners of gateways `1..` (one per extra gateway,
-    /// empty for other algorithms); gateway 0's planner is the one the
-    /// constructor took.
-    pub fn with_federation(
+    /// specs keep the raw pre-federation fast path.
+    pub fn federation(
         mut self,
         spec: &'a FederationSpec,
         routing: Option<&'a UploadRouting>,
-        extra_planners: Vec<FedSpacePlanner>,
     ) -> Self {
-        let g = spec.n_gateways();
-        assert!(g >= 1, "federation needs at least one gateway");
-        let routing = if g > 1 {
-            let r = routing.expect("multi-gateway federation needs an UploadRouting");
-            assert_eq!(
-                r.n_steps(),
-                self.source.n_steps(),
-                "routing/schedule horizon mismatch"
-            );
-            // a table built for a wider federation would emit gateway
-            // indexes past the spec's Federation (OOB mid-run); for a
-            // validated spec the table's map-max+1 equals the gateway count
+        self.federation = Some((spec, routing));
+        self
+    }
+
+    /// Validate and assemble the engine. Panics on structural misuse —
+    /// missing required parts, source/mode disagreement, mis-shaped contact
+    /// graph or routing table, wrong planner count — exactly the contracts
+    /// the four retired constructors checked piecemeal.
+    pub fn build(self) -> Engine<'a> {
+        let source = self.source.expect("EngineBuilder needs a schedule(..) or stream(..)");
+        let trainer = self.trainer.expect("EngineBuilder needs a trainer(..)");
+        let aggregator = self.aggregator.expect("EngineBuilder needs an aggregator(..)");
+        let cfg = self.cfg.expect("EngineBuilder needs a config(..)");
+        match source {
+            ScheduleSource::Precomputed(_) => assert!(
+                cfg.mode != EngineMode::Streamed,
+                "streamed mode executes over a ConnectivityStream — build with .stream(..)"
+            ),
+            ScheduleSource::Streamed(_) => assert!(
+                cfg.mode == EngineMode::Streamed,
+                "a ConnectivityStream source requires EngineMode::Streamed"
+            ),
+        }
+        if let Some(g) = self.isl {
             assert!(
-                r.n_gateways() <= g,
-                "routing table addresses {} gateways but the spec has {g}",
-                r.n_gateways()
+                matches!(source, ScheduleSource::Precomputed(_)),
+                "streamed engines take ISLs from their ConnectivityStream"
             );
-            Some(r)
-        } else {
-            None
-        };
-        if self.cfg.algorithm == AlgorithmKind::FedSpace {
+            assert_eq!(g.n_sats(), source.n_sats(), "graph/schedule fleet mismatch");
+            assert_eq!(g.n_steps(), source.n_steps(), "graph/schedule horizon mismatch");
+        }
+        let federation = self.federation.map(|(spec, routing)| {
+            let g = spec.n_gateways();
+            assert!(g >= 1, "federation needs at least one gateway");
+            let routing = if g > 1 {
+                let r = routing.expect("multi-gateway federation needs an UploadRouting");
+                assert_eq!(
+                    r.n_steps(),
+                    source.n_steps(),
+                    "routing/schedule horizon mismatch"
+                );
+                // a table built for a wider federation would emit gateway
+                // indexes past the spec's Federation (OOB mid-run); for a
+                // validated spec the table's map-max+1 equals the gateway
+                // count
+                assert!(
+                    r.n_gateways() <= g,
+                    "routing table addresses {} gateways but the spec has {g}",
+                    r.n_gateways()
+                );
+                Some(r)
+            } else {
+                None
+            };
+            (spec, routing)
+        });
+        let n_gateways = federation.map_or(1, |(spec, _)| spec.n_gateways());
+        if cfg.algorithm == AlgorithmKind::FedSpace {
             assert_eq!(
-                self.planners.len() + extra_planners.len(),
-                g,
+                self.planners.len(),
+                n_gateways,
                 "FedSpace needs exactly one planner per gateway"
             );
             // the streamed walk materializes ONE planning window sized by
@@ -820,7 +877,7 @@ impl<'a> Engine<'a> {
             // window lengths would index past the materialized steps, so
             // reject them here instead of panicking inside the walk
             if let Some(first) = self.planners.first() {
-                for p in &extra_planners {
+                for p in &self.planners[1..] {
                     assert_eq!(
                         p.params.i0, first.params.i0,
                         "per-gateway planners must share one I0 window length"
@@ -828,14 +885,94 @@ impl<'a> Engine<'a> {
                 }
             }
         } else {
-            assert!(extra_planners.is_empty(), "planners without FedSpace");
+            assert!(self.planners.is_empty(), "planners without FedSpace");
         }
-        self.planners.extend(extra_planners);
-        self.federation = Some((spec, routing));
-        self
+        Engine {
+            source,
+            trainer,
+            aggregator,
+            cfg,
+            planners: self.planners,
+            isl: self.isl,
+            federation,
+        }
+    }
+}
+
+impl<'a> Engine<'a> {
+    /// Start building an engine — see [`EngineBuilder`].
+    pub fn builder() -> EngineBuilder<'a> {
+        EngineBuilder {
+            source: None,
+            trainer: None,
+            aggregator: None,
+            cfg: None,
+            planners: Vec::new(),
+            isl: None,
+            federation: None,
+        }
     }
 
-    /// Wire up an engine over a connectivity stream (streamed mode only).
+    /// Pre-builder constructor shim over a materialized schedule.
+    #[deprecated(note = "use Engine::builder() — schedule/trainer/aggregator/config/planner")]
+    pub fn new(
+        sched: &'a ConnectivitySchedule,
+        trainer: &'a dyn Trainer,
+        aggregator: &'a mut dyn ServerAggregator,
+        cfg: EngineConfig,
+        planner: Option<FedSpacePlanner>,
+    ) -> Self {
+        Engine::builder()
+            .schedule(sched)
+            .trainer(trainer)
+            .aggregator(aggregator)
+            .config(cfg)
+            .planner(planner)
+            .build()
+    }
+
+    /// Pre-builder shim: attach a routed contact graph (ADR-0005) by
+    /// rebuilding through [`EngineBuilder`], which re-checks every
+    /// structural invariant.
+    #[deprecated(note = "use Engine::builder().contact_graph(..)")]
+    pub fn with_contact_graph(self, graph: Option<&'a ContactGraph>) -> Self {
+        let Engine { source, trainer, aggregator, cfg, planners, isl: _, federation } = self;
+        let mut b = Engine::builder()
+            .trainer(trainer)
+            .aggregator(aggregator)
+            .config(cfg)
+            .planners(planners)
+            .contact_graph(graph);
+        b.source = Some(source);
+        b.federation = federation;
+        b.build()
+    }
+
+    /// Pre-builder shim: attach a multi-gateway federation (ADR-0006) plus
+    /// the planners of gateways `1..` by rebuilding through
+    /// [`EngineBuilder`].
+    #[deprecated(note = "use Engine::builder().federation(..) with .planners(..)")]
+    pub fn with_federation(
+        self,
+        spec: &'a FederationSpec,
+        routing: Option<&'a UploadRouting>,
+        extra_planners: Vec<FedSpacePlanner>,
+    ) -> Self {
+        let Engine { source, trainer, aggregator, cfg, mut planners, isl, federation: _ } = self;
+        planners.extend(extra_planners);
+        let mut b = Engine::builder()
+            .trainer(trainer)
+            .aggregator(aggregator)
+            .config(cfg)
+            .planners(planners)
+            .contact_graph(isl)
+            .federation(spec, routing);
+        b.source = Some(source);
+        b.build()
+    }
+
+    /// Pre-builder constructor shim over a connectivity stream.
+    #[deprecated(note = "use Engine::builder().stream(..)")]
     pub fn new_streamed(
         stream: &'a ConnectivityStream,
         trainer: &'a dyn Trainer,
@@ -843,22 +980,13 @@ impl<'a> Engine<'a> {
         cfg: EngineConfig,
         planner: Option<FedSpacePlanner>,
     ) -> Self {
-        assert!(
-            cfg.mode == EngineMode::Streamed,
-            "Engine::new_streamed requires EngineMode::Streamed"
-        );
-        if cfg.algorithm == AlgorithmKind::FedSpace {
-            assert!(planner.is_some(), "FedSpace requires a planner");
-        }
-        Engine {
-            source: ScheduleSource::Streamed(stream),
-            trainer,
-            aggregator,
-            cfg,
-            planners: planner.into_iter().collect(),
-            isl: None,
-            federation: None,
-        }
+        Engine::builder()
+            .stream(stream)
+            .trainer(trainer)
+            .aggregator(aggregator)
+            .config(cfg)
+            .planner(planner)
+            .build()
     }
 
     /// Build one gateway's policy. `quorum` is the gateway's per-gateway
@@ -1003,7 +1131,7 @@ impl<'a> Engine<'a> {
                         Some(g) => g.active_steps().to_vec(),
                         None => sched.active_steps(),
                     }),
-                    EngineMode::Streamed => unreachable!("rejected by Engine::new"),
+                    EngineMode::Streamed => unreachable!("rejected by EngineBuilder::build"),
                 };
                 // the planner forecasts over the routed relation, so a
                 // relayed satellite counts as reachable in the window
@@ -1169,7 +1297,13 @@ mod tests {
             eval_every: 4,
             ..Default::default()
         };
-        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm));
+        let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .planner(mode_planner(algorithm))
+            .build();
         e.run().unwrap()
     }
 
@@ -1239,7 +1373,12 @@ mod tests {
                     stop_at_accuracy: Some(target),
                     ..Default::default()
                 };
-                let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+                let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .build();
                 let r = e.run().unwrap();
                 println!(
                     "  M={m:<3} days={:?} best={:.3} rounds={} max_s={:?}",
@@ -1304,7 +1443,13 @@ mod tests {
             stop_at_accuracy: Some(0.9),
             ..Default::default()
         };
-        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, Some(planner));
+        let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .planner(Some(planner))
+            .build();
         let r = e.run().unwrap();
         println!(
             "fedspace live: days={:?} rounds={} uploads={} idle={} stal={:?}",
@@ -1325,7 +1470,12 @@ mod tests {
             stop_at_accuracy: Some(0.9),
             ..Default::default()
         };
-        let mut e2 = Engine::new(&sched, &trainer2, &mut agg2, cfg2, None);
+        let mut e2 = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer2)
+            .aggregator(&mut agg2)
+            .config(cfg2)
+            .build();
         let r2 = e2.run().unwrap();
         println!(
             "fedbuff8 live: days={:?} rounds={} uploads={} idle={} stal={:?}",
@@ -1357,7 +1507,12 @@ mod tests {
                 stop_at_accuracy: Some(TARGET),
                 ..Default::default()
             };
-            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+            let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .build();
             if let Some(d) = e.run().unwrap().days_to_target {
                 best_fb = best_fb.min(d);
             }
@@ -1384,7 +1539,13 @@ mod tests {
             stop_at_accuracy: Some(TARGET),
             ..Default::default()
         };
-        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, Some(planner));
+        let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .planner(Some(planner))
+            .build();
         let fs = e.run().unwrap().days_to_target;
         assert!(best_fb.is_finite(), "fedbuff never reached target");
         let fs = fs.expect("fedspace never reached target");
@@ -1461,12 +1622,23 @@ mod tests {
             let c = planet_labs_like(12, 0);
             let gs = planet_ground_stations();
             let stream = ConnectivityStream::new(&c, &gs, steps, Default::default(), 31);
-            let mut e =
-                Engine::new_streamed(&stream, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            let mut e = Engine::builder()
+                .stream(&stream)
+                .trainer(&trainer)
+                .aggregator(&mut agg)
+                .config(cfg)
+                .planner(mode_planner(algorithm))
+                .build();
             e.run().unwrap()
         } else {
             let sched = small_sched(12, steps);
-            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            let mut e = Engine::builder()
+                .schedule(&sched)
+                .trainer(&trainer)
+                .aggregator(&mut agg)
+                .config(cfg)
+                .planner(mode_planner(algorithm))
+                .build();
             e.run().unwrap()
         }
     }
@@ -1530,13 +1702,13 @@ mod tests {
         for chunk_len in [1usize, 5, 24, 96, 500] {
             let stream = ConnectivityStream::new(&c, &gs, 96, Default::default(), chunk_len);
             let mut agg = CpuAggregator;
-            let mut e = Engine::new_streamed(
-                &stream,
-                &trainer,
-                &mut agg,
-                cfg.clone(),
-                mode_planner(AlgorithmKind::FedSpace),
-            );
+            let mut e = Engine::builder()
+                .stream(&stream)
+                .trainer(&trainer)
+                .aggregator(&mut agg)
+                .config(cfg.clone())
+                .planner(mode_planner(AlgorithmKind::FedSpace))
+                .build();
             results.push(e.run().unwrap());
         }
         for r in &results[1..] {
@@ -1575,7 +1747,12 @@ mod tests {
                 mode,
                 ..Default::default()
             };
-            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+            let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .build();
             results.push(e.run().unwrap());
         }
         assert_same_run(&results[0], &results[1], "sparse async");
@@ -1619,8 +1796,13 @@ mod tests {
             eval_every: 4,
             ..Default::default()
         };
-        let mut e =
-            Engine::new(&sched, &trainer, &mut agg, cfg, None).with_contact_graph(Some(graph));
+        let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .contact_graph(Some(graph))
+            .build();
         e.run().unwrap()
     }
 
@@ -1638,7 +1820,12 @@ mod tests {
             eval_every: 4,
             ..Default::default()
         };
-        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+        let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .build();
         let direct = e.run().unwrap();
         assert!(routed.trace.relayed > 0, "no relayed uploads on a relay-only topology");
         assert!(
@@ -1685,8 +1872,13 @@ mod tests {
                 mode,
                 ..Default::default()
             };
-            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None)
-                .with_contact_graph(Some(&graph));
+            let mut e = Engine::builder()
+                .schedule(&sched)
+                .trainer(&trainer)
+                .aggregator(&mut agg)
+                .config(cfg)
+                .contact_graph(Some(&graph))
+                .build();
             results.push(e.run().unwrap());
         }
         assert_same_run(&results[0], &results[1], "ring5 routed dense vs contacts");
@@ -1754,8 +1946,15 @@ mod tests {
         } else {
             Vec::new()
         };
-        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm))
-            .with_federation(spec, routing.as_ref(), extra);
+        let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .planner(mode_planner(algorithm))
+            .planners(extra)
+            .federation(spec, routing.as_ref())
+            .build();
         e.run().unwrap()
     }
 
@@ -1884,7 +2083,12 @@ mod tests {
         let trainer = NoDataSat(MockTrainer::new(8, 6, 0.1, 0));
         let mut agg = CpuAggregator;
         let cfg = EngineConfig { algorithm: AlgorithmKind::Async, ..Default::default() };
-        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+        let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .build();
         let r = e.run().unwrap();
         assert!(r.final_round > 0);
     }
@@ -1895,7 +2099,12 @@ mod tests {
         let trainer = MockTrainer::new(16, 12, 0.3, 0);
         let mut agg = CpuAggregator;
         let cfg = EngineConfig { algorithm: AlgorithmKind::Sync, ..Default::default() };
-        let e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+        let e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .build();
         // no quorum: the global with-data fleet
         let PolicyImpl::Sync(p) = e.make_policy(None) else { panic!() };
         assert_eq!(p.n_sats, 12);
@@ -1915,9 +2124,70 @@ mod tests {
             fedbuff_m: 4,
             ..Default::default()
         };
-        let e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+        let e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .build();
         let PolicyImpl::FedBuff(p) = e.make_policy(Some(2)) else { panic!() };
         assert_eq!(p.m, 4);
+    }
+
+    #[test]
+    fn builder_run_matches_the_deprecated_shims() {
+        // the retired constructors are now thin shims that rebuild through
+        // the builder, so both surfaces must produce bit-identical runs
+        let sched = small_sched(6, 48);
+        let trainer = MockTrainer::new(8, 6, 0.3, 0);
+        let cfg = EngineConfig {
+            algorithm: AlgorithmKind::FedBuff,
+            fedbuff_m: 3,
+            ..Default::default()
+        };
+        let mut agg = CpuAggregator;
+        let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg.clone())
+            .build();
+        let a = e.run().unwrap();
+        let mut agg = CpuAggregator;
+        #[allow(deprecated)]
+        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, None);
+        let b = e.run().unwrap();
+        assert_same_run(&a, &b, "builder vs deprecated constructor shim");
+    }
+
+    #[test]
+    #[should_panic(expected = "streamed mode executes over a ConnectivityStream")]
+    fn builder_rejects_streamed_mode_over_a_schedule() {
+        let sched = small_sched(6, 24);
+        let trainer = MockTrainer::new(8, 6, 0.3, 0);
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig { mode: EngineMode::Streamed, ..Default::default() };
+        let _ = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .build();
+    }
+
+    #[test]
+    #[should_panic(expected = "FedSpace needs exactly one planner per gateway")]
+    fn builder_rejects_fedspace_without_planners() {
+        let sched = small_sched(6, 24);
+        let trainer = MockTrainer::new(8, 6, 0.3, 0);
+        let mut agg = CpuAggregator;
+        let cfg = EngineConfig { algorithm: AlgorithmKind::FedSpace, ..Default::default() };
+        let _ = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .build();
     }
 
     #[test]
@@ -1992,12 +2262,23 @@ mod tests {
             let c = planet_labs_like(12, 0);
             let gs = planet_ground_stations();
             let stream = ConnectivityStream::new(&c, &gs, steps, Default::default(), 31);
-            let mut e =
-                Engine::new_streamed(&stream, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            let mut e = Engine::builder()
+                .stream(&stream)
+                .trainer(&trainer)
+                .aggregator(&mut agg)
+                .config(cfg)
+                .planner(mode_planner(algorithm))
+                .build();
             e.run().unwrap()
         } else {
             let sched = small_sched(12, steps);
-            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            let mut e = Engine::builder()
+                .schedule(&sched)
+                .trainer(&trainer)
+                .aggregator(&mut agg)
+                .config(cfg)
+                .planner(mode_planner(algorithm))
+                .build();
             e.run().unwrap()
         }
     }
@@ -2106,8 +2387,13 @@ mod tests {
             if cfg.link.capacity_enabled() {
                 stream = stream.with_durations();
             }
-            let mut e =
-                Engine::new_streamed(&stream, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            let mut e = Engine::builder()
+                .stream(&stream)
+                .trainer(&trainer)
+                .aggregator(&mut agg)
+                .config(cfg)
+                .planner(mode_planner(algorithm))
+                .build();
             e.run().unwrap()
         } else {
             let sched = if cfg.link.capacity_enabled() {
@@ -2115,7 +2401,13 @@ mod tests {
             } else {
                 small_sched(12, steps)
             };
-            let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm));
+            let mut e = Engine::builder()
+                .schedule(&sched)
+                .trainer(&trainer)
+                .aggregator(&mut agg)
+                .config(cfg)
+                .planner(mode_planner(algorithm))
+                .build();
             e.run().unwrap()
         }
     }
@@ -2229,8 +2521,14 @@ mod tests {
             attack,
             ..Default::default()
         };
-        let mut e = Engine::new(&sched, &trainer, &mut agg, cfg, mode_planner(algorithm))
-            .with_federation(spec, routing.as_ref(), Vec::new());
+        let mut e = Engine::builder()
+            .schedule(&sched)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .planner(mode_planner(algorithm))
+            .federation(spec, routing.as_ref())
+            .build();
         e.run().unwrap()
     }
 

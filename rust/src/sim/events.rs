@@ -186,6 +186,41 @@ pub enum RunEvent {
         /// Wall-clock seconds spent.
         seconds: f64,
     },
+    /// The serving driver drained one gateway's ingestion queue (ADR-0010).
+    /// Queue state is a pure function of the replayed trace, so this event
+    /// IS part of the determinism contract — the shard-count determinism
+    /// test compares these streams element-wise.
+    ServeBatch {
+        /// Serving-clock tick (drain batches completed, the serve analogue
+        /// of the engine step).
+        tick: usize,
+        /// Drained gateway index.
+        gateway: usize,
+        /// Uploads taken off the queue and aggregated in this batch.
+        drained: usize,
+        /// Queue depth observed just before the drain (after this tick's
+        /// ingest), feeding the queue-depth histogram.
+        depth: usize,
+        /// Offers this gateway's full queue deferred since the last batch
+        /// (PR 7 `Deferred` backpressure — the callers retry, nothing
+        /// drops).
+        deferred: usize,
+    },
+    /// End-of-run serving throughput summary. Wall-clock derived, so
+    /// identity-exempt like [`RunEvent::Timing`]: two bit-identical serving
+    /// runs report different sustained rates and latency percentiles.
+    ServeReport {
+        /// Uploads accepted into gateway buffers over the whole replay.
+        uploads: u64,
+        /// Wall-clock seconds the replay took.
+        wall_s: f64,
+        /// Sustained accepted-upload rate (`uploads / wall_s`).
+        uploads_per_s: f64,
+        /// Median per-tick reconcile (drain + aggregate) latency, ms.
+        p50_ms: f64,
+        /// 99th-percentile per-tick reconcile latency, ms.
+        p99_ms: f64,
+    },
 }
 
 impl RunEvent {
@@ -200,13 +235,17 @@ impl RunEvent {
             RunEvent::Eval { .. } => "eval",
             RunEvent::PlanDecision { .. } => "plan_decision",
             RunEvent::Timing { .. } => "timing",
+            RunEvent::ServeBatch { .. } => "serve_batch",
+            RunEvent::ServeReport { .. } => "serve_report",
         }
     }
 
-    /// Is this event part of the determinism contract? False only for
-    /// wall-clock [`RunEvent::Timing`] (ADR-0002's identity exemption).
+    /// Is this event part of the determinism contract? False only for the
+    /// wall-clock events — [`RunEvent::Timing`] and the serving-throughput
+    /// [`RunEvent::ServeReport`] (ADR-0002's identity exemption; ADR-0010
+    /// extends it to serving: model state is deterministic, timing is not).
     pub fn is_deterministic(&self) -> bool {
-        !matches!(self, RunEvent::Timing { .. })
+        !matches!(self, RunEvent::Timing { .. } | RunEvent::ServeReport { .. })
     }
 
     /// One-line JSON object (an element of the bundle's `"events"` array).
@@ -259,6 +298,21 @@ impl RunEvent {
             }
             RunEvent::Timing { phase, seconds } => {
                 let _ = write!(s, ", \"phase\": \"{}\", \"seconds\": {seconds}", phase.name());
+            }
+            RunEvent::ServeBatch { tick, gateway, drained, depth, deferred } => {
+                let _ = write!(
+                    s,
+                    ", \"tick\": {tick}, \"gateway\": {gateway}, \"drained\": {drained}, \
+                     \"depth\": {depth}, \"deferred\": {deferred}"
+                );
+            }
+            RunEvent::ServeReport { uploads, wall_s, uploads_per_s, p50_ms, p99_ms } => {
+                let _ = write!(
+                    s,
+                    ", \"uploads\": {uploads}, \"wall_s\": {wall_s}, \
+                     \"uploads_per_s\": {uploads_per_s}, \"p50_ms\": {p50_ms}, \
+                     \"p99_ms\": {p99_ms}"
+                );
             }
         }
         s.push('}');
@@ -361,6 +415,9 @@ impl TraceSink {
                 });
             }
             RunEvent::PlanDecision { .. } => {}
+            // serving-only events carry no trace counters: the queue/latency
+            // surface lives in the artifact events, not in RunTrace
+            RunEvent::ServeBatch { .. } | RunEvent::ServeReport { .. } => {}
             RunEvent::Timing { phase, seconds } => match phase {
                 TimingPhase::Train => trace.t_train_s += seconds,
                 TimingPhase::Aggregate => trace.t_agg_s += seconds,
@@ -694,6 +751,14 @@ mod tests {
             RunEvent::Reconcile { step: 5, merges: 1 },
             RunEvent::Eval { step: 5, round: 1, day: 0.5, accuracy: 0.4, loss: 1.1 },
             RunEvent::Timing { phase: TimingPhase::Eval, seconds: 0.125 },
+            RunEvent::ServeBatch { tick: 6, gateway: 0, drained: 2, depth: 3, deferred: 1 },
+            RunEvent::ServeReport {
+                uploads: 2,
+                wall_s: 0.5,
+                uploads_per_s: 4.0,
+                p50_ms: 1.5,
+                p99_ms: 9.0,
+            },
         ]
     }
 
@@ -743,7 +808,16 @@ mod tests {
         }
         assert_eq!(sink.events, stream, "artifact sink must record verbatim");
         let det: Vec<&RunEvent> = stream.iter().filter(|e| e.is_deterministic()).collect();
-        assert_eq!(stream.len() - det.len(), 2, "exactly the two Timing events filter out");
+        assert_eq!(
+            stream.len() - det.len(),
+            3,
+            "exactly the two Timing events and the ServeReport filter out"
+        );
+        assert!(
+            RunEvent::ServeBatch { tick: 0, gateway: 0, drained: 0, depth: 0, deferred: 0 }
+                .is_deterministic(),
+            "queue state is deterministic — only wall-clock serving metrics are exempt"
+        );
     }
 
     #[test]

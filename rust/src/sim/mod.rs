@@ -8,7 +8,7 @@ pub mod trace;
 pub mod trainer;
 
 pub use adversary::{Adversary, ApplyOutcome, AttackKind, AttackSpec};
-pub use engine::{Engine, EngineConfig, RunResult, ScheduleSource};
+pub use engine::{Engine, EngineBuilder, EngineConfig, RunResult, ScheduleSource};
 pub use events::{
     bundle_json, ArtifactSink, EventSink, EventSpec, NullSink, RunArtifact, RunEvent, TimingPhase,
     TraceSink, UploadOutcome,

@@ -144,7 +144,12 @@ fn mock_training_survives_contact_dropout() {
         let trainer = MockTrainer::new(16, 24, 0.3, 0);
         let mut agg = CpuAggregator;
         let cfg = EngineConfig { algorithm: alg, fedbuff_m: 6, ..Default::default() };
-        let mut e = Engine::new(&degraded, &trainer, &mut agg, cfg, None);
+        let mut e = Engine::builder()
+            .schedule(&degraded)
+            .trainer(&trainer)
+            .aggregator(&mut agg)
+            .config(cfg)
+            .build();
         let r = e.run().unwrap();
         assert!(r.final_round > 0, "{alg:?} made no progress under dropout");
         let first = r.trace.curve.points.first().unwrap().accuracy;
