@@ -1,0 +1,203 @@
+//! `fedspace lint` — a repo-specific static-analysis pass over the Rust
+//! sources (ADR-0011).
+//!
+//! The determinism contract (ADR-0002) promises that all three engine
+//! modes produce bit-identical traces. The differential test grid checks
+//! that promise *after the fact* on the scenarios it samples; this module
+//! checks the *causes* up front: wall-clock reads, hash-ordered
+//! containers, unnamed RNG stream derivations, unfolded `RunEvent`
+//! variants, order-sensitive f32 reductions, and `SectionSpec` impls
+//! missing from the round-trip registry. See [`rules`] for the registry
+//! and [`tokens`] for the scanner.
+//!
+//! Deliberately token-level, not a parser: every rule here keys off flat
+//! token shapes (`Instant :: now`, `seed ^ <lit>`, `impl X {`), so a
+//! ~400-line tokenizer with exact line numbers is sufficient, has no
+//! grammar to chase across Rust editions, and cannot mis-parse its way
+//! into silence — the failure mode of a homegrown parser. The trade-off
+//! (no type or name resolution) is acceptable because the rules target
+//! idioms this repo bans outright rather than semantic properties.
+//!
+//! Suppression is explicit and audited: `// lint: allow(<rule>): <reason>`
+//! on the violating line or the line above. Malformed pragmas and
+//! pragmas naming unknown rules are themselves findings, and the JSON
+//! report counts suppressions so CI can pin the number.
+
+pub mod rules;
+pub mod tokens;
+
+pub use rules::{check_all, Emitter, FileScan, Finding, RULES};
+
+use anyhow::{Context, Result};
+use std::fs;
+use std::path::Path;
+
+/// Schema tag of the JSON lint report.
+pub const LINT_SCHEMA: &str = "fedspace-lint-v1";
+
+/// Outcome of one lint run: findings plus enough context to render the
+/// text and `fedspace-lint-v1` JSON reports.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Scan root as given (display only).
+    pub root: String,
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// Live findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by pragmas.
+    pub suppressed: usize,
+}
+
+impl LintReport {
+    /// No findings survived?
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// Human-readable report: one `file:line: rule: message` per finding
+    /// plus a summary line.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&format!("{}:{}: {}: {}\n", f.file, f.line, f.rule, f.message));
+        }
+        out.push_str(&format!(
+            "lint: {} file(s), {} finding(s), {} suppressed by pragma\n",
+            self.files,
+            self.findings.len(),
+            self.suppressed
+        ));
+        out
+    }
+
+    /// The `fedspace-lint-v1` JSON document.
+    pub fn to_json(&self) -> String {
+        use crate::sim::events::json_escape;
+        let mut s = String::with_capacity(1024);
+        s.push_str(&format!(
+            "{{\"schema\":\"{}\",\"root\":\"{}\",\"files\":{},\"suppressed\":{},\"clean\":{},",
+            LINT_SCHEMA,
+            json_escape(&self.root),
+            self.files,
+            self.suppressed,
+            self.clean()
+        ));
+        s.push_str("\"rules\":[");
+        for (k, (id, summary)) in RULES.iter().enumerate() {
+            if k > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"id\":\"{}\",\"summary\":\"{}\"}}",
+                json_escape(id),
+                json_escape(summary)
+            ));
+        }
+        s.push_str("],\"findings\":[");
+        for (k, f) in self.findings.iter().enumerate() {
+            if k > 0 {
+                s.push(',');
+            }
+            s.push_str(&format!(
+                "{{\"rule\":\"{}\",\"file\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+                json_escape(f.rule),
+                json_escape(&f.file),
+                f.line,
+                json_escape(&f.message)
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+}
+
+/// Lint in-memory sources: `(rel_path, source)` pairs. The pure core —
+/// the fixture tests and the CLI both end up here.
+pub fn lint_sources(root: &str, sources: &[(String, String)]) -> LintReport {
+    let scans: Vec<FileScan> = sources
+        .iter()
+        .map(|(rel, src)| FileScan { rel: rel.clone(), tokens: tokens::tokenize(src) })
+        .collect();
+    let em = check_all(&scans);
+    LintReport {
+        root: root.to_string(),
+        files: scans.len(),
+        findings: em.findings,
+        suppressed: em.suppressed,
+    }
+}
+
+/// Lint every `.rs` file under `root` (recursively, sorted traversal so
+/// reports are byte-stable run to run).
+pub fn lint_dir(root: &Path) -> Result<LintReport> {
+    let mut rels = Vec::new();
+    collect_rs(root, Path::new(""), &mut rels)
+        .with_context(|| format!("scanning {}", root.display()))?;
+    rels.sort();
+    let mut sources = Vec::with_capacity(rels.len());
+    for rel in rels {
+        let full = root.join(&rel);
+        let src = fs::read_to_string(&full)
+            .with_context(|| format!("reading {}", full.display()))?;
+        sources.push((rel, src));
+    }
+    Ok(lint_sources(&root.display().to_string(), &sources))
+}
+
+/// Accumulate `/`-separated relative paths of `.rs` files under
+/// `root/rel`.
+fn collect_rs(root: &Path, rel: &Path, out: &mut Vec<String>) -> Result<()> {
+    let dir = root.join(rel);
+    for entry in fs::read_dir(&dir).with_context(|| format!("listing {}", dir.display()))? {
+        let entry = entry?;
+        let name = entry.file_name();
+        let sub = rel.join(&name);
+        let ty = entry.file_type()?;
+        if ty.is_dir() {
+            collect_rs(root, &sub, out)?;
+        } else if ty.is_file() && name.to_string_lossy().ends_with(".rs") {
+            let rel_str = sub
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel_str);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_report::{parse_json, Json};
+
+    #[test]
+    fn report_json_round_trips_through_in_repo_parser() {
+        let src = "let t = Instant::now(); // a \"quoted\" site".to_string();
+        let report = lint_sources("mem", &[("app/x.rs".to_string(), src)]);
+        assert_eq!(report.findings.len(), 1);
+        let doc = parse_json(&report.to_json()).expect("lint JSON parses");
+        let Json::Obj(fields) = &doc else { panic!("object") };
+        let get = |k: &str| fields.iter().find(|(n, _)| n == k).map(|(_, v)| v);
+        assert_eq!(get("schema"), Some(&Json::Str(LINT_SCHEMA.to_string())));
+        assert_eq!(get("clean"), Some(&Json::Bool(false)));
+        let Some(Json::Arr(fs)) = get("findings") else { panic!("findings array") };
+        assert_eq!(fs.len(), 1);
+        let Json::Obj(f0) = &fs[0] else { panic!("finding object") };
+        assert!(f0.contains(&("rule".to_string(), Json::Str("wall-clock".to_string()))));
+        assert!(f0.contains(&("line".to_string(), Json::Num(1.0))));
+        let Some(Json::Arr(rules)) = get("rules") else { panic!("rules array") };
+        assert_eq!(rules.len(), RULES.len());
+    }
+
+    #[test]
+    fn clean_report_renders_summary_only() {
+        let report = lint_sources("mem", &[("app/x.rs".to_string(), "fn main() {}".to_string())]);
+        assert!(report.clean());
+        let text = report.render_text();
+        assert_eq!(text.lines().count(), 1);
+        assert!(text.contains("0 finding(s)"));
+    }
+}

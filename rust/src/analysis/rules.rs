@@ -1,0 +1,791 @@
+//! The determinism-contract rules behind `fedspace lint` (ADR-0011).
+//!
+//! Each rule encodes one invariant the repo's bit-identity guarantees
+//! (ADR-0002) rest on. The rules are *repo-specific by design*: they know
+//! which modules are deterministic, which enum is the event stream and
+//! which test is the section registry — that knowledge is exactly what a
+//! general-purpose linter cannot have and why one stray `HashMap` or
+//! wall-clock read can slip through review. Structural rules locate their
+//! anchors by *content* (`enum RunEvent`, `fn every_section_…`), not by
+//! path, so moving a module does not silently disarm them.
+//!
+//! Every rule reports through [`Emitter::emit`], which consults the
+//! pragma layer: `// lint: allow(<rule>): <reason>` on the same line or
+//! the line above suppresses the finding (and is counted, so CI can pin
+//! that suppressions don't balloon).
+
+use super::tokens::{skip_group, FileTokens, Tok, TokKind};
+
+/// One lint finding, addressed by scan-relative path and 1-based line.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    /// Rule identifier (one of [`RULES`], or `pragma` for the meta-rule).
+    pub rule: &'static str,
+    /// Path relative to the scan root, `/`-separated.
+    pub file: String,
+    /// 1-based line (0 = whole-file/structural finding).
+    pub line: usize,
+    /// Human-readable description of the violation.
+    pub message: String,
+}
+
+/// One tokenized file under the scan root.
+#[derive(Debug)]
+pub struct FileScan {
+    /// Path relative to the scan root, `/`-separated.
+    pub rel: String,
+    /// Token stream + pragmas.
+    pub tokens: FileTokens,
+}
+
+/// The rule registry: `(id, summary)` for every determinism rule, in
+/// report order. The `pragma` meta-rule (malformed / unknown-rule
+/// pragmas) is always on and not listed here.
+pub const RULES: [(&str, &str); 6] = [
+    ("wall-clock", "Instant::now/SystemTime only at pragma-annotated sites"),
+    ("hash-order", "no HashMap/HashSet in deterministic modules"),
+    ("rng-stream", "seed xor derivations must use distinct named *_STREAM consts"),
+    ("event-coverage", "every RunEvent variant folded into TraceSink::apply and to_json, no wildcard"),
+    ("float-reduce", "no unblocked f32 sum/fold reductions in fl/ and sim/"),
+    ("section-registry", "every SectionSpec impl present in the generic round-trip test"),
+];
+
+/// Module prefixes (first path component under the scan root) whose
+/// iteration order feeds the bit-identical trace — the `hash-order` scope.
+const DETERMINISTIC_MODULES: [&str; 6] = ["sim", "fl", "connectivity", "sched", "orbit", "cfg"];
+
+/// Collects findings, counting pragma suppressions.
+#[derive(Debug, Default)]
+pub struct Emitter {
+    /// Live findings (not suppressed).
+    pub findings: Vec<Finding>,
+    /// Findings suppressed by a pragma.
+    pub suppressed: usize,
+}
+
+impl Emitter {
+    /// Report a finding unless a pragma at `line` (or the line above)
+    /// allows `rule` in this file.
+    fn emit(&mut self, scan: &FileScan, rule: &'static str, line: usize, message: String) {
+        if scan.tokens.allows(rule, line) {
+            self.suppressed += 1;
+        } else {
+            self.findings.push(Finding { rule, file: scan.rel.clone(), line, message });
+        }
+    }
+
+    /// Report a non-suppressible finding (the pragma meta-rule itself).
+    fn emit_hard(&mut self, file: &str, rule: &'static str, line: usize, message: String) {
+        self.findings.push(Finding { rule, file: file.to_string(), line, message });
+    }
+}
+
+/// Run every rule over the scan set. Findings come back sorted by
+/// (file, line, rule) so output order never depends on rule order.
+pub fn check_all(files: &[FileScan]) -> Emitter {
+    let mut em = Emitter::default();
+    check_pragmas(files, &mut em);
+    check_wall_clock(files, &mut em);
+    check_hash_order(files, &mut em);
+    check_rng_stream(files, &mut em);
+    check_event_coverage(files, &mut em);
+    check_float_reduce(files, &mut em);
+    check_section_registry(files, &mut em);
+    em.findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    em
+}
+
+/// Runtime (non-test) tokens of a file.
+fn live(scan: &FileScan) -> impl Iterator<Item = (usize, &Tok)> + '_ {
+    scan.tokens.toks.iter().enumerate().filter(|(_, t)| !t.in_test)
+}
+
+fn ident_at(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Ident && t.text == text)
+}
+
+fn punct_at(toks: &[Tok], i: usize, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == TokKind::Punct && t.text == text)
+}
+
+/// Meta-rule: malformed pragmas and pragmas naming unknown rules are
+/// findings — a typo in a pragma must not silently un-suppress a site.
+fn check_pragmas(files: &[FileScan], em: &mut Emitter) {
+    for scan in files {
+        for &line in &scan.tokens.malformed_pragmas {
+            em.emit_hard(
+                &scan.rel,
+                "pragma",
+                line,
+                "malformed lint pragma; expected `// lint: allow(<rule>): <reason>` \
+                 with a non-empty reason"
+                    .to_string(),
+            );
+        }
+        for p in &scan.tokens.pragmas {
+            if !RULES.iter().any(|(id, _)| *id == p.rule) {
+                em.emit_hard(
+                    &scan.rel,
+                    "pragma",
+                    p.line,
+                    format!("pragma allows unknown rule `{}`", p.rule),
+                );
+            }
+        }
+    }
+}
+
+/// `wall-clock`: `Instant::now` / `SystemTime` reads are nondeterministic
+/// by definition; ADR-0002 exempts only the Timing/ServeReport/bench
+/// surfaces, and those sites carry pragmas.
+fn check_wall_clock(files: &[FileScan], em: &mut Emitter) {
+    for scan in files {
+        let toks = &scan.tokens.toks;
+        for (i, t) in live(scan) {
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            if t.text == "Instant"
+                && punct_at(toks, i + 1, ":")
+                && punct_at(toks, i + 2, ":")
+                && ident_at(toks, i + 3, "now")
+            {
+                em.emit(
+                    scan,
+                    "wall-clock",
+                    t.line,
+                    "Instant::now() outside a pragma-annotated timing site; wall-clock \
+                     reads are identity-exempt only under ADR-0002"
+                        .to_string(),
+                );
+            } else if t.text == "SystemTime" {
+                em.emit(
+                    scan,
+                    "wall-clock",
+                    t.line,
+                    "SystemTime is wall-clock state; deterministic code derives time \
+                     from the step index"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+/// `hash-order`: `HashMap`/`HashSet` iteration order is randomized per
+/// process, so any walk over one inside a deterministic module can leak
+/// into the trace. `BTreeMap`/`BTreeSet`/sorted `Vec` are the sanctioned
+/// shapes (and the only ones the repo uses today — this rule locks that
+/// in).
+fn check_hash_order(files: &[FileScan], em: &mut Emitter) {
+    for scan in files {
+        let in_scope = scan
+            .rel
+            .split('/')
+            .next()
+            .is_some_and(|first| DETERMINISTIC_MODULES.contains(&first));
+        if !in_scope {
+            continue;
+        }
+        for (_, t) in live(scan) {
+            if t.kind == TokKind::Ident && (t.text == "HashMap" || t.text == "HashSet") {
+                em.emit(
+                    scan,
+                    "hash-order",
+                    t.line,
+                    format!(
+                        "{} in a deterministic module; iteration order is per-process \
+                         random — use BTreeMap/BTreeSet or a sorted Vec",
+                        t.text
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// `rng-stream`: independent RNG streams are derived as
+/// `seed ^ <NAME>_STREAM` (ADR-0002). A raw literal xor hides the stream
+/// from review; two streams sharing a constant silently correlate. The
+/// rule checks both: the derivation *shape* per site, and pairwise
+/// distinctness of every `*_STREAM` const numerically, across files.
+fn check_rng_stream(files: &[FileScan], em: &mut Emitter) {
+    fn seedish(t: &Tok) -> bool {
+        t.kind == TokKind::Ident && t.text.to_ascii_lowercase().contains("seed")
+    }
+    fn unnamed_ident(t: &Tok) -> bool {
+        t.kind == TokKind::Ident && !t.text.ends_with("_STREAM")
+    }
+    // stream-const declarations: `const X_STREAM: u64 = <int>;`
+    let mut decls: Vec<(String, u64, String, usize)> = Vec::new(); // (name, value, file, line)
+    for scan in files {
+        let toks = &scan.tokens.toks;
+        for (i, t) in live(scan) {
+            // derivation sites
+            if t.kind == TokKind::Punct && t.text == "^" && i > 0 {
+                let prev = &toks[i - 1];
+                let next = toks.get(i + 1);
+                let lit = |t: &Tok| t.kind == TokKind::Int;
+                let raw = (seedish(prev) && next.is_some_and(lit))
+                    || (next.is_some_and(seedish) && lit(prev));
+                let unnamed = seedish(prev) && next.is_some_and(unnamed_ident);
+                if raw {
+                    em.emit(
+                        scan,
+                        "rng-stream",
+                        t.line,
+                        "seed xor with a raw literal; derive streams through a named \
+                         *_STREAM const so collisions are checkable"
+                            .to_string(),
+                    );
+                } else if unnamed {
+                    em.emit(
+                        scan,
+                        "rng-stream",
+                        t.line,
+                        "seed xor with a non-stream identifier; stream constants must \
+                         be named *_STREAM"
+                            .to_string(),
+                    );
+                }
+            }
+            // const declarations: `const NAME_STREAM : <ty> = <int> ;`
+            let named = toks.get(i + 1);
+            let stream_name = named.is_some_and(|n| {
+                n.kind == TokKind::Ident && n.text.ends_with("_STREAM")
+            });
+            if ident_at(toks, i, "const") && stream_name && punct_at(toks, i + 2, ":") {
+                let name = toks[i + 1].text.clone();
+                let mut j = i + 3;
+                while j < toks.len() && !punct_at(toks, j, "=") && !punct_at(toks, j, ";") {
+                    j += 1;
+                }
+                if punct_at(toks, j, "=") {
+                    if let Some(v) = toks.get(j + 1).and_then(|t| parse_int(&t.text)) {
+                        decls.push((name, v, scan.rel.clone(), toks[i + 1].line));
+                    }
+                }
+            }
+        }
+    }
+    // pairwise distinctness, reported at the later declaration
+    decls.sort_by(|a, b| (a.2.as_str(), a.3).cmp(&(b.2.as_str(), b.3)));
+    for (k, (name, value, file, line)) in decls.iter().enumerate() {
+        if let Some((first_name, _, first_file, first_line)) =
+            decls[..k].iter().find(|(_, v, _, _)| v == value)
+        {
+            let scan = files.iter().find(|s| &s.rel == file).expect("decl file");
+            em.emit(
+                scan,
+                "rng-stream",
+                *line,
+                format!(
+                    "{name} = {value:#x} collides with {first_name} \
+                     ({first_file}:{first_line}); RNG streams must be pairwise distinct"
+                ),
+            );
+        }
+    }
+}
+
+/// Parse a Rust integer literal (underscores, radix prefixes, ignores a
+/// trailing type suffix).
+fn parse_int(text: &str) -> Option<u64> {
+    let t: String = text.chars().filter(|&c| c != '_').collect();
+    let (radix, digits) = match t.get(..2) {
+        Some("0x") | Some("0X") => (16, &t[2..]),
+        Some("0o") => (8, &t[2..]),
+        Some("0b") => (2, &t[2..]),
+        _ => (10, t.as_str()),
+    };
+    let end = digits
+        .find(|c: char| !c.is_digit(radix))
+        .unwrap_or(digits.len());
+    if end == 0 {
+        return None;
+    }
+    u64::from_str_radix(&digits[..end], radix).ok()
+}
+
+/// `event-coverage`: the trace is a fold over the event stream, so a
+/// `RunEvent` variant that never reaches `TraceSink::apply` (or the
+/// artifact serializer `RunEvent::to_json`) is invisible to every
+/// downstream consumer — and a wildcard arm would let the *next* variant
+/// slip through silently. Anchored by content: any file declaring
+/// `enum RunEvent` is checked.
+fn check_event_coverage(files: &[FileScan], em: &mut Emitter) {
+    for scan in files {
+        let toks = &scan.tokens.toks;
+        let Some(enum_at) = find_seq(toks, &["enum", "RunEvent", "{"]) else { continue };
+        let variants = enum_variants(toks, enum_at + 2);
+        // TraceSink::apply — the single trace mutation site
+        match fn_body(toks, "apply", None) {
+            Some((lo, hi)) => {
+                check_match_coverage(scan, toks, lo, hi, &variants, "TraceSink::apply", em);
+            }
+            None => em.emit(
+                scan,
+                "event-coverage",
+                toks[enum_at].line,
+                "enum RunEvent declared but no `fn apply` (TraceSink) found in this file"
+                    .to_string(),
+            ),
+        }
+        // RunEvent::to_json — the artifact serializer (to_json also exists
+        // on RunArtifact, so resolve it inside `impl RunEvent`)
+        match fn_body(toks, "to_json", Some("RunEvent")) {
+            Some((lo, hi)) => {
+                check_match_coverage(scan, toks, lo, hi, &variants, "RunEvent::to_json", em);
+            }
+            None => em.emit(
+                scan,
+                "event-coverage",
+                toks[enum_at].line,
+                "enum RunEvent declared but no `impl RunEvent { fn to_json }` found in \
+                 this file"
+                    .to_string(),
+            ),
+        }
+    }
+}
+
+/// Every variant must appear as `RunEvent::<V>` inside `[lo, hi)`, and the
+/// body may not contain a wildcard arm (`_ =>`).
+fn check_match_coverage(
+    scan: &FileScan,
+    toks: &[Tok],
+    lo: usize,
+    hi: usize,
+    variants: &[(String, usize)],
+    site: &str,
+    em: &mut Emitter,
+) {
+    let mut seen: Vec<&str> = Vec::new();
+    for i in lo..hi {
+        if ident_at(toks, i, "RunEvent")
+            && punct_at(toks, i + 1, ":")
+            && punct_at(toks, i + 2, ":")
+        {
+            if let Some(v) = toks.get(i + 3) {
+                if v.kind == TokKind::Ident {
+                    seen.push(v.text.as_str());
+                }
+            }
+        }
+        if ident_at(toks, i, "_") && punct_at(toks, i + 1, "=") && punct_at(toks, i + 2, ">") {
+            em.emit(
+                scan,
+                "event-coverage",
+                toks[i].line,
+                format!(
+                    "wildcard arm in {site}; every RunEvent variant must be matched \
+                     explicitly so new variants are folded in deliberately"
+                ),
+            );
+        }
+    }
+    for (v, line) in variants {
+        if !seen.iter().any(|s| s == v) {
+            em.emit(
+                scan,
+                "event-coverage",
+                *line,
+                format!("RunEvent::{v} is not handled in {site}"),
+            );
+        }
+    }
+}
+
+/// Collect `(variant, line)` of an enum whose body opens at `toks[open]`.
+fn enum_variants(toks: &[Tok], open: usize) -> Vec<(String, usize)> {
+    let mut out = Vec::new();
+    let end = skip_group(toks, open, "{", "}");
+    let mut i = open + 1;
+    while i + 1 < end {
+        let t = &toks[i];
+        if t.text == "#" && punct_at(toks, i + 1, "[") {
+            i = skip_group(toks, i + 1, "[", "]");
+        } else if t.kind == TokKind::Ident {
+            out.push((t.text.clone(), t.line));
+            i += 1;
+            if punct_at(toks, i, "{") {
+                i = skip_group(toks, i, "{", "}");
+            } else if punct_at(toks, i, "(") {
+                i = skip_group(toks, i, "(", ")");
+            }
+            while i < end && !punct_at(toks, i, ",") {
+                i += 1;
+            }
+            i += 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+/// Token span `(lo, hi)` of the body of `fn <name>`, optionally resolved
+/// inside `impl <owner> { … }`. Searches test regions too (the section
+/// registry lives in one); callers on runtime paths pass the whole file.
+fn fn_body(toks: &[Tok], name: &str, owner: Option<&str>) -> Option<(usize, usize)> {
+    let (lo, hi) = match owner {
+        None => (0, toks.len()),
+        Some(owner) => {
+            let at = find_seq(toks, &["impl", owner, "{"])?;
+            let end = skip_group(toks, at + 2, "{", "}");
+            (at + 2, end)
+        }
+    };
+    let mut i = lo;
+    while i + 1 < hi {
+        if ident_at(toks, i, "fn") && ident_at(toks, i + 1, name) {
+            let mut j = i + 2;
+            while j < hi && !punct_at(toks, j, "{") {
+                j += 1;
+            }
+            if j < hi {
+                return Some((j, skip_group(toks, j, "{", "}")));
+            }
+        }
+        i += 1;
+    }
+    None
+}
+
+/// First index where the token texts `pat` appear consecutively.
+fn find_seq(toks: &[Tok], pat: &[&str]) -> Option<usize> {
+    (0..toks.len().saturating_sub(pat.len() - 1))
+        .find(|&i| pat.iter().enumerate().all(|(k, p)| toks[i + k].text == *p))
+}
+
+/// `float-reduce`: f32 addition is non-associative, so an iterator
+/// `sum()`/`fold()` over f32 in the aggregation/simulation path bakes the
+/// iteration shape into the result bits. The blocked-accumulate helpers
+/// (fl/server.rs) use indexed block loops precisely so the summation
+/// order is pinned; everything else must accumulate in f64 or carry a
+/// pragma. Detected shapes: `sum::<f32>()`, `.fold(<f32 literal>, …)`,
+/// and `let …: f32 = ….sum();`.
+fn check_float_reduce(files: &[FileScan], em: &mut Emitter) {
+    for scan in files {
+        let first = scan.rel.split('/').next().unwrap_or("");
+        if first != "fl" && first != "sim" {
+            continue;
+        }
+        let toks = &scan.tokens.toks;
+        for (i, t) in live(scan) {
+            if t.kind != TokKind::Ident {
+                continue;
+            }
+            let msg = |what: &str| {
+                format!(
+                    "{what} reduces f32 in iteration order; accumulate in f64 or use \
+                     the blocked helpers (ADR-0002)"
+                )
+            };
+            if t.text == "sum"
+                && punct_at(toks, i + 1, ":")
+                && punct_at(toks, i + 2, ":")
+                && punct_at(toks, i + 3, "<")
+                && ident_at(toks, i + 4, "f32")
+            {
+                em.emit(scan, "float-reduce", t.line, msg("sum::<f32>()"));
+            } else if t.text == "fold"
+                && i > 0
+                && punct_at(toks, i - 1, ".")
+                && punct_at(toks, i + 1, "(")
+                && toks.get(i + 2).is_some_and(|a| {
+                    a.kind == TokKind::Float && a.text.ends_with("f32")
+                })
+            {
+                em.emit(scan, "float-reduce", t.line, msg(".fold(…f32, …)"));
+            } else if t.text == "sum"
+                && i > 0
+                && punct_at(toks, i - 1, ".")
+                && punct_at(toks, i + 1, "(")
+                && punct_at(toks, i + 2, ")")
+                && stmt_ascribes_f32(toks, i)
+            {
+                em.emit(scan, "float-reduce", t.line, msg("`: f32` sum()"));
+            }
+        }
+    }
+}
+
+/// Walk back from token `i` to the start of its statement (`;`, `{`, `}`)
+/// looking for a `: f32` type ascription.
+fn stmt_ascribes_f32(toks: &[Tok], i: usize) -> bool {
+    let mut j = i;
+    while j > 0 {
+        j -= 1;
+        let t = &toks[j];
+        if t.kind == TokKind::Punct && (t.text == ";" || t.text == "{" || t.text == "}") {
+            return false;
+        }
+        if t.kind == TokKind::Punct
+            && t.text == ":"
+            && !punct_at(toks, j.wrapping_sub(1), ":")
+            && !punct_at(toks, j + 1, ":")
+            && ident_at(toks, j + 1, "f32")
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// `section-registry`: every `impl SectionSpec for X` must appear in the
+/// generic round-trip test (`every_section_round_trips_generically` in
+/// cfg/section.rs) — the one test that proves a section's emit/parse/
+/// validate lifecycle. An impl missing from the list ships an untested
+/// TOML surface.
+fn check_section_registry(files: &[FileScan], em: &mut Emitter) {
+    // impl sites (runtime code)
+    let mut impls: Vec<(String, usize, usize)> = Vec::new(); // (name, file idx, line)
+    for (fi, scan) in files.iter().enumerate() {
+        let toks = &scan.tokens.toks;
+        for (i, t) in live(scan) {
+            if t.kind == TokKind::Ident
+                && t.text == "SectionSpec"
+                && ident_at(toks, i + 1, "for")
+                && toks.get(i + 2).is_some_and(|n| n.kind == TokKind::Ident)
+                // `impl` may sit up to 10 tokens back when the trait is
+                // path-qualified (`impl crate::cfg::section::SectionSpec for X`).
+                && (0..=12).any(|back| i >= back && ident_at(toks, i - back, "impl"))
+            {
+                impls.push((toks[i + 2].text.clone(), fi, toks[i + 2].line));
+            }
+        }
+    }
+    if impls.is_empty() {
+        return;
+    }
+    // the registry body (inside a #[cfg(test)] mod, searched deliberately)
+    let registry: Option<Vec<&str>> = files.iter().find_map(|scan| {
+        let toks = &scan.tokens.toks;
+        let (lo, hi) = fn_body(toks, "every_section_round_trips_generically", None)?;
+        Some(
+            toks[lo..hi]
+                .iter()
+                .filter(|t| t.kind == TokKind::Ident)
+                .map(|t| t.text.as_str())
+                .collect(),
+        )
+    });
+    let Some(listed) = registry else {
+        let (name, fi, line) = &impls[0];
+        em.emit(
+            &files[*fi],
+            "section-registry",
+            *line,
+            format!(
+                "impl SectionSpec for {name} but the generic round-trip test \
+                 (every_section_round_trips_generically) was not found in the scan"
+            ),
+        );
+        return;
+    };
+    for (name, fi, line) in &impls {
+        if !listed.iter().any(|l| l == name) {
+            em.emit(
+                &files[*fi],
+                "section-registry",
+                *line,
+                format!(
+                    "impl SectionSpec for {name} is missing from \
+                     every_section_round_trips_generically — its TOML round-trip is \
+                     untested"
+                ),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::tokens::tokenize;
+
+    fn scan_one(rel: &str, src: &str) -> Vec<FileScan> {
+        vec![FileScan { rel: rel.to_string(), tokens: tokenize(src) }]
+    }
+
+    fn rules_of(em: &Emitter) -> Vec<&'static str> {
+        em.findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn wall_clock_fires_and_pragma_suppresses() {
+        let em = check_all(&scan_one("app/x.rs", "let t = Instant::now();"));
+        assert_eq!(rules_of(&em), vec!["wall-clock"]);
+        assert_eq!(em.findings[0].line, 1);
+        let em = check_all(&scan_one(
+            "app/x.rs",
+            "// lint: allow(wall-clock): bench timing\nlet t = Instant::now();",
+        ));
+        assert!(em.findings.is_empty(), "{:?}", em.findings);
+        assert_eq!(em.suppressed, 1);
+    }
+
+    #[test]
+    fn wall_clock_skips_tests_and_strings() {
+        let src = "const M: &str = \"Instant::now\";\n#[cfg(test)]\nmod tests {\n    fn t() { let x = Instant::now(); }\n}";
+        let em = check_all(&scan_one("app/x.rs", src));
+        assert!(em.findings.is_empty(), "{:?}", em.findings);
+    }
+
+    #[test]
+    fn hash_order_scoped_to_deterministic_modules() {
+        let src = "use std::collections::HashMap;";
+        let em = check_all(&scan_one("sim/state.rs", src));
+        assert_eq!(rules_of(&em), vec!["hash-order"]);
+        let em = check_all(&scan_one("app/state.rs", src));
+        assert!(em.findings.is_empty());
+    }
+
+    #[test]
+    fn rng_stream_shapes() {
+        let em = check_all(&scan_one("fl/x.rs", "let r = Rng::new(seed ^ 0xBEEF);"));
+        assert_eq!(rules_of(&em), vec!["rng-stream"]);
+        let em = check_all(&scan_one("fl/x.rs", "let r = Rng::new(0xBEEF ^ run_seed);"));
+        assert_eq!(rules_of(&em), vec!["rng-stream"]);
+        let em = check_all(&scan_one("fl/x.rs", "let r = Rng::new(seed ^ SOME_CONST);"));
+        assert_eq!(rules_of(&em), vec!["rng-stream"]);
+        let ok = "pub const A_STREAM: u64 = 0xA;\nlet r = Rng::new(seed ^ A_STREAM);";
+        let em = check_all(&scan_one("fl/x.rs", ok));
+        assert!(em.findings.is_empty(), "{:?}", em.findings);
+        // non-seed xors never fire
+        let em = check_all(&scan_one("fl/x.rs", "let z = a ^ (b >> 30);"));
+        assert!(em.findings.is_empty());
+    }
+
+    #[test]
+    fn rng_stream_collision_detected_across_files() {
+        let a = FileScan {
+            rel: "a/one.rs".into(),
+            tokens: tokenize("pub const A_STREAM: u64 = 0xC0DE;"),
+        };
+        let b = FileScan {
+            rel: "b/two.rs".into(),
+            tokens: tokenize("pub const B_STREAM: u64 = 0xC0DE;"),
+        };
+        let em = check_all(&[a, b]);
+        assert_eq!(rules_of(&em), vec!["rng-stream"]);
+        assert_eq!(em.findings[0].file, "b/two.rs");
+        assert!(em.findings[0].message.contains("A_STREAM"));
+    }
+
+    #[test]
+    fn event_coverage_missing_variant_and_wildcard() {
+        let src = "\
+pub enum RunEvent {\n\
+    Alpha { x: usize },\n\
+    Beta,\n\
+}\n\
+impl TraceSink {\n\
+    pub fn apply(t: &mut T, e: &RunEvent) {\n\
+        match e {\n\
+            RunEvent::Alpha { .. } => {}\n\
+            _ => {}\n\
+        }\n\
+    }\n\
+}\n\
+impl RunEvent {\n\
+    pub fn to_json(&self) -> String {\n\
+        match self {\n\
+            RunEvent::Alpha { .. } => {}\n\
+            RunEvent::Beta => {}\n\
+        }\n\
+    }\n\
+}\n";
+        let em = check_all(&scan_one("sim/events.rs", src));
+        let rules = rules_of(&em);
+        assert_eq!(rules, vec!["event-coverage", "event-coverage"], "{:?}", em.findings);
+        // one wildcard finding (line 9), one missing-variant finding (Beta, line 3)
+        assert!(em.findings.iter().any(|f| f.line == 3 && f.message.contains("Beta")));
+        assert!(em.findings.iter().any(|f| f.line == 9 && f.message.contains("wildcard")));
+    }
+
+    #[test]
+    fn event_coverage_clean_when_total() {
+        let src = "\
+pub enum RunEvent {\n\
+    Alpha { x: usize },\n\
+    Beta,\n\
+}\n\
+impl TraceSink {\n\
+    pub fn apply(t: &mut T, e: &RunEvent) {\n\
+        match e {\n\
+            RunEvent::Alpha { .. } => {}\n\
+            RunEvent::Beta => {}\n\
+        }\n\
+    }\n\
+}\n\
+impl RunEvent {\n\
+    pub fn to_json(&self) -> String {\n\
+        match self {\n\
+            RunEvent::Alpha { .. } | RunEvent::Beta => {}\n\
+        }\n\
+    }\n\
+}\n";
+        let em = check_all(&scan_one("sim/events.rs", src));
+        assert!(em.findings.is_empty(), "{:?}", em.findings);
+    }
+
+    #[test]
+    fn float_reduce_shapes() {
+        let em = check_all(&scan_one("fl/a.rs", "let s: f32 = xs.iter().sum();"));
+        assert_eq!(rules_of(&em), vec!["float-reduce"]);
+        let em = check_all(&scan_one("fl/a.rs", "let s = xs.iter().sum::<f32>();"));
+        assert_eq!(rules_of(&em), vec!["float-reduce"]);
+        let em = check_all(&scan_one("fl/a.rs", "let m = xs.iter().fold(0.0f32, |a, v| a + v);"));
+        assert_eq!(rules_of(&em), vec!["float-reduce"]);
+        // f64 accumulation and out-of-scope modules pass
+        let em = check_all(&scan_one("fl/a.rs", "let s: f64 = xs.iter().sum();"));
+        assert!(em.findings.is_empty(), "{:?}", em.findings);
+        let em = check_all(&scan_one("sched/a.rs", "let s: f32 = xs.iter().sum();"));
+        assert!(em.findings.is_empty());
+        // a prior statement's `: f32` does not leak across `;`
+        let em = check_all(&scan_one("fl/a.rs", "let a: f32 = 1.0; let s: f64 = xs.sum();"));
+        assert!(em.findings.is_empty(), "{:?}", em.findings);
+    }
+
+    #[test]
+    fn section_registry_missing_impl_detected() {
+        let imp = FileScan {
+            rel: "fl/foo.rs".into(),
+            tokens: tokenize("impl crate::cfg::section::SectionSpec for FooSpec {}"),
+        };
+        let reg = FileScan {
+            rel: "cfg/section.rs".into(),
+            tokens: tokenize(
+                "#[cfg(test)]\nmod tests {\n    fn every_section_round_trips_generically() {\n        roundtrip(BarSpec::default());\n    }\n}",
+            ),
+        };
+        let em = check_all(&[imp, reg]);
+        assert_eq!(rules_of(&em), vec!["section-registry"]);
+        assert_eq!(em.findings[0].file, "fl/foo.rs");
+        // and a listed impl passes
+        let imp = FileScan {
+            rel: "fl/foo.rs".into(),
+            tokens: tokenize("impl SectionSpec for BarSpec {}"),
+        };
+        let reg = FileScan {
+            rel: "cfg/section.rs".into(),
+            tokens: tokenize(
+                "fn every_section_round_trips_generically() { roundtrip(BarSpec::default()); }",
+            ),
+        };
+        let em = check_all(&[imp, reg]);
+        assert!(em.findings.is_empty(), "{:?}", em.findings);
+    }
+
+    #[test]
+    fn pragma_meta_rule() {
+        let em = check_all(&scan_one("app/x.rs", "// lint: allow(wall-clock)\n"));
+        assert_eq!(rules_of(&em), vec!["pragma"]);
+        let em = check_all(&scan_one("app/x.rs", "// lint: allow(no-such-rule): because\n"));
+        assert_eq!(rules_of(&em), vec!["pragma"]);
+    }
+}

@@ -1,0 +1,494 @@
+//! A lightweight Rust tokenizer for the `fedspace lint` pass (ADR-0011).
+//!
+//! This is deliberately *not* a parser: the determinism rules key off small,
+//! local token shapes (`Instant :: now`, `seed ^ <literal>`,
+//! `impl SectionSpec for X`), so a flat token stream with line numbers is
+//! the right altitude — it cannot drift out of sync with the language the
+//! way a hand-rolled grammar would, and it tokenizes the whole crate in
+//! microseconds. What it *does* understand beyond raw lexing, because the
+//! rules need it:
+//!
+//! - **comments** are skipped, but `// lint: allow(<rule>): <reason>`
+//!   pragma comments are captured as [`Pragma`] records (the suppression
+//!   layer every rule shares);
+//! - **`#[cfg(test)] mod …`** bodies are marked token-by-token
+//!   ([`Tok::in_test`]): the determinism contract governs runtime paths,
+//!   so rules skip test regions unless they explicitly opt in (the
+//!   section-registry rule reads the round-trip list *inside* a test mod);
+//! - **strings / chars / lifetimes / numbers** are single tokens, so rule
+//!   patterns can never fire inside a literal.
+
+/// Lexical class of one token.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword (including a bare `_`).
+    Ident,
+    /// Integer literal (any radix, `_` separators, optional type suffix).
+    Int,
+    /// Float literal (optional type suffix).
+    Float,
+    /// String literal (`"…"`, `r"…"`, `r#"…"#`, byte variants).
+    Str,
+    /// Char literal.
+    Char,
+    /// Lifetime (`'a`).
+    Lifetime,
+    /// Single punctuation character (`::` is two `:` tokens).
+    Punct,
+}
+
+/// One token with its source position.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    /// Lexical class.
+    pub kind: TokKind,
+    /// Verbatim source text (for [`TokKind::Str`], includes the quotes).
+    pub text: String,
+    /// 1-based source line the token starts on.
+    pub line: usize,
+    /// The token sits inside a `#[cfg(test)] mod` body.
+    pub in_test: bool,
+}
+
+/// One `// lint: allow(<rule>): <reason>` pragma comment.
+#[derive(Clone, Debug)]
+pub struct Pragma {
+    /// 1-based line of the comment.
+    pub line: usize,
+    /// Rule the pragma suppresses (the text inside `allow(…)`).
+    pub rule: String,
+    /// Justification after the closing `):` — must be non-empty.
+    pub reason: String,
+}
+
+/// Tokenized source of one file.
+#[derive(Clone, Debug, Default)]
+pub struct FileTokens {
+    /// Tokens in source order.
+    pub toks: Vec<Tok>,
+    /// Pragma comments in source order.
+    pub pragmas: Vec<Pragma>,
+    /// Lines holding a comment that *looks* like a lint pragma but failed
+    /// to parse (missing reason, malformed `allow(…)`) — surfaced as
+    /// findings by the pragma meta-rule so typos cannot silently
+    /// un-suppress a site.
+    pub malformed_pragmas: Vec<usize>,
+}
+
+impl FileTokens {
+    /// Is a finding of `rule` at `line` suppressed by a pragma? A pragma
+    /// covers its own line (trailing-comment form) and the line directly
+    /// below it (standalone-comment form).
+    pub fn allows(&self, rule: &str, line: usize) -> bool {
+        self.pragmas.iter().any(|p| p.rule == rule && (p.line == line || p.line + 1 == line))
+    }
+}
+
+/// Tokenize one Rust source file. Never fails: unrecognized bytes become
+/// single-char [`TokKind::Punct`] tokens, which no rule pattern matches.
+pub fn tokenize(src: &str) -> FileTokens {
+    let mut out = FileTokens::default();
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut i = 0;
+    let mut line = 1;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_whitespace() {
+            i += 1;
+        } else if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            // line comment (incl. doc comments): capture, check for pragma
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            let text: String = b[start..i].iter().collect();
+            scan_pragma(&text, line, &mut out);
+        } else if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            // block comment, nestable
+            let mut depth = 1;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == '"' || (c == 'r' && raw_string_len(&b[i..]).is_some()) {
+            let (text, lines) = scan_string(&b[i..]);
+            let len = text.chars().count();
+            out.toks.push(Tok { kind: TokKind::Str, text, line, in_test: false });
+            line += lines;
+            i += len;
+        } else if c == 'b' && i + 1 < n && (b[i + 1] == '"' || b[i + 1] == '\'') {
+            // byte string / byte char: emit the `b` as part of the literal
+            let (text, lines) = if b[i + 1] == '"' {
+                let (t, l) = scan_string(&b[i + 1..]);
+                (format!("b{t}"), l)
+            } else {
+                (format!("b{}", scan_char(&b[i + 1..])), 0)
+            };
+            let kind = if b[i + 1] == '"' { TokKind::Str } else { TokKind::Char };
+            let len = text.chars().count();
+            out.toks.push(Tok { kind, text, line, in_test: false });
+            line += lines;
+            i += len;
+        } else if c == '\'' {
+            // lifetime or char literal: a lifetime is `'` + ident not
+            // closed by another quote right after one symbol
+            if is_lifetime(&b[i..]) {
+                let start = i;
+                i += 1;
+                while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+                out.toks.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: b[start..i].iter().collect(),
+                    line,
+                    in_test: false,
+                });
+            } else {
+                let text = scan_char(&b[i..]);
+                let len = text.chars().count();
+                out.toks.push(Tok { kind: TokKind::Char, text, line, in_test: false });
+                i += len;
+            }
+        } else if c.is_ascii_digit() {
+            let start = i;
+            let mut kind = TokKind::Int;
+            if c == '0' && i + 1 < n && matches!(b[i + 1], 'x' | 'o' | 'b') {
+                i += 2;
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    i += 1;
+                }
+            } else {
+                while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                    i += 1;
+                }
+                // fractional part — but not `1..2` (range) or `1.max(…)`
+                if i + 1 < n
+                    && b[i] == '.'
+                    && b[i + 1].is_ascii_digit()
+                {
+                    kind = TokKind::Float;
+                    i += 1;
+                    while i < n && (b[i].is_ascii_digit() || b[i] == '_') {
+                        i += 1;
+                    }
+                }
+                // exponent and/or type suffix (f32, f64, u64, usize…)
+                if i < n && (b[i] == 'e' || b[i] == 'E') && kind == TokKind::Float {
+                    i += 1;
+                    if i < n && (b[i] == '+' || b[i] == '-') {
+                        i += 1;
+                    }
+                    while i < n && b[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                while i < n && (b[i].is_ascii_alphanumeric() || b[i] == '_') {
+                    if b[i] == 'f' {
+                        kind = TokKind::Float;
+                    }
+                    i += 1;
+                }
+            }
+            out.toks.push(Tok {
+                kind,
+                text: b[start..i].iter().collect(),
+                line,
+                in_test: false,
+            });
+        } else if c.is_alphanumeric() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            out.toks.push(Tok {
+                kind: TokKind::Ident,
+                text: b[start..i].iter().collect(),
+                line,
+                in_test: false,
+            });
+        } else {
+            out.toks.push(Tok {
+                kind: TokKind::Punct,
+                text: c.to_string(),
+                line,
+                in_test: false,
+            });
+            i += 1;
+        }
+    }
+    mark_test_regions(&mut out.toks);
+    out
+}
+
+/// Parse a line comment as a lint pragma if it claims to be one.
+fn scan_pragma(comment: &str, line: usize, out: &mut FileTokens) {
+    let body = comment.trim_start_matches('/').trim();
+    let Some(rest) = body.strip_prefix("lint:") else { return };
+    let rest = rest.trim();
+    let ok = (|| {
+        let rest = rest.strip_prefix("allow(")?;
+        let (rule, tail) = rest.split_once(')')?;
+        let reason = tail.trim().strip_prefix(':')?.trim();
+        let rule = rule.trim();
+        if rule.is_empty() || reason.is_empty() {
+            return None;
+        }
+        Some(Pragma { line, rule: rule.to_string(), reason: reason.to_string() })
+    })();
+    match ok {
+        Some(p) => out.pragmas.push(p),
+        None => out.malformed_pragmas.push(line),
+    }
+}
+
+/// Length of a raw-string opener at `b[0]` (`r"`, `r#"`, …), if any.
+fn raw_string_len(b: &[char]) -> Option<usize> {
+    if b.first() != Some(&'r') {
+        return None;
+    }
+    let mut i = 1;
+    while i < b.len() && b[i] == '#' {
+        i += 1;
+    }
+    (b.get(i) == Some(&'"')).then_some(i + 1)
+}
+
+/// Scan a string literal starting at `b[0]` (plain `"…"` or raw form).
+/// Returns (verbatim text, newline count inside it).
+fn scan_string(b: &[char]) -> (String, usize) {
+    let mut lines = 0;
+    if let Some(open) = raw_string_len(b) {
+        let hashes = open - 2; // r + hashes + quote
+        let mut i = open;
+        while i < b.len() {
+            if b[i] == '\n' {
+                lines += 1;
+            }
+            if b[i] == '"' && b[i + 1..].iter().take(hashes).filter(|&&c| c == '#').count() == hashes
+            {
+                i += 1 + hashes;
+                return (b[..i].iter().collect(), lines);
+            }
+            i += 1;
+        }
+        return (b.iter().collect(), lines);
+    }
+    let mut i = 1;
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\n' => {
+                lines += 1;
+                i += 1;
+            }
+            '"' => return (b[..=i].iter().collect(), lines),
+            _ => i += 1,
+        }
+    }
+    (b.iter().collect(), lines)
+}
+
+/// Scan a char literal starting at `b[0] == '\''`.
+fn scan_char(b: &[char]) -> String {
+    let mut i = 1;
+    while i < b.len() {
+        match b[i] {
+            '\\' => i += 2,
+            '\'' => return b[..=i].iter().collect(),
+            _ => i += 1,
+        }
+    }
+    b.iter().collect()
+}
+
+/// Is `b[0] == '\''` a lifetime rather than a char literal? A lifetime is
+/// `'ident` NOT followed by a closing quote (`'a'` is a char).
+fn is_lifetime(b: &[char]) -> bool {
+    if b.len() < 2 || !(b[1].is_alphabetic() || b[1] == '_') {
+        return false;
+    }
+    let mut i = 2;
+    while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_') {
+        i += 1;
+    }
+    b.get(i) != Some(&'\'')
+}
+
+/// Mark every token inside a `#[cfg(test)] mod … { … }` body. The pattern
+/// is matched at token level: `#` `[` `cfg` `(` `test` `)` `]` then
+/// (skipping further attributes) `mod` `<name>` `{`, and the body extends
+/// to the matching close brace.
+fn mark_test_regions(toks: &mut [Tok]) {
+    let mut i = 0;
+    while i < toks.len() {
+        if is_cfg_test_attr(toks, i) {
+            // skip the attribute (7 tokens), then any further #[…]
+            let mut j = i + 7;
+            while j < toks.len() && toks[j].text == "#" {
+                j = skip_group(toks, j + 1, "[", "]");
+            }
+            if j < toks.len() && toks[j].text == "mod" {
+                // mod name {  — find the open brace
+                let mut k = j + 1;
+                while k < toks.len() && toks[k].text != "{" && toks[k].text != ";" {
+                    k += 1;
+                }
+                if k < toks.len() && toks[k].text == "{" {
+                    let end = skip_group(toks, k, "{", "}");
+                    for t in &mut toks[k..end.min(toks.len())] {
+                        t.in_test = true;
+                    }
+                    i = end;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Does `#` `[` `cfg` `(` `test` `)` `]` start at token `i`?
+fn is_cfg_test_attr(toks: &[Tok], i: usize) -> bool {
+    const PAT: [&str; 7] = ["#", "[", "cfg", "(", "test", ")", "]"];
+    toks.len() >= i + PAT.len() && PAT.iter().enumerate().all(|(k, p)| toks[i + k].text == *p)
+}
+
+/// Given `toks[start].text == open`, return the index one past the matching
+/// `close` (or `toks.len()` if unbalanced).
+pub fn skip_group(toks: &[Tok], start: usize, open: &str, close: &str) -> usize {
+    debug_assert_eq!(toks[start].text, open);
+    let mut depth = 0usize;
+    let mut i = start;
+    while i < toks.len() {
+        if toks[i].text == open {
+            depth += 1;
+        } else if toks[i].text == close {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    toks.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        tokenize(src)
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.clone())
+            .collect()
+    }
+
+    #[test]
+    fn basic_shapes() {
+        let f = tokenize("let x: u64 = sim_seed ^ 0xBEEF; // plain comment");
+        let texts: Vec<&str> = f.toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(texts, vec!["let", "x", ":", "u64", "=", "sim_seed", "^", "0xBEEF", ";"]);
+        assert_eq!(f.toks[7].kind, TokKind::Int);
+        assert!(f.pragmas.is_empty());
+    }
+
+    #[test]
+    fn strings_and_chars_are_opaque() {
+        let f = tokenize("let s = \"Instant::now HashMap\"; let c = 'x'; let l: &'a str;");
+        assert!(!f.toks.iter().any(|t| t.kind == TokKind::Ident && t.text == "HashMap"));
+        assert!(f.toks.iter().any(|t| t.kind == TokKind::Char && t.text == "'x'"));
+        assert!(f.toks.iter().any(|t| t.kind == TokKind::Lifetime && t.text == "'a"));
+    }
+
+    #[test]
+    fn raw_strings_and_escapes() {
+        let f = tokenize(r##"let a = r#"quote " inside"#; let b = "esc\"aped";"##);
+        let strs: Vec<&str> = f
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Str)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs.len(), 2, "{strs:?}");
+    }
+
+    #[test]
+    fn line_numbers_track_comments_and_strings() {
+        let f = tokenize("a\n/* two\nlines */ b\n\"s\ntr\" c");
+        let find = |name: &str| f.toks.iter().find(|t| t.text == name).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("b"), 3);
+        assert_eq!(find("c"), 5);
+    }
+
+    #[test]
+    fn pragma_parses_and_covers_two_lines() {
+        let src = "// lint: allow(wall-clock): bench timing is the product\nInstant::now();\n";
+        let f = tokenize(src);
+        assert_eq!(f.pragmas.len(), 1);
+        assert_eq!(f.pragmas[0].rule, "wall-clock");
+        assert!(f.allows("wall-clock", 1) && f.allows("wall-clock", 2));
+        assert!(!f.allows("wall-clock", 3));
+        assert!(!f.allows("hash-order", 2));
+    }
+
+    #[test]
+    fn malformed_pragma_is_recorded() {
+        for bad in [
+            "// lint: allow(wall-clock)",      // missing reason
+            "// lint: allow(wall-clock):",     // empty reason
+            "// lint: allow wall-clock: why",  // missing parens
+        ] {
+            let f = tokenize(bad);
+            assert_eq!(f.malformed_pragmas, vec![1], "{bad:?}");
+            assert!(f.pragmas.is_empty(), "{bad:?}");
+        }
+        // non-pragma comments are neither
+        let f = tokenize("// lintish comment: allow nothing");
+        assert!(f.pragmas.is_empty() && f.malformed_pragmas.is_empty());
+    }
+
+    #[test]
+    fn cfg_test_mod_is_marked() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() { helper(); }\n}\nfn after() {}";
+        let f = tokenize(src);
+        let t = |name: &str| f.toks.iter().find(|t| t.text == name).unwrap();
+        assert!(!t("live").in_test);
+        assert!(t("helper").in_test);
+        assert!(!t("after").in_test);
+    }
+
+    #[test]
+    fn numeric_suffixes_classify() {
+        let f = tokenize("0.0f32 1_000u64 0xBAD5_EED5 2.5e-3 1f64");
+        let kinds: Vec<TokKind> = f.toks.iter().map(|t| t.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![TokKind::Float, TokKind::Int, TokKind::Int, TokKind::Float, TokKind::Float]
+        );
+    }
+
+    #[test]
+    fn underscore_is_an_ident() {
+        assert_eq!(idents("match x { _ => {} }"), vec!["match", "x", "_"]);
+    }
+}

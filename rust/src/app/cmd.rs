@@ -47,6 +47,12 @@ COMMANDS:
                     --json [FILE]                run-artifact bundle with the
                                                  full event stream (ADR-0009)
                                                  to stdout or FILE
+  lint          static-check the determinism contract over the sources
+                (ADR-0011): wall-clock, hash-order, rng-stream,
+                event-coverage, float-reduce, section-registry
+                  --path DIR              scan root (default: src or rust/src)
+                  --deny                  exit non-zero if any finding survives
+                  --json [FILE]           fedspace-lint-v1 report (stdout/FILE)
   bench-check   compare bench JSON against the committed baseline (CI gate)
                   --baseline A.json,B.json committed baselines, newest first;
                                           the first non-provisional one gates
@@ -249,6 +255,7 @@ pub fn schedule(args: &Args) -> Result<()> {
     let params = SearchParams { i0, n_min, n_max, n_search: 2000 };
     let mut planner = FedSpacePlanner::new(utility, params, 0);
     let states = vec![SatForecastState::fresh(); n_sats];
+    // lint: allow(wall-clock): reporting planner latency to the operator, not trace state
     let t0 = std::time::Instant::now();
     let window = planner.plan(&sched, 0, &states, bank.losses[1]);
     let ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -301,6 +308,39 @@ const PENDING_BASELINE_BENCHES: &[&str] = &[
     "serve_ingest_throughput",
     "serve_reconcile_latency",
 ];
+
+/// `fedspace lint` — the determinism-contract static analysis (ADR-0011).
+///
+/// Scans every `.rs` file under the root, prints one `file:line: rule:
+/// message` per finding, and optionally emits the `fedspace-lint-v1`
+/// JSON report. The report is written *before* `--deny` bails so CI can
+/// always upload it as an artifact, findings or not.
+pub fn lint(args: &Args) -> Result<()> {
+    use std::path::{Path, PathBuf};
+    let root: PathBuf = match args.get("path") {
+        Some(p) => PathBuf::from(p),
+        None => ["src", "rust/src"]
+            .iter()
+            .map(Path::new)
+            .find(|p| p.join("lib.rs").is_file())
+            .map(Path::to_path_buf)
+            .context("no src/lib.rs or rust/src/lib.rs below the working directory; pass --path DIR")?,
+    };
+    let report = crate::analysis::lint_dir(&root)?;
+    match json_request(args) {
+        JsonOut::No => {}
+        JsonOut::Stdout => println!("{}", report.to_json()),
+        JsonOut::File(path) => {
+            write_file(&path, &report.to_json())?;
+            println!("lint report written to {path}");
+        }
+    }
+    print!("{}", report.render_text());
+    if args.has_flag("deny") && !report.clean() {
+        bail!("lint --deny: {} finding(s)", report.findings.len());
+    }
+    Ok(())
+}
 
 /// `fedspace bench-check` — the CI perf-regression gate: merge one or more
 /// bench JSON outputs, compare them against the committed baseline, print

@@ -205,11 +205,26 @@ fn engine_cfg(cfg: &ExperimentConfig, stop_at: Option<f64>) -> EngineConfig {
     }
 }
 
+/// Planner random-search stream tag (ADR-0002): independent deterministic
+/// RNG streams derive as `sim_seed ^ <NAME>_STREAM`, and `fedspace lint`'s
+/// `rng-stream` rule checks all `*_STREAM` values are pairwise distinct
+/// numerically across the crate ([`crate::fl::CODEC_STREAM`] and
+/// [`crate::sim::adversary::ADVERSARY_STREAM`] live with their
+/// subsystems). The values predate the names — changing one would shift
+/// every seeded trace.
+pub const PLANNER_STREAM: u64 = 0x5EED;
+/// Utility-model pretrain/sample stream (the phase-1 pipeline).
+pub const UTILITY_STREAM: u64 = 0xA11CE;
+/// Serving-replay upload-synthesis stream (`serve` / `loadgen`).
+pub const LOADGEN_STREAM: u64 = 0x10AD;
+/// Mock-data partition stream (PJRT dataset sharding).
+pub const DATA_STREAM: u64 = 0xDA7A;
+
 /// Seed of gateway `g`'s planner search RNG. Gateway 0 keeps the legacy
 /// derivation exactly (single-gateway bit-identity); higher gateways get
 /// independent, deterministic streams.
 fn planner_seed(sim_seed: u64, g: usize) -> u64 {
-    let base = sim_seed ^ 0x5EED;
+    let base = sim_seed ^ PLANNER_STREAM;
     if g == 0 {
         base
     } else {
@@ -274,7 +289,7 @@ fn mock_parts(
     };
     let trainer = MockTrainer::new(32, cfg.n_sats, heterogeneity, cfg.data_seed);
     let planners = if cfg.algorithm == AlgorithmKind::FedSpace {
-        let mut rng = Rng::new(cfg.sim_seed ^ 0xA11CE);
+        let mut rng = Rng::new(cfg.sim_seed ^ UTILITY_STREAM);
         let backend = MockBackend::new(32, cfg.data_seed);
         let utility = build_utility_model(cfg, &backend, None, &mut rng)?;
         make_planners(cfg, utility, n_gateways)
@@ -503,7 +518,7 @@ pub fn run_loadgen(sc: &Scenario, opts: &LoadgenOpts) -> Result<LoadgenReport> {
     let cfg = sc.experiment_config(sc.algorithms[0]);
     crate::exec::set_default_parallelism(cfg.threads);
     let dim = 32usize; // mock-trainer model width; serving is backend-mock-grade
-    let mut rng = Rng::new(cfg.sim_seed ^ 0x10AD);
+    let mut rng = Rng::new(cfg.sim_seed ^ LOADGEN_STREAM);
     let mut serve = ServeCore::new(&sc.federation, &sc.serve, vec![0.0; dim], cfg.alpha);
     let n_gateways = sc.federation.n_gateways();
     let mut agg = CpuAggregator;
@@ -513,6 +528,7 @@ pub fn run_loadgen(sc: &Scenario, opts: &LoadgenOpts) -> Result<LoadgenReport> {
     // FIFO-per-gateway guarantee the backpressure test gates
     let mut retry: VecDeque<(usize, PendingUpload)> = VecDeque::new();
     let mut latencies_ms: Vec<f64> = Vec::new();
+    // lint: allow(wall-clock): loadgen throughput reporting; ServeReport is identity-exempt
     let started = Instant::now();
     let offer = |serve: &mut ServeCore,
                      retry: &mut VecDeque<(usize, PendingUpload)>,
@@ -548,6 +564,7 @@ pub fn run_loadgen(sc: &Scenario, opts: &LoadgenOpts) -> Result<LoadgenReport> {
         }
     };
     for i in 0..sched.n_steps() {
+        // lint: allow(wall-clock): wall pacing of the replay tick (ADR-0010)
         let tick_started = Instant::now();
         for _ in 0..retry.len() {
             let (g, up) = retry.pop_front().expect("counted");
@@ -564,6 +581,7 @@ pub fn run_loadgen(sc: &Scenario, opts: &LoadgenOpts) -> Result<LoadgenReport> {
             let g = routing.as_ref().map_or(0, |r| r.gateway_for(i, sat, 0));
             offer(&mut serve, &mut retry, &mut sink, i, g, up);
         }
+        // lint: allow(wall-clock): drain latency feeds the p50/p99 report, not the trace
         let drain_started = Instant::now();
         serve.drain(&mut agg, &mut sink)?;
         latencies_ms.push(drain_started.elapsed().as_secs_f64() * 1e3);
@@ -585,6 +603,7 @@ pub fn run_loadgen(sc: &Scenario, opts: &LoadgenOpts) -> Result<LoadgenReport> {
             let (g, up) = retry.pop_front().expect("counted");
             offer(&mut serve, &mut retry, &mut sink, step, g, up);
         }
+        // lint: allow(wall-clock): drain latency feeds the p50/p99 report, not the trace
         let drain_started = Instant::now();
         serve.drain(&mut agg, &mut sink)?;
         latencies_ms.push(drain_started.elapsed().as_secs_f64() * 1e3);
@@ -705,7 +724,7 @@ pub fn run_pjrt_experiment(
         Some(s) => cfg_isl_topology(cfg, &constellation).map(|t| ContactGraph::build(&t, s)),
         None => None,
     };
-    let mut rng = Rng::new(cfg.sim_seed ^ 0xDA7A);
+    let mut rng = Rng::new(cfg.sim_seed ^ DATA_STREAM);
     let partition = build_partition(cfg, &dataset, &constellation, &mut rng);
     let trainer = PjrtTrainer::new(&rt, &dataset, &partition, cfg.lr, eval_samples);
     let planners = if cfg.algorithm == AlgorithmKind::FedSpace {

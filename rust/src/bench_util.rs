@@ -63,6 +63,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
     }
     let mut times = Vec::with_capacity(iters);
     for _ in 0..iters {
+        // lint: allow(wall-clock): measuring wall time is the bench harness's job
         let t = Instant::now();
         f();
         times.push(t.elapsed().as_secs_f64());
@@ -85,6 +86,7 @@ pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> B
 
 /// Time a single long-running closure (end-to-end bench cases).
 pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    // lint: allow(wall-clock): measuring wall time is the bench harness's job
     let t = Instant::now();
     let out = f();
     let dt = t.elapsed().as_secs_f64();

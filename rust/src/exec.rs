@@ -14,13 +14,19 @@
 //!   across its whole chunk.
 //!
 //! [`global_pool`] is the process-wide pool the hot paths share, so the
-//! parallelism degree has a single knob.
+//! parallelism degree has a single knob. Workers contain job panics
+//! (`catch_unwind`): a panicking job never kills its worker thread, and
+//! [`ThreadPool::scope_map`] re-raises the first payload on the caller.
 
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A caught panic payload in flight from a worker back to the caller.
+type Panic = Box<dyn std::any::Any + Send + 'static>;
 
 enum Msg {
     Run(Job),
@@ -46,7 +52,14 @@ impl ThreadPool {
                 thread::spawn(move || loop {
                     let msg = rx.lock().unwrap().recv();
                     match msg {
-                        Ok(Msg::Run(job)) => job(),
+                        // a panicking job must not take the worker with it:
+                        // the process-wide global_pool would silently lose
+                        // parallelism for the rest of the run. scope_map
+                        // re-raises the payload on the caller's thread;
+                        // fire-and-forget `execute` jobs drop it.
+                        Ok(Msg::Run(job)) => {
+                            let _ = catch_unwind(AssertUnwindSafe(job));
+                        }
                         Ok(Msg::Shutdown) | Err(_) => break,
                     }
                 })
@@ -73,7 +86,10 @@ impl ThreadPool {
     /// Apply `f` to every item in parallel, returning results in input order.
     ///
     /// Blocks until every item has been processed. `f` must be cloneable
-    /// across threads (wrap shared state in `Arc`).
+    /// across threads (wrap shared state in `Arc`). If any `f(item)`
+    /// panics, the remaining items still run to completion, the workers
+    /// stay alive, and the panic of the lowest-indexed failing item is
+    /// re-raised on the caller's thread with its original payload.
     pub fn scope_map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
@@ -82,22 +98,33 @@ impl ThreadPool {
     {
         let n = items.len();
         let f = Arc::new(f);
-        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        let (rtx, rrx) = mpsc::channel::<(usize, Result<R, Panic>)>();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let rtx = rtx.clone();
             self.execute(move || {
-                let r = f(item);
-                // Receiver outlives all jobs inside this call; ignore failure
-                // only if the caller panicked.
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)));
+                // Receiver outlives all jobs inside this call; a caught
+                // panic is sent home like any result, so the worker loop
+                // never unwinds and the recv below always completes.
                 let _ = rtx.send((i, r));
             });
         }
         drop(rtx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<(usize, Panic)> = None;
         for _ in 0..n {
-            let (i, r) = rrx.recv().expect("worker panicked");
-            out[i] = Some(r);
+            let (i, r) = rrx.recv().expect("pool worker disconnected");
+            match r {
+                Ok(r) => out[i] = Some(r),
+                Err(p) => match first_panic {
+                    Some((j, _)) if j < i => {}
+                    _ => first_panic = Some((i, p)),
+                },
+            }
+        }
+        if let Some((_, payload)) = first_panic {
+            resume_unwind(payload);
         }
         out.into_iter().map(|r| r.unwrap()).collect()
     }
@@ -223,6 +250,53 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.scope_map(vec![3usize, 1, 2], |x| x + 1);
         assert_eq!(out, vec![4, 2, 3]);
+    }
+
+    #[test]
+    fn scope_map_panic_propagates_lowest_index_payload() {
+        let pool = ThreadPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_map(vec![0usize, 1, 2, 3], |x| {
+                if x % 2 == 0 {
+                    panic!("boom {x}");
+                }
+                x
+            })
+        }));
+        let payload = caught.expect_err("a panicking job must reach the caller");
+        let msg = payload.downcast_ref::<String>().expect("panic! with format produces String");
+        assert_eq!(msg, "boom 0", "the first (lowest-index) payload wins");
+    }
+
+    #[test]
+    fn pool_keeps_full_throughput_after_a_panicked_job() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = ThreadPool::new(2);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_map(vec![0usize], |_| -> usize { panic!("boom") })
+        }));
+        // both workers must still be alive: two jobs rendezvous, each
+        // returning only once it has seen the other in flight. With the old
+        // panic-kills-worker behavior the survivor runs them sequentially
+        // and the rendezvous can never complete.
+        let arrivals = Arc::new(AtomicUsize::new(0));
+        let a = Arc::clone(&arrivals);
+        let out = pool.scope_map(vec![10usize, 20], move |x| {
+            a.fetch_add(1, Ordering::SeqCst);
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+            while a.load(Ordering::SeqCst) < 2 {
+                assert!(
+                    std::time::Instant::now() < deadline,
+                    "pool lost a worker after a panicked job"
+                );
+                thread::yield_now();
+            }
+            x
+        });
+        assert_eq!(out, vec![10, 20]);
+        // and scope_map results stay complete and ordered afterwards
+        let out = pool.scope_map((0..64).collect(), |x: usize| x + 1);
+        assert_eq!(out, (1..65).collect::<Vec<_>>());
     }
 
     #[test]

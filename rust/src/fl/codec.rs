@@ -26,8 +26,10 @@ use crate::rng::Rng;
 use anyhow::{bail, Context, Result};
 
 /// Stream-id XOR'd into the run seed for the codec RNG, keeping its draws
-/// independent of the training (`split(i+1)`), planner (`^ 0x5EED`), data
-/// (`^ 0xA11CE` / `^ 0xDA7A`) and adversary (`^ 0xBAD5_EED5`) streams.
+/// independent of the training (`split(i+1)`), planner/utility/data
+/// (`PLANNER_STREAM` / `UTILITY_STREAM` / `DATA_STREAM` in `app::runner`)
+/// and adversary (`ADVERSARY_STREAM`) streams — pairwise distinctness is
+/// machine-checked by `fedspace lint`'s `rng-stream` rule.
 pub const CODEC_STREAM: u64 = 0xC0DE_C0DE;
 
 /// One transmitted model update. Dense is the uncompressed (and quantized)

@@ -20,8 +20,10 @@
 //! docs/ADRs.md for the architecture decision records, and EXPERIMENTS.md
 //! for the paper-vs-measured record of every table and figure.
 
+#![forbid(unsafe_code)]
 #![warn(missing_docs)]
 
+pub mod analysis;
 pub mod app;
 pub mod bench_report;
 pub mod bench_util;

@@ -9,6 +9,7 @@
 //!   loadgen       replay a scenario trace at full speed; report throughput
 //!   utility       generate utility samples and fit/report the regressor
 //!   schedule      plan one FedSpace window and print the forecast
+//!   lint          static-check the determinism contract over the sources
 //!   bench-check   compare bench JSON against the committed baseline (CI)
 //!   bench-baseline  merge bench JSON into a ready-to-commit baseline (CI)
 //!   help          this text
@@ -27,6 +28,7 @@ fn main() -> Result<()> {
         "loadgen" => fedspace::app::cmd::loadgen(&args),
         "utility" => fedspace::app::cmd::utility(&args),
         "schedule" => fedspace::app::cmd::schedule(&args),
+        "lint" => fedspace::app::cmd::lint(&args),
         "bench-check" => fedspace::app::cmd::bench_check(&args),
         "bench-baseline" => fedspace::app::cmd::bench_baseline(&args),
         "" | "help" | "--help" | "-h" => {

@@ -27,8 +27,10 @@ use crate::rng::Rng;
 use anyhow::{bail, Context, Result};
 
 /// Stream-id XOR'd into the run seed for the adversary RNG, keeping its
-/// draws independent of the training (`split(i+1)`), planner (`^ 0x5EED`)
-/// and data (`^ 0xA11CE` / `^ 0xDA7A`) streams.
+/// draws independent of the training (`split(i+1)`), planner/utility/data
+/// (`PLANNER_STREAM` / `UTILITY_STREAM` / `DATA_STREAM` in `app::runner`)
+/// and codec (`CODEC_STREAM`) streams — pairwise distinctness is
+/// machine-checked by `fedspace lint`'s `rng-stream` rule.
 pub const ADVERSARY_STREAM: u64 = 0xBAD5_EED5;
 
 /// What compromised satellites do to their own updates (the `[attack]`

@@ -595,6 +595,7 @@ fn run_step<S: EventSink>(
     for (g, policy) in st.policies.iter_mut().enumerate() {
         if policy.decide(i, conn, &st.fed.gateways[g].buffer) {
             let reconciles_before = st.fed.reconciles;
+            // lint: allow(wall-clock): Timing events are identity-exempt (ADR-0002)
             let t = Instant::now();
             let stalenesses = st.fed.update(g, aggregator)?;
             let dt = t.elapsed().as_secs_f64();
@@ -636,6 +637,7 @@ fn run_step<S: EventSink>(
         let delay = hops * hop_delay;
         if st.clients[s].has_data() && st.clients[s].wants_model(round, i) {
             st.clients[s].receive(round, i, cfg.train_duration_slots + delay);
+            // lint: allow(wall-clock): Timing events are identity-exempt (ADR-0002)
             let t = Instant::now();
             let model = st.fed.broadcast_model(route(s, hops));
             let (delta, _train_loss) = trainer.local_update(s, model, &mut st.sat_rngs[s])?;
@@ -668,6 +670,7 @@ fn run_step<S: EventSink>(
     // 4. periodic evaluation (of the global model)
     let last_step = i + 1 == n_steps;
     if (i + 1) % cfg.eval_every == 0 || last_step {
+        // lint: allow(wall-clock): Timing events are identity-exempt (ADR-0002)
         let t = Instant::now();
         let global_w = st.fed.global_model();
         let (loss, acc) = trainer.evaluate(&global_w)?;
@@ -1100,6 +1103,7 @@ impl<'a> Engine<'a> {
         );
 
         // initial evaluation seeds the curve and the training status T
+        // lint: allow(wall-clock): Timing events are identity-exempt (ADR-0002)
         let t0 = Instant::now();
         let (loss0, acc0) = self.trainer.evaluate(&st.fed.global_model())?;
         let dt0 = t0.elapsed().as_secs_f64();

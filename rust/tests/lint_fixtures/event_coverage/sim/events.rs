@@ -1,0 +1,30 @@
+// Known-bad fixture: Gamma is never folded into TraceSink::apply, and
+// to_json hides future variants behind a wildcard arm.
+
+pub enum RunEvent {
+    Alpha { step: usize },
+    Beta { tick: usize },
+    Gamma,
+}
+
+pub struct TraceSink;
+
+impl TraceSink {
+    pub fn apply(trace: &mut usize, event: &RunEvent) {
+        match event {
+            RunEvent::Alpha { .. } => {}
+            RunEvent::Beta { .. } => {}
+        }
+    }
+}
+
+impl RunEvent {
+    pub fn to_json(&self) -> String {
+        match self {
+            RunEvent::Alpha { .. } => String::new(),
+            RunEvent::Beta { .. } => String::new(),
+            RunEvent::Gamma => String::new(),
+            _ => String::new(),
+        }
+    }
+}

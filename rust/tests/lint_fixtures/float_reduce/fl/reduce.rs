@@ -1,0 +1,14 @@
+// Known-bad fixture: iteration-order-sensitive f32 reductions.
+
+pub fn ascribed(xs: &[f32]) -> f32 {
+    let total: f32 = xs.iter().sum();
+    total
+}
+
+pub fn turbofish(xs: &[f32]) -> f32 {
+    xs.iter().sum::<f32>()
+}
+
+pub fn folded(xs: &[f32]) -> f32 {
+    xs.iter().fold(0.0f32, |a, v| a + v)
+}

@@ -1,0 +1,8 @@
+// Known-bad fixture: hash-ordered containers in a deterministic module.
+
+pub fn scratch() {
+    let mut m = std::collections::HashMap::<usize, usize>::new();
+    let mut s = std::collections::HashSet::<usize>::new();
+    m.insert(1, 2);
+    s.insert(3);
+}

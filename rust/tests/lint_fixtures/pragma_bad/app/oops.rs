@@ -1,0 +1,7 @@
+// Known-bad fixture: one malformed pragma, one naming an unknown rule.
+
+// lint: allow(wall-clock)
+pub fn a() {}
+
+// lint: allow(warp-drive): engage
+pub fn b() {}

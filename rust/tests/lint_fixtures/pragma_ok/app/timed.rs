@@ -1,0 +1,7 @@
+// A pragma-annotated wall-clock site: lint must stay clean and count it.
+
+pub fn measured() -> f64 {
+    // lint: allow(wall-clock): operator-facing latency report
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}

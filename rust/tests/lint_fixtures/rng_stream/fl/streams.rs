@@ -1,0 +1,9 @@
+// Known-bad fixture: raw-literal and unnamed-ident seed derivations.
+
+pub fn raw(seed: u64) -> u64 {
+    seed ^ 0xBEEF
+}
+
+pub fn unnamed(run_seed: u64, mask: u64) -> u64 {
+    run_seed ^ mask
+}

@@ -1,0 +1,2 @@
+// Stream const A — its value is shared with sim/b.rs (collision fixture).
+pub const ALPHA_STREAM: u64 = 0x00C0_77EE;

@@ -1,0 +1,2 @@
+// Known-bad fixture: BETA_STREAM collides numerically with ALPHA_STREAM
+pub const BETA_STREAM: u64 = 0xC077EE;

@@ -1,0 +1,9 @@
+// The registry side of the fixture: lists OtherSpec but not GhostSpec.
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn every_section_round_trips_generically() {
+        roundtrip(OtherSpec::default());
+    }
+}

@@ -1,0 +1,7 @@
+// Known-bad fixture: GhostSpec never appears in the round-trip registry.
+
+pub struct GhostSpec;
+
+impl SectionSpec for GhostSpec {
+    const SECTION: &'static str = "ghost";
+}

@@ -1,0 +1,11 @@
+// Known-bad fixture: wall-clock reads outside a pragma-annotated site.
+
+pub fn elapsed() -> f64 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_secs_f64()
+}
+
+pub fn epoch() -> u64 {
+    let _t = std::time::SystemTime::now();
+    0
+}
